@@ -1,0 +1,71 @@
+//! End-to-end validation driver (DESIGN.md §7): trains the decoder LM
+//! for a few hundred steps on the synthetic wiki103-sim corpus through
+//! the FULL stack — Pallas kernel (L1) → JAX train-step (L2, AOT HLO) →
+//! Rust PJRT runtime → Rust training loop (L3) — and logs the loss
+//! curve, validation perplexity and a generation sample. The recorded
+//! run lives in EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example train_lm_e2e -- [--steps 300]`
+
+use drrl::data::{Corpus, CorpusProfile};
+use drrl::runtime::ArtifactRegistry;
+use drrl::train::{generate_greedy, LmTrainer};
+use drrl::util::{Args, Stopwatch};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env().unwrap_or_default();
+    let steps = args.usize_or("steps", 300);
+    let corpus_bytes = args.usize_or("corpus-bytes", 600_000);
+    let seed = args.u64_or("seed", 42);
+
+    let reg = ArtifactRegistry::open_default()
+        .map_err(|e| anyhow::anyhow!("{e:#}\nrun `make artifacts` first"))?;
+    let lm = reg.manifest.lm.clone();
+    println!(
+        "== DR-RL end-to-end LM training ==\n\
+         model: {:.2}M params (vocab={} L={} d={} layers={} heads={})\n\
+         corpus: wiki103-sim, {corpus_bytes} bytes | steps: {steps} | batch: {}",
+        lm.param_count as f64 / 1e6,
+        lm.vocab,
+        lm.seq_len,
+        lm.d_model,
+        lm.n_layers,
+        lm.n_heads,
+        lm.batch,
+    );
+
+    let corpus = Corpus::build(CorpusProfile::Wiki103, corpus_bytes, seed);
+    let mut tr = LmTrainer::new(&reg, seed);
+
+    let ppl0 = tr.eval_ppl(&corpus, 4)?;
+    println!("initial val ppl: {ppl0:.1} (≈vocab for random init)");
+
+    let sw = Stopwatch::start();
+    tr.train(&corpus, steps, 25)?;
+    let secs = sw.elapsed().as_secs_f64();
+
+    // Loss curve summary (Fig 2-left shape: sharp stable descent).
+    let pts = [0, steps / 4, steps / 2, 3 * steps / 4, steps - 1];
+    println!("\nloss curve:");
+    for &p in &pts {
+        let (s, l) = tr.curve[p.min(tr.curve.len() - 1)];
+        println!("  step {s:>5}  loss {l:.4}");
+    }
+    let ppl1 = tr.eval_ppl(&corpus, 8)?;
+    let tokens_seen = steps * lm.batch * lm.seq_len;
+    println!(
+        "\ntrained {steps} steps ({tokens_seen} tokens) in {secs:.1}s \
+         ({:.0} tok/s) | val ppl {ppl0:.1} → {ppl1:.2}",
+        tokens_seen as f64 / secs
+    );
+    anyhow::ensure!(ppl1 < ppl0 * 0.5, "training failed to reduce PPL substantially");
+
+    // Generation sample through the Pallas-kernel logits artifact.
+    let prompt = "The city of ";
+    let prompt_ids: Vec<i32> = prompt.bytes().map(|b| b as i32).collect();
+    let out = generate_greedy(&reg, &tr.params, &prompt_ids, 48)?;
+    let text: String = out.iter().map(|&t| (t.clamp(0, 255) as u8) as char).collect();
+    println!("\nsample: {prompt}{text}");
+    println!("\nOK — all three layers composed (L1 pallas → L2 HLO → L3 rust loop).");
+    Ok(())
+}

@@ -1,0 +1,196 @@
+"""AOT lowering: every L1/L2 graph → HLO *text* artifacts + manifest.
+
+Run once by `make artifacts`; Python never touches the request path.
+
+HLO text (not serialized HloModuleProto) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --outdir ../artifacts
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .configs import AotConfig
+from .kernels import full_attn, lowrank_attn, power_iter
+from . import model, policy_net, train_policy
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (return_tuple=True so the
+    Rust side always unwraps a tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write(outdir, name, text):
+    path = os.path.join(outdir, name)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {name} ({len(text) / 1e6:.2f} MB)")
+    return name
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--skip-policy-train", action="store_true",
+                    help="bake randomly initialized policy weights (tests)")
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer BC steps (CI smoke)")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+    t0 = time.time()
+    cfg = AotConfig()
+    manifest = cfg.manifest_dict()
+    manifest["artifacts"] = {}
+    art = manifest["artifacts"]
+
+    lm = cfg.lm
+    P = lm.param_count()
+    print(f"[aot] LM params: {P/1e6:.2f}M  (vocab={lm.vocab} L={lm.seq_len} "
+          f"d={lm.d_model} layers={lm.n_layers})")
+
+    # ---- LM train step (full-attention trunk, fused AdamW) ----
+    lowered = jax.jit(
+        lambda flat, m, v, step, tok, tgt: model.train_step(flat, m, v, step, tok, tgt, lm)
+    ).lower(f32(P), f32(P), f32(P), f32(), i32(lm.batch, lm.seq_len), i32(lm.batch, lm.seq_len))
+    art["lm_train_step"] = {
+        "file": write(args.outdir, "lm_train_step.hlo.txt", to_hlo_text(lowered)),
+        "args": ["params[P]", "adam_m[P]", "adam_v[P]", "step[]",
+                 "tokens[B,L]i32", "targets[B,L]i32"],
+        "outputs": ["params", "adam_m", "adam_v", "loss"],
+    }
+
+    # ---- LM eval loss ----
+    lowered = jax.jit(
+        lambda flat, tok, tgt: (model.eval_loss(flat, tok, tgt, lm),)
+    ).lower(f32(P), i32(lm.batch, lm.seq_len), i32(lm.batch, lm.seq_len))
+    art["lm_eval_loss"] = {
+        "file": write(args.outdir, "lm_eval_loss.hlo.txt", to_hlo_text(lowered)),
+        "args": ["params[P]", "tokens[B,L]i32", "targets[B,L]i32"],
+        "outputs": ["loss"],
+    }
+
+    # ---- LM inference logits (Pallas full-attention kernels) ----
+    lowered = jax.jit(
+        lambda flat, tok: (model.logits_fn(flat, tok, lm),)
+    ).lower(f32(P), i32(lm.batch, lm.seq_len))
+    art["lm_logits"] = {
+        "file": write(args.outdir, "lm_logits.hlo.txt", to_hlo_text(lowered)),
+        "args": ["params[P]", "tokens[B,L]i32"],
+        "outputs": ["logits[B,L,V]"],
+    }
+
+    # ---- Rank-bucket masked factor attention kernels (L1 hot path) ----
+    kc = cfg.kernel
+    n, d = kc.seq_len, kc.head_dim
+    for r in kc.rank_buckets:
+        lowered = jax.jit(
+            lambda u, s, vt, vv, mask: (
+                lowrank_attn.masked_factor_attention(u, s, vt, vv, mask,
+                                                     block_n=kc.block_n),)
+        ).lower(f32(n, r), f32(r), f32(r, n), f32(n, d), f32(r))
+        art[f"lowrank_attn_r{r}"] = {
+            "file": write(args.outdir, f"lowrank_attn_r{r}.hlo.txt", to_hlo_text(lowered)),
+            "args": [f"u[{n},{r}]", f"s[{r}]", f"vt[{r},{n}]",
+                     f"v_val[{n},{d}]", f"mask[{r}]"],
+            "outputs": [f"y[{n},{d}]"],
+            "rank": r, "seq_len": n, "head_dim": d,
+        }
+
+    # ---- Full-attention kernel (baseline + serving fallback) ----
+    lowered = jax.jit(
+        lambda q, k, v: (full_attn.full_attention(q, k, v, causal=True,
+                                                  block_q=kc.block_n),)
+    ).lower(f32(n, d), f32(n, d), f32(n, d))
+    art["full_attn"] = {
+        "file": write(args.outdir, "full_attn.hlo.txt", to_hlo_text(lowered)),
+        "args": [f"q[{n},{d}]", f"k[{n},{d}]", f"v[{n},{d}]"],
+        "outputs": [f"y[{n},{d}]"],
+    }
+
+    # ---- Power-iteration spectral norm ----
+    lowered = jax.jit(
+        lambda m, v0: power_iter.power_iter(m, v0, iters=kc.power_iters)
+    ).lower(f32(n, n), f32(n))
+    art["power_iter"] = {
+        "file": write(args.outdir, "power_iter.hlo.txt", to_hlo_text(lowered)),
+        "args": [f"m[{n},{n}]", f"v0[{n}]"],
+        "outputs": ["sigma[1]", f"v[{n}]"],
+        "iters": kc.power_iters,
+    }
+
+    # ---- Transformer policy (BC warm-started, weights baked) ----
+    pc = cfg.policy
+    weights_path = os.path.join(args.outdir, "policy_weights.npz")
+    if args.skip_policy_train:
+        params, acc = policy_net.init_policy_params(pc, pc.seed), 0.0
+    elif os.path.exists(weights_path):
+        params = train_policy.load_weights(weights_path)
+        acc = manifest.get("policy_bc_accuracy", -1.0)
+        print("  reusing cached policy weights")
+    else:
+        steps = 60 if args.quick else 300
+        print(f"[aot] behavior-cloning policy ({steps} steps)…")
+        params, acc = train_policy.train(pc, steps=steps, seed=pc.seed)
+        train_policy.save_weights(params, weights_path)
+    manifest["policy_bc_accuracy"] = acc
+
+    # Weights cross the runtime boundary as ONE flat f32 argument —
+    # `as_hlo_text()` elides large embedded constants ("{...}"), so baking
+    # them into the module would silently zero the policy.
+    flat = np.asarray(policy_net.flatten_policy_params(params, pc), np.float32)
+    flat.tofile(os.path.join(args.outdir, "policy_params.bin"))
+    lowered = jax.jit(
+        lambda w, s: (policy_net.policy_logits_flat(w, s, pc),)
+    ).lower(f32(flat.size), f32(pc.state_dim))
+    art["policy_net"] = {
+        "file": write(args.outdir, "policy_net.hlo.txt", to_hlo_text(lowered)),
+        "args": [f"weights[{flat.size}]", f"state[{pc.state_dim}]"],
+        "outputs": [f"logits[{pc.n_actions}]"],
+        "rank_grid": list(train_policy.RANK_GRID),
+        "params_file": "policy_params.bin",
+        "param_count": int(flat.size),
+    }
+
+    # ---- L1 perf estimates for EXPERIMENTS.md §Perf ----
+    manifest["kernel_perf_estimates"] = {
+        "lowrank_vmem_bytes": {
+            str(r): lowrank_attn.vmem_footprint_bytes(n, r, d, kc.block_n)
+            for r in kc.rank_buckets
+        },
+        "lowrank_mxu_utilization": {
+            str(r): lowrank_attn.mxu_utilization_estimate(n, r, d, kc.block_n)
+            for r in kc.rank_buckets
+        },
+    }
+
+    with open(os.path.join(args.outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, default=float)
+    print(f"[aot] done in {time.time()-t0:.1f}s → {args.outdir}/manifest.json")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

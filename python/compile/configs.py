@@ -1,0 +1,91 @@
+"""Shared model / kernel configuration for the AOT compile path.
+
+Single source of truth for every static shape baked into the HLO
+artifacts; the values are exported into artifacts/manifest.json so the
+Rust runtime never hard-codes them.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class LmConfig:
+    """Decoder language model (L2) configuration."""
+
+    vocab: int = 256          # byte-level tokenizer
+    seq_len: int = 128
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 512
+    batch: int = 8
+    lr: float = 5e-4          # AdamW peak LR for the e2e training example
+    weight_decay: float = 0.01
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        """Total number of f32 parameters in the flattened layout."""
+        c = self
+        per_layer = (
+            4 * c.d_model * c.d_model        # wq wk wv wo
+            + 2 * c.d_model                  # ln1 gamma/beta
+            + c.d_model * c.d_ff + c.d_ff    # ffn w1 b1
+            + c.d_ff * c.d_model + c.d_model # ffn w2 b2
+            + 2 * c.d_model                  # ln2 gamma/beta
+        )
+        return (
+            c.vocab * c.d_model              # token embedding
+            + c.seq_len * c.d_model          # positional embedding
+            + c.n_layers * per_layer
+            + 2 * c.d_model                  # final layernorm
+            + c.d_model * c.vocab            # unembedding head
+        )
+
+
+@dataclass(frozen=True)
+class KernelConfig:
+    """Attention-kernel (L1) shapes for the standalone artifacts."""
+
+    seq_len: int = 128
+    head_dim: int = 32
+    # Rank buckets compiled into dedicated executables (DESIGN.md §5).
+    rank_buckets: tuple = (16, 32, 48, 64)
+    # Pallas block sizes (VMEM tiling; see DESIGN.md §Hardware-Adaptation).
+    block_n: int = 64
+    power_iters: int = 3
+
+
+@dataclass(frozen=True)
+class PolicyConfig:
+    """Transformer policy network (Eq. 7) configuration."""
+
+    state_dim: int = 33       # must match drrl::rl::state::state_dim()
+    d_model: int = 64
+    n_blocks: int = 2
+    n_heads: int = 4
+    n_actions: int = 7        # rank grid {16,24,32,40,48,56,64}
+    seed: int = 1234
+
+    def param_count(self) -> int:
+        c = self
+        per_block = 4 * c.d_model * c.d_model + 2 * c.d_model * 4 * c.d_model + 4 * c.d_model + c.d_model + 4 * c.d_model
+        return c.state_dim * c.d_model + c.d_model + c.n_blocks * per_block + c.d_model * c.n_actions + c.n_actions
+
+
+@dataclass
+class AotConfig:
+    lm: LmConfig = field(default_factory=LmConfig)
+    kernel: KernelConfig = field(default_factory=KernelConfig)
+    policy: PolicyConfig = field(default_factory=PolicyConfig)
+
+    def manifest_dict(self):
+        return {
+            "lm": asdict(self.lm),
+            "kernel": {**asdict(self.kernel), "rank_buckets": list(self.kernel.rank_buckets)},
+            "policy": asdict(self.policy),
+            "lm_param_count": self.lm.param_count(),
+        }

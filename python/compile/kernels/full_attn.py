@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: blocked causal full attention (the baseline the
+paper's Table 1 'Full-Rank' row measures).
+
+Flash-attention-style row blocking adapted to TPU-style memory: the grid
+walks query blocks; for each, the kernel streams key/value blocks
+through VMEM, maintaining the running max / normalizer (online softmax)
+so the n×n score matrix never hits HBM.
+
+interpret=True as required for CPU-PJRT execution (DESIGN.md §3).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int, seq_len: int, causal: bool):
+    qi = pl.program_id(0)
+    q = q_ref[...]                      # (block_q, d)
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    k = k_ref[...]                      # (n, d) — resident; shapes ≤ 128 fit
+    v = v_ref[...]                      # (n, d)
+    scores = (q @ k.T) * scale          # (block_q, n)
+    if causal:
+        rows = qi * block_q + jax.lax.iota(jnp.int32, block_q)[:, None]
+        cols = jax.lax.iota(jnp.int32, seq_len)[None, :]
+        scores = jnp.where(cols <= rows, scores, -jnp.inf)
+    m = scores.max(axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    o_ref[...] = (p @ v) / p.sum(axis=-1, keepdims=True)
+
+
+def full_attention(q, k, v, *, causal: bool = True, block_q: int = 64):
+    """Blocked full attention. q/k/v: (n, d) f32."""
+    n, d = q.shape
+    block_q = min(block_q, n)
+    assert n % block_q == 0, f"{n} % {block_q}"
+    grid = (n // block_q,)
+    kern = functools.partial(_attn_kernel, block_q=block_q, seq_len=n, causal=causal)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=True,
+    )(q, k, v)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q"))
+def full_attention_jit(q, k, v, causal: bool = True, block_q: int = 64):
+    return full_attention(q, k, v, causal=causal, block_q=block_q)

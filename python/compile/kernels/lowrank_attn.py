@@ -1,0 +1,108 @@
+"""L1 Pallas kernel: masked-rank low-rank attention factor apply.
+
+The serving hot-spot of DR-RL. Given the maintained factors of the
+attention matrix A ≈ U·diag(s)·Vᵀ (computed incrementally by the Rust
+coordinator, Eq. 12) and the value matrix V_val, compute
+
+    Y = U · diag(s ⊙ mask) · (Vᵀ · V_val)
+
+without ever materializing the n×n attention matrix.
+
+Hardware adaptation (DESIGN.md §3): the paper tiles CUDA threadblocks;
+here the grid runs over sequence blocks of U's rows, each step keeping a
+(block_n × r_max) tile of U and the full (r_max × d) intermediate W in
+VMEM. W = diag(s⊙mask)·Vᵀ·V_val is computed once into scratch on the
+first grid step — the rank dimension is the innermost contraction so the
+MXU sees [block_n × r] @ [r × d] systolic matmuls. The rank *mask* keeps
+the shape static for AOT while allowing any effective rank ≤ r_max.
+
+Pallas runs with interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls); the BlockSpec structure is still the TPU schedule and is
+what the §Perf VMEM/MXU estimates in EXPERIMENTS.md are computed from.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _factor_apply_kernel(u_ref, w_ref, o_ref):
+    """One sequence block: O[blk] = U[blk] @ W.
+
+    u_ref: (block_n, r_max) VMEM tile of U
+    w_ref: (r_max, d)       precomputed masked intermediate
+    o_ref: (block_n, d)     output tile
+    """
+    o_ref[...] = u_ref[...] @ w_ref[...]
+
+
+def _w_kernel(s_ref, mask_ref, vt_ref, vval_ref, w_ref):
+    """W = diag(s ⊙ mask) · (Vᵀ · V_val) — computed once (small: r×d)."""
+    w = vt_ref[...] @ vval_ref[...]
+    w_ref[...] = w * (s_ref[...] * mask_ref[...])[:, None]
+
+
+def masked_factor_attention(u, s, vt, v_val, rank_mask, *, block_n: int = 64):
+    """Pallas masked-rank factor attention.
+
+    u: (n, r_max) f32 — left singular vectors
+    s: (r_max,)   f32 — singular values
+    vt: (r_max, n) f32 — right singular vectors (transposed)
+    v_val: (n, d) f32 — attention value matrix
+    rank_mask: (r_max,) f32 — 1.0 for active spectral components
+    """
+    n, r_max = u.shape
+    d = v_val.shape[1]
+    assert vt.shape == (r_max, n) and s.shape == (r_max,) and rank_mask.shape == (r_max,)
+    block_n = min(block_n, n)
+    assert n % block_n == 0, f"seq len {n} must divide block_n {block_n}"
+
+    # Stage 1 — rank-space intermediate W (r_max × d): one grid step, all
+    # operands fit VMEM at our sizes (r_max ≤ 64, d ≤ 128, n ≤ 8192 tiles
+    # via vt block column-wise if needed; at compile shapes vt fits whole).
+    w = pl.pallas_call(
+        _w_kernel,
+        out_shape=jax.ShapeDtypeStruct((r_max, d), jnp.float32),
+        interpret=True,
+    )(s, rank_mask, vt, v_val)
+
+    # Stage 2 — blocked U @ W over the sequence dimension.
+    grid = (n // block_n,)
+    out = pl.pallas_call(
+        _factor_apply_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, r_max), lambda i: (i, 0)),
+            pl.BlockSpec((r_max, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=True,
+    )(u, w)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def masked_factor_attention_jit(u, s, vt, v_val, rank_mask, block_n: int = 64):
+    return masked_factor_attention(u, s, vt, v_val, rank_mask, block_n=block_n)
+
+
+def vmem_footprint_bytes(n: int, r_max: int, d: int, block_n: int = 64) -> int:
+    """Estimated peak VMEM residency per grid step (f32).
+
+    Used by the §Perf roofline estimate: tile of U + W + output tile.
+    """
+    return 4 * (block_n * r_max + r_max * d + block_n * d)
+
+
+def mxu_utilization_estimate(n: int, r_max: int, d: int, block_n: int = 64) -> float:
+    """Fraction of MXU-issueable FLOPs vs total kernel FLOPs.
+
+    Both stages are pure matmuls; only the diag scaling (r·d MACs) is
+    VPU work, so utilization ≈ matmul_flops / total_flops.
+    """
+    matmul = 2 * r_max * n * d + 2 * n * r_max * d
+    vpu = 2 * r_max * d
+    return matmul / (matmul + vpu)

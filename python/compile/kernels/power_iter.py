@@ -1,0 +1,45 @@
+"""L1 Pallas kernel: power-iteration spectral norm (paper Eq. 16).
+
+K iterations of v ← MᵀMv / ‖MᵀMv‖ followed by σ ≈ ‖Mv‖. Feeds the
+perturbation safety check (Eq. 9) when the coordinator offloads norm
+estimation to the accelerator (the Rust fallback lives in
+linalg::power_iter).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _power_iter_kernel(m_ref, v0_ref, sigma_ref, v_ref, *, iters: int):
+    m = m_ref[...]
+    v = v0_ref[...]
+    v = v / jnp.maximum(jnp.sqrt((v * v).sum()), 1e-30)
+    for _ in range(iters):  # static unroll — K is tiny (paper: 3)
+        w = m @ v
+        v = m.T @ w
+        v = v / jnp.maximum(jnp.sqrt((v * v).sum()), 1e-30)
+    mv = m @ v
+    sigma_ref[0] = jnp.sqrt((mv * mv).sum())
+    v_ref[...] = v
+
+
+def power_iter(m, v0, *, iters: int = 3):
+    """Spectral-norm estimate. m: (r, c), v0: (c,). Returns (sigma, v)."""
+    r, c = m.shape
+    assert v0.shape == (c,)
+    return pl.pallas_call(
+        functools.partial(_power_iter_kernel, iters=iters),
+        out_shape=(
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((c,), jnp.float32),
+        ),
+        interpret=True,
+    )(m, v0)
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def power_iter_jit(m, v0, iters: int = 3):
+    return power_iter(m, v0, iters=iters)

@@ -1,0 +1,52 @@
+"""Pure-jnp correctness oracles for every Pallas kernel (L1).
+
+These are the ground truth the pytest/hypothesis suite checks the
+kernels against, and the implementations the differentiable L2 train
+path uses (Pallas kernels have no registered VJP; the fwd-only serving
+artifacts call the kernels, the train-step artifact calls these — the
+test suite proves they agree to float tolerance).
+"""
+
+import jax.numpy as jnp
+
+
+def full_attention_ref(q, k, v, causal: bool = True):
+    """softmax(Q·Kᵀ/√d)·V — paper Eq. 1."""
+    d = q.shape[-1]
+    scores = q @ k.T / jnp.sqrt(jnp.float32(d))
+    if causal:
+        n = q.shape[0]
+        mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+        scores = jnp.where(mask, scores, -jnp.inf)
+    weights = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    weights = weights / weights.sum(axis=-1, keepdims=True)
+    return weights @ v
+
+
+def masked_factor_attention_ref(u, s, vt, v_val, rank_mask):
+    """Masked-rank factor apply (DESIGN.md §Hardware-Adaptation):
+
+    Y = U · diag(s ⊙ mask) · (Vᵀ · V_val)
+
+    u: (n, r_max), s: (r_max,), vt: (r_max, n), v_val: (n, d),
+    rank_mask: (r_max,) 1.0 for active components.  One executable serves
+    every effective rank ≤ r_max; the rank-bucket executables instantiate
+    smaller r_max for real FLOPs reduction.
+    """
+    w = vt @ v_val                       # (r_max, d)
+    w = w * (s * rank_mask)[:, None]     # scale by masked spectrum
+    return u @ w                         # (n, d)
+
+
+def power_iter_ref(m, v0, iters: int = 3):
+    """Spectral-norm estimate via K power iterations (paper Eq. 16).
+
+    Returns (sigma_estimate, v_final).
+    """
+    v = v0 / jnp.linalg.norm(v0)
+    for _ in range(iters):
+        w = m @ v
+        v = m.T @ w
+        v = v / jnp.maximum(jnp.linalg.norm(v), 1e-30)
+    sigma = jnp.linalg.norm(m @ v)
+    return sigma, v

@@ -1,0 +1,182 @@
+"""L2: the decoder language model, its loss and a fused AdamW train step.
+
+All parameters live in ONE flat f32 vector so the Rust runtime passes a
+single literal between steps (DESIGN.md §9). Slice offsets are static
+Python ints — everything lowers to static-shape HLO.
+
+The differentiable train path uses the pure-jnp attention oracle
+(kernels/ref.py); the inference artifacts call the Pallas kernels (L1).
+pytest proves both agree to float tolerance, so the train/serve split
+does not change numerics.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .configs import LmConfig
+from .kernels import full_attn, ref
+
+
+# --------------------------------------------------------------------------
+# Flat-parameter layout
+# --------------------------------------------------------------------------
+
+def param_slices(cfg: LmConfig):
+    """Ordered (name, shape) list defining the flat layout."""
+    out = [
+        ("embed", (cfg.vocab, cfg.d_model)),
+        ("pos", (cfg.seq_len, cfg.d_model)),
+    ]
+    for l in range(cfg.n_layers):
+        out += [
+            (f"l{l}.ln1_g", (cfg.d_model,)),
+            (f"l{l}.ln1_b", (cfg.d_model,)),
+            (f"l{l}.wq", (cfg.d_model, cfg.d_model)),
+            (f"l{l}.wk", (cfg.d_model, cfg.d_model)),
+            (f"l{l}.wv", (cfg.d_model, cfg.d_model)),
+            (f"l{l}.wo", (cfg.d_model, cfg.d_model)),
+            (f"l{l}.ln2_g", (cfg.d_model,)),
+            (f"l{l}.ln2_b", (cfg.d_model,)),
+            (f"l{l}.w1", (cfg.d_model, cfg.d_ff)),
+            (f"l{l}.b1", (cfg.d_ff,)),
+            (f"l{l}.w2", (cfg.d_ff, cfg.d_model)),
+            (f"l{l}.b2", (cfg.d_model,)),
+        ]
+    out += [
+        ("lnf_g", (cfg.d_model,)),
+        ("lnf_b", (cfg.d_model,)),
+        ("head", (cfg.d_model, cfg.vocab)),
+    ]
+    return out
+
+
+def _size(shape):
+    n = 1
+    for s in shape:
+        n *= s
+    return n
+
+
+def unflatten(flat, cfg: LmConfig):
+    """Flat vector → dict of named views (static offsets)."""
+    params = {}
+    off = 0
+    for name, shape in param_slices(cfg):
+        n = _size(shape)
+        params[name] = jax.lax.dynamic_slice(flat, (off,), (n,)).reshape(shape)
+        off += n
+    return params
+
+
+def init_params(cfg: LmConfig, seed: int = 0):
+    """Flat parameter vector with GPT-style init."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for name, shape in param_slices(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("_g",)):
+            chunks.append(jnp.ones(_size(shape), jnp.float32))
+        elif name.endswith(("_b", ".b1", ".b2")):
+            chunks.append(jnp.zeros(_size(shape), jnp.float32))
+        else:
+            std = 0.02
+            chunks.append(std * jax.random.normal(sub, (_size(shape),), jnp.float32))
+    return jnp.concatenate(chunks)
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _attention_block(x, p, l, cfg: LmConfig, use_pallas: bool):
+    """Causal MHSA over one sequence (n × d_model)."""
+    h = _layernorm(x, p[f"l{l}.ln1_g"], p[f"l{l}.ln1_b"])
+    q = h @ p[f"l{l}.wq"]
+    k = h @ p[f"l{l}.wk"]
+    v = h @ p[f"l{l}.wv"]
+    hd = cfg.head_dim
+    outs = []
+    for head in range(cfg.n_heads):
+        sl = slice(head * hd, (head + 1) * hd)
+        if use_pallas:
+            o = full_attn.full_attention(q[:, sl], k[:, sl], v[:, sl], causal=True)
+        else:
+            o = ref.full_attention_ref(q[:, sl], k[:, sl], v[:, sl], causal=True)
+        outs.append(o)
+    attn = jnp.concatenate(outs, axis=-1) @ p[f"l{l}.wo"]
+    x = x + attn
+    h2 = _layernorm(x, p[f"l{l}.ln2_g"], p[f"l{l}.ln2_b"])
+    ff = jax.nn.gelu(h2 @ p[f"l{l}.w1"] + p[f"l{l}.b1"]) @ p[f"l{l}.w2"] + p[f"l{l}.b2"]
+    return x + ff
+
+
+def forward_tokens(flat, tokens, cfg: LmConfig, use_pallas: bool = False):
+    """tokens: (batch, seq) int32 → logits (batch, seq, vocab)."""
+    p = unflatten(flat, cfg)
+
+    def one(seq_tokens):
+        x = p["embed"][seq_tokens] + p["pos"]
+        for l in range(cfg.n_layers):
+            x = _attention_block(x, p, l, cfg, use_pallas)
+        x = _layernorm(x, p["lnf_g"], p["lnf_b"])
+        return x @ p["head"]
+
+    return jax.vmap(one)(tokens)
+
+
+def lm_loss(flat, tokens, targets, cfg: LmConfig, use_pallas: bool = False):
+    """Mean next-token cross-entropy. targets = tokens shifted by caller."""
+    logits = forward_tokens(flat, tokens, cfg, use_pallas)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+# --------------------------------------------------------------------------
+# Fused AdamW train step (single flat vector ⇒ trivially fused update)
+# --------------------------------------------------------------------------
+
+def train_step(flat, m, v, step, tokens, targets, cfg: LmConfig):
+    """One AdamW step. Returns (flat', m', v', loss).
+
+    step is a float32 scalar counting completed steps (incremented here).
+    """
+    loss, grad = jax.value_and_grad(lm_loss)(flat, tokens, targets, cfg)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    t = step + 1.0
+    m = b1 * m + (1.0 - b1) * grad
+    v = b2 * v + (1.0 - b2) * grad * grad
+    mhat = m / (1.0 - b1 ** t)
+    vhat = v / (1.0 - b2 ** t)
+    update = mhat / (jnp.sqrt(vhat) + eps) + cfg.weight_decay * flat
+    flat = flat - cfg.lr * update
+    return flat, m, v, loss
+
+
+def eval_loss(flat, tokens, targets, cfg: LmConfig):
+    """Loss without update (PPL evaluation)."""
+    return lm_loss(flat, tokens, targets, cfg)
+
+
+def logits_fn(flat, tokens, cfg: LmConfig):
+    """Inference logits using the Pallas attention kernel (serving path)."""
+    return forward_tokens(flat, tokens, cfg, use_pallas=True)
+
+
+# Jitted convenience wrappers for the python test-suite.
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def train_step_jit(flat, m, v, step, tokens, targets, cfg: LmConfig):
+    return train_step(flat, m, v, step, tokens, targets, cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def eval_loss_jit(flat, tokens, targets, cfg: LmConfig):
+    return eval_loss(flat, tokens, targets, cfg)

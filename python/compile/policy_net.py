@@ -1,0 +1,159 @@
+"""L2: Transformer-encoder policy network (paper Eq. 7, §4.5.1).
+
+π_θ(a|s) = Softmax(MLP(TransformerEncoder(s)))
+
+The 33-dim state vector (mirroring drrl::rl::state) is split into three
+semantic tokens — sequence-dynamics conv features, layer weight
+statistics, and spectral/positional scalars — projected to d_model and
+processed by a 2-block encoder; the pooled representation feeds the MLP
+head that emits logits over the rank grid.
+
+Weights are trained at build time (train_policy.py, behavior cloning
+against the spectral oracle) and baked into the HLO artifact as
+constants, so the Rust serving path runs the policy with a single
+PJRT call and zero Python.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import PolicyConfig
+
+# State layout (must mirror drrl::rl::state::featurize):
+CONV_FEATS = 16      # 4 channels × (mean,max) × 2 signals
+WSTAT_FEATS = 9      # mean/var/spectral-norm for Wq,Wk,Wv
+TAIL_FEATS = 8       # NER probes (3) + decay + entropy + prev_rank + layer + ln(n)
+STATE_DIM = CONV_FEATS + WSTAT_FEATS + TAIL_FEATS  # 33
+
+
+def init_policy_params(cfg: PolicyConfig, seed: int = 0):
+    """Initialize the policy weight pytree."""
+    key = jax.random.PRNGKey(seed)
+
+    def dense(key, i, o):
+        std = (2.0 / (i + o)) ** 0.5
+        return std * jax.random.normal(key, (i, o), jnp.float32)
+
+    keys = iter(jax.random.split(key, 64))
+    d = cfg.d_model
+    p = {
+        "tok0": dense(next(keys), CONV_FEATS, d),
+        "tok1": dense(next(keys), WSTAT_FEATS, d),
+        "tok2": dense(next(keys), TAIL_FEATS, d),
+        "pos": 0.02 * jax.random.normal(next(keys), (3, d), jnp.float32),
+    }
+    for b in range(cfg.n_blocks):
+        p[f"b{b}.wq"] = dense(next(keys), d, d)
+        p[f"b{b}.wk"] = dense(next(keys), d, d)
+        p[f"b{b}.wv"] = dense(next(keys), d, d)
+        p[f"b{b}.wo"] = dense(next(keys), d, d)
+        p[f"b{b}.ln1_g"] = jnp.ones(d)
+        p[f"b{b}.ln1_b"] = jnp.zeros(d)
+        p[f"b{b}.w1"] = dense(next(keys), d, 4 * d)
+        p[f"b{b}.b1"] = jnp.zeros(4 * d)
+        p[f"b{b}.w2"] = dense(next(keys), 4 * d, d)
+        p[f"b{b}.b2"] = jnp.zeros(d)
+        p[f"b{b}.ln2_g"] = jnp.ones(d)
+        p[f"b{b}.ln2_b"] = jnp.zeros(d)
+    p["head_w1"] = dense(next(keys), d, d)
+    p["head_b1"] = jnp.zeros(d)
+    p["head_w2"] = dense(next(keys), d, cfg.n_actions)
+    p["head_b2"] = jnp.zeros(cfg.n_actions)
+    return p
+
+
+def _ln(x, g, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _encoder_block(x, p, b, cfg: PolicyConfig):
+    """Standard pre-LN encoder block over the 3-token state sequence."""
+    d = cfg.d_model
+    hd = d // cfg.n_heads
+    h = _ln(x, p[f"b{b}.ln1_g"], p[f"b{b}.ln1_b"])
+    q, k, v = h @ p[f"b{b}.wq"], h @ p[f"b{b}.wk"], h @ p[f"b{b}.wv"]
+    outs = []
+    for head in range(cfg.n_heads):
+        sl = slice(head * hd, (head + 1) * hd)
+        s = (q[:, sl] @ k[:, sl].T) / jnp.sqrt(jnp.float32(hd))
+        w = jax.nn.softmax(s, axis=-1)
+        outs.append(w @ v[:, sl])
+    x = x + jnp.concatenate(outs, -1) @ p[f"b{b}.wo"]
+    h2 = _ln(x, p[f"b{b}.ln2_g"], p[f"b{b}.ln2_b"])
+    return x + jax.nn.gelu(h2 @ p[f"b{b}.w1"] + p[f"b{b}.b1"]) @ p[f"b{b}.w2"] + p[f"b{b}.b2"]
+
+
+def policy_logits(p, state, cfg: PolicyConfig):
+    """state: (STATE_DIM,) f32 → logits (n_actions,)."""
+    t0 = state[:CONV_FEATS] @ p["tok0"]
+    t1 = state[CONV_FEATS:CONV_FEATS + WSTAT_FEATS] @ p["tok1"]
+    t2 = state[CONV_FEATS + WSTAT_FEATS:] @ p["tok2"]
+    x = jnp.stack([t0, t1, t2]) + p["pos"]
+    for b in range(cfg.n_blocks):
+        x = _encoder_block(x, p, b, cfg)
+    pooled = x.mean(axis=0)
+    h = jnp.tanh(pooled @ p["head_w1"] + p["head_b1"])
+    return h @ p["head_w2"] + p["head_b2"]
+
+
+def policy_logits_batch(p, states, cfg: PolicyConfig):
+    """states: (B, STATE_DIM) → (B, n_actions)."""
+    return jax.vmap(lambda s: policy_logits(p, s, cfg))(states)
+
+
+# ---------------------------------------------------------------------------
+# Flat-parameter interface for the AOT artifact. `as_hlo_text()` elides
+# large constants ("{...}"), so weights must cross the boundary as a
+# runtime argument: one flat f32 vector with a deterministic key order.
+# ---------------------------------------------------------------------------
+
+def param_order(cfg: PolicyConfig):
+    """Deterministic (key, shape) list for the flat layout."""
+    d = cfg.d_model
+    order = [
+        ("tok0", (CONV_FEATS, d)),
+        ("tok1", (WSTAT_FEATS, d)),
+        ("tok2", (TAIL_FEATS, d)),
+        ("pos", (3, d)),
+    ]
+    for b in range(cfg.n_blocks):
+        order += [
+            (f"b{b}.wq", (d, d)), (f"b{b}.wk", (d, d)),
+            (f"b{b}.wv", (d, d)), (f"b{b}.wo", (d, d)),
+            (f"b{b}.ln1_g", (d,)), (f"b{b}.ln1_b", (d,)),
+            (f"b{b}.w1", (d, 4 * d)), (f"b{b}.b1", (4 * d,)),
+            (f"b{b}.w2", (4 * d, d)), (f"b{b}.b2", (d,)),
+            (f"b{b}.ln2_g", (d,)), (f"b{b}.ln2_b", (d,)),
+        ]
+    order += [
+        ("head_w1", (d, d)), ("head_b1", (d,)),
+        ("head_w2", (d, cfg.n_actions)), ("head_b2", (cfg.n_actions,)),
+    ]
+    return order
+
+
+def flat_param_count(cfg: PolicyConfig) -> int:
+    return sum(int(jnp.prod(jnp.asarray(s))) for _, s in param_order(cfg))
+
+
+def flatten_policy_params(p, cfg: PolicyConfig):
+    return jnp.concatenate([jnp.asarray(p[k]).reshape(-1) for k, _ in param_order(cfg)])
+
+
+def unflatten_policy_flat(flat, cfg: PolicyConfig):
+    out = {}
+    off = 0
+    for k, shape in param_order(cfg):
+        n = 1
+        for s in shape:
+            n *= s
+        out[k] = jax.lax.dynamic_slice(flat, (off,), (n,)).reshape(shape)
+        off += n
+    return out
+
+
+def policy_logits_flat(flat, state, cfg: PolicyConfig):
+    """Flat-weights entry point used by the AOT artifact."""
+    return policy_logits(unflatten_policy_flat(flat, cfg), state, cfg)

@@ -1,0 +1,86 @@
+"""AOT lowering smoke: HLO text emission is well-formed for every graph
+class, and the manifest schema matches what the rust side parses."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.aot import to_hlo_text, f32
+from compile.configs import AotConfig, LmConfig
+from compile.kernels import full_attn, lowrank_attn
+from compile import model
+
+
+def test_hlo_text_roundtrippable_simple():
+    lowered = jax.jit(lambda x, y: (x @ y + 1.0,)).lower(f32(8, 8), f32(8, 8))
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ROOT" in text
+    # 64-bit-id regression guard: text form never embeds ids > i32 max in
+    # a way the 0.5.1 parser rejects (parse happens rust-side; here we
+    # check the text is plain ASCII and structurally complete).
+    assert text.strip().startswith("HloModule")
+
+
+def test_kernel_lowering_small():
+    n, r, d = 64, 16, 16
+    lowered = jax.jit(
+        lambda u, s, vt, vv, mask: (
+            lowrank_attn.masked_factor_attention(u, s, vt, vv, mask, block_n=32),)
+    ).lower(f32(n, r), f32(r), f32(r, n), f32(n, d), f32(r))
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[64,16]" in text
+
+
+def test_full_attn_lowering():
+    n, d = 64, 16
+    lowered = jax.jit(
+        lambda q, k, v: (full_attn.full_attention(q, k, v, block_q=32),)
+    ).lower(f32(n, d), f32(n, d), f32(n, d))
+    assert "HloModule" in to_hlo_text(lowered)
+
+
+def test_small_train_step_lowering():
+    cfg = LmConfig(vocab=31, seq_len=16, d_model=16, n_layers=1, n_heads=2, d_ff=32, batch=2)
+    P = cfg.param_count()
+    i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+    lowered = jax.jit(
+        lambda flat, m, v, step, tok, tgt: model.train_step(flat, m, v, step, tok, tgt, cfg)
+    ).lower(f32(P), f32(P), f32(P), f32(), i32(2, 16), i32(2, 16))
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+
+
+def test_manifest_schema():
+    cfg = AotConfig()
+    m = cfg.manifest_dict()
+    for key in ("lm", "kernel", "policy", "lm_param_count"):
+        assert key in m, key
+    assert m["lm"]["vocab"] == 256
+    assert list(m["kernel"]["rank_buckets"]) == [16, 32, 48, 64]
+    # Round-trips through JSON (the rust parser consumes this).
+    text = json.dumps(m, default=float)
+    back = json.loads(text)
+    assert back["lm_param_count"] == m["lm_param_count"]
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built",
+)
+def test_generated_manifest_consistent():
+    path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")
+    with open(path) as f:
+        m = json.load(f)
+    arts = m["artifacts"]
+    for name, spec in arts.items():
+        apath = os.path.join(os.path.dirname(path), spec["file"])
+        assert os.path.exists(apath), f"{name} missing file"
+        with open(apath) as fh:
+            head = fh.read(64)
+        assert head.startswith("HloModule"), f"{name} not HLO text"
+    assert m["policy"]["state_dim"] == 33

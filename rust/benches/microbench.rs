@@ -1,0 +1,119 @@
+//! Micro-benchmarks of the hot-path substrates (the §Perf profile
+//! baseline): matmul, partial/batched SVD, incremental extension, power
+//! iteration, attention kernels (host + device), batcher and device
+//! dispatch overhead.
+
+use drrl::attention::{attention_matrix, full_attention, AttnInputs};
+use drrl::bench_harness::{banner, quick_mode, Bench};
+use drrl::coordinator::{BatchPolicy, DynamicBatcher};
+use drrl::linalg::{
+    batched_partial_svd, extend, matmul, spectral_norm_fast, top_k_svd, Mat,
+};
+use drrl::runtime::{ArtifactRegistry, HostTensor, Manifest};
+use drrl::util::Pcg32;
+use std::path::Path;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    banner("micro-benchmarks: hot-path substrates", "§Perf baseline profile");
+    let mut b = if quick_mode() { Bench::quick() } else { Bench::new() };
+    let mut rng = Pcg32::seeded(0xBEEF);
+
+    // ---- linalg ----
+    let a256 = Mat::randn(256, 256, 1.0, &mut rng);
+    let b256 = Mat::randn(256, 256, 1.0, &mut rng);
+    b.case("matmul 256x256x256", || {
+        std::hint::black_box(matmul(&a256, &b256));
+    });
+    b.throughput(2.0 * 256f64.powi(3) / 1e9); // GFLOP per iter
+
+    let a128 = Mat::randn(128, 128, 1.0, &mut rng);
+    b.case("top_k_svd n=128 k=64", || {
+        std::hint::black_box(top_k_svd(&a128, 64, 1));
+    });
+    b.case("top_k_svd n=128 k=16", || {
+        std::hint::black_box(top_k_svd(&a128, 16, 1));
+    });
+    let mats: Vec<Mat> = (0..8).map(|i| Mat::randn(128, 128, 1.0, &mut Pcg32::seeded(i))).collect();
+    b.case("batched_partial_svd 8x(128,k=32)", || {
+        std::hint::black_box(batched_partial_svd(&mats, 32, 2));
+    });
+    let d16 = top_k_svd(&a128, 16, 3);
+    b.case("incremental extend 16->32 (n=128)", || {
+        std::hint::black_box(extend(&a128, &d16, 32, 4));
+    });
+    b.case("full recompute k=32 (n=128)", || {
+        std::hint::black_box(top_k_svd(&a128, 32, 4));
+    });
+    b.case("power_iter K=3 (128x128)", || {
+        std::hint::black_box(spectral_norm_fast(&a128, 5));
+    });
+
+    // ---- attention (host) ----
+    let inp = AttnInputs {
+        q: Mat::randn(128, 32, 0.7, &mut rng),
+        k: Mat::randn(128, 32, 0.7, &mut rng),
+        v: Mat::randn(128, 32, 1.0, &mut rng),
+        causal: true,
+    };
+    b.case("host full attention n=128 d=32", || {
+        std::hint::black_box(full_attention(&inp));
+    });
+    let a = attention_matrix(&inp);
+    let svd = top_k_svd(&a, 64, 9);
+    b.case("host lowrank apply r=32", || {
+        std::hint::black_box(drrl::attention::lowrank_attention_output(&svd, 32, &inp.v));
+    });
+
+    // ---- batcher ----
+    let batcher: DynamicBatcher<u64> = DynamicBatcher::new(BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_micros(50),
+        capacity: 1 << 16,
+    });
+    b.case("batcher submit+drain batch of 8", || {
+        for i in 0..8u64 {
+            batcher.submit(i).unwrap();
+        }
+        std::hint::black_box(batcher.next_batch());
+    });
+
+    // ---- device dispatch (if artifacts built) ----
+    if Manifest::default_dir().join("manifest.json").exists() {
+        let reg = ArtifactRegistry::open_default()?;
+        reg.device.warm("power_iter")?;
+        reg.device.warm("full_attn")?;
+        reg.device.warm("lowrank_attn_r32")?;
+        let n = reg.manifest.kernel.seq_len;
+        let d = reg.manifest.kernel.head_dim;
+        let m: Vec<f32> = (0..n * n).map(|i| (i % 7) as f32 * 0.1).collect();
+        let v0: Vec<f32> = (0..n).map(|i| 1.0 + (i % 3) as f32).collect();
+        b.case("device power_iter dispatch", || {
+            std::hint::black_box(
+                reg.device
+                    .execute(
+                        "power_iter",
+                        vec![
+                            HostTensor::f32(m.clone(), &[n as i64, n as i64]),
+                            HostTensor::f32(v0.clone(), &[n as i64]),
+                        ],
+                    )
+                    .unwrap(),
+            );
+        });
+        b.case("device full_attn n=128", || {
+            std::hint::black_box(reg.full_attention(&inp.q, &inp.k, &inp.v).unwrap());
+        });
+        b.case("device lowrank r=32", || {
+            std::hint::black_box(reg.lowrank_attention(&svd, 32, &inp.v).unwrap());
+        });
+        let mut host = drrl::attention::lowrank_attention_output(&svd, 32, &inp.v);
+        host.scale_inplace(1.0); // keep binding used
+    } else {
+        println!("(artifacts not built — device dispatch cases skipped)");
+    }
+
+    b.write_csv(Path::new("bench_out/microbench.csv"))?;
+    println!("CSV → bench_out/microbench.csv");
+    Ok(())
+}

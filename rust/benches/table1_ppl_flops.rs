@@ -1,0 +1,184 @@
+//! Table 1 — Performance Comparison (PPL + FLOPs across methods).
+//!
+//! Paper: Full 23.4/45.2/28.7 @8.2G; Fixed-32 26.1/48.9/31.5 @4.9G;
+//! AdaptiveSVD 25.3/47.6/30.2 @5.3G; Random 27.8/51.3/33.1 @5.1G;
+//! DR-RL 24.7/46.5/29.8 @4.8G (41.5% saving).
+//!
+//! Reproduction: one LM per corpus is trained through the AOT train-step
+//! (identical budget for all methods), then each attention method
+//! evaluates validation PPL on the host forward (train/host_lm). FLOPs
+//! are the analytic model at the measured mean ranks. We reproduce the
+//! *shape* — ordering and relative gaps — not absolute perplexities
+//! (synthetic corpora, smaller model; DESIGN.md §2).
+
+use drrl::bench_harness::{banner, quick_mode, write_table_csv};
+use drrl::data::{Corpus, CorpusProfile};
+use drrl::flops::{BlockDims, ModelDims};
+use drrl::linalg::Mat;
+use drrl::rl::{train_hybrid, EnvConfig, RankEnv, TrainerConfig};
+use drrl::runtime::ArtifactRegistry;
+use drrl::train::{AttnMethod, HostLm, LmTrainer};
+use drrl::util::Pcg32;
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    banner(
+        "Table 1: PPL + FLOPs across methods (3 corpora)",
+        "DR-RL ≈ full-rank PPL at ~41.5% fewer FLOPs; Fixed < Adaptive < DR-RL; Random worst",
+    );
+    let quick = quick_mode();
+    let train_steps = if quick { 30 } else { 300 };
+    let eval_batches = if quick { 1 } else { 3 };
+    let corpus_bytes = if quick { 150_000 } else { 400_000 };
+
+    let reg = ArtifactRegistry::open_default()?;
+    let lm = reg.manifest.lm.clone();
+    let grid: Vec<usize> = vec![16, 24, 32, 40, 48, 56, 64];
+
+    // Train the DR-RL agent once (small host env; state features are
+    // dimension-independent).
+    eprintln!("[table1] training DR-RL agent…");
+    let mut rng = Pcg32::seeded(0x7AB1);
+    let env_layers: Vec<drrl::attention::MhsaWeights> =
+        (0..2).map(|_| drrl::attention::MhsaWeights::init(64, 2, &mut rng)).collect();
+    let mut env = RankEnv::new(
+        env_layers,
+        EnvConfig { rank_grid: grid.clone(), ..Default::default() },
+    );
+    let mut sampler = |r: &mut Pcg32| Mat::randn(96, 64, 1.0, r);
+    let agent = train_hybrid(
+        &mut env,
+        &mut sampler,
+        &TrainerConfig {
+            bc_episodes: if quick { 2 } else { 6 },
+            ppo_rounds: if quick { 2 } else { 6 },
+            episodes_per_round: 6,
+            ..Default::default()
+        },
+    );
+    let actor = Arc::new(agent.ac);
+
+    let methods: Vec<(&str, AttnMethod, f64)> = vec![
+        // (name, method, paper wiki/ptb/book avg position) — paper FLOPs col:
+        ("full-rank", AttnMethod::Full, 8.2),
+        ("fixed-low-rank", AttnMethod::FixedRank(32), 4.9),
+        ("adaptive-svd", AttnMethod::AdaptiveSvd { threshold: 0.90, r_max: 64 }, 5.3),
+        ("random-rank", AttnMethod::RandomRank { grid: grid.clone(), seed: 77 }, 5.1),
+        ("dr-rl", AttnMethod::DrRl { grid: grid.clone(), actor: Arc::clone(&actor) }, 4.8),
+    ];
+    let paper_ppl = [
+        ("full-rank", [23.4, 45.2, 28.7]),
+        ("fixed-low-rank", [26.1, 48.9, 31.5]),
+        ("adaptive-svd", [25.3, 47.6, 30.2]),
+        ("random-rank", [27.8, 51.3, 33.1]),
+        ("dr-rl", [24.7, 46.5, 29.8]),
+    ];
+
+    let profiles = CorpusProfile::all();
+    let mut measured: Vec<(String, Vec<f64>, f64, f64)> = methods
+        .iter()
+        .map(|(n, _, _)| (n.to_string(), Vec::new(), 0.0, 0.0))
+        .collect();
+
+    for (ci, &profile) in profiles.iter().enumerate() {
+        eprintln!("[table1] corpus {} — training shared LM ({train_steps} steps)…", profile.name());
+        let corpus = Corpus::build(profile, corpus_bytes, 42 + ci as u64);
+        let mut tr = LmTrainer::new(&reg, 42);
+        tr.train(&corpus, train_steps, 0)?;
+
+        let mut eval_rng = Pcg32::seeded(99);
+        // Shared eval batches for all methods (paired comparison).
+        let batches: Vec<(Vec<i32>, Vec<i32>)> = (0..eval_batches)
+            .map(|_| corpus.sample_batch(false, lm.batch, lm.seq_len, &mut eval_rng))
+            .collect();
+
+        for (mi, (name, method, _)) in methods.iter().enumerate() {
+            let mut host = HostLm::from_flat(&tr.params, &lm);
+            host.rank_sum = 0;
+            host.rank_count = 0;
+            let mut total = 0.0;
+            let mut count = 0usize;
+            for (tok, tgt) in &batches {
+                // Evaluate a subset of rows for speed (identical rows per
+                // method — paired).
+                let rows = if quick { 2 } else { 4 };
+                for b in 0..rows.min(lm.batch) {
+                    total += host.loss(
+                        &tok[b * lm.seq_len..(b + 1) * lm.seq_len],
+                        &tgt[b * lm.seq_len..(b + 1) * lm.seq_len],
+                        method,
+                        13 + b as u64,
+                    );
+                    count += 1;
+                }
+            }
+            let ppl = (total / count as f64).exp();
+            measured[mi].1.push(ppl);
+            if host.mean_rank() > 0.0 {
+                measured[mi].2 = host.mean_rank();
+            }
+            eprintln!("  {name:<16} ppl {ppl:8.2}  mean_rank {:5.1}", host.mean_rank());
+        }
+    }
+
+    // FLOPs column: analytic model at paper scale — L=4096 (the regime
+    // where attention dominates, §5.3), unembedding excluded, and the
+    // absolute scale normalized so the full-rank row reads the paper's
+    // 8.2 GFLOPs (our substrate differs; the *ratios* are ours).
+    let block = BlockDims { n: 4096, d_model: 512, n_heads: 8, d_ff: 2048 };
+    let model = ModelDims { block, n_layers: 12, vocab: 1 };
+    let full_flops = model.full_model_flops() as f64;
+    for (mi, _) in methods.iter().enumerate() {
+        let ratio = if measured[mi].2 > 0.0 {
+            let r = measured[mi].2 as usize;
+            let ranks = vec![vec![r; 8]; 12];
+            model.lowrank_model_flops(&ranks, 64) as f64 / full_flops
+        } else {
+            1.0
+        };
+        measured[mi].3 = 8.2 * ratio;
+    }
+
+    // ---- report ----
+    println!("\n{:<16} | {:>9} {:>9} {:>9} | {:>10} | paper (wiki/ptb/book @GFLOPs)",
+        "method", "wiki-sim", "ptb-sim", "book-sim", "GFLOPs");
+    println!("{}", "-".repeat(100));
+    let mut rows = Vec::new();
+    for (mi, (name, ppls, mean_rank, gflops)) in measured.iter().enumerate() {
+        let p = paper_ppl[mi].1;
+        println!(
+            "{name:<16} | {:>9.2} {:>9.2} {:>9.2} | {gflops:>10.1} | {:.1}/{:.1}/{:.1} @{:.1}G",
+            ppls[0], ppls[1], ppls[2], p[0], p[1], p[2], methods[mi].2
+        );
+        rows.push(format!(
+            "{name},{},{},{},{gflops},{mean_rank}",
+            ppls[0], ppls[1], ppls[2]
+        ));
+    }
+    let full_g = measured[0].3;
+    let drrl_g = measured[4].3;
+    println!(
+        "\nDR-RL FLOPs saving vs full-rank: {:.1}% (paper: 41.5%)",
+        (1.0 - drrl_g / full_g) * 1e2
+    );
+
+    // ---- shape checks (who wins) ----
+    let get = |n: &str| measured.iter().find(|(m, ..)| m == n).unwrap();
+    for ci in 0..3 {
+        let full = get("full-rank").1[ci];
+        let drrl_p = get("dr-rl").1[ci];
+        let fixed = get("fixed-low-rank").1[ci];
+        let random = get("random-rank").1[ci];
+        assert!(full <= drrl_p * 1.05, "corpus {ci}: full should be best");
+        assert!(drrl_p <= fixed * 1.10, "corpus {ci}: DR-RL should beat fixed");
+        assert!(drrl_p <= random * 1.10, "corpus {ci}: DR-RL should beat random");
+    }
+    write_table_csv(
+        Path::new("bench_out/table1.csv"),
+        "method,ppl_wiki,ppl_ptb,ppl_book,gflops,mean_rank",
+        &rows,
+    )?;
+    println!("CSV → bench_out/table1.csv");
+    Ok(())
+}

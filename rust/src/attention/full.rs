@@ -1,0 +1,125 @@
+//! Reference full-rank scaled-dot-product attention (paper Eq. 1) — the
+//! fidelity upper bound every approximation is scored against.
+
+use super::softmax::{causal_mask_inplace, softmax_rows_inplace};
+use crate::linalg::{matmul, matmul_bt, Mat};
+
+/// Single-head attention inputs (one head's projected Q/K/V).
+#[derive(Debug, Clone)]
+pub struct AttnInputs {
+    pub q: Mat,
+    pub k: Mat,
+    pub v: Mat,
+    pub causal: bool,
+}
+
+impl AttnInputs {
+    pub fn seq_len(&self) -> usize {
+        self.q.rows()
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.q.cols()
+    }
+}
+
+/// Raw (pre-softmax) attention scores  QKᵀ/√d.
+pub fn attention_scores(inp: &AttnInputs) -> Mat {
+    let d = inp.head_dim() as f64;
+    let mut scores = matmul_bt(&inp.q, &inp.k);
+    scores.scale_inplace(1.0 / d.sqrt());
+    if inp.causal {
+        causal_mask_inplace(&mut scores);
+    }
+    scores
+}
+
+/// The attention matrix A = softmax(QKᵀ/√d) (Eq. 1).
+pub fn attention_matrix(inp: &AttnInputs) -> Mat {
+    let mut scores = attention_scores(inp);
+    softmax_rows_inplace(&mut scores);
+    scores
+}
+
+/// Full attention output  Y = A·V.
+pub fn full_attention(inp: &AttnInputs) -> Mat {
+    let a = attention_matrix(inp);
+    matmul(&a, &inp.v)
+}
+
+/// Attention output from a provided (possibly approximated) A.
+pub fn apply_attention(a: &Mat, v: &Mat) -> Mat {
+    matmul(a, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn inputs(n: usize, d: usize, causal: bool, seed: u64) -> AttnInputs {
+        let mut rng = Pcg32::seeded(seed);
+        AttnInputs {
+            q: Mat::randn(n, d, 1.0, &mut rng),
+            k: Mat::randn(n, d, 1.0, &mut rng),
+            v: Mat::randn(n, d, 1.0, &mut rng),
+            causal,
+        }
+    }
+
+    #[test]
+    fn attention_rows_are_distributions() {
+        let a = attention_matrix(&inputs(12, 8, false, 1));
+        for i in 0..12 {
+            let sum: f64 = a.row(i).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-10);
+            assert!(a.row(i).iter().all(|&p| p >= 0.0));
+        }
+    }
+
+    #[test]
+    fn causal_attention_lower_triangular() {
+        let a = attention_matrix(&inputs(10, 4, true, 2));
+        for i in 0..10 {
+            for j in (i + 1)..10 {
+                assert_eq!(a[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn output_shape() {
+        let inp = inputs(16, 8, false, 3);
+        let y = full_attention(&inp);
+        assert_eq!(y.shape(), (16, 8));
+    }
+
+    #[test]
+    fn uniform_keys_give_uniform_attention() {
+        let mut rng = Pcg32::seeded(4);
+        let inp = AttnInputs {
+            q: Mat::randn(6, 4, 1.0, &mut rng),
+            k: Mat::zeros(6, 4), // all scores identical
+            v: Mat::randn(6, 4, 1.0, &mut rng),
+            causal: false,
+        };
+        let a = attention_matrix(&inp);
+        for i in 0..6 {
+            for j in 0..6 {
+                assert!((a[(i, j)] - 1.0 / 6.0).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn scale_invariance_of_shape_not_values() {
+        // Scaling Q changes sharpness: larger scale → more peaked rows.
+        let base = inputs(8, 4, false, 5);
+        let sharp = AttnInputs { q: base.q.scale(10.0), ..base.clone() };
+        let a0 = attention_matrix(&base);
+        let a1 = attention_matrix(&sharp);
+        let peak0 = a0.row(0).iter().copied().fold(0.0f64, f64::max);
+        let peak1 = a1.row(0).iter().copied().fold(0.0f64, f64::max);
+        assert!(peak1 > peak0);
+    }
+}

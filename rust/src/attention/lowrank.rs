@@ -1,0 +1,141 @@
+//! Low-rank attention approximations.
+//!
+//! Two families, mirroring the paper and the L1 Pallas kernel:
+//!
+//! 1. **Score-factor attention** (the DR-RL path): truncated SVD of the
+//!    post-softmax attention matrix A ≈ U_r Σ_r V_rᵀ, applied to V in
+//!    factor form — `O(n·r·(n+d))` instead of `O(n²d)` once factors are
+//!    known, with factors maintained incrementally across rank changes.
+//! 2. **Projection attention** (Linformer-style fixed-rank baseline):
+//!    K, V projected to r rows before the softmax.
+
+use super::full::{attention_matrix, AttnInputs};
+use crate::linalg::{matmul, matmul_at, matmul_bt, top_k_svd, Mat, Svd};
+
+/// Rank-r approximation of the attention matrix via truncated SVD.
+pub fn lowrank_attention_matrix(inp: &AttnInputs, r: usize, seed: u64) -> Mat {
+    let a = attention_matrix(inp);
+    let d = top_k_svd(&a, r, seed);
+    d.reconstruct(r)
+}
+
+/// Y_r = A_r · V computed in factor form: U_r · (Σ_r V_rᵀ · V).
+/// Never materializes the n×n matrix — this is the shape the Pallas
+/// kernel executes on the accelerator.
+pub fn lowrank_attention_output(svd: &Svd, r: usize, v: &Mat) -> Mat {
+    let r = r.min(svd.s.len());
+    // W = V_rᵀ · V : r×d  (V_r is n×r).
+    let vr = svd.v.take_cols(r);
+    let mut w = matmul_at(&vr, v);
+    // Scale rows of W by σ.
+    for i in 0..r {
+        let si = svd.s[i];
+        for x in w.row_mut(i).iter_mut() {
+            *x *= si;
+        }
+    }
+    matmul(&svd.u.take_cols(r), &w)
+}
+
+/// End-to-end low-rank attention: decompose scores at rank r, apply to V.
+pub fn lowrank_attention(inp: &AttnInputs, r: usize, seed: u64) -> Mat {
+    let a = attention_matrix(inp);
+    let d = top_k_svd(&a, r, seed);
+    lowrank_attention_output(&d, r, &inp.v)
+}
+
+/// Masked-rank attention: the static-shape formulation the AOT Pallas
+/// kernel uses. Factors are computed at `r_max` but columns ≥ `r_eff`
+/// are zeroed by the mask, so one compiled executable serves every rank.
+pub fn masked_rank_attention(inp: &AttnInputs, r_max: usize, r_eff: usize, seed: u64) -> Mat {
+    let a = attention_matrix(inp);
+    let d = top_k_svd(&a, r_max, seed);
+    let mut masked = Svd { u: d.u.clone(), s: d.s.clone(), v: d.v.clone() };
+    for i in r_eff.min(masked.s.len())..masked.s.len() {
+        masked.s[i] = 0.0;
+    }
+    lowrank_attention_output(&masked, r_max, &inp.v)
+}
+
+/// Linformer-style projection attention baseline: K, V are projected from
+/// n rows to r rows with a fixed random matrix E (shared per layer).
+pub fn projection_attention(inp: &AttnInputs, e: &Mat) -> Mat {
+    // e: r×n projection. K' = E·K (r×d), V' = E·V (r×d).
+    let kp = matmul(e, &inp.k);
+    let vp = matmul(e, &inp.v);
+    let d = inp.head_dim() as f64;
+    let mut scores = matmul_bt(&inp.q, &kp); // n×r
+    scores.scale_inplace(1.0 / d.sqrt());
+    super::softmax::softmax_rows_inplace(&mut scores);
+    matmul(&scores, &vp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::full::full_attention;
+    use crate::util::Pcg32;
+
+    fn inputs(n: usize, d: usize, seed: u64) -> AttnInputs {
+        let mut rng = Pcg32::seeded(seed);
+        AttnInputs {
+            q: Mat::randn(n, d, 1.0, &mut rng),
+            k: Mat::randn(n, d, 1.0, &mut rng),
+            v: Mat::randn(n, d, 1.0, &mut rng),
+            causal: false,
+        }
+    }
+
+    #[test]
+    fn factor_form_matches_materialized() {
+        let inp = inputs(20, 8, 1);
+        let a = attention_matrix(&inp);
+        let d = top_k_svd(&a, 6, 7);
+        let y_factor = lowrank_attention_output(&d, 6, &inp.v);
+        let y_mat = matmul(&d.reconstruct(6), &inp.v);
+        assert!(y_factor.allclose(&y_mat, 1e-8));
+    }
+
+    #[test]
+    fn error_decreases_with_rank() {
+        let inp = inputs(24, 8, 2);
+        let y_full = full_attention(&inp);
+        let mut last = f64::INFINITY;
+        for r in [2, 6, 12, 24] {
+            let y = lowrank_attention(&inp, r, 3);
+            let err = (&y_full - &y).fro_norm();
+            assert!(err <= last + 1e-6, "rank {r}: err {err} > prev {last}");
+            last = err;
+        }
+    }
+
+    #[test]
+    fn full_rank_recovers_exact() {
+        let inp = inputs(12, 6, 3);
+        let y_full = full_attention(&inp);
+        let y = lowrank_attention(&inp, 12, 4);
+        assert!(y_full.allclose(&y, 1e-6));
+    }
+
+    #[test]
+    fn masked_rank_equals_truncation() {
+        let inp = inputs(16, 8, 4);
+        let y_masked = masked_rank_attention(&inp, 12, 5, 9);
+        // Masking at r_eff inside an r_max decomposition = truncating the
+        // same decomposition at r_eff.
+        let a = attention_matrix(&inp);
+        let d = top_k_svd(&a, 12, 9);
+        let y_trunc = lowrank_attention_output(&d, 5, &inp.v);
+        assert!(y_masked.allclose(&y_trunc, 1e-8));
+    }
+
+    #[test]
+    fn projection_attention_shapes_and_rows() {
+        let inp = inputs(20, 8, 5);
+        let mut rng = Pcg32::seeded(6);
+        let e = Mat::randn(4, 20, (1.0 / 20.0f64).sqrt(), &mut rng);
+        let y = projection_attention(&inp, &e);
+        assert_eq!(y.shape(), (20, 8));
+        assert!(y.data().iter().all(|x| x.is_finite()));
+    }
+}

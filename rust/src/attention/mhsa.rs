@@ -1,0 +1,181 @@
+//! Multi-head self-attention plumbing: per-head projection, head split /
+//! merge, output projection, and per-head rank application — the Rust
+//! mirror of the L2 JAX model's attention block (used by the oracle, the
+//! reward computation and the CPU fallback path).
+
+use super::full::{full_attention, AttnInputs};
+use super::lowrank::lowrank_attention;
+use crate::linalg::{matmul, Mat};
+use crate::util::Pcg32;
+
+/// Weights for one MHSA layer.
+#[derive(Debug, Clone)]
+pub struct MhsaWeights {
+    pub wq: Mat,
+    pub wk: Mat,
+    pub wv: Mat,
+    pub wo: Mat,
+    pub n_heads: usize,
+}
+
+impl MhsaWeights {
+    /// Xavier-ish random init.
+    pub fn init(d_model: usize, n_heads: usize, rng: &mut Pcg32) -> Self {
+        assert_eq!(d_model % n_heads, 0, "d_model must divide n_heads");
+        let std = (2.0 / (d_model + d_model) as f64).sqrt();
+        MhsaWeights {
+            wq: Mat::randn(d_model, d_model, std, rng),
+            wk: Mat::randn(d_model, d_model, std, rng),
+            wv: Mat::randn(d_model, d_model, std, rng),
+            wo: Mat::randn(d_model, d_model, std, rng),
+            n_heads,
+        }
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.wq.rows()
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model() / self.n_heads
+    }
+
+    /// Summary statistics of the projection weights — part of the RL state
+    /// vector w_t (paper Eq. 6): mean, variance, spectral norm per matrix.
+    pub fn stats(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(9);
+        for w in [&self.wq, &self.wk, &self.wv] {
+            out.push(w.mean());
+            out.push(w.variance());
+            out.push(crate::linalg::spectral_norm_fast(w, 0x57a75));
+        }
+        out
+    }
+}
+
+/// Project an input sequence (n×d_model) into per-head Q/K/V inputs.
+pub fn project_heads(x: &Mat, w: &MhsaWeights, causal: bool) -> Vec<AttnInputs> {
+    let q = matmul(x, &w.wq);
+    let k = matmul(x, &w.wk);
+    let v = matmul(x, &w.wv);
+    let hd = w.head_dim();
+    (0..w.n_heads)
+        .map(|h| AttnInputs {
+            q: slice_cols(&q, h * hd, (h + 1) * hd),
+            k: slice_cols(&k, h * hd, (h + 1) * hd),
+            v: slice_cols(&v, h * hd, (h + 1) * hd),
+            causal,
+        })
+        .collect()
+}
+
+fn slice_cols(m: &Mat, c0: usize, c1: usize) -> Mat {
+    let mut out = Mat::zeros(m.rows(), c1 - c0);
+    for i in 0..m.rows() {
+        out.row_mut(i).copy_from_slice(&m.row(i)[c0..c1]);
+    }
+    out
+}
+
+/// Merge per-head outputs (each n×head_dim) back to n×d_model and apply
+/// the output projection.
+pub fn merge_heads(outputs: &[Mat], w: &MhsaWeights) -> Mat {
+    let mut cat = outputs[0].clone();
+    for o in &outputs[1..] {
+        cat = cat.hcat(o);
+    }
+    matmul(&cat, &w.wo)
+}
+
+/// Full-rank MHSA forward for a whole layer.
+pub fn mhsa_full(x: &Mat, w: &MhsaWeights, causal: bool) -> Mat {
+    let heads = project_heads(x, w, causal);
+    let outs: Vec<Mat> = heads.iter().map(full_attention).collect();
+    merge_heads(&outs, w)
+}
+
+/// MHSA with a per-head rank assignment (the DR-RL forward).
+pub fn mhsa_lowrank(x: &Mat, w: &MhsaWeights, ranks: &[usize], causal: bool, seed: u64) -> Mat {
+    assert_eq!(ranks.len(), w.n_heads, "one rank per head");
+    let heads = project_heads(x, w, causal);
+    let outs: Vec<Mat> = heads
+        .iter()
+        .zip(ranks.iter())
+        .enumerate()
+        .map(|(h, (inp, &r))| {
+            if r >= inp.seq_len() {
+                full_attention(inp)
+            } else {
+                lowrank_attention(inp, r, seed.wrapping_add(h as u64))
+            }
+        })
+        .collect();
+    merge_heads(&outs, w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_split_covers_d_model() {
+        let mut rng = Pcg32::seeded(1);
+        let w = MhsaWeights::init(32, 4, &mut rng);
+        let x = Mat::randn(10, 32, 1.0, &mut rng);
+        let heads = project_heads(&x, &w, false);
+        assert_eq!(heads.len(), 4);
+        for h in &heads {
+            assert_eq!(h.q.shape(), (10, 8));
+        }
+    }
+
+    #[test]
+    fn full_forward_shape() {
+        let mut rng = Pcg32::seeded(2);
+        let w = MhsaWeights::init(16, 2, &mut rng);
+        let x = Mat::randn(8, 16, 1.0, &mut rng);
+        let y = mhsa_full(&x, &w, true);
+        assert_eq!(y.shape(), (8, 16));
+        assert!(y.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn max_rank_lowrank_matches_full() {
+        let mut rng = Pcg32::seeded(3);
+        let w = MhsaWeights::init(16, 2, &mut rng);
+        let x = Mat::randn(8, 16, 1.0, &mut rng);
+        let full = mhsa_full(&x, &w, false);
+        let lr = mhsa_lowrank(&x, &w, &[8, 8], false, 9);
+        assert!(full.allclose(&lr, 1e-6), "diff {}", full.max_abs_diff(&lr));
+    }
+
+    #[test]
+    fn lowrank_error_shrinks_with_rank() {
+        let mut rng = Pcg32::seeded(4);
+        let w = MhsaWeights::init(16, 2, &mut rng);
+        let x = Mat::randn(24, 16, 1.0, &mut rng);
+        let full = mhsa_full(&x, &w, false);
+        let e2 = (&full - &mhsa_lowrank(&x, &w, &[2, 2], false, 5)).fro_norm();
+        let e12 = (&full - &mhsa_lowrank(&x, &w, &[12, 12], false, 5)).fro_norm();
+        assert!(e12 < e2, "rank 12 err {e12} !< rank 2 err {e2}");
+    }
+
+    #[test]
+    fn weight_stats_vector_layout() {
+        let mut rng = Pcg32::seeded(5);
+        let w = MhsaWeights::init(16, 4, &mut rng);
+        let s = w.stats();
+        assert_eq!(s.len(), 9);
+        // Variances and spectral norms positive.
+        assert!(s[1] > 0.0 && s[2] > 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rank_count_mismatch_panics() {
+        let mut rng = Pcg32::seeded(6);
+        let w = MhsaWeights::init(16, 4, &mut rng);
+        let x = Mat::randn(8, 16, 1.0, &mut rng);
+        let _ = mhsa_lowrank(&x, &w, &[4, 4], false, 0);
+    }
+}

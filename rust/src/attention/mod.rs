@@ -1,0 +1,16 @@
+//! Attention substrate: reference full-rank MHSA (Eq. 1), truncated-SVD
+//! low-rank attention in factor form, the masked-rank formulation used by
+//! the AOT Pallas kernel, and Linformer-style projection baselines.
+
+pub mod full;
+pub mod lowrank;
+pub mod mhsa;
+pub mod softmax;
+
+pub use full::{apply_attention, attention_matrix, attention_scores, full_attention, AttnInputs};
+pub use lowrank::{
+    lowrank_attention, lowrank_attention_matrix, lowrank_attention_output,
+    masked_rank_attention, projection_attention,
+};
+pub use mhsa::{merge_heads, mhsa_full, mhsa_lowrank, project_heads, MhsaWeights};
+pub use softmax::{causal_mask_inplace, softmax_rows, softmax_rows_inplace};

@@ -1,0 +1,98 @@
+//! Numerically stable softmax and causal masking helpers shared by the
+//! full and low-rank attention paths.
+
+use crate::linalg::Mat;
+
+/// Row-wise stable softmax, in place.
+pub fn softmax_rows_inplace(m: &mut Mat) {
+    let cols = m.cols();
+    for i in 0..m.rows() {
+        let row = m.row_mut(i);
+        let max = row.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        if !max.is_finite() {
+            // Entire row masked: uniform over nothing → zeros.
+            for v in row.iter_mut() {
+                *v = 0.0;
+            }
+            continue;
+        }
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        if sum > 0.0 {
+            for v in row.iter_mut() {
+                *v /= sum;
+            }
+        }
+        let _ = cols;
+    }
+}
+
+/// Row-wise stable softmax (copying).
+pub fn softmax_rows(m: &Mat) -> Mat {
+    let mut out = m.clone();
+    softmax_rows_inplace(&mut out);
+    out
+}
+
+/// Apply a causal mask: positions j > i get -inf before softmax.
+pub fn causal_mask_inplace(scores: &mut Mat) {
+    let n = scores.rows();
+    assert_eq!(n, scores.cols(), "causal mask expects square scores");
+    for i in 0..n {
+        let row = scores.row_mut(i);
+        for v in row.iter_mut().skip(i + 1) {
+            *v = f64::NEG_INFINITY;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_sum_to_one() {
+        let m = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0]);
+        let s = softmax_rows(&m);
+        for i in 0..2 {
+            let sum: f64 = s.row(i).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn stable_for_large_logits() {
+        let m = Mat::from_vec(1, 3, vec![1000.0, 1001.0, 999.0]);
+        let s = softmax_rows(&m);
+        assert!(s.row(0).iter().all(|v| v.is_finite()));
+        let sum: f64 = s.row(0).iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn causal_structure() {
+        let mut m = Mat::filled(4, 4, 1.0);
+        causal_mask_inplace(&mut m);
+        let s = softmax_rows(&m);
+        // Upper triangle zero, rows sum to 1.
+        for i in 0..4 {
+            for j in 0..4 {
+                if j > i {
+                    assert_eq!(s[(i, j)], 0.0);
+                } else {
+                    assert!((s[(i, j)] - 1.0 / (i + 1) as f64).abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ordering_preserved() {
+        let m = Mat::from_vec(1, 3, vec![1.0, 3.0, 2.0]);
+        let s = softmax_rows(&m);
+        assert!(s[(0, 1)] > s[(0, 2)] && s[(0, 2)] > s[(0, 0)]);
+    }
+}

@@ -1,0 +1,186 @@
+//! Self-built micro/macro benchmark harness (criterion is unavailable in
+//! the offline build): warmup, timed iterations, mean/p50/p99, throughput
+//! and CSV emission for the experiment benches in `rust/benches/`.
+
+use crate::util::{LatencyStats, Stopwatch};
+use std::io::Write;
+use std::path::Path;
+
+/// Timing result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub min_ms: f64,
+    /// Optional items/second (set via `Bench::throughput`).
+    pub throughput: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        let tput = self
+            .throughput
+            .map(|t| format!(" {t:>12.1}/s"))
+            .unwrap_or_default();
+        format!(
+            "{:<40} {:>8} iters  mean {:>10.4}ms  p50 {:>10.4}ms  p99 {:>10.4}ms{}",
+            self.name, self.iters, self.mean_ms, self.p50_ms, self.p99_ms, tput
+        )
+    }
+}
+
+/// Benchmark runner.
+pub struct Bench {
+    /// Target measuring wall-time per case (the runner iterates until
+    /// either this elapses or `max_iters` is hit).
+    pub measure_secs: f64,
+    pub warmup_iters: u64,
+    pub max_iters: u64,
+    pub min_iters: u64,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            measure_secs: 1.0,
+            warmup_iters: 3,
+            max_iters: 10_000,
+            min_iters: 5,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn quick() -> Self {
+        Bench { measure_secs: 0.3, warmup_iters: 1, max_iters: 200, ..Default::default() }
+    }
+
+    /// Time `f` repeatedly; records and returns the result.
+    pub fn case<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut stats = LatencyStats::new();
+        let total = Stopwatch::start();
+        let mut iters = 0u64;
+        while (total.elapsed().as_secs_f64() < self.measure_secs && iters < self.max_iters)
+            || iters < self.min_iters
+        {
+            let sw = Stopwatch::start();
+            f();
+            stats.record(sw.elapsed_ms());
+            iters += 1;
+        }
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ms: stats.mean(),
+            p50_ms: stats.p50(),
+            p99_ms: stats.p99(),
+            min_ms: stats.min(),
+            throughput: None,
+        });
+        println!("{}", self.results.last().unwrap().row());
+        self.results.last().unwrap()
+    }
+
+    /// Attach a throughput figure (items per iteration) to the last case.
+    pub fn throughput(&mut self, items_per_iter: f64) {
+        if let Some(last) = self.results.last_mut() {
+            last.throughput = Some(items_per_iter / (last.mean_ms / 1e3));
+            println!("  ↳ {:.1} items/s", last.throughput.unwrap());
+        }
+    }
+
+    /// Write all results as CSV.
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "name,iters,mean_ms,p50_ms,p99_ms,min_ms,throughput_per_s")?;
+        for r in &self.results {
+            writeln!(
+                f,
+                "{},{},{},{},{},{},{}",
+                r.name,
+                r.iters,
+                r.mean_ms,
+                r.p50_ms,
+                r.p99_ms,
+                r.min_ms,
+                r.throughput.map(|t| t.to_string()).unwrap_or_default()
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Write arbitrary experiment rows (non-timing tables/series) as CSV.
+pub fn write_table_csv(path: &Path, header: &str, rows: &[String]) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{header}")?;
+    for r in rows {
+        writeln!(f, "{r}")?;
+    }
+    Ok(())
+}
+
+/// Returns true when `--quick` or DRRL_BENCH_QUICK=1 — benches then run
+/// reduced workloads (CI smoke).
+pub fn quick_mode() -> bool {
+    std::env::args().any(|a| a == "--quick")
+        || std::env::var("DRRL_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Standard bench banner.
+pub fn banner(title: &str, paper_claim: &str) {
+    println!("\n============================================================");
+    println!("{title}");
+    println!("paper: {paper_claim}");
+    println!("============================================================");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn times_a_case() {
+        let mut b = Bench { measure_secs: 0.05, warmup_iters: 1, ..Default::default() };
+        let mut acc = 0u64;
+        b.case("spin", || {
+            for i in 0..10_000 {
+                acc = acc.wrapping_add(i);
+            }
+        });
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].iters >= 5);
+        assert!(acc > 0);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut b = Bench { measure_secs: 0.01, warmup_iters: 0, ..Default::default() };
+        b.case("noop", || {});
+        b.throughput(100.0);
+        let path = std::env::temp_dir().join("drrl_bench_test.csv");
+        b.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("name,iters"));
+        assert!(text.contains("noop"));
+        let _ = std::fs::remove_file(path);
+    }
+}

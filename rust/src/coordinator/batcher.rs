@@ -1,0 +1,266 @@
+//! Dynamic batcher: groups queued requests into batches bounded by a
+//! maximum size (the artifact's static batch dimension) and a maximum
+//! queue delay, with bounded-queue backpressure — the standard
+//! continuous-batching front-end of serving systems (vLLM-style).
+
+use super::request::Pending;
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Max requests per batch (typically the artifact batch dim).
+    pub max_batch: usize,
+    /// Max time the *oldest* request may wait before a partial batch is
+    /// released.
+    pub max_wait: Duration,
+    /// Queue capacity; `submit` rejects beyond this (backpressure).
+    pub capacity: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5), capacity: 1024 }
+    }
+}
+
+/// Thread-safe dynamic batching queue.
+pub struct DynamicBatcher<T> {
+    policy: BatchPolicy,
+    state: Mutex<Inner<T>>,
+    cv: Condvar,
+}
+
+struct Inner<T> {
+    queue: VecDeque<Pending<T>>,
+    closed: bool,
+}
+
+/// Why `submit` failed.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Backpressure: queue full.
+    Full,
+    Closed,
+}
+
+impl<T> DynamicBatcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        DynamicBatcher {
+            policy,
+            state: Mutex::new(Inner { queue: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    /// Enqueue a request (non-blocking).
+    pub fn submit(&self, item: T) -> Result<(), SubmitError> {
+        let mut g = self.state.lock().unwrap();
+        if g.closed {
+            return Err(SubmitError::Closed);
+        }
+        if g.queue.len() >= self.policy.capacity {
+            return Err(SubmitError::Full);
+        }
+        g.queue.push_back(Pending::now(item));
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close the queue; pullers drain whatever remains, then get None.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Blocking pull of the next batch. Returns when
+    ///   * max_batch requests are ready, or
+    ///   * the oldest waiter exceeded max_wait and the queue is non-empty.
+    /// Returns None once closed and drained.
+    pub fn next_batch(&self) -> Option<Vec<Pending<T>>> {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if g.queue.len() >= self.policy.max_batch {
+                return Some(drain(&mut g.queue, self.policy.max_batch));
+            }
+            if !g.queue.is_empty() {
+                let oldest = g.queue.front().unwrap().arrived;
+                let elapsed = oldest.elapsed();
+                if elapsed >= self.policy.max_wait {
+                    let n = g.queue.len().min(self.policy.max_batch);
+                    return Some(drain(&mut g.queue, n));
+                }
+                // Wait the remaining window (or for more arrivals).
+                let remaining = self.policy.max_wait - elapsed;
+                let (ng, _timeout) = self.cv.wait_timeout(g, remaining).unwrap();
+                g = ng;
+            } else {
+                if g.closed {
+                    return None;
+                }
+                g = self.cv.wait(g).unwrap();
+            }
+            if g.closed && g.queue.is_empty() {
+                return None;
+            }
+        }
+    }
+
+    /// Non-blocking: batch only if one is ready *right now*.
+    pub fn try_next_batch(&self) -> Option<Vec<Pending<T>>> {
+        let mut g = self.state.lock().unwrap();
+        if g.queue.len() >= self.policy.max_batch {
+            return Some(drain(&mut g.queue, self.policy.max_batch));
+        }
+        if let Some(front) = g.queue.front() {
+            if front.arrived.elapsed() >= self.policy.max_wait {
+                let n = g.queue.len().min(self.policy.max_batch);
+                return Some(drain(&mut g.queue, n));
+            }
+        }
+        None
+    }
+}
+
+fn drain<T>(q: &mut VecDeque<Pending<T>>, n: usize) -> Vec<Pending<T>> {
+    q.drain(..n).collect()
+}
+
+/// Helper for tests/benches: deadline-aware arrival clock.
+pub fn wait_until(t: Instant) {
+    let now = Instant::now();
+    if t > now {
+        std::thread::sleep(t - now);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn full_batch_released_immediately() {
+        let b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_secs(10),
+            capacity: 100,
+        });
+        for i in 0..4 {
+            b.submit(i).unwrap();
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 4);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn partial_batch_released_after_max_wait() {
+        let b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(20),
+            capacity: 100,
+        });
+        b.submit(1).unwrap();
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(15), "waited {waited:?}");
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::from_millis(1),
+            capacity: 3,
+        });
+        for i in 0..3 {
+            b.submit(i).unwrap();
+        }
+        assert_eq!(b.submit(99), Err(SubmitError::Full));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::from_millis(1),
+            capacity: 10,
+        });
+        b.submit(1).unwrap();
+        b.close();
+        assert_eq!(b.submit(2), Err(SubmitError::Closed));
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn concurrent_producers_single_consumer() {
+        let b = Arc::new(DynamicBatcher::new(BatchPolicy {
+            max_batch: 16,
+            max_wait: Duration::from_millis(5),
+            capacity: 10_000,
+        }));
+        let n_producers = 4;
+        let per = 100;
+        let mut handles = Vec::new();
+        for p in 0..n_producers {
+            let b = Arc::clone(&b);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per {
+                    while b.submit(p * per + i).is_err() {
+                        std::thread::yield_now();
+                    }
+                }
+            }));
+        }
+        let consumer = {
+            let b = Arc::clone(&b);
+            std::thread::spawn(move || {
+                let mut seen = Vec::new();
+                while seen.len() < n_producers * per {
+                    if let Some(batch) = b.next_batch() {
+                        seen.extend(batch.into_iter().map(|p| p.inner));
+                    }
+                }
+                seen
+            })
+        };
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut seen = consumer.join().unwrap();
+        seen.sort();
+        assert_eq!(seen, (0..n_producers * per).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn try_next_batch_nonblocking() {
+        let b: DynamicBatcher<u32> = DynamicBatcher::new(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_secs(1),
+            capacity: 10,
+        });
+        assert!(b.try_next_batch().is_none());
+        b.submit(1).unwrap();
+        // Not full and not timed out → still none.
+        assert!(b.try_next_batch().is_none());
+    }
+}

@@ -1,0 +1,269 @@
+//! The serving engine: a worker thread that drains the dynamic batcher
+//! and executes batched LM generation plus DR-RL adaptive attention
+//! segments against the AOT artifacts.
+
+use super::batcher::{BatchPolicy, DynamicBatcher, SubmitError};
+use super::metrics::Metrics;
+use super::rank_controller::{ControllerConfig, PolicySource, RankController};
+use super::request::*;
+use crate::attention::{project_heads, MhsaWeights};
+use crate::linalg::Mat;
+use crate::runtime::ArtifactRegistry;
+use crate::util::Stopwatch;
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+
+enum Work {
+    Generate(GenerateRequest, Sender<GenerateResponse>),
+    Attention(AttentionRequest, Sender<AttentionResponse>),
+}
+
+/// Engine handle. Cloneable; submit from any thread.
+pub struct ServingEngine {
+    batcher: Arc<DynamicBatcher<Work>>,
+    pub metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    stopped: Arc<AtomicBool>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServingEngine {
+    /// Start an engine over an artifact registry. The engine owns a
+    /// frozen attention layer stack (for the adaptive-attention service)
+    /// and the trained LM params (for generation), both supplied here.
+    pub fn start(
+        reg: Arc<ArtifactRegistry>,
+        lm_params: Arc<Vec<f32>>,
+        layers: Vec<MhsaWeights>,
+        controller_cfg: ControllerConfig,
+        source: PolicySource,
+        batch_policy: BatchPolicy,
+    ) -> ServingEngine {
+        let batcher = Arc::new(DynamicBatcher::new(batch_policy));
+        let metrics = Arc::new(Metrics::new());
+        let stopped = Arc::new(AtomicBool::new(false));
+        let worker = {
+            let batcher = Arc::clone(&batcher);
+            let metrics = Arc::clone(&metrics);
+            std::thread::Builder::new()
+                .name("drrl-engine".into())
+                .spawn(move || {
+                    let mut controller = RankController::new(controller_cfg, source);
+                    worker_loop(&reg, &lm_params, &layers, &mut controller, &batcher, &metrics);
+                })
+                .expect("spawn engine worker")
+        };
+        ServingEngine {
+            batcher,
+            metrics,
+            next_id: AtomicU64::new(1),
+            stopped,
+            worker: Some(worker),
+        }
+    }
+
+    fn submit(&self, work: Work) -> Result<(), SubmitError> {
+        let r = self.batcher.submit(work);
+        if r.is_err() {
+            self.metrics.record_rejection();
+        }
+        r
+    }
+
+    /// Queue a generation request; returns (id, receiver).
+    pub fn submit_generate(
+        &self,
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+    ) -> Result<(RequestId, std::sync::mpsc::Receiver<GenerateResponse>), SubmitError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.submit(Work::Generate(GenerateRequest { id, prompt, max_new_tokens }, tx))?;
+        Ok((id, rx))
+    }
+
+    /// Queue an adaptive-attention segment; returns (id, receiver).
+    pub fn submit_attention(
+        &self,
+        x: Vec<f64>,
+        n: usize,
+        d_model: usize,
+        layer: usize,
+    ) -> Result<(RequestId, std::sync::mpsc::Receiver<AttentionResponse>), SubmitError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.submit(Work::Attention(AttentionRequest { id, x, n, d_model, layer }, tx))?;
+        Ok((id, rx))
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.batcher.len()
+    }
+
+    /// Graceful shutdown: drain, then join the worker.
+    pub fn shutdown(mut self) {
+        self.stopped.store(true, Ordering::Relaxed);
+        self.batcher.close();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for ServingEngine {
+    fn drop(&mut self) {
+        self.batcher.close();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    reg: &ArtifactRegistry,
+    lm_params: &[f32],
+    layers: &[MhsaWeights],
+    controller: &mut RankController,
+    batcher: &DynamicBatcher<Work>,
+    metrics: &Metrics,
+) {
+    while let Some(batch) = batcher.next_batch() {
+        let batch_size = batch.len();
+        // Split by type, preserving arrival envelopes.
+        let mut gens: Vec<(Pending<()>, GenerateRequest, Sender<GenerateResponse>)> = Vec::new();
+        let mut attns = Vec::new();
+        for p in batch {
+            let arrived = p.arrived;
+            match p.inner {
+                Work::Generate(req, tx) => {
+                    gens.push((Pending { inner: (), arrived }, req, tx))
+                }
+                Work::Attention(req, tx) => attns.push((arrived, req, tx)),
+            }
+        }
+        if !gens.is_empty() {
+            if let Err(e) = serve_generate_batch(reg, lm_params, &mut gens, metrics, batch_size) {
+                crate::log_warn!("generate batch failed: {e:#}");
+            }
+        }
+        for (arrived, req, tx) in attns {
+            let queued_ms = arrived.elapsed().as_secs_f64() * 1e3;
+            match serve_attention(reg, layers, controller, &req, metrics) {
+                Ok(mut resp) => {
+                    resp.queued_ms = queued_ms;
+                    let _ = tx.send(resp);
+                }
+                Err(e) => crate::log_warn!("attention req {} failed: {e:#}", req.id),
+            }
+        }
+    }
+}
+
+/// Batched greedy generation: packs up to `lm.batch` prompts into the
+/// fixed-shape logits artifact and decodes all rows in lock-step.
+fn serve_generate_batch(
+    reg: &ArtifactRegistry,
+    lm_params: &[f32],
+    gens: &mut [(Pending<()>, GenerateRequest, Sender<GenerateResponse>)],
+    metrics: &Metrics,
+    batch_size: usize,
+) -> Result<()> {
+    let lm = &reg.manifest.lm;
+    let sw = Stopwatch::start();
+    // Process in chunks of the artifact batch dim.
+    for chunk in gens.chunks_mut(lm.batch) {
+        let max_steps = chunk.iter().map(|(_, r, _)| r.max_new_tokens).max().unwrap_or(0);
+        let mut contexts: Vec<Vec<i32>> =
+            chunk.iter().map(|(_, r, _)| r.prompt.clone()).collect();
+        let mut outputs: Vec<Vec<i32>> = vec![Vec::new(); chunk.len()];
+        for _step in 0..max_steps {
+            let mut tokens = vec![b' ' as i32; lm.batch * lm.seq_len];
+            for (row, ctx) in contexts.iter().enumerate() {
+                let take = ctx.len().min(lm.seq_len);
+                let dst = row * lm.seq_len + (lm.seq_len - take);
+                tokens[dst..dst + take].copy_from_slice(&ctx[ctx.len() - take..]);
+            }
+            let logits = reg.lm_logits(lm_params, &tokens)?;
+            for (row, ctx) in contexts.iter_mut().enumerate() {
+                if outputs[row].len() >= chunk[row].1.max_new_tokens {
+                    continue;
+                }
+                let off = (row * lm.seq_len + lm.seq_len - 1) * lm.vocab;
+                let next = logits[off..off + lm.vocab]
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i as i32)
+                    .unwrap();
+                ctx.push(next);
+                outputs[row].push(next);
+            }
+        }
+        let compute_ms = sw.elapsed_ms();
+        for (i, (pend, req, tx)) in chunk.iter_mut().enumerate() {
+            let queued_ms = pend.queued_ms();
+            metrics.record_request(queued_ms, compute_ms, batch_size);
+            let _ = tx.send(GenerateResponse {
+                id: req.id,
+                tokens: std::mem::take(&mut outputs[i]),
+                queued_ms,
+                compute_ms,
+                batch_size,
+            });
+        }
+    }
+    Ok(())
+}
+
+/// One adaptive-attention segment through the controller.
+fn serve_attention(
+    reg: &ArtifactRegistry,
+    layers: &[MhsaWeights],
+    controller: &mut RankController,
+    req: &AttentionRequest,
+    metrics: &Metrics,
+) -> Result<AttentionResponse> {
+    let sw = Stopwatch::start();
+    anyhow::ensure!(req.layer < layers.len(), "layer {} out of range", req.layer);
+    let w = &layers[req.layer];
+    anyhow::ensure!(req.d_model == w.d_model(), "d_model mismatch");
+    let x = Mat::from_vec(req.n, req.d_model, req.x.clone());
+    let heads = project_heads(&x, w, true);
+    let mut outs = Vec::with_capacity(heads.len());
+    let mut ranks = Vec::with_capacity(heads.len());
+    let mut spent = 0u64;
+    let mut full = 0u64;
+    for (h, inp) in heads.iter().enumerate() {
+        let (y, dec) =
+            controller.attention(reg, &x, w, inp, req.layer, h, layers.len())?;
+        metrics.record_rank(dec.rank);
+        if dec.masked_by_safety {
+            metrics.record_safety_mask();
+        }
+        spent += dec.flops_spent;
+        full += dec.flops_full;
+        ranks.push(dec.rank);
+        outs.push(y);
+    }
+    metrics.record_flops(spent, full);
+    let merged = crate::attention::merge_heads(&outs, w);
+    let compute_ms = sw.elapsed_ms();
+    metrics.record_request(0.0, compute_ms, 1);
+    Ok(AttentionResponse {
+        id: req.id,
+        y: merged.into_vec(),
+        ranks,
+        flops_spent: spent,
+        flops_full: full,
+        queued_ms: 0.0,
+        compute_ms,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    // Engine integration tests (device-backed) live in rust/tests/serving.rs;
+    // unit coverage of batching/metrics lives in their own modules.
+}

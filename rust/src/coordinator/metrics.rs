@@ -1,0 +1,182 @@
+//! Serving metrics: latency percentiles, batch-size histogram, rank
+//! histogram, the FLOPs ledger (spent vs full-rank counterfactual) and
+//! safety-check counters — everything EXPERIMENTS.md reports for the
+//! serving examples.
+
+use crate::util::LatencyStats;
+use std::sync::Mutex;
+
+/// Aggregated metrics, cheap to share behind a Mutex (all updates are
+/// off the device-thread critical path).
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    queued: LatencyStats,
+    compute: LatencyStats,
+    e2e: LatencyStats,
+    batch_sizes: Vec<u64>, // histogram: index = batch size
+    rank_counts: Vec<u64>, // histogram: index = rank
+    flops_spent: u64,
+    flops_full: u64,
+    requests: u64,
+    rejected: u64,
+    safety_masked: u64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_request(&self, queued_ms: f64, compute_ms: f64, batch_size: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.queued.record(queued_ms);
+        g.compute.record(compute_ms);
+        g.e2e.record(queued_ms + compute_ms);
+        if g.batch_sizes.len() <= batch_size {
+            g.batch_sizes.resize(batch_size + 1, 0);
+        }
+        g.batch_sizes[batch_size] += 1;
+        g.requests += 1;
+    }
+
+    pub fn record_rank(&self, rank: usize) {
+        let mut g = self.inner.lock().unwrap();
+        if g.rank_counts.len() <= rank {
+            g.rank_counts.resize(rank + 1, 0);
+        }
+        g.rank_counts[rank] += 1;
+    }
+
+    pub fn record_flops(&self, spent: u64, full: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.flops_spent += spent;
+        g.flops_full += full;
+    }
+
+    pub fn record_rejection(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    pub fn record_safety_mask(&self) {
+        self.inner.lock().unwrap().safety_masked += 1;
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.inner.lock().unwrap().requests
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.inner.lock().unwrap().rejected
+    }
+
+    pub fn safety_masked(&self) -> u64 {
+        self.inner.lock().unwrap().safety_masked
+    }
+
+    /// 1 − spent/full: the served FLOPs saving.
+    pub fn flops_saving(&self) -> f64 {
+        let g = self.inner.lock().unwrap();
+        if g.flops_full == 0 {
+            0.0
+        } else {
+            1.0 - g.flops_spent as f64 / g.flops_full as f64
+        }
+    }
+
+    /// Mean selected rank.
+    pub fn mean_rank(&self) -> f64 {
+        let g = self.inner.lock().unwrap();
+        let total: u64 = g.rank_counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        g.rank_counts
+            .iter()
+            .enumerate()
+            .map(|(r, &c)| r as f64 * c as f64)
+            .sum::<f64>()
+            / total as f64
+    }
+
+    /// Text report for examples/benches.
+    pub fn report(&self) -> String {
+        let g = self.inner.lock().unwrap();
+        let mean_batch = {
+            let total: u64 = g.batch_sizes.iter().sum();
+            if total == 0 {
+                0.0
+            } else {
+                g.batch_sizes
+                    .iter()
+                    .enumerate()
+                    .map(|(s, &c)| s as f64 * c as f64)
+                    .sum::<f64>()
+                    / total as f64
+            }
+        };
+        let saving = if g.flops_full == 0 {
+            0.0
+        } else {
+            1.0 - g.flops_spent as f64 / g.flops_full as f64
+        };
+        format!(
+            "requests={} rejected={} safety_masked={}\n\
+             queue  : {}\n\
+             compute: {}\n\
+             e2e    : {}\n\
+             mean_batch={:.2} flops_saving={:.1}%",
+            g.requests,
+            g.rejected,
+            g.safety_masked,
+            g.queued.summary(),
+            g.compute.summary(),
+            g.e2e.summary(),
+            mean_batch,
+            saving * 1e2,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates_requests() {
+        let m = Metrics::new();
+        m.record_request(1.0, 2.0, 4);
+        m.record_request(3.0, 4.0, 8);
+        assert_eq!(m.requests(), 2);
+        let rep = m.report();
+        assert!(rep.contains("requests=2"), "{rep}");
+    }
+
+    #[test]
+    fn flops_saving_math() {
+        let m = Metrics::new();
+        m.record_flops(60, 100);
+        m.record_flops(0, 100);
+        assert!((m.flops_saving() - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_rank_weighted() {
+        let m = Metrics::new();
+        m.record_rank(16);
+        m.record_rank(16);
+        m.record_rank(64);
+        assert!((m.mean_rank() - 32.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.flops_saving(), 0.0);
+        assert_eq!(m.mean_rank(), 0.0);
+    }
+}

@@ -1,0 +1,20 @@
+//! L3 coordinator — the paper's serving-side system contribution:
+//! request routing, dynamic batching with backpressure, the segment-
+//! level DR-RL rank controller (featurize → policy → trust region →
+//! incremental SVD → device dispatch) and serving metrics.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod rank_controller;
+pub mod request;
+pub mod router;
+
+pub use batcher::{BatchPolicy, DynamicBatcher, SubmitError};
+pub use engine::ServingEngine;
+pub use metrics::Metrics;
+pub use rank_controller::{ControllerConfig, Decision, PolicySource, RankController};
+pub use request::{
+    AttentionRequest, AttentionResponse, GenerateRequest, GenerateResponse, RequestId,
+};
+pub use router::{RouteStrategy, Router};

@@ -1,0 +1,67 @@
+//! Request/response types for the serving engine.
+
+use std::time::Instant;
+
+/// Unique request id.
+pub type RequestId = u64;
+
+/// A generation request (LM serving path).
+#[derive(Debug, Clone)]
+pub struct GenerateRequest {
+    pub id: RequestId,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+}
+
+/// An attention request (the DR-RL adaptive path): one decision segment
+/// of per-head attention offloaded to the rank-bucket executables.
+#[derive(Debug, Clone)]
+pub struct AttentionRequest {
+    pub id: RequestId,
+    /// Layer input activations (n × d_model), row-major f64.
+    pub x: Vec<f64>,
+    pub n: usize,
+    pub d_model: usize,
+    pub layer: usize,
+}
+
+/// Completed generation.
+#[derive(Debug, Clone)]
+pub struct GenerateResponse {
+    pub id: RequestId,
+    pub tokens: Vec<i32>,
+    pub queued_ms: f64,
+    pub compute_ms: f64,
+    pub batch_size: usize,
+}
+
+/// Completed attention segment.
+#[derive(Debug, Clone)]
+pub struct AttentionResponse {
+    pub id: RequestId,
+    /// Output activations (n × d_model).
+    pub y: Vec<f64>,
+    /// Ranks chosen per head.
+    pub ranks: Vec<usize>,
+    /// Analytic FLOPs spent vs the full-rank cost.
+    pub flops_spent: u64,
+    pub flops_full: u64,
+    pub queued_ms: f64,
+    pub compute_ms: f64,
+}
+
+/// Internal envelope carrying arrival time.
+pub struct Pending<T> {
+    pub inner: T,
+    pub arrived: Instant,
+}
+
+impl<T> Pending<T> {
+    pub fn now(inner: T) -> Self {
+        Pending { inner, arrived: Instant::now() }
+    }
+
+    pub fn queued_ms(&self) -> f64 {
+        self.arrived.elapsed().as_secs_f64() * 1e3
+    }
+}

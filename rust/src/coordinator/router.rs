@@ -1,0 +1,79 @@
+//! Request router: spreads load across engine replicas (leader side of
+//! the leader/worker topology). Strategies: round-robin and
+//! least-loaded (queue depth).
+
+use super::engine::ServingEngine;
+use super::request::{AttentionResponse, GenerateResponse, RequestId};
+use crate::coordinator::batcher::SubmitError;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Routing strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteStrategy {
+    RoundRobin,
+    LeastLoaded,
+}
+
+/// Router over engine replicas.
+pub struct Router {
+    engines: Vec<ServingEngine>,
+    strategy: RouteStrategy,
+    next: AtomicUsize,
+}
+
+impl Router {
+    pub fn new(engines: Vec<ServingEngine>, strategy: RouteStrategy) -> Self {
+        assert!(!engines.is_empty(), "router needs ≥1 engine");
+        Router { engines, strategy, next: AtomicUsize::new(0) }
+    }
+
+    pub fn n_engines(&self) -> usize {
+        self.engines.len()
+    }
+
+    pub fn engines(&self) -> &[ServingEngine] {
+        &self.engines
+    }
+
+    fn pick(&self) -> &ServingEngine {
+        match self.strategy {
+            RouteStrategy::RoundRobin => {
+                let i = self.next.fetch_add(1, Ordering::Relaxed) % self.engines.len();
+                &self.engines[i]
+            }
+            RouteStrategy::LeastLoaded => self
+                .engines
+                .iter()
+                .min_by_key(|e| e.queue_depth())
+                .expect("non-empty"),
+        }
+    }
+
+    pub fn submit_generate(
+        &self,
+        prompt: Vec<i32>,
+        max_new: usize,
+    ) -> Result<(RequestId, std::sync::mpsc::Receiver<GenerateResponse>), SubmitError> {
+        self.pick().submit_generate(prompt, max_new)
+    }
+
+    pub fn submit_attention(
+        &self,
+        x: Vec<f64>,
+        n: usize,
+        d_model: usize,
+        layer: usize,
+    ) -> Result<(RequestId, std::sync::mpsc::Receiver<AttentionResponse>), SubmitError> {
+        self.pick().submit_attention(x, n, d_model, layer)
+    }
+
+    /// Aggregate metric report across replicas.
+    pub fn report(&self) -> String {
+        self.engines
+            .iter()
+            .enumerate()
+            .map(|(i, e)| format!("── engine {i} ──\n{}", e.metrics.report()))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}

@@ -1,0 +1,229 @@
+//! Synthetic corpora with matched statistical profiles (DESIGN.md §2).
+//!
+//! The paper evaluates on Wikitext-103, PTB and BookCorpus — none of
+//! which ship with this repo. The generators below produce text whose
+//! *statistics* drive the same mechanisms the paper measures: Zipfian
+//! unigram frequencies, Markov topic structure (attention heads latch
+//! onto topic transitions), repeated named entities (high-rank targets)
+//! and filler phrases (low-rank redundancy).
+
+use super::tokenizer::ByteTokenizer;
+use crate::util::Pcg32;
+
+/// Which statistical profile to synthesize.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CorpusProfile {
+    /// "wiki103-sim": large vocabulary mix, encyclopedic sentence frames,
+    /// heavy named-entity reuse.
+    Wiki103,
+    /// "ptb-sim": small vocabulary, short newswire sentences.
+    Ptb,
+    /// "book-sim": long narrative runs, dialogue, high filler ratio.
+    Book,
+}
+
+impl CorpusProfile {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CorpusProfile::Wiki103 => "wiki103-sim",
+            CorpusProfile::Ptb => "ptb-sim",
+            CorpusProfile::Book => "book-sim",
+        }
+    }
+
+    pub fn all() -> [CorpusProfile; 3] {
+        [CorpusProfile::Wiki103, CorpusProfile::Ptb, CorpusProfile::Book]
+    }
+}
+
+const ENTITIES: &[&str] = &[
+    "Aldera", "Boreth", "Cassian", "Dravos", "Eleth", "Fenwick", "Galdor", "Hestia", "Ilmar",
+    "Jorvik", "Kaelen", "Lyra", "Morvan", "Nerith", "Oskar", "Pellar",
+];
+
+const WIKI_FRAMES: &[&str] = &[
+    "{E} is a city in the northern province of {E}.",
+    "The {N} of {E} was established in the year {Y}.",
+    "{E} served as the capital of {E} until {Y}.",
+    "According to the census of {Y}, {E} had a population of {Y}.",
+    "The {N} connects {E} with the region of {E}.",
+    "{E} was renamed after the {N} of {Y}.",
+];
+
+const PTB_FRAMES: &[&str] = &[
+    "{E} corp said its {N} rose to {Y} from {Y}.",
+    "shares of {E} fell {Y} points.",
+    "the {N} board approved the {N} of {E}.",
+    "{E} posted a {N} loss of {Y}.",
+    "analysts expect the {N} to reach {Y}.",
+];
+
+const BOOK_FRAMES: &[&str] = &[
+    "{E} walked slowly through the {N}, thinking of {E}.",
+    "\"I never believed the {N},\" said {E} quietly.",
+    "the {N} stretched on and on, and {E} kept walking.",
+    "night fell over the {N} while {E} waited for {E}.",
+    "it was the kind of {N} that {E} remembered from childhood.",
+    "and so the days passed, one after another, quiet and slow.",
+];
+
+const NOUNS: &[&str] = &[
+    "river", "council", "market", "quarter", "library", "treaty", "harvest", "railway",
+    "festival", "garden", "border", "archive", "station", "valley", "forest", "road",
+];
+
+/// Zipf sampler over a word list: P(i) ∝ 1/(i+1)^s.
+fn zipf_pick<'a>(words: &'a [&'a str], s: f64, rng: &mut Pcg32) -> &'a str {
+    let weights: Vec<f64> = (0..words.len()).map(|i| 1.0 / ((i + 1) as f64).powf(s)).collect();
+    words[rng.weighted(&weights)]
+}
+
+/// Generate `n_bytes` of synthetic text for the profile.
+pub fn generate_text(profile: CorpusProfile, n_bytes: usize, seed: u64) -> String {
+    let mut rng = Pcg32::new(seed, profile as u64 + 1);
+    let frames = match profile {
+        CorpusProfile::Wiki103 => WIKI_FRAMES,
+        CorpusProfile::Ptb => PTB_FRAMES,
+        CorpusProfile::Book => BOOK_FRAMES,
+    };
+    let zipf_s = match profile {
+        CorpusProfile::Wiki103 => 1.1,
+        CorpusProfile::Ptb => 1.4, // small effective vocab
+        CorpusProfile::Book => 0.9,
+    };
+    // Markov topic state: a small set of "active" entities that recur
+    // until a topic transition resamples them.
+    let mut topic: Vec<&str> = (0..3).map(|_| ENTITIES[rng.range(0, ENTITIES.len())]).collect();
+    let mut out = String::with_capacity(n_bytes + 128);
+    while out.len() < n_bytes {
+        if rng.next_f64() < 0.15 {
+            // Topic transition (context shift → spectrum-dense region).
+            let slot = rng.range(0, topic.len());
+            topic[slot] = ENTITIES[rng.range(0, ENTITIES.len())];
+        }
+        let frame = frames[rng.range(0, frames.len())];
+        let mut sentence = String::with_capacity(frame.len() + 16);
+        let mut chars = frame.chars().peekable();
+        while let Some(c) = chars.next() {
+            if c == '{' {
+                let kind = chars.next().unwrap_or('N');
+                let _ = chars.next(); // closing '}'
+                match kind {
+                    'E' => sentence.push_str(topic[rng.range(0, topic.len())]),
+                    'N' => sentence.push_str(zipf_pick(NOUNS, zipf_s, &mut rng)),
+                    'Y' => {
+                        let y = 1800 + rng.range(0, 230);
+                        sentence.push_str(&y.to_string());
+                    }
+                    _ => {}
+                }
+            } else {
+                sentence.push(c);
+            }
+        }
+        out.push_str(&sentence);
+        out.push(' ');
+    }
+    out.truncate(n_bytes);
+    out
+}
+
+/// A tokenized corpus with train/valid split.
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    pub profile: CorpusProfile,
+    pub train: Vec<i32>,
+    pub valid: Vec<i32>,
+}
+
+impl Corpus {
+    /// Build a corpus of `n_bytes` total (90/10 split).
+    pub fn build(profile: CorpusProfile, n_bytes: usize, seed: u64) -> Corpus {
+        let text = generate_text(profile, n_bytes, seed);
+        let tokens = ByteTokenizer.encode(&text);
+        let split = tokens.len() * 9 / 10;
+        Corpus { profile, train: tokens[..split].to_vec(), valid: tokens[split..].to_vec() }
+    }
+
+    /// Sample a (tokens, targets) LM batch: targets are tokens shifted
+    /// left by one within each window.
+    pub fn sample_batch(
+        &self,
+        split_train: bool,
+        batch: usize,
+        seq_len: usize,
+        rng: &mut Pcg32,
+    ) -> (Vec<i32>, Vec<i32>) {
+        let data = if split_train { &self.train } else { &self.valid };
+        assert!(data.len() > seq_len + 1, "corpus too small");
+        let mut tokens = Vec::with_capacity(batch * seq_len);
+        let mut targets = Vec::with_capacity(batch * seq_len);
+        for _ in 0..batch {
+            let start = rng.range(0, data.len() - seq_len - 1);
+            tokens.extend_from_slice(&data[start..start + seq_len]);
+            targets.extend_from_slice(&data[start + 1..start + seq_len + 1]);
+        }
+        (tokens, targets)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_requested_size() {
+        for p in CorpusProfile::all() {
+            let t = generate_text(p, 10_000, 1);
+            assert_eq!(t.len(), 10_000);
+        }
+    }
+
+    #[test]
+    fn profiles_have_distinct_statistics() {
+        let a = generate_text(CorpusProfile::Wiki103, 20_000, 2);
+        let b = generate_text(CorpusProfile::Book, 20_000, 2);
+        assert_ne!(a[..500], b[..500]);
+        // Book profile has dialogue quotes; ptb has lowercase finance.
+        assert!(b.contains('"'));
+        assert!(generate_text(CorpusProfile::Ptb, 20_000, 2).contains("shares"));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = generate_text(CorpusProfile::Wiki103, 5_000, 7);
+        let b = generate_text(CorpusProfile::Wiki103, 5_000, 7);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn entity_reuse_creates_repetition() {
+        // Topic persistence means entities repeat within a window far
+        // more often than under independent sampling.
+        let t = generate_text(CorpusProfile::Wiki103, 50_000, 3);
+        let hits = ENTITIES.iter().map(|e| t.matches(e).count()).max().unwrap();
+        assert!(hits > 20, "max entity count {hits}");
+    }
+
+    #[test]
+    fn batches_shift_targets_by_one() {
+        let c = Corpus::build(CorpusProfile::Ptb, 50_000, 4);
+        let mut rng = Pcg32::seeded(5);
+        let (tok, tgt) = c.sample_batch(true, 4, 32, &mut rng);
+        assert_eq!(tok.len(), 4 * 32);
+        assert_eq!(tgt.len(), 4 * 32);
+        // Within each row, tgt[i] should equal tok[i+1].
+        for b in 0..4 {
+            for i in 0..31 {
+                assert_eq!(tgt[b * 32 + i], tok[b * 32 + i + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn split_sizes() {
+        let c = Corpus::build(CorpusProfile::Book, 10_000, 6);
+        assert!(c.train.len() > c.valid.len());
+        assert_eq!(c.train.len() + c.valid.len(), 10_000);
+    }
+}

@@ -1,0 +1,11 @@
+//! Data substrate: byte tokenizer, synthetic corpora with matched
+//! statistical profiles (wiki103-sim / ptb-sim / book-sim) and the
+//! synthetic sentiment task (DESIGN.md §2 substitutions).
+
+pub mod corpus;
+pub mod sentiment;
+pub mod tokenizer;
+
+pub use corpus::{generate_text, Corpus, CorpusProfile};
+pub use sentiment::{generate_dataset, split, SentimentExample};
+pub use tokenizer::ByteTokenizer;

@@ -1,0 +1,168 @@
+//! Synthetic SST-2-like sentiment task (DESIGN.md §2 substitution for
+//! GLUE). Template-generated sentences with lexical sentiment carriers,
+//! negation flips and neutral filler — the degradation mechanism the
+//! paper measures (rank starvation losing carrier-token attention) is
+//! exercised directly.
+
+use super::tokenizer::ByteTokenizer;
+use crate::util::Pcg32;
+
+const POSITIVE: &[&str] = &[
+    "wonderful", "brilliant", "delightful", "moving", "superb", "charming", "gripping",
+    "masterful", "heartfelt", "dazzling",
+];
+
+const NEGATIVE: &[&str] = &[
+    "dreadful", "tedious", "clumsy", "hollow", "bland", "grating", "lifeless", "muddled",
+    "shallow", "dismal",
+];
+
+const SUBJECTS: &[&str] =
+    &["the film", "this movie", "the plot", "the acting", "the script", "the direction",
+      "the cast", "the pacing"];
+
+const FILLER: &[&str] = &[
+    "in its second act", "from start to finish", "despite the runtime",
+    "for the most part", "in every scene", "by any measure",
+];
+
+/// One labelled example.
+#[derive(Debug, Clone)]
+pub struct SentimentExample {
+    /// Byte-level tokens (for the LM-compatible path).
+    pub tokens: Vec<i32>,
+    /// Word-level tokens over the closed template vocabulary (for the
+    /// classifier — sentiment carriers stay single tokens).
+    pub word_tokens: Vec<i32>,
+    /// 1 = positive.
+    pub label: usize,
+    pub text: String,
+}
+
+/// Closed word vocabulary of the template language. Index 0 is padding,
+/// 1 is <unk>.
+pub fn word_vocab() -> Vec<String> {
+    let mut v: Vec<String> = vec!["<pad>".into(), "<unk>".into()];
+    let mut push_words = |words: &[&str]| {
+        for w in words {
+            for part in w.split_whitespace() {
+                let p = part.trim_matches(|c: char| !c.is_alphanumeric()).to_lowercase();
+                if !p.is_empty() && !v.iter().any(|x| x == &p) {
+                    v.push(p);
+                }
+            }
+        }
+    };
+    push_words(POSITIVE);
+    push_words(NEGATIVE);
+    push_words(SUBJECTS);
+    push_words(FILLER);
+    push_words(&["is", "not"]);
+    v
+}
+
+/// Encode text over the closed vocabulary (whitespace split, punctuation
+/// stripped, lowercase).
+pub fn encode_words(text: &str, vocab: &[String], seq_len: usize) -> Vec<i32> {
+    let mut out: Vec<i32> = text
+        .split_whitespace()
+        .map(|w| {
+            let p = w.trim_matches(|c: char| !c.is_alphanumeric()).to_lowercase();
+            vocab.iter().position(|x| x == &p).unwrap_or(1) as i32
+        })
+        .collect();
+    out.resize(seq_len, 0);
+    out
+}
+
+/// Generate a balanced labelled dataset. ~15% of examples contain a
+/// negation ("not", flipping the carrier), which is what separates
+/// attention-based classifiers from bag-of-words.
+pub fn generate_dataset(n: usize, seq_len: usize, seed: u64) -> Vec<SentimentExample> {
+    let mut rng = Pcg32::new(seed, 0x5E47);
+    let tok = ByteTokenizer;
+    let vocab = word_vocab();
+    let word_len = 12;
+    (0..n)
+        .map(|i| {
+            let positive = i % 2 == 0;
+            let negate = rng.next_f64() < 0.15;
+            // The carried sentiment is flipped if negated.
+            let carrier_positive = positive ^ negate;
+            let carrier = if carrier_positive {
+                POSITIVE[rng.range(0, POSITIVE.len())]
+            } else {
+                NEGATIVE[rng.range(0, NEGATIVE.len())]
+            };
+            let subject = SUBJECTS[rng.range(0, SUBJECTS.len())];
+            let filler = FILLER[rng.range(0, FILLER.len())];
+            let text = if negate {
+                format!("{subject} is not {carrier} {filler}.")
+            } else {
+                format!("{subject} is {carrier} {filler}.")
+            };
+            let mut tokens = tok.encode(&text);
+            tokens.resize(seq_len, b' ' as i32); // pad / truncate
+            let word_tokens = encode_words(&text, &vocab, word_len);
+            SentimentExample { tokens, word_tokens, label: usize::from(positive), text }
+        })
+        .collect()
+}
+
+/// Train/test split helper.
+pub fn split(data: Vec<SentimentExample>, train_frac: f64) -> (Vec<SentimentExample>, Vec<SentimentExample>) {
+    let k = (data.len() as f64 * train_frac) as usize;
+    let mut d = data;
+    let test = d.split_off(k);
+    (d, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_labels() {
+        let d = generate_dataset(100, 64, 1);
+        let pos = d.iter().filter(|e| e.label == 1).count();
+        assert_eq!(pos, 50);
+    }
+
+    #[test]
+    fn tokens_padded_to_len() {
+        let d = generate_dataset(10, 48, 2);
+        assert!(d.iter().all(|e| e.tokens.len() == 48));
+    }
+
+    #[test]
+    fn negation_flips_carrier() {
+        let d = generate_dataset(400, 96, 3);
+        let negated: Vec<_> = d.iter().filter(|e| e.text.contains(" not ")).collect();
+        assert!(!negated.is_empty());
+        for e in negated {
+            let has_neg_word = NEGATIVE.iter().any(|w| e.text.contains(w));
+            let has_pos_word = POSITIVE.iter().any(|w| e.text.contains(w));
+            if e.label == 1 {
+                // positive + negation ⇒ negative carrier word in text
+                assert!(has_neg_word && !has_pos_word, "{}", e.text);
+            } else {
+                assert!(has_pos_word && !has_neg_word, "{}", e.text);
+            }
+        }
+    }
+
+    #[test]
+    fn split_fractions() {
+        let d = generate_dataset(100, 32, 4);
+        let (tr, te) = split(d, 0.8);
+        assert_eq!(tr.len(), 80);
+        assert_eq!(te.len(), 20);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate_dataset(5, 32, 9);
+        let b = generate_dataset(5, 32, 9);
+        assert_eq!(a[3].text, b[3].text);
+    }
+}

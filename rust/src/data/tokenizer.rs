@@ -1,0 +1,47 @@
+//! Byte-level tokenizer (vocab = 256) — matches the LM artifact's vocab
+//! and needs no learned merges, keeping the data path fully
+//! deterministic and dependency-free.
+
+/// Byte tokenizer; token id = byte value.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub const VOCAB: usize = 256;
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.as_bytes().iter().map(|&b| b as i32).collect()
+    }
+
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        let bytes: Vec<u8> = tokens.iter().map(|&t| (t.clamp(0, 255)) as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer;
+        let s = "the quick brown fox 123!";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn ids_in_vocab() {
+        let t = ByteTokenizer;
+        for id in t.encode("héllo ☃") {
+            assert!((0..256).contains(&id));
+        }
+    }
+
+    #[test]
+    fn decode_clamps_out_of_range() {
+        let t = ByteTokenizer;
+        let s = t.decode(&[72, 105, 999, -5]);
+        assert!(s.starts_with("Hi"));
+    }
+}

@@ -1,0 +1,232 @@
+//! Analytic FLOPs accounting (the efficiency axis of the paper's reward,
+//! Eq. 8/13, and the y-axis of Table 1 / Fig. 4).
+//!
+//! Counts multiply–accumulate pairs as 2 FLOPs, matching the convention
+//! of the transformer-FLOPs literature. All functions are per *forward*
+//! over one sequence unless noted.
+
+/// FLOPs of a dense m×k · k×n matmul.
+pub fn matmul_flops(m: usize, k: usize, n: usize) -> u64 {
+    2 * (m as u64) * (k as u64) * (n as u64)
+}
+
+/// Full-rank single-head attention over length n, head dim d (Eq. 1):
+/// scores QKᵀ (2n²d) + softmax (~5n²) + A·V (2n²d).
+pub fn full_attention_flops(n: usize, d: usize) -> u64 {
+    matmul_flops(n, d, n) + 5 * (n as u64) * (n as u64) + matmul_flops(n, n, d)
+}
+
+/// Low-rank attention at rank r in factor form — the paper's O(n·r·d)
+/// claim (§3.1): once factors U_r, Σ_r, V_r of the attention matrix are
+/// maintained, the output is U_r·(Σ_r·V_rᵀ·V) and the n×n matrix is never
+/// materialized on the deployed path:
+///   V_rᵀ·V: 2nrd, U_r·W: 2nrd, rank-space softmax correction ≈ 7nr.
+/// `include_svd` adds the factor-maintenance cost (the serving path pays
+/// it once per decision segment — callers amortize explicitly).
+///
+/// NOTE (DESIGN.md §2): obtaining factors of softmax(QKᵀ) without ever
+/// touching n² entries is glossed over by the paper (soundness band 0);
+/// we reproduce the paper's accounting here, and the fidelity/reward path
+/// in `attention::lowrank` uses the exact materialized form.
+pub fn lowrank_attention_flops(n: usize, d: usize, r: usize, include_svd: bool) -> u64 {
+    let apply = matmul_flops(r, n, d) + matmul_flops(n, r, d);
+    let softmax_corr = 7 * (n as u64) * (r as u64);
+    let svd = if include_svd { partial_svd_flops(n, n, r) } else { 0 };
+    apply + softmax_corr + svd
+}
+
+/// Randomized partial SVD of an m×n matrix at rank r (§3.4: O(n²r)):
+/// range finding + 2 subspace iterations + small Jacobi.
+pub fn partial_svd_flops(m: usize, n: usize, r: usize) -> u64 {
+    let p = (r + 8).min(n.min(m)); // oversampled width
+    // Y = AΩ, two power iterations (4 products), projection + small SVD.
+    let products = 6 * matmul_flops(m, n, p);
+    let small_svd = 10 * (p as u64) * (p as u64) * (n as u64); // Jacobi sweeps
+    products + small_svd
+}
+
+/// Incremental extension r→r' costs only the band (Eq. 12).
+pub fn incremental_svd_flops(m: usize, n: usize, r_from: usize, r_to: usize) -> u64 {
+    if r_to <= r_from {
+        return 0; // truncation
+    }
+    // Deflation (reconstruct + subtract ≈ 2mnr_from) plus band decomposition.
+    2 * (m as u64) * (n as u64) * (r_from as u64) + partial_svd_flops(m, n, r_to - r_from)
+}
+
+/// Power iteration spectral-norm estimate: K iterations of MᵀMv.
+pub fn power_iteration_flops(m: usize, n: usize, k_iters: usize) -> u64 {
+    (k_iters as u64) * (4 * (m as u64) * (n as u64))
+}
+
+/// Transformer decoder block configuration for FLOPs purposes.
+#[derive(Debug, Clone, Copy)]
+pub struct BlockDims {
+    pub n: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+}
+
+impl BlockDims {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// QKV + output projections.
+    pub fn projection_flops(&self) -> u64 {
+        4 * matmul_flops(self.n, self.d_model, self.d_model)
+    }
+
+    /// Two-layer MLP.
+    pub fn ffn_flops(&self) -> u64 {
+        2 * matmul_flops(self.n, self.d_model, self.d_ff)
+    }
+
+    /// Full-rank block total.
+    pub fn full_block_flops(&self) -> u64 {
+        self.projection_flops()
+            + (self.n_heads as u64) * full_attention_flops(self.n, self.head_dim())
+            + self.ffn_flops()
+    }
+
+    /// Block with per-head ranks (DR-RL). SVD cost amortized over
+    /// `segment_len` tokens (segment-level adaptation, §4.5.2).
+    pub fn lowrank_block_flops(&self, ranks: &[usize], segment_len: usize) -> u64 {
+        assert_eq!(ranks.len(), self.n_heads);
+        let hd = self.head_dim();
+        let attn: u64 = ranks
+            .iter()
+            .map(|&r| {
+                let base = lowrank_attention_flops(self.n, hd, r, false);
+                let svd = partial_svd_flops(self.n, self.n, r) / segment_len.max(1) as u64;
+                base + svd
+            })
+            .sum();
+        self.projection_flops() + attn + self.ffn_flops()
+    }
+}
+
+/// Whole-model FLOPs for `n_layers` blocks plus embedding/unembedding.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelDims {
+    pub block: BlockDims,
+    pub n_layers: usize,
+    pub vocab: usize,
+}
+
+impl ModelDims {
+    pub fn full_model_flops(&self) -> u64 {
+        (self.n_layers as u64) * self.block.full_block_flops()
+            + matmul_flops(self.block.n, self.block.d_model, self.vocab)
+    }
+
+    /// Per-layer rank assignments: `ranks[layer][head]`.
+    pub fn lowrank_model_flops(&self, ranks: &[Vec<usize>], segment_len: usize) -> u64 {
+        assert_eq!(ranks.len(), self.n_layers);
+        ranks
+            .iter()
+            .map(|r| self.block.lowrank_block_flops(r, segment_len))
+            .sum::<u64>()
+            + matmul_flops(self.block.n, self.block.d_model, self.vocab)
+    }
+
+    /// FLOPs saving of a rank assignment vs full rank (paper headline:
+    /// ≥40% for L > 4096).
+    pub fn saving_fraction(&self, ranks: &[Vec<usize>], segment_len: usize) -> f64 {
+        let full = self.full_model_flops() as f64;
+        let lr = self.lowrank_model_flops(ranks, segment_len) as f64;
+        1.0 - lr / full
+    }
+}
+
+/// Policy-network overhead per decision (two-block transformer encoder on
+/// a single state token + MLP head) — must stay ≪ attention savings.
+pub fn policy_overhead_flops(state_dim: usize, d_policy: usize, n_actions: usize) -> u64 {
+    // input proj + 2 blocks (attn on 1 token ≈ 4d² + ffn 8d²) + head
+    matmul_flops(1, state_dim, d_policy)
+        + 2 * (4 * matmul_flops(1, d_policy, d_policy) + 2 * matmul_flops(1, d_policy, 4 * d_policy))
+        + matmul_flops(1, d_policy, n_actions)
+}
+
+/// Normalized FLOPs term used in the reward (Eq. 8): rank-r attention
+/// cost relative to full-rank for the same shape, in [0, ~1].
+pub fn normalized_flops(n: usize, d: usize, r: usize) -> f64 {
+    lowrank_attention_flops(n, d, r, false) as f64 / full_attention_flops(n, d) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PAPER_BLOCK: BlockDims = BlockDims { n: 1024, d_model: 512, n_heads: 8, d_ff: 2048 };
+
+    #[test]
+    fn matmul_flops_formula() {
+        assert_eq!(matmul_flops(2, 3, 4), 48);
+    }
+
+    #[test]
+    fn lowrank_cheaper_than_full_for_small_r() {
+        let n = 2048;
+        let d = 64;
+        let full = full_attention_flops(n, d);
+        let lr = lowrank_attention_flops(n, d, 16, false);
+        assert!(lr < full, "{lr} !< {full}");
+    }
+
+    #[test]
+    fn normalized_flops_monotone_in_rank() {
+        let mut last = 0.0;
+        for r in [8, 16, 32, 64] {
+            let f = normalized_flops(1024, 64, r);
+            assert!(f > last);
+            last = f;
+        }
+    }
+
+    #[test]
+    fn block_accounting_consistency() {
+        let full = PAPER_BLOCK.full_block_flops();
+        let all_full_rank: Vec<usize> = vec![PAPER_BLOCK.n; PAPER_BLOCK.n_heads];
+        // Low-rank path at r=n should not be *cheaper* than full — the
+        // factor apply adds work when r is not ≪ n.
+        let lr = PAPER_BLOCK.lowrank_block_flops(&all_full_rank, usize::MAX);
+        assert!(lr >= full / 2, "sanity: same order of magnitude");
+        let small: Vec<usize> = vec![16; PAPER_BLOCK.n_heads];
+        assert!(PAPER_BLOCK.lowrank_block_flops(&small, 64) < full);
+    }
+
+    #[test]
+    fn paper_scale_saving_over_40_percent_at_long_seq() {
+        // The paper's headline: >40% FLOPs reduction for L > 4096 with
+        // ranks in [16, 64]. Validate the *model* reproduces that shape.
+        let block = BlockDims { n: 8192, d_model: 512, n_heads: 8, d_ff: 2048 };
+        let model = ModelDims { block, n_layers: 12, vocab: 50257 };
+        let ranks = vec![vec![32usize; 8]; 12];
+        let saving = model.saving_fraction(&ranks, 64);
+        assert!(saving > 0.40, "saving {saving}");
+    }
+
+    #[test]
+    fn incremental_cheaper_than_full_decomposition() {
+        let full = partial_svd_flops(1024, 1024, 64);
+        let inc = incremental_svd_flops(1024, 1024, 48, 64);
+        assert!(inc < full, "{inc} !< {full}");
+        assert_eq!(incremental_svd_flops(1024, 1024, 64, 32), 0);
+    }
+
+    #[test]
+    fn policy_overhead_is_negligible() {
+        let overhead = policy_overhead_flops(32, 64, 49);
+        let attn_saving = full_attention_flops(4096, 64) - lowrank_attention_flops(4096, 64, 32, false);
+        assert!(overhead as f64 / attn_saving as f64 * 1e2 < 1.0, "overhead must be <1% of saving");
+    }
+
+    #[test]
+    fn model_flops_scale_with_layers() {
+        let m1 = ModelDims { block: PAPER_BLOCK, n_layers: 1, vocab: 1000 };
+        let m2 = ModelDims { block: PAPER_BLOCK, n_layers: 2, vocab: 1000 };
+        assert!(m2.full_model_flops() > m1.full_model_flops());
+    }
+}

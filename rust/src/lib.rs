@@ -1,0 +1,34 @@
+//! # DR-RL — Dynamic Rank Reinforcement Learning for Adaptive Low-Rank MHSA
+//!
+//! Production-grade reproduction of *"Dynamic Rank Reinforcement Learning
+//! for Adaptive Low-Rank Multi-Head Self-Attention in Large Language
+//! Models"* (Erden, IJCAST 2026) as a three-layer Rust + JAX + Pallas
+//! system:
+//!
+//! * **L1 (Pallas)** — masked-rank low-rank attention / power-iteration
+//!   kernels, authored in `python/compile/kernels/` and AOT-lowered.
+//! * **L2 (JAX)** — decoder LM forward/train-step and the transformer
+//!   policy network, lowered once to HLO text (`make artifacts`).
+//! * **L3 (this crate)** — the serving coordinator: request routing,
+//!   dynamic batching, the RL rank controller with perturbation-bound
+//!   safety checks, incremental SVD updates, PPO/BC training of the
+//!   policy, and all baselines + experiment harnesses.
+//!
+//! Python never runs on the request path; the binary is self-contained
+//! once `artifacts/` is built.
+
+pub mod attention;
+pub mod bench_harness;
+pub mod coordinator;
+pub mod data;
+pub mod flops;
+pub mod linalg;
+pub mod model;
+pub mod nn;
+pub mod policy;
+pub mod rl;
+pub mod runtime;
+pub mod sim;
+pub mod spectral;
+pub mod train;
+pub mod util;

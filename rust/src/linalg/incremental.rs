@@ -1,0 +1,215 @@
+//! Incremental SVD rank updates (paper Eq. 12).
+//!
+//! When the agent raises the rank from r to r', only the singular
+//! components {r+1, …, r'} are computed — by deflating the known top-r
+//! part and running the randomized range finder on the residual — and the
+//! factor matrices are extended in place:  U_{r'} = [U_r, u_{r+1} … u_{r'}].
+//! Rank decreases are plain truncations (free).
+
+use super::mat::Mat;
+use super::matmul::matmul;
+use super::partial_svd::partial_svd;
+use super::svd::Svd;
+
+/// Truncate an SVD to rank r (cheap path for rank decreases).
+pub fn truncate(d: &Svd, r: usize) -> Svd {
+    let r = r.min(d.s.len());
+    Svd { u: d.u.take_cols(r), s: d.s[..r].to_vec(), v: d.v.take_cols(r) }
+}
+
+/// Extend a top-r SVD of `a` to rank `r_new` by computing only the new
+/// band of components on the deflated residual (Eq. 12).
+///
+/// Returns the extended decomposition. If `r_new <= current`, truncates.
+pub fn extend(a: &Mat, d: &Svd, r_new: usize, seed: u64) -> Svd {
+    let r_cur = d.s.len();
+    let r_new = r_new.min(a.rows()).min(a.cols());
+    if r_new <= r_cur {
+        return truncate(d, r_new);
+    }
+    // Residual R = A − U_r Σ_r V_rᵀ. (The residual's top components are
+    // exactly A's components r+1…; deflation makes the band computable
+    // without touching the already-known part.)
+    let mut resid = a.clone();
+    resid.sub_inplace(&d.reconstruct(r_cur));
+    let band = r_new - r_cur;
+    let extra = partial_svd(&resid, band, 8, 2, seed);
+    // Stitch: U ← [U_r | U_band], etc. Singular values of the residual are
+    // A's tail values so global descending order is preserved.
+    let u = d.u.hcat(&extra.u.take_cols(band.min(extra.s.len())));
+    let v = d.v.hcat(&extra.v.take_cols(band.min(extra.s.len())));
+    let mut s = d.s.clone();
+    s.extend_from_slice(&extra.s[..band.min(extra.s.len())]);
+    Svd { u, s, v }
+}
+
+/// Cost model for the incremental update: fraction of a full rank-r'
+/// decomposition that the incremental path avoids, ≈ (r'-r)/r' speedup
+/// claim in §4.3.2 of the paper.
+pub fn incremental_saving(r_old: usize, r_new: usize) -> f64 {
+    if r_new == 0 || r_new <= r_old {
+        return 1.0; // truncation is free
+    }
+    1.0 - (r_new - r_old) as f64 / r_new as f64
+}
+
+/// Stateful per-head incremental decomposition cache used by the
+/// coordinator: holds the current factors and serves rank transitions.
+#[derive(Debug, Clone)]
+pub struct IncrementalCache {
+    current: Option<Svd>,
+    seed: u64,
+    /// Count of full recomputes vs incremental extensions (for metrics).
+    pub full_computes: usize,
+    pub incremental_updates: usize,
+    pub truncations: usize,
+}
+
+impl IncrementalCache {
+    pub fn new(seed: u64) -> Self {
+        IncrementalCache {
+            current: None,
+            seed,
+            full_computes: 0,
+            incremental_updates: 0,
+            truncations: 0,
+        }
+    }
+
+    /// Invalidate (new attention matrix — e.g. new segment).
+    pub fn reset(&mut self) {
+        self.current = None;
+    }
+
+    /// The cached decomposition, if any.
+    pub fn current(&self) -> Option<&Svd> {
+        self.current.as_ref()
+    }
+
+    /// Get a rank-r decomposition of `a`, reusing cached factors when the
+    /// matrix is unchanged and only the rank moved.
+    pub fn decompose(&mut self, a: &Mat, r: usize) -> &Svd {
+        self.seed = self.seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+        match self.current.take() {
+            None => {
+                self.full_computes += 1;
+                // §Perf iteration 2/3: probe-tuned randomized SVD
+                // (oversample 4, one subspace iteration) — ~2× faster at
+                // σ accuracy ~1e-5, far below featurization noise.
+                self.current = Some(partial_svd(a, r, 4, 1, self.seed));
+            }
+            Some(d) => {
+                if r <= d.s.len() {
+                    self.truncations += 1;
+                    self.current = Some(truncate(&d, r));
+                } else {
+                    self.incremental_updates += 1;
+                    self.current = Some(extend(a, &d, r, self.seed));
+                }
+            }
+        }
+        self.current.as_ref().unwrap()
+    }
+}
+
+/// Rank-1 outer-product helper used in tests and the oracle.
+pub fn outer(u: &[f64], v: &[f64]) -> Mat {
+    let mut m = Mat::zeros(u.len(), v.len());
+    for i in 0..u.len() {
+        for j in 0..v.len() {
+            m[(i, j)] = u[i] * v[j];
+        }
+    }
+    m
+}
+
+#[allow(dead_code)]
+fn unused(_: fn(&Mat, &Mat) -> Mat) {}
+const _: () = {
+    let _ = matmul as fn(&Mat, &Mat) -> Mat;
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::partial_svd::top_k_svd;
+    use crate::linalg::svd::svd;
+    use crate::util::Pcg32;
+
+    fn decaying_matrix(n: usize, seed: u64) -> Mat {
+        // Matrix with geometric spectral decay — representative of
+        // post-softmax attention.
+        let mut rng = Pcg32::seeded(seed);
+        let u = crate::linalg::qr::orthonormalize(&Mat::randn(n, n, 1.0, &mut rng));
+        let v = crate::linalg::qr::orthonormalize(&Mat::randn(n, n, 1.0, &mut rng));
+        let mut a = Mat::zeros(n, n);
+        for k in 0..n {
+            let s = 4.0 * (0.7f64).powi(k as i32);
+            a.axpy(s, &outer(&u.col(k), &v.col(k)));
+        }
+        a
+    }
+
+    #[test]
+    fn extend_matches_direct_partial() {
+        let a = decaying_matrix(32, 1);
+        let d8 = top_k_svd(&a, 8, 42);
+        let d16 = extend(&a, &d8, 16, 43);
+        assert_eq!(d16.s.len(), 16);
+        let exact = svd(&a);
+        for i in 0..16 {
+            let rel = (d16.s[i] - exact.s[i]).abs() / exact.s[i].max(1e-12);
+            assert!(rel < 1e-4, "σ_{i}: {} vs {}", d16.s[i], exact.s[i]);
+        }
+        // Reconstruction quality ≈ Eckart–Young at rank 16.
+        let err = (&a - &d16.reconstruct(16)).fro_norm();
+        let opt = exact.tail_energy(16);
+        assert!(err <= 1.1 * opt + 1e-9, "{err} vs {opt}");
+    }
+
+    #[test]
+    fn truncation_is_exact_prefix() {
+        let a = decaying_matrix(24, 2);
+        let d = top_k_svd(&a, 12, 7);
+        let t = truncate(&d, 5);
+        assert_eq!(t.s.len(), 5);
+        assert_eq!(&t.s[..], &d.s[..5]);
+        assert!(t.u.allclose(&d.u.take_cols(5), 0.0));
+    }
+
+    #[test]
+    fn saving_formula() {
+        assert!((incremental_saving(16, 64) - 0.25).abs() < 1e-12);
+        assert_eq!(incremental_saving(32, 16), 1.0);
+        assert_eq!(incremental_saving(0, 0), 1.0);
+    }
+
+    #[test]
+    fn cache_counts_paths() {
+        let a = decaying_matrix(20, 3);
+        let mut cache = IncrementalCache::new(5);
+        cache.decompose(&a, 4); // full
+        cache.decompose(&a, 8); // incremental
+        cache.decompose(&a, 3); // truncation
+        cache.reset();
+        cache.decompose(&a, 6); // full again
+        assert_eq!(cache.full_computes, 2);
+        assert_eq!(cache.incremental_updates, 1);
+        assert_eq!(cache.truncations, 1);
+    }
+
+    #[test]
+    fn cache_rank_correctness_after_transitions() {
+        let a = decaying_matrix(28, 4);
+        let exact = svd(&a);
+        let mut cache = IncrementalCache::new(11);
+        for &r in &[4usize, 10, 6, 14] {
+            let d = cache.decompose(&a, r);
+            assert_eq!(d.s.len(), r);
+            for i in 0..r {
+                let rel = (d.s[i] - exact.s[i]).abs() / exact.s[i].max(1e-12);
+                assert!(rel < 1e-3, "after transition to {r}, σ_{i} off by {rel}");
+            }
+        }
+    }
+}

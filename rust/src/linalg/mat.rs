@@ -1,0 +1,418 @@
+//! Dense row-major matrix type used across the Rust layer.
+//!
+//! Numerics run in f64 (SVD / perturbation bounds need the headroom);
+//! conversion to the f32 XLA literals happens at the runtime boundary.
+
+use crate::util::Pcg32;
+use std::fmt;
+use std::ops::{Add, Index, IndexMut, Mul, Sub};
+
+/// Dense row-major matrix of f64.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn filled(rows: usize, cols: usize, v: f64) -> Self {
+        Mat { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    /// i.i.d. N(0, std) entries.
+    pub fn randn(rows: usize, cols: usize, std: f64, rng: &mut Pcg32) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        for v in m.data.iter_mut() {
+            *v = rng.normal() * std;
+        }
+        m
+    }
+
+    /// Uniform [lo, hi) entries.
+    pub fn rand_uniform(rows: usize, cols: usize, lo: f64, hi: f64, rng: &mut Pcg32) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        for v in m.data.iter_mut() {
+            *v = rng.uniform(lo, hi);
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    pub fn set_col(&mut self, j: usize, v: &[f64]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self[(i, j)] = v[i];
+        }
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on large matrices.
+        const B: usize = 32;
+        for i0 in (0..self.rows).step_by(B) {
+            for j0 in (0..self.cols).step_by(B) {
+                for i in i0..(i0 + B).min(self.rows) {
+                    for j in j0..(j0 + B).min(self.cols) {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Select the first `k` columns.
+    pub fn take_cols(&self, k: usize) -> Mat {
+        assert!(k <= self.cols);
+        let mut out = Mat::zeros(self.rows, k);
+        for i in 0..self.rows {
+            out.row_mut(i).copy_from_slice(&self.row(i)[..k]);
+        }
+        out
+    }
+
+    /// Select the first `k` rows.
+    pub fn take_rows(&self, k: usize) -> Mat {
+        assert!(k <= self.rows);
+        Mat::from_vec(k, self.cols, self.data[..k * self.cols].to_vec())
+    }
+
+    /// Horizontally concatenate `[self | other]`.
+    pub fn hcat(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows);
+        let mut out = Mat::zeros(self.rows, self.cols + other.cols);
+        for i in 0..self.rows {
+            out.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+            out.row_mut(i)[self.cols..].copy_from_slice(other.row(i));
+        }
+        out
+    }
+
+    /// Vertically concatenate `[self; other]`.
+    pub fn vcat(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols);
+        let mut data = self.data.clone();
+        data.extend_from_slice(&other.data);
+        Mat::from_vec(self.rows + other.rows, self.cols, data)
+    }
+
+    pub fn scale(&self, s: f64) -> Mat {
+        let mut out = self.clone();
+        for v in out.data.iter_mut() {
+            *v *= s;
+        }
+        out
+    }
+
+    pub fn scale_inplace(&mut self, s: f64) {
+        for v in self.data.iter_mut() {
+            *v *= s;
+        }
+    }
+
+    pub fn add_inplace(&mut self, other: &Mat) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += b;
+        }
+    }
+
+    pub fn sub_inplace(&mut self, other: &Mat) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a -= b;
+        }
+    }
+
+    /// axpy: self += alpha * other.
+    pub fn axpy(&mut self, alpha: f64, other: &Mat) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Elementwise map.
+    pub fn map<F: Fn(f64) -> f64>(&self, f: F) -> Mat {
+        let mut out = self.clone();
+        for v in out.data.iter_mut() {
+            *v = f(*v);
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Sum of all entries.
+    pub fn sum(&self) -> f64 {
+        self.data.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            0.0
+        } else {
+            self.sum() / self.data.len() as f64
+        }
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let m = self.mean();
+        self.data.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / self.data.len() as f64
+    }
+
+    pub fn abs_max(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, &x| m.max(x.abs()))
+    }
+
+    /// Max |a-b| over entries.
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .fold(0.0f64, |m, (a, b)| m.max((a - b).abs()))
+    }
+
+    /// Check closeness with absolute tolerance.
+    pub fn allclose(&self, other: &Mat, tol: f64) -> bool {
+        self.shape() == other.shape() && self.max_abs_diff(other) <= tol
+    }
+
+    /// Flattened cosine similarity between two matrices (Eq. 8 `sim`).
+    pub fn cosine_sim(&self, other: &Mat) -> f64 {
+        assert_eq!(self.shape(), other.shape());
+        let dot: f64 = self.data.iter().zip(other.data.iter()).map(|(a, b)| a * b).sum();
+        let na = self.fro_norm();
+        let nb = other.fro_norm();
+        if na == 0.0 || nb == 0.0 {
+            return 0.0;
+        }
+        dot / (na * nb)
+    }
+
+    /// Convert to f32 (runtime boundary).
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data: data.iter().map(|&x| x as f64).collect() }
+    }
+}
+
+impl Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl Add for &Mat {
+    type Output = Mat;
+    fn add(self, rhs: &Mat) -> Mat {
+        let mut out = self.clone();
+        out.add_inplace(rhs);
+        out
+    }
+}
+
+impl Sub for &Mat {
+    type Output = Mat;
+    fn sub(self, rhs: &Mat) -> Mat {
+        let mut out = self.clone();
+        out.sub_inplace(rhs);
+        out
+    }
+}
+
+impl Mul for &Mat {
+    type Output = Mat;
+    fn mul(self, rhs: &Mat) -> Mat {
+        super::matmul::matmul(self, rhs)
+    }
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        let show_r = self.rows.min(6);
+        let show_c = self.cols.min(8);
+        for i in 0..show_r {
+            write!(f, "  ")?;
+            for j in 0..show_c {
+                write!(f, "{:10.4} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > show_c { "…" } else { "" })?;
+        }
+        if self.rows > show_r {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_indexing() {
+        let mut m = Mat::zeros(2, 3);
+        m[(1, 2)] = 5.0;
+        assert_eq!(m[(1, 2)], 5.0);
+        assert_eq!(m.shape(), (2, 3));
+        assert_eq!(m.row(1), &[0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Pcg32::seeded(1);
+        let m = Mat::randn(17, 23, 1.0, &mut rng);
+        let t = m.transpose();
+        assert_eq!(t.shape(), (23, 17));
+        assert!(m.allclose(&t.transpose(), 0.0));
+        assert_eq!(m[(3, 7)], t[(7, 3)]);
+    }
+
+    #[test]
+    fn concat() {
+        let a = Mat::filled(2, 2, 1.0);
+        let b = Mat::filled(2, 3, 2.0);
+        let h = a.hcat(&b);
+        assert_eq!(h.shape(), (2, 5));
+        assert_eq!(h[(0, 4)], 2.0);
+        let c = Mat::filled(3, 2, 3.0);
+        let v = a.vcat(&c);
+        assert_eq!(v.shape(), (5, 2));
+        assert_eq!(v[(4, 1)], 3.0);
+    }
+
+    #[test]
+    fn norms_and_stats() {
+        let m = Mat::from_vec(2, 2, vec![3.0, 0.0, 4.0, 0.0]);
+        assert!((m.fro_norm() - 5.0).abs() < 1e-12);
+        assert!((m.mean() - 1.75).abs() < 1e-12);
+        let eye = Mat::eye(3);
+        assert!((eye.cosine_sim(&eye) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_of_orthogonal_is_zero() {
+        let a = Mat::from_vec(1, 2, vec![1.0, 0.0]);
+        let b = Mat::from_vec(1, 2, vec![0.0, 1.0]);
+        assert!(a.cosine_sim(&b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let mut rng = Pcg32::seeded(2);
+        let m = Mat::randn(5, 7, 1.0, &mut rng);
+        let back = Mat::from_f32(5, 7, &m.to_f32());
+        assert!(m.allclose(&back, 1e-6));
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let a = Mat::zeros(2, 2);
+        let b = Mat::zeros(3, 3);
+        let _ = &a + &b;
+    }
+
+    #[test]
+    fn take_cols_rows() {
+        let m = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let c = m.take_cols(2);
+        assert_eq!(c.data(), &[1., 2., 4., 5.]);
+        let r = m.take_rows(1);
+        assert_eq!(r.data(), &[1., 2., 3.]);
+    }
+}

@@ -1,0 +1,230 @@
+//! Matrix multiplication kernels: naive (reference), cache-blocked with
+//! transposed-B packing, and a thread-pool-parallel variant used on the
+//! serving hot path.
+
+use super::mat::Mat;
+use crate::util::global_pool;
+use crate::util::threadpool::SendPtr;
+
+/// Reference ikj matmul (used by tests as oracle for the blocked kernels).
+pub fn matmul_naive(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.rows(), "inner dims");
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Mat::zeros(m, n);
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[(i, p)];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = b.row(p);
+            let crow = c.row_mut(i);
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// Cache-blocked single-threaded matmul.
+pub fn matmul_blocked(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.rows(), "inner dims");
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Mat::zeros(m, n);
+    matmul_into_range(a, b, &mut c, 0, m);
+    let _ = k;
+    c
+}
+
+/// Compute rows [r0, r1) of C = A·B into a preallocated C.
+#[inline]
+fn matmul_into_range(a: &Mat, b: &Mat, c: &mut Mat, r0: usize, r1: usize) {
+    const MC: usize = 64; // row block
+    const KC: usize = 128; // depth block
+    let (k, n) = (a.cols(), b.cols());
+    for i0 in (r0..r1).step_by(MC) {
+        let i1 = (i0 + MC).min(r1);
+        for p0 in (0..k).step_by(KC) {
+            let p1 = (p0 + KC).min(k);
+            for i in i0..i1 {
+                let arow = a.row(i);
+                let crow = c.row_mut(i);
+                for p in p0..p1 {
+                    let av = arow[p];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = b.row(p);
+                    // Inner loop over contiguous memory in both B and C —
+                    // auto-vectorizes.
+                    for j in 0..n {
+                        crow[j] += av * brow[j];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Parallel matmul over the global thread pool; falls back to blocked for
+/// small problems where spawn overhead dominates.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.rows(), "inner dims: {:?} x {:?}", a.shape(), b.shape());
+    let (m, n) = (a.rows(), b.cols());
+    let work = m * a.cols() * n;
+    if work < 64 * 64 * 64 {
+        return matmul_blocked(a, b);
+    }
+    let mut c = Mat::zeros(m, n);
+    // Split row ranges across the pool; each range writes disjoint rows.
+    let c_ptr = SendPtr::new(&mut c);
+    global_pool().chunked_for(m, 16, |r0, r1| {
+        // SAFETY: ranges are disjoint row slices of c; &Mat reads are shared.
+        let c = unsafe { c_ptr.get() };
+        matmul_into_range(a, b, c, r0, r1);
+    });
+    c
+}
+
+/// C = A·Bᵀ without materializing Bᵀ (dot-product form, contiguous rows).
+pub fn matmul_bt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.cols(), "inner dims for A·Bt");
+    let (m, n, k) = (a.rows(), b.rows(), a.cols());
+    let mut c = Mat::zeros(m, n);
+    let c_ptr = SendPtr::new(&mut c);
+    let body = |r0: usize, r1: usize| {
+        let c = unsafe { c_ptr.get() };
+        for i in r0..r1 {
+            let arow = a.row(i);
+            let crow = c.row_mut(i);
+            for j in 0..n {
+                let brow = b.row(j);
+                let mut acc = 0.0;
+                for p in 0..k {
+                    acc += arow[p] * brow[p];
+                }
+                crow[j] = acc;
+            }
+        }
+    };
+    if m * n * k < 64 * 64 * 64 {
+        body(0, m);
+    } else {
+        global_pool().chunked_for(m, 16, body);
+    }
+    c
+}
+
+/// C = Aᵀ·B without materializing Aᵀ.
+pub fn matmul_at(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows(), b.rows(), "inner dims for At·B");
+    let (k, m, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Mat::zeros(m, n);
+    for p in 0..k {
+        let arow = a.row(p);
+        let brow = b.row(p);
+        for i in 0..m {
+            let av = arow[i];
+            if av == 0.0 {
+                continue;
+            }
+            let crow = c.row_mut(i);
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// y = A·x for a vector x.
+pub fn matvec(a: &Mat, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.cols(), x.len());
+    (0..a.rows())
+        .map(|i| a.row(i).iter().zip(x.iter()).map(|(p, q)| p * q).sum())
+        .collect()
+}
+
+/// y = Aᵀ·x.
+pub fn matvec_t(a: &Mat, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.rows(), x.len());
+    let mut y = vec![0.0; a.cols()];
+    for i in 0..a.rows() {
+        let xi = x[i];
+        if xi == 0.0 {
+            continue;
+        }
+        for (j, aij) in a.row(i).iter().enumerate() {
+            y[j] += aij * xi;
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn blocked_matches_naive() {
+        let mut rng = Pcg32::seeded(42);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (64, 64, 64), (100, 37, 81)] {
+            let a = Mat::randn(m, k, 1.0, &mut rng);
+            let b = Mat::randn(k, n, 1.0, &mut rng);
+            let c1 = matmul_naive(&a, &b);
+            let c2 = matmul_blocked(&a, &b);
+            assert!(c1.allclose(&c2, 1e-10), "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_naive() {
+        let mut rng = Pcg32::seeded(43);
+        let a = Mat::randn(130, 70, 1.0, &mut rng);
+        let b = Mat::randn(70, 90, 1.0, &mut rng);
+        assert!(matmul(&a, &b).allclose(&matmul_naive(&a, &b), 1e-10));
+    }
+
+    #[test]
+    fn bt_and_at_variants() {
+        let mut rng = Pcg32::seeded(44);
+        let a = Mat::randn(20, 15, 1.0, &mut rng);
+        let b = Mat::randn(25, 15, 1.0, &mut rng);
+        let want = matmul_naive(&a, &b.transpose());
+        assert!(matmul_bt(&a, &b).allclose(&want, 1e-10));
+
+        let a2 = Mat::randn(15, 20, 1.0, &mut rng);
+        let b2 = Mat::randn(15, 25, 1.0, &mut rng);
+        let want2 = matmul_naive(&a2.transpose(), &b2);
+        assert!(matmul_at(&a2, &b2).allclose(&want2, 1e-10));
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Pcg32::seeded(45);
+        let a = Mat::randn(12, 12, 1.0, &mut rng);
+        assert!(matmul(&a, &Mat::eye(12)).allclose(&a, 1e-12));
+        assert!(matmul(&Mat::eye(12), &a).allclose(&a, 1e-12));
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Pcg32::seeded(46);
+        let a = Mat::randn(9, 13, 1.0, &mut rng);
+        let x: Vec<f64> = (0..13).map(|i| i as f64 * 0.5 - 3.0).collect();
+        let xm = Mat::from_vec(13, 1, x.clone());
+        let want = matmul_naive(&a, &xm);
+        let got = matvec(&a, &x);
+        for i in 0..9 {
+            assert!((got[i] - want[(i, 0)]).abs() < 1e-10);
+        }
+        let y: Vec<f64> = (0..9).map(|i| 1.0 - i as f64 * 0.1).collect();
+        let got_t = matvec_t(&a, &y);
+        let want_t = matmul_naive(&a.transpose(), &Mat::from_vec(9, 1, y));
+        for j in 0..13 {
+            assert!((got_t[j] - want_t[(j, 0)]).abs() < 1e-10);
+        }
+    }
+}

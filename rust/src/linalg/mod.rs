@@ -1,0 +1,22 @@
+//! Pure-Rust dense linear algebra substrate.
+//!
+//! Everything the DR-RL agent needs at run time — matmuls, full Jacobi
+//! SVD (ground truth), randomized/batched partial SVD (`O(n²r)`, the
+//! paper's cuSOLVER substitute), incremental rank extension (Eq. 12) and
+//! power-iteration spectral norms (Eq. 16) — with no external crates.
+
+pub mod incremental;
+pub mod mat;
+pub mod matmul;
+pub mod partial_svd;
+pub mod power_iter;
+pub mod qr;
+pub mod svd;
+
+pub use incremental::{extend, truncate, IncrementalCache};
+pub use mat::Mat;
+pub use matmul::{matmul, matmul_at, matmul_bt, matvec, matvec_t};
+pub use partial_svd::{batched_partial_svd, partial_svd, top_k_svd};
+pub use power_iter::{spectral_norm, spectral_norm_fast};
+pub use qr::{orthonormalize, qr_thin};
+pub use svd::{svd, Svd};

@@ -1,0 +1,119 @@
+//! Power iteration for spectral norms (paper Eq. 16).
+//!
+//! The perturbation safety check needs ‖M‖₂ for Q/K residuals on every
+//! decision step; the paper approximates it with K≈3 iterations of
+//! v ← MᵀMv / ‖MᵀMv‖ instead of an eigendecomposition. Mirrored by the
+//! Pallas kernel `power_iter.py` at L1.
+
+use super::mat::Mat;
+use super::matmul::{matvec, matvec_t};
+use crate::util::Pcg32;
+
+/// Estimate the spectral norm (largest singular value) of `a` with `k`
+/// power iterations starting from a seeded random unit vector.
+pub fn spectral_norm(a: &Mat, k: usize, seed: u64) -> f64 {
+    let (m, n) = a.shape();
+    if m == 0 || n == 0 {
+        return 0.0;
+    }
+    let mut rng = Pcg32::seeded(seed ^ 0x5851f42d4c957f2d);
+    let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    normalize(&mut v);
+    let mut sigma = 0.0;
+    for _ in 0..k.max(1) {
+        // w = A v ; v ← Aᵀ w, normalize — one iteration of MᵀM.
+        let w = matvec(a, &v);
+        let mut av = matvec_t(a, &w);
+        let nrm = norm(&av);
+        if nrm < 1e-300 {
+            return 0.0;
+        }
+        for x in av.iter_mut() {
+            *x /= nrm;
+        }
+        v = av;
+        // Rayleigh quotient estimate σ ≈ ‖A v‖.
+        sigma = norm(&matvec(a, &v));
+    }
+    sigma
+}
+
+/// Spectral norm with the paper's default K=3.
+pub fn spectral_norm_fast(a: &Mat, seed: u64) -> f64 {
+    spectral_norm(a, 3, seed)
+}
+
+fn norm(v: &[f64]) -> f64 {
+    v.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+fn normalize(v: &mut [f64]) {
+    let n = norm(v);
+    if n > 1e-300 {
+        for x in v.iter_mut() {
+            *x /= n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::svd::svd;
+
+    #[test]
+    fn matches_svd_on_random_matrices() {
+        let mut rng = Pcg32::seeded(30);
+        for trial in 0..5 {
+            let a = Mat::randn(30, 20, 1.0, &mut rng);
+            let exact = svd(&a).s[0];
+            let approx = spectral_norm(&a, 200, trial);
+            let rel = (approx - exact).abs() / exact;
+            // Random Gaussian matrices have closely spaced leading singular
+            // values, so convergence is slow — 1e-4 relative is plenty.
+            assert!(rel < 1e-4, "trial {trial}: {approx} vs {exact}");
+        }
+    }
+
+    #[test]
+    fn three_iterations_close_on_decaying_spectrum() {
+        // Attention-like spectra decay fast, so K=3 is already tight —
+        // this is the paper's operating regime.
+        let mut rng = Pcg32::seeded(31);
+        let u = crate::linalg::qr::orthonormalize(&Mat::randn(24, 24, 1.0, &mut rng));
+        let v = crate::linalg::qr::orthonormalize(&Mat::randn(24, 24, 1.0, &mut rng));
+        let mut a = Mat::zeros(24, 24);
+        for k in 0..24 {
+            let s = 5.0 * (0.5f64).powi(k as i32);
+            a.axpy(s, &crate::linalg::incremental::outer(&u.col(k), &v.col(k)));
+        }
+        let exact = svd(&a).s[0];
+        let approx = spectral_norm_fast(&a, 1);
+        assert!((approx - exact).abs() / exact < 0.01, "{approx} vs {exact}");
+    }
+
+    #[test]
+    fn underestimates_never_exceed_true_norm() {
+        // Power iteration converges from below (Rayleigh quotient ≤ σ₁).
+        let mut rng = Pcg32::seeded(32);
+        let a = Mat::randn(15, 15, 1.0, &mut rng);
+        let exact = svd(&a).s[0];
+        for k in 1..6 {
+            let est = spectral_norm(&a, k, 9);
+            assert!(est <= exact + 1e-9, "k={k}");
+        }
+    }
+
+    #[test]
+    fn zero_matrix_norm_zero() {
+        let a = Mat::zeros(8, 8);
+        assert_eq!(spectral_norm_fast(&a, 0), 0.0);
+    }
+
+    #[test]
+    fn vector_shapes() {
+        let a = Mat::from_vec(1, 4, vec![3.0, 0.0, 4.0, 0.0]);
+        let est = spectral_norm(&a, 10, 0);
+        assert!((est - 5.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,127 @@
+//! Householder QR decomposition (thin form), used by the randomized
+//! partial SVD for subspace orthonormalization.
+
+use super::mat::Mat;
+
+/// Thin QR: A (m×n, m>=n) = Q (m×n, orthonormal cols) · R (n×n upper).
+pub fn qr_thin(a: &Mat) -> (Mat, Mat) {
+    let (m, n) = a.shape();
+    assert!(m >= n, "qr_thin expects m >= n, got {m}x{n}");
+    // Work on a copy; accumulate Householder vectors in-place (LAPACK style).
+    let mut r = a.clone();
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+    for k in 0..n {
+        // Build the Householder vector for column k below the diagonal.
+        let mut x = vec![0.0; m - k];
+        for i in k..m {
+            x[i - k] = r[(i, k)];
+        }
+        let alpha = -x[0].signum() * x.iter().map(|v| v * v).sum::<f64>().sqrt();
+        let mut v = x;
+        v[0] -= alpha;
+        let vnorm = v.iter().map(|t| t * t).sum::<f64>().sqrt();
+        if vnorm > 1e-300 {
+            for t in v.iter_mut() {
+                *t /= vnorm;
+            }
+            // Apply H = I - 2vvᵀ to the trailing submatrix of R.
+            for j in k..n {
+                let mut dot = 0.0;
+                for i in k..m {
+                    dot += v[i - k] * r[(i, j)];
+                }
+                let dot2 = 2.0 * dot;
+                for i in k..m {
+                    r[(i, j)] -= dot2 * v[i - k];
+                }
+            }
+        } else {
+            v = vec![0.0; m - k];
+        }
+        vs.push(v);
+    }
+    // Extract the upper-triangular R (n×n).
+    let mut rr = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            rr[(i, j)] = r[(i, j)];
+        }
+    }
+    // Form thin Q by applying Householder reflectors to the first n columns
+    // of the identity, in reverse order.
+    let mut q = Mat::zeros(m, n);
+    for j in 0..n {
+        q[(j, j)] = 1.0;
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        if v.iter().all(|&t| t == 0.0) {
+            continue;
+        }
+        for j in 0..n {
+            let mut dot = 0.0;
+            for i in k..m {
+                dot += v[i - k] * q[(i, j)];
+            }
+            let dot2 = 2.0 * dot;
+            for i in k..m {
+                q[(i, j)] -= dot2 * v[i - k];
+            }
+        }
+    }
+    (q, rr)
+}
+
+/// Orthonormalize the columns of A (thin Q of its QR).
+pub fn orthonormalize(a: &Mat) -> Mat {
+    qr_thin(a).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::{matmul_at, matmul_naive};
+    use crate::util::Pcg32;
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Pcg32::seeded(10);
+        for &(m, n) in &[(5, 5), (10, 4), (32, 16), (7, 1)] {
+            let a = Mat::randn(m, n, 1.0, &mut rng);
+            let (q, r) = qr_thin(&a);
+            let qr = matmul_naive(&q, &r);
+            assert!(a.allclose(&qr, 1e-9), "reconstruct {m}x{n}");
+        }
+    }
+
+    #[test]
+    fn q_is_orthonormal() {
+        let mut rng = Pcg32::seeded(11);
+        let a = Mat::randn(20, 8, 1.0, &mut rng);
+        let (q, _) = qr_thin(&a);
+        let qtq = matmul_at(&q, &q);
+        assert!(qtq.allclose(&Mat::eye(8), 1e-9));
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let mut rng = Pcg32::seeded(12);
+        let a = Mat::randn(9, 6, 1.0, &mut rng);
+        let (_, r) = qr_thin(&a);
+        for i in 0..6 {
+            for j in 0..i {
+                assert!(r[(i, j)].abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn handles_rank_deficiency() {
+        // Two identical columns — Q should still be orthonormal.
+        let mut rng = Pcg32::seeded(13);
+        let col = Mat::randn(10, 1, 1.0, &mut rng);
+        let a = col.hcat(&col).hcat(&Mat::randn(10, 1, 1.0, &mut rng));
+        let (q, r) = qr_thin(&a);
+        assert!(matmul_naive(&q, &r).allclose(&a, 1e-9));
+    }
+}

@@ -1,0 +1,292 @@
+//! `drrl` — launcher CLI for the DR-RL serving/training stack.
+//!
+//! Subcommands:
+//!   train      — train the LM end-to-end through the AOT train-step
+//!   eval       — validation perplexity of saved params
+//!   generate   — greedy generation from a prompt
+//!   serve      — start the serving engine(s) and run a synthetic load
+//!   agent      — train the DR-RL agent (BC warm start + PPO)
+//!   info       — print manifest / artifact summary
+//!
+//! Example:
+//!   drrl train --steps 200 --corpus wiki103-sim --out bench_out/lm.bin
+//!   drrl serve --requests 64 --engines 2 --policy hlo
+
+use drrl::coordinator::{BatchPolicy, ControllerConfig, PolicySource, RouteStrategy, Router};
+use drrl::data::{Corpus, CorpusProfile};
+use drrl::model::ExperimentConfig;
+use drrl::rl::{train_hybrid, EnvConfig, RankEnv, TrainerConfig};
+use drrl::runtime::{ArtifactRegistry, Manifest};
+use drrl::train::{generate_greedy, LmTrainer};
+use drrl::util::{Args, Pcg32};
+use drrl::{attention::MhsaWeights, linalg::Mat};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    drrl::util::logger::set_level_from_env();
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.command.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("generate") => cmd_generate(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("agent") => cmd_agent(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            print_usage();
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    println!(
+        "drrl — Dynamic Rank RL for adaptive low-rank attention\n\
+         usage: drrl <train|eval|generate|serve|agent|info> [--flags]\n\
+         run each subcommand with no flags for sensible defaults;\n\
+         see README.md for the full flag reference."
+    );
+}
+
+fn profile_from(args: &Args) -> CorpusProfile {
+    match args.get_or("corpus", "wiki103-sim") {
+        "ptb-sim" => CorpusProfile::Ptb,
+        "book-sim" => CorpusProfile::Book,
+        _ => CorpusProfile::Wiki103,
+    }
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    let steps = args.usize_or("steps", 200);
+    let corpus_bytes = args.usize_or("corpus-bytes", 400_000);
+    let seed = args.u64_or("seed", 42);
+    let reg = match ArtifactRegistry::open_default() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("artifacts unavailable ({e:#}); run `make artifacts`");
+            return 1;
+        }
+    };
+    let corpus = Corpus::build(profile_from(args), corpus_bytes, seed);
+    let mut tr = LmTrainer::new(&reg, seed);
+    println!("training {} steps on {}…", steps, corpus.profile.name());
+    let secs = tr.train(&corpus, steps, 10).expect("train");
+    let ppl = tr.eval_ppl(&corpus, 4).expect("eval");
+    println!(
+        "done in {secs:.1}s  final loss {:.4}  val ppl {:.2}",
+        tr.last_loss(),
+        ppl
+    );
+    if let Some(out) = args.get("out") {
+        save_params(out, &tr.params);
+        println!("params saved to {out}");
+    }
+    0
+}
+
+fn cmd_eval(args: &Args) -> i32 {
+    let reg = ArtifactRegistry::open_default().expect("artifacts");
+    let corpus = Corpus::build(profile_from(args), args.usize_or("corpus-bytes", 200_000), 7);
+    let params = match args.get("params") {
+        Some(p) => load_params(p, reg.manifest.lm.param_count),
+        None => {
+            eprintln!("--params file required (train with `drrl train --out …`)");
+            return 2;
+        }
+    };
+    let mut tr = LmTrainer::new(&reg, 7);
+    tr.params = params;
+    let ppl = tr.eval_ppl(&corpus, args.usize_or("batches", 8)).expect("eval");
+    println!("val ppl on {}: {ppl:.2}", corpus.profile.name());
+    0
+}
+
+fn cmd_generate(args: &Args) -> i32 {
+    let reg = ArtifactRegistry::open_default().expect("artifacts");
+    let params = match args.get("params") {
+        Some(p) => load_params(p, reg.manifest.lm.param_count),
+        None => {
+            let mut rng = Pcg32::seeded(1);
+            let mut p = vec![0f32; reg.manifest.lm.param_count];
+            rng.fill_normal_f32(&mut p, 0.02);
+            eprintln!("note: no --params given; generating from random weights");
+            p
+        }
+    };
+    let prompt_text = args.get_or("prompt", "The city of ");
+    let prompt: Vec<i32> = prompt_text.bytes().map(|b| b as i32).collect();
+    let n_new = args.usize_or("tokens", 32);
+    let out = generate_greedy(&reg, &params, &prompt, n_new).expect("generate");
+    let text: String = out.iter().map(|&t| (t.clamp(0, 255) as u8) as char).collect();
+    println!("{prompt_text}{text}");
+    0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let cfg = ExperimentConfig::resolve(args).expect("config");
+    let reg = Arc::new(ArtifactRegistry::open_default().expect("artifacts"));
+    let n_requests = args.usize_or("requests", 32);
+    let policy = match args.get_or("policy", "hlo") {
+        "fixed" => PolicySource::Fixed(args.usize_or("rank", 32)),
+        "adaptive" => PolicySource::AdaptiveEnergy(0.9),
+        "random" => PolicySource::Random,
+        "full" => PolicySource::FullRank,
+        _ => PolicySource::Hlo,
+    };
+
+    // Frozen attention stack for the adaptive-attention service, shaped
+    // to the kernel artifacts (single-head, head_dim-wide).
+    let kd = reg.manifest.kernel.head_dim;
+    let mut rng = Pcg32::seeded(cfg.seed);
+    let layers: Vec<MhsaWeights> =
+        (0..cfg.model.n_layers).map(|_| MhsaWeights::init(kd, 1, &mut rng)).collect();
+    let mut params = vec![0f32; reg.manifest.lm.param_count];
+    rng.fill_normal_f32(&mut params, 0.02);
+    let params = Arc::new(params);
+
+    let mk_engine = |policy: PolicySource| {
+        drrl::coordinator::ServingEngine::start(
+            Arc::clone(&reg),
+            Arc::clone(&params),
+            layers.clone(),
+            ControllerConfig {
+                segment_len: cfg.serving.segment_len,
+                use_trust_region: cfg.serving.use_trust_region,
+                ..Default::default()
+            },
+            policy,
+            BatchPolicy {
+                max_batch: cfg.serving.max_batch,
+                max_wait: Duration::from_millis(cfg.serving.max_wait_ms),
+                capacity: cfg.serving.queue_capacity,
+            },
+        )
+    };
+    let engines: Vec<_> = (0..cfg.serving.n_engines)
+        .map(|_| {
+            mk_engine(match &policy {
+                PolicySource::Hlo => PolicySource::Hlo,
+                PolicySource::Fixed(r) => PolicySource::Fixed(*r),
+                PolicySource::AdaptiveEnergy(t) => PolicySource::AdaptiveEnergy(*t),
+                PolicySource::Random => PolicySource::Random,
+                PolicySource::FullRank => PolicySource::FullRank,
+                PolicySource::Actor(_) => PolicySource::Hlo,
+            })
+        })
+        .collect();
+    let router = Router::new(engines, RouteStrategy::LeastLoaded);
+
+    println!(
+        "serving {n_requests} attention segments across {} engine(s)…",
+        router.n_engines()
+    );
+    let n = reg.manifest.kernel.seq_len;
+    let mut pending = Vec::new();
+    for i in 0..n_requests {
+        let x = Mat::randn(n, kd, 1.0, &mut rng);
+        let layer = i % cfg.model.n_layers;
+        match router.submit_attention(x.into_vec(), n, kd, layer) {
+            Ok((_, rx)) => pending.push(rx),
+            Err(e) => eprintln!("rejected: {e:?}"),
+        }
+    }
+    for rx in pending {
+        let _ = rx.recv();
+    }
+    println!("{}", router.report());
+    0
+}
+
+fn cmd_agent(args: &Args) -> i32 {
+    let cfg = ExperimentConfig::resolve(args).expect("config");
+    let mut rng = Pcg32::seeded(cfg.seed);
+    let d_model = args.usize_or("d-model", 32);
+    let n_heads = args.usize_or("n-heads", 2);
+    let layers: Vec<MhsaWeights> = (0..args.usize_or("n-layers", 2))
+        .map(|_| MhsaWeights::init(d_model, n_heads, &mut rng))
+        .collect();
+    let grid = args.usize_list_or("ranks", &[4, 8, 12, 16]);
+    let mut env = RankEnv::new(
+        layers,
+        EnvConfig {
+            rank_grid: grid,
+            use_trust_region: !args.flag("no-trust-region"),
+            ..Default::default()
+        },
+    );
+    let seq = args.usize_or("seq-len", 24);
+    let mut sampler = move |r: &mut Pcg32| Mat::randn(seq, d_model, 1.0, r);
+    let tcfg = TrainerConfig {
+        ppo_rounds: args.usize_or("rounds", 10),
+        episodes_per_round: args.usize_or("episodes", 8),
+        ..Default::default()
+    };
+    println!("hybrid training (BC + PPO)…");
+    let agent = train_hybrid(&mut env, &mut sampler, &tcfg);
+    println!("BC accuracy: {:.3}", agent.bc_accuracy);
+    for p in &agent.curve {
+        println!(
+            "round {:3}  reward {:+.4}  mean_rank {:5.1}  entropy {:.3}",
+            p.round, p.mean_reward, p.mean_rank, p.stats.entropy
+        );
+    }
+    0
+}
+
+fn cmd_info(_args: &Args) -> i32 {
+    match Manifest::load(&Manifest::default_dir()) {
+        Ok(m) => {
+            println!("artifact dir: {:?}", m.dir);
+            println!(
+                "LM: vocab={} L={} d={} layers={} heads={} params={:.2}M",
+                m.lm.vocab,
+                m.lm.seq_len,
+                m.lm.d_model,
+                m.lm.n_layers,
+                m.lm.n_heads,
+                m.lm.param_count as f64 / 1e6
+            );
+            println!(
+                "kernel: n={} d={} buckets={:?} block_n={}",
+                m.kernel.seq_len, m.kernel.head_dim, m.kernel.rank_buckets, m.kernel.block_n
+            );
+            println!(
+                "policy: state_dim={} actions={} grid={:?} bc_acc={:.3}",
+                m.policy.state_dim, m.policy.n_actions, m.policy.rank_grid, m.policy.bc_accuracy
+            );
+            println!(
+                "artifacts: {}",
+                m.artifact_files.keys().cloned().collect::<Vec<_>>().join(", ")
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("no artifacts: {e:#} — run `make artifacts`");
+            1
+        }
+    }
+}
+
+// -- tiny param (de)serialization: raw little-endian f32 --
+
+fn save_params(path: &str, params: &[f32]) {
+    let mut bytes = Vec::with_capacity(params.len() * 4);
+    for p in params {
+        bytes.extend_from_slice(&p.to_le_bytes());
+    }
+    std::fs::write(path, bytes).expect("write params");
+}
+
+fn load_params(path: &str, expect: usize) -> Vec<f32> {
+    let bytes = std::fs::read(path).expect("read params");
+    assert_eq!(bytes.len(), expect * 4, "param file size mismatch");
+    bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+}

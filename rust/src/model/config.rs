@@ -1,0 +1,181 @@
+//! Typed configuration with JSON loading and CLI overrides.
+//!
+//! Precedence: defaults < JSON file (`--config path`) < CLI flags.
+
+use crate::util::{Args, Json};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// LM shape used by Rust-side experiment models (the AOT LM's shape
+/// lives in the artifact manifest; this config governs host-side
+/// simulation models in the benches).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LmModelConfig {
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub rank_grid: Vec<usize>,
+}
+
+impl Default for LmModelConfig {
+    fn default() -> Self {
+        LmModelConfig {
+            d_model: 64,
+            n_layers: 4,
+            n_heads: 4,
+            seq_len: 128,
+            rank_grid: vec![16, 24, 32, 40, 48, 56, 64],
+        }
+    }
+}
+
+/// Serving engine knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingConfig {
+    pub n_engines: usize,
+    pub max_batch: usize,
+    pub max_wait_ms: u64,
+    pub queue_capacity: usize,
+    pub segment_len: usize,
+    pub use_trust_region: bool,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            n_engines: 1,
+            max_batch: 8,
+            max_wait_ms: 5,
+            queue_capacity: 1024,
+            segment_len: 16,
+            use_trust_region: true,
+        }
+    }
+}
+
+/// Top-level experiment configuration.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ExperimentConfig {
+    pub model: LmModelConfig,
+    pub serving: ServingConfig,
+    pub seed: u64,
+}
+
+impl ExperimentConfig {
+    /// Load from JSON text (partial configs fine — missing keys default).
+    pub fn from_json(text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("config parse: {e}"))?;
+        let mut cfg = ExperimentConfig::default();
+        if let Some(m) = j.get("model") {
+            let d = &mut cfg.model;
+            set_usize(m, "d_model", &mut d.d_model);
+            set_usize(m, "n_layers", &mut d.n_layers);
+            set_usize(m, "n_heads", &mut d.n_heads);
+            set_usize(m, "seq_len", &mut d.seq_len);
+            if let Some(g) = m.get("rank_grid").and_then(|a| a.as_arr()) {
+                d.rank_grid = g.iter().filter_map(|x| x.as_usize()).collect();
+            }
+        }
+        if let Some(s) = j.get("serving") {
+            let d = &mut cfg.serving;
+            set_usize(s, "n_engines", &mut d.n_engines);
+            set_usize(s, "max_batch", &mut d.max_batch);
+            set_usize(s, "queue_capacity", &mut d.queue_capacity);
+            set_usize(s, "segment_len", &mut d.segment_len);
+            if let Some(v) = s.get("max_wait_ms").and_then(|x| x.as_f64()) {
+                d.max_wait_ms = v as u64;
+            }
+            if let Some(v) = s.get("use_trust_region").and_then(|x| x.as_bool()) {
+                d.use_trust_region = v;
+            }
+        }
+        if let Some(v) = j.get("seed").and_then(|x| x.as_f64()) {
+            cfg.seed = v as u64;
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading config {path:?}"))?;
+        Self::from_json(&text)
+    }
+
+    /// Apply CLI overrides (`--d-model`, `--n-layers`, `--seq-len`,
+    /// `--ranks`, `--engines`, `--max-batch`, `--seed`, …).
+    pub fn apply_args(mut self, args: &Args) -> Self {
+        self.model.d_model = args.usize_or("d-model", self.model.d_model);
+        self.model.n_layers = args.usize_or("n-layers", self.model.n_layers);
+        self.model.n_heads = args.usize_or("n-heads", self.model.n_heads);
+        self.model.seq_len = args.usize_or("seq-len", self.model.seq_len);
+        self.model.rank_grid = args.usize_list_or("ranks", &self.model.rank_grid);
+        self.serving.n_engines = args.usize_or("engines", self.serving.n_engines);
+        self.serving.max_batch = args.usize_or("max-batch", self.serving.max_batch);
+        self.serving.max_wait_ms = args.u64_or("max-wait-ms", self.serving.max_wait_ms);
+        self.serving.segment_len = args.usize_or("segment-len", self.serving.segment_len);
+        if args.flag("no-trust-region") {
+            self.serving.use_trust_region = false;
+        }
+        self.seed = args.u64_or("seed", self.seed);
+        self
+    }
+
+    /// Resolve from CLI: optional `--config file.json` plus overrides.
+    pub fn resolve(args: &Args) -> Result<Self> {
+        let base = match args.get("config") {
+            Some(p) => Self::from_file(Path::new(p))?,
+            None => Self::default(),
+        };
+        Ok(base.apply_args(args))
+    }
+}
+
+fn set_usize(j: &Json, key: &str, out: &mut usize) {
+    if let Some(v) = j.get(key).and_then(|x| x.as_usize()) {
+        *out = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.model.d_model % c.model.n_heads, 0);
+        assert!(!c.model.rank_grid.is_empty());
+    }
+
+    #[test]
+    fn json_partial_override() {
+        let c = ExperimentConfig::from_json(
+            r#"{"model": {"d_model": 128, "rank_grid": [8, 16]}, "seed": 7}"#,
+        )
+        .unwrap();
+        assert_eq!(c.model.d_model, 128);
+        assert_eq!(c.model.rank_grid, vec![8, 16]);
+        assert_eq!(c.model.n_layers, 4); // default preserved
+        assert_eq!(c.seed, 7);
+    }
+
+    #[test]
+    fn cli_overrides_json() {
+        let args = Args::parse_from(
+            ["x", "--d-model", "256", "--no-trust-region", "--ranks", "4,8"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let c = ExperimentConfig::default().apply_args(&args);
+        assert_eq!(c.model.d_model, 256);
+        assert!(!c.serving.use_trust_region);
+        assert_eq!(c.model.rank_grid, vec![4, 8]);
+    }
+
+    #[test]
+    fn bad_json_is_error() {
+        assert!(ExperimentConfig::from_json("{nope").is_err());
+    }
+}

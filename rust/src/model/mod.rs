@@ -1,0 +1,7 @@
+//! Model/experiment configuration system: typed configs loadable from
+//! JSON files or CLI overrides, shared by the launcher, examples and
+//! benches.
+
+pub mod config;
+
+pub use config::{ExperimentConfig, LmModelConfig, ServingConfig};

@@ -1,0 +1,196 @@
+//! Categorical distribution over discrete ranks (paper Eq. 15), with
+//! action masking for the trust-region safety check and the entropy /
+//! log-prob machinery PPO needs.
+
+use crate::util::Pcg32;
+
+/// A categorical distribution built from raw logits, with optional mask.
+#[derive(Debug, Clone)]
+pub struct Categorical {
+    /// Normalized probabilities (masked entries are exactly 0).
+    pub probs: Vec<f64>,
+    /// log-probabilities (masked entries are -inf).
+    pub log_probs: Vec<f64>,
+}
+
+impl Categorical {
+    /// Build from logits; `mask[i] = false` forbids action i (§4.3.1).
+    pub fn from_logits(logits: &[f64], mask: Option<&[bool]>) -> Self {
+        assert!(!logits.is_empty());
+        if let Some(m) = mask {
+            assert_eq!(m.len(), logits.len());
+            assert!(m.iter().any(|&b| b), "all actions masked");
+        }
+        let masked: Vec<f64> = logits
+            .iter()
+            .enumerate()
+            .map(|(i, &l)| {
+                if mask.map(|m| m[i]).unwrap_or(true) {
+                    l
+                } else {
+                    f64::NEG_INFINITY
+                }
+            })
+            .collect();
+        let max = masked.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        let exps: Vec<f64> = masked.iter().map(|&l| (l - max).exp()).collect();
+        let z: f64 = exps.iter().sum();
+        let probs: Vec<f64> = exps.iter().map(|&e| e / z).collect();
+        let logz = z.ln() + max;
+        let log_probs: Vec<f64> = masked.iter().map(|&l| l - logz).collect();
+        Categorical { probs, log_probs }
+    }
+
+    pub fn n(&self) -> usize {
+        self.probs.len()
+    }
+
+    /// Sample an action index.
+    pub fn sample(&self, rng: &mut Pcg32) -> usize {
+        let u = rng.next_f64();
+        let mut acc = 0.0;
+        for (i, &p) in self.probs.iter().enumerate() {
+            acc += p;
+            if u < acc {
+                return i;
+            }
+        }
+        // Floating-point tail: last unmasked action.
+        self.probs.iter().rposition(|&p| p > 0.0).unwrap_or(self.n() - 1)
+    }
+
+    /// Greedy argmax action.
+    pub fn argmax(&self) -> usize {
+        self.probs
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+
+    pub fn log_prob(&self, action: usize) -> f64 {
+        self.log_probs[action]
+    }
+
+    /// Shannon entropy (for PPO's exploration bonus).
+    pub fn entropy(&self) -> f64 {
+        -self
+            .probs
+            .iter()
+            .filter(|&&p| p > 1e-15)
+            .map(|&p| p * p.ln())
+            .sum::<f64>()
+    }
+
+    /// d(-logπ(a))/d logits — the softmax-CE gradient: p_i − 1{i=a}.
+    /// Masked entries get zero gradient.
+    pub fn grad_nll_wrt_logits(&self, action: usize) -> Vec<f64> {
+        self.probs
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| if i == action { p - 1.0 } else { p })
+            .collect()
+    }
+
+    /// d entropy / d logits = -p_i (log p_i + H)... computed directly:
+    /// dH/dl_i = -p_i (log p_i − Σ_j p_j log p_j) = -p_i(log p_i + H).
+    pub fn grad_entropy_wrt_logits(&self) -> Vec<f64> {
+        let h = self.entropy();
+        self.probs
+            .iter()
+            .map(|&p| if p > 1e-15 { -p * (p.ln() + h) } else { 0.0 })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probs_normalized() {
+        let c = Categorical::from_logits(&[1.0, 2.0, 3.0], None);
+        let sum: f64 = c.probs.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+        assert!(c.probs[2] > c.probs[1] && c.probs[1] > c.probs[0]);
+    }
+
+    #[test]
+    fn mask_zeroes_forbidden() {
+        let c = Categorical::from_logits(&[5.0, 1.0, 1.0], Some(&[false, true, true]));
+        assert_eq!(c.probs[0], 0.0);
+        assert!((c.probs[1] - 0.5).abs() < 1e-12);
+        assert!(c.log_probs[0].is_infinite());
+    }
+
+    #[test]
+    #[should_panic]
+    fn all_masked_panics() {
+        let _ = Categorical::from_logits(&[1.0, 2.0], Some(&[false, false]));
+    }
+
+    #[test]
+    fn sampling_respects_mask_and_distribution() {
+        let c = Categorical::from_logits(&[0.0, 0.0, 2.0], Some(&[false, true, true]));
+        let mut rng = Pcg32::seeded(1);
+        let mut counts = [0usize; 3];
+        for _ in 0..20_000 {
+            counts[c.sample(&mut rng)] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        let frac2 = counts[2] as f64 / 20_000.0;
+        assert!((frac2 - c.probs[2]).abs() < 0.02);
+    }
+
+    #[test]
+    fn entropy_bounds() {
+        let uniform = Categorical::from_logits(&[0.0; 8], None);
+        assert!((uniform.entropy() - (8.0f64).ln()).abs() < 1e-9);
+        let peaked = Categorical::from_logits(&[100.0, 0.0, 0.0], None);
+        assert!(peaked.entropy() < 1e-6);
+    }
+
+    #[test]
+    fn nll_gradient_finite_difference() {
+        let logits = [0.3, -0.7, 1.2, 0.1];
+        let action = 2;
+        let c = Categorical::from_logits(&logits, None);
+        let g = c.grad_nll_wrt_logits(action);
+        let eps = 1e-6;
+        for i in 0..4 {
+            let mut lp = logits;
+            lp[i] += eps;
+            let mut lm = logits;
+            lm[i] -= eps;
+            let fp = -Categorical::from_logits(&lp, None).log_prob(action);
+            let fm = -Categorical::from_logits(&lm, None).log_prob(action);
+            let fd = (fp - fm) / (2.0 * eps);
+            assert!((g[i] - fd).abs() < 1e-6, "i={i}: {} vs {fd}", g[i]);
+        }
+    }
+
+    #[test]
+    fn entropy_gradient_finite_difference() {
+        let logits = [0.5, -0.2, 0.9];
+        let c = Categorical::from_logits(&logits, None);
+        let g = c.grad_entropy_wrt_logits();
+        let eps = 1e-6;
+        for i in 0..3 {
+            let mut lp = logits;
+            lp[i] += eps;
+            let mut lm = logits;
+            lm[i] -= eps;
+            let fd = (Categorical::from_logits(&lp, None).entropy()
+                - Categorical::from_logits(&lm, None).entropy())
+                / (2.0 * eps);
+            assert!((g[i] - fd).abs() < 1e-6, "i={i}: {} vs {fd}", g[i]);
+        }
+    }
+
+    #[test]
+    fn argmax_greedy() {
+        let c = Categorical::from_logits(&[0.1, 3.0, 0.2], None);
+        assert_eq!(c.argmax(), 1);
+    }
+}

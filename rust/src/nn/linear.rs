@@ -1,0 +1,190 @@
+//! Dense layer with manual backprop — the building block of the Rust-side
+//! policy/value networks (no autograd framework exists in this build, so
+//! gradients are hand-derived and covered by finite-difference tests).
+
+use crate::linalg::{matmul, matmul_at, matmul_bt, Mat};
+use crate::util::Pcg32;
+
+/// y = x·W + b, with cached activations for the backward pass.
+#[derive(Debug, Clone)]
+pub struct Linear {
+    pub w: Mat,
+    pub b: Vec<f64>,
+    pub dw: Mat,
+    pub db: Vec<f64>,
+    cache_x: Option<Mat>,
+}
+
+impl Linear {
+    pub fn new(in_dim: usize, out_dim: usize, rng: &mut Pcg32) -> Self {
+        // He/Xavier hybrid: scaled for tanh/relu nets of this size.
+        let std = (2.0 / (in_dim + out_dim) as f64).sqrt();
+        Linear {
+            w: Mat::randn(in_dim, out_dim, std, rng),
+            b: vec![0.0; out_dim],
+            dw: Mat::zeros(in_dim, out_dim),
+            db: vec![0.0; out_dim],
+            cache_x: None,
+        }
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.w.rows()
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.w.cols()
+    }
+
+    /// Forward; caches x for backward.
+    pub fn forward(&mut self, x: &Mat) -> Mat {
+        let mut y = matmul(x, &self.w);
+        for i in 0..y.rows() {
+            let row = y.row_mut(i);
+            for (j, bj) in self.b.iter().enumerate() {
+                row[j] += bj;
+            }
+        }
+        self.cache_x = Some(x.clone());
+        y
+    }
+
+    /// Inference-only forward (no cache).
+    pub fn forward_inference(&self, x: &Mat) -> Mat {
+        let mut y = matmul(x, &self.w);
+        for i in 0..y.rows() {
+            let row = y.row_mut(i);
+            for (j, bj) in self.b.iter().enumerate() {
+                row[j] += bj;
+            }
+        }
+        y
+    }
+
+    /// Backward: accumulates dW, db; returns dx.
+    pub fn backward(&mut self, dy: &Mat) -> Mat {
+        let x = self.cache_x.as_ref().expect("forward before backward");
+        self.dw.add_inplace(&matmul_at(x, dy));
+        for i in 0..dy.rows() {
+            for (j, d) in dy.row(i).iter().enumerate() {
+                self.db[j] += d;
+            }
+        }
+        matmul_bt(dy, &self.w) // dx = dy · Wᵀ
+    }
+
+    pub fn zero_grad(&mut self) {
+        self.dw = Mat::zeros(self.w.rows(), self.w.cols());
+        self.db.iter_mut().for_each(|d| *d = 0.0);
+    }
+
+    /// Flattened parameter count.
+    pub fn n_params(&self) -> usize {
+        self.w.rows() * self.w.cols() + self.b.len()
+    }
+}
+
+/// Activation functions with derivatives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Act {
+    Relu,
+    Tanh,
+    Identity,
+}
+
+impl Act {
+    pub fn apply(&self, x: f64) -> f64 {
+        match self {
+            Act::Relu => x.max(0.0),
+            Act::Tanh => x.tanh(),
+            Act::Identity => x,
+        }
+    }
+
+    /// Derivative expressed in terms of the *activation output* y.
+    pub fn deriv_from_output(&self, y: f64) -> f64 {
+        match self {
+            Act::Relu => {
+                if y > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Act::Tanh => 1.0 - y * y,
+            Act::Identity => 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Central finite-difference check of dW for a scalar loss L = Σ y².
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let mut rng = Pcg32::seeded(1);
+        let mut lin = Linear::new(4, 3, &mut rng);
+        let x = Mat::randn(5, 4, 1.0, &mut rng);
+
+        let y = lin.forward(&x);
+        let dy = y.scale(2.0); // dL/dy for L = Σ y²
+        lin.zero_grad();
+        let dx = lin.backward(&dy);
+
+        let eps = 1e-6;
+        // Check a few weight entries.
+        for &(i, j) in &[(0usize, 0usize), (1, 2), (3, 1)] {
+            let mut lp = lin.clone();
+            lp.w[(i, j)] += eps;
+            let mut lm = lin.clone();
+            lm.w[(i, j)] -= eps;
+            let loss_p: f64 = lp.forward_inference(&x).data().iter().map(|v| v * v).sum();
+            let loss_m: f64 = lm.forward_inference(&x).data().iter().map(|v| v * v).sum();
+            let fd = (loss_p - loss_m) / (2.0 * eps);
+            assert!(
+                (lin.dw[(i, j)] - fd).abs() < 1e-4,
+                "dW[{i},{j}]: analytic {} vs fd {fd}",
+                lin.dw[(i, j)]
+            );
+        }
+        // Check dx entries.
+        for &(i, j) in &[(0usize, 0usize), (4, 3)] {
+            let mut xp = x.clone();
+            xp[(i, j)] += eps;
+            let mut xm = x.clone();
+            xm[(i, j)] -= eps;
+            let loss_p: f64 = lin.forward_inference(&xp).data().iter().map(|v| v * v).sum();
+            let loss_m: f64 = lin.forward_inference(&xm).data().iter().map(|v| v * v).sum();
+            let fd = (loss_p - loss_m) / (2.0 * eps);
+            assert!((dx[(i, j)] - fd).abs() < 1e-4, "dx[{i},{j}]");
+        }
+        // Bias gradient: db_j = Σ_i dy_ij.
+        for j in 0..3 {
+            let want: f64 = (0..5).map(|i| dy[(i, j)]).sum();
+            assert!((lin.db[j] - want).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn activations() {
+        assert_eq!(Act::Relu.apply(-1.0), 0.0);
+        assert_eq!(Act::Relu.apply(2.0), 2.0);
+        assert!((Act::Tanh.apply(0.5) - 0.5f64.tanh()).abs() < 1e-12);
+        assert_eq!(Act::Identity.deriv_from_output(5.0), 1.0);
+        assert_eq!(Act::Relu.deriv_from_output(0.0), 0.0);
+        let y = Act::Tanh.apply(0.3);
+        assert!((Act::Tanh.deriv_from_output(y) - (1.0 - y * y)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inference_matches_training_forward() {
+        let mut rng = Pcg32::seeded(2);
+        let mut lin = Linear::new(6, 2, &mut rng);
+        let x = Mat::randn(3, 6, 1.0, &mut rng);
+        let a = lin.forward(&x);
+        let b = lin.forward_inference(&x);
+        assert!(a.allclose(&b, 0.0));
+    }
+}

@@ -1,0 +1,193 @@
+//! Multi-layer perceptron with manual backprop — the policy and value
+//! network bodies for the Rust-side PPO/BC trainer.
+
+use super::linear::{Act, Linear};
+use crate::linalg::Mat;
+use crate::util::Pcg32;
+
+/// Feed-forward network: Linear → act → … → Linear (last layer linear).
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    pub layers: Vec<Linear>,
+    pub act: Act,
+    /// Cached post-activation outputs per hidden layer (for backward).
+    caches: Vec<Mat>,
+}
+
+impl Mlp {
+    /// `dims = [in, h1, …, out]`.
+    pub fn new(dims: &[usize], act: Act, rng: &mut Pcg32) -> Self {
+        assert!(dims.len() >= 2);
+        let layers = dims.windows(2).map(|w| Linear::new(w[0], w[1], rng)).collect();
+        Mlp { layers, act, caches: Vec::new() }
+    }
+
+    pub fn forward(&mut self, x: &Mat) -> Mat {
+        self.caches.clear();
+        let n = self.layers.len();
+        let mut cur = x.clone();
+        for (i, layer) in self.layers.iter_mut().enumerate() {
+            cur = layer.forward(&cur);
+            if i + 1 < n {
+                cur = cur.map(|v| self.act.apply(v));
+                self.caches.push(cur.clone());
+            }
+        }
+        cur
+    }
+
+    pub fn forward_inference(&self, x: &Mat) -> Mat {
+        let n = self.layers.len();
+        let mut cur = x.clone();
+        for (i, layer) in self.layers.iter().enumerate() {
+            cur = layer.forward_inference(&cur);
+            if i + 1 < n {
+                cur = cur.map(|v| self.act.apply(v));
+            }
+        }
+        cur
+    }
+
+    /// Backward from dL/d(output); accumulates grads, returns dL/dx.
+    pub fn backward(&mut self, dy: &Mat) -> Mat {
+        let n = self.layers.len();
+        let mut grad = dy.clone();
+        for i in (0..n).rev() {
+            if i + 1 < n {
+                // Chain through the activation using the cached output.
+                let cache = &self.caches[i];
+                assert_eq!(grad.shape(), cache.shape());
+                let mut g = grad.clone();
+                for (gv, cv) in g.data_mut().iter_mut().zip(cache.data().iter()) {
+                    *gv *= self.act.deriv_from_output(*cv);
+                }
+                grad = self.layers[i].backward(&g);
+            } else {
+                grad = self.layers[i].backward(&grad);
+            }
+        }
+        grad
+    }
+
+    pub fn zero_grad(&mut self) {
+        for l in self.layers.iter_mut() {
+            l.zero_grad();
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.layers.iter().map(|l| l.n_params()).sum()
+    }
+
+    /// Visit (param, grad) pairs — used by the optimizer.
+    pub fn visit_params_mut<F: FnMut(&mut f64, f64)>(&mut self, mut f: F) {
+        for l in self.layers.iter_mut() {
+            let dw = l.dw.clone();
+            for (p, g) in l.w.data_mut().iter_mut().zip(dw.data().iter()) {
+                f(p, *g);
+            }
+            let db = l.db.clone();
+            for (p, g) in l.b.iter_mut().zip(db.iter()) {
+                f(p, *g);
+            }
+        }
+    }
+
+    /// Global L2 norm of the gradient (for clipping).
+    pub fn grad_norm(&self) -> f64 {
+        let mut acc = 0.0;
+        for l in &self.layers {
+            acc += l.dw.data().iter().map(|g| g * g).sum::<f64>();
+            acc += l.db.iter().map(|g| g * g).sum::<f64>();
+        }
+        acc.sqrt()
+    }
+
+    /// Scale all gradients (gradient clipping).
+    pub fn scale_grads(&mut self, s: f64) {
+        for l in self.layers.iter_mut() {
+            l.dw.scale_inplace(s);
+            l.db.iter_mut().for_each(|g| *g *= s);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_through_network() {
+        let mut rng = Pcg32::seeded(1);
+        let mut mlp = Mlp::new(&[8, 16, 16, 3], Act::Tanh, &mut rng);
+        let x = Mat::randn(5, 8, 1.0, &mut rng);
+        let y = mlp.forward(&x);
+        assert_eq!(y.shape(), (5, 3));
+        assert_eq!(mlp.n_params(), 8 * 16 + 16 + 16 * 16 + 16 + 16 * 3 + 3);
+    }
+
+    #[test]
+    fn full_network_gradcheck() {
+        let mut rng = Pcg32::seeded(2);
+        let mut mlp = Mlp::new(&[3, 7, 2], Act::Tanh, &mut rng);
+        let x = Mat::randn(4, 3, 1.0, &mut rng);
+        let y = mlp.forward(&x);
+        let dy = y.scale(2.0); // L = Σ y²
+        mlp.zero_grad();
+        mlp.backward(&dy);
+
+        let loss = |m: &Mlp, x: &Mat| -> f64 {
+            m.forward_inference(x).data().iter().map(|v| v * v).sum()
+        };
+        let eps = 1e-6;
+        // Spot-check entries in both layers.
+        for layer_idx in 0..2 {
+            let (i, j) = (0usize, 0usize);
+            let analytic = mlp.layers[layer_idx].dw[(i, j)];
+            let mut mp = mlp.clone();
+            mp.layers[layer_idx].w[(i, j)] += eps;
+            let mut mm = mlp.clone();
+            mm.layers[layer_idx].w[(i, j)] -= eps;
+            let fd = (loss(&mp, &x) - loss(&mm, &x)) / (2.0 * eps);
+            assert!(
+                (analytic - fd).abs() < 1e-4,
+                "layer {layer_idx} dW[0,0]: {analytic} vs {fd}"
+            );
+        }
+    }
+
+    #[test]
+    fn relu_network_gradcheck() {
+        let mut rng = Pcg32::seeded(3);
+        let mut mlp = Mlp::new(&[4, 8, 1], Act::Relu, &mut rng);
+        let x = Mat::randn(6, 4, 1.0, &mut rng);
+        let y = mlp.forward(&x);
+        let dy = Mat::filled(6, 1, 1.0); // L = Σ y
+        mlp.zero_grad();
+        mlp.backward(&dy);
+        let loss = |m: &Mlp, x: &Mat| -> f64 { m.forward_inference(x).data().iter().sum() };
+        let eps = 1e-6;
+        let analytic = mlp.layers[0].dw[(1, 1)];
+        let mut mp = mlp.clone();
+        mp.layers[0].w[(1, 1)] += eps;
+        let mut mm = mlp.clone();
+        mm.layers[0].w[(1, 1)] -= eps;
+        let fd = (loss(&mp, &x) - loss(&mm, &x)) / (2.0 * eps);
+        assert!((analytic - fd).abs() < 1e-4, "{analytic} vs {fd}");
+        let _ = y;
+    }
+
+    #[test]
+    fn grad_clipping() {
+        let mut rng = Pcg32::seeded(4);
+        let mut mlp = Mlp::new(&[2, 4, 1], Act::Tanh, &mut rng);
+        let x = Mat::randn(2, 2, 1.0, &mut rng);
+        let y = mlp.forward(&x);
+        mlp.zero_grad();
+        mlp.backward(&y.scale(100.0));
+        let norm = mlp.grad_norm();
+        assert!(norm > 0.0);
+        mlp.scale_grads(1.0 / norm);
+        assert!((mlp.grad_norm() - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,13 @@
+//! Hand-rolled neural-network substrate (no autograd available offline):
+//! dense layers with derived gradients, MLPs, AdamW, and the masked
+//! categorical distribution used for rank actions (Eq. 15).
+
+pub mod adam;
+pub mod categorical;
+pub mod linear;
+pub mod mlp;
+
+pub use adam::AdamW;
+pub use categorical::Categorical;
+pub use linear::{Act, Linear};
+pub use mlp::Mlp;

@@ -1,0 +1,68 @@
+//! The deployable DR-RL policy: a trained actor network behind the
+//! `RankPolicy` interface, with greedy (argmax) or stochastic action
+//! selection and the safety mask applied at the distribution level.
+
+use super::RankPolicy;
+use crate::rl::{ActorCritic, RankState};
+use crate::util::Pcg32;
+
+/// Learned policy wrapper.
+pub struct DrRlPolicy {
+    pub ac: ActorCritic,
+    /// Greedy at deployment (paper inference mode); stochastic during
+    /// evaluation studies of exploration.
+    pub greedy: bool,
+    rng: Pcg32,
+    /// Decision counter (drives ε annealing upstream; kept for metrics).
+    pub decisions: u64,
+}
+
+impl DrRlPolicy {
+    pub fn new(ac: ActorCritic, greedy: bool, seed: u64) -> Self {
+        DrRlPolicy { ac, greedy, rng: Pcg32::seeded(seed), decisions: 0 }
+    }
+}
+
+impl RankPolicy for DrRlPolicy {
+    fn choose(&mut self, state: &RankState, _spectrum: &[f64], mask: &[bool]) -> usize {
+        self.decisions += 1;
+        let dist = self.ac.distribution(&state.features, Some(mask));
+        if self.greedy {
+            dist.argmax()
+        } else {
+            dist.sample(&mut self.rng)
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "dr-rl"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_is_deterministic() {
+        let ac = ActorCritic::new(6, 16, 4, 1e-3, 1);
+        let mut p = DrRlPolicy::new(ac, true, 2);
+        let st = RankState { features: vec![0.3; 6] };
+        let a1 = p.choose(&st, &[], &[true; 4]);
+        let a2 = p.choose(&st, &[], &[true; 4]);
+        assert_eq!(a1, a2);
+        assert_eq!(p.decisions, 2);
+    }
+
+    #[test]
+    fn masked_actions_never_chosen() {
+        let ac = ActorCritic::new(6, 16, 4, 1e-3, 3);
+        let mut p = DrRlPolicy::new(ac, false, 4);
+        let st = RankState { features: vec![-0.5; 6] };
+        let mask = [false, true, false, true];
+        for _ in 0..50 {
+            let a = p.choose(&st, &[], &mask);
+            assert!(mask[a]);
+        }
+    }
+}

@@ -1,0 +1,26 @@
+//! Rank-selection policies: the learned DR-RL agent plus every baseline
+//! the paper compares against (Table 1: Fixed Low-Rank, Adaptive SVD,
+//! Random Rank; Table 3 adds Performer- and Nyströmformer-style static
+//! attention approximators).
+
+pub mod drrl;
+pub mod static_attention;
+pub mod static_baselines;
+
+pub use drrl::DrRlPolicy;
+pub use static_attention::{nystrom_attention, performer_attention, StaticAttnKind};
+pub use static_baselines::{AdaptiveSvdPolicy, FixedRankPolicy, OraclePolicy, RandomRankPolicy};
+
+use crate::rl::RankState;
+
+/// A policy maps the observed state (plus the trust-region mask) to an
+/// index into the environment's rank grid.
+pub trait RankPolicy {
+    /// Choose an action index. `spectrum` is the current attention
+    /// spectrum (some baselines decide on it directly rather than on the
+    /// featurized state).
+    fn choose(&mut self, state: &RankState, spectrum: &[f64], mask: &[bool]) -> usize;
+
+    /// Human-readable name for experiment tables.
+    fn name(&self) -> &'static str;
+}

@@ -1,0 +1,201 @@
+//! Static linear-attention approximators for Table 3: Performer (FAVOR+
+//! positive random features) and Nyströmformer (landmark-based Nyström
+//! approximation of softmax attention). These replace the attention
+//! *mechanism* (not just the rank), so they live here rather than in the
+//! rank-policy hierarchy.
+
+use crate::attention::AttnInputs;
+use crate::linalg::{matmul, matmul_at, matmul_bt, Mat};
+use crate::util::Pcg32;
+
+/// Which static approximator a baseline model uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StaticAttnKind {
+    Performer,
+    Nystromformer,
+}
+
+/// Performer / FAVOR+ attention with positive orthogonal-ish random
+/// features: φ(x) = exp(ωᵀx − ‖x‖²/2)/√m, attention ≈ φ(Q)(φ(K)ᵀV)
+/// row-normalized. Complexity O(n·m·d).
+pub fn performer_attention(inp: &AttnInputs, n_features: usize, seed: u64) -> Mat {
+    let d = inp.head_dim();
+    let scale = 1.0 / (d as f64).sqrt();
+    let mut rng = Pcg32::seeded(seed);
+    // Random projection ω ~ N(0, I) (orthogonality improves variance but
+    // plain Gaussian features suffice at our scales).
+    let omega = Mat::randn(d, n_features, 1.0, &mut rng);
+
+    let phi = |x: &Mat| -> Mat {
+        // x is n×d, pre-scaled by 1/√√d on both sides ⇒ use x·√scale.
+        let xs = x.scale(scale.sqrt());
+        let proj = matmul(&xs, &omega); // n×m
+        let mut out = Mat::zeros(proj.rows(), proj.cols());
+        for i in 0..proj.rows() {
+            let sq = xs.row(i).iter().map(|v| v * v).sum::<f64>() / 2.0;
+            for j in 0..proj.cols() {
+                out[(i, j)] = (proj[(i, j)] - sq).exp() / (n_features as f64).sqrt();
+            }
+        }
+        out
+    };
+
+    let qf = phi(&inp.q); // n×m
+    let kf = phi(&inp.k); // n×m
+    // KV = φ(K)ᵀ·V : m×d ; normalizer z = φ(K)ᵀ·1 : m
+    let kv = matmul_at(&kf, &inp.v);
+    let ones = Mat::filled(inp.k.rows(), 1, 1.0);
+    let z = matmul_at(&kf, &ones); // m×1
+    let num = matmul(&qf, &kv); // n×d
+    let den = matmul(&qf, &z); // n×1
+    let mut out = num;
+    for i in 0..out.rows() {
+        let d_i = den[(i, 0)].max(1e-9);
+        for v in out.row_mut(i).iter_mut() {
+            *v /= d_i;
+        }
+    }
+    out
+}
+
+/// Nyströmformer attention with `m` landmarks: segment-mean landmarks,
+/// Ã = softmax(Q·K̃ᵀ/√d) · pinv(softmax(Q̃·K̃ᵀ/√d)) · softmax(Q̃·Kᵀ/√d) · V.
+pub fn nystrom_attention(inp: &AttnInputs, n_landmarks: usize, _seed: u64) -> Mat {
+    let n = inp.q.rows();
+    let d = inp.head_dim() as f64;
+    let m = n_landmarks.min(n).max(1);
+    let q_l = segment_means(&inp.q, m);
+    let k_l = segment_means(&inp.k, m);
+
+    let sm = |mut s: Mat| -> Mat {
+        s.scale_inplace(1.0 / d.sqrt());
+        crate::attention::softmax_rows_inplace(&mut s);
+        s
+    };
+    let f = sm(matmul_bt(&inp.q, &k_l)); // n×m
+    let a = sm(matmul_bt(&q_l, &k_l)); // m×m
+    let b = sm(matmul_bt(&q_l, &inp.k)); // m×n
+    let a_pinv = pinv_iterative(&a, 12);
+    let bv = matmul(&b, &inp.v); // m×d
+    let fbv = matmul(&a_pinv, &bv); // m×d
+    matmul(&f, &fbv) // n×d
+}
+
+/// Landmark construction: means of contiguous segments.
+fn segment_means(x: &Mat, m: usize) -> Mat {
+    let n = x.rows();
+    let mut out = Mat::zeros(m, x.cols());
+    for s in 0..m {
+        let lo = s * n / m;
+        let hi = ((s + 1) * n / m).max(lo + 1).min(n);
+        for i in lo..hi {
+            for (j, v) in x.row(i).iter().enumerate() {
+                out[(s, j)] += v;
+            }
+        }
+        let cnt = (hi - lo) as f64;
+        for v in out.row_mut(s).iter_mut() {
+            *v /= cnt;
+        }
+    }
+    out
+}
+
+/// Newton–Schulz iterative pseudo-inverse (as in the Nyströmformer paper,
+/// avoiding an explicit SVD on the hot path).
+fn pinv_iterative(a: &Mat, iters: usize) -> Mat {
+    let n = a.rows();
+    // Initialization: Aᵀ / (‖A‖₁‖A‖∞) guarantees convergence.
+    let norm1 = (0..a.cols())
+        .map(|j| (0..n).map(|i| a[(i, j)].abs()).sum::<f64>())
+        .fold(0.0f64, f64::max);
+    let norm_inf = (0..n)
+        .map(|i| a.row(i).iter().map(|v| v.abs()).sum::<f64>())
+        .fold(0.0f64, f64::max);
+    let mut z = a.transpose().scale(1.0 / (norm1 * norm_inf).max(1e-12));
+    let eye = Mat::eye(n);
+    for _ in 0..iters {
+        let az = matmul(a, &z); // n×n
+        // Z ← Z(13I − AZ(15I − AZ(7I − AZ)))/4  — 3rd-order NS (Nyströmformer).
+        let t1 = &eye.scale(7.0) - &az;
+        let t2 = &eye.scale(15.0) - &matmul(&az, &t1);
+        let t3 = &eye.scale(13.0) - &matmul(&az, &t2);
+        z = matmul(&z, &t3).scale(0.25);
+    }
+    z
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::full_attention;
+
+    fn inputs(n: usize, d: usize, seed: u64) -> AttnInputs {
+        let mut rng = Pcg32::seeded(seed);
+        AttnInputs {
+            q: Mat::randn(n, d, 0.5, &mut rng),
+            k: Mat::randn(n, d, 0.5, &mut rng),
+            v: Mat::randn(n, d, 1.0, &mut rng),
+            causal: false,
+        }
+    }
+
+    #[test]
+    fn performer_approximates_softmax_attention() {
+        let inp = inputs(24, 8, 1);
+        let exact = full_attention(&inp);
+        let approx = performer_attention(&inp, 256, 2);
+        let rel = (&exact - &approx).fro_norm() / exact.fro_norm();
+        assert!(rel < 0.35, "performer rel err {rel}");
+        // More features → better approximation (variance shrinks).
+        let worse = performer_attention(&inp, 8, 2);
+        let rel_worse = (&exact - &worse).fro_norm() / exact.fro_norm();
+        assert!(rel < rel_worse, "{rel} !< {rel_worse}");
+    }
+
+    #[test]
+    fn nystrom_with_all_landmarks_is_close() {
+        let inp = inputs(16, 8, 3);
+        let exact = full_attention(&inp);
+        let approx = nystrom_attention(&inp, 16, 0);
+        let rel = (&exact - &approx).fro_norm() / exact.fro_norm();
+        assert!(rel < 0.15, "nystrom full-landmark rel err {rel}");
+    }
+
+    #[test]
+    fn nystrom_improves_with_landmarks() {
+        let inp = inputs(32, 8, 4);
+        let exact = full_attention(&inp);
+        let few = nystrom_attention(&inp, 2, 0);
+        let many = nystrom_attention(&inp, 16, 0);
+        let e_few = (&exact - &few).fro_norm();
+        let e_many = (&exact - &many).fro_norm();
+        assert!(e_many < e_few, "{e_many} !< {e_few}");
+    }
+
+    #[test]
+    fn pinv_inverts_well_conditioned() {
+        let mut rng = Pcg32::seeded(5);
+        // Diagonally dominant → well-conditioned.
+        let mut a = Mat::randn(6, 6, 0.1, &mut rng);
+        for i in 0..6 {
+            a[(i, i)] += 1.0;
+        }
+        let z = pinv_iterative(&a, 20);
+        let prod = matmul(&a, &z);
+        assert!(prod.allclose(&Mat::eye(6), 1e-6), "A·A⁺ ≉ I: {prod:?}");
+    }
+
+    #[test]
+    fn outputs_finite() {
+        let inp = inputs(20, 4, 6);
+        for m in [1usize, 4, 10] {
+            let y = nystrom_attention(&inp, m, 0);
+            assert!(y.data().iter().all(|v| v.is_finite()), "m={m}");
+        }
+        for f in [4usize, 64] {
+            let y = performer_attention(&inp, f, 7);
+            assert!(y.data().iter().all(|v| v.is_finite()), "features={f}");
+        }
+    }
+}

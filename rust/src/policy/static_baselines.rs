@@ -1,0 +1,189 @@
+//! Static / heuristic rank policies — the paper's Table 1 baselines.
+
+use super::RankPolicy;
+use crate::rl::{RankEnv, RankState};
+use crate::spectral::rank_for_energy;
+use crate::util::Pcg32;
+
+/// Fixed Low-Rank (Linformer-style, paper r=32): one rank for every
+/// layer, head and input.
+pub struct FixedRankPolicy {
+    grid: Vec<usize>,
+    target_rank: usize,
+}
+
+impl FixedRankPolicy {
+    pub fn new(grid: Vec<usize>, target_rank: usize) -> Self {
+        FixedRankPolicy { grid, target_rank }
+    }
+}
+
+impl RankPolicy for FixedRankPolicy {
+    fn choose(&mut self, _state: &RankState, _spectrum: &[f64], mask: &[bool]) -> usize {
+        // Nearest grid entry to the target that is admissible.
+        nearest_admissible(&self.grid, self.target_rank, mask)
+    }
+
+    fn name(&self) -> &'static str {
+        "fixed-low-rank"
+    }
+}
+
+/// Adaptive SVD (energy-threshold heuristic [34]): smallest rank whose
+/// NER reaches the threshold (default 90%).
+pub struct AdaptiveSvdPolicy {
+    grid: Vec<usize>,
+    pub threshold: f64,
+}
+
+impl AdaptiveSvdPolicy {
+    pub fn new(grid: Vec<usize>, threshold: f64) -> Self {
+        AdaptiveSvdPolicy { grid, threshold }
+    }
+}
+
+impl RankPolicy for AdaptiveSvdPolicy {
+    fn choose(&mut self, _state: &RankState, spectrum: &[f64], mask: &[bool]) -> usize {
+        let wanted = rank_for_energy(spectrum, self.threshold);
+        // Round *up* to the next grid rank (energy guarantee), then mask.
+        let target = self
+            .grid
+            .iter()
+            .copied()
+            .filter(|&g| g >= wanted)
+            .min()
+            .unwrap_or_else(|| *self.grid.iter().max().unwrap());
+        nearest_admissible(&self.grid, target, mask)
+    }
+
+    fn name(&self) -> &'static str {
+        "adaptive-svd"
+    }
+}
+
+/// Random Rank control: uniform over the admissible grid.
+pub struct RandomRankPolicy {
+    rng: Pcg32,
+}
+
+impl RandomRankPolicy {
+    pub fn new(seed: u64) -> Self {
+        RandomRankPolicy { rng: Pcg32::seeded(seed) }
+    }
+}
+
+impl RankPolicy for RandomRankPolicy {
+    fn choose(&mut self, _state: &RankState, _spectrum: &[f64], mask: &[bool]) -> usize {
+        let open: Vec<usize> =
+            mask.iter().enumerate().filter(|(_, &b)| b).map(|(i, _)| i).collect();
+        open[self.rng.range(0, open.len())]
+    }
+
+    fn name(&self) -> &'static str {
+        "random-rank"
+    }
+}
+
+/// Expensive greedy oracle as a *policy* (upper-bound diagnostic): probes
+/// every admissible action on a forked environment. Only usable where a
+/// fork of the environment is available.
+pub struct OraclePolicy<'e> {
+    pub env: &'e RankEnv,
+}
+
+impl RankPolicy for OraclePolicy<'_> {
+    fn choose(&mut self, _state: &RankState, _spectrum: &[f64], mask: &[bool]) -> usize {
+        let mut best = (0usize, f64::NEG_INFINITY);
+        for (a, &ok) in mask.iter().enumerate() {
+            if !ok {
+                continue;
+            }
+            let mut trial = self.env.fork();
+            let res = trial.step(a);
+            if res.reward > best.1 {
+                best = (a, res.reward);
+            }
+        }
+        best.0
+    }
+
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+}
+
+/// Pick the admissible grid index whose rank is closest to `target`.
+fn nearest_admissible(grid: &[usize], target: usize, mask: &[bool]) -> usize {
+    assert_eq!(grid.len(), mask.len());
+    grid.iter()
+        .enumerate()
+        .filter(|(i, _)| mask[*i])
+        .min_by_key(|(_, &r)| r.abs_diff(target))
+        .map(|(i, _)| i)
+        .expect("at least one admissible action")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy_state() -> RankState {
+        RankState { features: vec![0.0; 4] }
+    }
+
+    #[test]
+    fn fixed_picks_target_when_open() {
+        let mut p = FixedRankPolicy::new(vec![16, 32, 64], 32);
+        let a = p.choose(&dummy_state(), &[], &[true, true, true]);
+        assert_eq!(a, 1);
+    }
+
+    #[test]
+    fn fixed_falls_back_when_masked() {
+        let mut p = FixedRankPolicy::new(vec![16, 32, 64], 32);
+        let a = p.choose(&dummy_state(), &[], &[true, false, true]);
+        assert!(a == 0 || a == 2);
+    }
+
+    #[test]
+    fn adaptive_svd_rank_tracks_spectrum() {
+        let mut p = AdaptiveSvdPolicy::new(vec![4, 8, 16, 32], 0.90);
+        // Sharply decaying spectrum → tiny rank.
+        let sharp: Vec<f64> = (0..32).map(|i| (0.3f64).powi(i)).collect();
+        let a_sharp = p.choose(&dummy_state(), &sharp, &[true; 4]);
+        assert_eq!(a_sharp, 0);
+        // Flat spectrum → max rank.
+        let flat = vec![1.0; 32];
+        let a_flat = p.choose(&dummy_state(), &flat, &[true; 4]);
+        assert_eq!(a_flat, 3);
+    }
+
+    #[test]
+    fn adaptive_rounds_up_not_down() {
+        let mut p = AdaptiveSvdPolicy::new(vec![4, 8, 16], 0.90);
+        // Spectrum needing rank 5 → grid 8 (round up), not 4.
+        let mut s = vec![1.0; 5];
+        s.extend(vec![1e-6; 11]);
+        let a = p.choose(&dummy_state(), &s, &[true; 3]);
+        assert_eq!(a, 1);
+    }
+
+    #[test]
+    fn random_respects_mask() {
+        let mut p = RandomRankPolicy::new(1);
+        for _ in 0..100 {
+            let a = p.choose(&dummy_state(), &[], &[false, true, false, true]);
+            assert!(a == 1 || a == 3);
+        }
+    }
+
+    #[test]
+    fn random_covers_open_actions() {
+        let mut p = RandomRankPolicy::new(2);
+        let mut seen = [false; 3];
+        for _ in 0..200 {
+            seen[p.choose(&dummy_state(), &[], &[true, true, true])] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

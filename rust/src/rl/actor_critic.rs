@@ -1,0 +1,93 @@
+//! Actor-critic pair for the Rust-side trainer: an MLP policy head
+//! (logits over the rank grid) and an MLP value head. The paper's
+//! transformer policy is the AOT/HLO variant in `policy::hlo_policy`;
+//! this MLP twin is what PPO/BC actually optimize online (the HLO policy
+//! is frozen at artifact-build time).
+
+use crate::linalg::Mat;
+use crate::nn::{Act, AdamW, Categorical, Mlp};
+use crate::util::Pcg32;
+
+/// Actor-critic with separate bodies (keeps the manual backprop simple
+/// and the value gradient from fighting the policy gradient).
+pub struct ActorCritic {
+    pub actor: Mlp,
+    pub critic: Mlp,
+    pub actor_opt: AdamW,
+    pub critic_opt: AdamW,
+    pub n_actions: usize,
+}
+
+impl ActorCritic {
+    pub fn new(state_dim: usize, hidden: usize, n_actions: usize, lr: f64, seed: u64) -> Self {
+        let mut rng = Pcg32::seeded(seed);
+        let actor = Mlp::new(&[state_dim, hidden, hidden, n_actions], Act::Tanh, &mut rng);
+        let critic = Mlp::new(&[state_dim, hidden, hidden, 1], Act::Tanh, &mut rng);
+        let actor_opt = AdamW::new(actor.n_params(), lr);
+        let critic_opt = AdamW::new(critic.n_params(), lr);
+        ActorCritic { actor, critic, actor_opt, critic_opt, n_actions }
+    }
+
+    /// Logits for a batch of states (inference).
+    pub fn logits(&self, states: &Mat) -> Mat {
+        self.actor.forward_inference(states)
+    }
+
+    /// Distribution over actions for one state with an optional safety mask.
+    pub fn distribution(&self, state: &[f64], mask: Option<&[bool]>) -> Categorical {
+        let s = Mat::from_vec(1, state.len(), state.to_vec());
+        let logits = self.actor.forward_inference(&s);
+        Categorical::from_logits(logits.row(0), mask)
+    }
+
+    /// State value V(s).
+    pub fn value(&self, state: &[f64]) -> f64 {
+        let s = Mat::from_vec(1, state.len(), state.to_vec());
+        self.critic.forward_inference(&s)[(0, 0)]
+    }
+
+    /// Batch of values.
+    pub fn values(&self, states: &Mat) -> Vec<f64> {
+        let v = self.critic.forward_inference(states);
+        (0..v.rows()).map(|i| v[(i, 0)]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let ac = ActorCritic::new(10, 32, 7, 1e-3, 1);
+        let state = vec![0.1; 10];
+        let d = ac.distribution(&state, None);
+        assert_eq!(d.n(), 7);
+        let v1 = ac.value(&state);
+        let v2 = ac.value(&state);
+        assert_eq!(v1, v2);
+    }
+
+    #[test]
+    fn mask_respected() {
+        let ac = ActorCritic::new(6, 16, 4, 1e-3, 2);
+        let mask = [true, false, true, false];
+        let d = ac.distribution(&[0.5; 6], Some(&mask));
+        assert_eq!(d.probs[1], 0.0);
+        assert_eq!(d.probs[3], 0.0);
+        assert!((d.probs[0] + d.probs[2] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_values_match_single() {
+        let ac = ActorCritic::new(4, 8, 3, 1e-3, 3);
+        let s1 = vec![1.0, -1.0, 0.5, 0.0];
+        let s2 = vec![0.0, 2.0, -0.5, 1.0];
+        let mut data = s1.clone();
+        data.extend_from_slice(&s2);
+        let batch = Mat::from_vec(2, 4, data);
+        let vs = ac.values(&batch);
+        assert!((vs[0] - ac.value(&s1)).abs() < 1e-12);
+        assert!((vs[1] - ac.value(&s2)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,150 @@
+//! Trajectory storage for PPO rollouts and behavior-cloning datasets.
+
+use crate::linalg::Mat;
+
+/// One recorded decision.
+#[derive(Debug, Clone)]
+pub struct Transition {
+    pub state: Vec<f64>,
+    pub action: usize,
+    pub log_prob: f64,
+    pub reward: f64,
+    pub value: f64,
+    pub done: bool,
+    pub mask: Vec<bool>,
+}
+
+/// Rollout buffer.
+#[derive(Debug, Clone, Default)]
+pub struct RolloutBuffer {
+    pub transitions: Vec<Transition>,
+}
+
+impl RolloutBuffer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, t: Transition) {
+        self.transitions.push(t);
+    }
+
+    pub fn len(&self) -> usize {
+        self.transitions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.transitions.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.transitions.clear();
+    }
+
+    pub fn rewards(&self) -> Vec<f64> {
+        self.transitions.iter().map(|t| t.reward).collect()
+    }
+
+    pub fn values(&self) -> Vec<f64> {
+        self.transitions.iter().map(|t| t.value).collect()
+    }
+
+    pub fn dones(&self) -> Vec<bool> {
+        self.transitions.iter().map(|t| t.done).collect()
+    }
+
+    /// Stack all states into a batch matrix (T × state_dim).
+    pub fn state_batch(&self) -> Mat {
+        assert!(!self.is_empty());
+        let dim = self.transitions[0].state.len();
+        let mut data = Vec::with_capacity(self.len() * dim);
+        for t in &self.transitions {
+            assert_eq!(t.state.len(), dim, "ragged states");
+            data.extend_from_slice(&t.state);
+        }
+        Mat::from_vec(self.len(), dim, data)
+    }
+
+    /// Mean episode reward (diagnostics; Fig 2 right panel).
+    pub fn mean_reward(&self) -> f64 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        self.rewards().iter().sum::<f64>() / self.len() as f64
+    }
+}
+
+/// Labelled state→action pairs for behavior cloning.
+#[derive(Debug, Clone, Default)]
+pub struct BcDataset {
+    pub states: Vec<Vec<f64>>,
+    pub actions: Vec<usize>,
+}
+
+impl BcDataset {
+    pub fn push(&mut self, state: Vec<f64>, action: usize) {
+        self.states.push(state);
+        self.actions.push(action);
+    }
+
+    pub fn len(&self) -> usize {
+        self.states.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.states.is_empty()
+    }
+
+    pub fn state_batch(&self, idx: &[usize]) -> Mat {
+        let dim = self.states[0].len();
+        let mut data = Vec::with_capacity(idx.len() * dim);
+        for &i in idx {
+            data.extend_from_slice(&self.states[i]);
+        }
+        Mat::from_vec(idx.len(), dim, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(reward: f64, done: bool) -> Transition {
+        Transition {
+            state: vec![1.0, 2.0, 3.0],
+            action: 1,
+            log_prob: -0.5,
+            reward,
+            value: 0.1,
+            done,
+            mask: vec![true, true],
+        }
+    }
+
+    #[test]
+    fn accumulates_and_batches() {
+        let mut buf = RolloutBuffer::new();
+        buf.push(t(1.0, false));
+        buf.push(t(2.0, true));
+        assert_eq!(buf.len(), 2);
+        let b = buf.state_batch();
+        assert_eq!(b.shape(), (2, 3));
+        assert_eq!(buf.rewards(), vec![1.0, 2.0]);
+        assert_eq!(buf.dones(), vec![false, true]);
+        assert!((buf.mean_reward() - 1.5).abs() < 1e-12);
+        buf.clear();
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn bc_dataset_batching() {
+        let mut ds = BcDataset::default();
+        ds.push(vec![0.0, 1.0], 3);
+        ds.push(vec![2.0, 3.0], 1);
+        ds.push(vec![4.0, 5.0], 0);
+        let b = ds.state_batch(&[2, 0]);
+        assert_eq!(b.shape(), (2, 2));
+        assert_eq!(b.row(0), &[4.0, 5.0]);
+        assert_eq!(b.row(1), &[0.0, 1.0]);
+    }
+}

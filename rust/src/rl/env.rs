@@ -1,0 +1,352 @@
+//! The rank-selection MDP (paper §4.1).
+//!
+//! One episode = one decision segment propagated through all layers of a
+//! transformer stack: at layer l the agent observes s_t, picks a rank
+//! from the discrete grid, the environment applies rank-r attention,
+//! scores fidelity vs the full-rank output, charges FLOPs and the
+//! perturbation penalty, and hands the (low-rank) activations to the
+//! next layer.
+
+use super::reward::{reward, RewardConfig, RewardInputs};
+use super::state::{featurize, ConvFeaturizer, RankState};
+use crate::attention::{attention_matrix, mhsa_full, mhsa_lowrank, project_heads, MhsaWeights};
+use crate::linalg::{top_k_svd, Mat};
+use crate::spectral::{assess_transition, TransitionAssessment, TrustRegion};
+use crate::util::Pcg32;
+
+/// Environment configuration.
+#[derive(Debug, Clone)]
+pub struct EnvConfig {
+    /// Discrete action grid of ranks (paper: 16…64).
+    pub rank_grid: Vec<usize>,
+    pub reward: RewardConfig,
+    /// Perturbation guardrail on/off (Table 2 "w/o Perturbation").
+    pub use_trust_region: bool,
+    /// ε₀ / λ for the trust region (Eq. 11).
+    pub epsilon0: f64,
+    pub lambda: f64,
+    pub seed: u64,
+}
+
+impl Default for EnvConfig {
+    fn default() -> Self {
+        EnvConfig {
+            rank_grid: vec![16, 24, 32, 40, 48, 56, 64],
+            reward: RewardConfig::default(),
+            use_trust_region: true,
+            epsilon0: 0.7,
+            lambda: 5e-5,
+            seed: 0x0D12,
+        }
+    }
+}
+
+impl EnvConfig {
+    /// Paper grid r ∈ {16…64}; the action space is the grid index.
+    pub fn n_actions(&self) -> usize {
+        self.rank_grid.len()
+    }
+
+    pub fn r_max(&self) -> usize {
+        *self.rank_grid.iter().max().unwrap()
+    }
+
+    pub fn r_min(&self) -> usize {
+        *self.rank_grid.iter().min().unwrap()
+    }
+}
+
+/// Per-step diagnostics (consumed by metrics, Fig 3 and Fig 5).
+#[derive(Debug, Clone, Copy)]
+pub struct StepInfo {
+    pub layer: usize,
+    pub rank: usize,
+    pub prev_rank: usize,
+    pub similarity: f64,
+    pub perturbation: f64,
+    pub masked_by_safety: bool,
+    pub reward: f64,
+}
+
+/// Result of `step`.
+pub struct StepResult {
+    /// Next state (None when the episode is done).
+    pub state: Option<RankState>,
+    pub reward: f64,
+    pub done: bool,
+    pub info: StepInfo,
+}
+
+/// The MDP over a transformer stack.
+#[derive(Clone)]
+pub struct RankEnv {
+    pub layers: Vec<MhsaWeights>,
+    pub cfg: EnvConfig,
+    conv: ConvFeaturizer,
+    pub trust: TrustRegion,
+    // --- per-episode state ---
+    x: Mat,
+    layer_idx: usize,
+    prev_rank: usize,
+    spectrum: Vec<f64>,
+    causal: bool,
+    rng: Pcg32,
+    /// (from_idx, to_idx) transition counts over the rank grid (Fig 5).
+    pub transition_counts: Vec<Vec<u64>>,
+}
+
+impl RankEnv {
+    pub fn new(layers: Vec<MhsaWeights>, cfg: EnvConfig) -> Self {
+        let n_act = cfg.n_actions();
+        let trust = TrustRegion::new(cfg.epsilon0, cfg.lambda);
+        RankEnv {
+            conv: ConvFeaturizer::new(cfg.seed ^ 0xC0117),
+            trust,
+            rng: Pcg32::seeded(cfg.seed),
+            layers,
+            cfg,
+            x: Mat::zeros(0, 0),
+            layer_idx: 0,
+            prev_rank: 0,
+            spectrum: Vec::new(),
+            causal: true,
+            transition_counts: vec![vec![0; n_act]; n_act],
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Snapshot the environment mid-episode (used by the greedy oracle to
+    /// probe counterfactual actions without disturbing the real episode).
+    pub fn fork(&self) -> RankEnv {
+        self.clone()
+    }
+
+    /// Begin an episode on a new input segment; returns s_0.
+    pub fn reset(&mut self, x: Mat) -> RankState {
+        self.x = x;
+        self.layer_idx = 0;
+        // r_{-1}: middle of the grid.
+        self.prev_rank = self.cfg.rank_grid[self.cfg.rank_grid.len() / 2];
+        self.refresh_spectrum();
+        self.observe()
+    }
+
+    /// Spectrum of the current layer's head-0 attention matrix (the
+    /// featurization probe; rewards use the full multi-head outputs).
+    fn refresh_spectrum(&mut self) {
+        let w = &self.layers[self.layer_idx];
+        let heads = project_heads(&self.x, w, self.causal);
+        let a = attention_matrix(&heads[0]);
+        let k = self.cfg.r_max().min(a.rows());
+        let d = top_k_svd(&a, k, self.rng.next_u64());
+        self.spectrum = d.s;
+    }
+
+    fn observe(&self) -> RankState {
+        featurize(
+            &self.conv,
+            &self.x,
+            &self.layers[self.layer_idx],
+            &self.spectrum,
+            self.prev_rank,
+            self.cfg.r_max(),
+            self.layer_idx,
+            self.layers.len(),
+        )
+    }
+
+    /// Safety mask over the action grid for the *current* state (§4.3.1).
+    /// `true` = admissible. Always leaves at least one action open.
+    pub fn action_mask(&self) -> Vec<bool> {
+        if !self.cfg.use_trust_region {
+            return vec![true; self.cfg.n_actions()];
+        }
+        let assessments: Vec<TransitionAssessment> = self
+            .cfg
+            .rank_grid
+            .iter()
+            .map(|&r| assess_transition(&self.spectrum, self.prev_rank, r, 1.0))
+            .collect();
+        let mut mask = self.trust.mask_actions(self.prev_rank, &assessments);
+        if !mask.iter().any(|&b| b) {
+            // Guarantee progress: closest-to-previous rank stays open.
+            let closest = self
+                .cfg
+                .rank_grid
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, &r)| r.abs_diff(self.prev_rank))
+                .map(|(i, _)| i)
+                .unwrap();
+            mask[closest] = true;
+        }
+        mask
+    }
+
+    /// Apply the chosen action (index into the rank grid).
+    pub fn step(&mut self, action_idx: usize) -> StepResult {
+        assert!(action_idx < self.cfg.n_actions(), "action out of range");
+        let rank = self.cfg.rank_grid[action_idx];
+        let w = self.layers[self.layer_idx].clone();
+        let n = self.x.rows();
+        let head_dim = w.head_dim();
+
+        // Perturbation of the executed transition (Eq. 4 on the probe
+        // spectrum) — also the γ term of Eq. 13.
+        let assessment = assess_transition(&self.spectrum, self.prev_rank, rank, 1.0);
+        let masked = self.cfg.use_trust_region && !self.trust.admits(&assessment);
+        self.trust.tick();
+
+        // Fidelity: cosine similarity of layer outputs (full vs rank-r).
+        let seed = self.rng.next_u64();
+        let y_full = mhsa_full(&self.x, &w, self.causal);
+        let ranks = vec![rank.min(n); w.n_heads];
+        let y_lr = mhsa_lowrank(&self.x, &w, &ranks, self.causal, seed);
+        let similarity = y_full.cosine_sim(&y_lr);
+
+        let r = reward(
+            &self.cfg.reward,
+            &RewardInputs {
+                similarity,
+                n,
+                d: head_dim,
+                rank,
+                perturbation: assessment.delta_a_fro,
+            },
+        );
+        // Safety-masked actions that still got executed (e.g. forced by a
+        // baseline policy) are charged an extra penalty — the environment
+        // view of "catastrophic divergence".
+        let r = if masked { r - 0.5 } else { r };
+
+        // Record the transition for Fig 5.
+        if let (Some(fi), Some(ti)) = (
+            self.cfg.rank_grid.iter().position(|&g| g == self.prev_rank),
+            Some(action_idx),
+        ) {
+            self.transition_counts[fi][ti] += 1;
+        }
+
+        let info = StepInfo {
+            layer: self.layer_idx,
+            rank,
+            prev_rank: self.prev_rank,
+            similarity,
+            perturbation: assessment.delta_a_fro,
+            masked_by_safety: masked,
+            reward: r,
+        };
+
+        // Propagate the low-rank activations to the next layer (residual).
+        let mut next_x = self.x.clone();
+        next_x.add_inplace(&y_lr);
+        self.x = next_x;
+        self.prev_rank = rank;
+        self.layer_idx += 1;
+        let done = self.layer_idx >= self.layers.len();
+        let state = if done {
+            None
+        } else {
+            self.refresh_spectrum();
+            Some(self.observe())
+        };
+        StepResult { state, reward: r, done, info }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_env(n_layers: usize, use_trust: bool) -> RankEnv {
+        let mut rng = Pcg32::seeded(3);
+        let layers: Vec<MhsaWeights> =
+            (0..n_layers).map(|_| MhsaWeights::init(16, 2, &mut rng)).collect();
+        let cfg = EnvConfig {
+            rank_grid: vec![4, 8, 12, 16],
+            use_trust_region: use_trust,
+            ..Default::default()
+        };
+        RankEnv::new(layers, cfg)
+    }
+
+    fn input(n: usize) -> Mat {
+        let mut rng = Pcg32::seeded(11);
+        Mat::randn(n, 16, 1.0, &mut rng)
+    }
+
+    #[test]
+    fn episode_runs_layer_count_steps() {
+        let mut env = small_env(3, true);
+        let mut s = env.reset(input(20));
+        let mut steps = 0;
+        loop {
+            assert!(s.dim() > 0);
+            let res = env.step(1);
+            steps += 1;
+            if res.done {
+                break;
+            }
+            s = res.state.unwrap();
+        }
+        assert_eq!(steps, 3);
+    }
+
+    #[test]
+    fn rewards_are_finite_and_ordered_by_fidelity() {
+        let mut env = small_env(1, false);
+        env.reset(input(24));
+        let res_hi = env.step(3); // rank 16 = full for head_dim 8? n=24 so rank 16 < 24
+        let mut env2 = small_env(1, false);
+        env2.reset(input(24));
+        let res_lo = env2.step(0); // rank 4
+        assert!(res_hi.info.similarity >= res_lo.info.similarity - 0.05);
+        assert!(res_hi.reward.is_finite() && res_lo.reward.is_finite());
+    }
+
+    #[test]
+    fn action_mask_always_has_open_action() {
+        let mut env = small_env(2, true);
+        env.trust.epsilon_min = 0.0;
+        env.trust.epsilon0 = 1e-12; // reject everything
+        env.reset(input(16));
+        let mask = env.action_mask();
+        assert!(mask.iter().any(|&b| b));
+    }
+
+    #[test]
+    fn transition_counts_accumulate() {
+        let mut env = small_env(4, false);
+        env.reset(input(16));
+        for _ in 0..4 {
+            env.step(2);
+        }
+        let total: u64 = env.transition_counts.iter().flatten().sum();
+        assert_eq!(total, 4);
+    }
+
+    #[test]
+    fn trust_region_masks_big_jumps_late() {
+        let mut env = small_env(1, true);
+        env.trust.epsilon0 = 1e-6;
+        env.trust.epsilon_min = 1e-9;
+        env.reset(input(32));
+        let mask = env.action_mask();
+        // prev_rank is grid midpoint (12); far moves should be masked with
+        // a tiny epsilon, the self-move admitted.
+        let self_idx = env.cfg.rank_grid.iter().position(|&r| r == 12).unwrap();
+        assert!(mask[self_idx]);
+        assert!(!mask[0], "rank 4 jump should be masked: {mask:?}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_action_panics() {
+        let mut env = small_env(1, false);
+        env.reset(input(8));
+        env.step(99);
+    }
+}

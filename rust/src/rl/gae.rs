@@ -1,0 +1,111 @@
+//! Generalized Advantage Estimation (Schulman et al. 2016) — the
+//! advantage estimator under PPO.
+
+/// Compute GAE advantages and discounted returns.
+///
+/// * `rewards[t]`, `values[t]` for t = 0..T, plus `last_value` = V(s_T)
+///   (0 when the episode terminated).
+/// * `dones[t]` = episode ended after step t (mask bootstrapping).
+pub fn gae(
+    rewards: &[f64],
+    values: &[f64],
+    dones: &[bool],
+    last_value: f64,
+    gamma: f64,
+    lambda: f64,
+) -> (Vec<f64>, Vec<f64>) {
+    let t_max = rewards.len();
+    assert_eq!(values.len(), t_max);
+    assert_eq!(dones.len(), t_max);
+    let mut advantages = vec![0.0; t_max];
+    let mut last_gae = 0.0;
+    for t in (0..t_max).rev() {
+        let next_value = if t + 1 < t_max { values[t + 1] } else { last_value };
+        let nonterminal = if dones[t] { 0.0 } else { 1.0 };
+        let delta = rewards[t] + gamma * next_value * nonterminal - values[t];
+        last_gae = delta + gamma * lambda * nonterminal * last_gae;
+        advantages[t] = last_gae;
+    }
+    let returns: Vec<f64> = advantages.iter().zip(values.iter()).map(|(a, v)| a + v).collect();
+    (advantages, returns)
+}
+
+/// Normalize advantages to zero mean / unit std (PPO standard practice).
+pub fn normalize(advantages: &mut [f64]) {
+    let n = advantages.len();
+    if n < 2 {
+        return;
+    }
+    let mean = advantages.iter().sum::<f64>() / n as f64;
+    let var = advantages.iter().map(|a| (a - mean) * (a - mean)).sum::<f64>() / n as f64;
+    let std = var.sqrt().max(1e-8);
+    for a in advantages.iter_mut() {
+        *a = (*a - mean) / std;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_step_terminal() {
+        // A = r - V for a terminal step.
+        let (adv, ret) = gae(&[1.0], &[0.3], &[true], 99.0, 0.99, 0.95);
+        assert!((adv[0] - 0.7).abs() < 1e-12);
+        assert!((ret[0] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bootstraps_from_last_value() {
+        let (adv, _) = gae(&[0.0], &[0.0], &[false], 1.0, 0.5, 1.0);
+        // delta = 0 + 0.5·1 − 0 = 0.5
+        assert!((adv[0] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lambda_zero_is_td_error() {
+        let rewards = [1.0, 2.0, 3.0];
+        let values = [0.5, 0.5, 0.5];
+        let dones = [false, false, true];
+        let (adv, _) = gae(&rewards, &values, &dones, 0.0, 0.9, 0.0);
+        // Each advantage = one-step TD error.
+        assert!((adv[0] - (1.0 + 0.9 * 0.5 - 0.5)).abs() < 1e-12);
+        assert!((adv[1] - (2.0 + 0.9 * 0.5 - 0.5)).abs() < 1e-12);
+        assert!((adv[2] - (3.0 - 0.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lambda_one_is_monte_carlo() {
+        // With λ=1 and V=0, advantage = discounted return.
+        let rewards = [1.0, 1.0, 1.0];
+        let values = [0.0, 0.0, 0.0];
+        let dones = [false, false, true];
+        let g = 0.9;
+        let (adv, ret) = gae(&rewards, &values, &dones, 0.0, g, 1.0);
+        let want0 = 1.0 + g * (1.0 + g);
+        assert!((adv[0] - want0).abs() < 1e-12);
+        assert_eq!(adv, ret);
+    }
+
+    #[test]
+    fn episode_boundary_stops_bootstrap() {
+        // Two episodes of length 1 concatenated; the second's reward must
+        // not leak into the first's advantage.
+        let rewards = [1.0, 100.0];
+        let values = [0.0, 0.0];
+        let dones = [true, true];
+        let (adv, _) = gae(&rewards, &values, &dones, 0.0, 0.99, 0.95);
+        assert!((adv[0] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalize_zero_mean_unit_std() {
+        let mut a = vec![1.0, 2.0, 3.0, 4.0];
+        normalize(&mut a);
+        let mean: f64 = a.iter().sum::<f64>() / 4.0;
+        let var: f64 = a.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / 4.0;
+        assert!(mean.abs() < 1e-12);
+        assert!((var - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,26 @@
+//! Reinforcement-learning stack for dynamic rank selection (paper §4):
+//! MDP environment, state featurization (Eq. 6), reward (Eq. 8/13),
+//! GAE + PPO with action masking, the greedy oracle, behavior cloning
+//! and the hybrid trainer.
+
+pub mod actor_critic;
+pub mod bc;
+pub mod buffer;
+pub mod env;
+pub mod gae;
+pub mod oracle;
+pub mod ppo;
+pub mod reward;
+pub mod state;
+pub mod trainer;
+
+pub use actor_critic::ActorCritic;
+pub use bc::{behavior_clone, BcConfig, BcStats};
+pub use buffer::{BcDataset, RolloutBuffer, Transition};
+pub use env::{EnvConfig, RankEnv, StepInfo, StepResult};
+pub use gae::{gae, normalize};
+pub use oracle::greedy_episode;
+pub use ppo::{ppo_update, PpoConfig, PpoStats};
+pub use reward::{reward, RewardConfig, RewardInputs};
+pub use state::{featurize, state_dim, ConvFeaturizer, RankState};
+pub use trainer::{train_hybrid, TrainedAgent, TrainPoint, TrainerConfig};

@@ -1,0 +1,125 @@
+//! The DR-RL reward (paper Eq. 8 and its stability-shaped form Eq. 13):
+//!
+//!   R_t = α·sim(A_full, A_r) − β·FLOPs(r_t) − γ·‖ΔA‖_F
+//!
+//! `sim` is cosine similarity between full-rank and rank-r attention,
+//! FLOPs(r) is the normalized compute cost, and the γ term penalizes
+//! large perturbations from the previous rank (ablatable for Table 2).
+
+use crate::flops::normalized_flops;
+
+/// Reward coefficients. Paper defaults favour fidelity (α) with a gentle
+/// compute pressure (β) and a stability term (γ).
+#[derive(Debug, Clone, Copy)]
+pub struct RewardConfig {
+    pub alpha: f64,
+    pub beta: f64,
+    pub gamma: f64,
+}
+
+impl Default for RewardConfig {
+    fn default() -> Self {
+        // Calibrated so a good policy earns ~[0.3, 0.9] per step:
+        // sim ∈ [0.9, 1], normalized FLOPs ∈ [0.05, 1], ‖ΔA‖ ∈ [0, ~0.5].
+        RewardConfig { alpha: 1.0, beta: 0.5, gamma: 0.2 }
+    }
+}
+
+impl RewardConfig {
+    /// Ablation: no reward shaping (β = 0), Table 2 row 4.
+    pub fn without_efficiency_penalty(self) -> Self {
+        RewardConfig { beta: 0.0, ..self }
+    }
+
+    /// Ablation: no stability term (γ = 0) — used with the disabled trust
+    /// region for the "w/o Perturbation" row of Table 2.
+    pub fn without_stability(self) -> Self {
+        RewardConfig { gamma: 0.0, ..self }
+    }
+
+    /// "Eco mode" reweighting from the paper's §6.2 (edge deployment):
+    /// prioritizes the energy/compute axis.
+    pub fn eco_mode(self) -> Self {
+        RewardConfig { alpha: 0.5, beta: 2.0, gamma: self.gamma }
+    }
+}
+
+/// Inputs measured by the environment for one decision.
+#[derive(Debug, Clone, Copy)]
+pub struct RewardInputs {
+    /// cosine sim(A_full, A_r) or sim(Y_full, Y_r) — fidelity term.
+    pub similarity: f64,
+    /// Sequence length / head dim / selected rank for the FLOPs term.
+    pub n: usize,
+    pub d: usize,
+    pub rank: usize,
+    /// ‖ΔA‖_F of the executed transition.
+    pub perturbation: f64,
+}
+
+/// Compute R_t (Eq. 13). With `cfg.gamma == 0` this is exactly Eq. 8.
+pub fn reward(cfg: &RewardConfig, inp: &RewardInputs) -> f64 {
+    cfg.alpha * inp.similarity
+        - cfg.beta * normalized_flops(inp.n, inp.d, inp.rank)
+        - cfg.gamma * inp.perturbation
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base_inputs() -> RewardInputs {
+        RewardInputs { similarity: 0.95, n: 256, d: 32, rank: 32, perturbation: 0.1 }
+    }
+
+    #[test]
+    fn higher_similarity_higher_reward() {
+        let cfg = RewardConfig::default();
+        let lo = reward(&cfg, &RewardInputs { similarity: 0.8, ..base_inputs() });
+        let hi = reward(&cfg, &RewardInputs { similarity: 0.99, ..base_inputs() });
+        assert!(hi > lo);
+    }
+
+    #[test]
+    fn higher_rank_costs_more() {
+        let cfg = RewardConfig::default();
+        let cheap = reward(&cfg, &RewardInputs { rank: 8, ..base_inputs() });
+        let pricey = reward(&cfg, &RewardInputs { rank: 128, ..base_inputs() });
+        assert!(cheap > pricey);
+    }
+
+    #[test]
+    fn perturbation_penalized() {
+        let cfg = RewardConfig::default();
+        let stable = reward(&cfg, &RewardInputs { perturbation: 0.0, ..base_inputs() });
+        let jumpy = reward(&cfg, &RewardInputs { perturbation: 1.0, ..base_inputs() });
+        assert!(stable > jumpy);
+    }
+
+    #[test]
+    fn gamma_zero_recovers_eq8() {
+        let cfg = RewardConfig::default().without_stability();
+        let a = reward(&cfg, &RewardInputs { perturbation: 0.0, ..base_inputs() });
+        let b = reward(&cfg, &RewardInputs { perturbation: 5.0, ..base_inputs() });
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn beta_zero_ignores_rank_cost() {
+        let cfg = RewardConfig::default().without_efficiency_penalty();
+        let a = reward(&cfg, &RewardInputs { rank: 8, ..base_inputs() });
+        let b = reward(&cfg, &RewardInputs { rank: 256, ..base_inputs() });
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn eco_mode_prefers_lower_rank_harder() {
+        let std_cfg = RewardConfig::default();
+        let eco = RewardConfig::default().eco_mode();
+        let delta_std = reward(&std_cfg, &RewardInputs { rank: 8, ..base_inputs() })
+            - reward(&std_cfg, &RewardInputs { rank: 64, ..base_inputs() });
+        let delta_eco = reward(&eco, &RewardInputs { rank: 8, ..base_inputs() })
+            - reward(&eco, &RewardInputs { rank: 64, ..base_inputs() });
+        assert!(delta_eco > delta_std);
+    }
+}

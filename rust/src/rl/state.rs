@@ -1,0 +1,210 @@
+//! RL state featurization (paper Eq. 6 + §4.4).
+//!
+//! s_t = [h_t ⊕ w_t ⊕ r_{t−1}] where
+//!   * h_t — sequence-dynamics features from a lightweight 1-D conv over
+//!     the input embeddings,
+//!   * w_t — layer weight statistics (mean / variance / spectral norm of
+//!     W_Q, W_K, W_V),
+//!   * r_{t−1} — previous rank (normalized),
+//! augmented with the Normalized-Energy-Ratio probes of the current
+//! attention spectrum (§4.4) and the layer index.
+
+use crate::attention::MhsaWeights;
+use crate::linalg::Mat;
+use crate::spectral::spectrum_features;
+use crate::util::Pcg32;
+
+/// Number of 1-D conv channels in the sequence-dynamics extractor.
+pub const CONV_CHANNELS: usize = 4;
+/// Conv kernel width.
+pub const CONV_WIDTH: usize = 5;
+/// NER probe ranks (normalized against r_max at featurize time).
+pub const NER_PROBES: [usize; 3] = [8, 16, 32];
+
+/// Fixed random 1-D convolution bank ("lightweight 1D-Convolutional
+/// layer", Eq. 6). Weights are frozen at construction — the extractor is
+/// a feature map, not a trained module (the policy learns on top).
+#[derive(Debug, Clone)]
+pub struct ConvFeaturizer {
+    /// [channel][tap] kernels applied over the per-token embedding norm
+    /// and mean signals.
+    kernels: Vec<Vec<f64>>,
+}
+
+impl ConvFeaturizer {
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Pcg32::seeded(seed);
+        let kernels = (0..CONV_CHANNELS)
+            .map(|_| (0..CONV_WIDTH).map(|_| rng.normal() / (CONV_WIDTH as f64).sqrt()).collect())
+            .collect();
+        ConvFeaturizer { kernels }
+    }
+
+    /// h_t: per-channel mean + max of conv responses over two per-token
+    /// signals (embedding L2 norm, embedding mean) → 4·channels values.
+    pub fn features(&self, x: &Mat) -> Vec<f64> {
+        let n = x.rows();
+        let norms: Vec<f64> = (0..n)
+            .map(|i| x.row(i).iter().map(|v| v * v).sum::<f64>().sqrt())
+            .collect();
+        let means: Vec<f64> =
+            (0..n).map(|i| x.row(i).iter().sum::<f64>() / x.cols() as f64).collect();
+        let mut out = Vec::with_capacity(4 * CONV_CHANNELS);
+        for signal in [&norms, &means] {
+            for k in &self.kernels {
+                let resp = conv1d_same(signal, k);
+                let mean = resp.iter().sum::<f64>() / resp.len().max(1) as f64;
+                let mx = resp.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+                out.push(mean);
+                out.push(if mx.is_finite() { mx } else { 0.0 });
+            }
+        }
+        out
+    }
+}
+
+fn conv1d_same(signal: &[f64], kernel: &[f64]) -> Vec<f64> {
+    let n = signal.len();
+    let kw = kernel.len();
+    let half = kw / 2;
+    (0..n)
+        .map(|i| {
+            let mut acc = 0.0;
+            for (t, &kv) in kernel.iter().enumerate() {
+                let idx = i as isize + t as isize - half as isize;
+                if idx >= 0 && (idx as usize) < n {
+                    acc += kv * signal[idx as usize];
+                }
+            }
+            acc
+        })
+        .collect()
+}
+
+/// Z-score a feature group then squash with tanh (bounded, scale-free).
+pub fn normalize_group(xs: &[f64]) -> Vec<f64> {
+    let n = xs.len().max(1) as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    let std = var.sqrt().max(1e-9);
+    xs.iter().map(|x| ((x - mean) / std).tanh()).collect()
+}
+
+/// Full state vector assembled for one (layer, segment) decision.
+#[derive(Debug, Clone)]
+pub struct RankState {
+    pub features: Vec<f64>,
+}
+
+impl RankState {
+    pub fn dim(&self) -> usize {
+        self.features.len()
+    }
+
+    pub fn as_mat(&self) -> Mat {
+        Mat::from_vec(1, self.features.len(), self.features.clone())
+    }
+}
+
+/// Dimension of the assembled state vector (must match the policy input).
+pub fn state_dim() -> usize {
+    // conv (4·CONV_CHANNELS) + weight stats (9) + spectrum (probes+2) +
+    // prev rank (1) + layer frac (1) + seq-len log (1)
+    4 * CONV_CHANNELS + 9 + (NER_PROBES.len() + 2) + 3
+}
+
+/// Assemble s_t (Eq. 6 + §4.4).
+///
+/// * `x` — layer input embeddings (n × d_model)
+/// * `w` — the layer's attention weights (for w_t statistics)
+/// * `spectrum` — singular values of the current attention matrix
+/// * `prev_rank` — r_{t−1}
+/// * `layer_idx` / `n_layers` — positional context
+pub fn featurize(
+    conv: &ConvFeaturizer,
+    x: &Mat,
+    w: &MhsaWeights,
+    spectrum: &[f64],
+    prev_rank: usize,
+    r_max: usize,
+    layer_idx: usize,
+    n_layers: usize,
+) -> RankState {
+    // Conv responses scale with input magnitude; standardize within the
+    // feature group then squash so the policy (trained on a synthetic
+    // state distribution — python/compile/train_policy.py mirrors this
+    // transform) never sees out-of-distribution magnitudes.
+    let mut f = normalize_group(&conv.features(x));
+    // Weight statistics: bounded transforms of mean/variance/spectral norm.
+    let raw = w.stats();
+    for c in raw.chunks(3) {
+        f.push(c[0].tanh());
+        f.push((c[1] * 10.0).tanh());
+        f.push((c[2] / 4.0).tanh());
+    }
+    f.extend(spectrum_features(spectrum, &NER_PROBES));
+    f.push(prev_rank as f64 / r_max.max(1) as f64);
+    f.push(layer_idx as f64 / n_layers.max(1) as f64);
+    f.push((x.rows() as f64).ln());
+    debug_assert_eq!(f.len(), state_dim());
+    RankState { features: f }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (ConvFeaturizer, Mat, MhsaWeights, Vec<f64>) {
+        let mut rng = Pcg32::seeded(1);
+        let conv = ConvFeaturizer::new(7);
+        let x = Mat::randn(24, 16, 1.0, &mut rng);
+        let w = MhsaWeights::init(16, 4, &mut rng);
+        let spectrum: Vec<f64> = (0..24).map(|i| 3.0 * (0.8f64).powi(i)).collect();
+        (conv, x, w, spectrum)
+    }
+
+    #[test]
+    fn state_has_declared_dim() {
+        let (conv, x, w, s) = setup();
+        let st = featurize(&conv, &x, &w, &s, 16, 64, 2, 4);
+        assert_eq!(st.dim(), state_dim());
+        assert!(st.features.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn conv_features_deterministic() {
+        let (conv, x, _, _) = setup();
+        assert_eq!(conv.features(&x), conv.features(&x));
+        let conv2 = ConvFeaturizer::new(7);
+        assert_eq!(conv.features(&x), conv2.features(&x));
+    }
+
+    #[test]
+    fn different_inputs_different_features() {
+        let (conv, x, _, _) = setup();
+        let mut rng = Pcg32::seeded(99);
+        let y = Mat::randn(24, 16, 2.0, &mut rng);
+        assert_ne!(conv.features(&x), conv.features(&y));
+    }
+
+    #[test]
+    fn prev_rank_encoded_normalized() {
+        let (conv, x, w, s) = setup();
+        let lo = featurize(&conv, &x, &w, &s, 16, 64, 0, 4);
+        let hi = featurize(&conv, &x, &w, &s, 64, 64, 0, 4);
+        let idx = state_dim() - 3;
+        assert!((lo.features[idx] - 0.25).abs() < 1e-12);
+        assert!((hi.features[idx] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn conv1d_same_length_and_values() {
+        let sig = [1.0, 2.0, 3.0];
+        let k = [0.0, 1.0, 0.0]; // identity kernel (centered)
+        let r = conv1d_same(&sig, &k);
+        assert_eq!(r, vec![1.0, 2.0, 3.0]);
+        let k2 = [1.0, 0.0, 0.0]; // shift: r[i] = sig[i-1]
+        let r2 = conv1d_same(&sig, &k2);
+        assert_eq!(r2, vec![0.0, 1.0, 2.0]);
+    }
+}

@@ -1,0 +1,239 @@
+//! The device thread: sole owner of the PJRT client, compiled
+//! executables and all `Literal`s (none of which are `Send`).
+//!
+//! Production pattern (mirrors vLLM's single device-worker): callers
+//! hold a cheap `DeviceHandle` (Clone + Send) and issue synchronous
+//! `execute` RPCs over an mpsc channel; the device thread compiles
+//! artifacts lazily and keeps them cached for the process lifetime.
+
+use super::manifest::Manifest;
+use super::tensor::HostTensor;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Mutex, OnceLock};
+
+enum Cmd {
+    Execute {
+        artifact: String,
+        inputs: Vec<HostTensor>,
+        reply: Sender<Result<Vec<HostTensor>>>,
+    },
+    /// Preload (compile) an artifact without running it.
+    Warm { artifact: String, reply: Sender<Result<()>> },
+    Stats { reply: Sender<BTreeMap<String, u64>> },
+}
+
+/// Cloneable, Send handle to the device thread.
+#[derive(Clone)]
+pub struct DeviceHandle {
+    tx: Sender<Cmd>,
+}
+
+// Sender is Send+Sync when the message type is Send; Cmd is Send.
+unsafe impl Sync for DeviceHandle {}
+
+impl DeviceHandle {
+    /// Spawn a device thread serving artifacts from `dir`.
+    pub fn spawn(dir: &std::path::Path) -> Result<DeviceHandle> {
+        let manifest = Manifest::load(dir)?;
+        let (tx, rx) = channel::<Cmd>();
+        std::thread::Builder::new()
+            .name("drrl-device".into())
+            .spawn(move || device_main(manifest, rx))
+            .context("spawning device thread")?;
+        Ok(DeviceHandle { tx })
+    }
+
+    /// Global handle over the default artifact dir (lazy).
+    pub fn global() -> Result<&'static DeviceHandle> {
+        static HANDLE: OnceLock<std::result::Result<DeviceHandle, String>> = OnceLock::new();
+        static INIT: Mutex<()> = Mutex::new(());
+        let _g = INIT.lock().unwrap();
+        let r = HANDLE.get_or_init(|| {
+            DeviceHandle::spawn(&Manifest::default_dir()).map_err(|e| format!("{e:#}"))
+        });
+        r.as_ref().map_err(|e| anyhow!("device init failed: {e}"))
+    }
+
+    /// Synchronous execute RPC.
+    pub fn execute(&self, artifact: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Cmd::Execute { artifact: artifact.to_string(), inputs, reply })
+            .map_err(|_| anyhow!("device thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("device thread dropped reply"))?
+    }
+
+    /// Compile an artifact ahead of first use.
+    pub fn warm(&self, artifact: &str) -> Result<()> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Cmd::Warm { artifact: artifact.to_string(), reply })
+            .map_err(|_| anyhow!("device thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("device thread dropped reply"))?
+    }
+
+    /// Per-artifact execute counts.
+    pub fn stats(&self) -> Result<BTreeMap<String, u64>> {
+        let (reply, rx) = channel();
+        self.tx.send(Cmd::Stats { reply }).map_err(|_| anyhow!("device thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("device thread dropped reply"))
+    }
+}
+
+struct LoadedExe {
+    exe: xla::PjRtLoadedExecutable,
+    calls: u64,
+}
+
+fn device_main(manifest: Manifest, rx: std::sync::mpsc::Receiver<Cmd>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("FATAL: PJRT CPU client: {e}");
+            // Drain commands with errors so callers fail fast.
+            while let Ok(cmd) = rx.recv() {
+                match cmd {
+                    Cmd::Execute { reply, .. } => {
+                        let _ = reply.send(Err(anyhow!("PJRT client unavailable")));
+                    }
+                    Cmd::Warm { reply, .. } => {
+                        let _ = reply.send(Err(anyhow!("PJRT client unavailable")));
+                    }
+                    Cmd::Stats { reply } => {
+                        let _ = reply.send(BTreeMap::new());
+                    }
+                }
+            }
+            return;
+        }
+    };
+    let mut cache: BTreeMap<String, LoadedExe> = BTreeMap::new();
+
+    let load = |client: &xla::PjRtClient,
+                cache: &mut BTreeMap<String, LoadedExe>,
+                manifest: &Manifest,
+                name: &str|
+     -> Result<()> {
+        if cache.contains_key(name) {
+            return Ok(());
+        }
+        let path = manifest.artifact_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        cache.insert(name.to_string(), LoadedExe { exe, calls: 0 });
+        Ok(())
+    };
+
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::Warm { artifact, reply } => {
+                let _ = reply.send(load(&client, &mut cache, &manifest, &artifact));
+            }
+            Cmd::Stats { reply } => {
+                let _ =
+                    reply.send(cache.iter().map(|(k, v)| (k.clone(), v.calls)).collect());
+            }
+            Cmd::Execute { artifact, inputs, reply } => {
+                let result = (|| -> Result<Vec<HostTensor>> {
+                    load(&client, &mut cache, &manifest, &artifact)?;
+                    let entry = cache.get_mut(&artifact).unwrap();
+                    entry.calls += 1;
+                    let lits: Vec<xla::Literal> =
+                        inputs.iter().map(to_literal).collect::<Result<_>>()?;
+                    let bufs = entry.exe.execute::<xla::Literal>(&lits)?;
+                    let out = bufs[0][0].to_literal_sync()?;
+                    let parts = out.to_tuple()?;
+                    parts.iter().map(from_literal).collect()
+                })();
+                let _ = reply.send(result);
+            }
+        }
+    }
+}
+
+fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
+    match t {
+        HostTensor::F32 { data, dims } => Ok(xla::Literal::vec1(data).reshape(dims)?),
+        HostTensor::I32 { data, dims } => Ok(xla::Literal::vec1(data).reshape(dims)?),
+    }
+}
+
+fn from_literal(l: &xla::Literal) -> Result<HostTensor> {
+    let shape = l.array_shape()?;
+    let dims = shape.dims().to_vec();
+    match shape.ty() {
+        xla::ElementType::F32 => Ok(HostTensor::F32 { data: l.to_vec::<f32>()?, dims }),
+        xla::ElementType::S32 => Ok(HostTensor::I32 { data: l.to_vec::<i32>()?, dims }),
+        other => {
+            // Convert anything else (f64/bf16/…) through F32.
+            let conv = l.convert(xla::PrimitiveType::F32)?;
+            let _ = other;
+            Ok(HostTensor::F32 { data: conv.to_vec::<f32>()?, dims })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn handle() -> Option<&'static DeviceHandle> {
+        if !Manifest::default_dir().join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        DeviceHandle::global().ok()
+    }
+
+    #[test]
+    fn executes_full_attn_artifact() {
+        let Some(h) = handle() else { return };
+        let m = Manifest::load(&Manifest::default_dir()).unwrap();
+        let (n, d) = (m.kernel.seq_len, m.kernel.head_dim);
+        let q: Vec<f32> = (0..n * d).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect();
+        let t = |v: &[f32]| HostTensor::f32(v.to_vec(), &[n as i64, d as i64]);
+        let out = h.execute("full_attn", vec![t(&q), t(&q), t(&q)]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].dims(), &[n as i64, d as i64]);
+        assert!(out[0].as_f32().unwrap().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn stats_count_executions() {
+        let Some(h) = handle() else { return };
+        let before = h.stats().unwrap().get("power_iter").copied().unwrap_or(0);
+        let m = Manifest::load(&Manifest::default_dir()).unwrap();
+        let n = m.kernel.seq_len;
+        let mat: Vec<f32> = (0..n * n).map(|i| (i % 7) as f32 * 0.1).collect();
+        let v0: Vec<f32> = (0..n).map(|i| 1.0 + (i % 3) as f32).collect();
+        h.execute(
+            "power_iter",
+            vec![
+                HostTensor::f32(mat, &[n as i64, n as i64]),
+                HostTensor::f32(v0, &[n as i64]),
+            ],
+        )
+        .unwrap();
+        let after = h.stats().unwrap()["power_iter"];
+        assert_eq!(after, before + 1);
+    }
+
+    #[test]
+    fn unknown_artifact_errors_cleanly() {
+        let Some(h) = handle() else { return };
+        let err = h.execute("nonexistent", vec![]).unwrap_err();
+        assert!(format!("{err:#}").contains("nonexistent"));
+    }
+
+    #[test]
+    fn handle_is_send_and_clonable() {
+        let Some(h) = handle() else { return };
+        let h2 = h.clone();
+        let t = std::thread::spawn(move || h2.stats().map(|s| s.len()));
+        t.join().unwrap().unwrap();
+    }
+}

@@ -1,0 +1,173 @@
+//! Artifact manifest parsing (artifacts/manifest.json, emitted by
+//! python/compile/aot.py). The manifest is the single source of truth
+//! for shapes baked into the HLO — the Rust side never hard-codes them.
+
+use crate::util::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// LM static shapes.
+#[derive(Debug, Clone)]
+pub struct LmShape {
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub batch: usize,
+    pub param_count: usize,
+    pub lr: f64,
+}
+
+/// Kernel artifact shapes.
+#[derive(Debug, Clone)]
+pub struct KernelShape {
+    pub seq_len: usize,
+    pub head_dim: usize,
+    pub rank_buckets: Vec<usize>,
+    pub block_n: usize,
+    pub power_iters: usize,
+}
+
+/// Policy artifact shapes.
+#[derive(Debug, Clone)]
+pub struct PolicyShape {
+    pub state_dim: usize,
+    pub n_actions: usize,
+    pub rank_grid: Vec<usize>,
+    pub bc_accuracy: f64,
+    /// Flat weight vector length + sidecar file (weights are a runtime
+    /// argument — HLO text elides large constants).
+    pub param_count: usize,
+    pub params_file: String,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub lm: LmShape,
+    pub kernel: KernelShape,
+    pub policy: PolicyShape,
+    pub artifact_files: BTreeMap<String, String>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+
+        let u = |v: Option<&Json>, what: &str| -> Result<usize> {
+            v.and_then(|x| x.as_usize()).with_context(|| format!("manifest missing {what}"))
+        };
+        let lmj = j.get("lm").context("manifest: lm")?;
+        let lm = LmShape {
+            vocab: u(lmj.get("vocab"), "lm.vocab")?,
+            seq_len: u(lmj.get("seq_len"), "lm.seq_len")?,
+            d_model: u(lmj.get("d_model"), "lm.d_model")?,
+            n_layers: u(lmj.get("n_layers"), "lm.n_layers")?,
+            n_heads: u(lmj.get("n_heads"), "lm.n_heads")?,
+            d_ff: u(lmj.get("d_ff"), "lm.d_ff")?,
+            batch: u(lmj.get("batch"), "lm.batch")?,
+            param_count: u(j.get("lm_param_count"), "lm_param_count")?,
+            lr: lmj.get("lr").and_then(|x| x.as_f64()).unwrap_or(5e-4),
+        };
+        let kj = j.get("kernel").context("manifest: kernel")?;
+        let kernel = KernelShape {
+            seq_len: u(kj.get("seq_len"), "kernel.seq_len")?,
+            head_dim: u(kj.get("head_dim"), "kernel.head_dim")?,
+            rank_buckets: kj
+                .get("rank_buckets")
+                .and_then(|a| a.as_arr())
+                .context("kernel.rank_buckets")?
+                .iter()
+                .filter_map(|x| x.as_usize())
+                .collect(),
+            block_n: u(kj.get("block_n"), "kernel.block_n")?,
+            power_iters: u(kj.get("power_iters"), "kernel.power_iters")?,
+        };
+        let pj = j.get("policy").context("manifest: policy")?;
+        let arts = j.get("artifacts").and_then(|a| a.as_obj()).context("artifacts")?;
+        let rank_grid = arts
+            .get("policy_net")
+            .and_then(|p| p.get("rank_grid"))
+            .and_then(|a| a.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+            .unwrap_or_default();
+        let pol_art = arts.get("policy_net");
+        let policy = PolicyShape {
+            state_dim: u(pj.get("state_dim"), "policy.state_dim")?,
+            n_actions: u(pj.get("n_actions"), "policy.n_actions")?,
+            rank_grid,
+            bc_accuracy: j.get("policy_bc_accuracy").and_then(|x| x.as_f64()).unwrap_or(0.0),
+            param_count: pol_art
+                .and_then(|p| p.get("param_count"))
+                .and_then(|x| x.as_usize())
+                .unwrap_or(0),
+            params_file: pol_art
+                .and_then(|p| p.get("params_file"))
+                .and_then(|x| x.as_str())
+                .unwrap_or("policy_params.bin")
+                .to_string(),
+        };
+        let mut artifact_files = BTreeMap::new();
+        for (name, spec) in arts {
+            if let Some(f) = spec.get("file").and_then(|x| x.as_str()) {
+                artifact_files.insert(name.clone(), f.to_string());
+            }
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), lm, kernel, policy, artifact_files })
+    }
+
+    /// Absolute path of a named artifact.
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        let f = self
+            .artifact_files
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))?;
+        Ok(self.dir.join(f))
+    }
+
+    /// Default artifact dir: $DRRL_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("DRRL_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| {
+            // Walk up from cwd until an artifacts/ directory is found
+            // (tests run from target subdirs).
+            let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+            loop {
+                let cand = cur.join("artifacts");
+                if cand.join("manifest.json").exists() {
+                    return cand;
+                }
+                if !cur.pop() {
+                    return PathBuf::from("artifacts");
+                }
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_generated_manifest_if_present() {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).expect("manifest loads");
+        assert!(m.lm.param_count > 0);
+        assert_eq!(m.lm.d_model % m.lm.n_heads, 0);
+        assert!(!m.kernel.rank_buckets.is_empty());
+        assert!(m.artifact_files.contains_key("lm_train_step"));
+        assert!(m.artifact_path("policy_net").unwrap().exists());
+        assert_eq!(m.policy.rank_grid.len(), m.policy.n_actions);
+    }
+}

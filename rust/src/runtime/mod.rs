@@ -1,0 +1,13 @@
+//! PJRT runtime (L3 ↔ artifacts boundary): a dedicated device thread
+//! owns the non-Send PJRT client and compiled executables; callers use
+//! the Send `DeviceHandle` RPC and the typed `ArtifactRegistry` API.
+
+pub mod device;
+pub mod manifest;
+pub mod registry;
+pub mod tensor;
+
+pub use device::DeviceHandle;
+pub use manifest::{KernelShape, LmShape, Manifest, PolicyShape};
+pub use registry::ArtifactRegistry;
+pub use tensor::HostTensor;

@@ -1,0 +1,311 @@
+//! Typed high-level entry points over the device thread: rank-bucket
+//! dispatch for the masked factor-attention kernel, full attention,
+//! power iteration, the transformer policy and the LM train/eval/logits
+//! graphs.
+
+use super::device::DeviceHandle;
+use super::manifest::Manifest;
+use super::tensor::HostTensor;
+use crate::linalg::{Mat, Svd};
+use anyhow::Result;
+
+/// High-level artifact API used by the coordinator and trainers.
+pub struct ArtifactRegistry {
+    pub manifest: Manifest,
+    pub device: DeviceHandle,
+    /// Lazily loaded transformer-policy weights (runtime argument to the
+    /// policy artifact — see DESIGN.md §9 on constant elision).
+    policy_weights: std::sync::OnceLock<Vec<f32>>,
+}
+
+impl ArtifactRegistry {
+    pub fn open_default() -> Result<Self> {
+        Self::open(&Manifest::default_dir())
+    }
+
+    pub fn open(dir: &std::path::Path) -> Result<Self> {
+        Ok(ArtifactRegistry {
+            manifest: Manifest::load(dir)?,
+            device: DeviceHandle::spawn(dir)?,
+            policy_weights: std::sync::OnceLock::new(),
+        })
+    }
+
+    /// Load (once) the flat policy weight vector from its sidecar file.
+    fn policy_weights(&self) -> Result<&[f32]> {
+        if let Some(w) = self.policy_weights.get() {
+            return Ok(w);
+        }
+        let path = self.manifest.dir.join(&self.manifest.policy.params_file);
+        let bytes = std::fs::read(&path)
+            .map_err(|e| anyhow::anyhow!("reading policy weights {path:?}: {e}"))?;
+        anyhow::ensure!(
+            bytes.len() == self.manifest.policy.param_count * 4,
+            "policy weight file size {} vs manifest count {}",
+            bytes.len(),
+            self.manifest.policy.param_count
+        );
+        let w: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let _ = self.policy_weights.set(w);
+        Ok(self.policy_weights.get().unwrap())
+    }
+
+    /// Smallest compiled rank bucket ≥ the requested rank (DESIGN.md §9);
+    /// falls back to the largest bucket.
+    pub fn rank_bucket(&self, rank: usize) -> usize {
+        let buckets = &self.manifest.kernel.rank_buckets;
+        buckets
+            .iter()
+            .copied()
+            .filter(|&b| b >= rank)
+            .min()
+            .unwrap_or_else(|| *buckets.iter().max().expect("non-empty buckets"))
+    }
+
+    /// Masked factor attention on the device: Y = U·diag(s⊙mask)·(Vᵀ·V).
+    pub fn lowrank_attention(&self, svd: &Svd, rank: usize, v_val: &Mat) -> Result<Mat> {
+        let bucket = self.rank_bucket(rank);
+        let n = self.manifest.kernel.seq_len;
+        let d = self.manifest.kernel.head_dim;
+        anyhow::ensure!(
+            svd.u.rows() == n && v_val.rows() == n && v_val.cols() == d,
+            "artifact shape mismatch: svd {}x{}, v {:?} vs kernel {n}x{d}",
+            svd.u.rows(),
+            svd.u.cols(),
+            v_val.shape()
+        );
+        anyhow::ensure!(svd.s.len() >= bucket, "need ≥{bucket} factors, have {}", svd.s.len());
+        let u = svd.u.take_cols(bucket);
+        let vt = svd.v.take_cols(bucket).transpose();
+        let s: Vec<f64> = svd.s[..bucket].to_vec();
+        let rank = rank.min(bucket);
+        let mask: Vec<f32> = (0..bucket).map(|i| if i < rank { 1.0 } else { 0.0 }).collect();
+        let out = self.device.execute(
+            &format!("lowrank_attn_r{bucket}"),
+            vec![
+                HostTensor::from_mat(&u),
+                HostTensor::from_f64s(&s),
+                HostTensor::from_mat(&vt),
+                HostTensor::from_mat(v_val),
+                HostTensor::f32(mask, &[bucket as i64]),
+            ],
+        )?;
+        Ok(out[0].to_mat(n, d))
+    }
+
+    /// Full attention kernel on the device.
+    pub fn full_attention(&self, q: &Mat, k: &Mat, v: &Mat) -> Result<Mat> {
+        let n = self.manifest.kernel.seq_len;
+        let d = self.manifest.kernel.head_dim;
+        anyhow::ensure!(q.shape() == (n, d), "q shape {:?} vs kernel {n}x{d}", q.shape());
+        let out = self.device.execute(
+            "full_attn",
+            vec![HostTensor::from_mat(q), HostTensor::from_mat(k), HostTensor::from_mat(v)],
+        )?;
+        Ok(out[0].to_mat(n, d))
+    }
+
+    /// Device-side power-iteration spectral norm.
+    pub fn power_iter_sigma(&self, m: &Mat, v0: &[f64]) -> Result<f64> {
+        let out = self
+            .device
+            .execute("power_iter", vec![HostTensor::from_mat(m), HostTensor::from_f64s(v0)])?;
+        Ok(out[0].scalar())
+    }
+
+    /// Transformer-policy logits (baked weights).
+    pub fn policy_logits(&self, state: &[f64]) -> Result<Vec<f64>> {
+        anyhow::ensure!(
+            state.len() == self.manifest.policy.state_dim,
+            "state dim {} vs manifest {}",
+            state.len(),
+            self.manifest.policy.state_dim
+        );
+        let weights = self.policy_weights()?.to_vec();
+        let wlen = weights.len() as i64;
+        let out = self.device.execute(
+            "policy_net",
+            vec![HostTensor::f32(weights, &[wlen]), HostTensor::from_f64s(state)],
+        )?;
+        Ok(out[0].as_f32().unwrap().iter().map(|&x| x as f64).collect())
+    }
+
+    // ---- LM graphs (e2e training / eval / serving) ----
+
+    /// One fused AdamW train step. State tensors are (P,)-vectors.
+    #[allow(clippy::too_many_arguments)]
+    pub fn lm_train_step(
+        &self,
+        params: &mut Vec<f32>,
+        adam_m: &mut Vec<f32>,
+        adam_v: &mut Vec<f32>,
+        step: f32,
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<f64> {
+        let lm = &self.manifest.lm;
+        let p = lm.param_count as i64;
+        let bl = [lm.batch as i64, lm.seq_len as i64];
+        let out = self.device.execute(
+            "lm_train_step",
+            vec![
+                HostTensor::f32(std::mem::take(params), &[p]),
+                HostTensor::f32(std::mem::take(adam_m), &[p]),
+                HostTensor::f32(std::mem::take(adam_v), &[p]),
+                HostTensor::scalar_f32(step),
+                HostTensor::i32(tokens.to_vec(), &bl),
+                HostTensor::i32(targets.to_vec(), &bl),
+            ],
+        )?;
+        anyhow::ensure!(out.len() == 4, "train_step returns 4 outputs, got {}", out.len());
+        let mut it = out.into_iter();
+        *params = it.next().unwrap().expect_f32();
+        *adam_m = it.next().unwrap().expect_f32();
+        *adam_v = it.next().unwrap().expect_f32();
+        Ok(it.next().unwrap().scalar())
+    }
+
+    /// Evaluation loss on one batch.
+    pub fn lm_eval_loss(&self, params: &[f32], tokens: &[i32], targets: &[i32]) -> Result<f64> {
+        let lm = &self.manifest.lm;
+        let bl = [lm.batch as i64, lm.seq_len as i64];
+        let out = self.device.execute(
+            "lm_eval_loss",
+            vec![
+                HostTensor::f32(params.to_vec(), &[lm.param_count as i64]),
+                HostTensor::i32(tokens.to_vec(), &bl),
+                HostTensor::i32(targets.to_vec(), &bl),
+            ],
+        )?;
+        Ok(out[0].scalar())
+    }
+
+    /// Inference logits (Pallas-kernel trunk): (B·L·V) flattened.
+    pub fn lm_logits(&self, params: &[f32], tokens: &[i32]) -> Result<Vec<f32>> {
+        let lm = &self.manifest.lm;
+        let bl = [lm.batch as i64, lm.seq_len as i64];
+        let out = self.device.execute(
+            "lm_logits",
+            vec![
+                HostTensor::f32(params.to_vec(), &[lm.param_count as i64]),
+                HostTensor::i32(tokens.to_vec(), &bl),
+            ],
+        )?;
+        Ok(out.into_iter().next().unwrap().expect_f32())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::{attention_matrix, AttnInputs};
+    use crate::linalg::top_k_svd;
+    use crate::util::Pcg32;
+
+    fn registry() -> Option<ArtifactRegistry> {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(ArtifactRegistry::open(&dir).unwrap())
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let Some(reg) = registry() else { return };
+        assert_eq!(reg.rank_bucket(16), 16);
+        assert_eq!(reg.rank_bucket(20), 32);
+        assert_eq!(reg.rank_bucket(64), 64);
+        assert_eq!(reg.rank_bucket(100), 64);
+    }
+
+    #[test]
+    fn lowrank_kernel_matches_rust_reference() {
+        let Some(reg) = registry() else { return };
+        let n = reg.manifest.kernel.seq_len;
+        let d = reg.manifest.kernel.head_dim;
+        let mut rng = Pcg32::seeded(7);
+        let inp = AttnInputs {
+            q: Mat::randn(n, d, 0.7, &mut rng),
+            k: Mat::randn(n, d, 0.7, &mut rng),
+            v: Mat::randn(n, d, 1.0, &mut rng),
+            causal: true,
+        };
+        let a = attention_matrix(&inp);
+        let rank = 20; // → bucket 32
+        let svd = top_k_svd(&a, reg.rank_bucket(rank), 3);
+        let via_device = reg.lowrank_attention(&svd, rank, &inp.v).unwrap();
+        let on_host = crate::attention::lowrank_attention_output(&svd, rank, &inp.v);
+        let diff = via_device.max_abs_diff(&on_host);
+        assert!(diff < 1e-4, "device vs host diff {diff}");
+    }
+
+    #[test]
+    fn full_attention_kernel_matches_rust_reference() {
+        let Some(reg) = registry() else { return };
+        let n = reg.manifest.kernel.seq_len;
+        let d = reg.manifest.kernel.head_dim;
+        let mut rng = Pcg32::seeded(8);
+        let inp = AttnInputs {
+            q: Mat::randn(n, d, 0.5, &mut rng),
+            k: Mat::randn(n, d, 0.5, &mut rng),
+            v: Mat::randn(n, d, 1.0, &mut rng),
+            causal: true,
+        };
+        let dev = reg.full_attention(&inp.q, &inp.k, &inp.v).unwrap();
+        let host = crate::attention::full_attention(&inp);
+        assert!(dev.max_abs_diff(&host) < 1e-4);
+    }
+
+    #[test]
+    fn policy_artifact_emits_grid_logits() {
+        let Some(reg) = registry() else { return };
+        let state = vec![0.1; reg.manifest.policy.state_dim];
+        let logits = reg.policy_logits(&state).unwrap();
+        assert_eq!(logits.len(), reg.manifest.policy.n_actions);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn lm_train_step_reduces_loss_on_repeated_batch() {
+        let Some(reg) = registry() else { return };
+        let lm = &reg.manifest.lm;
+        let p = lm.param_count;
+        let mut rng = Pcg32::seeded(10);
+        // GPT-style init on the Rust side (artifact owns no state).
+        let mut params: Vec<f32> = (0..p).map(|_| (rng.normal() * 0.02) as f32).collect();
+        let mut m = vec![0f32; p];
+        let mut v = vec![0f32; p];
+        let bl = lm.batch * lm.seq_len;
+        let tokens: Vec<i32> = (0..bl).map(|_| rng.below(lm.vocab as u32) as i32).collect();
+        let targets: Vec<i32> = tokens.iter().map(|&t| (t + 1) % lm.vocab as i32).collect();
+        let first = reg.lm_train_step(&mut params, &mut m, &mut v, 0.0, &tokens, &targets).unwrap();
+        let mut last = first;
+        for s in 1..8 {
+            last = reg
+                .lm_train_step(&mut params, &mut m, &mut v, s as f32, &tokens, &targets)
+                .unwrap();
+        }
+        assert!(last < first, "loss did not drop: {first} → {last}");
+        // Eval loss agrees with the train-path loss on identical data.
+        let eval = reg.lm_eval_loss(&params, &tokens, &targets).unwrap();
+        assert!((eval - last).abs() / last < 0.5, "eval {eval} vs train {last}");
+    }
+
+    #[test]
+    fn lm_logits_shape() {
+        let Some(reg) = registry() else { return };
+        let lm = &reg.manifest.lm;
+        let mut rng = Pcg32::seeded(11);
+        let params: Vec<f32> =
+            (0..lm.param_count).map(|_| (rng.normal() * 0.02) as f32).collect();
+        let tokens: Vec<i32> =
+            (0..lm.batch * lm.seq_len).map(|_| rng.below(lm.vocab as u32) as i32).collect();
+        let logits = reg.lm_logits(&params, &tokens).unwrap();
+        assert_eq!(logits.len(), lm.batch * lm.seq_len * lm.vocab);
+    }
+}

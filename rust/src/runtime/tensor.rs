@@ -1,0 +1,123 @@
+//! Host-side tensors that cross the device-thread boundary.
+//!
+//! The `xla` crate's `PjRtClient` / `Literal` wrap `Rc`/raw handles and
+//! are not `Send`, so all PJRT objects live on one dedicated device
+//! thread (runtime::device). Everything that crosses the channel is a
+//! plain `HostTensor`.
+
+use crate::linalg::Mat;
+
+/// A host tensor (row-major) with shape.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { data: Vec<f32>, dims: Vec<i64> },
+    I32 { data: Vec<i32>, dims: Vec<i64> },
+}
+
+impl HostTensor {
+    pub fn f32(data: Vec<f32>, dims: &[i64]) -> Self {
+        debug_assert_eq!(dims.iter().product::<i64>() as usize, data.len());
+        HostTensor::F32 { data, dims: dims.to_vec() }
+    }
+
+    pub fn i32(data: Vec<i32>, dims: &[i64]) -> Self {
+        debug_assert_eq!(dims.iter().product::<i64>() as usize, data.len());
+        HostTensor::I32 { data, dims: dims.to_vec() }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::F32 { data: vec![v], dims: vec![] }
+    }
+
+    pub fn from_mat(m: &Mat) -> Self {
+        HostTensor::f32(m.to_f32(), &[m.rows() as i64, m.cols() as i64])
+    }
+
+    pub fn from_f64s(v: &[f64]) -> Self {
+        HostTensor::f32(v.iter().map(|&x| x as f32).collect(), &[v.len() as i64])
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        match self {
+            HostTensor::F32 { dims, .. } | HostTensor::I32 { dims, .. } => dims,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+
+    /// Expect an f32 tensor, returning its data.
+    pub fn expect_f32(self) -> Vec<f32> {
+        match self {
+            HostTensor::F32 { data, .. } => data,
+            HostTensor::I32 { .. } => panic!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn to_mat(&self, rows: usize, cols: usize) -> Mat {
+        let data = self.as_f32().expect("f32 tensor");
+        assert_eq!(data.len(), rows * cols);
+        Mat::from_f32(rows, cols, data)
+    }
+
+    /// First element as f64 (scalar outputs like losses).
+    pub fn scalar(&self) -> f64 {
+        match self {
+            HostTensor::F32 { data, .. } => data[0] as f64,
+            HostTensor::I32 { data, .. } => data[0] as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn mat_roundtrip() {
+        let mut rng = Pcg32::seeded(1);
+        let m = Mat::randn(3, 4, 1.0, &mut rng);
+        let t = HostTensor::from_mat(&m);
+        assert_eq!(t.dims(), &[3, 4]);
+        assert!(t.to_mat(3, 4).allclose(&m, 1e-6));
+    }
+
+    #[test]
+    fn scalar_and_accessors() {
+        let t = HostTensor::scalar_f32(2.5);
+        assert_eq!(t.scalar(), 2.5);
+        assert!(t.as_i32().is_none());
+        let ti = HostTensor::i32(vec![1, 2], &[2]);
+        assert_eq!(ti.as_i32().unwrap(), &[1, 2]);
+        assert_eq!(ti.scalar(), 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn expect_f32_panics_on_i32() {
+        HostTensor::i32(vec![1], &[1]).expect_f32();
+    }
+}

@@ -1,0 +1,100 @@
+//! FLOPs → latency device model.
+//!
+//! We cannot measure the paper's A100/MPS testbeds; the shape of Fig 4
+//! (FLOPs vs L) is hardware-independent, but for completeness the
+//! benches also report *projected* latency under simple roofline models
+//! calibrated by peak throughput and achievable efficiency, plus the
+//! measured profile of this CPU (calibrated at bench start).
+
+/// A device's roofline parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    /// Peak dense-matmul throughput in GFLOP/s.
+    pub peak_gflops: f64,
+    /// Achievable fraction of peak on transformer workloads.
+    pub efficiency: f64,
+    /// Fixed per-dispatch overhead in microseconds.
+    pub dispatch_us: f64,
+}
+
+impl DeviceProfile {
+    /// NVIDIA A100 (bf16 tensor-core 312 TFLOPs, ~45% achievable on
+    /// attention-sized GEMMs, ~10µs launch overhead).
+    pub const A100: DeviceProfile = DeviceProfile {
+        name: "a100-sim",
+        peak_gflops: 312_000.0,
+        efficiency: 0.45,
+        dispatch_us: 10.0,
+    };
+
+    /// Apple-silicon-class commodity part (paper's MPS workstation,
+    /// ~10 TFLOPs f16, lower achievable efficiency).
+    pub const APPLE_M: DeviceProfile = DeviceProfile {
+        name: "apple-m-sim",
+        peak_gflops: 10_000.0,
+        efficiency: 0.35,
+        dispatch_us: 30.0,
+    };
+
+    /// This machine's CPU via the PJRT path; calibrate with
+    /// `calibrated_cpu` for a measured value (default is conservative).
+    pub const CPU_DEFAULT: DeviceProfile = DeviceProfile {
+        name: "cpu",
+        peak_gflops: 50.0,
+        efficiency: 0.5,
+        dispatch_us: 50.0,
+    };
+
+    /// Build a CPU profile from a measured (flops, seconds) sample.
+    pub fn calibrated_cpu(flops: u64, seconds: f64) -> DeviceProfile {
+        let gflops = flops as f64 / seconds.max(1e-9) / 1e9;
+        DeviceProfile {
+            name: "cpu-measured",
+            peak_gflops: gflops,
+            efficiency: 1.0, // already measured end-to-end
+            dispatch_us: 0.0,
+        }
+    }
+}
+
+/// Projected latency for `flops` on a device, in milliseconds.
+pub fn project_latency_ms(flops: u64, dev: &DeviceProfile) -> f64 {
+    let compute_s = flops as f64 / (dev.peak_gflops * 1e9 * dev.efficiency);
+    compute_s * 1e3 + dev.dispatch_us / 1e3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_faster_than_cpu() {
+        let f = 1_000_000_000_000; // 1 TFLOP
+        assert!(
+            project_latency_ms(f, &DeviceProfile::A100)
+                < project_latency_ms(f, &DeviceProfile::CPU_DEFAULT)
+        );
+    }
+
+    #[test]
+    fn latency_scales_linearly_in_flops() {
+        let a = project_latency_ms(1_000_000_000, &DeviceProfile::A100);
+        let b = project_latency_ms(2_000_000_000, &DeviceProfile::A100);
+        let fixed = DeviceProfile::A100.dispatch_us / 1e3;
+        assert!(((b - fixed) / (a - fixed) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn calibration_reproduces_measurement() {
+        let dev = DeviceProfile::calibrated_cpu(5_000_000_000, 2.0);
+        let ms = project_latency_ms(5_000_000_000, &dev);
+        assert!((ms - 2000.0).abs() < 1.0, "{ms}");
+    }
+
+    #[test]
+    fn dispatch_overhead_floors_small_kernels() {
+        let tiny = project_latency_ms(1, &DeviceProfile::A100);
+        assert!(tiny >= DeviceProfile::A100.dispatch_us / 1e3);
+    }
+}

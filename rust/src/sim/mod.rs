@@ -1,0 +1,7 @@
+//! Hardware latency simulation (DESIGN.md §2): maps analytic FLOPs to
+//! projected wall-clock on device profiles so paper-scale (A100) curves
+//! can be reported alongside measured CPU numbers.
+
+pub mod hw;
+
+pub use hw::{project_latency_ms, DeviceProfile};

@@ -1,0 +1,143 @@
+//! Spectral-energy statistics of attention matrices.
+//!
+//! The Normalized Energy Ratio (paper Eq. 14) is both a state feature for
+//! the policy and the decision rule of the Adaptive-SVD baseline.
+
+/// Normalized Energy Ratio: fraction of squared spectral mass retained by
+/// the top-r singular values (Eq. 14).
+pub fn ner(singular_values: &[f64], r: usize) -> f64 {
+    let total: f64 = singular_values.iter().map(|s| s * s).sum();
+    if total <= 0.0 {
+        return 1.0; // zero matrix: any rank retains "everything"
+    }
+    let head: f64 = singular_values.iter().take(r).map(|s| s * s).sum();
+    (head / total).clamp(0.0, 1.0)
+}
+
+/// Smallest rank whose NER reaches `threshold` (Adaptive-SVD rule).
+pub fn rank_for_energy(singular_values: &[f64], threshold: f64) -> usize {
+    let total: f64 = singular_values.iter().map(|s| s * s).sum();
+    if total <= 0.0 {
+        return 1;
+    }
+    let mut acc = 0.0;
+    for (i, s) in singular_values.iter().enumerate() {
+        acc += s * s;
+        if acc / total >= threshold {
+            return i + 1;
+        }
+    }
+    singular_values.len()
+}
+
+/// Spectral-decay summary features fed into the RL state: NER at a few
+/// probe ranks, the decay exponent estimate, and entropy of the σ² mass.
+pub fn spectrum_features(singular_values: &[f64], probes: &[usize]) -> Vec<f64> {
+    let mut out: Vec<f64> = probes.iter().map(|&r| ner(singular_values, r)).collect();
+    out.push(decay_exponent(singular_values));
+    out.push(spectral_entropy(singular_values));
+    out
+}
+
+/// Least-squares slope of log σ_i vs log i — a one-number summary of how
+/// compressible the matrix is (steeper decay → lower usable rank).
+pub fn decay_exponent(singular_values: &[f64]) -> f64 {
+    let pts: Vec<(f64, f64)> = singular_values
+        .iter()
+        .enumerate()
+        .filter(|(_, &s)| s > 1e-12)
+        .map(|(i, &s)| (((i + 1) as f64).ln(), s.ln()))
+        .collect();
+    if pts.len() < 2 {
+        return 0.0;
+    }
+    let n = pts.len() as f64;
+    let sx: f64 = pts.iter().map(|p| p.0).sum();
+    let sy: f64 = pts.iter().map(|p| p.1).sum();
+    let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        0.0
+    } else {
+        (n * sxy - sx * sy) / denom
+    }
+}
+
+/// Shannon entropy of the normalized σ² distribution; high entropy ⇒ flat
+/// spectrum ⇒ high intrinsic rank.
+pub fn spectral_entropy(singular_values: &[f64]) -> f64 {
+    let total: f64 = singular_values.iter().map(|s| s * s).sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    -singular_values
+        .iter()
+        .map(|s| s * s / total)
+        .filter(|&p| p > 1e-15)
+        .map(|p| p * p.ln())
+        .sum::<f64>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ner_monotone_in_rank() {
+        let s = [4.0, 2.0, 1.0, 0.5];
+        let mut last = 0.0;
+        for r in 0..=4 {
+            let e = ner(&s, r);
+            assert!(e >= last);
+            last = e;
+        }
+        assert!((ner(&s, 4) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ner_values_exact() {
+        let s = [3.0, 4.0]; // squared: 9, 16, total 25 (unsorted on purpose)
+        assert!((ner(&s, 1) - 9.0 / 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rank_for_energy_thresholds() {
+        let s = [10.0, 1.0, 0.1, 0.01];
+        assert_eq!(rank_for_energy(&s, 0.90), 1);
+        assert_eq!(rank_for_energy(&s, 0.999), 2);
+        assert_eq!(rank_for_energy(&s, 1.0), 4);
+    }
+
+    #[test]
+    fn decay_exponent_sign() {
+        // Geometric decay → strongly negative slope.
+        let s: Vec<f64> = (0..16).map(|i| (0.5f64).powi(i)).collect();
+        assert!(decay_exponent(&s) < -1.0);
+        // Flat spectrum → slope ~0.
+        let flat = vec![1.0; 16];
+        assert!(decay_exponent(&flat).abs() < 1e-9);
+    }
+
+    #[test]
+    fn entropy_extremes() {
+        let peaked = [1.0, 0.0, 0.0, 0.0];
+        assert!(spectral_entropy(&peaked).abs() < 1e-12);
+        let flat = [1.0, 1.0, 1.0, 1.0];
+        assert!((spectral_entropy(&flat) - (4.0f64).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_spectrum_defaults() {
+        assert_eq!(ner(&[], 3), 1.0);
+        assert_eq!(rank_for_energy(&[0.0, 0.0], 0.9), 1);
+        assert_eq!(spectral_entropy(&[]), 0.0);
+    }
+
+    #[test]
+    fn features_vector_shape() {
+        let s: Vec<f64> = (0..32).map(|i| (0.8f64).powi(i)).collect();
+        let f = spectrum_features(&s, &[4, 8, 16]);
+        assert_eq!(f.len(), 5);
+    }
+}

@@ -1,0 +1,15 @@
+//! Spectral analysis substrate: Normalized Energy Ratio (Eq. 14),
+//! perturbation bounds (Eq. 4/5/9/10) and the annealed trust region
+//! (Eq. 11) that guards the RL agent's rank transitions.
+
+pub mod energy;
+pub mod perturbation;
+pub mod trust_region;
+
+pub use energy::{decay_exponent, ner, rank_for_energy, spectral_entropy, spectrum_features};
+pub use perturbation::{
+    assess_transition, final_output_bound, output_bound, qk_bound_from_mats,
+    qk_residual_bound, rank_transition_perturbation, relative_transition_perturbation,
+    TransitionAssessment,
+};
+pub use trust_region::TrustRegion;

@@ -1,0 +1,213 @@
+//! Online matrix-perturbation bounds (paper §3.3 and §4.2).
+//!
+//! These quantify the effect of a rank transition r → r' without
+//! reconstructing attention:
+//!   * Eq. 4  — exact: ‖A_{r'} − A_r‖_F = sqrt(Σ_{k∈(r,r']} σ_k²)
+//!   * Eq. 5  — output: ‖Y_{r'} − Y_r‖_F ≤ σ_{r+1}·‖V‖_F
+//!   * Eq. 9  — pre-softmax score bound from Q/K residual spectral norms
+//!   * Eq. 10 — ‖O_{r'} − O_r‖_F ≤ ‖ΔA‖₂·‖V‖_F
+//! The safety check (§4.3.1) compares these to the annealed trust-region
+//! threshold in `trust_region.rs`.
+
+use crate::linalg::{spectral_norm_fast, Mat, Svd};
+
+/// Exact attention-matrix perturbation for a rank move r → r' given the
+/// singular spectrum (Eq. 4). Symmetric in direction: moving *down* from
+/// r' to r reintroduces the same band.
+pub fn rank_transition_perturbation(singular_values: &[f64], r_from: usize, r_to: usize) -> f64 {
+    let (lo, hi) = if r_from <= r_to { (r_from, r_to) } else { (r_to, r_from) };
+    singular_values[lo.min(singular_values.len())..hi.min(singular_values.len())]
+        .iter()
+        .map(|s| s * s)
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Relative form of Eq. 4: band energy over total spectral energy,
+/// in [0, 1]. Scale-free — a dense and a sparse attention matrix with the
+/// same *fractional* energy move get the same score. The trust region
+/// uses this form so ε means "fraction of spectral energy at stake"
+/// (DESIGN.md §9; the paper's absolute bound makes ε scale-dependent).
+pub fn relative_transition_perturbation(
+    singular_values: &[f64],
+    r_from: usize,
+    r_to: usize,
+) -> f64 {
+    let total: f64 = singular_values.iter().map(|s| s * s).sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let band = rank_transition_perturbation(singular_values, r_from, r_to);
+    (band * band / total).sqrt()
+}
+
+/// Output-sensitivity bound ‖Y_{r'} − Y_r‖_F ≤ σ_{r+1}‖V‖_F (Eq. 5).
+pub fn output_bound(singular_values: &[f64], r: usize, v_fro: f64) -> f64 {
+    singular_values.get(r).copied().unwrap_or(0.0) * v_fro
+}
+
+/// Score-space bound from factored Q/K (Eq. 9):
+/// ‖ΔA‖_F ⪅ (‖ΔQ‖₂‖K‖₂ + ‖Q‖₂‖ΔK‖₂)/√d
+/// where ΔQ/ΔK are the rank-truncation residuals of Q and K.
+pub fn qk_residual_bound(
+    dq_spec: f64,
+    k_spec: f64,
+    q_spec: f64,
+    dk_spec: f64,
+    head_dim: usize,
+) -> f64 {
+    (dq_spec * k_spec + q_spec * dk_spec) / (head_dim as f64).sqrt()
+}
+
+/// Convenience: compute Eq. 9 directly from Q, K and their rank-r SVDs
+/// using power-iteration spectral norms (Eq. 16; K=3 as in the paper).
+pub fn qk_bound_from_mats(q: &Mat, k: &Mat, q_svd: &Svd, k_svd: &Svd, r: usize, seed: u64) -> f64 {
+    let mut dq = q.clone();
+    dq.sub_inplace(&q_svd.reconstruct(r));
+    let mut dk = k.clone();
+    dk.sub_inplace(&k_svd.reconstruct(r));
+    qk_residual_bound(
+        spectral_norm_fast(&dq, seed),
+        spectral_norm_fast(k, seed ^ 1),
+        spectral_norm_fast(q, seed ^ 2),
+        spectral_norm_fast(&dk, seed ^ 3),
+        q.cols(),
+    )
+}
+
+/// Final-output bound ‖O_{r'} − O_r‖_F ≤ ‖ΔA‖₂‖V‖_F (Eq. 10). With the
+/// exact spectrum available ‖ΔA‖₂ = σ_{min(r,r')+1}.
+pub fn final_output_bound(delta_a_spec: f64, v_fro: f64) -> f64 {
+    delta_a_spec * v_fro
+}
+
+/// Everything the agent needs to score one candidate transition.
+#[derive(Debug, Clone, Copy)]
+pub struct TransitionAssessment {
+    pub r_from: usize,
+    pub r_to: usize,
+    /// Exact ‖ΔA‖_F from Eq. 4.
+    pub delta_a_fro: f64,
+    /// ‖ΔA‖₂ (leading band singular value).
+    pub delta_a_spec: f64,
+    /// Bound on output change (Eq. 10).
+    pub output_bound: f64,
+}
+
+/// Assess a transition from the attention spectrum + ‖V‖_F. The
+/// `delta_a_fro` field carries the *relative* perturbation (what the
+/// trust region thresholds); `delta_a_spec`/`output_bound` stay absolute.
+pub fn assess_transition(
+    singular_values: &[f64],
+    r_from: usize,
+    r_to: usize,
+    v_fro: f64,
+) -> TransitionAssessment {
+    let delta_a_fro = relative_transition_perturbation(singular_values, r_from, r_to);
+    let lead = r_from.min(r_to);
+    let delta_a_spec = singular_values.get(lead).copied().unwrap_or(0.0);
+    TransitionAssessment {
+        r_from,
+        r_to,
+        delta_a_fro,
+        delta_a_spec,
+        output_bound: final_output_bound(delta_a_spec, v_fro),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{svd, top_k_svd};
+    use crate::util::Pcg32;
+
+    #[test]
+    fn eq4_matches_explicit_reconstruction() {
+        let mut rng = Pcg32::seeded(1);
+        let a = Mat::randn(20, 20, 1.0, &mut rng);
+        let d = svd(&a);
+        for &(r, r2) in &[(2usize, 7usize), (5, 12), (0, 20)] {
+            let explicit = (&d.reconstruct(r2) - &d.reconstruct(r)).fro_norm();
+            let bound = rank_transition_perturbation(&d.s, r, r2);
+            assert!((explicit - bound).abs() < 1e-8, "({r},{r2}): {explicit} vs {bound}");
+        }
+    }
+
+    #[test]
+    fn direction_symmetry() {
+        let s = [5.0, 3.0, 2.0, 1.0, 0.5];
+        assert_eq!(
+            rank_transition_perturbation(&s, 1, 4),
+            rank_transition_perturbation(&s, 4, 1)
+        );
+    }
+
+    #[test]
+    fn eq5_bounds_actual_output_change() {
+        let mut rng = Pcg32::seeded(2);
+        let a = Mat::randn(16, 16, 0.5, &mut rng);
+        let v = Mat::randn(16, 8, 1.0, &mut rng);
+        let d = svd(&a);
+        for r in [2usize, 6, 10] {
+            let r2 = r + 3;
+            let y_r = crate::linalg::matmul(&d.reconstruct(r), &v);
+            let y_r2 = crate::linalg::matmul(&d.reconstruct(r2), &v);
+            let actual = (&y_r2 - &y_r).fro_norm();
+            let bound = output_bound(&d.s, r, v.fro_norm());
+            assert!(actual <= bound + 1e-9, "r={r}: {actual} > {bound}");
+        }
+    }
+
+    #[test]
+    fn eq9_is_an_upper_envelope_of_score_change() {
+        // ΔQKᵀ norm must be below the triangle-inequality bound.
+        let mut rng = Pcg32::seeded(3);
+        let q = Mat::randn(24, 8, 1.0, &mut rng);
+        let k = Mat::randn(24, 8, 1.0, &mut rng);
+        let r = 3;
+        let qd = top_k_svd(&q, r, 7);
+        let kd = top_k_svd(&k, r, 8);
+        let bound = qk_bound_from_mats(&q, &k, &qd, &kd, r, 11);
+        // Actual ‖(Q_r K_rᵀ − QKᵀ)/√d‖₂ — use many power iterations for truth.
+        let qr = qd.reconstruct(r);
+        let kr = kd.reconstruct(r);
+        let mut delta = crate::linalg::matmul_bt(&qr, &kr);
+        delta.sub_inplace(&crate::linalg::matmul_bt(&q, &k));
+        delta.scale_inplace(1.0 / (8.0f64).sqrt());
+        let actual = crate::linalg::spectral_norm(&delta, 30, 5);
+        // Power-iteration estimates converge from below; allow 1% slack.
+        assert!(actual <= bound * 1.01 + 1e-9, "{actual} > {bound}");
+    }
+
+    #[test]
+    fn eq10_bounds_final_output() {
+        let mut rng = Pcg32::seeded(4);
+        let a = Mat::randn(12, 12, 0.8, &mut rng);
+        let v = Mat::randn(12, 6, 1.0, &mut rng);
+        let d = svd(&a);
+        let (r, r2) = (3usize, 8usize);
+        let o_r = crate::linalg::matmul(&d.reconstruct(r), &v);
+        let o_r2 = crate::linalg::matmul(&d.reconstruct(r2), &v);
+        let actual = (&o_r2 - &o_r).fro_norm();
+        let assess = assess_transition(&d.s, r, r2, v.fro_norm());
+        assert!(actual <= assess.output_bound + 1e-9);
+        // And the Frobenius version is even tighter than spec × fro:
+        assert!(assess.delta_a_fro <= d.tail_energy(r) + 1e-9);
+    }
+
+    #[test]
+    fn no_transition_no_perturbation() {
+        let s = [4.0, 2.0, 1.0];
+        assert_eq!(rank_transition_perturbation(&s, 2, 2), 0.0);
+        let a = assess_transition(&s, 2, 2, 10.0);
+        assert_eq!(a.delta_a_fro, 0.0);
+    }
+
+    #[test]
+    fn out_of_range_ranks_are_safe() {
+        let s = [4.0, 2.0];
+        // Transition beyond spectrum length clamps gracefully.
+        assert_eq!(rank_transition_perturbation(&s, 2, 10), 0.0);
+        assert_eq!(output_bound(&s, 5, 3.0), 0.0);
+    }
+}

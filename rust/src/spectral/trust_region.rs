@@ -1,0 +1,172 @@
+//! Trust-region safety guardrail (paper §4.3.1).
+//!
+//! A candidate rank sampled from the policy is *masked* (rejected) when
+//! its predicted perturbation exceeds the annealed threshold
+//! ε_t = ε₀·exp(−λt) (Eq. 11). Annealing starts permissive (exploration)
+//! and tightens as the policy converges.
+
+use super::perturbation::TransitionAssessment;
+
+/// Annealed trust-region threshold.
+#[derive(Debug, Clone)]
+pub struct TrustRegion {
+    /// ε₀ — initial threshold.
+    pub epsilon0: f64,
+    /// λ — decay rate per decision step.
+    pub lambda: f64,
+    /// Floor so the region never collapses to zero (keeps at least the
+    /// current rank and its immediate neighbours reachable).
+    pub epsilon_min: f64,
+    step: u64,
+    /// Rejected-action count (metrics / Fig. 5 overlay).
+    pub rejections: u64,
+    /// Accepted-action count.
+    pub acceptances: u64,
+}
+
+impl TrustRegion {
+    pub fn new(epsilon0: f64, lambda: f64) -> Self {
+        TrustRegion {
+            epsilon0,
+            lambda,
+            epsilon_min: 0.05,
+            step: 0,
+            rejections: 0,
+            acceptances: 0,
+        }
+    }
+
+    /// Paper defaults used in the experiments.
+    pub fn paper_default() -> Self {
+        Self::new(0.7, 5e-5)
+    }
+
+    /// Current ε_t (Eq. 11).
+    pub fn epsilon(&self) -> f64 {
+        (self.epsilon0 * (-self.lambda * self.step as f64).exp()).max(self.epsilon_min)
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.step
+    }
+
+    /// Advance the annealing clock one decision step.
+    pub fn tick(&mut self) {
+        self.step += 1;
+    }
+
+    /// Is this transition inside the trust region? Does not tick.
+    pub fn admits(&self, assessment: &TransitionAssessment) -> bool {
+        assessment.delta_a_fro <= self.epsilon()
+    }
+
+    /// Check-and-record: returns true if admitted; updates counters.
+    pub fn check(&mut self, assessment: &TransitionAssessment) -> bool {
+        let ok = self.admits(assessment);
+        if ok {
+            self.acceptances += 1;
+        } else {
+            self.rejections += 1;
+        }
+        ok
+    }
+
+    /// Mask a whole action set: `true` entries are admissible. Rank
+    /// *decreases that stay at the current rank* are always admissible
+    /// (the agent can always do nothing).
+    pub fn mask_actions(
+        &self,
+        current_rank: usize,
+        assessments: &[TransitionAssessment],
+    ) -> Vec<bool> {
+        assessments
+            .iter()
+            .map(|a| a.r_to == current_rank || self.admits(a))
+            .collect()
+    }
+
+    pub fn rejection_rate(&self) -> f64 {
+        let total = self.rejections + self.acceptances;
+        if total == 0 {
+            0.0
+        } else {
+            self.rejections as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spectral::perturbation::assess_transition;
+
+    fn assessment(delta: f64) -> TransitionAssessment {
+        TransitionAssessment {
+            r_from: 8,
+            r_to: 4,
+            delta_a_fro: delta,
+            delta_a_spec: delta,
+            output_bound: delta,
+        }
+    }
+
+    #[test]
+    fn epsilon_anneals_monotonically() {
+        let mut tr = TrustRegion::new(1.0, 0.01);
+        let mut last = f64::INFINITY;
+        for _ in 0..100 {
+            let e = tr.epsilon();
+            assert!(e <= last);
+            last = e;
+            tr.tick();
+        }
+        assert!(tr.epsilon() < 1.0);
+    }
+
+    #[test]
+    fn epsilon_floor_holds() {
+        let mut tr = TrustRegion::new(0.5, 10.0);
+        for _ in 0..10 {
+            tr.tick();
+        }
+        assert!(tr.epsilon() >= tr.epsilon_min);
+    }
+
+    #[test]
+    fn admits_small_rejects_large() {
+        let mut tr = TrustRegion::new(0.1, 0.0);
+        assert!(tr.check(&assessment(0.05)));
+        assert!(!tr.check(&assessment(0.5)));
+        assert_eq!(tr.acceptances, 1);
+        assert_eq!(tr.rejections, 1);
+        assert!((tr.rejection_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn staying_put_always_admissible() {
+        let tr = TrustRegion::new(1e-9, 0.0); // essentially everything rejected
+        let s = [5.0, 3.0, 1.0, 0.5];
+        let assessments: Vec<_> =
+            (1..=4).map(|r| assess_transition(&s, 2, r, 1.0)).collect();
+        let mask = tr.mask_actions(2, &assessments);
+        // r_to == 2 (index 1) must be admissible even with tiny ε.
+        assert!(mask[1]);
+        // A large move must be rejected.
+        assert!(!mask[3]);
+    }
+
+    #[test]
+    fn tightening_increases_rejections() {
+        let s: Vec<f64> = (0..32).map(|i| 2.0 * (0.85f64).powi(i)).collect();
+        let early = TrustRegion::new(1.0, 0.0);
+        let mut late = TrustRegion::new(1.0, 0.05);
+        for _ in 0..200 {
+            late.tick();
+        }
+        let assessments: Vec<_> =
+            (1..=32).map(|r| assess_transition(&s, 16, r, 1.0)).collect();
+        let n_early = early.mask_actions(16, &assessments).iter().filter(|&&b| b).count();
+        let n_late = late.mask_actions(16, &assessments).iter().filter(|&&b| b).count();
+        assert!(n_late < n_early, "late {n_late} !< early {n_early}");
+    }
+}

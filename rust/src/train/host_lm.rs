@@ -1,0 +1,357 @@
+//! Host-side decoder LM forward with *swappable attention*.
+//!
+//! Parses the flat f32 parameter vector produced by the AOT train step
+//! (layout mirrors python/compile/model.py::param_slices) and evaluates
+//! the LM loss on the host with any `AttnMethod` — this is how Table 1/2
+//! measure the PPL impact of each approximation on one identically
+//! trained model, without needing per-method training artifacts.
+//!
+//! A test asserts the host forward matches the device `lm_eval_loss`
+//! artifact to float tolerance under full-rank attention.
+
+use super::classifier::AttnMethod;
+use crate::attention::{
+    full_attention, lowrank_attention, projection_attention, AttnInputs,
+};
+use crate::linalg::{matmul, top_k_svd, Mat};
+use crate::policy::{nystrom_attention, performer_attention};
+use crate::runtime::LmShape;
+use crate::spectral::rank_for_energy;
+use std::collections::BTreeMap;
+
+/// Parsed host-side model.
+pub struct HostLm {
+    pub shape: LmShape,
+    embed: Mat,  // vocab × d
+    pos: Mat,    // L × d
+    layers: Vec<LayerParams>,
+    lnf_g: Vec<f64>,
+    lnf_b: Vec<f64>,
+    head: Mat, // d × vocab
+    /// Mean selected rank per evaluation (dynamic methods).
+    pub rank_sum: u64,
+    pub rank_count: u64,
+}
+
+struct LayerParams {
+    ln1_g: Vec<f64>,
+    ln1_b: Vec<f64>,
+    wq: Mat,
+    wk: Mat,
+    wv: Mat,
+    wo: Mat,
+    ln2_g: Vec<f64>,
+    ln2_b: Vec<f64>,
+    w1: Mat,
+    b1: Vec<f64>,
+    w2: Mat,
+    b2: Vec<f64>,
+}
+
+impl HostLm {
+    /// Parse the flat parameter vector (AOT layout).
+    pub fn from_flat(params: &[f32], shape: &LmShape) -> HostLm {
+        assert_eq!(params.len(), shape.param_count, "param vector size");
+        let mut off = 0usize;
+        let mut take_mat = |rows: usize, cols: usize| -> Mat {
+            let n = rows * cols;
+            let m = Mat::from_f32(rows, cols, &params[off..off + n]);
+            off += n;
+            m
+        };
+        // NOTE: closures capture `off` mutably; order below MUST mirror
+        // python/compile/model.py::param_slices.
+        let d = shape.d_model;
+        let embed = take_mat(shape.vocab, d);
+        let pos = take_mat(shape.seq_len, d);
+        let mut layers = Vec::with_capacity(shape.n_layers);
+        for _ in 0..shape.n_layers {
+            let ln1_g = take_mat(1, d).into_vec();
+            let ln1_b = take_mat(1, d).into_vec();
+            let wq = take_mat(d, d);
+            let wk = take_mat(d, d);
+            let wv = take_mat(d, d);
+            let wo = take_mat(d, d);
+            let ln2_g = take_mat(1, d).into_vec();
+            let ln2_b = take_mat(1, d).into_vec();
+            let w1 = take_mat(d, shape.d_ff);
+            let b1 = take_mat(1, shape.d_ff).into_vec();
+            let w2 = take_mat(shape.d_ff, d);
+            let b2 = take_mat(1, d).into_vec();
+            layers.push(LayerParams {
+                ln1_g, ln1_b, wq, wk, wv, wo, ln2_g, ln2_b, w1, b1, w2, b2,
+            });
+        }
+        let lnf_g = take_mat(1, d).into_vec();
+        let lnf_b = take_mat(1, d).into_vec();
+        let head = take_mat(d, shape.vocab);
+        HostLm {
+            shape: shape.clone(),
+            embed,
+            pos,
+            layers,
+            lnf_g,
+            lnf_b,
+            head,
+            rank_sum: 0,
+            rank_count: 0,
+        }
+    }
+
+    fn layernorm(x: &Mat, g: &[f64], b: &[f64]) -> Mat {
+        let mut out = x.clone();
+        for i in 0..x.rows() {
+            let row = out.row_mut(i);
+            let mu = row.iter().sum::<f64>() / row.len() as f64;
+            let var = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f64>() / row.len() as f64;
+            let inv = 1.0 / (var + 1e-5).sqrt();
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = (*v - mu) * inv * g[j] + b[j];
+            }
+        }
+        out
+    }
+
+    fn gelu(x: f64) -> f64 {
+        // tanh approximation (matches jax.nn.gelu default).
+        0.5 * x * (1.0 + ((2.0 / std::f64::consts::PI).sqrt() * (x + 0.044715 * x * x * x)).tanh())
+    }
+
+    fn head_attention(
+        &mut self,
+        inp: &AttnInputs,
+        method: &AttnMethod,
+        seed: u64,
+    ) -> Mat {
+        match method {
+            AttnMethod::Full => full_attention(inp),
+            AttnMethod::FixedRank(r) => {
+                self.rank_sum += *r as u64;
+                self.rank_count += 1;
+                lowrank_attention(inp, *r, seed)
+            }
+            AttnMethod::Performer { n_features } => performer_attention(inp, *n_features, seed),
+            AttnMethod::Nystrom { n_landmarks } => nystrom_attention(inp, *n_landmarks, seed),
+            AttnMethod::RandomRank { grid, seed: rseed } => {
+                let mut rng = crate::util::Pcg32::seeded(rseed.wrapping_add(self.rank_count ^ seed));
+                let r = grid[rng.range(0, grid.len())];
+                self.rank_sum += r as u64;
+                self.rank_count += 1;
+                lowrank_attention(inp, r, seed)
+            }
+            AttnMethod::AdaptiveSvd { threshold, r_max } => {
+                let a = crate::attention::attention_matrix(inp);
+                let probe = top_k_svd(&a, (*r_max).min(a.rows()), seed);
+                let r = rank_for_energy(&probe.s, *threshold).min(*r_max);
+                self.rank_sum += r as u64;
+                self.rank_count += 1;
+                crate::attention::lowrank_attention_output(&probe, r, &inp.v)
+            }
+            AttnMethod::DrRl { grid, actor } => {
+                let a = crate::attention::attention_matrix(inp);
+                let r_max = *grid.iter().max().unwrap();
+                let probe = top_k_svd(&a, r_max.min(a.rows()), seed);
+                let conv = crate::rl::ConvFeaturizer::new(0xC0117);
+                let w = crate::attention::MhsaWeights {
+                    wq: self.layers[0].wq.clone(),
+                    wk: self.layers[0].wk.clone(),
+                    wv: self.layers[0].wv.clone(),
+                    wo: self.layers[0].wo.clone(),
+                    n_heads: self.shape.n_heads,
+                };
+                let state = crate::rl::featurize(
+                    &conv,
+                    &inp.q,
+                    &w,
+                    &probe.s,
+                    grid[grid.len() / 2],
+                    r_max,
+                    0,
+                    self.shape.n_layers,
+                );
+                let dist = actor.distribution(&state.features, None);
+                let r = grid[dist.argmax()].min(probe.s.len());
+                self.rank_sum += r as u64;
+                self.rank_count += 1;
+                crate::attention::lowrank_attention_output(&probe, r, &inp.v)
+            }
+        }
+    }
+
+    /// Forward one sequence (n tokens) → logits (n × vocab).
+    pub fn forward(&mut self, tokens: &[i32], method: &AttnMethod, seed: u64) -> Mat {
+        let d = self.shape.d_model;
+        let n = tokens.len();
+        assert!(n <= self.shape.seq_len);
+        let mut x = Mat::zeros(n, d);
+        for (i, &t) in tokens.iter().enumerate() {
+            let e = self.embed.row(t.clamp(0, self.shape.vocab as i32 - 1) as usize);
+            let p = self.pos.row(i);
+            for (j, v) in x.row_mut(i).iter_mut().enumerate() {
+                *v = e[j] + p[j];
+            }
+        }
+        let hd = d / self.shape.n_heads;
+        for l in 0..self.layers.len() {
+            let (h, wq, wk, wv) = {
+                let lp = &self.layers[l];
+                let h = Self::layernorm(&x, &lp.ln1_g, &lp.ln1_b);
+                (h.clone(), lp.wq.clone(), lp.wk.clone(), lp.wv.clone())
+            };
+            let q = matmul(&h, &wq);
+            let k = matmul(&h, &wk);
+            let v = matmul(&h, &wv);
+            let mut outs = Vec::with_capacity(self.shape.n_heads);
+            for head in 0..self.shape.n_heads {
+                let sl = |m: &Mat| -> Mat {
+                    let mut out = Mat::zeros(n, hd);
+                    for i in 0..n {
+                        out.row_mut(i).copy_from_slice(&m.row(i)[head * hd..(head + 1) * hd]);
+                    }
+                    out
+                };
+                let inp = AttnInputs { q: sl(&q), k: sl(&k), v: sl(&v), causal: true };
+                outs.push(self.head_attention(&inp, method, seed ^ ((l as u64) << 8 | head as u64)));
+            }
+            let mut cat = outs[0].clone();
+            for o in &outs[1..] {
+                cat = cat.hcat(o);
+            }
+            let lp = &self.layers[l];
+            let attn = matmul(&cat, &lp.wo);
+            x.add_inplace(&attn);
+            let h2 = Self::layernorm(&x, &lp.ln2_g, &lp.ln2_b);
+            let mut ff = matmul(&h2, &lp.w1);
+            for i in 0..n {
+                for (j, fv) in ff.row_mut(i).iter_mut().enumerate() {
+                    *fv = Self::gelu(*fv + lp.b1[j]);
+                }
+            }
+            let mut ff2 = matmul(&ff, &lp.w2);
+            for i in 0..n {
+                for (j, fv) in ff2.row_mut(i).iter_mut().enumerate() {
+                    *fv += lp.b2[j];
+                }
+            }
+            x.add_inplace(&ff2);
+        }
+        let x = Self::layernorm(&x, &self.lnf_g, &self.lnf_b);
+        matmul(&x, &self.head)
+    }
+
+    /// Mean next-token cross-entropy over one (tokens, targets) sequence.
+    pub fn loss(&mut self, tokens: &[i32], targets: &[i32], method: &AttnMethod, seed: u64) -> f64 {
+        let logits = self.forward(tokens, method, seed);
+        let mut total = 0.0;
+        for i in 0..tokens.len() {
+            let row = logits.row(i);
+            let max = row.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+            let lse = max + row.iter().map(|v| (v - max).exp()).sum::<f64>().ln();
+            total += lse - row[targets[i].clamp(0, self.shape.vocab as i32 - 1) as usize];
+        }
+        total / tokens.len() as f64
+    }
+
+    /// PPL over a batch of (tokens, targets) pairs flattened row-major.
+    pub fn eval_ppl(
+        &mut self,
+        tokens: &[i32],
+        targets: &[i32],
+        batch: usize,
+        seq_len: usize,
+        method: &AttnMethod,
+        seed: u64,
+    ) -> f64 {
+        let mut total = 0.0;
+        for b in 0..batch {
+            let t = &tokens[b * seq_len..(b + 1) * seq_len];
+            let g = &targets[b * seq_len..(b + 1) * seq_len];
+            total += self.loss(t, g, method, seed.wrapping_add(b as u64));
+        }
+        (total / batch as f64).exp()
+    }
+
+    pub fn mean_rank(&self) -> f64 {
+        if self.rank_count == 0 {
+            0.0
+        } else {
+            self.rank_sum as f64 / self.rank_count as f64
+        }
+    }
+}
+
+/// Projection baseline weights per layer (Linformer-style, Table 1's
+/// "Fixed Low-Rank [9]" when used as architecture substitute).
+pub fn projection_matrices(n: usize, r: usize, n_layers: usize, seed: u64) -> BTreeMap<usize, Mat> {
+    let mut rng = crate::util::Pcg32::seeded(seed);
+    (0..n_layers)
+        .map(|l| (l, Mat::randn(r, n, (1.0 / n as f64).sqrt(), &mut rng)))
+        .collect()
+}
+
+const _: () = {
+    // keep the import used even when the projection path is disabled
+    let _ = projection_attention as fn(&AttnInputs, &Mat) -> Mat;
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{ArtifactRegistry, Manifest};
+    use crate::util::Pcg32;
+
+    #[test]
+    fn host_forward_matches_device_eval_loss() {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let reg = ArtifactRegistry::open(&dir).unwrap();
+        let lm = reg.manifest.lm.clone();
+        let mut rng = Pcg32::seeded(3);
+        let mut params = vec![0f32; lm.param_count];
+        rng.fill_normal_f32(&mut params, 0.02);
+        let tokens: Vec<i32> =
+            (0..lm.batch * lm.seq_len).map(|_| rng.below(lm.vocab as u32) as i32).collect();
+        let targets: Vec<i32> = tokens.iter().map(|&t| (t + 1) % lm.vocab as i32).collect();
+        let device_loss = reg.lm_eval_loss(&params, &tokens, &targets).unwrap();
+
+        let mut host = HostLm::from_flat(&params, &lm);
+        let mut host_loss = 0.0;
+        for b in 0..lm.batch {
+            host_loss += host.loss(
+                &tokens[b * lm.seq_len..(b + 1) * lm.seq_len],
+                &targets[b * lm.seq_len..(b + 1) * lm.seq_len],
+                &AttnMethod::Full,
+                1,
+            );
+        }
+        host_loss /= lm.batch as f64;
+        let rel = (host_loss - device_loss).abs() / device_loss;
+        assert!(rel < 2e-3, "host {host_loss} vs device {device_loss} (rel {rel})");
+    }
+
+    #[test]
+    fn lowrank_eval_close_to_full_at_high_rank() {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let reg = ArtifactRegistry::open(&dir).unwrap();
+        let lm = reg.manifest.lm.clone();
+        let mut rng = Pcg32::seeded(5);
+        let mut params = vec![0f32; lm.param_count];
+        rng.fill_normal_f32(&mut params, 0.02);
+        let tokens: Vec<i32> =
+            (0..lm.seq_len).map(|_| rng.below(lm.vocab as u32) as i32).collect();
+        let targets: Vec<i32> = tokens.iter().map(|&t| (t + 1) % lm.vocab as i32).collect();
+        let mut host = HostLm::from_flat(&params, &lm);
+        let full = host.loss(&tokens, &targets, &AttnMethod::Full, 1);
+        let hi = host.loss(&tokens, &targets, &AttnMethod::FixedRank(96), 1);
+        let lo = host.loss(&tokens, &targets, &AttnMethod::FixedRank(4), 1);
+        assert!((hi - full).abs() < (lo - full).abs() + 1e-9,
+            "high-rank should approximate better: full {full}, r96 {hi}, r4 {lo}");
+    }
+}

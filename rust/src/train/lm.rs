@@ -1,0 +1,159 @@
+//! LM training / evaluation drivers over the AOT train-step artifact.
+//!
+//! The Rust side owns all state (params + Adam moments as flat f32
+//! vectors) and drives the device thread step by step — Python never
+//! runs. PPL = exp(mean CE loss over validation batches).
+
+use crate::data::Corpus;
+use crate::runtime::ArtifactRegistry;
+use crate::util::{Pcg32, Stopwatch};
+use anyhow::Result;
+
+/// Training state + curves.
+pub struct LmTrainer<'r> {
+    pub reg: &'r ArtifactRegistry,
+    pub params: Vec<f32>,
+    pub adam_m: Vec<f32>,
+    pub adam_v: Vec<f32>,
+    pub step: u64,
+    /// (step, loss) curve — Fig 2 left panel.
+    pub curve: Vec<(u64, f64)>,
+    rng: Pcg32,
+}
+
+impl<'r> LmTrainer<'r> {
+    /// Fresh GPT-style init (σ=0.02), matching python model.init_params.
+    pub fn new(reg: &'r ArtifactRegistry, seed: u64) -> Self {
+        let p = reg.manifest.lm.param_count;
+        let mut rng = Pcg32::seeded(seed);
+        let mut params = vec![0f32; p];
+        rng.fill_normal_f32(&mut params, 0.02);
+        LmTrainer {
+            reg,
+            params,
+            adam_m: vec![0.0; p],
+            adam_v: vec![0.0; p],
+            step: 0,
+            curve: Vec::new(),
+            rng: Pcg32::seeded(seed ^ 0x7A41),
+        }
+    }
+
+    /// Train for `steps` on the corpus; returns wall seconds.
+    pub fn train(&mut self, corpus: &Corpus, steps: usize, log_every: usize) -> Result<f64> {
+        let lm = self.reg.manifest.lm.clone();
+        let sw = Stopwatch::start();
+        for _ in 0..steps {
+            let (tokens, targets) =
+                corpus.sample_batch(true, lm.batch, lm.seq_len, &mut self.rng);
+            let loss = self.reg.lm_train_step(
+                &mut self.params,
+                &mut self.adam_m,
+                &mut self.adam_v,
+                self.step as f32,
+                &tokens,
+                &targets,
+            )?;
+            self.step += 1;
+            if log_every > 0 && (self.step as usize).is_multiple_of(log_every) {
+                crate::log_info!(
+                    "[{}] step {:5} loss {:.4}",
+                    corpus.profile.name(),
+                    self.step,
+                    loss
+                );
+            }
+            self.curve.push((self.step, loss));
+        }
+        Ok(sw.elapsed().as_secs_f64())
+    }
+
+    /// Validation perplexity over `n_batches`.
+    pub fn eval_ppl(&mut self, corpus: &Corpus, n_batches: usize) -> Result<f64> {
+        let lm = self.reg.manifest.lm.clone();
+        let mut total = 0.0;
+        for _ in 0..n_batches {
+            let (tokens, targets) =
+                corpus.sample_batch(false, lm.batch, lm.seq_len, &mut self.rng);
+            total += self.reg.lm_eval_loss(&self.params, &tokens, &targets)?;
+        }
+        Ok((total / n_batches as f64).exp())
+    }
+
+    /// Final (most recent) training loss.
+    pub fn last_loss(&self) -> f64 {
+        self.curve.last().map(|&(_, l)| l).unwrap_or(f64::NAN)
+    }
+}
+
+/// Greedy generation through the logits artifact (serving demo): append
+/// argmax token repeatedly. The artifact has fixed (B, L) shape, so the
+/// prompt occupies a suffix window.
+pub fn generate_greedy(
+    reg: &ArtifactRegistry,
+    params: &[f32],
+    prompt: &[i32],
+    n_new: usize,
+) -> Result<Vec<i32>> {
+    let lm = &reg.manifest.lm;
+    let mut ctx: Vec<i32> = prompt.to_vec();
+    for _ in 0..n_new {
+        // Build a full (B, L) batch: row 0 = right-aligned context.
+        let mut tokens = vec![b' ' as i32; lm.batch * lm.seq_len];
+        let take = ctx.len().min(lm.seq_len);
+        let dst0 = lm.seq_len - take;
+        tokens[dst0..lm.seq_len].copy_from_slice(&ctx[ctx.len() - take..]);
+        let logits = reg.lm_logits(params, &tokens)?;
+        // Last position of row 0.
+        let off = (lm.seq_len - 1) * lm.vocab;
+        let row = &logits[off..off + lm.vocab];
+        let next = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as i32)
+            .unwrap();
+        ctx.push(next);
+    }
+    Ok(ctx[prompt.len()..].to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::CorpusProfile;
+    use crate::runtime::Manifest;
+
+    #[test]
+    fn short_training_reduces_loss_and_ppl_finite() {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let reg = ArtifactRegistry::open(&dir).unwrap();
+        let corpus = Corpus::build(CorpusProfile::Ptb, 100_000, 1);
+        let mut tr = LmTrainer::new(&reg, 42);
+        tr.train(&corpus, 12, 0).unwrap();
+        let first = tr.curve[0].1;
+        let last = tr.last_loss();
+        assert!(last < first, "loss {first} → {last}");
+        let ppl = tr.eval_ppl(&corpus, 2).unwrap();
+        assert!(ppl.is_finite() && ppl > 1.0);
+    }
+
+    #[test]
+    fn generation_produces_tokens() {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let reg = ArtifactRegistry::open(&dir).unwrap();
+        let tr = LmTrainer::new(&reg, 7);
+        let prompt: Vec<i32> = "the ".bytes().map(|b| b as i32).collect();
+        let out = generate_greedy(&reg, &tr.params, &prompt, 4).unwrap();
+        assert_eq!(out.len(), 4);
+        assert!(out.iter().all(|&t| (0..256).contains(&t)));
+    }
+}

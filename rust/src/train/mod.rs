@@ -1,0 +1,10 @@
+//! Training drivers: the AOT-backed LM trainer (e2e example + Table 1)
+//! and the swappable-attention sentiment classifier (Table 3).
+
+pub mod classifier;
+pub mod host_lm;
+pub mod lm;
+
+pub use classifier::{AttnMethod, SentimentClassifier};
+pub use host_lm::HostLm;
+pub use lm::{generate_greedy, LmTrainer};

@@ -1,0 +1,149 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args and
+//! subcommands; typed getters with defaults and error reporting.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: a subcommand (first bare word), named options, flags
+/// and remaining positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit argv (without the binary name).
+    pub fn parse_from<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminates option parsing.
+                    out.positional.extend(iter);
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else {
+                    // Lookahead: value unless next token is another option.
+                    match iter.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = iter.next().unwrap();
+                            out.opts.insert(body.to_string(), v);
+                        }
+                        _ => out.flags.push(body.to_string()),
+                    }
+                }
+            } else if out.command.is_none() && out.positional.is_empty() && out.opts.is_empty() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Result<Args, String> {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.opts.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.parse_or(name, default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.parse_or(name, default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.parse_or(name, default)
+    }
+
+    fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.get(name) {
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                eprintln!("warning: --{name}={v} not parseable, using default");
+                default
+            }),
+            None => default,
+        }
+    }
+
+    /// Comma-separated list of usizes, e.g. `--ranks 16,32,64`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.trim().parse().expect("integer list"))
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("serve --port 8080 --verbose --mode=fast tail1 tail2");
+        assert_eq!(a.command.as_deref(), Some("serve"));
+        assert_eq!(a.get("port"), Some("8080"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("mode"), Some("fast"));
+        assert_eq!(a.positional, vec!["tail1", "tail2"]);
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse("x --n 32 --lr 0.001");
+        assert_eq!(a.usize_or("n", 0), 32);
+        assert!((a.f64_or("lr", 0.0) - 0.001).abs() < 1e-12);
+        assert_eq!(a.usize_or("missing", 7), 7);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse("x --ranks 16,32,64");
+        assert_eq!(a.usize_list_or("ranks", &[]), vec![16, 32, 64]);
+        assert_eq!(a.usize_list_or("absent", &[8]), vec![8]);
+    }
+
+    #[test]
+    fn double_dash_stops_parsing() {
+        let a = parse("run --a 1 -- --not-an-opt");
+        assert_eq!(a.get("a"), Some("1"));
+        assert_eq!(a.positional, vec!["--not-an-opt"]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("x --fast --slow");
+        assert!(a.flag("fast"));
+        assert!(a.flag("slow"));
+    }
+}

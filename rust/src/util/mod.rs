@@ -1,0 +1,16 @@
+//! Zero-dependency utility substrates: PRNG, thread pool, CLI parsing,
+//! JSON, logging and timing. The offline build has no tokio/clap/serde/
+//! rand, so these are first-class modules with their own tests.
+
+pub mod cli;
+pub mod json;
+pub mod logger;
+pub mod rng;
+pub mod threadpool;
+pub mod timer;
+
+pub use cli::Args;
+pub use json::Json;
+pub use rng::Pcg32;
+pub use threadpool::{global_pool, ThreadPool};
+pub use timer::{LatencyStats, Stopwatch};

@@ -1,0 +1,253 @@
+//! Minimal work-stealing-free thread pool (tokio/rayon are unavailable in
+//! the offline build). Supports fire-and-forget jobs and a scoped
+//! parallel-for used by the blocked matmul and batched SVD.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// Fixed-size thread pool.
+pub struct ThreadPool {
+    tx: Sender<Msg>,
+    shared_rx: Arc<Mutex<std::sync::mpsc::Receiver<Msg>>>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Spawn `size` workers (clamped to >= 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = channel::<Msg>();
+        let shared_rx = Arc::new(Mutex::new(rx));
+        let mut workers = Vec::with_capacity(size);
+        for i in 0..size {
+            let rx = Arc::clone(&shared_rx);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("drrl-worker-{i}"))
+                    .spawn(move || loop {
+                        let msg = { rx.lock().unwrap().recv() };
+                        match msg {
+                            Ok(Msg::Run(job)) => job(),
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool { tx, shared_rx, workers, size }
+    }
+
+    /// Pool sized to the machine (cores, capped at 16).
+    pub fn default_for_machine() -> Self {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Self::new(n.min(16))
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Fire-and-forget.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx.send(Msg::Run(Box::new(f))).expect("pool alive");
+    }
+
+    /// Run `n` indexed chunks of work and wait for all of them.
+    ///
+    /// `f` is shared by reference across workers; the closure must be
+    /// `Sync`. Blocks the caller until every chunk finishes.
+    pub fn scoped_for<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Send + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        if n == 1 || self.size == 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let latch = Arc::new(Latch::new(n));
+        // SAFETY: we block on the latch before returning, so `f` outlives
+        // every job that borrows it.
+        let f_ptr: &(dyn Fn(usize) + Send + Sync) = &f;
+        let f_static: &'static (dyn Fn(usize) + Send + Sync) =
+            unsafe { std::mem::transmute(f_ptr) };
+        for i in 0..n {
+            let latch = Arc::clone(&latch);
+            self.execute(move || {
+                f_static(i);
+                latch.count_down();
+            });
+        }
+        latch.wait();
+    }
+
+    /// Split `total` items into roughly equal chunks (one per worker) and
+    /// run `f(start, end)` on each in parallel.
+    pub fn chunked_for<F>(&self, total: usize, min_chunk: usize, f: F)
+    where
+        F: Fn(usize, usize) + Send + Sync,
+    {
+        if total == 0 {
+            return;
+        }
+        let chunks = (total / min_chunk.max(1)).clamp(1, self.size * 2);
+        let per = total.div_ceil(chunks);
+        self.scoped_for(chunks, |c| {
+            let start = c * per;
+            let end = ((c + 1) * per).min(total);
+            if start < end {
+                f(start, end);
+            }
+        });
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in 0..self.workers.len() {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        // Drain: workers holding the shared receiver exit on Shutdown/Err.
+        let _ = &self.shared_rx;
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Simple countdown latch.
+pub struct Latch {
+    remaining: AtomicUsize,
+    mu: Mutex<()>,
+    cv: Condvar,
+}
+
+impl Latch {
+    pub fn new(n: usize) -> Self {
+        Latch { remaining: AtomicUsize::new(n), mu: Mutex::new(()), cv: Condvar::new() }
+    }
+
+    pub fn count_down(&self) {
+        if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let _g = self.mu.lock().unwrap();
+            self.cv.notify_all();
+        }
+    }
+
+    pub fn wait(&self) {
+        let mut g = self.mu.lock().unwrap();
+        while self.remaining.load(Ordering::Acquire) != 0 {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+/// Wrapper that lets a raw mutable pointer cross thread boundaries for
+/// scoped disjoint writes (each worker touches a disjoint region).
+/// Method-based access ensures closures capture the whole wrapper under
+/// edition-2021 disjoint field capture.
+pub struct SendPtr<T>(*mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    pub fn new(p: &mut T) -> Self {
+        SendPtr(p as *mut T)
+    }
+
+    /// # Safety
+    /// Callers must guarantee disjoint access across threads and that the
+    /// pointee outlives every use (the scoped_for latch provides this).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get(&self) -> &mut T {
+        &mut *self.0
+    }
+}
+
+/// Global shared pool for the numeric kernels; created lazily.
+pub fn global_pool() -> &'static ThreadPool {
+    use std::sync::OnceLock;
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(ThreadPool::default_for_machine)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        let latch = Arc::new(Latch::new(100));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            let l = Arc::clone(&latch);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+                l.count_down();
+            });
+        }
+        latch.wait();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn scoped_for_covers_every_index() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicU64> = (0..64).map(|_| AtomicU64::new(0)).collect();
+        pool.scoped_for(64, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for h in &hits {
+            assert_eq!(h.load(Ordering::Relaxed), 1);
+        }
+    }
+
+    #[test]
+    fn chunked_for_partitions_exactly() {
+        let pool = ThreadPool::new(3);
+        let total = 1000;
+        let seen = Arc::new(Mutex::new(vec![0u8; total]));
+        pool.chunked_for(total, 10, |s, e| {
+            let mut g = seen.lock().unwrap();
+            for i in s..e {
+                g[i] += 1;
+            }
+        });
+        assert!(seen.lock().unwrap().iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn zero_work_is_fine() {
+        let pool = ThreadPool::new(2);
+        pool.scoped_for(0, |_| panic!("should not run"));
+        pool.chunked_for(0, 4, |_, _| panic!("should not run"));
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        let latch = Arc::new(Latch::new(1));
+        let l = Arc::clone(&latch);
+        pool.execute(move || l.count_down());
+        latch.wait();
+        drop(pool); // must not hang
+    }
+}

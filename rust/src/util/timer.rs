@@ -1,0 +1,152 @@
+//! Timing helpers: scoped stopwatch and streaming latency statistics
+//! (mean / p50 / p90 / p99) used by the metrics module and bench harness.
+
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Reservoir of samples with summary statistics. Keeps all samples up to a
+/// cap (default 1M, plenty for our benches) — exact percentiles matter
+/// more here than constant memory.
+#[derive(Debug, Clone)]
+pub struct LatencyStats {
+    samples: Vec<f64>,
+    cap: usize,
+    total_count: u64,
+    sum: f64,
+}
+
+impl Default for LatencyStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyStats {
+    pub fn new() -> Self {
+        LatencyStats { samples: Vec::new(), cap: 1_000_000, total_count: 0, sum: 0.0 }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.total_count += 1;
+        self.sum += v;
+        if self.samples.len() < self.cap {
+            self.samples.push(v);
+        }
+    }
+
+    pub fn record_duration(&mut self, d: Duration) {
+        self.record(d.as_secs_f64() * 1e3); // milliseconds
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total_count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total_count == 0 {
+            0.0
+        } else {
+            self.sum / self.total_count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Exact percentile over retained samples (q in [0,1]).
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((sorted.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+        sorted[idx]
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(0.50)
+    }
+
+    pub fn p90(&self) -> f64 {
+        self.percentile(0.90)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(0.99)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.3} p50={:.3} p90={:.3} p99={:.3} max={:.3}",
+            self.total_count,
+            self.mean(),
+            self.p50(),
+            self.p90(),
+            self.p99(),
+            if self.samples.is_empty() { 0.0 } else { self.max() }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_on_known_data() {
+        let mut s = LatencyStats::new();
+        for i in 1..=100 {
+            s.record(i as f64);
+        }
+        assert_eq!(s.count(), 100);
+        assert!((s.mean() - 50.5).abs() < 1e-9);
+        assert!((s.p50() - 50.0).abs() <= 1.0);
+        assert!((s.p99() - 99.0).abs() <= 1.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 100.0);
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let s = LatencyStats::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.p99(), 0.0);
+    }
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(sw.elapsed_ms() >= 1.0);
+    }
+}

@@ -1,0 +1,64 @@
+//! End-to-end smoke: artifacts → runtime → trainer → controller, all
+//! layers composing. (The full-length e2e run is examples/train_lm_e2e;
+//! this keeps CI-fast coverage of the same path.)
+
+use drrl::data::{Corpus, CorpusProfile};
+use drrl::runtime::{ArtifactRegistry, Manifest};
+use drrl::train::LmTrainer;
+
+fn registry() -> Option<ArtifactRegistry> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(ArtifactRegistry::open(&dir).unwrap())
+}
+
+#[test]
+fn train_eval_generate_compose() {
+    let Some(reg) = registry() else { return };
+    let corpus = Corpus::build(CorpusProfile::Wiki103, 120_000, 3);
+    let mut tr = LmTrainer::new(&reg, 11);
+    tr.train(&corpus, 10, 0).unwrap();
+    assert!(tr.last_loss() < tr.curve[0].1, "loss must drop in 10 steps");
+    let ppl = tr.eval_ppl(&corpus, 2).unwrap();
+    assert!(ppl > 1.0 && ppl.is_finite());
+    let out =
+        drrl::train::generate_greedy(&reg, &tr.params, &[b't' as i32, b'h' as i32], 3).unwrap();
+    assert_eq!(out.len(), 3);
+}
+
+#[test]
+fn manifest_artifacts_all_loadable() {
+    let Some(reg) = registry() else { return };
+    // Warm (compile) every artifact — catches HLO-text incompatibilities.
+    for name in reg.manifest.artifact_files.keys() {
+        reg.device.warm(name).unwrap_or_else(|e| panic!("artifact {name} failed: {e:#}"));
+    }
+}
+
+#[test]
+fn host_and_device_attention_agree_end_to_end() {
+    let Some(reg) = registry() else { return };
+    use drrl::attention::{attention_matrix, AttnInputs};
+    use drrl::linalg::{top_k_svd, Mat};
+    use drrl::util::Pcg32;
+    let n = reg.manifest.kernel.seq_len;
+    let d = reg.manifest.kernel.head_dim;
+    let mut rng = Pcg32::seeded(17);
+    for rank in [16usize, 32, 48, 64] {
+        let inp = AttnInputs {
+            q: Mat::randn(n, d, 0.6, &mut rng),
+            k: Mat::randn(n, d, 0.6, &mut rng),
+            v: Mat::randn(n, d, 1.0, &mut rng),
+            causal: true,
+        };
+        let a = attention_matrix(&inp);
+        let svd = top_k_svd(&a, rank, 5);
+        let dev = reg.lowrank_attention(&svd, rank, &inp.v).unwrap();
+        let host = drrl::attention::lowrank_attention_output(&svd, rank, &inp.v);
+        let diff = dev.max_abs_diff(&host);
+        assert!(diff < 1e-4, "rank {rank}: device/host diff {diff}");
+    }
+}

@@ -1,0 +1,174 @@
+//! Integration tests: the full serving stack (router → batcher → engine
+//! → rank controller → device thread → PJRT) against real artifacts.
+//! All tests no-op gracefully when `make artifacts` has not run.
+
+use drrl::attention::MhsaWeights;
+use drrl::coordinator::{
+    BatchPolicy, ControllerConfig, PolicySource, RouteStrategy, Router, ServingEngine,
+};
+use drrl::linalg::Mat;
+use drrl::runtime::{ArtifactRegistry, Manifest};
+use drrl::util::Pcg32;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn registry() -> Option<Arc<ArtifactRegistry>> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Arc::new(ArtifactRegistry::open(&dir).unwrap()))
+}
+
+fn mk_engine(reg: &Arc<ArtifactRegistry>, source: PolicySource, n_layers: usize) -> ServingEngine {
+    let kd = reg.manifest.kernel.head_dim;
+    let mut rng = Pcg32::seeded(33);
+    let layers: Vec<MhsaWeights> =
+        (0..n_layers).map(|_| MhsaWeights::init(kd, 1, &mut rng)).collect();
+    let mut params = vec![0f32; reg.manifest.lm.param_count];
+    rng.fill_normal_f32(&mut params, 0.02);
+    ServingEngine::start(
+        Arc::clone(reg),
+        Arc::new(params),
+        layers,
+        ControllerConfig { segment_len: 4, ..Default::default() },
+        source,
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2), capacity: 64 },
+    )
+}
+
+#[test]
+fn attention_requests_round_trip() {
+    let Some(reg) = registry() else { return };
+    let engine = mk_engine(&reg, PolicySource::Hlo, 2);
+    let n = reg.manifest.kernel.seq_len;
+    let kd = reg.manifest.kernel.head_dim;
+    let mut rng = Pcg32::seeded(1);
+    let mut rxs = Vec::new();
+    for i in 0..6 {
+        let x = Mat::randn(n, kd, 1.0, &mut rng);
+        let (_, rx) = engine.submit_attention(x.into_vec(), n, kd, i % 2).unwrap();
+        rxs.push(rx);
+    }
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(300)).expect("response");
+        assert_eq!(resp.y.len(), n * kd);
+        assert!(resp.y.iter().all(|v| v.is_finite()));
+        assert!(!resp.ranks.is_empty());
+        for &r in &resp.ranks {
+            assert!((16..=64).contains(&r), "rank {r} outside grid");
+        }
+        assert!(resp.flops_full > 0);
+    }
+    assert_eq!(engine.metrics.requests(), 6);
+}
+
+#[test]
+fn generate_requests_batched() {
+    let Some(reg) = registry() else { return };
+    let engine = mk_engine(&reg, PolicySource::Hlo, 1);
+    let mut rxs = Vec::new();
+    for i in 0..3 {
+        let prompt: Vec<i32> = format!("hello {i} ").bytes().map(|b| b as i32).collect();
+        let (_, rx) = engine.submit_generate(prompt, 3).unwrap();
+        rxs.push(rx);
+    }
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(300)).expect("response");
+        assert_eq!(resp.tokens.len(), 3);
+        assert!(resp.tokens.iter().all(|&t| (0..256).contains(&t)));
+    }
+}
+
+#[test]
+fn full_rank_policy_reports_no_saving() {
+    let Some(reg) = registry() else { return };
+    let engine = mk_engine(&reg, PolicySource::FullRank, 1);
+    let n = reg.manifest.kernel.seq_len;
+    let kd = reg.manifest.kernel.head_dim;
+    let mut rng = Pcg32::seeded(2);
+    let x = Mat::randn(n, kd, 1.0, &mut rng);
+    let (_, rx) = engine.submit_attention(x.into_vec(), n, kd, 0).unwrap();
+    let resp = rx.recv_timeout(Duration::from_secs(300)).unwrap();
+    assert_eq!(resp.flops_spent, resp.flops_full);
+    assert!(engine.metrics.flops_saving().abs() < 1e-9);
+}
+
+#[test]
+fn fixed_policy_selects_configured_rank() {
+    let Some(reg) = registry() else { return };
+    let engine = mk_engine(&reg, PolicySource::Fixed(32), 1);
+    let n = reg.manifest.kernel.seq_len;
+    let kd = reg.manifest.kernel.head_dim;
+    let mut rng = Pcg32::seeded(3);
+    let x = Mat::randn(n, kd, 1.0, &mut rng);
+    let (_, rx) = engine.submit_attention(x.into_vec(), n, kd, 0).unwrap();
+    let resp = rx.recv_timeout(Duration::from_secs(300)).unwrap();
+    // Trust region may push off 32 only if masked; with a fresh stream
+    // the self-transition is always admissible.
+    assert_eq!(resp.ranks[0], 32);
+}
+
+#[test]
+fn router_spreads_load() {
+    let Some(reg) = registry() else { return };
+    let engines = vec![
+        mk_engine(&reg, PolicySource::Fixed(32), 1),
+        mk_engine(&reg, PolicySource::Fixed(32), 1),
+    ];
+    let router = Router::new(engines, RouteStrategy::RoundRobin);
+    let n = reg.manifest.kernel.seq_len;
+    let kd = reg.manifest.kernel.head_dim;
+    let mut rng = Pcg32::seeded(4);
+    let mut rxs = Vec::new();
+    for _ in 0..4 {
+        let x = Mat::randn(n, kd, 1.0, &mut rng);
+        let (_, rx) = router.submit_attention(x.into_vec(), n, kd, 0).unwrap();
+        rxs.push(rx);
+    }
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(300)).unwrap();
+    }
+    // Round-robin: both engines saw work.
+    assert_eq!(router.engines()[0].metrics.requests(), 2);
+    assert_eq!(router.engines()[1].metrics.requests(), 2);
+}
+
+#[test]
+fn backpressure_rejects_over_capacity() {
+    let Some(reg) = registry() else { return };
+    let kd = reg.manifest.kernel.head_dim;
+    let n = reg.manifest.kernel.seq_len;
+    let mut rng = Pcg32::seeded(5);
+    let layers = vec![MhsaWeights::init(kd, 1, &mut rng)];
+    let mut params = vec![0f32; reg.manifest.lm.param_count];
+    rng.fill_normal_f32(&mut params, 0.02);
+    let engine = ServingEngine::start(
+        Arc::clone(&reg),
+        Arc::new(params),
+        layers,
+        ControllerConfig::default(),
+        PolicySource::Fixed(16),
+        // Tiny queue + long wait so submissions outpace the worker.
+        BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(50), capacity: 2 },
+    );
+    let mut accepted = 0;
+    let mut rejected = 0;
+    let mut rxs = Vec::new();
+    for _ in 0..20 {
+        let x = Mat::randn(n, kd, 1.0, &mut rng);
+        match engine.submit_attention(x.into_vec(), n, kd, 0) {
+            Ok((_, rx)) => {
+                accepted += 1;
+                rxs.push(rx);
+            }
+            Err(_) => rejected += 1,
+        }
+    }
+    assert!(rejected > 0, "expected backpressure (accepted {accepted})");
+    for rx in rxs {
+        let _ = rx.recv_timeout(Duration::from_secs(300));
+    }
+    assert_eq!(engine.metrics.rejected(), rejected as u64);
+}
