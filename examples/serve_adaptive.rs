@@ -1,14 +1,21 @@
 //! Adaptive serving demo: batched attention segments flow through the
-//! router → dynamic batcher → DR-RL rank controller → rank-bucket Pallas
-//! executables, with latency/throughput percentiles and the FLOPs ledger
-//! reported at the end. An A/B comparison against the full-rank and
-//! fixed-rank policies runs in the same process.
+//! router → dynamic batcher → multi-worker engine → DR-RL rank controller
+//! → rank-bucket executables, with latency/throughput percentiles and the
+//! FLOPs ledger reported at the end. An A/B comparison against the
+//! full-rank and fixed-rank policies runs in the same process.
 //!
-//! Run: `cargo run --release --example serve_adaptive -- [--requests 64]`
+//! Works without artifacts: when `make artifacts` has not run, the demo
+//! falls back to the pure-Rust host backend (and swaps the AOT `Hlo`
+//! policy for the spectral `AdaptiveEnergy` policy, which needs no
+//! artifact weights).
+//!
+//! Run: `cargo run --release --example serve_adaptive -- [--requests 64]
+//!       [--engines 1] [--workers 4]`
 
 use drrl::attention::MhsaWeights;
 use drrl::coordinator::{
-    BatchPolicy, ControllerConfig, PolicySource, RouteStrategy, Router, ServingEngine,
+    BatchPolicy, ControllerConfig, EngineConfig, PolicySource, RouteStrategy, Router,
+    ServingEngine,
 };
 use drrl::linalg::Mat;
 use drrl::runtime::ArtifactRegistry;
@@ -16,6 +23,7 @@ use drrl::util::{Args, Pcg32, Stopwatch};
 use std::sync::Arc;
 use std::time::Duration;
 
+#[allow(clippy::too_many_arguments)]
 fn run_policy(
     reg: &Arc<ArtifactRegistry>,
     layers: &[MhsaWeights],
@@ -23,20 +31,24 @@ fn run_policy(
     source: PolicySource,
     n_requests: usize,
     n_engines: usize,
+    n_workers: usize,
     seed: u64,
 ) -> anyhow::Result<()> {
     let name = source.name();
     let mk = |src: PolicySource| {
-        ServingEngine::start(
+        ServingEngine::start_with_config(
             Arc::clone(reg),
             Arc::clone(params),
             layers.to_vec(),
             ControllerConfig { segment_len: 16, ..Default::default() },
             src,
-            BatchPolicy {
-                max_batch: 8,
-                max_wait: Duration::from_millis(2),
-                capacity: 4096,
+            EngineConfig {
+                n_workers,
+                batch_policy: BatchPolicy {
+                    max_batch: 8,
+                    max_wait: Duration::from_millis(2),
+                    capacity: 4096,
+                },
             },
         )
     };
@@ -81,14 +93,18 @@ fn run_policy(
     }
     let mut rank_hist = std::collections::BTreeMap::<usize, u64>::new();
     for rx in rxs {
-        if let Ok(resp) = rx.recv_timeout(Duration::from_secs(600)) {
-            for &r in &resp.ranks {
-                *rank_hist.entry(r).or_default() += 1;
+        match rx.recv_timeout(Duration::from_secs(600)) {
+            Ok(Ok(resp)) => {
+                for &r in &resp.ranks {
+                    *rank_hist.entry(r).or_default() += 1;
+                }
             }
+            Ok(Err(e)) => eprintln!("request failed: {e}"),
+            Err(_) => eprintln!("request timed out"),
         }
     }
     let wall = sw.elapsed().as_secs_f64();
-    println!("\n─── policy: {name} ({n_engines} engine(s)) ───");
+    println!("\n─── policy: {name} ({n_engines} engine(s) × {n_workers} worker(s)) ───");
     println!("{}", router.report());
     println!(
         "wall {wall:.2}s  throughput {:.1} req/s  rank histogram {:?}",
@@ -102,12 +118,22 @@ fn main() -> anyhow::Result<()> {
     let args = Args::from_env().unwrap_or_default();
     let n_requests = args.usize_or("requests", 48);
     let n_engines = args.usize_or("engines", 1);
+    let n_workers = args.usize_or("workers", 2);
     let n_layers = args.usize_or("n-layers", 4);
 
-    let reg = Arc::new(
-        ArtifactRegistry::open_default()
-            .map_err(|e| anyhow::anyhow!("{e:#}\nrun `make artifacts` first"))?,
-    );
+    // Prefer real artifacts; fall back to the host backend so the demo
+    // runs offline. The AOT transformer policy only exists as an
+    // artifact, so host mode uses the spectral-energy policy instead.
+    let (reg, adaptive_policy) = match ArtifactRegistry::open_default() {
+        Ok(reg) => (Arc::new(reg), PolicySource::Hlo),
+        Err(e) => {
+            eprintln!("artifacts unavailable ({e:#}); using the pure-Rust host backend");
+            (
+                Arc::new(ArtifactRegistry::open_host(128, 32)),
+                PolicySource::AdaptiveEnergy(0.9),
+            )
+        }
+    };
     let d = reg.manifest.kernel.head_dim;
     let mut rng = Pcg32::seeded(9);
     let layers: Vec<MhsaWeights> =
@@ -127,9 +153,27 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    run_policy(&reg, &layers, &params, PolicySource::Hlo, n_requests, n_engines, 1)?;
-    run_policy(&reg, &layers, &params, PolicySource::Fixed(32), n_requests, n_engines, 2)?;
-    run_policy(&reg, &layers, &params, PolicySource::FullRank, n_requests, n_engines, 3)?;
+    run_policy(&reg, &layers, &params, adaptive_policy, n_requests, n_engines, n_workers, 1)?;
+    run_policy(
+        &reg,
+        &layers,
+        &params,
+        PolicySource::Fixed(32),
+        n_requests,
+        n_engines,
+        n_workers,
+        2,
+    )?;
+    run_policy(
+        &reg,
+        &layers,
+        &params,
+        PolicySource::FullRank,
+        n_requests,
+        n_engines,
+        n_workers,
+        3,
+    )?;
     println!("\nOK — DR-RL policy served with adaptive ranks; compare the flops_saving lines.");
     Ok(())
 }

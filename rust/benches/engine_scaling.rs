@@ -1,0 +1,105 @@
+//! Multi-worker serving-engine scaling microbench (no artifacts needed —
+//! runs on the pure-Rust host backend).
+//!
+//! Workload per the engine-sharding acceptance bar: 8-head, n=512
+//! attention segments spread over four layers, identical request sets
+//! served by a single-worker and a multi-worker engine. Reports wall
+//! time, throughput and the multi/single speedup (target ≥ 1.5× on a
+//! multi-core host).
+//!
+//! Run: `cargo bench --bench engine_scaling` (or the built binary in
+//! `target/release/`). `DRRL_BENCH_QUICK=1` shrinks the request count.
+
+use drrl::attention::MhsaWeights;
+use drrl::bench_harness::{banner, quick_mode};
+use drrl::coordinator::{
+    BatchPolicy, ControllerConfig, EngineConfig, PolicySource, ServingEngine,
+};
+use drrl::linalg::Mat;
+use drrl::runtime::ArtifactRegistry;
+use drrl::util::{Pcg32, Stopwatch};
+use std::sync::Arc;
+use std::time::Duration;
+
+const KERNEL_N: usize = 512;
+const HEAD_DIM: usize = 64;
+const N_HEADS: usize = 8;
+const D_MODEL: usize = HEAD_DIM * N_HEADS;
+const N_LAYERS: usize = 4;
+
+fn run_engine(
+    reg: &Arc<ArtifactRegistry>,
+    layers: &[MhsaWeights],
+    params: &Arc<Vec<f32>>,
+    n_workers: usize,
+    requests: &[(Vec<f64>, usize)],
+) -> f64 {
+    let engine = ServingEngine::start_with_config(
+        Arc::clone(reg),
+        Arc::clone(params),
+        layers.to_vec(),
+        ControllerConfig { segment_len: 8, ..Default::default() },
+        PolicySource::AdaptiveEnergy(0.9),
+        EngineConfig {
+            n_workers,
+            batch_policy: BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_micros(200),
+                capacity: 1 << 16,
+            },
+        },
+    );
+    let sw = Stopwatch::start();
+    let rxs: Vec<_> = requests
+        .iter()
+        .map(|(x, layer)| {
+            engine
+                .submit_attention(x.clone(), KERNEL_N, D_MODEL, *layer)
+                .expect("submit")
+                .1
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(600)).expect("response").expect("ok");
+    }
+    sw.elapsed().as_secs_f64()
+}
+
+fn main() -> anyhow::Result<()> {
+    banner(
+        "engine scaling: multi-worker vs single-worker attention serving",
+        "sharded engine amortizes batched per-head SVD (≥1.5× target)",
+    );
+    let n_requests = if quick_mode() { 8 } else { 24 };
+    let reg = Arc::new(ArtifactRegistry::open_host(KERNEL_N, HEAD_DIM));
+    let mut rng = Pcg32::seeded(0x5CA1E);
+    let layers: Vec<MhsaWeights> =
+        (0..N_LAYERS).map(|_| MhsaWeights::init(D_MODEL, N_HEADS, &mut rng)).collect();
+    let mut params = vec![0f32; reg.manifest.lm.param_count];
+    rng.fill_normal_f32(&mut params, 0.02);
+    let params = Arc::new(params);
+
+    let requests: Vec<(Vec<f64>, usize)> = (0..n_requests)
+        .map(|i| {
+            (Mat::randn(KERNEL_N, D_MODEL, 1.0, &mut rng).into_vec(), i % N_LAYERS)
+        })
+        .collect();
+
+    println!(
+        "workload: {n_requests} segments, n={KERNEL_N}, {N_HEADS} heads × d={HEAD_DIM}, \
+         {N_LAYERS} layers\n"
+    );
+    // Warm-up pass so thread-pool spin-up doesn't bias the first run.
+    let _ = run_engine(&reg, &layers, &params, 1, &requests[..2.min(requests.len())]);
+
+    let t1 = run_engine(&reg, &layers, &params, 1, &requests);
+    let tp1 = n_requests as f64 / t1;
+    println!("single-worker : {t1:>7.2}s  {tp1:>6.2} req/s");
+
+    let n_multi = 4;
+    let tn = run_engine(&reg, &layers, &params, n_multi, &requests);
+    let tpn = n_requests as f64 / tn;
+    println!("{n_multi}-worker      : {tn:>7.2}s  {tpn:>6.2} req/s");
+    println!("\nspeedup: {:.2}× (target ≥ 1.5× on a multi-core host)", t1 / tn);
+    Ok(())
+}

@@ -27,6 +27,11 @@ fn main() -> anyhow::Result<()> {
     });
     b.throughput(2.0 * 256f64.powi(3) / 1e9); // GFLOP per iter
 
+    b.case("matmul_at 256x256x256", || {
+        std::hint::black_box(drrl::linalg::matmul_at(&a256, &b256));
+    });
+    b.throughput(2.0 * 256f64.powi(3) / 1e9);
+
     let a128 = Mat::randn(128, 128, 1.0, &mut rng);
     b.case("top_k_svd n=128 k=64", || {
         std::hint::black_box(top_k_svd(&a128, 64, 1));

@@ -1,38 +1,75 @@
-//! The serving engine: a worker thread that drains the dynamic batcher
-//! and executes batched LM generation plus DR-RL adaptive attention
-//! segments against the AOT artifacts.
+//! The serving engine: N worker threads drain the shared dynamic batcher
+//! and execute batched LM generation plus DR-RL adaptive attention
+//! segments against the artifact registry.
+//!
+//! Sharding model: rank-controller state is sharded **per layer** (one
+//! `Mutex<RankController>` per layer, all sharing one `PolicySource`), so
+//! same-layer decisions stay coherent and serialized while requests to
+//! different layers — and the generate path — proceed in parallel.
+//! Within one attention request the per-head probe/SVD and factor-apply
+//! dispatches fan out over the global thread pool (see
+//! `RankController::attention_heads_batched`), so a multi-head segment
+//! costs roughly one head of wall-clock.
 
 use super::batcher::{BatchPolicy, DynamicBatcher, SubmitError};
 use super::metrics::Metrics;
 use super::rank_controller::{ControllerConfig, PolicySource, RankController};
 use super::request::*;
-use crate::attention::{project_heads, MhsaWeights};
+use crate::attention::{merge_heads, project_heads, AttnInputs, MhsaWeights};
 use crate::linalg::Mat;
 use crate::runtime::ArtifactRegistry;
 use crate::util::Stopwatch;
 use anyhow::Result;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 enum Work {
-    Generate(GenerateRequest, Sender<GenerateResponse>),
-    Attention(AttentionRequest, Sender<AttentionResponse>),
+    Generate(GenerateRequest, Sender<EngineResult<GenerateResponse>>),
+    Attention(AttentionRequest, Sender<EngineResult<AttentionResponse>>),
 }
 
-/// Engine handle. Cloneable; submit from any thread.
+/// Engine tuning knobs beyond the batching policy.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Worker threads draining the batcher. ≥ 2 by default so attention
+    /// segments and generation batches overlap.
+    pub n_workers: usize,
+    pub batch_policy: BatchPolicy,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { n_workers: 2, batch_policy: BatchPolicy::default() }
+    }
+}
+
+/// Shared state every worker operates on.
+struct EngineShared {
+    reg: Arc<ArtifactRegistry>,
+    lm_params: Arc<Vec<f32>>,
+    layers: Vec<MhsaWeights>,
+    /// One controller shard per layer; index = layer.
+    shards: Vec<Mutex<RankController>>,
+    metrics: Arc<Metrics>,
+    /// Prompt-shutdown flag: once set, workers stop computing queued
+    /// work and reply with explicit errors instead.
+    stopped: AtomicBool,
+}
+
+/// Engine handle. Submit from any thread.
 pub struct ServingEngine {
     batcher: Arc<DynamicBatcher<Work>>,
     pub metrics: Arc<Metrics>,
     next_id: AtomicU64,
-    stopped: Arc<AtomicBool>,
-    worker: Option<std::thread::JoinHandle<()>>,
+    shared: Arc<EngineShared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl ServingEngine {
-    /// Start an engine over an artifact registry. The engine owns a
-    /// frozen attention layer stack (for the adaptive-attention service)
-    /// and the trained LM params (for generation), both supplied here.
+    /// Start an engine with the default worker count (N = 2). The engine
+    /// owns a frozen attention layer stack (for the adaptive-attention
+    /// service) and the trained LM params (for generation).
     pub fn start(
         reg: Arc<ArtifactRegistry>,
         lm_params: Arc<Vec<f32>>,
@@ -41,27 +78,66 @@ impl ServingEngine {
         source: PolicySource,
         batch_policy: BatchPolicy,
     ) -> ServingEngine {
-        let batcher = Arc::new(DynamicBatcher::new(batch_policy));
+        Self::start_with_config(
+            reg,
+            lm_params,
+            layers,
+            controller_cfg,
+            source,
+            EngineConfig { batch_policy, ..EngineConfig::default() },
+        )
+    }
+
+    /// Start an engine with an explicit worker count.
+    pub fn start_with_config(
+        reg: Arc<ArtifactRegistry>,
+        lm_params: Arc<Vec<f32>>,
+        layers: Vec<MhsaWeights>,
+        controller_cfg: ControllerConfig,
+        source: PolicySource,
+        config: EngineConfig,
+    ) -> ServingEngine {
+        let batcher = Arc::new(DynamicBatcher::new(config.batch_policy));
         let metrics = Arc::new(Metrics::new());
-        let stopped = Arc::new(AtomicBool::new(false));
-        let worker = {
-            let batcher = Arc::clone(&batcher);
-            let metrics = Arc::clone(&metrics);
-            std::thread::Builder::new()
-                .name("drrl-engine".into())
-                .spawn(move || {
-                    let mut controller = RankController::new(controller_cfg, source);
-                    worker_loop(&reg, &lm_params, &layers, &mut controller, &batcher, &metrics);
-                })
-                .expect("spawn engine worker")
-        };
+        let source = Arc::new(source);
+        let shards: Vec<Mutex<RankController>> = (0..layers.len().max(1))
+            .map(|_| {
+                Mutex::new(RankController::with_shared_source(
+                    controller_cfg.clone(),
+                    Arc::clone(&source),
+                ))
+            })
+            .collect();
+        let shared = Arc::new(EngineShared {
+            reg,
+            lm_params,
+            layers,
+            shards,
+            metrics: Arc::clone(&metrics),
+            stopped: AtomicBool::new(false),
+        });
+        let n_workers = config.n_workers.max(1);
+        let workers = (0..n_workers)
+            .map(|i| {
+                let batcher = Arc::clone(&batcher);
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("drrl-engine-{i}"))
+                    .spawn(move || worker_loop(&shared, &batcher))
+                    .expect("spawn engine worker")
+            })
+            .collect();
         ServingEngine {
             batcher,
             metrics,
             next_id: AtomicU64::new(1),
-            stopped,
-            worker: Some(worker),
+            shared,
+            workers,
         }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
     }
 
     fn submit(&self, work: Work) -> Result<(), SubmitError> {
@@ -77,7 +153,8 @@ impl ServingEngine {
         &self,
         prompt: Vec<i32>,
         max_new_tokens: usize,
-    ) -> Result<(RequestId, std::sync::mpsc::Receiver<GenerateResponse>), SubmitError> {
+    ) -> Result<(RequestId, std::sync::mpsc::Receiver<EngineResult<GenerateResponse>>), SubmitError>
+    {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = std::sync::mpsc::channel();
         self.submit(Work::Generate(GenerateRequest { id, prompt, max_new_tokens }, tx))?;
@@ -91,7 +168,8 @@ impl ServingEngine {
         n: usize,
         d_model: usize,
         layer: usize,
-    ) -> Result<(RequestId, std::sync::mpsc::Receiver<AttentionResponse>), SubmitError> {
+    ) -> Result<(RequestId, std::sync::mpsc::Receiver<EngineResult<AttentionResponse>>), SubmitError>
+    {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = std::sync::mpsc::channel();
         self.submit(Work::Attention(AttentionRequest { id, x, n, d_model, layer }, tx))?;
@@ -102,11 +180,13 @@ impl ServingEngine {
         self.batcher.len()
     }
 
-    /// Graceful shutdown: drain, then join the worker.
+    /// Prompt shutdown: stop computing queued work (remaining requests
+    /// get explicit `EngineError` replies), then join the workers.
+    /// In-flight work finishes normally.
     pub fn shutdown(mut self) {
-        self.stopped.store(true, Ordering::Relaxed);
+        self.shared.stopped.store(true, Ordering::SeqCst);
         self.batcher.close();
-        if let Some(w) = self.worker.take() {
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
@@ -114,25 +194,41 @@ impl ServingEngine {
 
 impl Drop for ServingEngine {
     fn drop(&mut self) {
+        // Graceful: drain the queue fully, then join.
         self.batcher.close();
-        if let Some(w) = self.worker.take() {
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
 }
 
-fn worker_loop(
-    reg: &ArtifactRegistry,
-    lm_params: &[f32],
-    layers: &[MhsaWeights],
-    controller: &mut RankController,
-    batcher: &DynamicBatcher<Work>,
-    metrics: &Metrics,
-) {
+fn worker_loop(shared: &EngineShared, batcher: &DynamicBatcher<Work>) {
     while let Some(batch) = batcher.next_batch() {
+        if shared.stopped.load(Ordering::SeqCst) {
+            // Prompt shutdown: reply Closed-style errors instead of
+            // computing (the batcher is already closed to submitters).
+            for p in batch {
+                match p.inner {
+                    Work::Generate(req, tx) => {
+                        let _ = tx.send(Err(EngineError {
+                            id: req.id,
+                            message: "engine stopped before request ran".into(),
+                        }));
+                    }
+                    Work::Attention(req, tx) => {
+                        let _ = tx.send(Err(EngineError {
+                            id: req.id,
+                            message: "engine stopped before request ran".into(),
+                        }));
+                    }
+                }
+            }
+            continue;
+        }
         let batch_size = batch.len();
         // Split by type, preserving arrival envelopes.
-        let mut gens: Vec<(Pending<()>, GenerateRequest, Sender<GenerateResponse>)> = Vec::new();
+        let mut gens: Vec<(Pending<()>, GenerateRequest, Sender<EngineResult<GenerateResponse>>)> =
+            Vec::new();
         let mut attns = Vec::new();
         for p in batch {
             let arrived = p.arrived;
@@ -144,36 +240,72 @@ fn worker_loop(
             }
         }
         if !gens.is_empty() {
-            if let Err(e) = serve_generate_batch(reg, lm_params, &mut gens, metrics, batch_size) {
+            // serve_generate_batch replies to every request itself (Ok per
+            // chunk, or explicit errors for the failing chunk onward).
+            if let Err(e) = serve_generate_batch(shared, &mut gens, batch_size) {
                 crate::log_warn!("generate batch failed: {e:#}");
             }
         }
         for (arrived, req, tx) in attns {
             let queued_ms = arrived.elapsed().as_secs_f64() * 1e3;
-            match serve_attention(reg, layers, controller, &req, metrics) {
+            match serve_attention(shared, &req) {
                 Ok(mut resp) => {
                     resp.queued_ms = queued_ms;
-                    let _ = tx.send(resp);
+                    let _ = tx.send(Ok(resp));
                 }
-                Err(e) => crate::log_warn!("attention req {} failed: {e:#}", req.id),
+                Err(e) => {
+                    crate::log_warn!("attention req {} failed: {e:#}", req.id);
+                    let _ = tx.send(Err(EngineError {
+                        id: req.id,
+                        message: format!("{e:#}"),
+                    }));
+                }
             }
         }
     }
 }
 
-/// Batched greedy generation: packs up to `lm.batch` prompts into the
-/// fixed-shape logits artifact and decodes all rows in lock-step.
+/// Batched greedy generation over the whole drained batch. Every request
+/// receives exactly one reply: `Ok` when its chunk completes, or an
+/// explicit `EngineError` for the failing chunk and all chunks after it
+/// (already-replied chunks are left alone).
 fn serve_generate_batch(
-    reg: &ArtifactRegistry,
-    lm_params: &[f32],
-    gens: &mut [(Pending<()>, GenerateRequest, Sender<GenerateResponse>)],
-    metrics: &Metrics,
+    shared: &EngineShared,
+    gens: &mut [(Pending<()>, GenerateRequest, Sender<EngineResult<GenerateResponse>>)],
     batch_size: usize,
 ) -> Result<()> {
+    let chunk_size = shared.reg.manifest.lm.batch.max(1);
+    let n = gens.len();
+    for lo in (0..n).step_by(chunk_size) {
+        let hi = (lo + chunk_size).min(n);
+        if let Err(e) = serve_generate_chunk(shared, &mut gens[lo..hi], batch_size) {
+            for (_, req, tx) in &gens[lo..] {
+                let _ = tx.send(Err(EngineError {
+                    id: req.id,
+                    message: format!("generate batch failed: {e:#}"),
+                }));
+            }
+            return Err(e);
+        }
+    }
+    Ok(())
+}
+
+/// One chunk (≤ the artifact batch dim) of greedy generation: packs the
+/// prompts into the fixed-shape logits artifact and decodes all rows in
+/// lock-step.
+fn serve_generate_chunk(
+    shared: &EngineShared,
+    chunk: &mut [(Pending<()>, GenerateRequest, Sender<EngineResult<GenerateResponse>>)],
+    batch_size: usize,
+) -> Result<()> {
+    let reg = &shared.reg;
     let lm = &reg.manifest.lm;
-    let sw = Stopwatch::start();
-    // Process in chunks of the artifact batch dim.
-    for chunk in gens.chunks_mut(lm.batch) {
+    // The stopwatch is scoped per chunk so later chunks don't report the
+    // cumulative elapsed time (which used to inflate compute_ms and the
+    // latency histograms).
+    {
+        let sw = Stopwatch::start();
         let max_steps = chunk.iter().map(|(_, r, _)| r.max_new_tokens).max().unwrap_or(0);
         let mut contexts: Vec<Vec<i32>> =
             chunk.iter().map(|(_, r, _)| r.prompt.clone()).collect();
@@ -185,7 +317,7 @@ fn serve_generate_batch(
                 let dst = row * lm.seq_len + (lm.seq_len - take);
                 tokens[dst..dst + take].copy_from_slice(&ctx[ctx.len() - take..]);
             }
-            let logits = reg.lm_logits(lm_params, &tokens)?;
+            let logits = reg.lm_logits(&shared.lm_params, &tokens)?;
             for (row, ctx) in contexts.iter_mut().enumerate() {
                 if outputs[row].len() >= chunk[row].1.max_new_tokens {
                     continue;
@@ -204,53 +336,59 @@ fn serve_generate_batch(
         let compute_ms = sw.elapsed_ms();
         for (i, (pend, req, tx)) in chunk.iter_mut().enumerate() {
             let queued_ms = pend.queued_ms();
-            metrics.record_request(queued_ms, compute_ms, batch_size);
-            let _ = tx.send(GenerateResponse {
+            shared.metrics.record_request(queued_ms, compute_ms, batch_size);
+            let _ = tx.send(Ok(GenerateResponse {
                 id: req.id,
                 tokens: std::mem::take(&mut outputs[i]),
                 queued_ms,
                 compute_ms,
                 batch_size,
-            });
+            }));
         }
     }
     Ok(())
 }
 
-/// One adaptive-attention segment through the controller.
-fn serve_attention(
-    reg: &ArtifactRegistry,
-    layers: &[MhsaWeights],
-    controller: &mut RankController,
-    req: &AttentionRequest,
-    metrics: &Metrics,
-) -> Result<AttentionResponse> {
+/// One adaptive-attention segment: project heads, then run the batched
+/// controller step for the request's layer shard.
+fn serve_attention(shared: &EngineShared, req: &AttentionRequest) -> Result<AttentionResponse> {
     let sw = Stopwatch::start();
-    anyhow::ensure!(req.layer < layers.len(), "layer {} out of range", req.layer);
-    let w = &layers[req.layer];
+    anyhow::ensure!(req.layer < shared.layers.len(), "layer {} out of range", req.layer);
+    let w = &shared.layers[req.layer];
     anyhow::ensure!(req.d_model == w.d_model(), "d_model mismatch");
     let x = Mat::from_vec(req.n, req.d_model, req.x.clone());
+    // Projection is stateless — run it outside the shard lock.
     let heads = project_heads(&x, w, true);
-    let mut outs = Vec::with_capacity(heads.len());
-    let mut ranks = Vec::with_capacity(heads.len());
+    let head_refs: Vec<(usize, &AttnInputs)> = heads.iter().enumerate().collect();
+    let served = {
+        let mut controller = shared.shards[req.layer].lock().unwrap();
+        controller.attention_heads_batched(
+            &shared.reg,
+            &x,
+            w,
+            &head_refs,
+            req.layer,
+            shared.layers.len(),
+        )?
+    };
+    let mut outs = Vec::with_capacity(served.len());
+    let mut ranks = Vec::with_capacity(served.len());
     let mut spent = 0u64;
     let mut full = 0u64;
-    for (h, inp) in heads.iter().enumerate() {
-        let (y, dec) =
-            controller.attention(reg, &x, w, inp, req.layer, h, layers.len())?;
-        metrics.record_rank(dec.rank);
+    for (y, dec) in served {
+        shared.metrics.record_rank(dec.rank);
         if dec.masked_by_safety {
-            metrics.record_safety_mask();
+            shared.metrics.record_safety_mask();
         }
         spent += dec.flops_spent;
         full += dec.flops_full;
         ranks.push(dec.rank);
         outs.push(y);
     }
-    metrics.record_flops(spent, full);
-    let merged = crate::attention::merge_heads(&outs, w);
+    shared.metrics.record_flops(spent, full);
+    let merged = merge_heads(&outs, w);
     let compute_ms = sw.elapsed_ms();
-    metrics.record_request(0.0, compute_ms, 1);
+    shared.metrics.record_request(0.0, compute_ms, 1);
     Ok(AttentionResponse {
         id: req.id,
         y: merged.into_vec(),
@@ -264,6 +402,8 @@ fn serve_attention(
 
 #[cfg(test)]
 mod tests {
-    // Engine integration tests (device-backed) live in rust/tests/serving.rs;
-    // unit coverage of batching/metrics lives in their own modules.
+    // Engine integration tests live in rust/tests/serving.rs (artifact-
+    // backed) and rust/tests/engine_concurrency.rs (host-backed, no
+    // artifacts needed); unit coverage of batching/metrics lives in their
+    // own modules.
 }

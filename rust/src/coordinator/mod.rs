@@ -11,10 +11,11 @@ pub mod request;
 pub mod router;
 
 pub use batcher::{BatchPolicy, DynamicBatcher, SubmitError};
-pub use engine::ServingEngine;
+pub use engine::{EngineConfig, ServingEngine};
 pub use metrics::Metrics;
 pub use rank_controller::{ControllerConfig, Decision, PolicySource, RankController};
 pub use request::{
-    AttentionRequest, AttentionResponse, GenerateRequest, GenerateResponse, RequestId,
+    AttentionRequest, AttentionResponse, EngineError, EngineResult, GenerateRequest,
+    GenerateResponse, RequestId,
 };
 pub use router::{RouteStrategy, Router};

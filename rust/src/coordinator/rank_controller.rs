@@ -8,13 +8,15 @@
 
 use crate::attention::{attention_matrix, AttnInputs, MhsaWeights};
 use crate::flops;
-use crate::linalg::{IncrementalCache, Mat};
+use crate::linalg::{IncrementalCache, Mat, Svd};
 use crate::rl::{featurize, ActorCritic, ConvFeaturizer, RankState};
 use crate::runtime::ArtifactRegistry;
 use crate::spectral::{assess_transition, TrustRegion};
-use crate::util::Pcg32;
+use crate::util::threadpool::SendPtr;
+use crate::util::{global_pool, Pcg32};
 use anyhow::Result;
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 /// Where rank decisions come from.
 pub enum PolicySource {
@@ -44,6 +46,7 @@ impl PolicySource {
 }
 
 /// Controller configuration.
+#[derive(Clone)]
 pub struct ControllerConfig {
     pub rank_grid: Vec<usize>,
     pub use_trust_region: bool,
@@ -90,9 +93,15 @@ pub struct Decision {
 }
 
 /// The controller.
+///
+/// Multi-worker engines shard controllers per layer (one instance behind
+/// a `Mutex` per layer) and share one `PolicySource` through the `Arc`,
+/// so rank decisions stay coherent while different layers decide in
+/// parallel. Stream keys include the layer, so a sharded deployment sees
+/// exactly the same per-stream seeds and state a single controller would.
 pub struct RankController {
     pub cfg: ControllerConfig,
-    pub source: PolicySource,
+    pub source: Arc<PolicySource>,
     pub trust: TrustRegion,
     conv: ConvFeaturizer,
     streams: BTreeMap<u64, StreamState>,
@@ -105,6 +114,12 @@ pub struct RankController {
 
 impl RankController {
     pub fn new(cfg: ControllerConfig, source: PolicySource) -> Self {
+        Self::with_shared_source(cfg, Arc::new(source))
+    }
+
+    /// Controller sharing a `PolicySource` with sibling shards (the
+    /// multi-worker engine builds one controller per layer this way).
+    pub fn with_shared_source(cfg: ControllerConfig, source: Arc<PolicySource>) -> Self {
         let n = cfg.rank_grid.len();
         RankController {
             trust: TrustRegion::new(cfg.epsilon0, cfg.lambda),
@@ -154,7 +169,7 @@ impl RankController {
         self.trust.tick();
         let any_masked = mask.iter().any(|&b| !b);
 
-        let idx = match &self.source {
+        let idx = match self.source.as_ref() {
             PolicySource::Hlo => {
                 let logits = reg.policy_logits(&state.features)?;
                 argmax_masked(&logits, &mask)
@@ -180,6 +195,9 @@ impl RankController {
 
     /// Serve one head's attention for a segment step. Returns the output
     /// and the decision record. `x_layer` is the layer input (for h_t).
+    /// Thin wrapper over [`Self::attention_heads_batched`] so the single-
+    /// head path (benches, oracle) and the engine's batched path cannot
+    /// drift.
     #[allow(clippy::too_many_arguments)]
     pub fn attention(
         &mut self,
@@ -191,106 +209,208 @@ impl RankController {
         head: usize,
         n_layers: usize,
     ) -> Result<(Mat, Decision)> {
-        let key = Self::stream_key(layer, head);
-        let n = inp.seq_len();
-        let d = inp.head_dim();
+        let mut out =
+            self.attention_heads_batched(reg, x_layer, w, &[(head, inp)], layer, n_layers)?;
+        Ok(out.remove(0))
+    }
+
+    /// Serve one segment step for several heads of a layer at once.
+    ///
+    /// The heavy per-head work — the attention probe + truncated SVD at
+    /// segment boundaries and the masked factor apply — fans out over the
+    /// global thread pool in one batched dispatch per phase (the CPU
+    /// analogue of the paper's batched cuSOLVER SVD), so an 8-head
+    /// segment costs roughly one head of wall-clock. Decision state
+    /// (trust-region ticks, policy RNG, traces) is advanced serially in
+    /// head order, preserving bit-identical results to the serial path.
+    ///
+    /// `heads` pairs each head index with its projected Q/K/V inputs.
+    pub fn attention_heads_batched(
+        &mut self,
+        reg: &ArtifactRegistry,
+        x_layer: &Mat,
+        w: &MhsaWeights,
+        heads: &[(usize, &AttnInputs)],
+        layer: usize,
+        n_layers: usize,
+    ) -> Result<Vec<(Mat, Decision)>> {
+        if heads.is_empty() {
+            return Ok(Vec::new());
+        }
         let r_max = *self.cfg.rank_grid.iter().max().unwrap();
         let bucket_max = reg.rank_bucket(r_max);
-        let seed = self.cfg.seed ^ key;
 
-        // FULL-RANK short-circuit: run the dense kernel.
-        if matches!(self.source, PolicySource::FullRank) {
-            let y = reg.full_attention(&inp.q, &inp.k, &inp.v)?;
-            let full = flops::full_attention_flops(n, d);
-            let decision = Decision {
-                rank: n,
-                prev_rank: n,
-                masked_by_safety: false,
-                perturbation: 0.0,
-                flops_spent: full,
-                flops_full: full,
-                fresh_decision: true,
-            };
-            return Ok((y, decision));
-        }
-
-        // Maintain the factor cache for this stream. A new segment
-        // refreshes the attention matrix (the probe is host-side; the
-        // heavy factor-apply runs on the device).
-        let entry = self.streams.entry(key).or_default();
-        let calls = entry.calls;
-        entry.calls += 1;
-        let segment_boundary = calls.is_multiple_of(self.cfg.segment_len as u64);
-        let prev_rank =
-            entry.prev_rank.unwrap_or(self.cfg.rank_grid[self.cfg.rank_grid.len() / 2]);
-
-        // §Perf iteration 1: compute the attention probe once per segment
-        // boundary (it was previously recomputed on every call) and keep
-        // the decomposition in the stream cache between calls.
-        let svd = if entry.cache.is_none() || segment_boundary {
-            let mut cache = IncrementalCache::new(seed);
-            let a = attention_matrix(inp);
-            let svd = cache.decompose(&a, bucket_max).clone();
-            entry.cache = Some(cache);
-            svd
-        } else {
-            entry
-                .cache
-                .as_ref()
-                .and_then(|c| c.current())
-                .expect("cache holds a decomposition between boundaries")
-                .clone()
-        };
-
-        let (rank, masked, fresh) = if segment_boundary {
-            let state = featurize(
-                &self.conv,
-                x_layer,
-                w,
-                &svd.s,
-                prev_rank,
-                r_max,
-                layer,
-                n_layers,
-            );
-            let (r, m) = self.pick_rank(&state, &svd.s, prev_rank, reg)?;
-            (r, m, true)
-        } else {
-            (prev_rank, false, false)
-        };
-
-        // Perturbation of the executed transition (Eq. 4).
-        let perturbation = crate::spectral::rank_transition_perturbation(&svd.s, prev_rank, rank);
-
-        // Record traces.
-        if fresh {
-            let grid = &self.cfg.rank_grid;
-            if let (Some(fi), Some(ti)) = (
-                grid.iter().position(|&g| g == prev_rank),
-                grid.iter().position(|&g| g == rank),
-            ) {
-                self.transition_counts[fi][ti] += 1;
+        // FULL-RANK short-circuit: dense kernel per head, fanned out.
+        if matches!(self.source.as_ref(), PolicySource::FullRank) {
+            let mut outs: Vec<Option<Result<Mat>>> = (0..heads.len()).map(|_| None).collect();
+            let ptr = SendPtr::new(&mut outs);
+            global_pool().scoped_for(heads.len(), |i| {
+                // SAFETY: each index writes a distinct slot.
+                let slot = &mut unsafe { ptr.get() }[i];
+                let inp = heads[i].1;
+                *slot = Some(reg.full_attention(&inp.q, &inp.k, &inp.v));
+            });
+            let mut result = Vec::with_capacity(heads.len());
+            for (o, &(_, inp)) in outs.into_iter().zip(heads) {
+                let y = o.expect("slot filled")?;
+                let full = flops::full_attention_flops(inp.seq_len(), inp.head_dim());
+                result.push((
+                    y,
+                    Decision {
+                        rank: inp.seq_len(),
+                        prev_rank: inp.seq_len(),
+                        masked_by_safety: false,
+                        perturbation: 0.0,
+                        flops_spent: full,
+                        flops_full: full,
+                        fresh_decision: true,
+                    },
+                ));
             }
-            self.rank_trace.push((layer, calls / self.cfg.segment_len as u64, rank));
+            return Ok(result);
         }
 
-        // Device dispatch: masked factor apply at the bucket ≥ rank.
-        let y = reg.lowrank_attention(&svd, rank, &inp.v)?;
+        // Phase 1 — per-stream bookkeeping (cheap): segment position,
+        // previous rank, whether the factor cache needs a refresh.
+        struct HeadStep {
+            head: usize,
+            calls: u64,
+            boundary: bool,
+            prev_rank: usize,
+            refresh: Option<IncrementalCache>,
+            svd: Option<Svd>,
+        }
+        let seg = self.cfg.segment_len as u64;
+        let default_rank = self.cfg.rank_grid[self.cfg.rank_grid.len() / 2];
+        let mut steps: Vec<HeadStep> = Vec::with_capacity(heads.len());
+        for &(h, _) in heads {
+            let key = Self::stream_key(layer, h);
+            let entry = self.streams.entry(key).or_default();
+            let calls = entry.calls;
+            entry.calls += 1;
+            let boundary = if seg == 0 { calls == 0 } else { calls % seg == 0 };
+            let prev_rank = entry.prev_rank.unwrap_or(default_rank);
+            // §Perf iteration 1: the probe/decomposition refreshes only at
+            // segment boundaries; between them the cached factors serve.
+            let (refresh, svd) = if entry.cache.is_none() || boundary {
+                (Some(IncrementalCache::new(self.cfg.seed ^ key)), None)
+            } else {
+                let svd = entry
+                    .cache
+                    .as_ref()
+                    .and_then(|c| c.current())
+                    .expect("cache holds a decomposition between boundaries")
+                    .clone();
+                (None, Some(svd))
+            };
+            steps.push(HeadStep { head: h, calls, boundary, prev_rank, refresh, svd });
+        }
 
-        // FLOPs ledger: the probe/decomposition amortizes over the segment.
-        let spent = flops::lowrank_attention_flops(n, d, rank, false)
-            + flops::partial_svd_flops(n, n, bucket_max) / self.cfg.segment_len.max(1) as u64;
-        let decision = Decision {
-            rank,
-            prev_rank,
-            masked_by_safety: masked,
-            perturbation,
-            flops_spent: spent,
-            flops_full: flops::full_attention_flops(n, d),
-            fresh_decision: fresh,
-        };
-        self.streams.get_mut(&key).unwrap().prev_rank = Some(rank);
-        Ok((y, decision))
+        // Phase 2 — batched probe + truncated SVD for every head that
+        // needs one: one parallel dispatch over the stacked per-head
+        // score matrices.
+        let refresh_idx: Vec<usize> = steps
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.refresh.is_some())
+            .map(|(i, _)| i)
+            .collect();
+        if !refresh_idx.is_empty() {
+            let ptr = SendPtr::new(&mut steps);
+            let idx = &refresh_idx;
+            global_pool().scoped_for(idx.len(), |j| {
+                // SAFETY: distinct j map to distinct step slots.
+                let step = &mut unsafe { ptr.get() }[idx[j]];
+                let a = attention_matrix(heads[idx[j]].1);
+                let cache = step.refresh.as_mut().expect("refresh slot");
+                step.svd = Some(cache.decompose(&a, bucket_max).clone());
+            });
+        }
+        for step in steps.iter_mut() {
+            if let Some(cache) = step.refresh.take() {
+                self.streams
+                    .get_mut(&Self::stream_key(layer, step.head))
+                    .expect("stream exists")
+                    .cache = Some(cache);
+            }
+        }
+
+        // Phase 3 — decisions, serial in head order so the trust-region
+        // tick and policy RNG sequences match the serial controller.
+        let mut decisions: Vec<Decision> = Vec::with_capacity(steps.len());
+        for (pos, step) in steps.iter().enumerate() {
+            let svd = step.svd.as_ref().expect("svd available");
+            let (rank, masked, fresh) = if step.boundary {
+                let state = featurize(
+                    &self.conv,
+                    x_layer,
+                    w,
+                    &svd.s,
+                    step.prev_rank,
+                    r_max,
+                    layer,
+                    n_layers,
+                );
+                let (r, m) = self.pick_rank(&state, &svd.s, step.prev_rank, reg)?;
+                (r, m, true)
+            } else {
+                (step.prev_rank, false, false)
+            };
+
+            // Perturbation of the executed transition (Eq. 4).
+            let perturbation =
+                crate::spectral::rank_transition_perturbation(&svd.s, step.prev_rank, rank);
+
+            if fresh {
+                let grid = &self.cfg.rank_grid;
+                if let (Some(fi), Some(ti)) = (
+                    grid.iter().position(|&g| g == step.prev_rank),
+                    grid.iter().position(|&g| g == rank),
+                ) {
+                    self.transition_counts[fi][ti] += 1;
+                }
+                self.rank_trace.push((layer, step.calls / seg.max(1), rank));
+            }
+
+            let (n, d) = (heads[pos].1.seq_len(), heads[pos].1.head_dim());
+            // FLOPs ledger: the probe amortizes over the segment.
+            let spent = flops::lowrank_attention_flops(n, d, rank, false)
+                + flops::partial_svd_flops(n, n, bucket_max)
+                    / self.cfg.segment_len.max(1) as u64;
+            decisions.push(Decision {
+                rank,
+                prev_rank: step.prev_rank,
+                masked_by_safety: masked,
+                perturbation,
+                flops_spent: spent,
+                flops_full: flops::full_attention_flops(n, d),
+                fresh_decision: fresh,
+            });
+            self.streams
+                .get_mut(&Self::stream_key(layer, step.head))
+                .expect("stream exists")
+                .prev_rank = Some(rank);
+        }
+
+        // Phase 4 — device dispatch: masked factor apply at the bucket ≥
+        // rank, fanned out per head.
+        let mut outs: Vec<Option<Result<Mat>>> = (0..steps.len()).map(|_| None).collect();
+        {
+            let ptr = SendPtr::new(&mut outs);
+            let steps_ref = &steps;
+            let dec_ref = &decisions;
+            global_pool().scoped_for(steps_ref.len(), |i| {
+                // SAFETY: each index writes a distinct slot.
+                let slot = &mut unsafe { ptr.get() }[i];
+                let svd = steps_ref[i].svd.as_ref().expect("svd available");
+                *slot = Some(reg.lowrank_attention(svd, dec_ref[i].rank, &heads[i].1.v));
+            });
+        }
+        let mut result = Vec::with_capacity(steps.len());
+        for (o, dec) in outs.into_iter().zip(decisions) {
+            result.push((o.expect("slot filled")?, dec));
+        }
+        Ok(result)
     }
 }
 

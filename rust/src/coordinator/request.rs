@@ -5,6 +5,25 @@ use std::time::Instant;
 /// Unique request id.
 pub type RequestId = u64;
 
+/// Why a queued request did not produce a result. Sent as an explicit
+/// error response instead of silently dropping the reply channel.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EngineError {
+    pub id: RequestId,
+    pub message: String,
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "request {}: {}", self.id, self.message)
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+/// What a reply channel carries: the response or an explicit error.
+pub type EngineResult<T> = Result<T, EngineError>;
+
 /// A generation request (LM serving path).
 #[derive(Debug, Clone)]
 pub struct GenerateRequest {

@@ -3,7 +3,7 @@
 //! least-loaded (queue depth).
 
 use super::engine::ServingEngine;
-use super::request::{AttentionResponse, GenerateResponse, RequestId};
+use super::request::{AttentionResponse, EngineResult, GenerateResponse, RequestId};
 use crate::coordinator::batcher::SubmitError;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -53,7 +53,8 @@ impl Router {
         &self,
         prompt: Vec<i32>,
         max_new: usize,
-    ) -> Result<(RequestId, std::sync::mpsc::Receiver<GenerateResponse>), SubmitError> {
+    ) -> Result<(RequestId, std::sync::mpsc::Receiver<EngineResult<GenerateResponse>>), SubmitError>
+    {
         self.pick().submit_generate(prompt, max_new)
     }
 
@@ -63,7 +64,8 @@ impl Router {
         n: usize,
         d_model: usize,
         layer: usize,
-    ) -> Result<(RequestId, std::sync::mpsc::Receiver<AttentionResponse>), SubmitError> {
+    ) -> Result<(RequestId, std::sync::mpsc::Receiver<EngineResult<AttentionResponse>>), SubmitError>
+    {
         self.pick().submit_attention(x, n, d_model, layer)
     }
 

@@ -116,12 +116,11 @@ pub fn matmul_bt(a: &Mat, b: &Mat) -> Mat {
     c
 }
 
-/// C = Aᵀ·B without materializing Aᵀ.
-pub fn matmul_at(a: &Mat, b: &Mat) -> Mat {
-    assert_eq!(a.rows(), b.rows(), "inner dims for At·B");
-    let (k, m, n) = (a.rows(), a.cols(), b.cols());
-    let mut c = Mat::zeros(m, n);
-    for p in 0..k {
+/// Accumulate rows [k0, k1) of the Aᵀ·B contraction into `c`.
+#[inline]
+fn matmul_at_range(a: &Mat, b: &Mat, c: &mut Mat, k0: usize, k1: usize) {
+    let (m, n) = (a.cols(), b.cols());
+    for p in k0..k1 {
         let arow = a.row(p);
         let brow = b.row(p);
         for i in 0..m {
@@ -134,6 +133,42 @@ pub fn matmul_at(a: &Mat, b: &Mat) -> Mat {
                 crow[j] += av * brow[j];
             }
         }
+    }
+}
+
+/// C = Aᵀ·B without materializing Aᵀ. The contraction runs over A's rows,
+/// so (unlike `matmul`/`matmul_bt`) output rows are not disjoint per input
+/// chunk; the parallel path gives each chunk of the k-dimension its own
+/// partial C and reduces them at the end. Sits on the low-rank hot path
+/// via `lowrank_attention_output`.
+pub fn matmul_at(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows(), b.rows(), "inner dims for At·B");
+    let (k, m, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Mat::zeros(m, n);
+    if k * m * n < 64 * 64 * 64 {
+        matmul_at_range(a, b, &mut c, 0, k);
+        return c;
+    }
+    // The chunk partition depends only on the problem shape — never on
+    // pool size or calling context — so the summation association (and
+    // thus the f64 result) is identical on any machine, whether the
+    // chunks run in parallel, inline on a pool worker, or on a 1-thread
+    // pool. SVD seeds and rank decisions downstream rely on this.
+    const K_CHUNK: usize = 64;
+    let n_chunks = k.div_ceil(K_CHUNK);
+    let mut partials: Vec<Mat> = (0..n_chunks).map(|_| Mat::zeros(m, n)).collect();
+    let ptr = SendPtr::new(&mut partials);
+    global_pool().scoped_for(n_chunks, |ci| {
+        // SAFETY: each chunk index writes only its own partial.
+        let partial = &mut unsafe { ptr.get() }[ci];
+        let k0 = ci * K_CHUNK;
+        let k1 = (k0 + K_CHUNK).min(k);
+        matmul_at_range(a, b, partial, k0, k1);
+    });
+    // Reduce in fixed chunk order so results are deterministic regardless
+    // of worker scheduling (the engine's bit-equivalence tests rely on it).
+    for partial in &partials {
+        c.add_inplace(partial);
     }
     c
 }
@@ -199,6 +234,31 @@ mod tests {
         let b2 = Mat::randn(15, 25, 1.0, &mut rng);
         let want2 = matmul_naive(&a2.transpose(), &b2);
         assert!(matmul_at(&a2, &b2).allclose(&want2, 1e-10));
+    }
+
+    #[test]
+    fn parallel_at_matches_naive_above_threshold() {
+        // Sizes chosen to cross the 64³ work threshold so the chunked
+        // partial-accumulation path runs (and one below it for the serial
+        // path), both checked against the naive oracle.
+        let mut rng = Pcg32::seeded(47);
+        for &(k, m, n) in &[(130, 70, 90), (200, 64, 64), (20, 10, 12)] {
+            let a = Mat::randn(k, m, 1.0, &mut rng);
+            let b = Mat::randn(k, n, 1.0, &mut rng);
+            let want = matmul_naive(&a.transpose(), &b);
+            assert!(matmul_at(&a, &b).allclose(&want, 1e-9), "({k},{m},{n})");
+        }
+    }
+
+    #[test]
+    fn parallel_at_is_deterministic() {
+        let mut rng = Pcg32::seeded(48);
+        let a = Mat::randn(150, 80, 1.0, &mut rng);
+        let b = Mat::randn(150, 80, 1.0, &mut rng);
+        let c1 = matmul_at(&a, &b);
+        for _ in 0..4 {
+            assert!(matmul_at(&a, &b).allclose(&c1, 0.0), "run-to-run drift");
+        }
     }
 
     #[test]

@@ -132,13 +132,24 @@ fn cmd_generate(args: &Args) -> i32 {
 
 fn cmd_serve(args: &Args) -> i32 {
     let cfg = ExperimentConfig::resolve(args).expect("config");
-    let reg = Arc::new(ArtifactRegistry::open_default().expect("artifacts"));
+    // Prefer real artifacts; fall back to the host backend (where the AOT
+    // transformer policy is unavailable — the spectral-energy policy
+    // substitutes for `hlo`).
+    let (reg, host_mode) = match ArtifactRegistry::open_default() {
+        Ok(r) => (Arc::new(r), false),
+        Err(e) => {
+            eprintln!("artifacts unavailable ({e:#}); using the pure-Rust host backend");
+            (Arc::new(ArtifactRegistry::open_host(128, 32)), true)
+        }
+    };
     let n_requests = args.usize_or("requests", 32);
+    let n_workers = args.usize_or("workers", 2);
     let policy = match args.get_or("policy", "hlo") {
         "fixed" => PolicySource::Fixed(args.usize_or("rank", 32)),
         "adaptive" => PolicySource::AdaptiveEnergy(0.9),
         "random" => PolicySource::Random,
         "full" => PolicySource::FullRank,
+        _ if host_mode => PolicySource::AdaptiveEnergy(0.9),
         _ => PolicySource::Hlo,
     };
 
@@ -153,7 +164,7 @@ fn cmd_serve(args: &Args) -> i32 {
     let params = Arc::new(params);
 
     let mk_engine = |policy: PolicySource| {
-        drrl::coordinator::ServingEngine::start(
+        drrl::coordinator::ServingEngine::start_with_config(
             Arc::clone(&reg),
             Arc::clone(&params),
             layers.clone(),
@@ -163,10 +174,13 @@ fn cmd_serve(args: &Args) -> i32 {
                 ..Default::default()
             },
             policy,
-            BatchPolicy {
-                max_batch: cfg.serving.max_batch,
-                max_wait: Duration::from_millis(cfg.serving.max_wait_ms),
-                capacity: cfg.serving.queue_capacity,
+            drrl::coordinator::EngineConfig {
+                n_workers,
+                batch_policy: BatchPolicy {
+                    max_batch: cfg.serving.max_batch,
+                    max_wait: Duration::from_millis(cfg.serving.max_wait_ms),
+                    capacity: cfg.serving.queue_capacity,
+                },
             },
         )
     };

@@ -1,48 +1,63 @@
-//! The device thread: sole owner of the PJRT client, compiled
-//! executables and all `Literal`s (none of which are `Send`).
+//! Device dispatch layer.
 //!
-//! Production pattern (mirrors vLLM's single device-worker): callers
-//! hold a cheap `DeviceHandle` (Clone + Send) and issue synchronous
-//! `execute` RPCs over an mpsc channel; the device thread compiles
-//! artifacts lazily and keeps them cached for the process lifetime.
+//! Two backends behind one cheap `DeviceHandle` (Clone + Send + Sync):
+//!
+//! * **PJRT** (feature `pjrt`): the compiled HLO artifacts execute on a
+//!   dedicated device thread that is the sole owner of the PJRT client,
+//!   executables and `Literal`s (none of which are `Send`) — callers
+//!   issue synchronous `execute` RPCs over an mpsc channel, mirroring
+//!   vLLM's single device-worker pattern.
+//! * **Host** (default): the pure-Rust [`HostBackend`] interprets the
+//!   artifact entry points with the crate's own kernels. It is
+//!   `Send + Sync` and runs on the calling thread, so concurrent engine
+//!   workers execute kernels genuinely in parallel.
+//!
+//! The offline build ships without the `xla` bindings crate, so the
+//! `pjrt` feature is off by default and everything — tests, examples,
+//! the serving engine — runs against the host backend.
 
+use super::host::HostBackend;
 use super::manifest::Manifest;
 use super::tensor::HostTensor;
-use anyhow::{anyhow, Context, Result};
+use anyhow::Result;
 use std::collections::BTreeMap;
-use std::sync::mpsc::{channel, Sender};
-use std::sync::{Mutex, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock};
 
-enum Cmd {
-    Execute {
-        artifact: String,
-        inputs: Vec<HostTensor>,
-        reply: Sender<Result<Vec<HostTensor>>>,
-    },
-    /// Preload (compile) an artifact without running it.
-    Warm { artifact: String, reply: Sender<Result<()>> },
-    Stats { reply: Sender<BTreeMap<String, u64>> },
-}
-
-/// Cloneable, Send handle to the device thread.
+/// Cloneable, Send + Sync handle to a backend.
 #[derive(Clone)]
 pub struct DeviceHandle {
-    tx: Sender<Cmd>,
+    inner: Inner,
 }
 
-// Sender is Send+Sync when the message type is Send; Cmd is Send.
-unsafe impl Sync for DeviceHandle {}
+#[derive(Clone)]
+enum Inner {
+    Host(Arc<HostBackend>),
+    #[cfg(feature = "pjrt")]
+    Pjrt(std::sync::mpsc::Sender<pjrt::Cmd>),
+}
 
 impl DeviceHandle {
-    /// Spawn a device thread serving artifacts from `dir`.
+    /// Spawn a backend serving artifacts from `dir`. With the `pjrt`
+    /// feature this compiles and runs the HLO artifacts on a device
+    /// thread; otherwise the manifest's shapes drive the host backend.
     pub fn spawn(dir: &std::path::Path) -> Result<DeviceHandle> {
         let manifest = Manifest::load(dir)?;
-        let (tx, rx) = channel::<Cmd>();
-        std::thread::Builder::new()
-            .name("drrl-device".into())
-            .spawn(move || device_main(manifest, rx))
-            .context("spawning device thread")?;
-        Ok(DeviceHandle { tx })
+        Self::spawn_backend(manifest)
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn spawn_backend(manifest: Manifest) -> Result<DeviceHandle> {
+        pjrt::spawn(manifest)
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn spawn_backend(manifest: Manifest) -> Result<DeviceHandle> {
+        Ok(Self::host(manifest))
+    }
+
+    /// Host backend over an in-memory manifest (no files needed).
+    pub fn host(manifest: Manifest) -> DeviceHandle {
+        DeviceHandle { inner: Inner::Host(Arc::new(HostBackend::new(manifest))) }
     }
 
     /// Global handle over the default artifact dir (lazy).
@@ -53,126 +68,180 @@ impl DeviceHandle {
         let r = HANDLE.get_or_init(|| {
             DeviceHandle::spawn(&Manifest::default_dir()).map_err(|e| format!("{e:#}"))
         });
-        r.as_ref().map_err(|e| anyhow!("device init failed: {e}"))
+        r.as_ref().map_err(|e| anyhow::anyhow!("device init failed: {e}"))
     }
 
-    /// Synchronous execute RPC.
+    /// Synchronous execute.
     pub fn execute(&self, artifact: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
-        let (reply, rx) = channel();
-        self.tx
-            .send(Cmd::Execute { artifact: artifact.to_string(), inputs, reply })
-            .map_err(|_| anyhow!("device thread gone"))?;
-        rx.recv().map_err(|_| anyhow!("device thread dropped reply"))?
+        match &self.inner {
+            Inner::Host(h) => h.execute(artifact, &inputs),
+            #[cfg(feature = "pjrt")]
+            Inner::Pjrt(tx) => pjrt::execute(tx, artifact, inputs),
+        }
     }
 
-    /// Compile an artifact ahead of first use.
+    /// Compile (PJRT) or validate (host) an artifact ahead of first use.
     pub fn warm(&self, artifact: &str) -> Result<()> {
-        let (reply, rx) = channel();
-        self.tx
-            .send(Cmd::Warm { artifact: artifact.to_string(), reply })
-            .map_err(|_| anyhow!("device thread gone"))?;
-        rx.recv().map_err(|_| anyhow!("device thread dropped reply"))?
+        match &self.inner {
+            Inner::Host(h) => h.warm(artifact),
+            #[cfg(feature = "pjrt")]
+            Inner::Pjrt(tx) => pjrt::warm(tx, artifact),
+        }
     }
 
     /// Per-artifact execute counts.
     pub fn stats(&self) -> Result<BTreeMap<String, u64>> {
+        match &self.inner {
+            Inner::Host(h) => Ok(h.stats()),
+            #[cfg(feature = "pjrt")]
+            Inner::Pjrt(tx) => pjrt::stats(tx),
+        }
+    }
+}
+
+/// The PJRT device thread. Requires the external `xla` bindings crate;
+/// the module only compiles with `--features pjrt`.
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use super::*;
+    use anyhow::{anyhow, Context};
+    use std::sync::mpsc::{channel, Sender};
+
+    pub(super) enum Cmd {
+        Execute {
+            artifact: String,
+            inputs: Vec<HostTensor>,
+            reply: Sender<Result<Vec<HostTensor>>>,
+        },
+        Warm { artifact: String, reply: Sender<Result<()>> },
+        Stats { reply: Sender<BTreeMap<String, u64>> },
+    }
+
+    pub(super) fn spawn(manifest: Manifest) -> Result<DeviceHandle> {
+        let (tx, rx) = channel::<Cmd>();
+        std::thread::Builder::new()
+            .name("drrl-device".into())
+            .spawn(move || device_main(manifest, rx))
+            .context("spawning device thread")?;
+        Ok(DeviceHandle { inner: Inner::Pjrt(tx) })
+    }
+
+    pub(super) fn execute(
+        tx: &Sender<Cmd>,
+        artifact: &str,
+        inputs: Vec<HostTensor>,
+    ) -> Result<Vec<HostTensor>> {
         let (reply, rx) = channel();
-        self.tx.send(Cmd::Stats { reply }).map_err(|_| anyhow!("device thread gone"))?;
+        tx.send(Cmd::Execute { artifact: artifact.to_string(), inputs, reply })
+            .map_err(|_| anyhow!("device thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("device thread dropped reply"))?
+    }
+
+    pub(super) fn warm(tx: &Sender<Cmd>, artifact: &str) -> Result<()> {
+        let (reply, rx) = channel();
+        tx.send(Cmd::Warm { artifact: artifact.to_string(), reply })
+            .map_err(|_| anyhow!("device thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("device thread dropped reply"))?
+    }
+
+    pub(super) fn stats(tx: &Sender<Cmd>) -> Result<BTreeMap<String, u64>> {
+        let (reply, rx) = channel();
+        tx.send(Cmd::Stats { reply }).map_err(|_| anyhow!("device thread gone"))?;
         rx.recv().map_err(|_| anyhow!("device thread dropped reply"))
     }
-}
 
-struct LoadedExe {
-    exe: xla::PjRtLoadedExecutable,
-    calls: u64,
-}
+    struct LoadedExe {
+        exe: xla::PjRtLoadedExecutable,
+        calls: u64,
+    }
 
-fn device_main(manifest: Manifest, rx: std::sync::mpsc::Receiver<Cmd>) {
-    let client = match xla::PjRtClient::cpu() {
-        Ok(c) => c,
-        Err(e) => {
-            eprintln!("FATAL: PJRT CPU client: {e}");
-            // Drain commands with errors so callers fail fast.
-            while let Ok(cmd) = rx.recv() {
-                match cmd {
-                    Cmd::Execute { reply, .. } => {
-                        let _ = reply.send(Err(anyhow!("PJRT client unavailable")));
-                    }
-                    Cmd::Warm { reply, .. } => {
-                        let _ = reply.send(Err(anyhow!("PJRT client unavailable")));
-                    }
-                    Cmd::Stats { reply } => {
-                        let _ = reply.send(BTreeMap::new());
+    fn device_main(manifest: Manifest, rx: std::sync::mpsc::Receiver<Cmd>) {
+        let client = match xla::PjRtClient::cpu() {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("FATAL: PJRT CPU client: {e}");
+                // Drain commands with errors so callers fail fast.
+                while let Ok(cmd) = rx.recv() {
+                    match cmd {
+                        Cmd::Execute { reply, .. } => {
+                            let _ = reply.send(Err(anyhow!("PJRT client unavailable")));
+                        }
+                        Cmd::Warm { reply, .. } => {
+                            let _ = reply.send(Err(anyhow!("PJRT client unavailable")));
+                        }
+                        Cmd::Stats { reply } => {
+                            let _ = reply.send(BTreeMap::new());
+                        }
                     }
                 }
+                return;
             }
-            return;
-        }
-    };
-    let mut cache: BTreeMap<String, LoadedExe> = BTreeMap::new();
+        };
+        let mut cache: BTreeMap<String, LoadedExe> = BTreeMap::new();
 
-    let load = |client: &xla::PjRtClient,
-                cache: &mut BTreeMap<String, LoadedExe>,
-                manifest: &Manifest,
-                name: &str|
-     -> Result<()> {
-        if cache.contains_key(name) {
-            return Ok(());
-        }
-        let path = manifest.artifact_path(name)?;
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp).with_context(|| format!("compiling {name}"))?;
-        cache.insert(name.to_string(), LoadedExe { exe, calls: 0 });
-        Ok(())
-    };
+        let load = |client: &xla::PjRtClient,
+                    cache: &mut BTreeMap<String, LoadedExe>,
+                    manifest: &Manifest,
+                    name: &str|
+         -> Result<()> {
+            if cache.contains_key(name) {
+                return Ok(());
+            }
+            let path = manifest.artifact_path(name)?;
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+            cache.insert(name.to_string(), LoadedExe { exe, calls: 0 });
+            Ok(())
+        };
 
-    while let Ok(cmd) = rx.recv() {
-        match cmd {
-            Cmd::Warm { artifact, reply } => {
-                let _ = reply.send(load(&client, &mut cache, &manifest, &artifact));
-            }
-            Cmd::Stats { reply } => {
-                let _ =
-                    reply.send(cache.iter().map(|(k, v)| (k.clone(), v.calls)).collect());
-            }
-            Cmd::Execute { artifact, inputs, reply } => {
-                let result = (|| -> Result<Vec<HostTensor>> {
-                    load(&client, &mut cache, &manifest, &artifact)?;
-                    let entry = cache.get_mut(&artifact).unwrap();
-                    entry.calls += 1;
-                    let lits: Vec<xla::Literal> =
-                        inputs.iter().map(to_literal).collect::<Result<_>>()?;
-                    let bufs = entry.exe.execute::<xla::Literal>(&lits)?;
-                    let out = bufs[0][0].to_literal_sync()?;
-                    let parts = out.to_tuple()?;
-                    parts.iter().map(from_literal).collect()
-                })();
-                let _ = reply.send(result);
+        while let Ok(cmd) = rx.recv() {
+            match cmd {
+                Cmd::Warm { artifact, reply } => {
+                    let _ = reply.send(load(&client, &mut cache, &manifest, &artifact));
+                }
+                Cmd::Stats { reply } => {
+                    let _ =
+                        reply.send(cache.iter().map(|(k, v)| (k.clone(), v.calls)).collect());
+                }
+                Cmd::Execute { artifact, inputs, reply } => {
+                    let result = (|| -> Result<Vec<HostTensor>> {
+                        load(&client, &mut cache, &manifest, &artifact)?;
+                        let entry = cache.get_mut(&artifact).unwrap();
+                        entry.calls += 1;
+                        let lits: Vec<xla::Literal> =
+                            inputs.iter().map(to_literal).collect::<Result<_>>()?;
+                        let bufs = entry.exe.execute::<xla::Literal>(&lits)?;
+                        let out = bufs[0][0].to_literal_sync()?;
+                        let parts = out.to_tuple()?;
+                        parts.iter().map(from_literal).collect()
+                    })();
+                    let _ = reply.send(result);
+                }
             }
         }
     }
-}
 
-fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
-    match t {
-        HostTensor::F32 { data, dims } => Ok(xla::Literal::vec1(data).reshape(dims)?),
-        HostTensor::I32 { data, dims } => Ok(xla::Literal::vec1(data).reshape(dims)?),
+    fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
+        match t {
+            HostTensor::F32 { data, dims } => Ok(xla::Literal::vec1(data).reshape(dims)?),
+            HostTensor::I32 { data, dims } => Ok(xla::Literal::vec1(data).reshape(dims)?),
+        }
     }
-}
 
-fn from_literal(l: &xla::Literal) -> Result<HostTensor> {
-    let shape = l.array_shape()?;
-    let dims = shape.dims().to_vec();
-    match shape.ty() {
-        xla::ElementType::F32 => Ok(HostTensor::F32 { data: l.to_vec::<f32>()?, dims }),
-        xla::ElementType::S32 => Ok(HostTensor::I32 { data: l.to_vec::<i32>()?, dims }),
-        other => {
-            // Convert anything else (f64/bf16/…) through F32.
-            let conv = l.convert(xla::PrimitiveType::F32)?;
-            let _ = other;
-            Ok(HostTensor::F32 { data: conv.to_vec::<f32>()?, dims })
+    fn from_literal(l: &xla::Literal) -> Result<HostTensor> {
+        let shape = l.array_shape()?;
+        let dims = shape.dims().to_vec();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(HostTensor::F32 { data: l.to_vec::<f32>()?, dims }),
+            xla::ElementType::S32 => Ok(HostTensor::I32 { data: l.to_vec::<i32>()?, dims }),
+            other => {
+                // Convert anything else (f64/bf16/…) through F32.
+                let conv = l.convert(xla::PrimitiveType::F32)?;
+                let _ = other;
+                Ok(HostTensor::F32 { data: conv.to_vec::<f32>()?, dims })
+            }
         }
     }
 }
@@ -235,5 +304,16 @@ mod tests {
         let h2 = h.clone();
         let t = std::thread::spawn(move || h2.stats().map(|s| s.len()));
         t.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn host_handle_works_without_artifacts() {
+        // The host backend needs no files: synthetic manifest end-to-end.
+        let h = DeviceHandle::host(Manifest::synthetic(16, 4));
+        let q: Vec<f32> = (0..16 * 4).map(|i| (i % 5) as f32 * 0.1).collect();
+        let t = |v: &[f32]| HostTensor::f32(v.to_vec(), &[16, 4]);
+        let out = h.execute("full_attn", vec![t(&q), t(&q), t(&q)]).unwrap();
+        assert_eq!(out[0].dims(), &[16, 4]);
+        assert_eq!(h.stats().unwrap()["full_attn"], 1);
     }
 }

@@ -1,0 +1,348 @@
+//! Pure-Rust host backend: executes the artifact entry points with the
+//! crate's own numeric kernels when PJRT (feature `pjrt`) is unavailable
+//! or the HLO artifacts have not been built.
+//!
+//! Semantics mirror the L1/L2 artifacts: `full_attn` is causal blocked
+//! attention, `lowrank_attn_r{B}` is the masked factor apply
+//! Y = U·diag(s⊙mask)·(Vᵀ·V_val), `power_iter` is K iterations of
+//! v ← MᵀMv/‖·‖, and `lm_logits` / `lm_eval_loss` evaluate the decoder
+//! LM through `HostLm` on the same flat parameter layout. Inputs and
+//! outputs cross the boundary as f32 `HostTensor`s, matching the device
+//! path's precision.
+//!
+//! Unlike the PJRT device thread (whose `Literal`s are not `Send`), the
+//! host backend is `Send + Sync` and executes on the *calling* thread —
+//! concurrent engine workers and per-head fan-out run kernels genuinely
+//! in parallel instead of serializing through one device thread.
+
+use super::manifest::Manifest;
+use super::tensor::HostTensor;
+use crate::attention::{full_attention, AttnInputs};
+use crate::linalg::{matmul, Mat};
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Thread-safe host executor keyed by artifact name.
+pub struct HostBackend {
+    manifest: Manifest,
+    calls: Mutex<BTreeMap<String, u64>>,
+}
+
+impl HostBackend {
+    pub fn new(manifest: Manifest) -> Self {
+        HostBackend { manifest, calls: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Per-artifact execute counts (mirrors the device thread's stats).
+    pub fn stats(&self) -> BTreeMap<String, u64> {
+        self.calls.lock().unwrap().clone()
+    }
+
+    /// Availability check; compilation is a no-op on the host.
+    pub fn warm(&self, artifact: &str) -> Result<()> {
+        anyhow::ensure!(
+            self.manifest.artifact_files.contains_key(artifact),
+            "artifact '{artifact}' not in manifest"
+        );
+        Ok(())
+    }
+
+    pub fn execute(&self, artifact: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let out = self.dispatch(artifact, inputs)?;
+        *self.calls.lock().unwrap().entry(artifact.to_string()).or_insert(0) += 1;
+        Ok(out)
+    }
+
+    fn dispatch(&self, artifact: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        match artifact {
+            "full_attn" => self.full_attn(inputs),
+            "power_iter" => self.power_iter(inputs),
+            "lm_logits" => self.lm_logits(inputs),
+            "lm_eval_loss" => self.lm_eval_loss(inputs),
+            name if name.starts_with("lowrank_attn_r") => {
+                let bucket: usize = name["lowrank_attn_r".len()..]
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad rank bucket in '{name}'"))?;
+                self.lowrank_attn(bucket, inputs)
+            }
+            "policy_net" => Err(anyhow::anyhow!(
+                "artifact 'policy_net' needs the AOT transformer policy; the host \
+                 backend cannot execute it — use PolicySource::Actor/Fixed/\
+                 AdaptiveEnergy, or build artifacts and enable the `pjrt` feature"
+            )),
+            "lm_train_step" => Err(anyhow::anyhow!(
+                "artifact 'lm_train_step' (fused AdamW backward) is only available \
+                 with the `pjrt` feature and built artifacts"
+            )),
+            other => Err(anyhow::anyhow!("artifact '{other}' not available on host backend")),
+        }
+    }
+
+    fn mat_input(t: &HostTensor, rows: usize, cols: usize, what: &str) -> Result<Mat> {
+        let data = t
+            .as_f32()
+            .ok_or_else(|| anyhow::anyhow!("{what}: expected f32 tensor"))?;
+        anyhow::ensure!(
+            data.len() == rows * cols,
+            "{what}: got {} elements, want {rows}x{cols}",
+            data.len()
+        );
+        Ok(Mat::from_f32(rows, cols, data))
+    }
+
+    fn full_attn(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let (n, d) = (self.manifest.kernel.seq_len, self.manifest.kernel.head_dim);
+        anyhow::ensure!(inputs.len() == 3, "full_attn takes q,k,v");
+        let inp = AttnInputs {
+            q: Self::mat_input(&inputs[0], n, d, "q")?,
+            k: Self::mat_input(&inputs[1], n, d, "k")?,
+            v: Self::mat_input(&inputs[2], n, d, "v")?,
+            causal: true,
+        };
+        Ok(vec![HostTensor::from_mat(&full_attention(&inp))])
+    }
+
+    /// Y = U·diag(s⊙mask)·(Vᵀ·V_val) — the masked factor apply.
+    fn lowrank_attn(&self, bucket: usize, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let (n, d) = (self.manifest.kernel.seq_len, self.manifest.kernel.head_dim);
+        anyhow::ensure!(inputs.len() == 5, "lowrank_attn takes u,s,vt,v,mask");
+        let u = Self::mat_input(&inputs[0], n, bucket, "u")?;
+        let s = inputs[1].as_f32().ok_or_else(|| anyhow::anyhow!("s: expected f32"))?;
+        let vt = Self::mat_input(&inputs[2], bucket, n, "vt")?;
+        let v_val = Self::mat_input(&inputs[3], n, d, "v_val")?;
+        let mask = inputs[4].as_f32().ok_or_else(|| anyhow::anyhow!("mask: expected f32"))?;
+        anyhow::ensure!(s.len() == bucket && mask.len() == bucket, "s/mask length");
+        let mut w = matmul(&vt, &v_val); // bucket × d
+        for i in 0..bucket {
+            let scale = (s[i] * mask[i]) as f64;
+            for x in w.row_mut(i).iter_mut() {
+                *x *= scale;
+            }
+        }
+        Ok(vec![HostTensor::from_mat(&matmul(&u, &w))])
+    }
+
+    /// K iterations of v ← MᵀMv/‖·‖ from the given v0, then σ = ‖Mv‖
+    /// (mirrors python/compile/kernels/power_iter.py).
+    fn power_iter(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        anyhow::ensure!(inputs.len() == 2, "power_iter takes m, v0");
+        let dims = inputs[0].dims();
+        anyhow::ensure!(dims.len() == 2, "m must be 2-D");
+        let (r, c) = (dims[0] as usize, dims[1] as usize);
+        let m = Self::mat_input(&inputs[0], r, c, "m")?;
+        let v0 = inputs[1].as_f32().ok_or_else(|| anyhow::anyhow!("v0: expected f32"))?;
+        anyhow::ensure!(v0.len() == c, "v0 length {} vs {c}", v0.len());
+        let mut v: Vec<f64> = v0.iter().map(|&x| x as f64).collect();
+        let norm = |x: &[f64]| x.iter().map(|a| a * a).sum::<f64>().sqrt();
+        let scale = norm(&v).max(1e-30);
+        v.iter_mut().for_each(|x| *x /= scale);
+        for _ in 0..self.manifest.kernel.power_iters.max(1) {
+            let w = crate::linalg::matvec(&m, &v);
+            let mut next = crate::linalg::matvec_t(&m, &w);
+            let nrm = norm(&next).max(1e-30);
+            next.iter_mut().for_each(|x| *x /= nrm);
+            v = next;
+        }
+        let sigma = norm(&crate::linalg::matvec(&m, &v));
+        Ok(vec![
+            HostTensor::f32(vec![sigma as f32], &[1]),
+            HostTensor::from_f64s(&v),
+        ])
+    }
+
+    fn lm_tokens(t: &HostTensor, batch: usize, seq_len: usize, what: &str) -> Result<Vec<i32>> {
+        let data = t
+            .as_i32()
+            .ok_or_else(|| anyhow::anyhow!("{what}: expected i32 tensor"))?;
+        anyhow::ensure!(
+            data.len() == batch * seq_len,
+            "{what}: got {} tokens, want {batch}x{seq_len}",
+            data.len()
+        );
+        Ok(data.to_vec())
+    }
+
+    fn host_lm(&self, params: &HostTensor) -> Result<crate::train::HostLm> {
+        let lm = &self.manifest.lm;
+        let p = params
+            .as_f32()
+            .ok_or_else(|| anyhow::anyhow!("params: expected f32 tensor"))?;
+        anyhow::ensure!(
+            p.len() == lm.param_count,
+            "param vector len {} vs manifest {}",
+            p.len(),
+            lm.param_count
+        );
+        Ok(crate::train::HostLm::from_flat(p, lm))
+    }
+
+    fn lm_logits(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let lm = self.manifest.lm.clone();
+        anyhow::ensure!(inputs.len() == 2, "lm_logits takes params, tokens");
+        let mut host = self.host_lm(&inputs[0])?;
+        let tokens = Self::lm_tokens(&inputs[1], lm.batch, lm.seq_len, "tokens")?;
+        let mut out = Vec::with_capacity(lm.batch * lm.seq_len * lm.vocab);
+        for b in 0..lm.batch {
+            let row = &tokens[b * lm.seq_len..(b + 1) * lm.seq_len];
+            let logits = host.forward(row, &crate::train::AttnMethod::Full, 1);
+            out.extend(logits.data().iter().map(|&x| x as f32));
+        }
+        Ok(vec![HostTensor::f32(
+            out,
+            &[lm.batch as i64, lm.seq_len as i64, lm.vocab as i64],
+        )])
+    }
+
+    fn lm_eval_loss(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let lm = self.manifest.lm.clone();
+        anyhow::ensure!(inputs.len() == 3, "lm_eval_loss takes params, tokens, targets");
+        let mut host = self.host_lm(&inputs[0])?;
+        let tokens = Self::lm_tokens(&inputs[1], lm.batch, lm.seq_len, "tokens")?;
+        let targets = Self::lm_tokens(&inputs[2], lm.batch, lm.seq_len, "targets")?;
+        let mut total = 0.0;
+        for b in 0..lm.batch {
+            let t = &tokens[b * lm.seq_len..(b + 1) * lm.seq_len];
+            let g = &targets[b * lm.seq_len..(b + 1) * lm.seq_len];
+            total += host.loss(t, g, &crate::train::AttnMethod::Full, 1);
+        }
+        let mean = (total / lm.batch as f64) as f32;
+        Ok(vec![HostTensor::f32(vec![mean], &[1])])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::attention_matrix;
+    use crate::linalg::top_k_svd;
+    use crate::util::Pcg32;
+
+    fn backend(n: usize, d: usize) -> HostBackend {
+        HostBackend::new(Manifest::synthetic(n, d))
+    }
+
+    fn attn_inputs(n: usize, d: usize, seed: u64) -> AttnInputs {
+        let mut rng = Pcg32::seeded(seed);
+        AttnInputs {
+            q: Mat::randn(n, d, 0.7, &mut rng),
+            k: Mat::randn(n, d, 0.7, &mut rng),
+            v: Mat::randn(n, d, 1.0, &mut rng),
+            causal: true,
+        }
+    }
+
+    #[test]
+    fn full_attn_matches_host_reference() {
+        let (n, d) = (64, 16);
+        let be = backend(n, d);
+        let inp = attn_inputs(n, d, 1);
+        let out = be
+            .execute(
+                "full_attn",
+                &[
+                    HostTensor::from_mat(&inp.q),
+                    HostTensor::from_mat(&inp.k),
+                    HostTensor::from_mat(&inp.v),
+                ],
+            )
+            .unwrap();
+        let y = out[0].to_mat(n, d);
+        // f32 boundary conversion on inputs, so compare against the
+        // reference on the same rounded inputs.
+        let rounded = AttnInputs {
+            q: Mat::from_f32(n, d, &inp.q.to_f32()),
+            k: Mat::from_f32(n, d, &inp.k.to_f32()),
+            v: Mat::from_f32(n, d, &inp.v.to_f32()),
+            causal: true,
+        };
+        assert!(y.allclose(&full_attention(&rounded), 1e-4));
+    }
+
+    #[test]
+    fn lowrank_attn_matches_factor_apply() {
+        let (n, d) = (64, 16);
+        let be = backend(n, d);
+        let inp = attn_inputs(n, d, 2);
+        let a = attention_matrix(&inp);
+        let bucket = 32;
+        let svd = top_k_svd(&a, bucket, 3);
+        let rank = 20;
+        let mask: Vec<f32> = (0..bucket).map(|i| if i < rank { 1.0 } else { 0.0 }).collect();
+        let out = be
+            .execute(
+                "lowrank_attn_r32",
+                &[
+                    HostTensor::from_mat(&svd.u.take_cols(bucket)),
+                    HostTensor::from_f64s(&svd.s[..bucket]),
+                    HostTensor::from_mat(&svd.v.take_cols(bucket).transpose()),
+                    HostTensor::from_mat(&inp.v),
+                    HostTensor::f32(mask, &[bucket as i64]),
+                ],
+            )
+            .unwrap();
+        let host = crate::attention::lowrank_attention_output(&svd, rank, &inp.v);
+        assert!(out[0].to_mat(n, d).allclose(&host, 1e-3));
+    }
+
+    #[test]
+    fn power_iter_estimates_sigma() {
+        let (n, d) = (32, 8);
+        let be = backend(n, d);
+        let mut rng = Pcg32::seeded(4);
+        // Spiked spectrum (σ₁ ≫ σ₂) so K=8 power iterations converge to
+        // well under the tolerance regardless of the random tail.
+        let mut m = Mat::randn(n, n, 0.1, &mut rng);
+        let u = Mat::randn(n, 1, 1.0, &mut rng);
+        let v = Mat::randn(n, 1, 1.0, &mut rng);
+        m.axpy(5.0, &crate::linalg::matmul(&u, &v.transpose()));
+        let v0: Vec<f32> = (0..n).map(|i| 1.0 + (i % 3) as f32).collect();
+        let out = be
+            .execute(
+                "power_iter",
+                &[
+                    HostTensor::from_mat(&m),
+                    HostTensor::f32(v0, &[n as i64]),
+                ],
+            )
+            .unwrap();
+        let sigma = out[0].scalar();
+        let exact = crate::linalg::svd(&m).s[0];
+        assert!((sigma - exact).abs() / exact < 0.05, "sigma {sigma} vs {exact}");
+    }
+
+    #[test]
+    fn lm_logits_and_loss_shapes() {
+        let be = backend(32, 8);
+        let lm = Manifest::synthetic(32, 8).lm;
+        let mut rng = Pcg32::seeded(5);
+        let mut params = vec![0f32; lm.param_count];
+        rng.fill_normal_f32(&mut params, 0.02);
+        let tokens: Vec<i32> =
+            (0..lm.batch * lm.seq_len).map(|_| rng.below(lm.vocab as u32) as i32).collect();
+        let targets: Vec<i32> = tokens.iter().map(|&t| (t + 1) % lm.vocab as i32).collect();
+        let bl = [lm.batch as i64, lm.seq_len as i64];
+        let p = HostTensor::f32(params, &[lm.param_count as i64]);
+        let logits = be
+            .execute("lm_logits", &[p.clone(), HostTensor::i32(tokens.clone(), &bl)])
+            .unwrap();
+        assert_eq!(logits[0].len(), lm.batch * lm.seq_len * lm.vocab);
+        let loss = be
+            .execute(
+                "lm_eval_loss",
+                &[p, HostTensor::i32(tokens, &bl), HostTensor::i32(targets, &bl)],
+            )
+            .unwrap();
+        let l = loss[0].scalar();
+        assert!(l.is_finite() && l > 0.0, "loss {l}");
+    }
+
+    #[test]
+    fn unknown_and_unsupported_artifacts_error() {
+        let be = backend(16, 4);
+        assert!(be.execute("nonexistent", &[]).is_err());
+        assert!(be.execute("policy_net", &[]).is_err());
+        assert!(be.warm("full_attn").is_ok());
+        assert!(be.warm("nonexistent").is_err());
+    }
+}

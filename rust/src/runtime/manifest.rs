@@ -54,7 +54,68 @@ pub struct Manifest {
     pub artifact_files: BTreeMap<String, String>,
 }
 
+impl LmShape {
+    /// Parameter count of the flat AOT layout (must mirror
+    /// python/compile/model.py::param_slices and HostLm::from_flat).
+    pub fn flat_param_count(&self) -> usize {
+        let (d, dff) = (self.d_model, self.d_ff);
+        let per_layer = 4 * d * d + 2 * d * dff + dff + 5 * d;
+        self.vocab * d + self.seq_len * d + self.n_layers * per_layer + 2 * d + d * self.vocab
+    }
+}
+
 impl Manifest {
+    /// Synthetic manifest for the pure-Rust host backend: no files on
+    /// disk, shapes chosen by the caller for the attention kernels and a
+    /// small fixed LM. Lets the serving stack (engine, batcher, rank
+    /// controller, generation) run without `make artifacts`.
+    pub fn synthetic(kernel_seq_len: usize, head_dim: usize) -> Manifest {
+        let rank_buckets = vec![16, 32, 48, 64];
+        let mut lm = LmShape {
+            vocab: 256,
+            seq_len: 32,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 64,
+            batch: 4,
+            param_count: 0,
+            lr: 5e-4,
+        };
+        lm.param_count = lm.flat_param_count();
+        let kernel = KernelShape {
+            seq_len: kernel_seq_len,
+            head_dim,
+            rank_buckets: rank_buckets.clone(),
+            block_n: 64,
+            power_iters: 8,
+        };
+        let rank_grid = vec![16, 24, 32, 40, 48, 56, 64];
+        let policy = PolicyShape {
+            state_dim: crate::rl::state_dim(),
+            n_actions: rank_grid.len(),
+            rank_grid,
+            bc_accuracy: 0.0,
+            param_count: 0,
+            params_file: "policy_params.bin".to_string(),
+        };
+        let mut artifact_files = BTreeMap::new();
+        for name in ["full_attn", "power_iter", "lm_logits", "lm_eval_loss"] {
+            artifact_files.insert(name.to_string(), format!("<host:{name}>"));
+        }
+        for b in &rank_buckets {
+            artifact_files
+                .insert(format!("lowrank_attn_r{b}"), format!("<host:lowrank_attn_r{b}>"));
+        }
+        Manifest {
+            dir: PathBuf::from("<host>"),
+            lm,
+            kernel,
+            policy,
+            artifact_files,
+        }
+    }
+
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)

@@ -3,11 +3,13 @@
 //! the Send `DeviceHandle` RPC and the typed `ArtifactRegistry` API.
 
 pub mod device;
+pub mod host;
 pub mod manifest;
 pub mod registry;
 pub mod tensor;
 
 pub use device::DeviceHandle;
+pub use host::HostBackend;
 pub use manifest::{KernelShape, LmShape, Manifest, PolicyShape};
 pub use registry::ArtifactRegistry;
 pub use tensor::HostTensor;

@@ -31,6 +31,20 @@ impl ArtifactRegistry {
         })
     }
 
+    /// Registry over the pure-Rust host backend with a synthetic manifest
+    /// (no artifacts on disk). `kernel_seq_len`/`head_dim` size the
+    /// attention kernels; the LM uses a small fixed shape. The AOT-only
+    /// entry points (`policy_net`, `lm_train_step`) return errors — use
+    /// non-Hlo policy sources with host registries.
+    pub fn open_host(kernel_seq_len: usize, head_dim: usize) -> Self {
+        let manifest = Manifest::synthetic(kernel_seq_len, head_dim);
+        ArtifactRegistry {
+            device: DeviceHandle::host(manifest.clone()),
+            manifest,
+            policy_weights: std::sync::OnceLock::new(),
+        }
+    }
+
     /// Load (once) the flat policy weight vector from its sidecar file.
     fn policy_weights(&self) -> Result<&[f32]> {
         if let Some(w) = self.policy_weights.get() {

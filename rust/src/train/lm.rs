@@ -55,7 +55,7 @@ impl<'r> LmTrainer<'r> {
                 &targets,
             )?;
             self.step += 1;
-            if log_every > 0 && (self.step as usize).is_multiple_of(log_every) {
+            if log_every > 0 && (self.step as usize) % log_every == 0 {
                 crate::log_info!(
                     "[{}] step {:5} loss {:.4}",
                     corpus.profile.name(),

@@ -2,12 +2,23 @@
 //! the offline build). Supports fire-and-forget jobs and a scoped
 //! parallel-for used by the blocked matmul and batched SVD.
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+thread_local! {
+    /// True while the current thread is a pool worker executing a job.
+    /// Nested parallel-for calls from inside a job run inline instead of
+    /// re-entering the queue: a job that blocks on a latch while its
+    /// sub-jobs sit behind other queued jobs deadlocks once every worker
+    /// is blocked the same way (observed with batched per-head SVDs whose
+    /// inner matmuls are themselves parallel).
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
 
 enum Msg {
     Run(Job),
@@ -34,11 +45,14 @@ impl ThreadPool {
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("drrl-worker-{i}"))
-                    .spawn(move || loop {
-                        let msg = { rx.lock().unwrap().recv() };
-                        match msg {
-                            Ok(Msg::Run(job)) => job(),
-                            Ok(Msg::Shutdown) | Err(_) => break,
+                    .spawn(move || {
+                        IN_POOL_WORKER.with(|f| f.set(true));
+                        loop {
+                            let msg = { rx.lock().unwrap().recv() };
+                            match msg {
+                                Ok(Msg::Run(job)) => job(),
+                                Ok(Msg::Shutdown) | Err(_) => break,
+                            }
                         }
                     })
                     .expect("spawn worker"),
@@ -73,7 +87,9 @@ impl ThreadPool {
         if n == 0 {
             return;
         }
-        if n == 1 || self.size == 1 {
+        if n == 1 || self.size == 1 || IN_POOL_WORKER.with(|fl| fl.get()) {
+            // Inline: trivial work, a single-worker pool, or a nested call
+            // from inside a pool job (see IN_POOL_WORKER).
             for i in 0..n {
                 f(i);
             }
@@ -239,6 +255,44 @@ mod tests {
         let pool = ThreadPool::new(2);
         pool.scoped_for(0, |_| panic!("should not run"));
         pool.chunked_for(0, 4, |_, _| panic!("should not run"));
+    }
+
+    #[test]
+    fn nested_parallel_for_does_not_deadlock() {
+        // Saturate the pool with jobs that each issue a nested parallel
+        // for; without the IN_POOL_WORKER inline fallback this deadlocks
+        // once every worker blocks on its sub-jobs.
+        let pool = global_pool();
+        let outer = pool.size() * 2 + 2;
+        let inner = 8;
+        let hits: Vec<AtomicU64> = (0..outer * inner).map(|_| AtomicU64::new(0)).collect();
+        pool.scoped_for(outer, |i| {
+            pool.scoped_for(inner, |j| {
+                hits[i * inner + j].fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        for h in &hits {
+            assert_eq!(h.load(Ordering::Relaxed), 1);
+        }
+    }
+
+    #[test]
+    fn nested_chunked_for_covers_everything() {
+        let pool = global_pool();
+        let total = 256;
+        let seen: Vec<AtomicU64> = (0..total).map(|_| AtomicU64::new(0)).collect();
+        pool.chunked_for(total, 8, |s, e| {
+            // Nested chunked_for inside a job must run inline and still
+            // cover its full range exactly once.
+            pool.chunked_for(e - s, 4, |s2, e2| {
+                for i in (s + s2)..(s + e2) {
+                    seen[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        });
+        for h in &seen {
+            assert_eq!(h.load(Ordering::Relaxed), 1);
+        }
     }
 
     #[test]

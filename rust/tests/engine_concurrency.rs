@@ -1,0 +1,278 @@
+//! Multi-worker engine tests against the pure-Rust host backend — these
+//! run without `make artifacts`.
+//!
+//! Covers the sharded-engine contract: (a) mixed generate/attention
+//! traffic from concurrent clients all gets answered, (b) per-request
+//! results are bit-identical between the N=1 and N=4 worker engines
+//! (deterministic-policy configuration), (c) `shutdown()` drains without
+//! deadlock and queued requests get explicit error replies, and (d) the
+//! batched per-head controller path matches the serial one exactly.
+
+use drrl::attention::{project_heads, AttnInputs, MhsaWeights};
+use drrl::coordinator::{
+    BatchPolicy, ControllerConfig, EngineConfig, PolicySource, RankController, ServingEngine,
+};
+use drrl::linalg::Mat;
+use drrl::runtime::ArtifactRegistry;
+use drrl::util::Pcg32;
+use std::sync::Arc;
+use std::time::Duration;
+
+const KERNEL_N: usize = 128;
+const HEAD_DIM: usize = 32;
+const N_HEADS: usize = 2;
+const D_MODEL: usize = HEAD_DIM * N_HEADS;
+const N_LAYERS: usize = 2;
+
+fn host_registry() -> Arc<ArtifactRegistry> {
+    Arc::new(ArtifactRegistry::open_host(KERNEL_N, HEAD_DIM))
+}
+
+fn layers(seed: u64) -> Vec<MhsaWeights> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..N_LAYERS).map(|_| MhsaWeights::init(D_MODEL, N_HEADS, &mut rng)).collect()
+}
+
+fn lm_params(reg: &ArtifactRegistry, seed: u64) -> Arc<Vec<f32>> {
+    let mut rng = Pcg32::seeded(seed);
+    let mut p = vec![0f32; reg.manifest.lm.param_count];
+    rng.fill_normal_f32(&mut p, 0.02);
+    Arc::new(p)
+}
+
+/// Deterministic controller config: every call is a segment boundary and
+/// the trust region is off, so each response depends only on the request
+/// content — interleaving across workers cannot change results.
+fn deterministic_cfg() -> ControllerConfig {
+    ControllerConfig { segment_len: 1, use_trust_region: false, ..Default::default() }
+}
+
+fn mk_engine(reg: &Arc<ArtifactRegistry>, n_workers: usize, source: PolicySource) -> ServingEngine {
+    ServingEngine::start_with_config(
+        Arc::clone(reg),
+        lm_params(reg, 7),
+        layers(33),
+        deterministic_cfg(),
+        source,
+        EngineConfig {
+            n_workers,
+            batch_policy: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                capacity: 4096,
+            },
+        },
+    )
+}
+
+/// Fixed request mix: attention segments across layers plus prompts.
+fn attention_inputs(count: usize) -> Vec<(Vec<f64>, usize)> {
+    let mut rng = Pcg32::seeded(99);
+    (0..count)
+        .map(|i| (Mat::randn(KERNEL_N, D_MODEL, 1.0, &mut rng).into_vec(), i % N_LAYERS))
+        .collect()
+}
+
+fn prompts(count: usize) -> Vec<Vec<i32>> {
+    (0..count)
+        .map(|i| format!("prompt {i} ").bytes().map(|b| b as i32).collect())
+        .collect()
+}
+
+#[test]
+fn default_engine_is_multiworker() {
+    let reg = host_registry();
+    let engine = ServingEngine::start(
+        Arc::clone(&reg),
+        lm_params(&reg, 1),
+        layers(2),
+        deterministic_cfg(),
+        PolicySource::Fixed(32),
+        BatchPolicy::default(),
+    );
+    assert!(engine.n_workers() >= 2, "default engine must run ≥2 workers");
+}
+
+#[test]
+fn mixed_traffic_from_concurrent_clients_all_respond() {
+    let reg = host_registry();
+    let engine = Arc::new(mk_engine(&reg, 4, PolicySource::Fixed(32)));
+    let n_clients = 4;
+    let attn_per_client = 4;
+    let gen_per_client = 2;
+
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let engine = Arc::clone(&engine);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Pcg32::seeded(1000 + c as u64);
+            let mut rxs_a = Vec::new();
+            let mut rxs_g = Vec::new();
+            for i in 0..attn_per_client {
+                let x = Mat::randn(KERNEL_N, D_MODEL, 1.0, &mut rng).into_vec();
+                let (_, rx) = engine
+                    .submit_attention(x, KERNEL_N, D_MODEL, i % N_LAYERS)
+                    .expect("submit attention");
+                rxs_a.push(rx);
+            }
+            for i in 0..gen_per_client {
+                let prompt: Vec<i32> =
+                    format!("client {c} msg {i} ").bytes().map(|b| b as i32).collect();
+                let (_, rx) = engine.submit_generate(prompt, 2).expect("submit generate");
+                rxs_g.push(rx);
+            }
+            for rx in rxs_a {
+                let resp = rx
+                    .recv_timeout(Duration::from_secs(300))
+                    .expect("attention response")
+                    .expect("attention ok");
+                assert_eq!(resp.y.len(), KERNEL_N * D_MODEL);
+                assert!(resp.y.iter().all(|v| v.is_finite()));
+                assert_eq!(resp.ranks.len(), N_HEADS);
+            }
+            for rx in rxs_g {
+                let resp = rx
+                    .recv_timeout(Duration::from_secs(300))
+                    .expect("generate response")
+                    .expect("generate ok");
+                assert_eq!(resp.tokens.len(), 2);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("client thread");
+    }
+    let total = (n_clients * (attn_per_client + gen_per_client)) as u64;
+    assert_eq!(engine.metrics.requests(), total);
+}
+
+#[test]
+fn multiworker_results_bit_identical_to_single_worker() {
+    let reg = host_registry();
+    let attns = attention_inputs(10);
+    let gens = prompts(4);
+
+    // Collect (per request index) from an engine with the given worker
+    // count, submitting attention traffic from two concurrent threads.
+    let run = |n_workers: usize| {
+        let engine = Arc::new(mk_engine(&reg, n_workers, PolicySource::Fixed(32)));
+        let submit_half = |engine: Arc<ServingEngine>,
+                           items: Vec<(usize, (Vec<f64>, usize))>| {
+            std::thread::spawn(move || {
+                items
+                    .into_iter()
+                    .map(|(i, (x, layer))| {
+                        let (_, rx) = engine
+                            .submit_attention(x, KERNEL_N, D_MODEL, layer)
+                            .expect("submit");
+                        (i, rx)
+                    })
+                    .collect::<Vec<_>>()
+            })
+        };
+        let mid = attns.len() / 2;
+        let first: Vec<_> = attns[..mid].iter().cloned().enumerate().collect();
+        let second: Vec<_> =
+            attns[mid..].iter().cloned().enumerate().map(|(i, v)| (i + mid, v)).collect();
+        let h1 = submit_half(Arc::clone(&engine), first);
+        let h2 = submit_half(Arc::clone(&engine), second);
+        let mut attn_results: Vec<Option<(Vec<f64>, Vec<usize>, u64, u64)>> =
+            vec![None; attns.len()];
+        for h in [h1, h2] {
+            for (i, rx) in h.join().expect("submitter") {
+                let r = rx
+                    .recv_timeout(Duration::from_secs(300))
+                    .expect("response")
+                    .expect("ok");
+                attn_results[i] = Some((r.y, r.ranks, r.flops_spent, r.flops_full));
+            }
+        }
+        let gen_results: Vec<Vec<i32>> = gens
+            .iter()
+            .map(|p| {
+                let (_, rx) = engine.submit_generate(p.clone(), 3).expect("submit gen");
+                rx.recv_timeout(Duration::from_secs(300)).expect("response").expect("ok").tokens
+            })
+            .collect();
+        (attn_results, gen_results)
+    };
+
+    let (a1, g1) = run(1);
+    let (a4, g4) = run(4);
+    for (i, (r1, r4)) in a1.iter().zip(a4.iter()).enumerate() {
+        let r1 = r1.as_ref().expect("filled");
+        let r4 = r4.as_ref().expect("filled");
+        assert_eq!(r1.1, r4.1, "request {i}: ranks differ");
+        assert_eq!(r1.2, r4.2, "request {i}: flops_spent differ");
+        assert_eq!(r1.3, r4.3, "request {i}: flops_full differ");
+        assert_eq!(r1.0.len(), r4.0.len(), "request {i}: output length");
+        for (j, (a, b)) in r1.0.iter().zip(r4.0.iter()).enumerate() {
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "request {i} element {j}: {a} vs {b} not bit-identical"
+            );
+        }
+    }
+    assert_eq!(g1, g4, "generation must be bit-identical across worker counts");
+}
+
+#[test]
+fn shutdown_drains_without_deadlock_and_reports_errors() {
+    let reg = host_registry();
+    let engine = mk_engine(&reg, 4, PolicySource::Fixed(32));
+    let attns = attention_inputs(12);
+    let mut rxs = Vec::new();
+    for (x, layer) in attns {
+        if let Ok((_, rx)) = engine.submit_attention(x, KERNEL_N, D_MODEL, layer) {
+            rxs.push(rx);
+        }
+    }
+    // Prompt shutdown while most of the queue is still pending. Must not
+    // deadlock; queued-but-unserved requests get explicit errors.
+    engine.shutdown();
+    let mut served = 0usize;
+    let mut errored = 0usize;
+    for rx in rxs {
+        match rx.recv_timeout(Duration::from_secs(60)) {
+            Ok(Ok(resp)) => {
+                assert!(resp.y.iter().all(|v| v.is_finite()));
+                served += 1;
+            }
+            Ok(Err(e)) => {
+                assert!(e.message.contains("stopped"), "unexpected error: {e}");
+                errored += 1;
+            }
+            Err(_) => panic!("receiver hung after shutdown"),
+        }
+    }
+    assert_eq!(served + errored, 12, "every request must resolve");
+}
+
+#[test]
+fn batched_head_path_matches_serial_controller() {
+    // The engine's batched per-head path and the serial single-head path
+    // must produce identical outputs, decisions and stream evolution.
+    let reg = host_registry();
+    let layer_stack = layers(5);
+    let w = &layer_stack[0];
+    let mut rng = Pcg32::seeded(6);
+    let cfg = || ControllerConfig { segment_len: 2, ..Default::default() };
+    let mut serial = RankController::new(cfg(), PolicySource::Fixed(32));
+    let mut batched = RankController::new(cfg(), PolicySource::Fixed(32));
+    for _step in 0..4 {
+        let x = Mat::randn(KERNEL_N, D_MODEL, 1.0, &mut rng);
+        let heads: Vec<AttnInputs> = project_heads(&x, w, true);
+        let head_refs: Vec<(usize, &AttnInputs)> = heads.iter().enumerate().collect();
+        let got = batched
+            .attention_heads_batched(&reg, &x, w, &head_refs, 0, N_LAYERS)
+            .expect("batched");
+        for (h, inp) in heads.iter().enumerate() {
+            let (y, dec) = serial.attention(&reg, &x, w, inp, 0, h, N_LAYERS).expect("serial");
+            let (yb, decb) = &got[h];
+            assert_eq!(dec.rank, decb.rank, "head {h} rank");
+            assert_eq!(dec.prev_rank, decb.prev_rank, "head {h} prev_rank");
+            assert_eq!(dec.flops_spent, decb.flops_spent, "head {h} flops");
+            assert!(y.allclose(yb, 0.0), "head {h} output not bit-identical");
+        }
+    }
+}

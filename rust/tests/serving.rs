@@ -52,7 +52,7 @@ fn attention_requests_round_trip() {
         rxs.push(rx);
     }
     for rx in rxs {
-        let resp = rx.recv_timeout(Duration::from_secs(300)).expect("response");
+        let resp = rx.recv_timeout(Duration::from_secs(300)).expect("response").expect("ok");
         assert_eq!(resp.y.len(), n * kd);
         assert!(resp.y.iter().all(|v| v.is_finite()));
         assert!(!resp.ranks.is_empty());
@@ -75,7 +75,7 @@ fn generate_requests_batched() {
         rxs.push(rx);
     }
     for rx in rxs {
-        let resp = rx.recv_timeout(Duration::from_secs(300)).expect("response");
+        let resp = rx.recv_timeout(Duration::from_secs(300)).expect("response").expect("ok");
         assert_eq!(resp.tokens.len(), 3);
         assert!(resp.tokens.iter().all(|&t| (0..256).contains(&t)));
     }
@@ -90,7 +90,7 @@ fn full_rank_policy_reports_no_saving() {
     let mut rng = Pcg32::seeded(2);
     let x = Mat::randn(n, kd, 1.0, &mut rng);
     let (_, rx) = engine.submit_attention(x.into_vec(), n, kd, 0).unwrap();
-    let resp = rx.recv_timeout(Duration::from_secs(300)).unwrap();
+    let resp = rx.recv_timeout(Duration::from_secs(300)).unwrap().unwrap();
     assert_eq!(resp.flops_spent, resp.flops_full);
     assert!(engine.metrics.flops_saving().abs() < 1e-9);
 }
@@ -104,7 +104,7 @@ fn fixed_policy_selects_configured_rank() {
     let mut rng = Pcg32::seeded(3);
     let x = Mat::randn(n, kd, 1.0, &mut rng);
     let (_, rx) = engine.submit_attention(x.into_vec(), n, kd, 0).unwrap();
-    let resp = rx.recv_timeout(Duration::from_secs(300)).unwrap();
+    let resp = rx.recv_timeout(Duration::from_secs(300)).unwrap().unwrap();
     // Trust region may push off 32 only if masked; with a fresh stream
     // the self-transition is always admissible.
     assert_eq!(resp.ranks[0], 32);
@@ -128,7 +128,7 @@ fn router_spreads_load() {
         rxs.push(rx);
     }
     for rx in rxs {
-        rx.recv_timeout(Duration::from_secs(300)).unwrap();
+        rx.recv_timeout(Duration::from_secs(300)).unwrap().unwrap();
     }
     // Round-robin: both engines saw work.
     assert_eq!(router.engines()[0].metrics.requests(), 2);
