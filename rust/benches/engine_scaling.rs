@@ -1,11 +1,23 @@
 //! Multi-worker serving-engine scaling microbench (no artifacts needed —
 //! runs on the pure-Rust host backend).
 //!
-//! Workload per the engine-sharding acceptance bar: 8-head, n=512
-//! attention segments spread over four layers, identical request sets
-//! served by a single-worker and a multi-worker engine. Reports wall
-//! time, throughput and the multi/single speedup (target ≥ 1.5× on a
-//! multi-core host).
+//! Three scenarios:
+//!
+//! 1. **Worker scaling** (PR-1 acceptance bar): 8-head, n=512 attention
+//!    segments spread over four layers, identical request sets served by
+//!    a single-worker and a multi-worker engine (target ≥ 1.5× on a
+//!    multi-core host).
+//! 2. **Same-layer contention** (cross-request pipeline): many requests
+//!    to *one* layer, submitted one-at-a-time (per-request baseline:
+//!    every request is its own drained batch → its own probe wave and
+//!    lock round-trips) vs. all-at-once (co-batched: the pipeline runs
+//!    one probe wave and two lock takes per drained batch). Reports the
+//!    SVD-dispatch and lock-round-trip counts from the engine metrics
+//!    alongside wall-clock.
+//! 3. **Host LM parse cache**: `lm_logits` with identical params every
+//!    call (cache hits) vs. alternating params (every call re-parses) —
+//!    the per-call parse overhead the fingerprint cache removes from the
+//!    generation hot path.
 //!
 //! Run: `cargo bench --bench engine_scaling` (or the built binary in
 //! `target/release/`). `DRRL_BENCH_QUICK=1` shrinks the request count.
@@ -27,14 +39,14 @@ const N_HEADS: usize = 8;
 const D_MODEL: usize = HEAD_DIM * N_HEADS;
 const N_LAYERS: usize = 4;
 
-fn run_engine(
+fn mk_engine(
     reg: &Arc<ArtifactRegistry>,
     layers: &[MhsaWeights],
     params: &Arc<Vec<f32>>,
     n_workers: usize,
-    requests: &[(Vec<f64>, usize)],
-) -> f64 {
-    let engine = ServingEngine::start_with_config(
+    max_batch: usize,
+) -> ServingEngine {
+    ServingEngine::start_with_config(
         Arc::clone(reg),
         Arc::clone(params),
         layers.to_vec(),
@@ -43,12 +55,24 @@ fn run_engine(
         EngineConfig {
             n_workers,
             batch_policy: BatchPolicy {
-                max_batch: 8,
+                max_batch,
                 max_wait: Duration::from_micros(200),
                 capacity: 1 << 16,
             },
         },
-    );
+    )
+}
+
+/// Submit every request up front (letting the batcher co-batch), await
+/// all replies; returns elapsed seconds.
+fn run_engine(
+    reg: &Arc<ArtifactRegistry>,
+    layers: &[MhsaWeights],
+    params: &Arc<Vec<f32>>,
+    n_workers: usize,
+    requests: &[(Vec<f64>, usize)],
+) -> f64 {
+    let engine = mk_engine(reg, layers, params, n_workers, 8);
     let sw = Stopwatch::start();
     let rxs: Vec<_> = requests
         .iter()
@@ -65,10 +89,56 @@ fn run_engine(
     sw.elapsed().as_secs_f64()
 }
 
+/// Same-layer contention: serve `requests` (all to one layer) either one
+/// at a time (`co_batch = false` — the per-request baseline) or
+/// submitted together so drained batches run the cross-request pipeline.
+/// Returns (elapsed_s, probe_waves, shard_locks, batches, mean_co_batch).
+fn run_same_layer(
+    reg: &Arc<ArtifactRegistry>,
+    layers: &[MhsaWeights],
+    params: &Arc<Vec<f32>>,
+    requests: &[(Vec<f64>, usize)],
+    co_batch: bool,
+) -> (f64, u64, u64, u64, f64) {
+    let max_batch = if co_batch { 8 } else { 1 };
+    let engine = mk_engine(reg, layers, params, 1, max_batch);
+    let sw = Stopwatch::start();
+    if co_batch {
+        let rxs: Vec<_> = requests
+            .iter()
+            .map(|(x, layer)| {
+                engine
+                    .submit_attention(x.clone(), KERNEL_N, D_MODEL, *layer)
+                    .expect("submit")
+                    .1
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(600)).expect("response").expect("ok");
+        }
+    } else {
+        for (x, layer) in requests {
+            let (_, rx) = engine
+                .submit_attention(x.clone(), KERNEL_N, D_MODEL, *layer)
+                .expect("submit");
+            rx.recv_timeout(Duration::from_secs(600)).expect("response").expect("ok");
+        }
+    }
+    let elapsed = sw.elapsed().as_secs_f64();
+    let m = &engine.metrics;
+    (
+        elapsed,
+        m.probe_dispatches(),
+        m.shard_locks(),
+        m.attention_batches(),
+        m.mean_co_batch(),
+    )
+}
+
 fn main() -> anyhow::Result<()> {
     banner(
-        "engine scaling: multi-worker vs single-worker attention serving",
-        "sharded engine amortizes batched per-head SVD (≥1.5× target)",
+        "engine scaling: workers, cross-request co-batching, LM parse cache",
+        "staged pipeline amortizes SVD dispatches and shard locks per drained batch",
     );
     let n_requests = if quick_mode() { 8 } else { 24 };
     let reg = Arc::new(ArtifactRegistry::open_host(KERNEL_N, HEAD_DIM));
@@ -92,6 +162,7 @@ fn main() -> anyhow::Result<()> {
     // Warm-up pass so thread-pool spin-up doesn't bias the first run.
     let _ = run_engine(&reg, &layers, &params, 1, &requests[..2.min(requests.len())]);
 
+    println!("── worker scaling (mixed layers) ──");
     let t1 = run_engine(&reg, &layers, &params, 1, &requests);
     let tp1 = n_requests as f64 / t1;
     println!("single-worker : {t1:>7.2}s  {tp1:>6.2} req/s");
@@ -100,6 +171,52 @@ fn main() -> anyhow::Result<()> {
     let tn = run_engine(&reg, &layers, &params, n_multi, &requests);
     let tpn = n_requests as f64 / tn;
     println!("{n_multi}-worker      : {tn:>7.2}s  {tpn:>6.2} req/s");
-    println!("\nspeedup: {:.2}× (target ≥ 1.5× on a multi-core host)", t1 / tn);
+    println!("speedup: {:.2}× (target ≥ 1.5× on a multi-core host)\n", t1 / tn);
+
+    println!("── same-layer contention (cross-request pipeline) ──");
+    let same_layer: Vec<(Vec<f64>, usize)> = (0..n_requests)
+        .map(|_| (Mat::randn(KERNEL_N, D_MODEL, 1.0, &mut rng).into_vec(), 0usize))
+        .collect();
+    let (ts, pw_s, locks_s, batches_s, co_s) =
+        run_same_layer(&reg, &layers, &params, &same_layer, false);
+    println!(
+        "per-request   : {ts:>7.2}s  probe_waves={pw_s} shard_locks={locks_s} \
+         batches={batches_s} mean_co_batch={co_s:.2}"
+    );
+    let (tc, pw_c, locks_c, batches_c, co_c) =
+        run_same_layer(&reg, &layers, &params, &same_layer, true);
+    println!(
+        "co-batched    : {tc:>7.2}s  probe_waves={pw_c} shard_locks={locks_c} \
+         batches={batches_c} mean_co_batch={co_c:.2}"
+    );
+    println!(
+        "speedup: {:.2}×  SVD-dispatch reduction: {pw_s}→{pw_c}  lock reduction: \
+         {locks_s}→{locks_c}\n",
+        ts / tc
+    );
+
+    println!("── host LM parse cache (lm_logits) ──");
+    let lm = &reg.manifest.lm;
+    let tokens = vec![b' ' as i32; lm.batch * lm.seq_len];
+    let p1: Vec<f32> = params.as_ref().clone();
+    let mut p2 = p1.clone();
+    p2[0] += 1e-3;
+    let iters = if quick_mode() { 8 } else { 32 };
+    // Warm the cache, then time hits.
+    reg.lm_logits(&p1, &tokens)?;
+    let sw = Stopwatch::start();
+    for _ in 0..iters {
+        reg.lm_logits(&p1, &tokens)?;
+    }
+    let cached_ms = sw.elapsed_ms() / iters as f64;
+    // Alternate two parameter vectors: every call misses and re-parses.
+    let sw = Stopwatch::start();
+    for i in 0..iters {
+        reg.lm_logits(if i % 2 == 0 { &p2 } else { &p1 }, &tokens)?;
+    }
+    let uncached_ms = sw.elapsed_ms() / iters as f64;
+    println!("cached params : {cached_ms:>8.3} ms/call");
+    println!("re-parsed     : {uncached_ms:>8.3} ms/call");
+    println!("parse-cache speedup: {:.2}×", uncached_ms / cached_ms);
     Ok(())
 }

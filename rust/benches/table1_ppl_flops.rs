@@ -93,10 +93,11 @@ fn main() -> anyhow::Result<()> {
             .map(|_| corpus.sample_batch(false, lm.batch, lm.seq_len, &mut eval_rng))
             .collect();
 
+        // One parsed model serves every method (eval is `&self`); only
+        // the rank accounting resets between methods.
+        let host = HostLm::from_flat(&tr.params, &lm);
         for (mi, (name, method, _)) in methods.iter().enumerate() {
-            let mut host = HostLm::from_flat(&tr.params, &lm);
-            host.rank_sum = 0;
-            host.rank_count = 0;
+            host.reset_rank_stats();
             let mut total = 0.0;
             let mut count = 0usize;
             for (tok, tgt) in &batches {

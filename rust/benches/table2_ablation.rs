@@ -118,7 +118,7 @@ fn main() -> anyhow::Result<()> {
                 AttnMethod::DrRl { grid: grid.clone(), actor: Arc::new(agent.ac) }
             }
         };
-        let mut host = HostLm::from_flat(&tr.params, &lm);
+        let host = HostLm::from_flat(&tr.params, &lm);
         let mut total = 0.0;
         let mut count = 0;
         for (tok, tgt) in &batches {

@@ -2,6 +2,11 @@
 //! maximum size (the artifact's static batch dimension) and a maximum
 //! queue delay, with bounded-queue backpressure — the standard
 //! continuous-batching front-end of serving systems (vLLM-style).
+//!
+//! Drained batches preserve submission (FIFO) order. The engine's
+//! cross-request attention pipeline relies on this: its decision replay
+//! runs in drained order, which is what makes a co-batched run
+//! bit-identical to serving the same requests one at a time.
 
 use super::request::Pending;
 use std::collections::VecDeque;
@@ -181,6 +186,25 @@ mod tests {
         assert_eq!(batch.len(), 1);
         let waited = t0.elapsed();
         assert!(waited >= Duration::from_millis(15), "waited {waited:?}");
+    }
+
+    #[test]
+    fn drained_batches_preserve_fifo_order() {
+        // The pipeline's decision-ordering invariant depends on this.
+        let b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 3,
+            max_wait: Duration::from_millis(1),
+            capacity: 100,
+        });
+        for i in 0..7 {
+            b.submit(i).unwrap();
+        }
+        let mut seen = Vec::new();
+        while seen.len() < 7 {
+            let batch = b.next_batch().unwrap();
+            seen.extend(batch.into_iter().map(|p| p.inner));
+        }
+        assert_eq!(seen, (0..7).collect::<Vec<_>>());
     }
 
     #[test]

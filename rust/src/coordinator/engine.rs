@@ -2,21 +2,37 @@
 //! and execute batched LM generation plus DR-RL adaptive attention
 //! segments against the artifact registry.
 //!
-//! Sharding model: rank-controller state is sharded **per layer** (one
-//! `Mutex<RankController>` per layer, all sharing one `PolicySource`), so
-//! same-layer decisions stay coherent and serialized while requests to
-//! different layers — and the generate path — proceed in parallel.
-//! Within one attention request the per-head probe/SVD and factor-apply
-//! dispatches fan out over the global thread pool (see
-//! `RankController::attention_heads_batched`), so a multi-head segment
-//! costs roughly one head of wall-clock.
+//! ## Execution model
+//!
+//! Generation requests pack into fixed-shape logits chunks
+//! (`serve_generate_batch`). Attention requests run through the staged
+//! cross-request pipeline (`pipeline::run_attention_batch`):
+//! **plan** (validate + project heads, lock-free, pooled) →
+//! **probe** (one global SVD wave for every refreshing head of every
+//! co-batched request across all layers) →
+//! **decide** (each touched layer's shard lock taken once per drained
+//! batch; decisions replay serially in request-arrival, head order) →
+//! **apply** (one pooled wave of masked factor applies). A drained
+//! batch therefore costs O(layers-touched) lock round-trips and SVD
+//! dispatches instead of O(requests).
+//!
+//! ## Sharding and the decision-ordering invariant
+//!
+//! Rank-controller state is sharded **per layer** (one
+//! `Mutex<RankController>` per layer, all sharing one `PolicySource`),
+//! so same-layer decisions stay coherent and serialized while requests
+//! to different layers — and the generate path — proceed in parallel.
+//! Within a drained batch the pipeline replays each layer's decisions in
+//! the order the requests arrived, which makes its results bit-identical
+//! to submitting the same requests one at a time to a single-worker
+//! engine (see `rust/tests/engine_concurrency.rs`).
 
 use super::batcher::{BatchPolicy, DynamicBatcher, SubmitError};
 use super::metrics::Metrics;
+use super::pipeline::{self, AttnJob};
 use super::rank_controller::{ControllerConfig, PolicySource, RankController};
 use super::request::*;
-use crate::attention::{merge_heads, project_heads, AttnInputs, MhsaWeights};
-use crate::linalg::Mat;
+use crate::attention::MhsaWeights;
 use crate::runtime::ArtifactRegistry;
 use crate::util::Stopwatch;
 use anyhow::Result;
@@ -28,6 +44,9 @@ enum Work {
     Generate(GenerateRequest, Sender<EngineResult<GenerateResponse>>),
     Attention(AttentionRequest, Sender<EngineResult<AttentionResponse>>),
 }
+
+/// A generation request mid-flight: arrival envelope, request, reply.
+type GenJob = (Pending<()>, GenerateRequest, Sender<EngineResult<GenerateResponse>>);
 
 /// Engine tuning knobs beyond the batching policy.
 #[derive(Debug, Clone)]
@@ -45,16 +64,22 @@ impl Default for EngineConfig {
 }
 
 /// Shared state every worker operates on.
-struct EngineShared {
-    reg: Arc<ArtifactRegistry>,
-    lm_params: Arc<Vec<f32>>,
-    layers: Vec<MhsaWeights>,
+pub(crate) struct EngineShared {
+    pub(crate) reg: Arc<ArtifactRegistry>,
+    pub(crate) lm_params: Arc<Vec<f32>>,
+    pub(crate) layers: Vec<MhsaWeights>,
     /// One controller shard per layer; index = layer.
-    shards: Vec<Mutex<RankController>>,
-    metrics: Arc<Metrics>,
+    pub(crate) shards: Vec<Mutex<RankController>>,
+    /// The shared policy source (also held by every shard); the pipeline
+    /// reads it to short-circuit the full-rank dense path.
+    pub(crate) source: Arc<PolicySource>,
+    /// Controller config the shards were built with (the pipeline needs
+    /// the rank grid to size the probe bucket).
+    pub(crate) controller_cfg: ControllerConfig,
+    pub(crate) metrics: Arc<Metrics>,
     /// Prompt-shutdown flag: once set, workers stop computing queued
     /// work and reply with explicit errors instead.
-    stopped: AtomicBool,
+    pub(crate) stopped: AtomicBool,
 }
 
 /// Engine handle. Submit from any thread.
@@ -113,6 +138,8 @@ impl ServingEngine {
             lm_params,
             layers,
             shards,
+            source,
+            controller_cfg,
             metrics: Arc::clone(&metrics),
             stopped: AtomicBool::new(false),
         });
@@ -153,8 +180,7 @@ impl ServingEngine {
         &self,
         prompt: Vec<i32>,
         max_new_tokens: usize,
-    ) -> Result<(RequestId, std::sync::mpsc::Receiver<EngineResult<GenerateResponse>>), SubmitError>
-    {
+    ) -> Result<(RequestId, ResponseReceiver<GenerateResponse>), SubmitError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = std::sync::mpsc::channel();
         self.submit(Work::Generate(GenerateRequest { id, prompt, max_new_tokens }, tx))?;
@@ -168,8 +194,7 @@ impl ServingEngine {
         n: usize,
         d_model: usize,
         layer: usize,
-    ) -> Result<(RequestId, std::sync::mpsc::Receiver<EngineResult<AttentionResponse>>), SubmitError>
-    {
+    ) -> Result<(RequestId, ResponseReceiver<AttentionResponse>), SubmitError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = std::sync::mpsc::channel();
         self.submit(Work::Attention(AttentionRequest { id, x, n, d_model, layer }, tx))?;
@@ -225,43 +250,32 @@ fn worker_loop(shared: &EngineShared, batcher: &DynamicBatcher<Work>) {
             }
             continue;
         }
-        let batch_size = batch.len();
-        // Split by type, preserving arrival envelopes.
-        let mut gens: Vec<(Pending<()>, GenerateRequest, Sender<EngineResult<GenerateResponse>>)> =
-            Vec::new();
-        let mut attns = Vec::new();
+        // Regroup the drained batch by type, preserving the arrival
+        // envelopes and FIFO order (the pipeline's replay order).
+        let mut gens: Vec<GenJob> = Vec::new();
+        let mut attns: Vec<AttnJob> = Vec::new();
         for p in batch {
             let arrived = p.arrived;
             match p.inner {
                 Work::Generate(req, tx) => {
                     gens.push((Pending { inner: (), arrived }, req, tx))
                 }
-                Work::Attention(req, tx) => attns.push((arrived, req, tx)),
+                Work::Attention(req, tx) => attns.push(AttnJob { arrived, req, tx }),
             }
         }
         if !gens.is_empty() {
             // serve_generate_batch replies to every request itself (Ok per
             // chunk, or explicit errors for the failing chunk onward).
-            if let Err(e) = serve_generate_batch(shared, &mut gens, batch_size) {
+            // batch_size counts co-batched *generation* requests, matching
+            // the attention pipeline's same-type co-batch convention.
+            let gen_count = gens.len();
+            if let Err(e) = serve_generate_batch(shared, &mut gens, gen_count) {
                 crate::log_warn!("generate batch failed: {e:#}");
             }
         }
-        for (arrived, req, tx) in attns {
-            let queued_ms = arrived.elapsed().as_secs_f64() * 1e3;
-            match serve_attention(shared, &req) {
-                Ok(mut resp) => {
-                    resp.queued_ms = queued_ms;
-                    let _ = tx.send(Ok(resp));
-                }
-                Err(e) => {
-                    crate::log_warn!("attention req {} failed: {e:#}", req.id);
-                    let _ = tx.send(Err(EngineError {
-                        id: req.id,
-                        message: format!("{e:#}"),
-                    }));
-                }
-            }
-        }
+        // The staged cross-request pipeline replies to every attention
+        // job itself.
+        pipeline::run_attention_batch(shared, attns);
     }
 }
 
@@ -271,7 +285,7 @@ fn worker_loop(shared: &EngineShared, batcher: &DynamicBatcher<Work>) {
 /// (already-replied chunks are left alone).
 fn serve_generate_batch(
     shared: &EngineShared,
-    gens: &mut [(Pending<()>, GenerateRequest, Sender<EngineResult<GenerateResponse>>)],
+    gens: &mut [GenJob],
     batch_size: usize,
 ) -> Result<()> {
     let chunk_size = shared.reg.manifest.lm.batch.max(1);
@@ -296,114 +310,62 @@ fn serve_generate_batch(
 /// lock-step.
 fn serve_generate_chunk(
     shared: &EngineShared,
-    chunk: &mut [(Pending<()>, GenerateRequest, Sender<EngineResult<GenerateResponse>>)],
+    chunk: &mut [GenJob],
     batch_size: usize,
 ) -> Result<()> {
     let reg = &shared.reg;
     let lm = &reg.manifest.lm;
-    // The stopwatch is scoped per chunk so later chunks don't report the
-    // cumulative elapsed time (which used to inflate compute_ms and the
-    // latency histograms).
-    {
-        let sw = Stopwatch::start();
-        let max_steps = chunk.iter().map(|(_, r, _)| r.max_new_tokens).max().unwrap_or(0);
-        let mut contexts: Vec<Vec<i32>> =
-            chunk.iter().map(|(_, r, _)| r.prompt.clone()).collect();
-        let mut outputs: Vec<Vec<i32>> = vec![Vec::new(); chunk.len()];
-        for _step in 0..max_steps {
-            let mut tokens = vec![b' ' as i32; lm.batch * lm.seq_len];
-            for (row, ctx) in contexts.iter().enumerate() {
-                let take = ctx.len().min(lm.seq_len);
-                let dst = row * lm.seq_len + (lm.seq_len - take);
-                tokens[dst..dst + take].copy_from_slice(&ctx[ctx.len() - take..]);
-            }
-            let logits = reg.lm_logits(&shared.lm_params, &tokens)?;
-            for (row, ctx) in contexts.iter_mut().enumerate() {
-                if outputs[row].len() >= chunk[row].1.max_new_tokens {
-                    continue;
-                }
-                let off = (row * lm.seq_len + lm.seq_len - 1) * lm.vocab;
-                let next = logits[off..off + lm.vocab]
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .map(|(i, _)| i as i32)
-                    .unwrap();
-                ctx.push(next);
-                outputs[row].push(next);
-            }
+    // The stopwatch covers exactly one chunk (the caller loops over
+    // chunks), so compute_ms and the latency histograms never accumulate
+    // cross-chunk time.
+    let sw = Stopwatch::start();
+    let max_steps = chunk.iter().map(|(_, r, _)| r.max_new_tokens).max().unwrap_or(0);
+    let mut contexts: Vec<Vec<i32>> =
+        chunk.iter().map(|(_, r, _)| r.prompt.clone()).collect();
+    let mut outputs: Vec<Vec<i32>> = vec![Vec::new(); chunk.len()];
+    for _step in 0..max_steps {
+        let mut tokens = vec![b' ' as i32; lm.batch * lm.seq_len];
+        for (row, ctx) in contexts.iter().enumerate() {
+            let take = ctx.len().min(lm.seq_len);
+            let dst = row * lm.seq_len + (lm.seq_len - take);
+            tokens[dst..dst + take].copy_from_slice(&ctx[ctx.len() - take..]);
         }
-        let compute_ms = sw.elapsed_ms();
-        for (i, (pend, req, tx)) in chunk.iter_mut().enumerate() {
-            let queued_ms = pend.queued_ms();
-            shared.metrics.record_request(queued_ms, compute_ms, batch_size);
-            let _ = tx.send(Ok(GenerateResponse {
-                id: req.id,
-                tokens: std::mem::take(&mut outputs[i]),
-                queued_ms,
-                compute_ms,
-                batch_size,
-            }));
+        let logits = reg.lm_logits(&shared.lm_params, &tokens)?;
+        for (row, ctx) in contexts.iter_mut().enumerate() {
+            if outputs[row].len() >= chunk[row].1.max_new_tokens {
+                continue;
+            }
+            let off = (row * lm.seq_len + lm.seq_len - 1) * lm.vocab;
+            let next = logits[off..off + lm.vocab]
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i as i32)
+                .unwrap();
+            ctx.push(next);
+            outputs[row].push(next);
         }
+    }
+    let compute_ms = sw.elapsed_ms();
+    for (i, (pend, req, tx)) in chunk.iter_mut().enumerate() {
+        let queued_ms = pend.queued_ms();
+        shared.metrics.record_request(queued_ms, compute_ms, batch_size);
+        let _ = tx.send(Ok(GenerateResponse {
+            id: req.id,
+            tokens: std::mem::take(&mut outputs[i]),
+            queued_ms,
+            compute_ms,
+            batch_size,
+        }));
     }
     Ok(())
-}
-
-/// One adaptive-attention segment: project heads, then run the batched
-/// controller step for the request's layer shard.
-fn serve_attention(shared: &EngineShared, req: &AttentionRequest) -> Result<AttentionResponse> {
-    let sw = Stopwatch::start();
-    anyhow::ensure!(req.layer < shared.layers.len(), "layer {} out of range", req.layer);
-    let w = &shared.layers[req.layer];
-    anyhow::ensure!(req.d_model == w.d_model(), "d_model mismatch");
-    let x = Mat::from_vec(req.n, req.d_model, req.x.clone());
-    // Projection is stateless — run it outside the shard lock.
-    let heads = project_heads(&x, w, true);
-    let head_refs: Vec<(usize, &AttnInputs)> = heads.iter().enumerate().collect();
-    let served = {
-        let mut controller = shared.shards[req.layer].lock().unwrap();
-        controller.attention_heads_batched(
-            &shared.reg,
-            &x,
-            w,
-            &head_refs,
-            req.layer,
-            shared.layers.len(),
-        )?
-    };
-    let mut outs = Vec::with_capacity(served.len());
-    let mut ranks = Vec::with_capacity(served.len());
-    let mut spent = 0u64;
-    let mut full = 0u64;
-    for (y, dec) in served {
-        shared.metrics.record_rank(dec.rank);
-        if dec.masked_by_safety {
-            shared.metrics.record_safety_mask();
-        }
-        spent += dec.flops_spent;
-        full += dec.flops_full;
-        ranks.push(dec.rank);
-        outs.push(y);
-    }
-    shared.metrics.record_flops(spent, full);
-    let merged = merge_heads(&outs, w);
-    let compute_ms = sw.elapsed_ms();
-    shared.metrics.record_request(0.0, compute_ms, 1);
-    Ok(AttentionResponse {
-        id: req.id,
-        y: merged.into_vec(),
-        ranks,
-        flops_spent: spent,
-        flops_full: full,
-        queued_ms: 0.0,
-        compute_ms,
-    })
 }
 
 #[cfg(test)]
 mod tests {
     // Engine integration tests live in rust/tests/serving.rs (artifact-
     // backed) and rust/tests/engine_concurrency.rs (host-backed, no
-    // artifacts needed); unit coverage of batching/metrics lives in their
-    // own modules.
+    // artifacts needed — including the cross-request pipeline equality
+    // tests); unit coverage of batching/metrics lives in their own
+    // modules.
 }

@@ -25,6 +25,23 @@ struct Inner {
     requests: u64,
     rejected: u64,
     safety_masked: u64,
+    // Cross-request attention-pipeline accounting (one record per
+    // drained batch, not per request).
+    attn_batches: u64,
+    attn_co_batched: u64,
+    probes: u64,
+    probe_dispatches: u64,
+    shard_locks: u64,
+}
+
+impl Inner {
+    fn mean_co_batch(&self) -> f64 {
+        if self.attn_batches == 0 {
+            0.0
+        } else {
+            self.attn_co_batched as f64 / self.attn_batches as f64
+        }
+    }
 }
 
 impl Metrics {
@@ -56,6 +73,52 @@ impl Metrics {
         let mut g = self.inner.lock().unwrap();
         g.flops_spent += spent;
         g.flops_full += full;
+    }
+
+    /// One drained attention batch went through the staged pipeline:
+    /// `co_batched` requests shared `probe_dispatches` pooled SVD waves
+    /// (covering `probes` per-head decompositions) and `shard_locks`
+    /// layer-lock round-trips. The per-request path records
+    /// co_batched=1, one dispatch per probing request and two lock
+    /// round-trips per request; the pipeline's whole point is that these
+    /// grow with layers touched, not with requests.
+    pub fn record_attention_batch(
+        &self,
+        co_batched: u64,
+        probes: u64,
+        probe_dispatches: u64,
+        shard_locks: u64,
+    ) {
+        let mut g = self.inner.lock().unwrap();
+        g.attn_batches += 1;
+        g.attn_co_batched += co_batched;
+        g.probes += probes;
+        g.probe_dispatches += probe_dispatches;
+        g.shard_locks += shard_locks;
+    }
+
+    pub fn attention_batches(&self) -> u64 {
+        self.inner.lock().unwrap().attn_batches
+    }
+
+    /// Per-head probe decompositions run by the pipeline.
+    pub fn probes(&self) -> u64 {
+        self.inner.lock().unwrap().probes
+    }
+
+    /// Pooled probe waves dispatched (≤ one per drained batch).
+    pub fn probe_dispatches(&self) -> u64 {
+        self.inner.lock().unwrap().probe_dispatches
+    }
+
+    /// Layer-shard lock round-trips taken by the attention pipeline.
+    pub fn shard_locks(&self) -> u64 {
+        self.inner.lock().unwrap().shard_locks
+    }
+
+    /// Mean number of attention requests co-batched per drained batch.
+    pub fn mean_co_batch(&self) -> f64 {
+        self.inner.lock().unwrap().mean_co_batch()
     }
 
     pub fn record_rejection(&self) {
@@ -124,11 +187,13 @@ impl Metrics {
         } else {
             1.0 - g.flops_spent as f64 / g.flops_full as f64
         };
+        let mean_co_batch = g.mean_co_batch();
         format!(
             "requests={} rejected={} safety_masked={}\n\
              queue  : {}\n\
              compute: {}\n\
              e2e    : {}\n\
+             attn   : batches={} mean_co_batch={:.2} probes={} probe_waves={} shard_locks={}\n\
              mean_batch={:.2} flops_saving={:.1}%",
             g.requests,
             g.rejected,
@@ -136,6 +201,11 @@ impl Metrics {
             g.queued.summary(),
             g.compute.summary(),
             g.e2e.summary(),
+            g.attn_batches,
+            mean_co_batch,
+            g.probes,
+            g.probe_dispatches,
+            g.shard_locks,
             mean_batch,
             saving * 1e2,
         )
@@ -178,5 +248,22 @@ mod tests {
         let m = Metrics::new();
         assert_eq!(m.flops_saving(), 0.0);
         assert_eq!(m.mean_rank(), 0.0);
+        assert_eq!(m.mean_co_batch(), 0.0);
+    }
+
+    #[test]
+    fn attention_batch_accounting() {
+        let m = Metrics::new();
+        // One co-batch of 6 requests: a single probe wave covering 12
+        // head-probes and two lock round-trips; then a singleton batch.
+        m.record_attention_batch(6, 12, 1, 2);
+        m.record_attention_batch(1, 2, 1, 2);
+        assert_eq!(m.attention_batches(), 2);
+        assert_eq!(m.probes(), 14);
+        assert_eq!(m.probe_dispatches(), 2);
+        assert_eq!(m.shard_locks(), 4);
+        assert!((m.mean_co_batch() - 3.5).abs() < 1e-12);
+        let rep = m.report();
+        assert!(rep.contains("probe_waves=2"), "{rep}");
     }
 }

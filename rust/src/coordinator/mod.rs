@@ -1,11 +1,13 @@
 //! L3 coordinator — the paper's serving-side system contribution:
 //! request routing, dynamic batching with backpressure, the segment-
 //! level DR-RL rank controller (featurize → policy → trust region →
-//! incremental SVD → device dispatch) and serving metrics.
+//! incremental SVD → device dispatch), the staged cross-request
+//! attention pipeline, and serving metrics.
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
+mod pipeline;
 pub mod rank_controller;
 pub mod request;
 pub mod router;
@@ -16,6 +18,6 @@ pub use metrics::Metrics;
 pub use rank_controller::{ControllerConfig, Decision, PolicySource, RankController};
 pub use request::{
     AttentionRequest, AttentionResponse, EngineError, EngineResult, GenerateRequest,
-    GenerateResponse, RequestId,
+    GenerateResponse, RequestId, ResponseReceiver,
 };
 pub use router::{RouteStrategy, Router};

@@ -1,0 +1,405 @@
+//! Cross-request staged execution pipeline for attention segments.
+//!
+//! A worker that drains K attention requests no longer serves them one
+//! by one (K shard-lock round-trips, K probe dispatches); it runs the
+//! whole set through four stages:
+//!
+//! 1. **plan** — validate + project heads for every request, fanned out
+//!    over the global pool, entirely outside any lock; then group the
+//!    requests by layer in drained (arrival) order.
+//! 2. **probe** — take each touched layer's shard lock once, briefly, to
+//!    advance per-stream segment counters (`RankController::plan_steps`);
+//!    then run the attention probe + truncated SVD for
+//!    *every refreshing head of every request across all layers* in a
+//!    single pooled dispatch — one batched SVD wave per drained batch.
+//! 3. **decide** — take each layer's shard lock once more and replay the
+//!    rank decisions serially in (request-arrival, head) order. Because
+//!    stream state advances in exactly the order a per-request engine
+//!    would apply it, the pipeline's outputs are bit-identical to
+//!    submitting the same requests one at a time.
+//! 4. **apply** — fan the masked factor applies (or dense kernels for a
+//!    full-rank source) out in a second pooled dispatch, merge heads and
+//!    reply, recording real queue delay and batch-level pipeline stats.
+//!
+//! Lock footprint: 2 × layers-touched round-trips per drained batch
+//! instead of one round-trip per request, and the locks are held only
+//! for bookkeeping/decisions — never across a probe or an apply (stream
+//! factors are shared `Arc<Svd>` handles, so even the bookkeeping holds
+//! no large copies under the lock).
+//!
+//! Concurrency note: when batches from *different* workers interleave on
+//! one layer, each stream's decisions serialize in decide order — a
+//! step's factors (Snapshot steps re-read the stream under the decide
+//! lock) and its previous-rank chain are read together under that lock,
+//! so every decision pairs a consistent (factors, prev_rank) state.
+//! Segment positions are the one plan-time quantity: an interleaved
+//! batch keeps the boundary phase it reserved when it drained. With a
+//! single worker, or distinct layers, the result is exactly the
+//! sequential one — the equality tests pin this bit-for-bit.
+
+use super::engine::EngineShared;
+use super::rank_controller::{
+    full_rank_decision, probe_head, resolve_probes, DecideCtx, Decision, PolicySource,
+    ProbeSource, StepPlan,
+};
+use super::request::{AttentionRequest, AttentionResponse, EngineError, EngineResult};
+use crate::attention::{merge_heads, project_heads, AttnInputs};
+use crate::linalg::{Mat, Svd};
+use crate::util::{global_pool, Stopwatch};
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One queued attention request with its arrival envelope and reply
+/// channel, as regrouped by the worker from the drained batch.
+pub(crate) struct AttnJob {
+    pub arrived: Instant,
+    pub req: AttentionRequest,
+    pub tx: Sender<EngineResult<AttentionResponse>>,
+}
+
+/// Stage-1 output for one request: the layer input and projected heads.
+struct Planned {
+    x: Mat,
+    heads: Vec<AttnInputs>,
+}
+
+/// Per-request execution state threaded through the stages.
+struct JobState {
+    queued_ms: f64,
+    plan: Option<Planned>,
+    error: Option<String>,
+    decisions: Vec<Option<Decision>>,
+}
+
+/// Per-layer slice of the batch: the replay-ordered steps plus their
+/// resolved decompositions (shared handles — filled by `resolve_probes`
+/// after the probe wave, possibly re-read at decide time).
+struct LayerWork {
+    layer: usize,
+    /// step index → (job index, head).
+    owner: Vec<(usize, usize)>,
+    steps: Vec<StepPlan>,
+    svds: Vec<Arc<Svd>>,
+}
+
+/// What one apply-wave slot computes.
+enum ApplyTask {
+    /// Masked factor apply for layer-work `lw`, step `si`.
+    Factor { lw: usize, si: usize },
+    /// Dense full-rank kernel for job `j`, head `h`.
+    Dense { j: usize, h: usize },
+}
+
+fn plan_job(shared: &EngineShared, req: &AttentionRequest) -> Result<Planned> {
+    anyhow::ensure!(req.layer < shared.layers.len(), "layer {} out of range", req.layer);
+    let w = &shared.layers[req.layer];
+    anyhow::ensure!(req.d_model == w.d_model(), "d_model mismatch");
+    anyhow::ensure!(
+        req.x.len() == req.n * req.d_model,
+        "input length {} != n*d_model = {}",
+        req.x.len(),
+        req.n * req.d_model
+    );
+    let x = Mat::from_vec(req.n, req.d_model, req.x.clone());
+    // Projection is stateless — it runs outside every lock.
+    let heads = project_heads(&x, w, true);
+    Ok(Planned { x, heads })
+}
+
+/// Serve one drained batch of attention requests through the staged
+/// pipeline. Every job receives exactly one reply.
+pub(crate) fn run_attention_batch(shared: &EngineShared, jobs: Vec<AttnJob>) {
+    if jobs.is_empty() {
+        return;
+    }
+    let sw = Stopwatch::start();
+    let co_batched = jobs.len();
+
+    // Reply channels stay out of the per-stage state so no pool closure
+    // ever captures them (mpsc senders are not shareable by reference).
+    let mut reqs = Vec::with_capacity(jobs.len());
+    let mut txs = Vec::with_capacity(jobs.len());
+    let mut states: Vec<JobState> = Vec::with_capacity(jobs.len());
+    for job in jobs {
+        states.push(JobState {
+            queued_ms: job.arrived.elapsed().as_secs_f64() * 1e3,
+            plan: None,
+            error: None,
+            decisions: Vec::new(),
+        });
+        reqs.push(job.req);
+        txs.push(job.tx);
+    }
+
+    // ---- Stage 1: plan (no locks) ----
+    let planned = {
+        let reqs_ref = &reqs;
+        global_pool().scoped_map(reqs_ref.len(), |i| plan_job(shared, &reqs_ref[i]))
+    };
+    for (state, plan) in states.iter_mut().zip(planned) {
+        match plan {
+            Ok(p) => {
+                state.decisions = (0..p.heads.len()).map(|_| None).collect();
+                state.plan = Some(p);
+            }
+            Err(e) => state.error = Some(format!("{e:#}")),
+        }
+    }
+
+    let full_rank = matches!(shared.source.as_ref(), PolicySource::FullRank);
+
+    // Group plannable jobs by layer, preserving drained (arrival) order.
+    // The full-rank source touches no controller state and skips
+    // straight to the apply wave.
+    let mut by_layer: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    if !full_rank {
+        for (j, state) in states.iter().enumerate() {
+            if state.plan.is_some() {
+                by_layer.entry(reqs[j].layer).or_default().push(j);
+            }
+        }
+    }
+
+    // ---- Stage 2a: per-stream bookkeeping — one short lock take per
+    // touched layer. ----
+    let mut shard_locks = 0u64;
+    let mut works: Vec<LayerWork> = Vec::with_capacity(by_layer.len());
+    for (&layer, job_idxs) in &by_layer {
+        let n_heads = shared.layers[layer].n_heads;
+        let mut owner = Vec::with_capacity(job_idxs.len() * n_heads);
+        let mut head_seq = Vec::with_capacity(job_idxs.len() * n_heads);
+        for &j in job_idxs {
+            for h in 0..n_heads {
+                owner.push((j, h));
+                head_seq.push(h);
+            }
+        }
+        let steps = {
+            let mut controller = shared.shards[layer].lock().unwrap();
+            shard_locks += 1;
+            controller.plan_steps(layer, &head_seq)
+        };
+        works.push(LayerWork { layer, owner, steps, svds: Vec::new() });
+    }
+
+    // ---- Stage 2b: probe — one pooled SVD wave across all layers. ----
+    let r_max = *shared
+        .controller_cfg
+        .rank_grid
+        .iter()
+        .max()
+        .expect("non-empty rank grid");
+    let bucket_max = shared.reg.rank_bucket(r_max);
+    // Per-work refresh step indices; the global task list concatenates
+    // them in work order, so the wave's results split back by length.
+    let refreshes: Vec<Vec<usize>> = works
+        .iter()
+        .map(|work| {
+            work.steps
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| matches!(s.probe, ProbeSource::Refresh { .. }))
+                .map(|(si, _)| si)
+                .collect()
+        })
+        .collect();
+    let probe_tasks: Vec<(usize, usize)> = refreshes
+        .iter()
+        .enumerate()
+        .flat_map(|(lw, idxs)| idxs.iter().map(move |&si| (lw, si)))
+        .collect();
+    let probed = {
+        let works_ref = &works;
+        let states_ref = &states;
+        let tasks_ref = &probe_tasks;
+        global_pool().scoped_map(tasks_ref.len(), |t| {
+            let (lw, si) = tasks_ref[t];
+            let (j, h) = works_ref[lw].owner[si];
+            let inp = &states_ref[j].plan.as_ref().expect("grouped jobs are planned").heads[h];
+            match &works_ref[lw].steps[si].probe {
+                ProbeSource::Refresh { cache_seed } => probe_head(inp, *cache_seed, bucket_max),
+                _ => unreachable!("probe task targets a refresh step"),
+            }
+        })
+    };
+    let n_probes = probe_tasks.len() as u64;
+    let probe_dispatches = u64::from(!probe_tasks.is_empty());
+    let mut probed_it = probed.into_iter();
+    for (lw, work) in works.iter_mut().enumerate() {
+        let chunk: Vec<Arc<Svd>> = probed_it.by_ref().take(refreshes[lw].len()).collect();
+        work.svds = resolve_probes(&work.steps, &refreshes[lw], chunk);
+    }
+
+    // ---- Stage 3: decide — one lock take per layer, serial replay in
+    // (request-arrival, head) order. ----
+    for work in works.iter_mut() {
+        let layer = work.layer;
+        let weights = &shared.layers[layer];
+        let mut controller = shared.shards[layer].lock().unwrap();
+        shard_locks += 1;
+        for si in 0..work.steps.len() {
+            let (j, h) = work.owner[si];
+            // Commit a fresh probe at its own replay position — never
+            // earlier (a Snapshot step at a lower call must not re-read
+            // a later same-batch refresh) and even when its job already
+            // errored (a decision error must not un-publish factors
+            // later steps were planned against; the per-request path
+            // publishes probes of aborted requests too). O(1): the
+            // handle is shared, not copied.
+            if matches!(work.steps[si].probe, ProbeSource::Refresh { .. }) {
+                controller.commit_probe(layer, work.steps[si].head, Arc::clone(&work.svds[si]));
+            }
+            if states[j].error.is_some() {
+                // A failed request replays no further decisions (its
+                // calls counters already advanced, as on the
+                // per-request path).
+                continue;
+            }
+            // Snapshot steps re-read the stream under the decide lock:
+            // commits from batches decided since this batch's plan are
+            // honored in decide order, pairing fresh factors with the
+            // prev_rank chain read below (see module doc).
+            if matches!(work.steps[si].probe, ProbeSource::Snapshot(_)) {
+                if let Some(p) = controller.stream_probe(layer, work.steps[si].head) {
+                    work.svds[si] = p;
+                }
+            }
+            let plan = states[j].plan.as_ref().expect("grouped jobs are planned");
+            let ctx = DecideCtx {
+                reg: &shared.reg,
+                x_layer: &plan.x,
+                w: weights,
+                layer,
+                n_layers: shared.layers.len(),
+            };
+            let inp = &plan.heads[h];
+            match controller.decide_step(
+                &ctx,
+                &work.steps[si],
+                &work.svds[si],
+                inp.seq_len(),
+                inp.head_dim(),
+            ) {
+                Ok(dec) => states[j].decisions[h] = Some(dec),
+                Err(e) => states[j].error = Some(format!("{e:#}")),
+            }
+        }
+    }
+
+    // ---- Stage 4: apply — one pooled dispatch across all layers. ----
+    let mut apply_tasks: Vec<ApplyTask> = Vec::new();
+    if full_rank {
+        for (j, state) in states.iter().enumerate() {
+            if state.error.is_some() {
+                continue;
+            }
+            if let Some(plan) = &state.plan {
+                for h in 0..plan.heads.len() {
+                    apply_tasks.push(ApplyTask::Dense { j, h });
+                }
+            }
+        }
+    } else {
+        for (lw, work) in works.iter().enumerate() {
+            for si in 0..work.steps.len() {
+                let (j, _) = work.owner[si];
+                if states[j].error.is_none() {
+                    apply_tasks.push(ApplyTask::Factor { lw, si });
+                }
+            }
+        }
+    }
+    let applied = {
+        let works_ref = &works;
+        let states_ref = &states;
+        let tasks_ref = &apply_tasks;
+        let reg = &shared.reg;
+        global_pool().scoped_map(tasks_ref.len(), |t| match tasks_ref[t] {
+            ApplyTask::Factor { lw, si } => {
+                let (j, h) = works_ref[lw].owner[si];
+                let plan = states_ref[j].plan.as_ref().expect("grouped jobs are planned");
+                let rank = states_ref[j].decisions[h].expect("decided").rank;
+                reg.lowrank_attention(&works_ref[lw].svds[si], rank, &plan.heads[h].v)
+            }
+            ApplyTask::Dense { j, h } => {
+                let inp = &states_ref[j].plan.as_ref().expect("planned").heads[h];
+                reg.full_attention(&inp.q, &inp.k, &inp.v)
+            }
+        })
+    };
+
+    // Route outputs (and full-rank decisions) back to per-job slots.
+    let mut outs: Vec<Vec<Option<Mat>>> = states
+        .iter()
+        .map(|s| {
+            let n = s.plan.as_ref().map(|p| p.heads.len()).unwrap_or(0);
+            (0..n).map(|_| None).collect()
+        })
+        .collect();
+    for (task, y) in apply_tasks.iter().zip(applied) {
+        let (j, h) = match *task {
+            ApplyTask::Factor { lw, si } => works[lw].owner[si],
+            ApplyTask::Dense { j, h } => (j, h),
+        };
+        match y {
+            Ok(m) => outs[j][h] = Some(m),
+            Err(e) => {
+                if states[j].error.is_none() {
+                    states[j].error = Some(format!("{e:#}"));
+                }
+            }
+        }
+        if full_rank && states[j].error.is_none() {
+            let inp = &states[j].plan.as_ref().expect("planned").heads[h];
+            states[j].decisions[h] =
+                Some(full_rank_decision(inp.seq_len(), inp.head_dim()));
+        }
+    }
+
+    // ---- Finish: merge heads, metrics, replies. ----
+    let compute_ms = sw.elapsed_ms();
+    shared
+        .metrics
+        .record_attention_batch(co_batched as u64, n_probes, probe_dispatches, shard_locks);
+    for (j, state) in states.iter().enumerate() {
+        let tx = &txs[j];
+        if let Some(msg) = &state.error {
+            crate::log_warn!("attention req {} failed: {msg}", reqs[j].id);
+            let _ = tx.send(Err(EngineError { id: reqs[j].id, message: msg.clone() }));
+            continue;
+        }
+        let plan = state.plan.as_ref().expect("successful jobs are planned");
+        let w = &shared.layers[reqs[j].layer];
+        let mut head_outs = Vec::with_capacity(plan.heads.len());
+        let mut ranks = Vec::with_capacity(plan.heads.len());
+        let (mut spent, mut full) = (0u64, 0u64);
+        for h in 0..plan.heads.len() {
+            let y = outs[j][h].take().expect("apply produced every head");
+            let dec = state.decisions[h].expect("decision recorded");
+            shared.metrics.record_rank(dec.rank);
+            if dec.masked_by_safety {
+                shared.metrics.record_safety_mask();
+            }
+            spent += dec.flops_spent;
+            full += dec.flops_full;
+            ranks.push(dec.rank);
+            head_outs.push(y);
+        }
+        shared.metrics.record_flops(spent, full);
+        let merged = merge_heads(&head_outs, w);
+        shared.metrics.record_request(state.queued_ms, compute_ms, co_batched);
+        let _ = tx.send(Ok(AttentionResponse {
+            id: reqs[j].id,
+            y: merged.into_vec(),
+            ranks,
+            flops_spent: spent,
+            flops_full: full,
+            queued_ms: state.queued_ms,
+            compute_ms,
+            batch_size: co_batched,
+        }));
+    }
+}

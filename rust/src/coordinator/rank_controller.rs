@@ -5,6 +5,34 @@
 //! One controller instance manages every (layer, head) stream of an
 //! engine; per-stream state (previous rank, incremental factor cache)
 //! is keyed by stream id.
+//!
+//! ## Staged API (the engine's cross-request pipeline)
+//!
+//! The controller is split along the lock boundary of the serving
+//! engine's plan → probe → decide → apply pipeline:
+//!
+//! * [`RankController::plan_steps`] — **lock-held, cheap**: advance the
+//!   per-stream segment counters for a replay-ordered sequence of head
+//!   occurrences and emit one [`StepPlan`] per occurrence saying where
+//!   its decomposition comes from (fresh probe, the stream's cached
+//!   factors, or an earlier refresh in the same plan).
+//! * [`probe_head`] — **stateless, lock-free**: the attention-score
+//!   probe + truncated SVD for one refresh step. The engine fans every
+//!   refresh of a drained batch — all heads, all requests, all layers —
+//!   into a single global-thread-pool dispatch (the CPU analogue of the
+//!   paper's batched cuSOLVER SVD).
+//! * [`RankController::decide_step`] — **lock-held, serial**: replay one
+//!   occurrence's rank decision (featurize → policy → trust region) and
+//!   advance stream state. Replaying in (request-arrival, head) order
+//!   makes the pipeline bit-identical to serving the same requests one
+//!   at a time.
+//! * apply — **stateless, lock-free**: `ArtifactRegistry::
+//!   lowrank_attention` with the decided rank, fanned out by the caller.
+//!
+//! [`RankController::attention_heads_batched`] (and its one-head wrapper
+//! [`RankController::attention`]) drive the same four stages for a
+//! single request, so the standalone path and the engine pipeline cannot
+//! drift.
 
 use crate::attention::{attention_matrix, AttnInputs, MhsaWeights};
 use crate::flops;
@@ -12,7 +40,6 @@ use crate::linalg::{IncrementalCache, Mat, Svd};
 use crate::rl::{featurize, ActorCritic, ConvFeaturizer, RankState};
 use crate::runtime::ArtifactRegistry;
 use crate::spectral::{assess_transition, TrustRegion};
-use crate::util::threadpool::SendPtr;
 use crate::util::{global_pool, Pcg32};
 use anyhow::Result;
 use std::collections::BTreeMap;
@@ -75,7 +102,10 @@ impl Default for ControllerConfig {
 #[derive(Default)]
 struct StreamState {
     prev_rank: Option<usize>,
-    cache: Option<IncrementalCache>,
+    /// Latest committed probe decomposition. Shared and immutable —
+    /// snapshots and re-reads are O(1) handle clones, never factor
+    /// copies, so the shard lock is held only for bookkeeping.
+    probe: Option<Arc<Svd>>,
     calls: u64,
 }
 
@@ -90,6 +120,94 @@ pub struct Decision {
     pub flops_full: u64,
     /// True when this call re-ran the policy (segment boundary).
     pub fresh_decision: bool,
+}
+
+/// Decision record for the dense full-rank path (no controller state).
+pub fn full_rank_decision(n: usize, d: usize) -> Decision {
+    let full = flops::full_attention_flops(n, d);
+    Decision {
+        rank: n,
+        prev_rank: n,
+        masked_by_safety: false,
+        perturbation: 0.0,
+        flops_spent: full,
+        flops_full: full,
+        fresh_decision: true,
+    }
+}
+
+/// Where a planned step's decomposition comes from.
+pub enum ProbeSource {
+    /// Segment boundary (or cold stream): run a fresh probe + truncated
+    /// SVD with this cache seed during the probe wave.
+    Refresh { cache_seed: u64 },
+    /// Reuse the stream's committed factors (an O(1) shared handle; the
+    /// decide stage re-reads the stream under its lock, so commits from
+    /// batches decided in between are honored in decide order).
+    Snapshot(Arc<Svd>),
+    /// Reuse the probe of an earlier step (index into the same plan) —
+    /// a later co-batched request riding on a refresh that an earlier
+    /// request in the same drained batch will compute.
+    Earlier(usize),
+}
+
+/// Per-stream bookkeeping for one head occurrence of a plan, captured
+/// under the shard lock before the lock-free probe wave.
+pub struct StepPlan {
+    pub head: usize,
+    /// Stream call counter at this occurrence (pre-increment value).
+    pub calls: u64,
+    /// True when this occurrence re-runs the policy.
+    pub boundary: bool,
+    pub probe: ProbeSource,
+}
+
+/// Stateless probe stage for one refresh step: the attention-score
+/// matrix and its truncated SVD at `bucket_max`, computed exactly as a
+/// boundary refresh always has (a fresh incremental cache seeded with
+/// `cache_seed` → the same randomized sketch). The shared handle both
+/// resolves the step and commits into the stream.
+pub fn probe_head(inp: &AttnInputs, cache_seed: u64, bucket_max: usize) -> Arc<Svd> {
+    let a = attention_matrix(inp);
+    let mut cache = IncrementalCache::new(cache_seed);
+    Arc::new(cache.decompose(&a, bucket_max).clone())
+}
+
+/// Resolve every planned step to its decomposition: refresh steps take
+/// their probe-wave results (`probed`, aligned with `refresh_idx`),
+/// snapshots and `Earlier` shares are O(1) handle clones. Shared by the
+/// engine pipeline and [`RankController::attention_heads_batched`] so
+/// the two paths cannot drift.
+pub fn resolve_probes(
+    steps: &[StepPlan],
+    refresh_idx: &[usize],
+    probed: Vec<Arc<Svd>>,
+) -> Vec<Arc<Svd>> {
+    let mut svds: Vec<Option<Arc<Svd>>> = (0..steps.len()).map(|_| None).collect();
+    for (&i, svd) in refresh_idx.iter().zip(probed) {
+        svds[i] = Some(svd);
+    }
+    for (i, step) in steps.iter().enumerate() {
+        match &step.probe {
+            ProbeSource::Refresh { .. } => {}
+            ProbeSource::Snapshot(svd) => svds[i] = Some(Arc::clone(svd)),
+            ProbeSource::Earlier(j) => {
+                let svd = Arc::clone(svds[*j].as_ref().expect("earlier refresh resolved"));
+                svds[i] = Some(svd);
+            }
+        }
+    }
+    svds.into_iter().map(|s| s.expect("every step resolved")).collect()
+}
+
+/// Lock-held inputs shared by the decide stage of one request.
+pub struct DecideCtx<'a> {
+    pub reg: &'a ArtifactRegistry,
+    /// Layer input activations of the request being replayed (for h_t).
+    pub x_layer: &'a Mat,
+    pub w: &'a MhsaWeights,
+    pub layer: usize,
+    pub n_layers: usize,
 }
 
 /// The controller.
@@ -135,6 +253,11 @@ impl RankController {
 
     fn stream_key(layer: usize, head: usize) -> u64 {
         ((layer as u64) << 16) | head as u64
+    }
+
+    /// Largest grid rank (the probe decomposes to its bucket).
+    pub fn r_max(&self) -> usize {
+        *self.cfg.rank_grid.iter().max().expect("non-empty rank grid")
     }
 
     /// Pick a rank for the state/spectrum under the safety mask.
@@ -193,6 +316,141 @@ impl RankController {
         Ok((grid[idx], any_masked && !mask[idx]))
     }
 
+    /// Plan stage: advance per-stream segment counters for a sequence of
+    /// head occurrences (the replay order — for the engine pipeline,
+    /// request-arrival-major, head-minor) and record where each
+    /// occurrence's decomposition will come from. Must run under the
+    /// same shard lock discipline as `decide_step`; it is the only other
+    /// controller entry point that touches stream state.
+    pub fn plan_steps(&mut self, layer: usize, heads: &[usize]) -> Vec<StepPlan> {
+        let seg = self.cfg.segment_len as u64;
+        // Latest in-plan refresh per stream: later non-boundary
+        // occurrences of the same stream ride on it (the cross-request
+        // analogue of "the cached factors serve between boundaries").
+        let mut pending: BTreeMap<u64, usize> = BTreeMap::new();
+        let mut steps = Vec::with_capacity(heads.len());
+        for (i, &h) in heads.iter().enumerate() {
+            let key = Self::stream_key(layer, h);
+            let seed = self.cfg.seed ^ key;
+            let entry = self.streams.entry(key).or_default();
+            let calls = entry.calls;
+            entry.calls += 1;
+            let boundary = if seg == 0 { calls == 0 } else { calls % seg == 0 };
+            let probe = if boundary || (entry.probe.is_none() && !pending.contains_key(&key)) {
+                pending.insert(key, i);
+                ProbeSource::Refresh { cache_seed: seed }
+            } else if let Some(&j) = pending.get(&key) {
+                ProbeSource::Earlier(j)
+            } else {
+                let svd = Arc::clone(
+                    entry
+                        .probe
+                        .as_ref()
+                        .expect("stream holds a decomposition between boundaries"),
+                );
+                ProbeSource::Snapshot(svd)
+            };
+            steps.push(StepPlan { head: h, calls, boundary, probe });
+        }
+        steps
+    }
+
+    /// Commit a probe-wave decomposition into its stream. Callers run
+    /// this for *every* refresh step of a replay group before replaying
+    /// any of the group's decisions: a decision error must not
+    /// un-publish factors that later co-batched steps were planned
+    /// against, or the pipeline would diverge from sequential serving on
+    /// error paths.
+    pub fn commit_probe(&mut self, layer: usize, head: usize, probe: Arc<Svd>) {
+        self.streams
+            .get_mut(&Self::stream_key(layer, head))
+            .expect("stream planned before commit")
+            .probe = Some(probe);
+    }
+
+    /// The stream's latest committed decomposition (O(1) shared handle).
+    /// The decide stage re-reads `Snapshot` steps through this under the
+    /// shard lock so factors and previous-rank chains stay consistent in
+    /// decide order.
+    pub fn stream_probe(&self, layer: usize, head: usize) -> Option<Arc<Svd>> {
+        self.streams.get(&Self::stream_key(layer, head)).and_then(|s| s.probe.clone())
+    }
+
+    /// Decide stage for one planned occurrence: read the stream's
+    /// previous rank *now* — so replays see the decisions of earlier
+    /// co-batched requests — run the policy at boundaries, and advance
+    /// stream state. Serial, lock-held; replay order is the correctness
+    /// invariant. Refresh probes must already be committed via
+    /// [`Self::commit_probe`].
+    pub fn decide_step(
+        &mut self,
+        ctx: &DecideCtx<'_>,
+        step: &StepPlan,
+        svd: &Svd,
+        n: usize,
+        d: usize,
+    ) -> Result<Decision> {
+        let key = Self::stream_key(ctx.layer, step.head);
+        let default_rank = self.cfg.rank_grid[self.cfg.rank_grid.len() / 2];
+        let prev_rank = self
+            .streams
+            .get(&key)
+            .and_then(|s| s.prev_rank)
+            .unwrap_or(default_rank);
+        let r_max = self.r_max();
+        let (rank, masked, fresh) = if step.boundary {
+            let state = featurize(
+                &self.conv,
+                ctx.x_layer,
+                ctx.w,
+                &svd.s,
+                prev_rank,
+                r_max,
+                ctx.layer,
+                ctx.n_layers,
+            );
+            let (r, m) = self.pick_rank(&state, &svd.s, prev_rank, ctx.reg)?;
+            (r, m, true)
+        } else {
+            (prev_rank, false, false)
+        };
+
+        // Perturbation of the executed transition (Eq. 4).
+        let perturbation =
+            crate::spectral::rank_transition_perturbation(&svd.s, prev_rank, rank);
+
+        if fresh {
+            let grid = &self.cfg.rank_grid;
+            if let (Some(fi), Some(ti)) = (
+                grid.iter().position(|&g| g == prev_rank),
+                grid.iter().position(|&g| g == rank),
+            ) {
+                self.transition_counts[fi][ti] += 1;
+            }
+            let seg = self.cfg.segment_len as u64;
+            self.rank_trace.push((ctx.layer, step.calls / seg.max(1), rank));
+        }
+
+        // FLOPs ledger: the probe amortizes over the segment.
+        let bucket_max = ctx.reg.rank_bucket(r_max);
+        let spent = flops::lowrank_attention_flops(n, d, rank, false)
+            + flops::partial_svd_flops(n, n, bucket_max)
+                / self.cfg.segment_len.max(1) as u64;
+        self.streams
+            .get_mut(&key)
+            .expect("stream planned before decide")
+            .prev_rank = Some(rank);
+        Ok(Decision {
+            rank,
+            prev_rank,
+            masked_by_safety: masked,
+            perturbation,
+            flops_spent: spent,
+            flops_full: flops::full_attention_flops(n, d),
+            fresh_decision: fresh,
+        })
+    }
+
     /// Serve one head's attention for a segment step. Returns the output
     /// and the decision record. `x_layer` is the layer input (for h_t).
     /// Thin wrapper over [`Self::attention_heads_batched`] so the single-
@@ -214,15 +472,12 @@ impl RankController {
         Ok(out.remove(0))
     }
 
-    /// Serve one segment step for several heads of a layer at once.
-    ///
-    /// The heavy per-head work — the attention probe + truncated SVD at
-    /// segment boundaries and the masked factor apply — fans out over the
-    /// global thread pool in one batched dispatch per phase (the CPU
-    /// analogue of the paper's batched cuSOLVER SVD), so an 8-head
-    /// segment costs roughly one head of wall-clock. Decision state
-    /// (trust-region ticks, policy RNG, traces) is advanced serially in
-    /// head order, preserving bit-identical results to the serial path.
+    /// Serve one segment step for several heads of a layer at once,
+    /// driving the same plan → probe → decide → apply stages the engine
+    /// pipeline composes across requests. Probe and apply fan out over
+    /// the global thread pool in one dispatch each; decisions replay
+    /// serially in head order, so results are bit-identical to calling
+    /// [`Self::attention`] per head.
     ///
     /// `heads` pairs each head index with its projected Q/K/V inputs.
     pub fn attention_heads_batched(
@@ -237,178 +492,91 @@ impl RankController {
         if heads.is_empty() {
             return Ok(Vec::new());
         }
-        let r_max = *self.cfg.rank_grid.iter().max().unwrap();
-        let bucket_max = reg.rank_bucket(r_max);
 
         // FULL-RANK short-circuit: dense kernel per head, fanned out.
         if matches!(self.source.as_ref(), PolicySource::FullRank) {
-            let mut outs: Vec<Option<Result<Mat>>> = (0..heads.len()).map(|_| None).collect();
-            let ptr = SendPtr::new(&mut outs);
-            global_pool().scoped_for(heads.len(), |i| {
-                // SAFETY: each index writes a distinct slot.
-                let slot = &mut unsafe { ptr.get() }[i];
+            let outs = global_pool().scoped_map(heads.len(), |i| {
                 let inp = heads[i].1;
-                *slot = Some(reg.full_attention(&inp.q, &inp.k, &inp.v));
+                reg.full_attention(&inp.q, &inp.k, &inp.v)
             });
             let mut result = Vec::with_capacity(heads.len());
-            for (o, &(_, inp)) in outs.into_iter().zip(heads) {
-                let y = o.expect("slot filled")?;
-                let full = flops::full_attention_flops(inp.seq_len(), inp.head_dim());
-                result.push((
-                    y,
-                    Decision {
-                        rank: inp.seq_len(),
-                        prev_rank: inp.seq_len(),
-                        masked_by_safety: false,
-                        perturbation: 0.0,
-                        flops_spent: full,
-                        flops_full: full,
-                        fresh_decision: true,
-                    },
-                ));
+            for (y, &(_, inp)) in outs.into_iter().zip(heads) {
+                result.push((y?, full_rank_decision(inp.seq_len(), inp.head_dim())));
             }
             return Ok(result);
         }
 
-        // Phase 1 — per-stream bookkeeping (cheap): segment position,
-        // previous rank, whether the factor cache needs a refresh.
-        struct HeadStep {
-            head: usize,
-            calls: u64,
-            boundary: bool,
-            prev_rank: usize,
-            refresh: Option<IncrementalCache>,
-            svd: Option<Svd>,
-        }
-        let seg = self.cfg.segment_len as u64;
-        let default_rank = self.cfg.rank_grid[self.cfg.rank_grid.len() / 2];
-        let mut steps: Vec<HeadStep> = Vec::with_capacity(heads.len());
-        for &(h, _) in heads {
-            let key = Self::stream_key(layer, h);
-            let entry = self.streams.entry(key).or_default();
-            let calls = entry.calls;
-            entry.calls += 1;
-            let boundary = if seg == 0 { calls == 0 } else { calls % seg == 0 };
-            let prev_rank = entry.prev_rank.unwrap_or(default_rank);
-            // §Perf iteration 1: the probe/decomposition refreshes only at
-            // segment boundaries; between them the cached factors serve.
-            let (refresh, svd) = if entry.cache.is_none() || boundary {
-                (Some(IncrementalCache::new(self.cfg.seed ^ key)), None)
-            } else {
-                let svd = entry
-                    .cache
-                    .as_ref()
-                    .and_then(|c| c.current())
-                    .expect("cache holds a decomposition between boundaries")
-                    .clone();
-                (None, Some(svd))
-            };
-            steps.push(HeadStep { head: h, calls, boundary, prev_rank, refresh, svd });
-        }
+        let bucket_max = reg.rank_bucket(self.r_max());
 
-        // Phase 2 — batched probe + truncated SVD for every head that
-        // needs one: one parallel dispatch over the stacked per-head
-        // score matrices.
-        let refresh_idx: Vec<usize> = steps
+        // Plan — per-stream bookkeeping (cheap).
+        let head_ids: Vec<usize> = heads.iter().map(|&(h, _)| h).collect();
+        let steps = self.plan_steps(layer, &head_ids);
+
+        // Probe — one pooled dispatch over every refresh step.
+        let refresh: Vec<usize> = steps
             .iter()
             .enumerate()
-            .filter(|(_, s)| s.refresh.is_some())
+            .filter(|(_, s)| matches!(s.probe, ProbeSource::Refresh { .. }))
             .map(|(i, _)| i)
             .collect();
-        if !refresh_idx.is_empty() {
-            let ptr = SendPtr::new(&mut steps);
-            let idx = &refresh_idx;
-            global_pool().scoped_for(idx.len(), |j| {
-                // SAFETY: distinct j map to distinct step slots.
-                let step = &mut unsafe { ptr.get() }[idx[j]];
-                let a = attention_matrix(heads[idx[j]].1);
-                let cache = step.refresh.as_mut().expect("refresh slot");
-                step.svd = Some(cache.decompose(&a, bucket_max).clone());
-            });
-        }
-        for step in steps.iter_mut() {
-            if let Some(cache) = step.refresh.take() {
-                self.streams
-                    .get_mut(&Self::stream_key(layer, step.head))
-                    .expect("stream exists")
-                    .cache = Some(cache);
-            }
-        }
-
-        // Phase 3 — decisions, serial in head order so the trust-region
-        // tick and policy RNG sequences match the serial controller.
-        let mut decisions: Vec<Decision> = Vec::with_capacity(steps.len());
-        for (pos, step) in steps.iter().enumerate() {
-            let svd = step.svd.as_ref().expect("svd available");
-            let (rank, masked, fresh) = if step.boundary {
-                let state = featurize(
-                    &self.conv,
-                    x_layer,
-                    w,
-                    &svd.s,
-                    step.prev_rank,
-                    r_max,
-                    layer,
-                    n_layers,
-                );
-                let (r, m) = self.pick_rank(&state, &svd.s, step.prev_rank, reg)?;
-                (r, m, true)
-            } else {
-                (step.prev_rank, false, false)
-            };
-
-            // Perturbation of the executed transition (Eq. 4).
-            let perturbation =
-                crate::spectral::rank_transition_perturbation(&svd.s, step.prev_rank, rank);
-
-            if fresh {
-                let grid = &self.cfg.rank_grid;
-                if let (Some(fi), Some(ti)) = (
-                    grid.iter().position(|&g| g == step.prev_rank),
-                    grid.iter().position(|&g| g == rank),
-                ) {
-                    self.transition_counts[fi][ti] += 1;
-                }
-                self.rank_trace.push((layer, step.calls / seg.max(1), rank));
-            }
-
-            let (n, d) = (heads[pos].1.seq_len(), heads[pos].1.head_dim());
-            // FLOPs ledger: the probe amortizes over the segment.
-            let spent = flops::lowrank_attention_flops(n, d, rank, false)
-                + flops::partial_svd_flops(n, n, bucket_max)
-                    / self.cfg.segment_len.max(1) as u64;
-            decisions.push(Decision {
-                rank,
-                prev_rank: step.prev_rank,
-                masked_by_safety: masked,
-                perturbation,
-                flops_spent: spent,
-                flops_full: flops::full_attention_flops(n, d),
-                fresh_decision: fresh,
-            });
-            self.streams
-                .get_mut(&Self::stream_key(layer, step.head))
-                .expect("stream exists")
-                .prev_rank = Some(rank);
-        }
-
-        // Phase 4 — device dispatch: masked factor apply at the bucket ≥
-        // rank, fanned out per head.
-        let mut outs: Vec<Option<Result<Mat>>> = (0..steps.len()).map(|_| None).collect();
-        {
-            let ptr = SendPtr::new(&mut outs);
+        let probed = {
             let steps_ref = &steps;
-            let dec_ref = &decisions;
-            global_pool().scoped_for(steps_ref.len(), |i| {
-                // SAFETY: each index writes a distinct slot.
-                let slot = &mut unsafe { ptr.get() }[i];
-                let svd = steps_ref[i].svd.as_ref().expect("svd available");
-                *slot = Some(reg.lowrank_attention(svd, dec_ref[i].rank, &heads[i].1.v));
-            });
+            let refresh_ref = &refresh;
+            global_pool().scoped_map(refresh_ref.len(), |j| {
+                let i = refresh_ref[j];
+                match &steps_ref[i].probe {
+                    ProbeSource::Refresh { cache_seed } => {
+                        probe_head(heads[i].1, *cache_seed, bucket_max)
+                    }
+                    _ => unreachable!("refresh indices point at refresh steps"),
+                }
+            })
+        };
+        let mut svds = resolve_probes(&steps, &refresh, probed);
+
+        // Decide — serial in head order so the trust-region tick and
+        // policy RNG sequences match the serial controller. Same replay
+        // rule as the engine pipeline: each fresh probe commits at its
+        // own replay position (never earlier — a Snapshot step at a
+        // lower call must not observe a later refresh) and even after a
+        // decision error (probes of aborted requests stay published);
+        // Snapshot steps re-read the stream (a no-op here, where the
+        // caller holds the controller exclusively).
+        let mut decisions: Vec<Decision> = Vec::with_capacity(steps.len());
+        let mut failed: Option<anyhow::Error> = None;
+        for (i, step) in steps.iter().enumerate() {
+            let inp = heads[i].1;
+            if matches!(step.probe, ProbeSource::Refresh { .. }) {
+                self.commit_probe(layer, step.head, Arc::clone(&svds[i]));
+            } else if matches!(step.probe, ProbeSource::Snapshot(_)) {
+                if let Some(p) = self.stream_probe(layer, step.head) {
+                    svds[i] = p;
+                }
+            }
+            if failed.is_some() {
+                continue;
+            }
+            let ctx = DecideCtx { reg, x_layer, w, layer, n_layers };
+            match self.decide_step(&ctx, step, &svds[i], inp.seq_len(), inp.head_dim()) {
+                Ok(dec) => decisions.push(dec),
+                Err(e) => failed = Some(e),
+            }
         }
+        if let Some(e) = failed {
+            return Err(e);
+        }
+
+        // Apply — one pooled dispatch of masked factor applies.
+        let outs = {
+            let svds_ref = &svds;
+            let dec_ref = &decisions;
+            global_pool().scoped_map(steps.len(), |i| {
+                reg.lowrank_attention(&svds_ref[i], dec_ref[i].rank, &heads[i].1.v)
+            })
+        };
         let mut result = Vec::with_capacity(steps.len());
-        for (o, dec) in outs.into_iter().zip(decisions) {
-            result.push((o.expect("slot filled")?, dec));
+        for (y, dec) in outs.into_iter().zip(decisions) {
+            result.push((y?, dec));
         }
         Ok(result)
     }
@@ -457,5 +625,55 @@ mod tests {
         assert_eq!(PolicySource::Fixed(32).name(), "fixed");
     }
 
-    // Device-backed integration tests live in rust/tests/serving.rs.
+    #[test]
+    fn plan_steps_links_cross_request_reuse() {
+        // Three same-stream occurrences with segment_len=2: call 0 is a
+        // boundary refresh, call 1 rides on it (Earlier), call 2 is the
+        // next boundary refresh.
+        let cfg = ControllerConfig { segment_len: 2, ..Default::default() };
+        let mut c = RankController::new(cfg, PolicySource::Fixed(32));
+        let steps = c.plan_steps(0, &[3, 3, 3]);
+        assert_eq!(steps.len(), 3);
+        assert!(steps[0].boundary && matches!(steps[0].probe, ProbeSource::Refresh { .. }));
+        assert!(!steps[1].boundary);
+        assert!(matches!(steps[1].probe, ProbeSource::Earlier(0)));
+        assert!(steps[2].boundary && matches!(steps[2].probe, ProbeSource::Refresh { .. }));
+        assert_eq!((steps[0].calls, steps[1].calls, steps[2].calls), (0, 1, 2));
+    }
+
+    #[test]
+    fn plan_steps_snapshots_committed_probe() {
+        // After a replay commits the refresh probe, a later non-boundary
+        // plan resolves to a Snapshot of the committed factors — and the
+        // snapshot shares the handle instead of copying them.
+        let cfg = ControllerConfig { segment_len: 4, ..Default::default() };
+        let mut c = RankController::new(cfg, PolicySource::Fixed(32));
+        let first = c.plan_steps(1, &[0]);
+        assert!(matches!(first[0].probe, ProbeSource::Refresh { .. }));
+        let mut rng = crate::util::Pcg32::seeded(9);
+        let a = Mat::randn(16, 16, 1.0, &mut rng);
+        let probe = Arc::new(crate::linalg::top_k_svd(&a, 8, 3));
+        c.commit_probe(1, 0, Arc::clone(&probe));
+        assert!(c.stream_probe(1, 0).is_some());
+        let second = c.plan_steps(1, &[0]);
+        assert!(!second[0].boundary);
+        match &second[0].probe {
+            ProbeSource::Snapshot(svd) => {
+                assert!(Arc::ptr_eq(svd, &probe), "snapshot must share, not copy");
+            }
+            _ => panic!("expected a snapshot"),
+        }
+    }
+
+    #[test]
+    fn full_rank_decision_spends_full_flops() {
+        let d = full_rank_decision(64, 16);
+        assert_eq!(d.rank, 64);
+        assert_eq!(d.flops_spent, d.flops_full);
+        assert!(d.fresh_decision && !d.masked_by_safety);
+    }
+
+    // Device-backed integration tests live in rust/tests/serving.rs; the
+    // batched-vs-serial equality test lives in
+    // rust/tests/engine_concurrency.rs.
 }

@@ -24,6 +24,9 @@ impl std::error::Error for EngineError {}
 /// What a reply channel carries: the response or an explicit error.
 pub type EngineResult<T> = Result<T, EngineError>;
 
+/// Receiving half of a reply channel, as handed back by `submit_*`.
+pub type ResponseReceiver<T> = std::sync::mpsc::Receiver<EngineResult<T>>;
+
 /// A generation request (LM serving path).
 #[derive(Debug, Clone)]
 pub struct GenerateRequest {
@@ -51,6 +54,8 @@ pub struct GenerateResponse {
     pub tokens: Vec<i32>,
     pub queued_ms: f64,
     pub compute_ms: f64,
+    /// Number of generation requests co-batched in the same drained
+    /// batch (same-type convention as `AttentionResponse::batch_size`).
     pub batch_size: usize,
 }
 
@@ -66,7 +71,12 @@ pub struct AttentionResponse {
     pub flops_spent: u64,
     pub flops_full: u64,
     pub queued_ms: f64,
+    /// Wall-clock of the staged pipeline run that served this request's
+    /// drained batch (shared by every co-batched request, mirroring the
+    /// per-chunk convention of the generate path).
     pub compute_ms: f64,
+    /// Number of attention requests co-batched into that pipeline run.
+    pub batch_size: usize,
 }
 
 /// Internal envelope carrying arrival time.

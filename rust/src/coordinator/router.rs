@@ -1,9 +1,14 @@
 //! Request router: spreads load across engine replicas (leader side of
-//! the leader/worker topology). Strategies: round-robin and
-//! least-loaded (queue depth).
+//! the leader/worker topology). Strategies: round-robin, least-loaded
+//! (queue depth), and layer-affinity — attention segments for the same
+//! layer land on the same replica, so its cross-request pipeline can
+//! co-batch them into one probe wave and one decision replay instead of
+//! spreading the layer's stream state across replicas.
 
 use super::engine::ServingEngine;
-use super::request::{AttentionResponse, EngineResult, GenerateResponse, RequestId};
+use super::request::{
+    AttentionResponse, EngineResult, GenerateResponse, RequestId, ResponseReceiver,
+};
 use crate::coordinator::batcher::SubmitError;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -12,6 +17,10 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 pub enum RouteStrategy {
     RoundRobin,
     LeastLoaded,
+    /// Attention requests route by `layer % n_engines` (maximizing
+    /// same-layer co-batching in each engine's pipeline); generation
+    /// requests fall back to round-robin.
+    LayerAffinity,
 }
 
 /// Router over engine replicas.
@@ -35,17 +44,23 @@ impl Router {
         &self.engines
     }
 
-    fn pick(&self) -> &ServingEngine {
+    fn round_robin(&self) -> &ServingEngine {
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.engines.len();
+        &self.engines[i]
+    }
+
+    fn pick(&self, layer: Option<usize>) -> &ServingEngine {
         match self.strategy {
-            RouteStrategy::RoundRobin => {
-                let i = self.next.fetch_add(1, Ordering::Relaxed) % self.engines.len();
-                &self.engines[i]
-            }
+            RouteStrategy::RoundRobin => self.round_robin(),
             RouteStrategy::LeastLoaded => self
                 .engines
                 .iter()
                 .min_by_key(|e| e.queue_depth())
                 .expect("non-empty"),
+            RouteStrategy::LayerAffinity => match layer {
+                Some(l) => &self.engines[l % self.engines.len()],
+                None => self.round_robin(),
+            },
         }
     }
 
@@ -53,9 +68,8 @@ impl Router {
         &self,
         prompt: Vec<i32>,
         max_new: usize,
-    ) -> Result<(RequestId, std::sync::mpsc::Receiver<EngineResult<GenerateResponse>>), SubmitError>
-    {
-        self.pick().submit_generate(prompt, max_new)
+    ) -> Result<(RequestId, ResponseReceiver<GenerateResponse>), SubmitError> {
+        self.pick(None).submit_generate(prompt, max_new)
     }
 
     pub fn submit_attention(
@@ -64,9 +78,8 @@ impl Router {
         n: usize,
         d_model: usize,
         layer: usize,
-    ) -> Result<(RequestId, std::sync::mpsc::Receiver<EngineResult<AttentionResponse>>), SubmitError>
-    {
-        self.pick().submit_attention(x, n, d_model, layer)
+    ) -> Result<(RequestId, ResponseReceiver<AttentionResponse>), SubmitError> {
+        self.pick(Some(layer)).submit_attention(x, n, d_model, layer)
     }
 
     /// Aggregate metric report across replicas.

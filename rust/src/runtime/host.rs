@@ -19,24 +19,41 @@ use super::manifest::Manifest;
 use super::tensor::HostTensor;
 use crate::attention::{full_attention, AttnInputs};
 use crate::linalg::{matmul, Mat};
+use crate::train::HostLm;
 use anyhow::Result;
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Thread-safe host executor keyed by artifact name.
 pub struct HostBackend {
     manifest: Manifest,
     calls: Mutex<BTreeMap<String, u64>>,
+    /// Parsed-LM cache keyed by a fingerprint of the flat param vector:
+    /// the generation hot path sends identical params on every decode
+    /// step, so re-parsing (and re-allocating) the whole model per
+    /// `lm_logits` call was pure overhead. Capacity 1 — serving uses one
+    /// frozen parameter set at a time.
+    lm_cache: Mutex<Option<(u64, Arc<HostLm>)>>,
 }
 
 impl HostBackend {
     pub fn new(manifest: Manifest) -> Self {
-        HostBackend { manifest, calls: Mutex::new(BTreeMap::new()) }
+        HostBackend {
+            manifest,
+            calls: Mutex::new(BTreeMap::new()),
+            lm_cache: Mutex::new(None),
+        }
     }
 
-    /// Per-artifact execute counts (mirrors the device thread's stats).
+    /// Per-artifact execute counts (mirrors the device thread's stats),
+    /// plus `lm_cache_hit` / `lm_cache_miss` counters for the parsed-LM
+    /// cache.
     pub fn stats(&self) -> BTreeMap<String, u64> {
         self.calls.lock().unwrap().clone()
+    }
+
+    fn bump(&self, key: &str) {
+        *self.calls.lock().unwrap().entry(key.to_string()).or_insert(0) += 1;
     }
 
     /// Availability check; compilation is a no-op on the host.
@@ -163,7 +180,11 @@ impl HostBackend {
         Ok(data.to_vec())
     }
 
-    fn host_lm(&self, params: &HostTensor) -> Result<crate::train::HostLm> {
+    /// Parsed host LM for the given flat params, served from the
+    /// fingerprint-keyed cache. The forward runs outside the cache lock
+    /// (`HostLm` evaluation is `&self`), so concurrent callers share one
+    /// parsed model without serializing on each other.
+    fn host_lm(&self, params: &HostTensor) -> Result<Arc<HostLm>> {
         let lm = &self.manifest.lm;
         let p = params
             .as_f32()
@@ -174,13 +195,30 @@ impl HostBackend {
             p.len(),
             lm.param_count
         );
-        Ok(crate::train::HostLm::from_flat(p, lm))
+        let fp = params_fingerprint(p);
+        {
+            let g = self.lm_cache.lock().unwrap();
+            if let Some((cached_fp, host)) = g.as_ref() {
+                if *cached_fp == fp {
+                    let host = Arc::clone(host);
+                    drop(g);
+                    self.bump("lm_cache_hit");
+                    return Ok(host);
+                }
+            }
+        }
+        // Parse outside the lock; a racing miss just parses twice and
+        // the last writer wins.
+        let parsed = Arc::new(HostLm::from_flat(p, lm));
+        *self.lm_cache.lock().unwrap() = Some((fp, Arc::clone(&parsed)));
+        self.bump("lm_cache_miss");
+        Ok(parsed)
     }
 
     fn lm_logits(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         let lm = self.manifest.lm.clone();
         anyhow::ensure!(inputs.len() == 2, "lm_logits takes params, tokens");
-        let mut host = self.host_lm(&inputs[0])?;
+        let host = self.host_lm(&inputs[0])?;
         let tokens = Self::lm_tokens(&inputs[1], lm.batch, lm.seq_len, "tokens")?;
         let mut out = Vec::with_capacity(lm.batch * lm.seq_len * lm.vocab);
         for b in 0..lm.batch {
@@ -197,7 +235,7 @@ impl HostBackend {
     fn lm_eval_loss(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         let lm = self.manifest.lm.clone();
         anyhow::ensure!(inputs.len() == 3, "lm_eval_loss takes params, tokens, targets");
-        let mut host = self.host_lm(&inputs[0])?;
+        let host = self.host_lm(&inputs[0])?;
         let tokens = Self::lm_tokens(&inputs[1], lm.batch, lm.seq_len, "tokens")?;
         let targets = Self::lm_tokens(&inputs[2], lm.batch, lm.seq_len, "targets")?;
         let mut total = 0.0;
@@ -209,6 +247,19 @@ impl HostBackend {
         let mean = (total / lm.batch as f64) as f32;
         Ok(vec![HostTensor::f32(vec![mean], &[1])])
     }
+}
+
+/// FNV-1a over the raw f32 bits (plus the length). One linear pass —
+/// far cheaper than re-parsing the model it guards. A colliding pair of
+/// distinct parameter vectors would silently share a cache slot, but at
+/// 64 bits that risk is negligible against the serving workload.
+fn params_fingerprint(p: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &x in p {
+        h ^= x.to_bits() as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h ^ p.len() as u64
 }
 
 #[cfg(test)]
@@ -335,6 +386,32 @@ mod tests {
             .unwrap();
         let l = loss[0].scalar();
         assert!(l.is_finite() && l > 0.0, "loss {l}");
+    }
+
+    #[test]
+    fn lm_cache_hits_on_identical_params_and_misses_on_change() {
+        let be = backend(32, 8);
+        let lm = Manifest::synthetic(32, 8).lm;
+        let mut rng = Pcg32::seeded(6);
+        let mut params = vec![0f32; lm.param_count];
+        rng.fill_normal_f32(&mut params, 0.02);
+        let tokens: Vec<i32> =
+            (0..lm.batch * lm.seq_len).map(|_| rng.below(lm.vocab as u32) as i32).collect();
+        let bl = [lm.batch as i64, lm.seq_len as i64];
+        let t = HostTensor::i32(tokens, &bl);
+        let p = HostTensor::f32(params.clone(), &[lm.param_count as i64]);
+        let a = be.execute("lm_logits", &[p.clone(), t.clone()]).unwrap();
+        let b = be.execute("lm_logits", &[p, t.clone()]).unwrap();
+        // Cached parse must not change results.
+        assert_eq!(a[0].as_f32().unwrap(), b[0].as_f32().unwrap());
+        let mut stats = be.stats();
+        assert_eq!(stats.remove("lm_cache_miss"), Some(1));
+        assert_eq!(stats.remove("lm_cache_hit"), Some(1));
+        // A different parameter vector must invalidate the cache.
+        params[0] += 1.0;
+        let p2 = HostTensor::f32(params, &[lm.param_count as i64]);
+        be.execute("lm_logits", &[p2, t]).unwrap();
+        assert_eq!(be.stats().get("lm_cache_miss"), Some(&2));
     }
 
     #[test]

@@ -18,8 +18,14 @@ use crate::policy::{nystrom_attention, performer_attention};
 use crate::runtime::LmShape;
 use crate::spectral::rank_for_energy;
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Parsed host-side model.
+///
+/// All evaluation entry points take `&self` (the rank counters are
+/// atomics), so one parsed instance can be shared across threads — the
+/// host backend caches a parsed model per parameter vector and serves
+/// concurrent `lm_logits` calls from it.
 pub struct HostLm {
     pub shape: LmShape,
     embed: Mat,  // vocab × d
@@ -29,8 +35,8 @@ pub struct HostLm {
     lnf_b: Vec<f64>,
     head: Mat, // d × vocab
     /// Mean selected rank per evaluation (dynamic methods).
-    pub rank_sum: u64,
-    pub rank_count: u64,
+    rank_sum: AtomicU64,
+    rank_count: AtomicU64,
 }
 
 struct LayerParams {
@@ -93,9 +99,21 @@ impl HostLm {
             lnf_g,
             lnf_b,
             head,
-            rank_sum: 0,
-            rank_count: 0,
+            rank_sum: AtomicU64::new(0),
+            rank_count: AtomicU64::new(0),
         }
+    }
+
+    fn count_rank(&self, r: usize) {
+        self.rank_sum.fetch_add(r as u64, Ordering::Relaxed);
+        self.rank_count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Reset the dynamic-method rank accounting (Table 1/2 reuse one
+    /// parsed model across methods).
+    pub fn reset_rank_stats(&self) {
+        self.rank_sum.store(0, Ordering::Relaxed);
+        self.rank_count.store(0, Ordering::Relaxed);
     }
 
     fn layernorm(x: &Mat, g: &[f64], b: &[f64]) -> Mat {
@@ -118,7 +136,7 @@ impl HostLm {
     }
 
     fn head_attention(
-        &mut self,
+        &self,
         inp: &AttnInputs,
         method: &AttnMethod,
         seed: u64,
@@ -126,25 +144,27 @@ impl HostLm {
         match method {
             AttnMethod::Full => full_attention(inp),
             AttnMethod::FixedRank(r) => {
-                self.rank_sum += *r as u64;
-                self.rank_count += 1;
+                self.count_rank(*r);
                 lowrank_attention(inp, *r, seed)
             }
             AttnMethod::Performer { n_features } => performer_attention(inp, *n_features, seed),
             AttnMethod::Nystrom { n_landmarks } => nystrom_attention(inp, *n_landmarks, seed),
             AttnMethod::RandomRank { grid, seed: rseed } => {
-                let mut rng = crate::util::Pcg32::seeded(rseed.wrapping_add(self.rank_count ^ seed));
+                // Reserve this draw's index atomically so concurrent
+                // callers sharing a cached model never seed identical
+                // rank streams; single-threaded the sequence matches the
+                // old read-then-increment exactly.
+                let count = self.rank_count.fetch_add(1, Ordering::Relaxed);
+                let mut rng = crate::util::Pcg32::seeded(rseed.wrapping_add(count ^ seed));
                 let r = grid[rng.range(0, grid.len())];
-                self.rank_sum += r as u64;
-                self.rank_count += 1;
+                self.rank_sum.fetch_add(r as u64, Ordering::Relaxed);
                 lowrank_attention(inp, r, seed)
             }
             AttnMethod::AdaptiveSvd { threshold, r_max } => {
                 let a = crate::attention::attention_matrix(inp);
                 let probe = top_k_svd(&a, (*r_max).min(a.rows()), seed);
                 let r = rank_for_energy(&probe.s, *threshold).min(*r_max);
-                self.rank_sum += r as u64;
-                self.rank_count += 1;
+                self.count_rank(r);
                 crate::attention::lowrank_attention_output(&probe, r, &inp.v)
             }
             AttnMethod::DrRl { grid, actor } => {
@@ -171,15 +191,14 @@ impl HostLm {
                 );
                 let dist = actor.distribution(&state.features, None);
                 let r = grid[dist.argmax()].min(probe.s.len());
-                self.rank_sum += r as u64;
-                self.rank_count += 1;
+                self.count_rank(r);
                 crate::attention::lowrank_attention_output(&probe, r, &inp.v)
             }
         }
     }
 
     /// Forward one sequence (n tokens) → logits (n × vocab).
-    pub fn forward(&mut self, tokens: &[i32], method: &AttnMethod, seed: u64) -> Mat {
+    pub fn forward(&self, tokens: &[i32], method: &AttnMethod, seed: u64) -> Mat {
         let d = self.shape.d_model;
         let n = tokens.len();
         assert!(n <= self.shape.seq_len);
@@ -192,15 +211,11 @@ impl HostLm {
             }
         }
         let hd = d / self.shape.n_heads;
-        for l in 0..self.layers.len() {
-            let (h, wq, wk, wv) = {
-                let lp = &self.layers[l];
-                let h = Self::layernorm(&x, &lp.ln1_g, &lp.ln1_b);
-                (h.clone(), lp.wq.clone(), lp.wk.clone(), lp.wv.clone())
-            };
-            let q = matmul(&h, &wq);
-            let k = matmul(&h, &wk);
-            let v = matmul(&h, &wv);
+        for (l, lp) in self.layers.iter().enumerate() {
+            let h = Self::layernorm(&x, &lp.ln1_g, &lp.ln1_b);
+            let q = matmul(&h, &lp.wq);
+            let k = matmul(&h, &lp.wk);
+            let v = matmul(&h, &lp.wv);
             let mut outs = Vec::with_capacity(self.shape.n_heads);
             for head in 0..self.shape.n_heads {
                 let sl = |m: &Mat| -> Mat {
@@ -211,13 +226,13 @@ impl HostLm {
                     out
                 };
                 let inp = AttnInputs { q: sl(&q), k: sl(&k), v: sl(&v), causal: true };
-                outs.push(self.head_attention(&inp, method, seed ^ ((l as u64) << 8 | head as u64)));
+                let head_seed = seed ^ ((l as u64) << 8 | head as u64);
+                outs.push(self.head_attention(&inp, method, head_seed));
             }
             let mut cat = outs[0].clone();
             for o in &outs[1..] {
                 cat = cat.hcat(o);
             }
-            let lp = &self.layers[l];
             let attn = matmul(&cat, &lp.wo);
             x.add_inplace(&attn);
             let h2 = Self::layernorm(&x, &lp.ln2_g, &lp.ln2_b);
@@ -240,7 +255,7 @@ impl HostLm {
     }
 
     /// Mean next-token cross-entropy over one (tokens, targets) sequence.
-    pub fn loss(&mut self, tokens: &[i32], targets: &[i32], method: &AttnMethod, seed: u64) -> f64 {
+    pub fn loss(&self, tokens: &[i32], targets: &[i32], method: &AttnMethod, seed: u64) -> f64 {
         let logits = self.forward(tokens, method, seed);
         let mut total = 0.0;
         for i in 0..tokens.len() {
@@ -254,7 +269,7 @@ impl HostLm {
 
     /// PPL over a batch of (tokens, targets) pairs flattened row-major.
     pub fn eval_ppl(
-        &mut self,
+        &self,
         tokens: &[i32],
         targets: &[i32],
         batch: usize,
@@ -272,10 +287,11 @@ impl HostLm {
     }
 
     pub fn mean_rank(&self) -> f64 {
-        if self.rank_count == 0 {
+        let count = self.rank_count.load(Ordering::Relaxed);
+        if count == 0 {
             0.0
         } else {
-            self.rank_sum as f64 / self.rank_count as f64
+            self.rank_sum.load(Ordering::Relaxed) as f64 / count as f64
         }
     }
 }
@@ -317,7 +333,7 @@ mod tests {
         let targets: Vec<i32> = tokens.iter().map(|&t| (t + 1) % lm.vocab as i32).collect();
         let device_loss = reg.lm_eval_loss(&params, &tokens, &targets).unwrap();
 
-        let mut host = HostLm::from_flat(&params, &lm);
+        let host = HostLm::from_flat(&params, &lm);
         let mut host_loss = 0.0;
         for b in 0..lm.batch {
             host_loss += host.loss(
@@ -347,7 +363,7 @@ mod tests {
         let tokens: Vec<i32> =
             (0..lm.seq_len).map(|_| rng.below(lm.vocab as u32) as i32).collect();
         let targets: Vec<i32> = tokens.iter().map(|&t| (t + 1) % lm.vocab as i32).collect();
-        let mut host = HostLm::from_flat(&params, &lm);
+        let host = HostLm::from_flat(&params, &lm);
         let full = host.loss(&tokens, &targets, &AttnMethod::Full, 1);
         let hi = host.loss(&tokens, &targets, &AttnMethod::FixedRank(96), 1);
         let lo = host.loss(&tokens, &targets, &AttnMethod::FixedRank(4), 1);

@@ -111,6 +111,27 @@ impl ThreadPool {
         latch.wait();
     }
 
+    /// Run `n` indexed tasks and collect their results in index order —
+    /// the common fan-out shape of the serving pipeline's probe and
+    /// apply waves. Wraps [`Self::scoped_for`] so call sites don't repeat
+    /// the disjoint-slot `SendPtr` dance.
+    pub fn scoped_map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Send + Sync,
+    {
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        {
+            let ptr = SendPtr::new(&mut out);
+            self.scoped_for(n, |i| {
+                // SAFETY: each index writes a distinct slot, and
+                // scoped_for joins every task before returning.
+                unsafe { ptr.get() }[i] = Some(f(i));
+            });
+        }
+        out.into_iter().map(|o| o.expect("slot filled")).collect()
+    }
+
     /// Split `total` items into roughly equal chunks (one per worker) and
     /// run `f(start, end)` on each in parallel.
     pub fn chunked_for<F>(&self, total: usize, min_chunk: usize, f: F)
@@ -233,6 +254,27 @@ mod tests {
         });
         for h in &hits {
             assert_eq!(h.load(Ordering::Relaxed), 1);
+        }
+    }
+
+    #[test]
+    fn scoped_map_returns_in_index_order() {
+        let pool = ThreadPool::new(4);
+        let got = pool.scoped_map(64, |i| i * i);
+        let want: Vec<usize> = (0..64).map(|i| i * i).collect();
+        assert_eq!(got, want);
+        assert!(pool.scoped_map(0, |i| i).is_empty());
+    }
+
+    #[test]
+    fn scoped_map_nested_inside_pool_job() {
+        // scoped_map from inside a pool job must fall back to inline
+        // execution (same IN_POOL_WORKER rule as scoped_for).
+        let pool = global_pool();
+        let outer = pool.size() + 2;
+        let got = pool.scoped_map(outer, |i| pool.scoped_map(4, move |j| i * 4 + j));
+        for (i, inner) in got.iter().enumerate() {
+            assert_eq!(inner, &vec![i * 4, i * 4 + 1, i * 4 + 2, i * 4 + 3]);
         }
     }
 

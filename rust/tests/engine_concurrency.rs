@@ -5,12 +5,18 @@
 //! traffic from concurrent clients all gets answered, (b) per-request
 //! results are bit-identical between the N=1 and N=4 worker engines
 //! (deterministic-policy configuration), (c) `shutdown()` drains without
-//! deadlock and queued requests get explicit error replies, and (d) the
-//! batched per-head controller path matches the serial one exactly.
+//! deadlock and queued requests get explicit error replies, (d) the
+//! batched per-head controller path matches the serial one exactly, and
+//! (e) the cross-request pipeline: a drained batch of K attention
+//! requests — same-layer or mixed-layer, with segment reuse across
+//! co-batched requests — is bit-identical to submitting them one at a
+//! time to an N=1 engine, and the layer-affinity router pins layers to
+//! replicas.
 
 use drrl::attention::{project_heads, AttnInputs, MhsaWeights};
 use drrl::coordinator::{
-    BatchPolicy, ControllerConfig, EngineConfig, PolicySource, RankController, ServingEngine,
+    AttentionResponse, BatchPolicy, ControllerConfig, EngineConfig, PolicySource,
+    RankController, RouteStrategy, Router, ServingEngine,
 };
 use drrl::linalg::Mat;
 use drrl::runtime::ArtifactRegistry;
@@ -246,6 +252,174 @@ fn shutdown_drains_without_deadlock_and_reports_errors() {
         }
     }
     assert_eq!(served + errored, 12, "every request must resolve");
+}
+
+/// N=1 engine with segment reuse on (segment_len = 2, trust region on)
+/// — the configuration the cross-request equality tests pin. With
+/// `max_batch = 1` every request is its own drained batch (the
+/// per-request reference); with a larger `max_batch` concurrent
+/// submissions co-batch through the staged pipeline.
+fn mk_pipeline_engine(
+    reg: &Arc<ArtifactRegistry>,
+    max_batch: usize,
+    max_wait_ms: u64,
+) -> ServingEngine {
+    ServingEngine::start_with_config(
+        Arc::clone(reg),
+        lm_params(reg, 7),
+        layers(33),
+        ControllerConfig { segment_len: 2, ..Default::default() },
+        PolicySource::Fixed(32),
+        EngineConfig {
+            n_workers: 1,
+            batch_policy: BatchPolicy {
+                max_batch,
+                max_wait: Duration::from_millis(max_wait_ms),
+                capacity: 4096,
+            },
+        },
+    )
+}
+
+/// Submit `inputs` and collect responses in submission order — either
+/// awaiting each reply before the next submit (the sequential
+/// reference) or submitting everything up front so the batcher can
+/// co-batch.
+fn serve_all(
+    engine: &ServingEngine,
+    inputs: &[(Vec<f64>, usize)],
+    one_at_a_time: bool,
+) -> Vec<AttentionResponse> {
+    let recv = |rx: drrl::coordinator::ResponseReceiver<AttentionResponse>| {
+        rx.recv_timeout(Duration::from_secs(300)).expect("response").expect("ok")
+    };
+    if one_at_a_time {
+        inputs
+            .iter()
+            .map(|(x, layer)| {
+                let (_, rx) = engine
+                    .submit_attention(x.clone(), KERNEL_N, D_MODEL, *layer)
+                    .expect("submit");
+                recv(rx)
+            })
+            .collect()
+    } else {
+        let rxs: Vec<_> = inputs
+            .iter()
+            .map(|(x, layer)| {
+                engine
+                    .submit_attention(x.clone(), KERNEL_N, D_MODEL, *layer)
+                    .expect("submit")
+                    .1
+            })
+            .collect();
+        rxs.into_iter().map(recv).collect()
+    }
+}
+
+fn assert_bit_identical(a: &[AttentionResponse], b: &[AttentionResponse]) {
+    assert_eq!(a.len(), b.len());
+    for (i, (ra, rb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(ra.ranks, rb.ranks, "request {i}: ranks differ");
+        assert_eq!(ra.flops_spent, rb.flops_spent, "request {i}: flops_spent differ");
+        assert_eq!(ra.flops_full, rb.flops_full, "request {i}: flops_full differ");
+        assert_eq!(ra.y.len(), rb.y.len(), "request {i}: output length");
+        for (j, (x, y)) in ra.y.iter().zip(rb.y.iter()).enumerate() {
+            assert!(
+                x.to_bits() == y.to_bits(),
+                "request {i} element {j}: {x} vs {y} not bit-identical"
+            );
+        }
+    }
+}
+
+#[test]
+fn cross_request_pipeline_matches_sequential_same_layer() {
+    // Six same-layer requests with segment_len = 2: co-batched requests
+    // at non-boundary calls must ride on a co-batched refresh (Earlier)
+    // or on factors committed by an earlier batch (Snapshot) and still
+    // reproduce the sequential path exactly. The waves split after the
+    // first request, so the second batch starts mid-segment — its first
+    // occurrence is a Snapshot and a *later* occurrence of the same
+    // stream is a boundary refresh, pinning the replay-position commit
+    // rule (a snapshot must not observe a later same-batch refresh).
+    let reg = host_registry();
+    let mut rng = Pcg32::seeded(123);
+    let inputs: Vec<(Vec<f64>, usize)> = (0..6)
+        .map(|_| (Mat::randn(KERNEL_N, D_MODEL, 1.0, &mut rng).into_vec(), 0usize))
+        .collect();
+
+    let sequential = {
+        let engine = mk_pipeline_engine(&reg, 1, 1);
+        serve_all(&engine, &inputs, true)
+    };
+
+    let engine = mk_pipeline_engine(&reg, inputs.len(), 100);
+    let mut batched = serve_all(&engine, &inputs[..1], false);
+    batched.extend(serve_all(&engine, &inputs[1..], false));
+    assert_bit_identical(&sequential, &batched);
+
+    // Pipeline accounting: SVD dispatches and lock round-trips grow
+    // with drained batches / layers touched, not with requests.
+    let m = &engine.metrics;
+    assert_eq!(m.requests(), inputs.len() as u64);
+    assert!(m.attention_batches() >= 1);
+    assert!(
+        m.probe_dispatches() <= m.attention_batches(),
+        "≤ one probe wave per drained batch (waves {}, batches {})",
+        m.probe_dispatches(),
+        m.attention_batches()
+    );
+    assert!(
+        m.shard_locks() <= 2 * m.attention_batches(),
+        "same-layer batches take two lock round-trips each (locks {}, batches {})",
+        m.shard_locks(),
+        m.attention_batches()
+    );
+}
+
+#[test]
+fn cross_request_pipeline_matches_sequential_mixed_layers() {
+    let reg = host_registry();
+    let mut rng = Pcg32::seeded(321);
+    let inputs: Vec<(Vec<f64>, usize)> = (0..8)
+        .map(|i| (Mat::randn(KERNEL_N, D_MODEL, 1.0, &mut rng).into_vec(), i % N_LAYERS))
+        .collect();
+
+    let sequential = {
+        let engine = mk_pipeline_engine(&reg, 1, 1);
+        serve_all(&engine, &inputs, true)
+    };
+    let engine = mk_pipeline_engine(&reg, inputs.len(), 100);
+    let batched = serve_all(&engine, &inputs, false);
+    assert_bit_identical(&sequential, &batched);
+    let m = &engine.metrics;
+    assert!(
+        m.shard_locks() <= 2 * N_LAYERS as u64 * m.attention_batches(),
+        "lock round-trips bounded by layers touched per batch"
+    );
+}
+
+#[test]
+fn layer_affinity_router_pins_layers_to_engines() {
+    let reg = host_registry();
+    let engines = vec![
+        mk_engine(&reg, 1, PolicySource::Fixed(32)),
+        mk_engine(&reg, 1, PolicySource::Fixed(32)),
+    ];
+    let router = Router::new(engines, RouteStrategy::LayerAffinity);
+    let attns = attention_inputs(8); // layers alternate 0/1
+    let mut rxs = Vec::new();
+    for (x, layer) in attns {
+        let (_, rx) = router.submit_attention(x, KERNEL_N, D_MODEL, layer).expect("submit");
+        rxs.push(rx);
+    }
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(300)).expect("response").expect("ok");
+    }
+    // layer % 2 routing: each replica served exactly its layer's share.
+    assert_eq!(router.engines()[0].metrics.requests(), 4);
+    assert_eq!(router.engines()[1].metrics.requests(), 4);
 }
 
 #[test]
