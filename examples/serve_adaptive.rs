@@ -14,8 +14,8 @@
 
 use drrl::attention::MhsaWeights;
 use drrl::coordinator::{
-    BatchPolicy, ControllerConfig, EngineConfig, PolicySource, RouteStrategy, Router,
-    ServingEngine,
+    BatchPolicy, CompletionQueue, ControllerConfig, EngineConfig, PolicySource,
+    RouteStrategy, Router, ServingEngine,
 };
 use drrl::linalg::Mat;
 use drrl::runtime::ArtifactRegistry;
@@ -48,6 +48,7 @@ fn run_policy(
                     max_batch: 8,
                     max_wait: Duration::from_millis(2),
                     capacity: 4096,
+                    overdrain: 8,
                 },
             },
         )
@@ -71,7 +72,9 @@ fn run_policy(
     let n_layers = layers.len();
     let mut rng = Pcg32::seeded(seed);
     let sw = Stopwatch::start();
-    let mut rxs = Vec::with_capacity(n_requests);
+    // The whole burst is multiplexed from this one thread: tickets go
+    // into a completion queue and drain in arrival-of-completion order.
+    let cq = CompletionQueue::new();
     for i in 0..n_requests {
         // Mixed-density inputs: alternate smooth (redundant) and spiky
         // (dense) segments — the regime Fig 3 visualizes.
@@ -87,21 +90,27 @@ fn run_policy(
             m
         };
         match router.submit_attention(x.into_vec(), n, d, i % n_layers) {
-            Ok((_, rx)) => rxs.push(rx),
-            Err(e) => eprintln!("rejected: {e:?}"),
+            Ok(ticket) => {
+                cq.add(ticket);
+            }
+            Err(e) => eprintln!("rejected: {e}"),
         }
     }
     let mut rank_hist = std::collections::BTreeMap::<usize, u64>::new();
-    for rx in rxs {
-        match rx.recv_timeout(Duration::from_secs(600)) {
-            Ok(Ok(resp)) => {
+    while let Some(completion) = cq.next_timeout(Duration::from_secs(600)) {
+        match completion.into_attention().expect("attention completion") {
+            Ok(resp) => {
                 for &r in &resp.ranks {
                     *rank_hist.entry(r).or_default() += 1;
                 }
             }
-            Ok(Err(e)) => eprintln!("request failed: {e}"),
-            Err(_) => eprintln!("request timed out"),
+            Err(e) => eprintln!("request failed: {e}"),
         }
+    }
+    // next_timeout returns None on timeout too — report what never came.
+    let timed_out = cq.outstanding();
+    if timed_out > 0 {
+        eprintln!("{timed_out} request(s) timed out");
     }
     let wall = sw.elapsed().as_secs_f64();
     println!("\n─── policy: {name} ({n_engines} engine(s) × {n_workers} worker(s)) ───");

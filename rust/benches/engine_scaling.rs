@@ -1,7 +1,7 @@
 //! Multi-worker serving-engine scaling microbench (no artifacts needed —
 //! runs on the pure-Rust host backend).
 //!
-//! Three scenarios:
+//! Four scenarios:
 //!
 //! 1. **Worker scaling** (PR-1 acceptance bar): 8-head, n=512 attention
 //!    segments spread over four layers, identical request sets served by
@@ -14,7 +14,14 @@
 //!    one probe wave and two lock takes per drained batch). Reports the
 //!    SVD-dispatch and lock-round-trip counts from the engine metrics
 //!    alongside wall-clock.
-//! 3. **Host LM parse cache**: `lm_logits` with identical params every
+//! 3. **Completion-queue multiplexing**: one client thread keeps
+//!    hundreds of tickets in flight on a smaller kernel — some
+//!    cancelled right after submit, some with already-tight deadlines —
+//!    and drains everything through a single `CompletionQueue`
+//!    (pre-redesign this took one blocked thread per pending receiver).
+//!    Reports completion throughput plus cancelled/expired/over-drain
+//!    counts.
+//! 4. **Host LM parse cache**: `lm_logits` with identical params every
 //!    call (cache hits) vs. alternating params (every call re-parses) —
 //!    the per-call parse overhead the fingerprint cache removes from the
 //!    generation hot path.
@@ -25,7 +32,8 @@
 use drrl::attention::MhsaWeights;
 use drrl::bench_harness::{banner, quick_mode};
 use drrl::coordinator::{
-    BatchPolicy, ControllerConfig, EngineConfig, PolicySource, ServingEngine,
+    BatchPolicy, CompletionQueue, ControllerConfig, EngineConfig, ErrorKind, PolicySource,
+    ServingEngine, SubmitOptions,
 };
 use drrl::linalg::Mat;
 use drrl::runtime::ArtifactRegistry;
@@ -58,6 +66,7 @@ fn mk_engine(
                 max_batch,
                 max_wait: Duration::from_micros(200),
                 capacity: 1 << 16,
+                overdrain: max_batch,
             },
         },
     )
@@ -74,17 +83,16 @@ fn run_engine(
 ) -> f64 {
     let engine = mk_engine(reg, layers, params, n_workers, 8);
     let sw = Stopwatch::start();
-    let rxs: Vec<_> = requests
+    let tickets: Vec<_> = requests
         .iter()
         .map(|(x, layer)| {
             engine
                 .submit_attention(x.clone(), KERNEL_N, D_MODEL, *layer)
                 .expect("submit")
-                .1
         })
         .collect();
-    for rx in rxs {
-        rx.recv_timeout(Duration::from_secs(600)).expect("response").expect("ok");
+    for ticket in tickets {
+        ticket.wait_timeout(Duration::from_secs(600)).expect("response").expect("ok");
     }
     sw.elapsed().as_secs_f64()
 }
@@ -104,24 +112,23 @@ fn run_same_layer(
     let engine = mk_engine(reg, layers, params, 1, max_batch);
     let sw = Stopwatch::start();
     if co_batch {
-        let rxs: Vec<_> = requests
+        let tickets: Vec<_> = requests
             .iter()
             .map(|(x, layer)| {
                 engine
                     .submit_attention(x.clone(), KERNEL_N, D_MODEL, *layer)
                     .expect("submit")
-                    .1
             })
             .collect();
-        for rx in rxs {
-            rx.recv_timeout(Duration::from_secs(600)).expect("response").expect("ok");
+        for ticket in tickets {
+            ticket.wait_timeout(Duration::from_secs(600)).expect("response").expect("ok");
         }
     } else {
         for (x, layer) in requests {
-            let (_, rx) = engine
+            let ticket = engine
                 .submit_attention(x.clone(), KERNEL_N, D_MODEL, *layer)
                 .expect("submit");
-            rx.recv_timeout(Duration::from_secs(600)).expect("response").expect("ok");
+            ticket.wait_timeout(Duration::from_secs(600)).expect("response").expect("ok");
         }
     }
     let elapsed = sw.elapsed().as_secs_f64();
@@ -194,6 +201,83 @@ fn main() -> anyhow::Result<()> {
          {locks_s}→{locks_c}\n",
         ts / tc
     );
+
+    println!("── completion-queue multiplexing (single client thread) ──");
+    // Smaller kernel so hundreds of in-flight segments stay quick.
+    const MUX_N: usize = 64;
+    const MUX_HD: usize = 32;
+    const MUX_HEADS: usize = 2;
+    let mux_d = MUX_HD * MUX_HEADS;
+    let mux_reg = Arc::new(ArtifactRegistry::open_host(MUX_N, MUX_HD));
+    let mux_layers: Vec<MhsaWeights> =
+        (0..N_LAYERS).map(|_| MhsaWeights::init(mux_d, MUX_HEADS, &mut rng)).collect();
+    let mut mux_params = vec![0f32; mux_reg.manifest.lm.param_count];
+    rng.fill_normal_f32(&mut mux_params, 0.02);
+    let engine = ServingEngine::start_with_config(
+        Arc::clone(&mux_reg),
+        Arc::new(mux_params),
+        mux_layers,
+        ControllerConfig { segment_len: 8, ..Default::default() },
+        PolicySource::AdaptiveEnergy(0.9),
+        EngineConfig {
+            n_workers: 4,
+            batch_policy: BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_micros(200),
+                capacity: 1 << 16,
+                overdrain: 8,
+            },
+        },
+    );
+    let n_flight = if quick_mode() { 128 } else { 320 };
+    let inputs: Vec<Vec<f64>> = (0..n_flight)
+        .map(|_| Mat::randn(MUX_N, mux_d, 1.0, &mut rng).into_vec())
+        .collect();
+    let cq = CompletionQueue::new();
+    let sw = Stopwatch::start();
+    let mut submit_expired = 0u64;
+    for (i, x) in inputs.into_iter().enumerate() {
+        // Every 7th request carries a deadline far tighter than the
+        // queue delay; every 5th is cancelled right after submit.
+        let opts = if i % 7 == 3 {
+            SubmitOptions::deadline_in(Duration::from_micros(200))
+        } else {
+            SubmitOptions::default()
+        };
+        match engine.submit_attention_opts(x, MUX_N, mux_d, i % N_LAYERS, opts) {
+            Ok(ticket) => {
+                if i % 5 == 4 {
+                    ticket.cancel();
+                }
+                cq.add(ticket);
+            }
+            Err(e) if e.kind == ErrorKind::DeadlineExceeded => submit_expired += 1,
+            Err(e) => eprintln!("submit failed: {e}"),
+        }
+    }
+    let (mut ok, mut cancelled, mut expired) = (0u64, 0u64, submit_expired);
+    while let Some(completion) = cq.next() {
+        match completion.err().map(|e| e.kind) {
+            None => ok += 1,
+            Some(ErrorKind::Cancelled) => cancelled += 1,
+            Some(ErrorKind::DeadlineExceeded) => expired += 1,
+            Some(k) => eprintln!("unexpected completion error kind: {k}"),
+        }
+    }
+    let mux_wall = sw.elapsed().as_secs_f64();
+    println!(
+        "{n_flight} in-flight tickets, one drain thread: {mux_wall:>6.2}s  \
+         {:.0} completions/s",
+        (ok + cancelled + expired - submit_expired) as f64 / mux_wall
+    );
+    println!(
+        "served={ok} cancelled={cancelled} expired={expired}  engine: cancelled={} \
+         expired={} over_drained={}\n",
+        engine.metrics.cancelled(),
+        engine.metrics.expired(),
+        engine.metrics.over_drained()
+    );
+    drop(engine);
 
     println!("── host LM parse cache (lm_logits) ──");
     let lm = &reg.manifest.lm;

@@ -75,6 +75,7 @@ fn main() -> anyhow::Result<()> {
         max_batch: 8,
         max_wait: Duration::from_micros(50),
         capacity: 1 << 16,
+        overdrain: 0,
     });
     b.case("batcher submit+drain batch of 8", || {
         for i in 0..8u64 {

@@ -3,10 +3,24 @@
 //! queue delay, with bounded-queue backpressure — the standard
 //! continuous-batching front-end of serving systems (vLLM-style).
 //!
-//! Drained batches preserve submission (FIFO) order. The engine's
-//! cross-request attention pipeline relies on this: its decision replay
-//! runs in drained order, which is what makes a co-batched run
-//! bit-identical to serving the same requests one at a time.
+//! Drained batches preserve submission (FIFO) order among undeadlined
+//! requests. The engine's cross-request attention pipeline relies on
+//! this: its decision replay runs in drained order, which is what makes
+//! a co-batched run bit-identical to serving the same requests one at a
+//! time. Requests submitted *with* a deadline opt out of strict FIFO:
+//! they are inserted earliest-deadline-first ahead of undeadlined
+//! traffic, trading replay position for latency.
+//!
+//! Two extensions over the plain bounded queue:
+//!
+//! * **Blocking submit** — `submit_opts(_, _, blocking=true)` parks the
+//!   submitter until space frees (or its deadline passes) instead of
+//!   failing fast, for clients that prefer throttling to retry loops.
+//! * **Same-key over-drain** — a batcher built `with_key` may drain past
+//!   `max_batch` (up to `max_batch + overdrain`) as long as the next
+//!   queued items share the batch head's key. The engine keys attention
+//!   requests by layer, so a deep same-layer backlog becomes one deeper
+//!   co-batch → one probe wave — instead of several shallow ones.
 
 use super::request::Pending;
 use std::collections::VecDeque;
@@ -23,24 +37,54 @@ pub struct BatchPolicy {
     pub max_wait: Duration,
     /// Queue capacity; `submit` rejects beyond this (backpressure).
     pub capacity: usize,
+    /// Extra items a keyed batcher may drain past `max_batch` while the
+    /// queue front shares the batch head's key (0 disables over-drain).
+    pub overdrain: usize,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5), capacity: 1024 }
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            capacity: 1024,
+            overdrain: 8,
+        }
     }
 }
 
 /// Thread-safe dynamic batching queue.
 pub struct DynamicBatcher<T> {
     policy: BatchPolicy,
+    /// Over-drain affinity key (e.g. attention layer); `None` keys never
+    /// extend a batch.
+    key: Option<fn(&T) -> Option<usize>>,
     state: Mutex<Inner<T>>,
+    /// Consumers wait here for arrivals.
     cv: Condvar,
+    /// Blocking submitters wait here for queue space.
+    space_cv: Condvar,
 }
 
 struct Inner<T> {
     queue: VecDeque<Pending<T>>,
     closed: bool,
+    /// Arrival time of the earliest-*submitted* queued item. EDF
+    /// inserts reorder the queue, so the front is not necessarily the
+    /// oldest; the max_wait flush clock must read this instead.
+    oldest: Option<Instant>,
+    /// Length of the EDF-sorted deadlined prefix (everything after it is
+    /// arrival-ordered FIFO), so `refresh_oldest` scans only the prefix.
+    n_deadlined: usize,
+}
+
+impl<T> Inner<T> {
+    /// Recompute `oldest` after front removals. The FIFO tail is
+    /// arrival-sorted, so the overall minimum is min(deadlined prefix,
+    /// first FIFO item) — O(prefix), not O(queue).
+    fn refresh_oldest(&mut self) {
+        self.oldest = self.queue.iter().take(self.n_deadlined + 1).map(|p| p.arrived).min();
+    }
 }
 
 /// Why `submit` failed.
@@ -49,31 +93,92 @@ pub enum SubmitError {
     /// Backpressure: queue full.
     Full,
     Closed,
+    /// A blocking submit's deadline passed while waiting for space.
+    Expired,
 }
 
 impl<T> DynamicBatcher<T> {
     pub fn new(policy: BatchPolicy) -> Self {
         DynamicBatcher {
             policy,
-            state: Mutex::new(Inner { queue: VecDeque::new(), closed: false }),
+            key: None,
+            state: Mutex::new(Inner {
+                queue: VecDeque::new(),
+                closed: false,
+                oldest: None,
+                n_deadlined: 0,
+            }),
             cv: Condvar::new(),
+            space_cv: Condvar::new(),
         }
+    }
+
+    /// A batcher with a same-key over-drain affinity function.
+    pub fn with_key(policy: BatchPolicy, key: fn(&T) -> Option<usize>) -> Self {
+        DynamicBatcher { key: Some(key), ..Self::new(policy) }
     }
 
     pub fn policy(&self) -> BatchPolicy {
         self.policy
     }
 
-    /// Enqueue a request (non-blocking).
+    /// Enqueue a request (non-blocking, no deadline).
     pub fn submit(&self, item: T) -> Result<(), SubmitError> {
+        self.submit_opts(item, None, false)
+    }
+
+    /// Enqueue with an optional deadline (earliest-deadline-first
+    /// priority) and an optional blocking mode that waits for queue
+    /// space instead of failing fast.
+    pub fn submit_opts(
+        &self,
+        item: T,
+        deadline: Option<Instant>,
+        blocking: bool,
+    ) -> Result<(), SubmitError> {
         let mut g = self.state.lock().unwrap();
-        if g.closed {
-            return Err(SubmitError::Closed);
+        loop {
+            if g.closed {
+                return Err(SubmitError::Closed);
+            }
+            if g.queue.len() < self.policy.capacity {
+                break;
+            }
+            if !blocking {
+                return Err(SubmitError::Full);
+            }
+            match deadline {
+                None => g = self.space_cv.wait(g).unwrap(),
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        return Err(SubmitError::Expired);
+                    }
+                    let (ng, _) = self.space_cv.wait_timeout(g, d - now).unwrap();
+                    g = ng;
+                }
+            }
         }
-        if g.queue.len() >= self.policy.capacity {
-            return Err(SubmitError::Full);
+        let item = Pending::with_deadline(item, deadline);
+        // Arrivals are monotone, so a non-empty queue's oldest stays put.
+        if g.oldest.is_none() {
+            g.oldest = Some(item.arrived);
         }
-        g.queue.push_back(Pending::now(item));
+        match deadline {
+            None => g.queue.push_back(item),
+            Some(d) => {
+                // EDF: ahead of every queued item that has no deadline or
+                // a strictly later one (stable among equal deadlines).
+                // The queue is always a sorted-by-deadline prefix followed
+                // by FIFO undeadlined items, so binary search finds the
+                // position without an O(n) scan under the lock.
+                let pos = g
+                    .queue
+                    .partition_point(|q| matches!(q.deadline, Some(qd) if qd <= d));
+                g.queue.insert(pos, item);
+                g.n_deadlined += 1;
+            }
+        }
         self.cv.notify_one();
         Ok(())
     }
@@ -90,6 +195,33 @@ impl<T> DynamicBatcher<T> {
     pub fn close(&self) {
         self.state.lock().unwrap().closed = true;
         self.cv.notify_all();
+        self.space_cv.notify_all();
+    }
+
+    /// Drain up to `n` items, then extend past `max_batch` while the
+    /// queue front shares the batch head's key (capped by `overdrain`).
+    /// Wakes blocking submitters since space was freed.
+    fn drain(&self, g: &mut Inner<T>, n: usize) -> Vec<Pending<T>> {
+        let mut batch: Vec<Pending<T>> = g.queue.drain(..n).collect();
+        if let Some(key_fn) = self.key {
+            if batch.len() == self.policy.max_batch && self.policy.overdrain > 0 {
+                if let Some(head_key) = key_fn(&batch[0].inner) {
+                    let cap = self.policy.max_batch + self.policy.overdrain;
+                    while batch.len() < cap {
+                        match g.queue.front() {
+                            Some(p) if key_fn(&p.inner) == Some(head_key) => {
+                                batch.push(g.queue.pop_front().unwrap());
+                            }
+                            _ => break,
+                        }
+                    }
+                }
+            }
+        }
+        g.n_deadlined -= batch.iter().filter(|p| p.deadline.is_some()).count();
+        g.refresh_oldest();
+        self.space_cv.notify_all();
+        batch
     }
 
     /// Blocking pull of the next batch. Returns when
@@ -100,14 +232,14 @@ impl<T> DynamicBatcher<T> {
         let mut g = self.state.lock().unwrap();
         loop {
             if g.queue.len() >= self.policy.max_batch {
-                return Some(drain(&mut g.queue, self.policy.max_batch));
+                return Some(self.drain(&mut g, self.policy.max_batch));
             }
             if !g.queue.is_empty() {
-                let oldest = g.queue.front().unwrap().arrived;
+                let oldest = g.oldest.expect("non-empty queue tracks its oldest arrival");
                 let elapsed = oldest.elapsed();
                 if elapsed >= self.policy.max_wait {
                     let n = g.queue.len().min(self.policy.max_batch);
-                    return Some(drain(&mut g.queue, n));
+                    return Some(self.drain(&mut g, n));
                 }
                 // Wait the remaining window (or for more arrivals).
                 let remaining = self.policy.max_wait - elapsed;
@@ -129,20 +261,16 @@ impl<T> DynamicBatcher<T> {
     pub fn try_next_batch(&self) -> Option<Vec<Pending<T>>> {
         let mut g = self.state.lock().unwrap();
         if g.queue.len() >= self.policy.max_batch {
-            return Some(drain(&mut g.queue, self.policy.max_batch));
+            return Some(self.drain(&mut g, self.policy.max_batch));
         }
-        if let Some(front) = g.queue.front() {
-            if front.arrived.elapsed() >= self.policy.max_wait {
+        if let Some(oldest) = g.oldest {
+            if oldest.elapsed() >= self.policy.max_wait {
                 let n = g.queue.len().min(self.policy.max_batch);
-                return Some(drain(&mut g.queue, n));
+                return Some(self.drain(&mut g, n));
             }
         }
         None
     }
-}
-
-fn drain<T>(q: &mut VecDeque<Pending<T>>, n: usize) -> Vec<Pending<T>> {
-    q.drain(..n).collect()
 }
 
 /// Helper for tests/benches: deadline-aware arrival clock.
@@ -158,13 +286,18 @@ mod tests {
     use super::*;
     use std::sync::Arc;
 
+    fn policy(max_batch: usize, max_wait_ms: u64, capacity: usize) -> BatchPolicy {
+        BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_millis(max_wait_ms),
+            capacity,
+            overdrain: 0,
+        }
+    }
+
     #[test]
     fn full_batch_released_immediately() {
-        let b = DynamicBatcher::new(BatchPolicy {
-            max_batch: 4,
-            max_wait: Duration::from_secs(10),
-            capacity: 100,
-        });
+        let b = DynamicBatcher::new(policy(4, 10_000, 100));
         for i in 0..4 {
             b.submit(i).unwrap();
         }
@@ -175,11 +308,7 @@ mod tests {
 
     #[test]
     fn partial_batch_released_after_max_wait() {
-        let b = DynamicBatcher::new(BatchPolicy {
-            max_batch: 8,
-            max_wait: Duration::from_millis(20),
-            capacity: 100,
-        });
+        let b = DynamicBatcher::new(policy(8, 20, 100));
         b.submit(1).unwrap();
         let t0 = Instant::now();
         let batch = b.next_batch().unwrap();
@@ -191,11 +320,7 @@ mod tests {
     #[test]
     fn drained_batches_preserve_fifo_order() {
         // The pipeline's decision-ordering invariant depends on this.
-        let b = DynamicBatcher::new(BatchPolicy {
-            max_batch: 3,
-            max_wait: Duration::from_millis(1),
-            capacity: 100,
-        });
+        let b = DynamicBatcher::new(policy(3, 1, 100));
         for i in 0..7 {
             b.submit(i).unwrap();
         }
@@ -209,11 +334,7 @@ mod tests {
 
     #[test]
     fn backpressure_rejects_when_full() {
-        let b = DynamicBatcher::new(BatchPolicy {
-            max_batch: 2,
-            max_wait: Duration::from_millis(1),
-            capacity: 3,
-        });
+        let b = DynamicBatcher::new(policy(2, 1, 3));
         for i in 0..3 {
             b.submit(i).unwrap();
         }
@@ -222,11 +343,7 @@ mod tests {
 
     #[test]
     fn close_drains_then_none() {
-        let b = DynamicBatcher::new(BatchPolicy {
-            max_batch: 2,
-            max_wait: Duration::from_millis(1),
-            capacity: 10,
-        });
+        let b = DynamicBatcher::new(policy(2, 1, 10));
         b.submit(1).unwrap();
         b.close();
         assert_eq!(b.submit(2), Err(SubmitError::Closed));
@@ -237,11 +354,7 @@ mod tests {
 
     #[test]
     fn concurrent_producers_single_consumer() {
-        let b = Arc::new(DynamicBatcher::new(BatchPolicy {
-            max_batch: 16,
-            max_wait: Duration::from_millis(5),
-            capacity: 10_000,
-        }));
+        let b = Arc::new(DynamicBatcher::new(policy(16, 5, 10_000)));
         let n_producers = 4;
         let per = 100;
         let mut handles = Vec::new();
@@ -277,14 +390,132 @@ mod tests {
 
     #[test]
     fn try_next_batch_nonblocking() {
-        let b: DynamicBatcher<u32> = DynamicBatcher::new(BatchPolicy {
-            max_batch: 4,
-            max_wait: Duration::from_secs(1),
-            capacity: 10,
-        });
+        let b: DynamicBatcher<u32> = DynamicBatcher::new(policy(4, 1000, 10));
         assert!(b.try_next_batch().is_none());
         b.submit(1).unwrap();
         // Not full and not timed out → still none.
         assert!(b.try_next_batch().is_none());
+    }
+
+    #[test]
+    fn deadline_items_are_edf_prioritized() {
+        let b = DynamicBatcher::new(policy(8, 1, 100));
+        b.submit('a').unwrap();
+        b.submit('b').unwrap();
+        let soon = Instant::now() + Duration::from_secs(1);
+        let later = Instant::now() + Duration::from_secs(2);
+        b.submit_opts('d', Some(later), false).unwrap();
+        b.submit_opts('c', Some(soon), false).unwrap();
+        let batch = b.next_batch().unwrap();
+        let order: Vec<char> = batch.into_iter().map(|p| p.inner).collect();
+        // Deadlined items jump ahead of FIFO traffic, earliest first;
+        // undeadlined items keep their relative order.
+        assert_eq!(order, vec!['c', 'd', 'a', 'b']);
+    }
+
+    #[test]
+    fn edf_insert_does_not_reset_the_max_wait_clock() {
+        // The flush window is measured from the earliest *submission*
+        // still queued; a deadlined item jumping to the queue front must
+        // not make the consumer re-wait its max_wait from scratch.
+        let b = DynamicBatcher::new(policy(8, 100, 100));
+        let t0 = Instant::now();
+        b.submit('a').unwrap();
+        std::thread::sleep(Duration::from_millis(60));
+        b.submit_opts('b', Some(Instant::now() + Duration::from_secs(10)), false).unwrap();
+        let batch = b.next_batch().unwrap();
+        let waited = t0.elapsed();
+        assert_eq!(batch.len(), 2);
+        assert!(
+            waited < Duration::from_millis(150),
+            "flush must key off 'a' (~100ms), not 'b' (~160ms): waited {waited:?}"
+        );
+    }
+
+    #[test]
+    fn blocking_submit_waits_for_space() {
+        let b = Arc::new(DynamicBatcher::new(policy(2, 1, 2)));
+        b.submit(0).unwrap();
+        b.submit(1).unwrap();
+        assert_eq!(b.submit(2), Err(SubmitError::Full));
+        let submitter = {
+            let b = Arc::clone(&b);
+            std::thread::spawn(move || b.submit_opts(2, None, true))
+        };
+        // Draining a batch frees space and wakes the blocked submitter.
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(submitter.join().unwrap(), Ok(()));
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn blocking_submit_expires_at_deadline() {
+        let b = DynamicBatcher::new(policy(2, 10_000, 1));
+        b.submit(0).unwrap();
+        let d = Instant::now() + Duration::from_millis(20);
+        assert_eq!(b.submit_opts(1, Some(d), true), Err(SubmitError::Expired));
+    }
+
+    #[test]
+    fn overdrain_extends_same_key_runs() {
+        // Key = value; all items share key 0 except the 4th.
+        let keyed: fn(&usize) -> Option<usize> = |v| Some(*v % 10);
+        let b = DynamicBatcher::with_key(
+            BatchPolicy {
+                max_batch: 2,
+                max_wait: Duration::from_millis(1),
+                capacity: 100,
+                overdrain: 4,
+            },
+            keyed,
+        );
+        // Queue: 10, 20, 30, 41, 50 → keys 0,0,0,1,0.
+        for v in [10, 20, 30, 41, 50] {
+            b.submit(v).unwrap();
+        }
+        let batch = b.next_batch().unwrap();
+        // Drains max_batch=2, then extends while the front matches the
+        // head key: 30 matches, 41 stops the run.
+        assert_eq!(batch.into_iter().map(|p| p.inner).collect::<Vec<_>>(), vec![10, 20, 30]);
+        let rest = b.next_batch().unwrap();
+        assert_eq!(rest.into_iter().map(|p| p.inner).collect::<Vec<_>>(), vec![41, 50]);
+    }
+
+    #[test]
+    fn overdrain_respects_cap() {
+        let keyed: fn(&usize) -> Option<usize> = |_| Some(0);
+        let b = DynamicBatcher::with_key(
+            BatchPolicy {
+                max_batch: 2,
+                max_wait: Duration::from_millis(1),
+                capacity: 100,
+                overdrain: 3,
+            },
+            keyed,
+        );
+        for v in 0..10 {
+            b.submit(v).unwrap();
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 5, "max_batch + overdrain caps the extension");
+    }
+
+    #[test]
+    fn no_key_means_no_overdrain() {
+        let keyed: fn(&usize) -> Option<usize> = |_| None;
+        let b = DynamicBatcher::with_key(
+            BatchPolicy {
+                max_batch: 2,
+                max_wait: Duration::from_millis(1),
+                capacity: 100,
+                overdrain: 4,
+            },
+            keyed,
+        );
+        for v in 0..5 {
+            b.submit(v).unwrap();
+        }
+        assert_eq!(b.next_batch().unwrap().len(), 2);
     }
 }

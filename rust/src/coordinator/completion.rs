@@ -1,0 +1,769 @@
+//! Tickets and completion queues — the client side of the submission
+//! surface.
+//!
+//! `submit_*` returns a typed [`Ticket`]: the request id plus a shared
+//! completion slot the engine posts into. A ticket supports non-blocking
+//! [`Ticket::poll`], blocking [`Ticket::wait`] / [`Ticket::wait_timeout`]
+//! (the mechanical migration from the old `mpsc::Receiver::recv` style),
+//! and [`Ticket::cancel`]. Moving tickets into a [`CompletionQueue`] lets
+//! one client thread drain completions for any number of in-flight
+//! requests — across both request types and across every engine the
+//! tickets came from — in arrival-of-completion order.
+//!
+//! Exactly one result is ever posted per ticket (first post wins); a
+//! ticket is either waited on directly or added to a queue, never both,
+//! so there is a single consumer for every completion.
+
+use super::request::{
+    AttentionResponse, EngineError, EngineResult, ErrorKind, GenerateDelta, GenerateResponse,
+    RequestId,
+};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// A completed request of either type, as drained from a
+/// [`CompletionQueue`].
+#[derive(Debug)]
+pub enum Completion {
+    Generate(EngineResult<GenerateResponse>),
+    Attention(EngineResult<AttentionResponse>),
+}
+
+impl Completion {
+    /// Id of the request this completion belongs to.
+    pub fn id(&self) -> RequestId {
+        match self {
+            Completion::Generate(Ok(r)) => r.id,
+            Completion::Attention(Ok(r)) => r.id,
+            Completion::Generate(Err(e)) | Completion::Attention(Err(e)) => e.id,
+        }
+    }
+
+    /// True when the request completed successfully.
+    pub fn is_ok(&self) -> bool {
+        matches!(self, Completion::Generate(Ok(_)) | Completion::Attention(Ok(_)))
+    }
+
+    /// The error, when the request failed.
+    pub fn err(&self) -> Option<&EngineError> {
+        match self {
+            Completion::Generate(Err(e)) | Completion::Attention(Err(e)) => Some(e),
+            _ => None,
+        }
+    }
+
+    /// Unwrap an attention completion (`None` for generate completions).
+    pub fn into_attention(self) -> Option<EngineResult<AttentionResponse>> {
+        match self {
+            Completion::Attention(r) => Some(r),
+            Completion::Generate(_) => None,
+        }
+    }
+
+    /// Unwrap a generate completion (`None` for attention completions).
+    pub fn into_generate(self) -> Option<EngineResult<GenerateResponse>> {
+        match self {
+            Completion::Generate(r) => Some(r),
+            Completion::Attention(_) => None,
+        }
+    }
+}
+
+/// Response types the engine can complete a ticket with. Sealed in
+/// practice: implemented for [`GenerateResponse`] and
+/// [`AttentionResponse`] only.
+pub trait CompletionPayload: Send + Sized + 'static {
+    /// Wrap a typed result into the type-erased queue completion.
+    fn into_completion(result: EngineResult<Self>) -> Completion;
+}
+
+impl CompletionPayload for GenerateResponse {
+    fn into_completion(result: EngineResult<Self>) -> Completion {
+        Completion::Generate(result)
+    }
+}
+
+impl CompletionPayload for AttentionResponse {
+    fn into_completion(result: EngineResult<Self>) -> Completion {
+        Completion::Attention(result)
+    }
+}
+
+// ───────────────────────── completion slot ─────────────────────────
+
+struct SlotState<T> {
+    /// The posted result, until consumed by `poll`/`wait` or forwarded
+    /// into an attached queue.
+    result: Option<EngineResult<T>>,
+    /// A result was posted (even if already moved out). Later posts are
+    /// dropped: first post wins.
+    fulfilled: bool,
+    /// The result was handed to a consumer (ticket method or queue).
+    taken: bool,
+    /// Completion queue this slot forwards into, once attached.
+    queue: Option<Arc<CqShared>>,
+}
+
+/// Shared completion slot: the engine holds one end (posting), the
+/// [`Ticket`] the other (consuming).
+pub(crate) struct Slot<T: CompletionPayload> {
+    id: RequestId,
+    deadline: Option<Instant>,
+    cancelled: AtomicBool,
+    state: Mutex<SlotState<T>>,
+    cv: Condvar,
+}
+
+impl<T: CompletionPayload> Slot<T> {
+    pub(crate) fn new(id: RequestId, deadline: Option<Instant>) -> Arc<Self> {
+        Arc::new(Slot {
+            id,
+            deadline,
+            cancelled: AtomicBool::new(false),
+            state: Mutex::new(SlotState {
+                result: None,
+                fulfilled: false,
+                taken: false,
+                queue: None,
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Post the result. First post wins; later posts are dropped. If the
+    /// slot is attached to a completion queue the result is forwarded
+    /// there, otherwise it is parked for `poll`/`wait`.
+    pub(crate) fn fulfill(&self, result: EngineResult<T>) {
+        let queue = {
+            let mut g = self.state.lock().unwrap();
+            if g.fulfilled {
+                return;
+            }
+            g.fulfilled = true;
+            match g.queue.take() {
+                Some(q) => {
+                    g.taken = true;
+                    Some(q)
+                }
+                None => {
+                    g.result = Some(result);
+                    self.cv.notify_all();
+                    return;
+                }
+            }
+        };
+        // Push outside the slot lock (the queue has its own lock).
+        if let Some(q) = queue {
+            q.push(T::into_completion(result));
+        }
+    }
+
+    /// Mark cancelled and post the `Cancelled` error (no-op if a result
+    /// was already posted). The engine additionally checks the flag at
+    /// drain time so cancelled work is dropped before any compute.
+    fn cancel(&self) {
+        self.cancelled.store(true, Ordering::SeqCst);
+        self.fulfill(Err(EngineError::cancelled(self.id)));
+    }
+
+    /// If this request should not run (cancelled, or deadline passed),
+    /// the error kind to report; `None` when it is live.
+    pub(crate) fn reap_kind(&self, now: Instant) -> Option<ErrorKind> {
+        if self.cancelled.load(Ordering::SeqCst) {
+            return Some(ErrorKind::Cancelled);
+        }
+        match self.deadline {
+            Some(d) if now >= d => Some(ErrorKind::DeadlineExceeded),
+            _ => None,
+        }
+    }
+
+    fn take_result(&self) -> Option<EngineResult<T>> {
+        let mut g = self.state.lock().unwrap();
+        let r = g.result.take();
+        if r.is_some() {
+            g.taken = true;
+        }
+        r
+    }
+
+    /// Post a fallback `Internal` error if nothing was posted yet — a
+    /// no-op otherwise (first post wins). Reply-handle `Drop` impls call
+    /// this so a panicking worker can never strand a ticket: the old
+    /// mpsc receivers surfaced sender-drop as a disconnect, and this is
+    /// the equivalent safety net.
+    pub(crate) fn abandon(&self) {
+        self.fulfill(Err(EngineError::new(
+            self.id,
+            ErrorKind::Internal,
+            "reply handle dropped without a result",
+        )));
+    }
+
+    /// Attach to a completion queue. Returns `false` when no completion
+    /// will ever reach the queue (the result was already consumed).
+    fn attach(&self, queue: &Arc<CqShared>) -> bool {
+        let forward = {
+            let mut g = self.state.lock().unwrap();
+            if !g.fulfilled {
+                g.queue = Some(Arc::clone(queue));
+                return true;
+            }
+            match g.result.take() {
+                Some(r) => {
+                    g.taken = true;
+                    r
+                }
+                None => return false, // already consumed elsewhere
+            }
+        };
+        queue.push(T::into_completion(forward));
+        true
+    }
+}
+
+// ───────────────────────────── tickets ─────────────────────────────
+
+/// Handle to one in-flight request: the request id plus its shared
+/// completion slot.
+///
+/// Consume the result with [`Ticket::poll`] (non-blocking),
+/// [`Ticket::wait`] / [`Ticket::wait_timeout`] (blocking — the drop-in
+/// replacement for the old receiver's `recv`/`recv_timeout`), or move
+/// the ticket into a [`CompletionQueue`] to multiplex many tickets on
+/// one thread. Exactly one of these ever yields the result.
+pub struct Ticket<T: CompletionPayload> {
+    slot: Arc<Slot<T>>,
+}
+
+impl<T: CompletionPayload> Ticket<T> {
+    pub(crate) fn new(slot: Arc<Slot<T>>) -> Self {
+        Ticket { slot }
+    }
+
+    pub fn id(&self) -> RequestId {
+        self.slot.id
+    }
+
+    /// The deadline this request was submitted with, if any.
+    pub fn deadline(&self) -> Option<Instant> {
+        self.slot.deadline
+    }
+
+    /// Non-blocking: the result if it is ready and not yet consumed.
+    pub fn poll(&self) -> Option<EngineResult<T>> {
+        self.slot.take_result()
+    }
+
+    /// Block until the result arrives. Equivalent to the old blocking
+    /// `Receiver::recv` style: every submitted request is guaranteed a
+    /// completion (success, typed error, or shutdown error), so this
+    /// does not hang on engine shutdown.
+    pub fn wait(self) -> EngineResult<T> {
+        let mut g = self.slot.state.lock().unwrap();
+        loop {
+            if let Some(r) = g.result.take() {
+                g.taken = true;
+                return r;
+            }
+            if g.taken {
+                // poll() raced the result away before this wait.
+                return Err(EngineError::new(
+                    self.slot.id,
+                    ErrorKind::Internal,
+                    "result already consumed",
+                ));
+            }
+            g = self.slot.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Block up to `timeout` for the result; `None` if it is not ready
+    /// in time (the ticket stays valid and can be waited on again).
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<EngineResult<T>> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.slot.state.lock().unwrap();
+        loop {
+            if let Some(r) = g.result.take() {
+                g.taken = true;
+                return Some(r);
+            }
+            if g.taken {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (ng, _) = self.slot.cv.wait_timeout(g, deadline - now).unwrap();
+            g = ng;
+        }
+    }
+
+    /// Cancel the request. The `Cancelled` error is posted immediately
+    /// (if no result arrived yet) and the engine drops the queued work
+    /// at drain time, before spending any probe/SVD compute on it.
+    /// In-flight compute is not interrupted; its late result is dropped.
+    pub fn cancel(&self) {
+        self.slot.cancel();
+    }
+
+    /// A cheap cloneable handle that can cancel this request after the
+    /// ticket itself has been moved into a [`CompletionQueue`].
+    pub fn cancel_token(&self) -> CancelToken<T> {
+        CancelToken { slot: Arc::clone(&self.slot) }
+    }
+}
+
+/// Cancellation handle detached from the ticket's result-consuming side.
+pub struct CancelToken<T: CompletionPayload> {
+    slot: Arc<Slot<T>>,
+}
+
+impl<T: CompletionPayload> Clone for CancelToken<T> {
+    fn clone(&self) -> Self {
+        CancelToken { slot: Arc::clone(&self.slot) }
+    }
+}
+
+impl<T: CompletionPayload> CancelToken<T> {
+    pub fn id(&self) -> RequestId {
+        self.slot.id
+    }
+
+    pub fn cancel(&self) {
+        self.slot.cancel();
+    }
+}
+
+// ───────────────────────── completion queue ─────────────────────────
+
+struct CqState {
+    ready: VecDeque<Completion>,
+    /// Tickets attached but not yet completed.
+    outstanding: usize,
+}
+
+pub(crate) struct CqShared {
+    state: Mutex<CqState>,
+    cv: Condvar,
+}
+
+impl CqShared {
+    fn push(&self, c: Completion) {
+        let mut g = self.state.lock().unwrap();
+        g.ready.push_back(c);
+        g.outstanding = g.outstanding.saturating_sub(1);
+        drop(g);
+        self.cv.notify_all();
+    }
+}
+
+/// Multiplexes completions for any number of tickets onto one consumer
+/// thread, in arrival-of-completion order.
+///
+/// Tickets from different engines (e.g. all replicas behind a `Router`)
+/// and of different request types share one queue. [`CompletionQueue::next`]
+/// blocks only while completions are still owed: once every added ticket
+/// has completed and been drained it returns `None`, so drain loops
+/// terminate without bookkeeping.
+pub struct CompletionQueue {
+    shared: Arc<CqShared>,
+}
+
+impl Default for CompletionQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CompletionQueue {
+    pub fn new() -> Self {
+        CompletionQueue {
+            shared: Arc::new(CqShared {
+                state: Mutex::new(CqState { ready: VecDeque::new(), outstanding: 0 }),
+                cv: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Move a ticket into the queue; its completion (including one that
+    /// already arrived) will surface via `next`. Returns the request id,
+    /// the key for matching completions back to submissions. Cancel via
+    /// a [`CancelToken`] taken before the move.
+    pub fn add<T: CompletionPayload>(&self, ticket: Ticket<T>) -> RequestId {
+        let id = ticket.id();
+        {
+            let mut g = self.shared.state.lock().unwrap();
+            g.outstanding += 1;
+        }
+        if !ticket.slot.attach(&self.shared) {
+            // Result was already consumed through the ticket: nothing
+            // will ever arrive for it. Wake consumers so a drain loop
+            // blocked on the transient outstanding count re-checks.
+            let mut g = self.shared.state.lock().unwrap();
+            g.outstanding = g.outstanding.saturating_sub(1);
+            drop(g);
+            self.shared.cv.notify_all();
+        }
+        id
+    }
+
+    /// Completions not yet drained.
+    pub fn len(&self) -> usize {
+        self.shared.state.lock().unwrap().ready.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Tickets added but not yet completed.
+    pub fn outstanding(&self) -> usize {
+        self.shared.state.lock().unwrap().outstanding
+    }
+
+    /// Non-blocking: the next completion if one is ready.
+    pub fn try_next(&self) -> Option<Completion> {
+        self.shared.state.lock().unwrap().ready.pop_front()
+    }
+
+    /// Block for the next completion. Returns `None` once every added
+    /// ticket has completed and been drained (never hangs on an empty
+    /// queue).
+    pub fn next(&self) -> Option<Completion> {
+        let mut g = self.shared.state.lock().unwrap();
+        loop {
+            if let Some(c) = g.ready.pop_front() {
+                return Some(c);
+            }
+            if g.outstanding == 0 {
+                return None;
+            }
+            g = self.shared.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Block up to `timeout` for the next completion; `None` on timeout
+    /// or when nothing is outstanding.
+    pub fn next_timeout(&self, timeout: Duration) -> Option<Completion> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.shared.state.lock().unwrap();
+        loop {
+            if let Some(c) = g.ready.pop_front() {
+                return Some(c);
+            }
+            if g.outstanding == 0 {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (ng, _) = self.shared.cv.wait_timeout(g, deadline - now).unwrap();
+            g = ng;
+        }
+    }
+}
+
+// ───────────────────────────── streaming ─────────────────────────────
+
+/// Token-delta channel backing a [`StreamingTicket`].
+pub(crate) struct DeltaStream {
+    state: Mutex<(VecDeque<GenerateDelta>, bool)>,
+    cv: Condvar,
+}
+
+impl DeltaStream {
+    pub(crate) fn new() -> Arc<Self> {
+        Arc::new(DeltaStream { state: Mutex::new((VecDeque::new(), false)), cv: Condvar::new() })
+    }
+
+    pub(crate) fn push(&self, delta: GenerateDelta) {
+        let mut g = self.state.lock().unwrap();
+        if g.1 {
+            return; // closed: late deltas are dropped
+        }
+        g.0.push_back(delta);
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Close the stream (the final result was posted). Pending deltas
+    /// stay drainable.
+    pub(crate) fn close(&self) {
+        self.state.lock().unwrap().1 = true;
+        self.cv.notify_all();
+    }
+
+    fn next(&self) -> Option<GenerateDelta> {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if let Some(d) = g.0.pop_front() {
+                return Some(d);
+            }
+            if g.1 {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    fn try_next(&self) -> Option<GenerateDelta> {
+        self.state.lock().unwrap().0.pop_front()
+    }
+}
+
+/// A generation ticket that additionally surfaces per-token deltas as
+/// the decode steps that produce them complete — ahead of the final
+/// [`GenerateResponse`].
+pub struct StreamingTicket {
+    ticket: Ticket<GenerateResponse>,
+    stream: Arc<DeltaStream>,
+}
+
+impl StreamingTicket {
+    pub(crate) fn new(ticket: Ticket<GenerateResponse>, stream: Arc<DeltaStream>) -> Self {
+        StreamingTicket { ticket, stream }
+    }
+
+    pub fn id(&self) -> RequestId {
+        self.ticket.id()
+    }
+
+    /// Block for the next token delta. `None` once generation finished
+    /// (or failed — inspect the final result via [`StreamingTicket::finish`])
+    /// and all deltas are drained.
+    pub fn next_delta(&self) -> Option<GenerateDelta> {
+        self.stream.next()
+    }
+
+    /// Non-blocking delta poll.
+    pub fn try_next_delta(&self) -> Option<GenerateDelta> {
+        self.stream.try_next()
+    }
+
+    /// Cancel the request (see [`Ticket::cancel`]).
+    pub fn cancel(&self) {
+        self.ticket.cancel();
+    }
+
+    /// Block for the final response (undelivered deltas are dropped).
+    pub fn finish(self) -> EngineResult<GenerateResponse> {
+        self.ticket.wait()
+    }
+
+    /// Downgrade to a plain ticket (e.g. to move it into a
+    /// [`CompletionQueue`]); the delta stream is detached and dropped.
+    pub fn into_ticket(self) -> Ticket<GenerateResponse> {
+        self.ticket
+    }
+}
+
+// ───────────────────── engine-side reply handles ─────────────────────
+
+/// Engine-side posting handle for an attention request. Dropping it
+/// without posting (worker panic, dropped queue) posts an `Internal`
+/// error, so tickets and completion queues can never hang.
+pub(crate) struct AttnReply(Arc<Slot<AttentionResponse>>);
+
+impl AttnReply {
+    pub(crate) fn new(slot: Arc<Slot<AttentionResponse>>) -> Self {
+        AttnReply(slot)
+    }
+}
+
+impl std::ops::Deref for AttnReply {
+    type Target = Slot<AttentionResponse>;
+
+    fn deref(&self) -> &Self::Target {
+        &self.0
+    }
+}
+
+impl Drop for AttnReply {
+    fn drop(&mut self) {
+        self.0.abandon();
+    }
+}
+
+/// Engine-side posting handle for a generation request: the completion
+/// slot plus the optional delta stream of a streaming ticket. `post`
+/// closes the stream so `next_delta` loops terminate on every path
+/// (success, error, cancel, shutdown) — and `Drop` backstops both the
+/// slot and the stream against a worker that never posted.
+pub(crate) struct GenReply {
+    pub(crate) slot: Arc<Slot<GenerateResponse>>,
+    pub(crate) stream: Option<Arc<DeltaStream>>,
+}
+
+impl GenReply {
+    pub(crate) fn post(&self, result: EngineResult<GenerateResponse>) {
+        self.slot.fulfill(result);
+        if let Some(s) = &self.stream {
+            s.close();
+        }
+    }
+
+    pub(crate) fn push_delta(&self, delta: GenerateDelta) {
+        if let Some(s) = &self.stream {
+            s.push(delta);
+        }
+    }
+}
+
+impl Drop for GenReply {
+    fn drop(&mut self) {
+        self.slot.abandon();
+        if let Some(s) = &self.stream {
+            s.close();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn attn_ok(id: RequestId) -> EngineResult<AttentionResponse> {
+        Ok(AttentionResponse {
+            id,
+            y: vec![1.0, 2.0],
+            ranks: vec![4],
+            flops_spent: 1,
+            flops_full: 2,
+            queued_ms: 0.0,
+            compute_ms: 0.0,
+            batch_size: 1,
+        })
+    }
+
+    #[test]
+    fn poll_then_fulfill_then_poll() {
+        let slot = Slot::<AttentionResponse>::new(7, None);
+        let ticket = Ticket::new(Arc::clone(&slot));
+        assert!(ticket.poll().is_none());
+        slot.fulfill(attn_ok(7));
+        let r = ticket.poll().expect("ready").expect("ok");
+        assert_eq!(r.id, 7);
+        // Consumed: subsequent polls see nothing.
+        assert!(ticket.poll().is_none());
+    }
+
+    #[test]
+    fn wait_blocks_until_fulfilled() {
+        let slot = Slot::<AttentionResponse>::new(1, None);
+        let ticket = Ticket::new(Arc::clone(&slot));
+        let poster = {
+            let slot = Arc::clone(&slot);
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(20));
+                slot.fulfill(attn_ok(1));
+            })
+        };
+        let r = ticket.wait().expect("ok");
+        assert_eq!(r.id, 1);
+        poster.join().unwrap();
+    }
+
+    #[test]
+    fn wait_timeout_returns_none_then_result() {
+        let slot = Slot::<AttentionResponse>::new(2, None);
+        let ticket = Ticket::new(Arc::clone(&slot));
+        assert!(ticket.wait_timeout(Duration::from_millis(10)).is_none());
+        slot.fulfill(attn_ok(2));
+        assert!(ticket.wait_timeout(Duration::from_millis(10)).is_some());
+    }
+
+    #[test]
+    fn first_post_wins() {
+        let slot = Slot::<AttentionResponse>::new(3, None);
+        let ticket = Ticket::new(Arc::clone(&slot));
+        slot.fulfill(attn_ok(3));
+        slot.fulfill(Err(EngineError::new(3, ErrorKind::Internal, "late")));
+        assert!(ticket.wait().is_ok(), "late error must not replace the result");
+    }
+
+    #[test]
+    fn cancel_posts_cancelled_error_and_sets_flag() {
+        let slot = Slot::<AttentionResponse>::new(4, None);
+        let ticket = Ticket::new(Arc::clone(&slot));
+        let token = ticket.cancel_token();
+        token.cancel();
+        assert_eq!(slot.reap_kind(Instant::now()), Some(ErrorKind::Cancelled));
+        let err = ticket.wait().expect_err("cancelled");
+        assert_eq!(err.kind, ErrorKind::Cancelled);
+    }
+
+    #[test]
+    fn deadline_reaps_after_expiry() {
+        let deadline = Instant::now() + Duration::from_millis(5);
+        let slot = Slot::<AttentionResponse>::new(5, Some(deadline));
+        assert_eq!(slot.reap_kind(Instant::now()), None);
+        assert_eq!(
+            slot.reap_kind(deadline + Duration::from_millis(1)),
+            Some(ErrorKind::DeadlineExceeded)
+        );
+    }
+
+    #[test]
+    fn dropped_reply_handle_posts_internal_error() {
+        // A worker that panics (or a queue torn down with work still in
+        // it) drops the reply handle without posting — the ticket must
+        // resolve with an Internal error instead of hanging.
+        let slot = Slot::<AttentionResponse>::new(20, None);
+        let ticket = Ticket::new(Arc::clone(&slot));
+        drop(AttnReply::new(slot));
+        let err = ticket.wait().expect_err("abandoned ticket must error");
+        assert_eq!(err.kind, ErrorKind::Internal);
+    }
+
+    #[test]
+    fn queue_drains_in_completion_order_and_terminates() {
+        let cq = CompletionQueue::new();
+        let slot_a = Slot::<AttentionResponse>::new(10, None);
+        let slot_b = Slot::<AttentionResponse>::new(11, None);
+        cq.add(Ticket::new(Arc::clone(&slot_a)));
+        cq.add(Ticket::new(Arc::clone(&slot_b)));
+        assert_eq!(cq.outstanding(), 2);
+        // b completes first: completion order, not submission order.
+        slot_b.fulfill(attn_ok(11));
+        slot_a.fulfill(attn_ok(10));
+        assert_eq!(cq.next().expect("first").id(), 11);
+        assert_eq!(cq.next().expect("second").id(), 10);
+        assert!(cq.next().is_none(), "drained queue must terminate");
+    }
+
+    #[test]
+    fn queue_add_after_completion_still_delivers() {
+        let cq = CompletionQueue::new();
+        let slot = Slot::<AttentionResponse>::new(12, None);
+        slot.fulfill(attn_ok(12));
+        cq.add(Ticket::new(Arc::clone(&slot)));
+        assert_eq!(cq.next().expect("delivered").id(), 12);
+        assert!(cq.next().is_none());
+    }
+
+    #[test]
+    fn queue_next_timeout_times_out() {
+        let cq = CompletionQueue::new();
+        let slot = Slot::<AttentionResponse>::new(13, None);
+        cq.add(Ticket::new(Arc::clone(&slot)));
+        assert!(cq.next_timeout(Duration::from_millis(10)).is_none());
+        slot.fulfill(attn_ok(13));
+        assert!(cq.next_timeout(Duration::from_millis(100)).is_some());
+    }
+
+    #[test]
+    fn delta_stream_drains_then_closes() {
+        let s = DeltaStream::new();
+        s.push(GenerateDelta { id: 1, index: 0, token: 42 });
+        s.push(GenerateDelta { id: 1, index: 1, token: 43 });
+        s.close();
+        assert_eq!(s.next().expect("first").token, 42);
+        assert_eq!(s.next().expect("second").token, 43);
+        assert!(s.next().is_none());
+    }
+}

@@ -2,6 +2,21 @@
 //! and execute batched LM generation plus DR-RL adaptive attention
 //! segments against the artifact registry.
 //!
+//! ## Client surface
+//!
+//! `submit_generate` / `submit_attention` queue the request and hand
+//! back a typed [`Ticket`] (non-blocking `poll`, blocking
+//! `wait`/`wait_timeout`, `cancel`); attention requests are
+//! shape/layer-validated before queueing; `submit_*_opts` adds per-request
+//! [`SubmitOptions`] (deadline, blocking backpressure) and
+//! `submit_generate_streaming` returns a [`StreamingTicket`] that
+//! surfaces per-token deltas as decode steps complete. Tickets can be
+//! moved into a [`super::CompletionQueue`] so one client thread drains
+//! completions for hundreds of in-flight requests. Work whose ticket was
+//! cancelled or whose deadline expired while queued is dropped at drain
+//! time — before any probe/SVD compute — with an explicit
+//! [`EngineError`] of kind `Cancelled`/`DeadlineExceeded`.
+//!
 //! ## Execution model
 //!
 //! Generation requests pack into fixed-shape logits chunks
@@ -14,7 +29,10 @@
 //! batch; decisions replay serially in request-arrival, head order) →
 //! **apply** (one pooled wave of masked factor applies). A drained
 //! batch therefore costs O(layers-touched) lock round-trips and SVD
-//! dispatches instead of O(requests).
+//! dispatches instead of O(requests). The batcher keys attention
+//! requests by layer, so it may over-drain past `max_batch` while the
+//! queue front targets the batch head's layer (deeper co-batches →
+//! fewer probe waves; counted by the `over_drained` metric).
 //!
 //! ## Sharding and the decision-ordering invariant
 //!
@@ -28,6 +46,7 @@
 //! engine (see `rust/tests/engine_concurrency.rs`).
 
 use super::batcher::{BatchPolicy, DynamicBatcher, SubmitError};
+use super::completion::{AttnReply, DeltaStream, GenReply, Slot, StreamingTicket, Ticket};
 use super::metrics::Metrics;
 use super::pipeline::{self, AttnJob};
 use super::rank_controller::{ControllerConfig, PolicySource, RankController};
@@ -37,16 +56,25 @@ use crate::runtime::ArtifactRegistry;
 use crate::util::Stopwatch;
 use anyhow::Result;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::Sender;
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 enum Work {
-    Generate(GenerateRequest, Sender<EngineResult<GenerateResponse>>),
-    Attention(AttentionRequest, Sender<EngineResult<AttentionResponse>>),
+    Generate(GenerateRequest, GenReply),
+    Attention(AttentionRequest, AttnReply),
+}
+
+/// Over-drain affinity: attention requests key by layer so a same-layer
+/// backlog co-batches deeper; generation requests never extend a batch.
+fn work_key(w: &Work) -> Option<usize> {
+    match w {
+        Work::Attention(req, _) => Some(req.layer),
+        Work::Generate(..) => None,
+    }
 }
 
 /// A generation request mid-flight: arrival envelope, request, reply.
-type GenJob = (Pending<()>, GenerateRequest, Sender<EngineResult<GenerateResponse>>);
+type GenJob = (Pending<()>, GenerateRequest, GenReply);
 
 /// Engine tuning knobs beyond the batching policy.
 #[derive(Debug, Clone)]
@@ -78,7 +106,7 @@ pub(crate) struct EngineShared {
     pub(crate) controller_cfg: ControllerConfig,
     pub(crate) metrics: Arc<Metrics>,
     /// Prompt-shutdown flag: once set, workers stop computing queued
-    /// work and reply with explicit errors instead.
+    /// work and post explicit errors instead.
     pub(crate) stopped: AtomicBool,
 }
 
@@ -122,7 +150,7 @@ impl ServingEngine {
         source: PolicySource,
         config: EngineConfig,
     ) -> ServingEngine {
-        let batcher = Arc::new(DynamicBatcher::new(config.batch_policy));
+        let batcher = Arc::new(DynamicBatcher::with_key(config.batch_policy, work_key));
         let metrics = Arc::new(Metrics::new());
         let source = Arc::new(source);
         let shards: Vec<Mutex<RankController>> = (0..layers.len().max(1))
@@ -167,47 +195,163 @@ impl ServingEngine {
         self.workers.len()
     }
 
-    fn submit(&self, work: Work) -> Result<(), SubmitError> {
-        let r = self.batcher.submit(work);
-        if r.is_err() {
-            self.metrics.record_rejection();
+    fn submit_work(
+        &self,
+        id: RequestId,
+        work: Work,
+        opts: &SubmitOptions,
+    ) -> Result<(), EngineError> {
+        match self.batcher.submit_opts(work, opts.deadline, opts.blocking) {
+            Ok(()) => Ok(()),
+            Err(SubmitError::Full) => {
+                self.metrics.record_rejection();
+                Err(EngineError::new(id, ErrorKind::Rejected, "submit queue full"))
+            }
+            Err(SubmitError::Expired) => {
+                self.metrics.record_expired();
+                Err(EngineError::deadline_exceeded(id))
+            }
+            Err(SubmitError::Closed) => {
+                Err(EngineError::new(id, ErrorKind::Shutdown, "engine stopped"))
+            }
         }
-        r
     }
 
-    /// Queue a generation request; returns (id, receiver).
+    fn next_id(&self) -> RequestId {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Queue a generation request with default options.
     pub fn submit_generate(
         &self,
         prompt: Vec<i32>,
         max_new_tokens: usize,
-    ) -> Result<(RequestId, ResponseReceiver<GenerateResponse>), SubmitError> {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let (tx, rx) = std::sync::mpsc::channel();
-        self.submit(Work::Generate(GenerateRequest { id, prompt, max_new_tokens }, tx))?;
-        Ok((id, rx))
+    ) -> Result<Ticket<GenerateResponse>, EngineError> {
+        self.submit_generate_opts(prompt, max_new_tokens, SubmitOptions::default())
     }
 
-    /// Queue an adaptive-attention segment; returns (id, receiver).
+    /// Queue a generation request with explicit submit options.
+    pub fn submit_generate_opts(
+        &self,
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+        opts: SubmitOptions,
+    ) -> Result<Ticket<GenerateResponse>, EngineError> {
+        let (ticket, _) = self.submit_generate_inner(prompt, max_new_tokens, opts, false)?;
+        Ok(ticket)
+    }
+
+    /// Queue a generation request whose per-token deltas stream back as
+    /// decode steps complete, ahead of the final response.
+    pub fn submit_generate_streaming(
+        &self,
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+        opts: SubmitOptions,
+    ) -> Result<StreamingTicket, EngineError> {
+        let (ticket, stream) = self.submit_generate_inner(prompt, max_new_tokens, opts, true)?;
+        Ok(StreamingTicket::new(ticket, stream.expect("streaming submit carries a stream")))
+    }
+
+    fn submit_generate_inner(
+        &self,
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+        opts: SubmitOptions,
+        streaming: bool,
+    ) -> Result<(Ticket<GenerateResponse>, Option<Arc<DeltaStream>>), EngineError> {
+        let id = self.next_id();
+        self.check_deadline(id, &opts)?;
+        let slot = Slot::new(id, opts.deadline);
+        let stream = streaming.then(DeltaStream::new);
+        let reply = GenReply { slot: Arc::clone(&slot), stream: stream.clone() };
+        let req = GenerateRequest { id, prompt, max_new_tokens };
+        self.submit_work(id, Work::Generate(req, reply), &opts)?;
+        Ok((Ticket::new(slot), stream))
+    }
+
+    /// Queue an adaptive-attention segment with default options.
     pub fn submit_attention(
         &self,
         x: Vec<f64>,
         n: usize,
         d_model: usize,
         layer: usize,
-    ) -> Result<(RequestId, ResponseReceiver<AttentionResponse>), SubmitError> {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let (tx, rx) = std::sync::mpsc::channel();
-        self.submit(Work::Attention(AttentionRequest { id, x, n, d_model, layer }, tx))?;
-        Ok((id, rx))
+    ) -> Result<Ticket<AttentionResponse>, EngineError> {
+        self.submit_attention_opts(x, n, d_model, layer, SubmitOptions::default())
+    }
+
+    /// Queue an adaptive-attention segment with explicit submit options.
+    /// Shape/layer validation happens here, before the request is
+    /// queued, so malformed requests fail fast with
+    /// [`ErrorKind::Invalid`] instead of inside a worker.
+    pub fn submit_attention_opts(
+        &self,
+        x: Vec<f64>,
+        n: usize,
+        d_model: usize,
+        layer: usize,
+        opts: SubmitOptions,
+    ) -> Result<Ticket<AttentionResponse>, EngineError> {
+        let id = self.next_id();
+        self.validate_attention(id, &x, n, d_model, layer)?;
+        self.check_deadline(id, &opts)?;
+        let slot = Slot::new(id, opts.deadline);
+        let req = AttentionRequest { id, x, n, d_model, layer };
+        self.submit_work(id, Work::Attention(req, AttnReply::new(Arc::clone(&slot))), &opts)?;
+        Ok(Ticket::new(slot))
+    }
+
+    fn validate_attention(
+        &self,
+        id: RequestId,
+        x: &[f64],
+        n: usize,
+        d_model: usize,
+        layer: usize,
+    ) -> Result<(), EngineError> {
+        let fail = |msg: String| {
+            self.metrics.record_invalid();
+            Err(EngineError::new(id, ErrorKind::Invalid, msg))
+        };
+        if n == 0 {
+            return fail("n must be > 0".into());
+        }
+        if layer >= self.shared.layers.len() {
+            return fail(format!(
+                "layer {layer} out of range (engine has {} layers)",
+                self.shared.layers.len()
+            ));
+        }
+        let want_d = self.shared.layers[layer].d_model();
+        if d_model != want_d {
+            return fail(format!("d_model {d_model} != layer d_model {want_d}"));
+        }
+        if x.len() != n * d_model {
+            return fail(format!("input length {} != n*d_model = {}", x.len(), n * d_model));
+        }
+        Ok(())
+    }
+
+    /// A deadline already in the past never enters the queue.
+    fn check_deadline(&self, id: RequestId, opts: &SubmitOptions) -> Result<(), EngineError> {
+        match opts.deadline {
+            Some(d) if Instant::now() >= d => {
+                self.metrics.record_expired();
+                Err(EngineError::deadline_exceeded(id))
+            }
+            _ => Ok(()),
+        }
     }
 
     pub fn queue_depth(&self) -> usize {
         self.batcher.len()
     }
 
-    /// Prompt shutdown: stop computing queued work (remaining requests
-    /// get explicit `EngineError` replies), then join the workers.
-    /// In-flight work finishes normally.
+    /// Prompt shutdown: stop computing queued work (remaining requests'
+    /// tickets get explicit `EngineError` completions of kind
+    /// `Shutdown`), then join the workers. In-flight work finishes
+    /// normally, so every outstanding ticket resolves.
     pub fn shutdown(mut self) {
         self.shared.stopped.store(true, Ordering::SeqCst);
         self.batcher.close();
@@ -228,39 +372,55 @@ impl Drop for ServingEngine {
 }
 
 fn worker_loop(shared: &EngineShared, batcher: &DynamicBatcher<Work>) {
+    let max_batch = batcher.policy().max_batch;
     while let Some(batch) = batcher.next_batch() {
+        if batch.len() > max_batch {
+            shared.metrics.record_over_drain((batch.len() - max_batch) as u64);
+        }
         if shared.stopped.load(Ordering::SeqCst) {
-            // Prompt shutdown: reply Closed-style errors instead of
-            // computing (the batcher is already closed to submitters).
+            // Prompt shutdown: post Shutdown errors instead of computing
+            // (the batcher is already closed to submitters).
             for p in batch {
                 match p.inner {
-                    Work::Generate(req, tx) => {
-                        let _ = tx.send(Err(EngineError {
-                            id: req.id,
-                            message: "engine stopped before request ran".into(),
-                        }));
-                    }
-                    Work::Attention(req, tx) => {
-                        let _ = tx.send(Err(EngineError {
-                            id: req.id,
-                            message: "engine stopped before request ran".into(),
-                        }));
-                    }
+                    Work::Generate(req, reply) => reply.post(Err(EngineError::new(
+                        req.id,
+                        ErrorKind::Shutdown,
+                        "engine stopped before request ran",
+                    ))),
+                    Work::Attention(req, reply) => reply.fulfill(Err(EngineError::new(
+                        req.id,
+                        ErrorKind::Shutdown,
+                        "engine stopped before request ran",
+                    ))),
                 }
             }
             continue;
         }
         // Regroup the drained batch by type, preserving the arrival
-        // envelopes and FIFO order (the pipeline's replay order).
+        // envelopes and FIFO order (the pipeline's replay order), and
+        // reap generation jobs whose ticket was cancelled or whose
+        // deadline expired while queued (attention jobs are reaped at
+        // the pipeline's entry, before its plan stage).
+        let now = Instant::now();
         let mut gens: Vec<GenJob> = Vec::new();
         let mut attns: Vec<AttnJob> = Vec::new();
         for p in batch {
             let arrived = p.arrived;
             match p.inner {
-                Work::Generate(req, tx) => {
-                    gens.push((Pending { inner: (), arrived }, req, tx))
+                Work::Generate(req, reply) => match reply.slot.reap_kind(now) {
+                    Some(kind) => {
+                        record_reap(&shared.metrics, kind);
+                        reply.post(Err(reap_error(req.id, kind)));
+                    }
+                    None => gens.push((
+                        Pending { inner: (), arrived, deadline: None },
+                        req,
+                        reply,
+                    )),
+                },
+                Work::Attention(req, reply) => {
+                    attns.push(AttnJob { arrived, req, reply })
                 }
-                Work::Attention(req, tx) => attns.push(AttnJob { arrived, req, tx }),
             }
         }
         if !gens.is_empty() {
@@ -273,16 +433,36 @@ fn worker_loop(shared: &EngineShared, batcher: &DynamicBatcher<Work>) {
                 crate::log_warn!("generate batch failed: {e:#}");
             }
         }
-        // The staged cross-request pipeline replies to every attention
-        // job itself.
+        // The staged cross-request pipeline posts every attention job's
+        // completion itself (including reaped jobs).
         pipeline::run_attention_batch(shared, attns);
     }
 }
 
+/// Metrics bookkeeping for a drain-time reap.
+pub(crate) fn record_reap(metrics: &Metrics, kind: ErrorKind) {
+    match kind {
+        ErrorKind::Cancelled => metrics.record_cancelled(),
+        ErrorKind::DeadlineExceeded => metrics.record_expired(),
+        _ => {}
+    }
+}
+
+/// The error a drain-time reap posts — routed through the shared
+/// `EngineError` constructors so the client-visible text matches the
+/// cancel/expiry errors posted from every other path.
+pub(crate) fn reap_error(id: RequestId, kind: ErrorKind) -> EngineError {
+    match kind {
+        ErrorKind::Cancelled => EngineError::cancelled(id),
+        ErrorKind::DeadlineExceeded => EngineError::deadline_exceeded(id),
+        other => EngineError::new(id, other, "request dropped before it ran"),
+    }
+}
+
 /// Batched greedy generation over the whole drained batch. Every request
-/// receives exactly one reply: `Ok` when its chunk completes, or an
+/// receives exactly one completion: `Ok` when its chunk completes, or an
 /// explicit `EngineError` for the failing chunk and all chunks after it
-/// (already-replied chunks are left alone).
+/// (already-completed chunks are left alone).
 fn serve_generate_batch(
     shared: &EngineShared,
     gens: &mut [GenJob],
@@ -293,11 +473,12 @@ fn serve_generate_batch(
     for lo in (0..n).step_by(chunk_size) {
         let hi = (lo + chunk_size).min(n);
         if let Err(e) = serve_generate_chunk(shared, &mut gens[lo..hi], batch_size) {
-            for (_, req, tx) in &gens[lo..] {
-                let _ = tx.send(Err(EngineError {
-                    id: req.id,
-                    message: format!("generate batch failed: {e:#}"),
-                }));
+            for (_, req, reply) in &gens[lo..] {
+                reply.post(Err(EngineError::new(
+                    req.id,
+                    ErrorKind::Internal,
+                    format!("generate batch failed: {e:#}"),
+                )));
             }
             return Err(e);
         }
@@ -307,7 +488,8 @@ fn serve_generate_batch(
 
 /// One chunk (≤ the artifact batch dim) of greedy generation: packs the
 /// prompts into the fixed-shape logits artifact and decodes all rows in
-/// lock-step.
+/// lock-step, streaming each newly decoded token to streaming tickets as
+/// its step completes.
 fn serve_generate_chunk(
     shared: &EngineShared,
     chunk: &mut [GenJob],
@@ -343,14 +525,19 @@ fn serve_generate_chunk(
                 .map(|(i, _)| i as i32)
                 .unwrap();
             ctx.push(next);
+            chunk[row].2.push_delta(GenerateDelta {
+                id: chunk[row].1.id,
+                index: outputs[row].len(),
+                token: next,
+            });
             outputs[row].push(next);
         }
     }
     let compute_ms = sw.elapsed_ms();
-    for (i, (pend, req, tx)) in chunk.iter_mut().enumerate() {
+    for (i, (pend, req, reply)) in chunk.iter_mut().enumerate() {
         let queued_ms = pend.queued_ms();
         shared.metrics.record_request(queued_ms, compute_ms, batch_size);
-        let _ = tx.send(Ok(GenerateResponse {
+        reply.post(Ok(GenerateResponse {
             id: req.id,
             tokens: std::mem::take(&mut outputs[i]),
             queued_ms,
@@ -364,8 +551,9 @@ fn serve_generate_chunk(
 #[cfg(test)]
 mod tests {
     // Engine integration tests live in rust/tests/serving.rs (artifact-
-    // backed) and rust/tests/engine_concurrency.rs (host-backed, no
+    // backed), rust/tests/engine_concurrency.rs (host-backed, no
     // artifacts needed — including the cross-request pipeline equality
-    // tests); unit coverage of batching/metrics lives in their own
-    // modules.
+    // tests) and rust/tests/completion_queue.rs (ticket/queue semantics:
+    // cancellation, deadlines, streaming, shutdown); unit coverage of
+    // batching/metrics/completion primitives lives in their own modules.
 }

@@ -24,6 +24,16 @@ struct Inner {
     flops_full: u64,
     requests: u64,
     rejected: u64,
+    /// Tickets cancelled by the client and reaped at drain time (their
+    /// requests never reached the pipeline's plan stage).
+    cancelled: u64,
+    /// Requests dropped because their deadline expired before they ran.
+    expired: u64,
+    /// Requests rejected by submit-time validation (never queued).
+    invalid: u64,
+    /// Extra same-layer attention requests drained past `max_batch`
+    /// (the batcher's over-drain extension — deeper co-batches).
+    over_drained: u64,
     safety_masked: u64,
     // Cross-request attention-pipeline accounting (one record per
     // drained batch, not per request).
@@ -125,6 +135,42 @@ impl Metrics {
         self.inner.lock().unwrap().rejected += 1;
     }
 
+    /// A cancelled ticket's request was reaped before running.
+    pub fn record_cancelled(&self) {
+        self.inner.lock().unwrap().cancelled += 1;
+    }
+
+    /// A request was dropped because its deadline expired before it ran.
+    pub fn record_expired(&self) {
+        self.inner.lock().unwrap().expired += 1;
+    }
+
+    /// A request failed submit-time validation.
+    pub fn record_invalid(&self) {
+        self.inner.lock().unwrap().invalid += 1;
+    }
+
+    /// `extra` same-key requests were drained past `max_batch`.
+    pub fn record_over_drain(&self, extra: u64) {
+        self.inner.lock().unwrap().over_drained += extra;
+    }
+
+    pub fn cancelled(&self) -> u64 {
+        self.inner.lock().unwrap().cancelled
+    }
+
+    pub fn expired(&self) -> u64 {
+        self.inner.lock().unwrap().expired
+    }
+
+    pub fn invalid(&self) -> u64 {
+        self.inner.lock().unwrap().invalid
+    }
+
+    pub fn over_drained(&self) -> u64 {
+        self.inner.lock().unwrap().over_drained
+    }
+
     pub fn record_safety_mask(&self) {
         self.inner.lock().unwrap().safety_masked += 1;
     }
@@ -189,14 +235,18 @@ impl Metrics {
         };
         let mean_co_batch = g.mean_co_batch();
         format!(
-            "requests={} rejected={} safety_masked={}\n\
+            "requests={} rejected={} invalid={} cancelled={} expired={} safety_masked={}\n\
              queue  : {}\n\
              compute: {}\n\
              e2e    : {}\n\
-             attn   : batches={} mean_co_batch={:.2} probes={} probe_waves={} shard_locks={}\n\
+             attn   : batches={} mean_co_batch={:.2} probes={} probe_waves={} shard_locks={} \
+             over_drained={}\n\
              mean_batch={:.2} flops_saving={:.1}%",
             g.requests,
             g.rejected,
+            g.invalid,
+            g.cancelled,
+            g.expired,
             g.safety_masked,
             g.queued.summary(),
             g.compute.summary(),
@@ -206,6 +256,7 @@ impl Metrics {
             g.probes,
             g.probe_dispatches,
             g.shard_locks,
+            g.over_drained,
             mean_batch,
             saving * 1e2,
         )
@@ -249,6 +300,24 @@ mod tests {
         assert_eq!(m.flops_saving(), 0.0);
         assert_eq!(m.mean_rank(), 0.0);
         assert_eq!(m.mean_co_batch(), 0.0);
+    }
+
+    #[test]
+    fn lifecycle_counters() {
+        let m = Metrics::new();
+        m.record_cancelled();
+        m.record_cancelled();
+        m.record_expired();
+        m.record_invalid();
+        m.record_over_drain(3);
+        assert_eq!(m.cancelled(), 2);
+        assert_eq!(m.expired(), 1);
+        assert_eq!(m.invalid(), 1);
+        assert_eq!(m.over_drained(), 3);
+        let rep = m.report();
+        assert!(rep.contains("cancelled=2"), "{rep}");
+        assert!(rep.contains("expired=1"), "{rep}");
+        assert!(rep.contains("over_drained=3"), "{rep}");
     }
 
     #[test]

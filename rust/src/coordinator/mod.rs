@@ -3,8 +3,63 @@
 //! level DR-RL rank controller (featurize → policy → trust region →
 //! incremental SVD → device dispatch), the staged cross-request
 //! attention pipeline, and serving metrics.
+//!
+//! ## Ticket / completion-queue lifecycle
+//!
+//! Submission is asynchronous end to end. `submit_generate` /
+//! `submit_attention` (and their `_opts` variants taking
+//! [`SubmitOptions`]) enqueue the request and return a typed
+//! [`Ticket`] — the request id plus a shared completion slot.
+//! Attention requests are shape/layer-validated at submit time and
+//! rejected with [`ErrorKind::Invalid`] before queueing (generation
+//! requests have no shape constraints: prompts are windowed to the
+//! artifact's sequence length at decode). From there a client can:
+//!
+//! * [`Ticket::poll`] — non-blocking check for the result;
+//! * [`Ticket::wait`] / [`Ticket::wait_timeout`] — block like the old
+//!   receiver API did;
+//! * [`Ticket::cancel`] (or a [`CancelToken`]) — abandon stale work:
+//!   the queued request is dropped at drain time, *before* any
+//!   probe/SVD compute, and completes with [`ErrorKind::Cancelled`];
+//! * move the ticket into a [`CompletionQueue`] — one client thread
+//!   drains completions for any number of in-flight tickets, of both
+//!   request types, across every engine behind a [`Router`], in
+//!   arrival-of-completion order ([`CompletionQueue::next`] returns
+//!   `None` once all added tickets have resolved, so drain loops
+//!   terminate on their own).
+//!
+//! [`SubmitOptions::deadline`] bounds queueing: an expired request is
+//! dropped undrained with [`ErrorKind::DeadlineExceeded`], and
+//! deadlined requests are queue-prioritized earliest-deadline-first.
+//! [`SubmitOptions::blocking`] turns bounded-queue backpressure from
+//! fail-fast rejection into throttling. The generate path additionally
+//! offers `submit_generate_streaming`, whose [`StreamingTicket`]
+//! surfaces per-token [`GenerateDelta`]s as decode steps complete.
+//!
+//! Every submitted request resolves exactly once — success, typed
+//! [`EngineError`], or a `Shutdown`-kind error posted to all
+//! outstanding tickets when the engine stops — so neither `wait` nor a
+//! queue drain can hang.
+//!
+//! ### Migration from the receiver API
+//!
+//! `submit_*` used to hand back `(RequestId, mpsc::Receiver)`. The
+//! mapping is mechanical:
+//!
+//! | old                                  | new                          |
+//! |--------------------------------------|------------------------------|
+//! | `let (id, rx) = submit_*(…)?`        | `let ticket = submit_*(…)?`  |
+//! | `rx.recv()`                          | `ticket.wait()`              |
+//! | `rx.recv_timeout(d)` (`Err` = time)  | `ticket.wait_timeout(d)` (`None` = time) |
+//! | `rx.try_recv()`                      | `ticket.poll()`              |
+//! | one thread parked per receiver       | one [`CompletionQueue`] for all tickets |
+//!
+//! Submit-side errors are now typed [`EngineError`]s (kinds `Rejected`,
+//! `Invalid`, `Shutdown`, `DeadlineExceeded`) instead of the batcher's
+//! raw `SubmitError`.
 
 pub mod batcher;
+pub mod completion;
 pub mod engine;
 pub mod metrics;
 mod pipeline;
@@ -13,11 +68,14 @@ pub mod request;
 pub mod router;
 
 pub use batcher::{BatchPolicy, DynamicBatcher, SubmitError};
+pub use completion::{
+    CancelToken, Completion, CompletionPayload, CompletionQueue, StreamingTicket, Ticket,
+};
 pub use engine::{EngineConfig, ServingEngine};
 pub use metrics::Metrics;
 pub use rank_controller::{ControllerConfig, Decision, PolicySource, RankController};
 pub use request::{
-    AttentionRequest, AttentionResponse, EngineError, EngineResult, GenerateRequest,
-    GenerateResponse, RequestId, ResponseReceiver,
+    AttentionRequest, AttentionResponse, EngineError, EngineResult, ErrorKind,
+    GenerateDelta, GenerateRequest, GenerateResponse, RequestId, SubmitOptions,
 };
 pub use router::{RouteStrategy, Router};

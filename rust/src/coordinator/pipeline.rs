@@ -37,27 +37,27 @@
 //! single worker, or distinct layers, the result is exactly the
 //! sequential one — the equality tests pin this bit-for-bit.
 
-use super::engine::EngineShared;
+use super::completion::AttnReply;
+use super::engine::{reap_error, record_reap, EngineShared};
 use super::rank_controller::{
     full_rank_decision, probe_head, resolve_probes, DecideCtx, Decision, PolicySource,
     ProbeSource, StepPlan,
 };
-use super::request::{AttentionRequest, AttentionResponse, EngineError, EngineResult};
+use super::request::{AttentionRequest, AttentionResponse, EngineError, ErrorKind};
 use crate::attention::{merge_heads, project_heads, AttnInputs};
 use crate::linalg::{Mat, Svd};
 use crate::util::{global_pool, Stopwatch};
 use anyhow::Result;
 use std::collections::BTreeMap;
-use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::time::Instant;
 
-/// One queued attention request with its arrival envelope and reply
-/// channel, as regrouped by the worker from the drained batch.
+/// One queued attention request with its arrival envelope and completion
+/// slot, as regrouped by the worker from the drained batch.
 pub(crate) struct AttnJob {
     pub arrived: Instant,
     pub req: AttentionRequest,
-    pub tx: Sender<EngineResult<AttentionResponse>>,
+    pub reply: AttnReply,
 }
 
 /// Stage-1 output for one request: the layer input and projected heads.
@@ -110,18 +110,34 @@ fn plan_job(shared: &EngineShared, req: &AttentionRequest) -> Result<Planned> {
 }
 
 /// Serve one drained batch of attention requests through the staged
-/// pipeline. Every job receives exactly one reply.
+/// pipeline. Every job receives exactly one completion.
+///
+/// Jobs whose ticket was cancelled or whose deadline expired while
+/// queued are reaped here — before the plan stage — so they never cost
+/// a head projection, a probe, or a lock take.
 pub(crate) fn run_attention_batch(shared: &EngineShared, jobs: Vec<AttnJob>) {
+    let now = Instant::now();
+    let mut live = Vec::with_capacity(jobs.len());
+    for job in jobs {
+        match job.reply.reap_kind(now) {
+            Some(kind) => {
+                record_reap(&shared.metrics, kind);
+                job.reply.fulfill(Err(reap_error(job.req.id, kind)));
+            }
+            None => live.push(job),
+        }
+    }
+    let jobs = live;
     if jobs.is_empty() {
         return;
     }
     let sw = Stopwatch::start();
     let co_batched = jobs.len();
 
-    // Reply channels stay out of the per-stage state so no pool closure
-    // ever captures them (mpsc senders are not shareable by reference).
+    // Completion slots stay out of the per-stage state so no pool
+    // closure ever captures them; posting happens only at the end.
     let mut reqs = Vec::with_capacity(jobs.len());
-    let mut txs = Vec::with_capacity(jobs.len());
+    let mut replies = Vec::with_capacity(jobs.len());
     let mut states: Vec<JobState> = Vec::with_capacity(jobs.len());
     for job in jobs {
         states.push(JobState {
@@ -131,7 +147,7 @@ pub(crate) fn run_attention_batch(shared: &EngineShared, jobs: Vec<AttnJob>) {
             decisions: Vec::new(),
         });
         reqs.push(job.req);
-        txs.push(job.tx);
+        replies.push(job.reply);
     }
 
     // ---- Stage 1: plan (no locks) ----
@@ -365,10 +381,10 @@ pub(crate) fn run_attention_batch(shared: &EngineShared, jobs: Vec<AttnJob>) {
         .metrics
         .record_attention_batch(co_batched as u64, n_probes, probe_dispatches, shard_locks);
     for (j, state) in states.iter().enumerate() {
-        let tx = &txs[j];
+        let reply = &replies[j];
         if let Some(msg) = &state.error {
             crate::log_warn!("attention req {} failed: {msg}", reqs[j].id);
-            let _ = tx.send(Err(EngineError { id: reqs[j].id, message: msg.clone() }));
+            reply.fulfill(Err(EngineError::new(reqs[j].id, ErrorKind::Internal, msg.clone())));
             continue;
         }
         let plan = state.plan.as_ref().expect("successful jobs are planned");
@@ -391,7 +407,7 @@ pub(crate) fn run_attention_batch(shared: &EngineShared, jobs: Vec<AttnJob>) {
         shared.metrics.record_flops(spent, full);
         let merged = merge_heads(&head_outs, w);
         shared.metrics.record_request(state.queued_ms, compute_ms, co_batched);
-        let _ = tx.send(Ok(AttentionResponse {
+        reply.fulfill(Ok(AttentionResponse {
             id: reqs[j].id,
             y: merged.into_vec(),
             ranks,

@@ -1,31 +1,111 @@
 //! Request/response types for the serving engine.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Unique request id.
 pub type RequestId = u64;
 
-/// Why a queued request did not produce a result. Sent as an explicit
-/// error response instead of silently dropping the reply channel.
+/// Machine-readable classification of an [`EngineError`]. Clients branch
+/// on the kind (retry on `Rejected`, drop on `Cancelled`/`DeadlineExceeded`,
+/// fail over on `Shutdown`) and log the message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// The request failed submit-time validation (shape/layer checks) and
+    /// was never queued.
+    Invalid,
+    /// Backpressure: the bounded submit queue was full.
+    Rejected,
+    /// The ticket was cancelled before the request ran.
+    Cancelled,
+    /// The request's deadline expired before the request ran.
+    DeadlineExceeded,
+    /// The engine stopped before the request ran.
+    Shutdown,
+    /// Execution failed inside the worker.
+    Internal,
+}
+
+impl std::fmt::Display for ErrorKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            ErrorKind::Invalid => "invalid",
+            ErrorKind::Rejected => "rejected",
+            ErrorKind::Cancelled => "cancelled",
+            ErrorKind::DeadlineExceeded => "deadline exceeded",
+            ErrorKind::Shutdown => "shutdown",
+            ErrorKind::Internal => "internal",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Why a request did not produce a result. Posted as an explicit error
+/// completion instead of silently dropping the ticket.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct EngineError {
     pub id: RequestId,
+    pub kind: ErrorKind,
     pub message: String,
+}
+
+impl EngineError {
+    pub fn new(id: RequestId, kind: ErrorKind, message: impl Into<String>) -> Self {
+        EngineError { id, kind, message: message.into() }
+    }
+
+    pub(crate) fn cancelled(id: RequestId) -> Self {
+        Self::new(id, ErrorKind::Cancelled, "request cancelled before it ran")
+    }
+
+    pub(crate) fn deadline_exceeded(id: RequestId) -> Self {
+        Self::new(id, ErrorKind::DeadlineExceeded, "deadline expired before the request ran")
+    }
 }
 
 impl std::fmt::Display for EngineError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "request {}: {}", self.id, self.message)
+        write!(f, "request {} [{}]: {}", self.id, self.kind, self.message)
     }
 }
 
 impl std::error::Error for EngineError {}
 
-/// What a reply channel carries: the response or an explicit error.
+/// What a completion carries: the response or an explicit error.
 pub type EngineResult<T> = Result<T, EngineError>;
 
-/// Receiving half of a reply channel, as handed back by `submit_*`.
-pub type ResponseReceiver<T> = std::sync::mpsc::Receiver<EngineResult<T>>;
+/// Per-request submission options.
+///
+/// The default is the old behavior: no deadline, fail-fast backpressure.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SubmitOptions {
+    /// Drop the request with [`ErrorKind::DeadlineExceeded`] if it has not
+    /// *started executing* by this instant. Requests with deadlines are
+    /// also queue-prioritized earliest-deadline-first ahead of requests
+    /// without one.
+    pub deadline: Option<Instant>,
+    /// When the bounded queue is full, block until space frees up (or the
+    /// deadline passes) instead of failing fast with [`ErrorKind::Rejected`].
+    pub blocking: bool,
+}
+
+impl SubmitOptions {
+    /// Options with a deadline `timeout` from now.
+    pub fn deadline_in(timeout: Duration) -> Self {
+        SubmitOptions { deadline: Some(Instant::now() + timeout), ..Default::default() }
+    }
+
+    /// Set the absolute deadline.
+    pub fn with_deadline(mut self, deadline: Instant) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Block on a full queue instead of rejecting.
+    pub fn with_blocking(mut self) -> Self {
+        self.blocking = true;
+        self
+    }
+}
 
 /// A generation request (LM serving path).
 #[derive(Debug, Clone)]
@@ -59,6 +139,16 @@ pub struct GenerateResponse {
     pub batch_size: usize,
 }
 
+/// One incremental token produced by a streaming generation ticket,
+/// surfaced as soon as the decode step that produced it completes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GenerateDelta {
+    pub id: RequestId,
+    /// Position of this token in the generated suffix (0-based).
+    pub index: usize,
+    pub token: i32,
+}
+
 /// Completed attention segment.
 #[derive(Debug, Clone)]
 pub struct AttentionResponse {
@@ -79,15 +169,21 @@ pub struct AttentionResponse {
     pub batch_size: usize,
 }
 
-/// Internal envelope carrying arrival time.
+/// Internal envelope carrying arrival time and the optional deadline
+/// (the batcher orders deadlined items earliest-deadline-first).
 pub struct Pending<T> {
     pub inner: T,
     pub arrived: Instant,
+    pub deadline: Option<Instant>,
 }
 
 impl<T> Pending<T> {
     pub fn now(inner: T) -> Self {
-        Pending { inner, arrived: Instant::now() }
+        Pending { inner, arrived: Instant::now(), deadline: None }
+    }
+
+    pub fn with_deadline(inner: T, deadline: Option<Instant>) -> Self {
+        Pending { inner, arrived: Instant::now(), deadline }
     }
 
     pub fn queued_ms(&self) -> f64 {

@@ -1,21 +1,30 @@
 //! Request router: spreads load across engine replicas (leader side of
 //! the leader/worker topology). Strategies: round-robin, least-loaded
-//! (queue depth), and layer-affinity — attention segments for the same
-//! layer land on the same replica, so its cross-request pipeline can
-//! co-batch them into one probe wave and one decision replay instead of
-//! spreading the layer's stream state across replicas.
+//! (per-engine queue depth, re-read at every submit), and layer-affinity
+//! — attention segments for the same layer land on the same replica, so
+//! its cross-request pipeline can co-batch them into one probe wave and
+//! one decision replay instead of spreading the layer's stream state
+//! across replicas.
+//!
+//! The router hands back the same [`Ticket`]s the engines do, so a
+//! single [`super::CompletionQueue`] drains completions across *all*
+//! replicas: submit through the router, move every ticket into one
+//! queue, and consume in arrival-of-completion order regardless of
+//! which engine served what.
 
+use super::completion::Ticket;
 use super::engine::ServingEngine;
 use super::request::{
-    AttentionResponse, EngineResult, GenerateResponse, RequestId, ResponseReceiver,
+    AttentionResponse, EngineError, GenerateResponse, SubmitOptions,
 };
-use crate::coordinator::batcher::SubmitError;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Routing strategy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RouteStrategy {
     RoundRobin,
+    /// Every submit goes to the replica with the smallest queue depth at
+    /// that instant (ties break toward the lowest index).
     LeastLoaded,
     /// Attention requests route by `layer % n_engines` (maximizing
     /// same-layer co-batching in each engine's pipeline); generation
@@ -44,6 +53,12 @@ impl Router {
         &self.engines
     }
 
+    /// Total queued work across all replicas (the load signal the
+    /// `LeastLoaded` strategy balances per-engine).
+    pub fn queue_depth(&self) -> usize {
+        self.engines.iter().map(|e| e.queue_depth()).sum()
+    }
+
     fn round_robin(&self) -> &ServingEngine {
         let i = self.next.fetch_add(1, Ordering::Relaxed) % self.engines.len();
         &self.engines[i]
@@ -68,8 +83,17 @@ impl Router {
         &self,
         prompt: Vec<i32>,
         max_new: usize,
-    ) -> Result<(RequestId, ResponseReceiver<GenerateResponse>), SubmitError> {
+    ) -> Result<Ticket<GenerateResponse>, EngineError> {
         self.pick(None).submit_generate(prompt, max_new)
+    }
+
+    pub fn submit_generate_opts(
+        &self,
+        prompt: Vec<i32>,
+        max_new: usize,
+        opts: SubmitOptions,
+    ) -> Result<Ticket<GenerateResponse>, EngineError> {
+        self.pick(None).submit_generate_opts(prompt, max_new, opts)
     }
 
     pub fn submit_attention(
@@ -78,8 +102,19 @@ impl Router {
         n: usize,
         d_model: usize,
         layer: usize,
-    ) -> Result<(RequestId, ResponseReceiver<AttentionResponse>), SubmitError> {
+    ) -> Result<Ticket<AttentionResponse>, EngineError> {
         self.pick(Some(layer)).submit_attention(x, n, d_model, layer)
+    }
+
+    pub fn submit_attention_opts(
+        &self,
+        x: Vec<f64>,
+        n: usize,
+        d_model: usize,
+        layer: usize,
+        opts: SubmitOptions,
+    ) -> Result<Ticket<AttentionResponse>, EngineError> {
+        self.pick(Some(layer)).submit_attention_opts(x, n, d_model, layer, opts)
     }
 
     /// Aggregate metric report across replicas.

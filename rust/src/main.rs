@@ -180,6 +180,8 @@ fn cmd_serve(args: &Args) -> i32 {
                     max_batch: cfg.serving.max_batch,
                     max_wait: Duration::from_millis(cfg.serving.max_wait_ms),
                     capacity: cfg.serving.queue_capacity,
+                    // Same-layer backlogs co-batch deeper than max_batch.
+                    overdrain: cfg.serving.max_batch,
                 },
             },
         )
@@ -202,18 +204,29 @@ fn cmd_serve(args: &Args) -> i32 {
         "serving {n_requests} attention segments across {} engine(s)…",
         router.n_engines()
     );
+    // One client thread multiplexes every in-flight request through a
+    // completion queue instead of blocking on per-request receivers.
     let n = reg.manifest.kernel.seq_len;
-    let mut pending = Vec::new();
+    let cq = drrl::coordinator::CompletionQueue::new();
     for i in 0..n_requests {
         let x = Mat::randn(n, kd, 1.0, &mut rng);
         let layer = i % cfg.model.n_layers;
         match router.submit_attention(x.into_vec(), n, kd, layer) {
-            Ok((_, rx)) => pending.push(rx),
-            Err(e) => eprintln!("rejected: {e:?}"),
+            Ok(ticket) => {
+                cq.add(ticket);
+            }
+            Err(e) => eprintln!("rejected: {e}"),
         }
     }
-    for rx in pending {
-        let _ = rx.recv();
+    let mut failed = 0usize;
+    while let Some(completion) = cq.next() {
+        if let Some(e) = completion.err() {
+            eprintln!("request failed: {e}");
+            failed += 1;
+        }
+    }
+    if failed > 0 {
+        eprintln!("{failed} request(s) failed");
     }
     println!("{}", router.report());
     0

@@ -1,0 +1,380 @@
+//! Ticket / completion-queue semantics against the pure-Rust host
+//! backend (no artifacts needed).
+//!
+//! Pins the redesigned client surface: (a) cancelled-before-drain
+//! requests never reach the pipeline's plan stage (no probes, no
+//! requests served), (b) queued requests whose deadline expires get a
+//! typed `DeadlineExceeded` error without running, (c) draining a
+//! completion queue yields results bit-identical to blocking
+//! `Ticket::wait` (the pre-redesign receiver path), (d) shutdown posts
+//! errors to every outstanding ticket — direct or queued — with no
+//! hangs, (e) streaming tickets surface every token delta ahead of the
+//! final response, (f) malformed requests are rejected at submit time
+//! with `ErrorKind::Invalid`, and (g) the batcher's same-layer
+//! over-drain deepens co-batches past `max_batch`.
+
+use drrl::attention::MhsaWeights;
+use drrl::coordinator::{
+    AttentionResponse, BatchPolicy, CompletionQueue, ControllerConfig, EngineConfig,
+    ErrorKind, PolicySource, RouteStrategy, Router, ServingEngine, SubmitOptions,
+};
+use drrl::linalg::Mat;
+use drrl::runtime::ArtifactRegistry;
+use drrl::util::Pcg32;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const KERNEL_N: usize = 128;
+const HEAD_DIM: usize = 32;
+const N_HEADS: usize = 2;
+const D_MODEL: usize = HEAD_DIM * N_HEADS;
+const N_LAYERS: usize = 2;
+
+fn host_registry() -> Arc<ArtifactRegistry> {
+    Arc::new(ArtifactRegistry::open_host(KERNEL_N, HEAD_DIM))
+}
+
+fn layers(seed: u64) -> Vec<MhsaWeights> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..N_LAYERS).map(|_| MhsaWeights::init(D_MODEL, N_HEADS, &mut rng)).collect()
+}
+
+fn lm_params(reg: &ArtifactRegistry, seed: u64) -> Arc<Vec<f32>> {
+    let mut rng = Pcg32::seeded(seed);
+    let mut p = vec![0f32; reg.manifest.lm.param_count];
+    rng.fill_normal_f32(&mut p, 0.02);
+    Arc::new(p)
+}
+
+fn mk_engine(
+    reg: &Arc<ArtifactRegistry>,
+    n_workers: usize,
+    max_batch: usize,
+    max_wait_ms: u64,
+    overdrain: usize,
+) -> ServingEngine {
+    ServingEngine::start_with_config(
+        Arc::clone(reg),
+        lm_params(reg, 7),
+        layers(33),
+        ControllerConfig { segment_len: 2, ..Default::default() },
+        PolicySource::Fixed(32),
+        EngineConfig {
+            n_workers,
+            batch_policy: BatchPolicy {
+                max_batch,
+                max_wait: Duration::from_millis(max_wait_ms),
+                capacity: 4096,
+                overdrain,
+            },
+        },
+    )
+}
+
+fn attention_inputs(count: usize, seed: u64) -> Vec<(Vec<f64>, usize)> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..count)
+        .map(|i| (Mat::randn(KERNEL_N, D_MODEL, 1.0, &mut rng).into_vec(), i % N_LAYERS))
+        .collect()
+}
+
+/// Spin until `cond` holds (the engine's drain cadence is asynchronous).
+fn eventually(cond: impl Fn() -> bool, what: &str) {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+#[test]
+fn cancelled_before_drain_never_runs_pipeline_compute() {
+    let reg = host_registry();
+    // One worker, a batch bound far above the load and a 50 ms drain
+    // window: every request is still queued when it is cancelled.
+    let engine = mk_engine(&reg, 1, 64, 50, 0);
+    let inputs = attention_inputs(5, 11);
+    let mut tickets = Vec::new();
+    for (x, layer) in inputs {
+        let t = engine.submit_attention(x, KERNEL_N, D_MODEL, layer).expect("submit");
+        t.cancel();
+        tickets.push(t);
+    }
+    // Cancellation posts the error immediately — before the drain.
+    for t in tickets {
+        let err = t.wait().expect_err("cancelled ticket must error");
+        assert_eq!(err.kind, ErrorKind::Cancelled);
+    }
+    // The drain eventually reaps all five; none reach the plan stage.
+    eventually(|| engine.metrics.cancelled() == 5, "cancelled counter");
+    assert_eq!(engine.metrics.probes(), 0, "cancelled work must not be probed");
+    assert_eq!(engine.metrics.requests(), 0, "cancelled work must not be served");
+}
+
+#[test]
+fn expired_deadline_gets_deadline_exceeded_without_running() {
+    let reg = host_registry();
+    // The 100 ms drain window guarantees the 20 ms deadlines expire
+    // while the requests are still queued.
+    let engine = mk_engine(&reg, 1, 64, 100, 0);
+    let inputs = attention_inputs(4, 12);
+    let opts = SubmitOptions::deadline_in(Duration::from_millis(20));
+    let mut tickets = Vec::new();
+    for (x, layer) in inputs {
+        let t = engine
+            .submit_attention_opts(x, KERNEL_N, D_MODEL, layer, opts)
+            .expect("submit ahead of the deadline");
+        tickets.push(t);
+    }
+    for t in tickets {
+        let err = t.wait().expect_err("expired ticket must error");
+        assert_eq!(err.kind, ErrorKind::DeadlineExceeded);
+    }
+    assert_eq!(engine.metrics.expired(), 4);
+    assert_eq!(engine.metrics.probes(), 0, "expired work must not be probed");
+    assert_eq!(engine.metrics.requests(), 0, "expired work must not be served");
+}
+
+#[test]
+fn completion_queue_results_bit_identical_to_blocking_wait() {
+    let reg = host_registry();
+    let inputs = attention_inputs(8, 13);
+
+    // Blocking path: submit everything, wait ticket by ticket (the
+    // mechanical migration of the old receiver loop).
+    let waited: Vec<AttentionResponse> = {
+        let engine = mk_engine(&reg, 1, 4, 2, 0);
+        let tickets: Vec<_> = inputs
+            .iter()
+            .map(|(x, layer)| {
+                engine
+                    .submit_attention(x.clone(), KERNEL_N, D_MODEL, *layer)
+                    .expect("submit")
+            })
+            .collect();
+        tickets.into_iter().map(|t| t.wait().expect("ok")).collect()
+    };
+
+    // Completion-queue path on a fresh engine with identical state:
+    // drain in arrival-of-completion order, then restore submission
+    // order by request id.
+    let drained: Vec<AttentionResponse> = {
+        let engine = mk_engine(&reg, 1, 4, 2, 0);
+        let cq = CompletionQueue::new();
+        let ids: Vec<_> = inputs
+            .iter()
+            .map(|(x, layer)| {
+                let t = engine
+                    .submit_attention(x.clone(), KERNEL_N, D_MODEL, *layer)
+                    .expect("submit");
+                cq.add(t)
+            })
+            .collect();
+        let mut by_id = HashMap::new();
+        while let Some(completion) = cq.next() {
+            let resp = completion.into_attention().expect("attention").expect("ok");
+            by_id.insert(resp.id, resp);
+        }
+        ids.iter().map(|id| by_id.remove(id).expect("every id completed")).collect()
+    };
+
+    assert_eq!(waited.len(), drained.len());
+    for (i, (a, b)) in waited.iter().zip(&drained).enumerate() {
+        assert_eq!(a.ranks, b.ranks, "request {i}: ranks differ");
+        assert_eq!(a.flops_spent, b.flops_spent, "request {i}: flops_spent differ");
+        assert_eq!(a.flops_full, b.flops_full, "request {i}: flops_full differ");
+        assert_eq!(a.y.len(), b.y.len(), "request {i}: output length");
+        for (j, (x, y)) in a.y.iter().zip(b.y.iter()).enumerate() {
+            assert!(
+                x.to_bits() == y.to_bits(),
+                "request {i} element {j}: {x} vs {y} not bit-identical"
+            );
+        }
+    }
+}
+
+#[test]
+fn shutdown_posts_errors_to_every_outstanding_ticket() {
+    let reg = host_registry();
+    let engine = mk_engine(&reg, 4, 4, 1, 0);
+    let inputs = attention_inputs(12, 14);
+    let cq = CompletionQueue::new();
+    let mut direct = Vec::new();
+    for (i, (x, layer)) in inputs.into_iter().enumerate() {
+        let t = engine.submit_attention(x, KERNEL_N, D_MODEL, layer).expect("submit");
+        // Half the tickets multiplex through the queue, half are waited
+        // on directly — both must resolve after shutdown.
+        if i % 2 == 0 {
+            cq.add(t);
+        } else {
+            direct.push(t);
+        }
+    }
+    engine.shutdown();
+    for t in direct {
+        match t.wait_timeout(Duration::from_secs(60)) {
+            Some(Ok(_)) => {}
+            Some(Err(e)) => assert_eq!(e.kind, ErrorKind::Shutdown, "unexpected: {e}"),
+            None => panic!("direct ticket hung after shutdown"),
+        }
+    }
+    let mut queued = 0;
+    while let Some(completion) = cq.next_timeout(Duration::from_secs(60)) {
+        if let Some(e) = completion.err() {
+            assert_eq!(e.kind, ErrorKind::Shutdown, "unexpected: {e}");
+        }
+        queued += 1;
+    }
+    assert_eq!(queued, 6, "every queued ticket must complete (no leaks)");
+}
+
+#[test]
+fn streaming_ticket_delivers_every_token_delta() {
+    let reg = host_registry();
+    let engine = mk_engine(&reg, 2, 4, 1, 0);
+    let prompt: Vec<i32> = "stream me ".bytes().map(|b| b as i32).collect();
+    let ticket = engine
+        .submit_generate_streaming(prompt, 4, SubmitOptions::default())
+        .expect("submit");
+    let mut deltas = Vec::new();
+    while let Some(d) = ticket.next_delta() {
+        deltas.push(d);
+    }
+    let resp = ticket.finish().expect("generate ok");
+    assert_eq!(resp.tokens.len(), 4);
+    assert_eq!(deltas.len(), 4, "one delta per generated token");
+    for (i, d) in deltas.iter().enumerate() {
+        assert_eq!(d.index, i, "deltas arrive in decode order");
+        assert_eq!(d.token, resp.tokens[i], "delta {i} must match the final tokens");
+        assert_eq!(d.id, resp.id);
+    }
+}
+
+#[test]
+fn mixed_request_types_share_one_queue() {
+    let reg = host_registry();
+    let engine = mk_engine(&reg, 2, 4, 1, 0);
+    let cq = CompletionQueue::new();
+    for (x, layer) in attention_inputs(3, 15) {
+        cq.add(engine.submit_attention(x, KERNEL_N, D_MODEL, layer).expect("submit"));
+    }
+    for i in 0..2 {
+        let prompt: Vec<i32> = format!("mixed {i} ").bytes().map(|b| b as i32).collect();
+        cq.add(engine.submit_generate(prompt, 2).expect("submit"));
+    }
+    let (mut attn, mut gen) = (0, 0);
+    while let Some(completion) = cq.next_timeout(Duration::from_secs(300)) {
+        match completion {
+            drrl::coordinator::Completion::Attention(r) => {
+                r.expect("attention ok");
+                attn += 1;
+            }
+            drrl::coordinator::Completion::Generate(r) => {
+                r.expect("generate ok");
+                gen += 1;
+            }
+        }
+    }
+    assert_eq!((attn, gen), (3, 2));
+}
+
+#[test]
+fn invalid_requests_rejected_at_submit_time() {
+    let reg = host_registry();
+    let engine = mk_engine(&reg, 1, 4, 1, 0);
+    let x = vec![0.0; KERNEL_N * D_MODEL];
+    // Layer out of range.
+    let err = engine
+        .submit_attention(x.clone(), KERNEL_N, D_MODEL, N_LAYERS + 3)
+        .expect_err("bad layer");
+    assert_eq!(err.kind, ErrorKind::Invalid);
+    // Wrong input length.
+    let err = engine
+        .submit_attention(x[..x.len() - 1].to_vec(), KERNEL_N, D_MODEL, 0)
+        .expect_err("bad length");
+    assert_eq!(err.kind, ErrorKind::Invalid);
+    // Zero rows.
+    let err = engine.submit_attention(Vec::new(), 0, D_MODEL, 0).expect_err("n = 0");
+    assert_eq!(err.kind, ErrorKind::Invalid);
+    // Wrong d_model.
+    let err = engine
+        .submit_attention(x.clone(), KERNEL_N, D_MODEL + 1, 0)
+        .expect_err("bad d_model");
+    assert_eq!(err.kind, ErrorKind::Invalid);
+    assert_eq!(engine.metrics.invalid(), 4);
+    // A well-formed request on the same engine still serves.
+    let resp = engine
+        .submit_attention(x, KERNEL_N, D_MODEL, 0)
+        .expect("valid submit")
+        .wait()
+        .expect("ok");
+    assert_eq!(resp.y.len(), KERNEL_N * D_MODEL);
+}
+
+#[test]
+fn cancel_token_works_after_moving_ticket_into_queue() {
+    let reg = host_registry();
+    // Long drain window: the request is still queued when cancelled.
+    let engine = mk_engine(&reg, 1, 64, 200, 0);
+    let (x, layer) = attention_inputs(1, 16).pop().unwrap();
+    let cq = CompletionQueue::new();
+    let t = engine.submit_attention(x, KERNEL_N, D_MODEL, layer).expect("submit");
+    let token = t.cancel_token();
+    cq.add(t);
+    token.cancel();
+    let completion = cq.next().expect("cancelled completion");
+    assert_eq!(completion.err().expect("error").kind, ErrorKind::Cancelled);
+    assert!(cq.next().is_none(), "queue must terminate after the only ticket");
+}
+
+#[test]
+fn same_layer_overdrain_deepens_co_batches() {
+    let reg = host_registry();
+    // max_batch = 1 with over-drain 8: a same-layer backlog that piles
+    // up while the single worker is busy drains as one deep co-batch.
+    let engine = mk_engine(&reg, 1, 1, 1, 8);
+    // Pre-build the backlog so submission is pure queue pushes.
+    let mut rng = Pcg32::seeded(17);
+    let xs: Vec<Vec<f64>> =
+        (0..9).map(|_| Mat::randn(KERNEL_N, D_MODEL, 1.0, &mut rng).into_vec()).collect();
+    // Occupy the worker with a slow generation first (16 decode steps).
+    let prompt: Vec<i32> = "blocker ".bytes().map(|b| b as i32).collect();
+    let blocker = engine.submit_generate(prompt, 16).expect("submit blocker");
+    // Same-layer backlog queues behind it while the worker is busy.
+    let tickets: Vec<_> = xs
+        .into_iter()
+        .map(|x| engine.submit_attention(x, KERNEL_N, D_MODEL, 0).expect("submit"))
+        .collect();
+    blocker.wait().expect("blocker ok");
+    for t in tickets {
+        t.wait().expect("attention ok");
+    }
+    let m = &engine.metrics;
+    assert_eq!(m.requests(), 10);
+    assert!(
+        m.over_drained() > 0,
+        "same-layer backlog behind a busy worker must over-drain (batches {}, mean {})",
+        m.attention_batches(),
+        m.mean_co_batch()
+    );
+}
+
+#[test]
+fn router_aggregates_queue_depth_and_balances_least_loaded() {
+    let reg = host_registry();
+    let engines = vec![mk_engine(&reg, 1, 4, 1, 0), mk_engine(&reg, 1, 4, 1, 0)];
+    let router = Router::new(engines, RouteStrategy::LeastLoaded);
+    assert_eq!(router.queue_depth(), 0, "idle router reports empty queues");
+    let cq = CompletionQueue::new();
+    for (x, layer) in attention_inputs(8, 18) {
+        cq.add(router.submit_attention(x, KERNEL_N, D_MODEL, layer).expect("submit"));
+    }
+    let mut done = 0;
+    while let Some(completion) = cq.next_timeout(Duration::from_secs(300)) {
+        completion.into_attention().expect("attention").expect("ok");
+        done += 1;
+    }
+    assert_eq!(done, 8);
+    assert_eq!(router.queue_depth(), 0, "drained router reports empty queues");
+}

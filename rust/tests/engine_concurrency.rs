@@ -15,7 +15,7 @@
 
 use drrl::attention::{project_heads, AttnInputs, MhsaWeights};
 use drrl::coordinator::{
-    AttentionResponse, BatchPolicy, ControllerConfig, EngineConfig, PolicySource,
+    AttentionResponse, BatchPolicy, ControllerConfig, EngineConfig, ErrorKind, PolicySource,
     RankController, RouteStrategy, Router, ServingEngine,
 };
 use drrl::linalg::Mat;
@@ -66,6 +66,7 @@ fn mk_engine(reg: &Arc<ArtifactRegistry>, n_workers: usize, source: PolicySource
                 max_batch: 4,
                 max_wait: Duration::from_millis(1),
                 capacity: 4096,
+                overdrain: 0,
             },
         },
     )
@@ -112,33 +113,33 @@ fn mixed_traffic_from_concurrent_clients_all_respond() {
         let engine = Arc::clone(&engine);
         handles.push(std::thread::spawn(move || {
             let mut rng = Pcg32::seeded(1000 + c as u64);
-            let mut rxs_a = Vec::new();
-            let mut rxs_g = Vec::new();
+            let mut tickets_a = Vec::new();
+            let mut tickets_g = Vec::new();
             for i in 0..attn_per_client {
                 let x = Mat::randn(KERNEL_N, D_MODEL, 1.0, &mut rng).into_vec();
-                let (_, rx) = engine
+                let ticket = engine
                     .submit_attention(x, KERNEL_N, D_MODEL, i % N_LAYERS)
                     .expect("submit attention");
-                rxs_a.push(rx);
+                tickets_a.push(ticket);
             }
             for i in 0..gen_per_client {
                 let prompt: Vec<i32> =
                     format!("client {c} msg {i} ").bytes().map(|b| b as i32).collect();
-                let (_, rx) = engine.submit_generate(prompt, 2).expect("submit generate");
-                rxs_g.push(rx);
+                let ticket = engine.submit_generate(prompt, 2).expect("submit generate");
+                tickets_g.push(ticket);
             }
-            for rx in rxs_a {
-                let resp = rx
-                    .recv_timeout(Duration::from_secs(300))
+            for ticket in tickets_a {
+                let resp = ticket
+                    .wait_timeout(Duration::from_secs(300))
                     .expect("attention response")
                     .expect("attention ok");
                 assert_eq!(resp.y.len(), KERNEL_N * D_MODEL);
                 assert!(resp.y.iter().all(|v| v.is_finite()));
                 assert_eq!(resp.ranks.len(), N_HEADS);
             }
-            for rx in rxs_g {
-                let resp = rx
-                    .recv_timeout(Duration::from_secs(300))
+            for ticket in tickets_g {
+                let resp = ticket
+                    .wait_timeout(Duration::from_secs(300))
                     .expect("generate response")
                     .expect("generate ok");
                 assert_eq!(resp.tokens.len(), 2);
@@ -168,10 +169,10 @@ fn multiworker_results_bit_identical_to_single_worker() {
                 items
                     .into_iter()
                     .map(|(i, (x, layer))| {
-                        let (_, rx) = engine
+                        let ticket = engine
                             .submit_attention(x, KERNEL_N, D_MODEL, layer)
                             .expect("submit");
-                        (i, rx)
+                        (i, ticket)
                     })
                     .collect::<Vec<_>>()
             })
@@ -185,9 +186,9 @@ fn multiworker_results_bit_identical_to_single_worker() {
         let mut attn_results: Vec<Option<(Vec<f64>, Vec<usize>, u64, u64)>> =
             vec![None; attns.len()];
         for h in [h1, h2] {
-            for (i, rx) in h.join().expect("submitter") {
-                let r = rx
-                    .recv_timeout(Duration::from_secs(300))
+            for (i, ticket) in h.join().expect("submitter") {
+                let r = ticket
+                    .wait_timeout(Duration::from_secs(300))
                     .expect("response")
                     .expect("ok");
                 attn_results[i] = Some((r.y, r.ranks, r.flops_spent, r.flops_full));
@@ -196,8 +197,8 @@ fn multiworker_results_bit_identical_to_single_worker() {
         let gen_results: Vec<Vec<i32>> = gens
             .iter()
             .map(|p| {
-                let (_, rx) = engine.submit_generate(p.clone(), 3).expect("submit gen");
-                rx.recv_timeout(Duration::from_secs(300)).expect("response").expect("ok").tokens
+                let ticket = engine.submit_generate(p.clone(), 3).expect("submit gen");
+                ticket.wait_timeout(Duration::from_secs(300)).expect("response").expect("ok").tokens
             })
             .collect();
         (attn_results, gen_results)
@@ -227,10 +228,10 @@ fn shutdown_drains_without_deadlock_and_reports_errors() {
     let reg = host_registry();
     let engine = mk_engine(&reg, 4, PolicySource::Fixed(32));
     let attns = attention_inputs(12);
-    let mut rxs = Vec::new();
+    let mut tickets = Vec::new();
     for (x, layer) in attns {
-        if let Ok((_, rx)) = engine.submit_attention(x, KERNEL_N, D_MODEL, layer) {
-            rxs.push(rx);
+        if let Ok(ticket) = engine.submit_attention(x, KERNEL_N, D_MODEL, layer) {
+            tickets.push(ticket);
         }
     }
     // Prompt shutdown while most of the queue is still pending. Must not
@@ -238,17 +239,18 @@ fn shutdown_drains_without_deadlock_and_reports_errors() {
     engine.shutdown();
     let mut served = 0usize;
     let mut errored = 0usize;
-    for rx in rxs {
-        match rx.recv_timeout(Duration::from_secs(60)) {
-            Ok(Ok(resp)) => {
+    for ticket in tickets {
+        match ticket.wait_timeout(Duration::from_secs(60)) {
+            Some(Ok(resp)) => {
                 assert!(resp.y.iter().all(|v| v.is_finite()));
                 served += 1;
             }
-            Ok(Err(e)) => {
+            Some(Err(e)) => {
+                assert_eq!(e.kind, ErrorKind::Shutdown, "unexpected error: {e}");
                 assert!(e.message.contains("stopped"), "unexpected error: {e}");
                 errored += 1;
             }
-            Err(_) => panic!("receiver hung after shutdown"),
+            None => panic!("ticket hung after shutdown"),
         }
     }
     assert_eq!(served + errored, 12, "every request must resolve");
@@ -276,6 +278,7 @@ fn mk_pipeline_engine(
                 max_batch,
                 max_wait: Duration::from_millis(max_wait_ms),
                 capacity: 4096,
+                overdrain: 0,
             },
         },
     )
@@ -290,30 +293,29 @@ fn serve_all(
     inputs: &[(Vec<f64>, usize)],
     one_at_a_time: bool,
 ) -> Vec<AttentionResponse> {
-    let recv = |rx: drrl::coordinator::ResponseReceiver<AttentionResponse>| {
-        rx.recv_timeout(Duration::from_secs(300)).expect("response").expect("ok")
+    let recv = |ticket: drrl::coordinator::Ticket<AttentionResponse>| {
+        ticket.wait_timeout(Duration::from_secs(300)).expect("response").expect("ok")
     };
     if one_at_a_time {
         inputs
             .iter()
             .map(|(x, layer)| {
-                let (_, rx) = engine
+                let ticket = engine
                     .submit_attention(x.clone(), KERNEL_N, D_MODEL, *layer)
                     .expect("submit");
-                recv(rx)
+                recv(ticket)
             })
             .collect()
     } else {
-        let rxs: Vec<_> = inputs
+        let tickets: Vec<_> = inputs
             .iter()
             .map(|(x, layer)| {
                 engine
                     .submit_attention(x.clone(), KERNEL_N, D_MODEL, *layer)
                     .expect("submit")
-                    .1
             })
             .collect();
-        rxs.into_iter().map(recv).collect()
+        tickets.into_iter().map(recv).collect()
     }
 }
 
@@ -409,13 +411,13 @@ fn layer_affinity_router_pins_layers_to_engines() {
     ];
     let router = Router::new(engines, RouteStrategy::LayerAffinity);
     let attns = attention_inputs(8); // layers alternate 0/1
-    let mut rxs = Vec::new();
+    let mut tickets = Vec::new();
     for (x, layer) in attns {
-        let (_, rx) = router.submit_attention(x, KERNEL_N, D_MODEL, layer).expect("submit");
-        rxs.push(rx);
+        let ticket = router.submit_attention(x, KERNEL_N, D_MODEL, layer).expect("submit");
+        tickets.push(ticket);
     }
-    for rx in rxs {
-        rx.recv_timeout(Duration::from_secs(300)).expect("response").expect("ok");
+    for ticket in tickets {
+        ticket.wait_timeout(Duration::from_secs(300)).expect("response").expect("ok");
     }
     // layer % 2 routing: each replica served exactly its layer's share.
     assert_eq!(router.engines()[0].metrics.requests(), 4);

@@ -34,7 +34,12 @@ fn mk_engine(reg: &Arc<ArtifactRegistry>, source: PolicySource, n_layers: usize)
         layers,
         ControllerConfig { segment_len: 4, ..Default::default() },
         source,
-        BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2), capacity: 64 },
+        BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+            capacity: 64,
+            overdrain: 0,
+        },
     )
 }
 
@@ -45,14 +50,15 @@ fn attention_requests_round_trip() {
     let n = reg.manifest.kernel.seq_len;
     let kd = reg.manifest.kernel.head_dim;
     let mut rng = Pcg32::seeded(1);
-    let mut rxs = Vec::new();
+    let mut tickets = Vec::new();
     for i in 0..6 {
         let x = Mat::randn(n, kd, 1.0, &mut rng);
-        let (_, rx) = engine.submit_attention(x.into_vec(), n, kd, i % 2).unwrap();
-        rxs.push(rx);
+        let ticket = engine.submit_attention(x.into_vec(), n, kd, i % 2).unwrap();
+        tickets.push(ticket);
     }
-    for rx in rxs {
-        let resp = rx.recv_timeout(Duration::from_secs(300)).expect("response").expect("ok");
+    for ticket in tickets {
+        let resp =
+            ticket.wait_timeout(Duration::from_secs(300)).expect("response").expect("ok");
         assert_eq!(resp.y.len(), n * kd);
         assert!(resp.y.iter().all(|v| v.is_finite()));
         assert!(!resp.ranks.is_empty());
@@ -68,14 +74,15 @@ fn attention_requests_round_trip() {
 fn generate_requests_batched() {
     let Some(reg) = registry() else { return };
     let engine = mk_engine(&reg, PolicySource::Hlo, 1);
-    let mut rxs = Vec::new();
+    let mut tickets = Vec::new();
     for i in 0..3 {
         let prompt: Vec<i32> = format!("hello {i} ").bytes().map(|b| b as i32).collect();
-        let (_, rx) = engine.submit_generate(prompt, 3).unwrap();
-        rxs.push(rx);
+        let ticket = engine.submit_generate(prompt, 3).unwrap();
+        tickets.push(ticket);
     }
-    for rx in rxs {
-        let resp = rx.recv_timeout(Duration::from_secs(300)).expect("response").expect("ok");
+    for ticket in tickets {
+        let resp =
+            ticket.wait_timeout(Duration::from_secs(300)).expect("response").expect("ok");
         assert_eq!(resp.tokens.len(), 3);
         assert!(resp.tokens.iter().all(|&t| (0..256).contains(&t)));
     }
@@ -89,8 +96,8 @@ fn full_rank_policy_reports_no_saving() {
     let kd = reg.manifest.kernel.head_dim;
     let mut rng = Pcg32::seeded(2);
     let x = Mat::randn(n, kd, 1.0, &mut rng);
-    let (_, rx) = engine.submit_attention(x.into_vec(), n, kd, 0).unwrap();
-    let resp = rx.recv_timeout(Duration::from_secs(300)).unwrap().unwrap();
+    let ticket = engine.submit_attention(x.into_vec(), n, kd, 0).unwrap();
+    let resp = ticket.wait_timeout(Duration::from_secs(300)).unwrap().unwrap();
     assert_eq!(resp.flops_spent, resp.flops_full);
     assert!(engine.metrics.flops_saving().abs() < 1e-9);
 }
@@ -103,8 +110,8 @@ fn fixed_policy_selects_configured_rank() {
     let kd = reg.manifest.kernel.head_dim;
     let mut rng = Pcg32::seeded(3);
     let x = Mat::randn(n, kd, 1.0, &mut rng);
-    let (_, rx) = engine.submit_attention(x.into_vec(), n, kd, 0).unwrap();
-    let resp = rx.recv_timeout(Duration::from_secs(300)).unwrap().unwrap();
+    let ticket = engine.submit_attention(x.into_vec(), n, kd, 0).unwrap();
+    let resp = ticket.wait_timeout(Duration::from_secs(300)).unwrap().unwrap();
     // Trust region may push off 32 only if masked; with a fresh stream
     // the self-transition is always admissible.
     assert_eq!(resp.ranks[0], 32);
@@ -121,14 +128,14 @@ fn router_spreads_load() {
     let n = reg.manifest.kernel.seq_len;
     let kd = reg.manifest.kernel.head_dim;
     let mut rng = Pcg32::seeded(4);
-    let mut rxs = Vec::new();
+    let mut tickets = Vec::new();
     for _ in 0..4 {
         let x = Mat::randn(n, kd, 1.0, &mut rng);
-        let (_, rx) = router.submit_attention(x.into_vec(), n, kd, 0).unwrap();
-        rxs.push(rx);
+        let ticket = router.submit_attention(x.into_vec(), n, kd, 0).unwrap();
+        tickets.push(ticket);
     }
-    for rx in rxs {
-        rx.recv_timeout(Duration::from_secs(300)).unwrap().unwrap();
+    for ticket in tickets {
+        ticket.wait_timeout(Duration::from_secs(300)).unwrap().unwrap();
     }
     // Round-robin: both engines saw work.
     assert_eq!(router.engines()[0].metrics.requests(), 2);
@@ -151,24 +158,29 @@ fn backpressure_rejects_over_capacity() {
         ControllerConfig::default(),
         PolicySource::Fixed(16),
         // Tiny queue + long wait so submissions outpace the worker.
-        BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(50), capacity: 2 },
+        BatchPolicy {
+            max_batch: 1,
+            max_wait: Duration::from_millis(50),
+            capacity: 2,
+            overdrain: 0,
+        },
     );
     let mut accepted = 0;
     let mut rejected = 0;
-    let mut rxs = Vec::new();
+    let mut tickets = Vec::new();
     for _ in 0..20 {
         let x = Mat::randn(n, kd, 1.0, &mut rng);
         match engine.submit_attention(x.into_vec(), n, kd, 0) {
-            Ok((_, rx)) => {
+            Ok(ticket) => {
                 accepted += 1;
-                rxs.push(rx);
+                tickets.push(ticket);
             }
             Err(_) => rejected += 1,
         }
     }
     assert!(rejected > 0, "expected backpressure (accepted {accepted})");
-    for rx in rxs {
-        let _ = rx.recv_timeout(Duration::from_secs(300));
+    for ticket in tickets {
+        let _ = ticket.wait_timeout(Duration::from_secs(300));
     }
     assert_eq!(engine.metrics.rejected(), rejected as u64);
 }
