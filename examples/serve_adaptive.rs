@@ -4,13 +4,14 @@
 //! FLOPs ledger reported at the end. An A/B comparison against the
 //! full-rank and fixed-rank policies runs in the same process.
 //!
-//! Works without artifacts: when `make artifacts` has not run, the demo
-//! falls back to the pure-Rust host backend (and swaps the AOT `Hlo`
-//! policy for the spectral `AdaptiveEnergy` policy, which needs no
-//! artifact weights).
+//! Works without artifacts: `--backend host` (or the automatic fallback
+//! when `make artifacts` has not run) serves everything — including the
+//! transformer `Hlo` policy — through the pure-Rust host backend, and
+//! `--backend sim[:a100|apple-m|cpu]` additionally projects every kernel
+//! onto a roofline device model and reports the projected latency.
 //!
 //! Run: `cargo run --release --example serve_adaptive -- [--requests 64]
-//!       [--engines 1] [--workers 4]`
+//!       [--engines 1] [--workers 4] [--backend auto|host|sim[:profile]]`
 
 use drrl::attention::MhsaWeights;
 use drrl::coordinator::{
@@ -18,7 +19,7 @@ use drrl::coordinator::{
     RouteStrategy, Router, ServingEngine,
 };
 use drrl::linalg::Mat;
-use drrl::runtime::ArtifactRegistry;
+use drrl::runtime::{ArtifactRegistry, Op};
 use drrl::util::{Args, Pcg32, Stopwatch};
 use std::sync::Arc;
 use std::time::Duration;
@@ -130,19 +131,11 @@ fn main() -> anyhow::Result<()> {
     let n_workers = args.usize_or("workers", 2);
     let n_layers = args.usize_or("n-layers", 4);
 
-    // Prefer real artifacts; fall back to the host backend so the demo
-    // runs offline. The AOT transformer policy only exists as an
-    // artifact, so host mode uses the spectral-energy policy instead.
-    let (reg, adaptive_policy) = match ArtifactRegistry::open_default() {
-        Ok(reg) => (Arc::new(reg), PolicySource::Hlo),
-        Err(e) => {
-            eprintln!("artifacts unavailable ({e:#}); using the pure-Rust host backend");
-            (
-                Arc::new(ArtifactRegistry::open_host(128, 32)),
-                PolicySource::AdaptiveEnergy(0.9),
-            )
-        }
-    };
+    // Typed-backend selection: artifacts (auto/pjrt), pure-Rust host, or
+    // the roofline-simulating backend. Every backend runs the complete
+    // op set, so the transformer `Hlo` policy serves offline too.
+    let reg = Arc::new(ArtifactRegistry::open_spec(args.get_or("backend", "auto"))?);
+    let adaptive_policy = PolicySource::Hlo;
     let d = reg.manifest.kernel.head_dim;
     let mut rng = Pcg32::seeded(9);
     let layers: Vec<MhsaWeights> =
@@ -152,15 +145,15 @@ fn main() -> anyhow::Result<()> {
     let params = Arc::new(params);
 
     println!(
-        "== adaptive serving demo: {n_requests} requests, kernel n={} d={} ==",
-        reg.manifest.kernel.seq_len, d
+        "== adaptive serving demo: {n_requests} requests, backend {}, kernel n={} d={} ==",
+        reg.backend_name(),
+        reg.manifest.kernel.seq_len,
+        d
     );
-    // Warm all artifacts so compile time doesn't skew the A/B numbers.
-    for name in reg.manifest.artifact_files.keys() {
-        if name.starts_with("lowrank_attn") || name == "full_attn" || name == "policy_net" {
-            reg.device.warm(name)?;
-        }
-    }
+    // Warm exactly the kernels the demo exercises so compile time
+    // doesn't skew the A/B numbers (and untouched LM graphs don't
+    // inflate startup on the PJRT backend).
+    reg.warm_ops(&[Op::FullAttention, Op::LowRankAttention, Op::PolicyLogits])?;
 
     run_policy(&reg, &layers, &params, adaptive_policy, n_requests, n_engines, n_workers, 1)?;
     run_policy(
@@ -183,6 +176,11 @@ fn main() -> anyhow::Result<()> {
         n_workers,
         3,
     )?;
+    if let Some(ms) = reg.projected_ms() {
+        println!(
+            "\nsim backend: projected device kernel latency {ms:.2} ms total across all runs"
+        );
+    }
     println!("\nOK — DR-RL policy served with adaptive ranks; compare the flops_saving lines.");
     Ok(())
 }

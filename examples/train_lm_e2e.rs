@@ -18,8 +18,11 @@ fn main() -> anyhow::Result<()> {
     let corpus_bytes = args.usize_or("corpus-bytes", 600_000);
     let seed = args.u64_or("seed", 42);
 
-    let reg = ArtifactRegistry::open_default()
-        .map_err(|e| anyhow::anyhow!("{e:#}\nrun `make artifacts` first"))?;
+    // The typed host backend implements the fused-AdamW train step, so
+    // the driver runs offline too (smaller synthetic LM shape);
+    // `--backend` picks the execution backend explicitly.
+    let reg = ArtifactRegistry::open_spec(args.get_or("backend", "auto"))?;
+    println!("backend: {}", reg.backend_name());
     let lm = reg.manifest.lm.clone();
     println!(
         "== DR-RL end-to-end LM training ==\n\

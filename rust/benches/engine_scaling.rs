@@ -302,5 +302,11 @@ fn main() -> anyhow::Result<()> {
     println!("cached params : {cached_ms:>8.3} ms/call");
     println!("re-parsed     : {uncached_ms:>8.3} ms/call");
     println!("parse-cache speedup: {:.2}×", uncached_ms / cached_ms);
+
+    // Typed per-op execute counters (the stats()-BTreeMap replacement):
+    // the same counters the engines folded into their Metrics::report().
+    println!("\n── backend op counters ──");
+    println!("attention registry : {}", reg.ops().summary());
+    println!("mux registry       : {}", mux_reg.ops().summary());
     Ok(())
 }

@@ -9,7 +9,7 @@ use drrl::coordinator::{BatchPolicy, DynamicBatcher};
 use drrl::linalg::{
     batched_partial_svd, extend, matmul, spectral_norm_fast, top_k_svd, Mat,
 };
-use drrl::runtime::{ArtifactRegistry, HostTensor, Manifest};
+use drrl::runtime::{ArtifactRegistry, Manifest};
 use drrl::util::Pcg32;
 use std::path::Path;
 use std::time::Duration;
@@ -84,28 +84,19 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(batcher.next_batch());
     });
 
-    // ---- device dispatch (if artifacts built) ----
+    // ---- backend dispatch (if artifacts built) ----
     if Manifest::default_dir().join("manifest.json").exists() {
         let reg = ArtifactRegistry::open_default()?;
-        reg.device.warm("power_iter")?;
-        reg.device.warm("full_attn")?;
-        reg.device.warm("lowrank_attn_r32")?;
+        reg.warm_all()?;
         let n = reg.manifest.kernel.seq_len;
-        let d = reg.manifest.kernel.head_dim;
-        let m: Vec<f32> = (0..n * n).map(|i| (i % 7) as f32 * 0.1).collect();
-        let v0: Vec<f32> = (0..n).map(|i| 1.0 + (i % 3) as f32).collect();
+        let m = drrl::linalg::Mat::from_vec(
+            n,
+            n,
+            (0..n * n).map(|i| (i % 7) as f64 * 0.1).collect(),
+        );
+        let v0: Vec<f64> = (0..n).map(|i| 1.0 + (i % 3) as f64).collect();
         b.case("device power_iter dispatch", || {
-            std::hint::black_box(
-                reg.device
-                    .execute(
-                        "power_iter",
-                        vec![
-                            HostTensor::f32(m.clone(), &[n as i64, n as i64]),
-                            HostTensor::f32(v0.clone(), &[n as i64]),
-                        ],
-                    )
-                    .unwrap(),
-            );
+            std::hint::black_box(reg.power_iter_sigma(&m, &v0).unwrap());
         });
         b.case("device full_attn n=128", || {
             std::hint::black_box(reg.full_attention(&inp.q, &inp.k, &inp.v).unwrap());

@@ -349,6 +349,10 @@ struct CqState {
 pub(crate) struct CqShared {
     state: Mutex<CqState>,
     cv: Condvar,
+    /// Wakers of in-progress [`CompletionQueue::select`] calls watching
+    /// this queue (weak: a waker dies with its select call and is pruned
+    /// on the next wake pass).
+    watchers: Mutex<Vec<std::sync::Weak<SelectWaker>>>,
 }
 
 impl CqShared {
@@ -358,6 +362,53 @@ impl CqShared {
         g.outstanding = g.outstanding.saturating_sub(1);
         drop(g);
         self.cv.notify_all();
+        self.wake_watchers();
+    }
+
+    fn add_watcher(&self, w: std::sync::Weak<SelectWaker>) {
+        let mut g = self.watchers.lock().unwrap();
+        // Prune here as well as on wake: a queue that never receives a
+        // push must not accumulate one dead watcher per past select call.
+        g.retain(|w| w.strong_count() > 0);
+        g.push(w);
+    }
+
+    fn wake_watchers(&self) {
+        let mut g = self.watchers.lock().unwrap();
+        g.retain(|w| match w.upgrade() {
+            Some(waker) => {
+                waker.wake();
+                true
+            }
+            None => false,
+        });
+    }
+}
+
+/// Epoch-counting waker shared between one `select` call and every queue
+/// it watches. The epoch is read *before* the scan and waited on after:
+/// any push in between bumps it, so the wakeup cannot be missed.
+#[derive(Default)]
+struct SelectWaker {
+    epoch: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl SelectWaker {
+    fn epoch(&self) -> u64 {
+        *self.epoch.lock().unwrap()
+    }
+
+    fn wake(&self) {
+        *self.epoch.lock().unwrap() += 1;
+        self.cv.notify_all();
+    }
+
+    fn wait_past(&self, seen: u64) {
+        let mut g = self.epoch.lock().unwrap();
+        while *g == seen {
+            g = self.cv.wait(g).unwrap();
+        }
     }
 }
 
@@ -385,8 +436,52 @@ impl CompletionQueue {
             shared: Arc::new(CqShared {
                 state: Mutex::new(CqState { ready: VecDeque::new(), outstanding: 0 }),
                 cv: Condvar::new(),
+                watchers: Mutex::new(Vec::new()),
             }),
         }
+    }
+
+    /// Block until *any* of `queues` yields a completion; returns the
+    /// queue's index alongside it. Returns `None` once every queue is
+    /// fully drained (no ready completions, nothing outstanding) — the
+    /// multi-queue analogue of [`CompletionQueue::next`], letting one
+    /// client thread multiplex e.g. several routers' queues without
+    /// dedicating a thread per queue.
+    pub fn select(queues: &[&CompletionQueue]) -> Option<(usize, Completion)> {
+        let waker = Arc::new(SelectWaker::default());
+        for q in queues {
+            q.shared.add_watcher(Arc::downgrade(&waker));
+        }
+        loop {
+            // Read the epoch before scanning: a completion pushed after
+            // the scan started bumps it and `wait_past` returns at once.
+            let seen = waker.epoch();
+            let mut live = false;
+            for (i, q) in queues.iter().enumerate() {
+                // One lock take per queue: popping and reading the
+                // outstanding count must be atomic, or a push landing
+                // between the two reads could make a queue look drained
+                // while a completion sits in it.
+                let (ready, outstanding) = q.pop_with_outstanding();
+                if let Some(c) = ready {
+                    return Some((i, c));
+                }
+                if outstanding > 0 {
+                    live = true;
+                }
+            }
+            if !live {
+                return None;
+            }
+            waker.wait_past(seen);
+        }
+    }
+
+    /// Atomically pop the next ready completion (if any) and read the
+    /// outstanding-ticket count.
+    fn pop_with_outstanding(&self) -> (Option<Completion>, usize) {
+        let mut g = self.shared.state.lock().unwrap();
+        (g.ready.pop_front(), g.outstanding)
     }
 
     /// Move a ticket into the queue; its completion (including one that
@@ -407,6 +502,7 @@ impl CompletionQueue {
             g.outstanding = g.outstanding.saturating_sub(1);
             drop(g);
             self.shared.cv.notify_all();
+            self.shared.wake_watchers();
         }
         id
     }
@@ -754,6 +850,48 @@ mod tests {
         assert!(cq.next_timeout(Duration::from_millis(10)).is_none());
         slot.fulfill(attn_ok(13));
         assert!(cq.next_timeout(Duration::from_millis(100)).is_some());
+    }
+
+    #[test]
+    fn select_returns_ready_queue_and_terminates_when_all_drained() {
+        let a = CompletionQueue::new();
+        let b = CompletionQueue::new();
+        let slot_a = Slot::<AttentionResponse>::new(30, None);
+        let slot_b = Slot::<AttentionResponse>::new(31, None);
+        a.add(Ticket::new(Arc::clone(&slot_a)));
+        b.add(Ticket::new(Arc::clone(&slot_b)));
+        // b completes first: select must surface queue index 1.
+        slot_b.fulfill(attn_ok(31));
+        let (qi, c) = CompletionQueue::select(&[&a, &b]).expect("one ready");
+        assert_eq!((qi, c.id()), (1, 31));
+        slot_a.fulfill(attn_ok(30));
+        let (qi, c) = CompletionQueue::select(&[&a, &b]).expect("second ready");
+        assert_eq!((qi, c.id()), (0, 30));
+        assert!(CompletionQueue::select(&[&a, &b]).is_none(), "drained select terminates");
+    }
+
+    #[test]
+    fn select_blocks_until_a_late_completion_arrives() {
+        let a = CompletionQueue::new();
+        let b = CompletionQueue::new();
+        let slot = Slot::<AttentionResponse>::new(40, None);
+        b.add(Ticket::new(Arc::clone(&slot)));
+        let poster = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            slot.fulfill(attn_ok(40));
+        });
+        let (qi, c) = CompletionQueue::select(&[&a, &b]).expect("late completion");
+        assert_eq!((qi, c.id()), (1, 40));
+        poster.join().unwrap();
+        assert!(CompletionQueue::select(&[&a, &b]).is_none());
+    }
+
+    #[test]
+    fn select_on_empty_queues_returns_none_immediately() {
+        let a = CompletionQueue::new();
+        let b = CompletionQueue::new();
+        assert!(CompletionQueue::select(&[&a, &b]).is_none());
+        assert!(CompletionQueue::select(&[]).is_none());
     }
 
     #[test]

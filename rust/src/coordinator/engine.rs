@@ -152,6 +152,8 @@ impl ServingEngine {
     ) -> ServingEngine {
         let batcher = Arc::new(DynamicBatcher::with_key(config.batch_policy, work_key));
         let metrics = Arc::new(Metrics::new());
+        // Fold the backend's typed per-op counters into Metrics::report().
+        metrics.attach_backend_ops(reg.ops());
         let source = Arc::new(source);
         let shards: Vec<Mutex<RankController>> = (0..layers.len().max(1))
             .map(|_| {

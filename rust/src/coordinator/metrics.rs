@@ -3,14 +3,20 @@
 //! safety-check counters — everything EXPERIMENTS.md reports for the
 //! serving examples.
 
+use crate::runtime::OpCounters;
 use crate::util::LatencyStats;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Aggregated metrics, cheap to share behind a Mutex (all updates are
 /// off the device-thread critical path).
 #[derive(Default)]
 pub struct Metrics {
     inner: Mutex<Inner>,
+    /// Backend per-op execute counters (shared with the backend itself);
+    /// attached by the engine at start so `report()` folds typed op
+    /// counts and LM-cache hits in — replacing the old per-artifact
+    /// `stats()` BTreeMap plumbing.
+    backend_ops: Mutex<Option<Arc<OpCounters>>>,
 }
 
 #[derive(Default)]
@@ -57,6 +63,17 @@ impl Inner {
 impl Metrics {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Attach the serving backend's shared op counters so they surface
+    /// in [`Metrics::report`].
+    pub fn attach_backend_ops(&self, ops: Arc<OpCounters>) {
+        *self.backend_ops.lock().unwrap() = Some(ops);
+    }
+
+    /// The attached backend op counters, if any.
+    pub fn backend_ops(&self) -> Option<Arc<OpCounters>> {
+        self.backend_ops.lock().unwrap().clone()
     }
 
     pub fn record_request(&self, queued_ms: f64, compute_ms: f64, batch_size: usize) {
@@ -234,7 +251,7 @@ impl Metrics {
             1.0 - g.flops_spent as f64 / g.flops_full as f64
         };
         let mean_co_batch = g.mean_co_batch();
-        format!(
+        let mut out = format!(
             "requests={} rejected={} invalid={} cancelled={} expired={} safety_masked={}\n\
              queue  : {}\n\
              compute: {}\n\
@@ -259,7 +276,14 @@ impl Metrics {
             g.over_drained,
             mean_batch,
             saving * 1e2,
-        )
+        );
+        drop(g);
+        if let Some(ops) = self.backend_ops() {
+            // Counters live on the backend, which engines may share — so
+            // this line is backend-wide, not per-engine.
+            out.push_str(&format!("\nbackend ops (backend-wide): {}", ops.summary()));
+        }
+        out
     }
 }
 
@@ -318,6 +342,24 @@ mod tests {
         assert!(rep.contains("cancelled=2"), "{rep}");
         assert!(rep.contains("expired=1"), "{rep}");
         assert!(rep.contains("over_drained=3"), "{rep}");
+    }
+
+    #[test]
+    fn report_folds_in_attached_backend_ops() {
+        use crate::runtime::Op;
+        let m = Metrics::new();
+        assert!(!m.report().contains("backend ops"), "no ops line before attach");
+        let ops = Arc::new(OpCounters::default());
+        ops.record(Op::LowRankAttention);
+        ops.record_lm_cache(true);
+        m.attach_backend_ops(Arc::clone(&ops));
+        let rep = m.report();
+        assert!(rep.contains("backend ops (backend-wide): "), "{rep}");
+        assert!(rep.contains("lowrank_attention=1"), "{rep}");
+        assert!(rep.contains("lm_cache=1/0"), "{rep}");
+        // The counters stay shared: later backend activity shows up.
+        ops.record(Op::LowRankAttention);
+        assert!(m.report().contains("lowrank_attention=2"));
     }
 
     #[test]

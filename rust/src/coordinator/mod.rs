@@ -26,7 +26,9 @@
 //!   request types, across every engine behind a [`Router`], in
 //!   arrival-of-completion order ([`CompletionQueue::next`] returns
 //!   `None` once all added tickets have resolved, so drain loops
-//!   terminate on their own).
+//!   terminate on their own). [`CompletionQueue::select`] extends this
+//!   across *queues*: one thread waits on several completion queues at
+//!   once (e.g. two routers' queues) and is told which queue fired.
 //!
 //! [`SubmitOptions::deadline`] bounds queueing: an expired request is
 //! dropped undrained with [`ErrorKind::DeadlineExceeded`], and

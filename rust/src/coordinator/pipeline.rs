@@ -208,6 +208,9 @@ pub(crate) fn run_attention_batch(shared: &EngineShared, jobs: Vec<AttnJob>) {
         .iter()
         .max()
         .expect("non-empty rank grid");
+    // Bucket rounding lives in ONE place (KernelShape::rank_bucket, via
+    // the registry) — probe planning must agree with the apply wave's
+    // bucket or the masked factor apply would see a short spectrum.
     let bucket_max = shared.reg.rank_bucket(r_max);
     // Per-work refresh step indices; the global task list concatenates
     // them in work order, so the wave's results split back by length.

@@ -1,6 +1,8 @@
 //! Segment-level rank controller — the serving-time DR-RL loop (§4.3,
 //! §4.5.2): featurize → policy → trust-region safety mask → incremental
-//! SVD → dispatch the masked factor-attention kernel to the device.
+//! SVD → dispatch the masked factor-attention op to the engine's typed
+//! backend (host, PJRT device, or hardware simulator) through the
+//! `ArtifactRegistry` adapter.
 //!
 //! One controller instance manages every (layer, head) stream of an
 //! engine; per-stream state (previous rank, incremental factor cache)

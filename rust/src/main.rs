@@ -11,6 +11,10 @@
 //! Example:
 //!   drrl train --steps 200 --corpus wiki103-sim --out bench_out/lm.bin
 //!   drrl serve --requests 64 --engines 2 --policy hlo
+//!   drrl serve --backend sim:a100 --policy hlo   # roofline-projected latency
+//!
+//! `serve` takes `--backend auto|host|sim[:a100|apple-m|cpu]|pjrt` to pick
+//! the typed execution backend (every backend implements the full op set).
 
 use drrl::coordinator::{BatchPolicy, ControllerConfig, PolicySource, RouteStrategy, Router};
 use drrl::data::{Corpus, CorpusProfile};
@@ -68,13 +72,17 @@ fn cmd_train(args: &Args) -> i32 {
     let steps = args.usize_or("steps", 200);
     let corpus_bytes = args.usize_or("corpus-bytes", 400_000);
     let seed = args.u64_or("seed", 42);
-    let reg = match ArtifactRegistry::open_default() {
+    // The host backend implements the fused-AdamW train step, so
+    // training no longer requires artifacts (`--backend` picks the
+    // execution backend; `auto` prefers artifacts, else host).
+    let reg = match ArtifactRegistry::open_spec(args.get_or("backend", "auto")) {
         Ok(r) => r,
         Err(e) => {
-            eprintln!("artifacts unavailable ({e:#}); run `make artifacts`");
+            eprintln!("backend unavailable: {e:#}");
             return 1;
         }
     };
+    println!("backend: {}", reg.backend_name());
     let corpus = Corpus::build(profile_from(args), corpus_bytes, seed);
     let mut tr = LmTrainer::new(&reg, seed);
     println!("training {} steps on {}…", steps, corpus.profile.name());
@@ -132,16 +140,17 @@ fn cmd_generate(args: &Args) -> i32 {
 
 fn cmd_serve(args: &Args) -> i32 {
     let cfg = ExperimentConfig::resolve(args).expect("config");
-    // Prefer real artifacts; fall back to the host backend (where the AOT
-    // transformer policy is unavailable — the spectral-energy policy
-    // substitutes for `hlo`).
-    let (reg, host_mode) = match ArtifactRegistry::open_default() {
-        Ok(r) => (Arc::new(r), false),
+    // `--backend auto|host|sim[:a100|apple-m|cpu]|pjrt` picks the typed
+    // execution backend. Every backend is complete (the host backend
+    // runs the transformer policy too), so `--policy hlo` works offline.
+    let reg = match ArtifactRegistry::open_spec(args.get_or("backend", "auto")) {
+        Ok(r) => Arc::new(r),
         Err(e) => {
-            eprintln!("artifacts unavailable ({e:#}); using the pure-Rust host backend");
-            (Arc::new(ArtifactRegistry::open_host(128, 32)), true)
+            eprintln!("backend unavailable: {e:#}");
+            return 1;
         }
     };
+    println!("backend: {}", reg.backend_name());
     let n_requests = args.usize_or("requests", 32);
     let n_workers = args.usize_or("workers", 2);
     let policy = match args.get_or("policy", "hlo") {
@@ -149,7 +158,6 @@ fn cmd_serve(args: &Args) -> i32 {
         "adaptive" => PolicySource::AdaptiveEnergy(0.9),
         "random" => PolicySource::Random,
         "full" => PolicySource::FullRank,
-        _ if host_mode => PolicySource::AdaptiveEnergy(0.9),
         _ => PolicySource::Hlo,
     };
 
@@ -229,6 +237,9 @@ fn cmd_serve(args: &Args) -> i32 {
         eprintln!("{failed} request(s) failed");
     }
     println!("{}", router.report());
+    if let Some(ms) = reg.projected_ms() {
+        println!("sim backend: projected device kernel latency {ms:.2} ms total");
+    }
     0
 }
 

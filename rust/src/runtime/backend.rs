@@ -1,0 +1,346 @@
+//! The typed, pluggable execution backend API.
+//!
+//! A [`Backend`] executes the runtime's kernel operations through *typed*
+//! methods — no artifact-name strings cross this boundary. Callers go
+//! through the [`super::ArtifactRegistry`] adapter, which owns shape and
+//! rank-bucket validation; backends receive pre-validated inputs and are
+//! free to marshal them however their execution substrate requires
+//! (in-process kernels, a PJRT device thread, a hardware cost model).
+//!
+//! Three implementations ship with the crate:
+//!
+//! * [`super::HostBackend`] — pure-Rust kernels, complete (every [`Op`]
+//!   including the transformer policy and the fused-AdamW train step).
+//! * `PjrtBackend` (feature `pjrt`) — the compiled HLO artifacts on a
+//!   dedicated device thread.
+//! * [`super::SimBackend`] — host kernels plus a roofline latency model
+//!   ([`crate::sim::DeviceProfile`]), so latency-aware experiments run
+//!   without a device.
+//!
+//! Support is *declared*, not discovered by panicking: an op a backend
+//! cannot run is absent from [`Capabilities`] and its method returns a
+//! typed "unsupported" error (the default body). The conformance suite
+//! (`rust/tests/backend_conformance.rs`) holds every compiled-in backend
+//! to this contract.
+
+use crate::linalg::{Mat, Svd};
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// The typed kernel operations a backend may implement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Op {
+    /// Dense causal attention for one head.
+    FullAttention,
+    /// Masked factor apply Y = U·diag(s⊙mask)·(Vᵀ·V_val) at a rank bucket.
+    LowRankAttention,
+    /// Power-iteration spectral-norm estimate.
+    PowerIterSigma,
+    /// Transformer-policy logits over the rank grid.
+    PolicyLogits,
+    /// Decoder-LM inference logits for one (B, L) batch.
+    LmLogits,
+    /// Decoder-LM evaluation loss for one batch.
+    LmEvalLoss,
+    /// One fused AdamW train step (forward + backward + update).
+    LmTrainStep,
+}
+
+/// Number of distinct ops (array sizing for [`OpCounters`]).
+const N_OPS: usize = 7;
+
+impl Op {
+    /// Every operation, in a stable order.
+    pub const ALL: [Op; N_OPS] = [
+        Op::FullAttention,
+        Op::LowRankAttention,
+        Op::PowerIterSigma,
+        Op::PolicyLogits,
+        Op::LmLogits,
+        Op::LmEvalLoss,
+        Op::LmTrainStep,
+    ];
+
+    /// Stable snake_case name (metrics keys, error messages).
+    pub fn name(self) -> &'static str {
+        match self {
+            Op::FullAttention => "full_attention",
+            Op::LowRankAttention => "lowrank_attention",
+            Op::PowerIterSigma => "power_iter_sigma",
+            Op::PolicyLogits => "policy_logits",
+            Op::LmLogits => "lm_logits",
+            Op::LmEvalLoss => "lm_eval_loss",
+            Op::LmTrainStep => "lm_train_step",
+        }
+    }
+
+    fn index(self) -> usize {
+        Op::ALL.iter().position(|&o| o == self).expect("op in ALL")
+    }
+}
+
+impl std::fmt::Display for Op {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// What a backend can do, reported up front so callers never have to
+/// probe by catching panics or errors.
+#[derive(Debug, Clone)]
+pub struct Capabilities {
+    /// Operations the backend executes.
+    pub supported: Vec<Op>,
+    /// The backend models execution latency (see
+    /// [`Backend::projected_ms`]).
+    pub models_latency: bool,
+}
+
+impl Capabilities {
+    /// Every op, no latency model (the complete compute backends).
+    pub fn complete() -> Capabilities {
+        Capabilities { supported: Op::ALL.to_vec(), models_latency: false }
+    }
+
+    pub fn supports(&self, op: Op) -> bool {
+        self.supported.contains(&op)
+    }
+}
+
+/// The typed error every backend returns for an op outside its
+/// [`Capabilities`].
+pub fn unsupported(backend: &str, op: Op) -> anyhow::Error {
+    anyhow::anyhow!(
+        "op '{op}' is not supported by the '{backend}' backend \
+         (check Backend::capabilities() before dispatching)"
+    )
+}
+
+/// Per-op execute counters plus the host LM parse-cache counters —
+/// the typed replacement for the old per-artifact `stats()` BTreeMap.
+/// Shared (`Arc`) between a backend and [`crate::coordinator::Metrics`],
+/// which folds the counts into its `report()`.
+#[derive(Default)]
+pub struct OpCounters {
+    counts: [AtomicU64; N_OPS],
+    lm_cache_hits: AtomicU64,
+    lm_cache_misses: AtomicU64,
+}
+
+impl OpCounters {
+    pub fn record(&self, op: Op) {
+        self.counts[op.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn get(&self, op: Op) -> u64 {
+        self.counts[op.index()].load(Ordering::Relaxed)
+    }
+
+    /// Total executes across every op.
+    pub fn total(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn record_lm_cache(&self, hit: bool) {
+        if hit {
+            self.lm_cache_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.lm_cache_misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn lm_cache_hits(&self) -> u64 {
+        self.lm_cache_hits.load(Ordering::Relaxed)
+    }
+
+    pub fn lm_cache_misses(&self) -> u64 {
+        self.lm_cache_misses.load(Ordering::Relaxed)
+    }
+
+    /// One-line summary of the non-zero counters, e.g.
+    /// `lowrank_attention=42 lm_logits=7 lm_cache=6/1`.
+    pub fn summary(&self) -> String {
+        let mut parts: Vec<String> = Op::ALL
+            .iter()
+            .filter(|&&op| self.get(op) > 0)
+            .map(|&op| format!("{op}={}", self.get(op)))
+            .collect();
+        let (hits, misses) = (self.lm_cache_hits(), self.lm_cache_misses());
+        if hits + misses > 0 {
+            parts.push(format!("lm_cache={hits}/{misses}"));
+        }
+        if parts.is_empty() {
+            "none".to_string()
+        } else {
+            parts.join(" ")
+        }
+    }
+}
+
+/// Cumulative projected-latency ledger for backends that model hardware
+/// timing (the [`super::SimBackend`]).
+#[derive(Default)]
+pub struct LatencyLedger {
+    total_ms: Mutex<f64>,
+}
+
+impl LatencyLedger {
+    pub fn add_ms(&self, ms: f64) {
+        *self.total_ms.lock().unwrap() += ms;
+    }
+
+    pub fn total_ms(&self) -> f64 {
+        *self.total_ms.lock().unwrap()
+    }
+}
+
+/// A typed, pluggable execution backend.
+///
+/// Methods default to a typed "unsupported" error; implementations
+/// override exactly the set their [`Capabilities`] declare. The
+/// [`super::ArtifactRegistry`] adapter validates shapes and rank
+/// buckets against the manifest before dispatching; backends are also
+/// usable directly (the conformance suite does), so they keep their own
+/// cheap guards on sizes they would otherwise index out of bounds with —
+/// a deliberate second line of defense, not the primary validation
+/// surface.
+#[allow(unused_variables)]
+pub trait Backend: Send + Sync {
+    /// Stable backend name (`host`, `pjrt`, `sim`).
+    fn name(&self) -> &'static str;
+
+    /// What this backend can execute.
+    fn capabilities(&self) -> Capabilities;
+
+    /// Shared per-op execute counters.
+    fn ops(&self) -> Arc<OpCounters>;
+
+    /// Prepare an op ahead of first use (compile for PJRT, no-op on the
+    /// host). Unsupported ops error.
+    fn warm(&self, op: Op) -> Result<()> {
+        if self.capabilities().supports(op) {
+            Ok(())
+        } else {
+            Err(unsupported(self.name(), op))
+        }
+    }
+
+    /// Dense causal attention: q, k, v are n×d.
+    fn full_attention(&self, q: &Mat, k: &Mat, v: &Mat) -> Result<Mat> {
+        Err(unsupported(self.name(), Op::FullAttention))
+    }
+
+    /// Masked factor apply at `bucket` columns of `svd` with the first
+    /// `rank` factors live: Y = U·diag(s⊙mask)·(Vᵀ·V_val).
+    fn lowrank_attention(&self, svd: &Svd, bucket: usize, rank: usize, v_val: &Mat) -> Result<Mat> {
+        Err(unsupported(self.name(), Op::LowRankAttention))
+    }
+
+    /// Spectral-norm estimate of `m` from start vector `v0`.
+    fn power_iter_sigma(&self, m: &Mat, v0: &[f64]) -> Result<f64> {
+        Err(unsupported(self.name(), Op::PowerIterSigma))
+    }
+
+    /// Transformer-policy logits for one state. `weights` is the flat
+    /// parameter vector in the `policy_net` layout.
+    fn policy_logits(&self, weights: &[f32], state: &[f64]) -> Result<Vec<f64>> {
+        Err(unsupported(self.name(), Op::PolicyLogits))
+    }
+
+    /// LM inference logits, (B·L·V) flattened.
+    fn lm_logits(&self, params: &[f32], tokens: &[i32]) -> Result<Vec<f32>> {
+        Err(unsupported(self.name(), Op::LmLogits))
+    }
+
+    /// LM evaluation loss on one batch.
+    fn lm_eval_loss(&self, params: &[f32], tokens: &[i32], targets: &[i32]) -> Result<f64> {
+        Err(unsupported(self.name(), Op::LmEvalLoss))
+    }
+
+    /// One fused AdamW train step; updates params and moments in place
+    /// and returns the batch loss.
+    fn lm_train_step(
+        &self,
+        params: &mut Vec<f32>,
+        adam_m: &mut Vec<f32>,
+        adam_v: &mut Vec<f32>,
+        step: f32,
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<f64> {
+        Err(unsupported(self.name(), Op::LmTrainStep))
+    }
+
+    /// Cumulative *projected* execution latency in milliseconds, for
+    /// backends whose [`Capabilities::models_latency`] is true.
+    fn projected_ms(&self) -> Option<f64> {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Inert(Arc<OpCounters>);
+
+    impl Backend for Inert {
+        fn name(&self) -> &'static str {
+            "inert"
+        }
+
+        fn capabilities(&self) -> Capabilities {
+            Capabilities { supported: vec![], models_latency: false }
+        }
+
+        fn ops(&self) -> Arc<OpCounters> {
+            Arc::clone(&self.0)
+        }
+    }
+
+    #[test]
+    fn default_methods_report_unsupported_instead_of_panicking() {
+        let be = Inert(Arc::new(OpCounters::default()));
+        let m = Mat::zeros(2, 2);
+        let err = be.full_attention(&m, &m, &m).unwrap_err();
+        assert!(format!("{err:#}").contains("full_attention"), "{err:#}");
+        assert!(format!("{err:#}").contains("inert"));
+        for op in Op::ALL {
+            assert!(!be.capabilities().supports(op));
+            assert!(be.warm(op).is_err());
+        }
+        assert!(be.projected_ms().is_none());
+    }
+
+    #[test]
+    fn op_counters_record_and_summarize() {
+        let c = OpCounters::default();
+        c.record(Op::LowRankAttention);
+        c.record(Op::LowRankAttention);
+        c.record(Op::LmLogits);
+        c.record_lm_cache(true);
+        c.record_lm_cache(false);
+        assert_eq!(c.get(Op::LowRankAttention), 2);
+        assert_eq!(c.get(Op::FullAttention), 0);
+        assert_eq!(c.total(), 3);
+        let s = c.summary();
+        assert!(s.contains("lowrank_attention=2"), "{s}");
+        assert!(s.contains("lm_cache=1/1"), "{s}");
+        assert!(!s.contains("full_attention"), "{s}");
+    }
+
+    #[test]
+    fn empty_counters_summarize_as_none() {
+        assert_eq!(OpCounters::default().summary(), "none");
+    }
+
+    #[test]
+    fn capabilities_complete_covers_all_ops() {
+        let caps = Capabilities::complete();
+        for op in Op::ALL {
+            assert!(caps.supports(op));
+        }
+        assert!(!caps.models_latency);
+    }
+}

@@ -1,319 +1,337 @@
-//! Device dispatch layer.
+//! PJRT device backend (feature `pjrt`).
 //!
-//! Two backends behind one cheap `DeviceHandle` (Clone + Send + Sync):
+//! The compiled HLO artifacts execute on a dedicated device thread that
+//! is the sole owner of the PJRT client, executables and `Literal`s
+//! (none of which are `Send`) — the [`PjrtBackend`] marshals each typed
+//! [`Backend`] op into `HostTensor`s, issues a synchronous execute RPC
+//! over an mpsc channel and unmarshals the reply, mirroring vLLM's
+//! single device-worker pattern. Artifact-name strings exist only here:
+//! callers everywhere else in the crate speak the typed trait.
 //!
-//! * **PJRT** (feature `pjrt`): the compiled HLO artifacts execute on a
-//!   dedicated device thread that is the sole owner of the PJRT client,
-//!   executables and `Literal`s (none of which are `Send`) — callers
-//!   issue synchronous `execute` RPCs over an mpsc channel, mirroring
-//!   vLLM's single device-worker pattern.
-//! * **Host** (default): the pure-Rust [`HostBackend`] interprets the
-//!   artifact entry points with the crate's own kernels. It is
-//!   `Send + Sync` and runs on the calling thread, so concurrent engine
-//!   workers execute kernels genuinely in parallel.
-//!
-//! The offline build ships without the `xla` bindings crate, so the
-//! `pjrt` feature is off by default and everything — tests, examples,
-//! the serving engine — runs against the host backend.
+//! The offline build ships a stub `xla` crate (vendor/xla) whose client
+//! constructor fails at runtime, so `--features pjrt` compile-checks the
+//! whole backend while execution still requires real bindings.
 
-use super::host::HostBackend;
+#![cfg(feature = "pjrt")]
+
+use super::backend::{Backend, Capabilities, Op, OpCounters};
 use super::manifest::Manifest;
 use super::tensor::HostTensor;
-use anyhow::Result;
+use crate::linalg::{Mat, Svd};
+use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
 
-/// Cloneable, Send + Sync handle to a backend.
-#[derive(Clone)]
-pub struct DeviceHandle {
-    inner: Inner,
+enum Cmd {
+    Execute {
+        artifact: String,
+        inputs: Vec<HostTensor>,
+        reply: Sender<Result<Vec<HostTensor>>>,
+    },
+    Warm { artifact: String, reply: Sender<Result<()>> },
 }
 
-#[derive(Clone)]
-enum Inner {
-    Host(Arc<HostBackend>),
-    #[cfg(feature = "pjrt")]
-    Pjrt(std::sync::mpsc::Sender<pjrt::Cmd>),
+/// Typed backend over the PJRT device thread.
+pub struct PjrtBackend {
+    manifest: Manifest,
+    tx: Mutex<Sender<Cmd>>,
+    ops: Arc<OpCounters>,
 }
 
-impl DeviceHandle {
-    /// Spawn a backend serving artifacts from `dir`. With the `pjrt`
-    /// feature this compiles and runs the HLO artifacts on a device
-    /// thread; otherwise the manifest's shapes drive the host backend.
-    pub fn spawn(dir: &std::path::Path) -> Result<DeviceHandle> {
-        let manifest = Manifest::load(dir)?;
-        Self::spawn_backend(manifest)
-    }
-
-    #[cfg(feature = "pjrt")]
-    fn spawn_backend(manifest: Manifest) -> Result<DeviceHandle> {
-        pjrt::spawn(manifest)
-    }
-
-    #[cfg(not(feature = "pjrt"))]
-    fn spawn_backend(manifest: Manifest) -> Result<DeviceHandle> {
-        Ok(Self::host(manifest))
-    }
-
-    /// Host backend over an in-memory manifest (no files needed).
-    pub fn host(manifest: Manifest) -> DeviceHandle {
-        DeviceHandle { inner: Inner::Host(Arc::new(HostBackend::new(manifest))) }
-    }
-
-    /// Global handle over the default artifact dir (lazy).
-    pub fn global() -> Result<&'static DeviceHandle> {
-        static HANDLE: OnceLock<std::result::Result<DeviceHandle, String>> = OnceLock::new();
-        static INIT: Mutex<()> = Mutex::new(());
-        let _g = INIT.lock().unwrap();
-        let r = HANDLE.get_or_init(|| {
-            DeviceHandle::spawn(&Manifest::default_dir()).map_err(|e| format!("{e:#}"))
-        });
-        r.as_ref().map_err(|e| anyhow::anyhow!("device init failed: {e}"))
-    }
-
-    /// Synchronous execute.
-    pub fn execute(&self, artifact: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
-        match &self.inner {
-            Inner::Host(h) => h.execute(artifact, &inputs),
-            #[cfg(feature = "pjrt")]
-            Inner::Pjrt(tx) => pjrt::execute(tx, artifact, inputs),
-        }
-    }
-
-    /// Compile (PJRT) or validate (host) an artifact ahead of first use.
-    pub fn warm(&self, artifact: &str) -> Result<()> {
-        match &self.inner {
-            Inner::Host(h) => h.warm(artifact),
-            #[cfg(feature = "pjrt")]
-            Inner::Pjrt(tx) => pjrt::warm(tx, artifact),
-        }
-    }
-
-    /// Per-artifact execute counts.
-    pub fn stats(&self) -> Result<BTreeMap<String, u64>> {
-        match &self.inner {
-            Inner::Host(h) => Ok(h.stats()),
-            #[cfg(feature = "pjrt")]
-            Inner::Pjrt(tx) => pjrt::stats(tx),
-        }
-    }
-}
-
-/// The PJRT device thread. Requires the external `xla` bindings crate;
-/// the module only compiles with `--features pjrt`.
-#[cfg(feature = "pjrt")]
-mod pjrt {
-    use super::*;
-    use anyhow::{anyhow, Context};
-    use std::sync::mpsc::{channel, Sender};
-
-    pub(super) enum Cmd {
-        Execute {
-            artifact: String,
-            inputs: Vec<HostTensor>,
-            reply: Sender<Result<Vec<HostTensor>>>,
-        },
-        Warm { artifact: String, reply: Sender<Result<()>> },
-        Stats { reply: Sender<BTreeMap<String, u64>> },
-    }
-
-    pub(super) fn spawn(manifest: Manifest) -> Result<DeviceHandle> {
+impl PjrtBackend {
+    /// Spawn the device thread serving the manifest's artifacts.
+    pub fn spawn(manifest: Manifest) -> Result<PjrtBackend> {
         let (tx, rx) = channel::<Cmd>();
+        let thread_manifest = manifest.clone();
         std::thread::Builder::new()
             .name("drrl-device".into())
-            .spawn(move || device_main(manifest, rx))
+            .spawn(move || device_main(thread_manifest, rx))
             .context("spawning device thread")?;
-        Ok(DeviceHandle { inner: Inner::Pjrt(tx) })
+        Ok(PjrtBackend {
+            manifest,
+            tx: Mutex::new(tx),
+            ops: Arc::new(OpCounters::default()),
+        })
     }
 
-    pub(super) fn execute(
-        tx: &Sender<Cmd>,
-        artifact: &str,
-        inputs: Vec<HostTensor>,
-    ) -> Result<Vec<HostTensor>> {
+    fn execute(&self, artifact: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
         let (reply, rx) = channel();
-        tx.send(Cmd::Execute { artifact: artifact.to_string(), inputs, reply })
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Cmd::Execute { artifact: artifact.to_string(), inputs, reply })
             .map_err(|_| anyhow!("device thread gone"))?;
         rx.recv().map_err(|_| anyhow!("device thread dropped reply"))?
     }
 
-    pub(super) fn warm(tx: &Sender<Cmd>, artifact: &str) -> Result<()> {
+    fn warm_artifact(&self, artifact: &str) -> Result<()> {
         let (reply, rx) = channel();
-        tx.send(Cmd::Warm { artifact: artifact.to_string(), reply })
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Cmd::Warm { artifact: artifact.to_string(), reply })
             .map_err(|_| anyhow!("device thread gone"))?;
         rx.recv().map_err(|_| anyhow!("device thread dropped reply"))?
     }
+}
 
-    pub(super) fn stats(tx: &Sender<Cmd>) -> Result<BTreeMap<String, u64>> {
-        let (reply, rx) = channel();
-        tx.send(Cmd::Stats { reply }).map_err(|_| anyhow!("device thread gone"))?;
-        rx.recv().map_err(|_| anyhow!("device thread dropped reply"))
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
     }
 
-    struct LoadedExe {
-        exe: xla::PjRtLoadedExecutable,
-        calls: u64,
+    /// Derived from the manifest: an op is supported iff every artifact
+    /// it dispatches to was built (serving-only artifact dirs may omit
+    /// e.g. the train-step graph — `warm_all` must skip those, not
+    /// abort).
+    fn capabilities(&self) -> Capabilities {
+        let has = |n: &str| self.manifest.artifact_files.contains_key(n);
+        let buckets = &self.manifest.kernel.rank_buckets;
+        let mut supported = Vec::new();
+        for op in Op::ALL {
+            let present = match op {
+                Op::FullAttention => has("full_attn"),
+                Op::LowRankAttention => {
+                    !buckets.is_empty()
+                        && buckets.iter().all(|b| has(&format!("lowrank_attn_r{b}")))
+                }
+                Op::PowerIterSigma => has("power_iter"),
+                Op::PolicyLogits => has("policy_net"),
+                Op::LmLogits => has("lm_logits"),
+                Op::LmEvalLoss => has("lm_eval_loss"),
+                Op::LmTrainStep => has("lm_train_step"),
+            };
+            if present {
+                supported.push(op);
+            }
+        }
+        Capabilities { supported, models_latency: false }
     }
 
-    fn device_main(manifest: Manifest, rx: std::sync::mpsc::Receiver<Cmd>) {
-        let client = match xla::PjRtClient::cpu() {
-            Ok(c) => c,
-            Err(e) => {
-                eprintln!("FATAL: PJRT CPU client: {e}");
-                // Drain commands with errors so callers fail fast.
-                while let Ok(cmd) = rx.recv() {
-                    match cmd {
-                        Cmd::Execute { reply, .. } => {
-                            let _ = reply.send(Err(anyhow!("PJRT client unavailable")));
-                        }
-                        Cmd::Warm { reply, .. } => {
-                            let _ = reply.send(Err(anyhow!("PJRT client unavailable")));
-                        }
-                        Cmd::Stats { reply } => {
-                            let _ = reply.send(BTreeMap::new());
-                        }
+    fn ops(&self) -> Arc<OpCounters> {
+        Arc::clone(&self.ops)
+    }
+
+    /// Compile the op's artifact(s) ahead of first use.
+    fn warm(&self, op: Op) -> Result<()> {
+        match op {
+            Op::FullAttention => self.warm_artifact("full_attn"),
+            Op::LowRankAttention => {
+                for b in &self.manifest.kernel.rank_buckets {
+                    self.warm_artifact(&format!("lowrank_attn_r{b}"))?;
+                }
+                Ok(())
+            }
+            Op::PowerIterSigma => self.warm_artifact("power_iter"),
+            Op::PolicyLogits => self.warm_artifact("policy_net"),
+            Op::LmLogits => self.warm_artifact("lm_logits"),
+            Op::LmEvalLoss => self.warm_artifact("lm_eval_loss"),
+            Op::LmTrainStep => self.warm_artifact("lm_train_step"),
+        }
+    }
+
+    fn full_attention(&self, q: &Mat, k: &Mat, v: &Mat) -> Result<Mat> {
+        self.ops.record(Op::FullAttention);
+        let (n, d) = q.shape();
+        let out = self.execute(
+            "full_attn",
+            vec![HostTensor::from_mat(q), HostTensor::from_mat(k), HostTensor::from_mat(v)],
+        )?;
+        Ok(out[0].to_mat(n, d))
+    }
+
+    fn lowrank_attention(&self, svd: &Svd, bucket: usize, rank: usize, v_val: &Mat) -> Result<Mat> {
+        self.ops.record(Op::LowRankAttention);
+        anyhow::ensure!(svd.s.len() >= bucket, "need ≥{bucket} factors, have {}", svd.s.len());
+        let (n, d) = v_val.shape();
+        let u = svd.u.take_cols(bucket);
+        let vt = svd.v.take_cols(bucket).transpose();
+        let s: Vec<f64> = svd.s[..bucket].to_vec();
+        let mask: Vec<f32> = (0..bucket).map(|i| if i < rank { 1.0 } else { 0.0 }).collect();
+        let out = self.execute(
+            &format!("lowrank_attn_r{bucket}"),
+            vec![
+                HostTensor::from_mat(&u),
+                HostTensor::from_f64s(&s),
+                HostTensor::from_mat(&vt),
+                HostTensor::from_mat(v_val),
+                HostTensor::f32(mask, &[bucket as i64]),
+            ],
+        )?;
+        Ok(out[0].to_mat(n, d))
+    }
+
+    fn power_iter_sigma(&self, m: &Mat, v0: &[f64]) -> Result<f64> {
+        self.ops.record(Op::PowerIterSigma);
+        let out = self
+            .execute("power_iter", vec![HostTensor::from_mat(m), HostTensor::from_f64s(v0)])?;
+        Ok(out[0].scalar())
+    }
+
+    fn policy_logits(&self, weights: &[f32], state: &[f64]) -> Result<Vec<f64>> {
+        self.ops.record(Op::PolicyLogits);
+        let wlen = weights.len() as i64;
+        let out = self.execute(
+            "policy_net",
+            vec![
+                HostTensor::f32(weights.to_vec(), &[wlen]),
+                HostTensor::from_f64s(state),
+            ],
+        )?;
+        Ok(out[0]
+            .as_f32()
+            .ok_or_else(|| anyhow!("policy_net returned non-f32"))?
+            .iter()
+            .map(|&x| x as f64)
+            .collect())
+    }
+
+    fn lm_logits(&self, params: &[f32], tokens: &[i32]) -> Result<Vec<f32>> {
+        self.ops.record(Op::LmLogits);
+        let lm = &self.manifest.lm;
+        let bl = [lm.batch as i64, lm.seq_len as i64];
+        let out = self.execute(
+            "lm_logits",
+            vec![
+                HostTensor::f32(params.to_vec(), &[lm.param_count as i64]),
+                HostTensor::i32(tokens.to_vec(), &bl),
+            ],
+        )?;
+        Ok(out.into_iter().next().unwrap().expect_f32())
+    }
+
+    fn lm_eval_loss(&self, params: &[f32], tokens: &[i32], targets: &[i32]) -> Result<f64> {
+        self.ops.record(Op::LmEvalLoss);
+        let lm = &self.manifest.lm;
+        let bl = [lm.batch as i64, lm.seq_len as i64];
+        let out = self.execute(
+            "lm_eval_loss",
+            vec![
+                HostTensor::f32(params.to_vec(), &[lm.param_count as i64]),
+                HostTensor::i32(tokens.to_vec(), &bl),
+                HostTensor::i32(targets.to_vec(), &bl),
+            ],
+        )?;
+        Ok(out[0].scalar())
+    }
+
+    fn lm_train_step(
+        &self,
+        params: &mut Vec<f32>,
+        adam_m: &mut Vec<f32>,
+        adam_v: &mut Vec<f32>,
+        step: f32,
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<f64> {
+        self.ops.record(Op::LmTrainStep);
+        let lm = &self.manifest.lm;
+        let p = lm.param_count as i64;
+        let bl = [lm.batch as i64, lm.seq_len as i64];
+        // Clone rather than mem::take: a failed execute must leave the
+        // caller's training state intact (the state is only replaced
+        // below, once the device returned all four outputs).
+        let out = self.execute(
+            "lm_train_step",
+            vec![
+                HostTensor::f32(params.clone(), &[p]),
+                HostTensor::f32(adam_m.clone(), &[p]),
+                HostTensor::f32(adam_v.clone(), &[p]),
+                HostTensor::scalar_f32(step),
+                HostTensor::i32(tokens.to_vec(), &bl),
+                HostTensor::i32(targets.to_vec(), &bl),
+            ],
+        )?;
+        anyhow::ensure!(out.len() == 4, "train_step returns 4 outputs, got {}", out.len());
+        let mut it = out.into_iter();
+        *params = it.next().unwrap().expect_f32();
+        *adam_m = it.next().unwrap().expect_f32();
+        *adam_v = it.next().unwrap().expect_f32();
+        Ok(it.next().unwrap().scalar())
+    }
+}
+
+fn device_main(manifest: Manifest, rx: std::sync::mpsc::Receiver<Cmd>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            crate::log_warn!("PJRT CPU client unavailable: {e}");
+            // Drain commands with errors so callers fail fast.
+            while let Ok(cmd) = rx.recv() {
+                match cmd {
+                    Cmd::Execute { reply, .. } => {
+                        let _ = reply.send(Err(anyhow!("PJRT client unavailable")));
+                    }
+                    Cmd::Warm { reply, .. } => {
+                        let _ = reply.send(Err(anyhow!("PJRT client unavailable")));
                     }
                 }
-                return;
             }
-        };
-        let mut cache: BTreeMap<String, LoadedExe> = BTreeMap::new();
-
-        let load = |client: &xla::PjRtClient,
-                    cache: &mut BTreeMap<String, LoadedExe>,
-                    manifest: &Manifest,
-                    name: &str|
-         -> Result<()> {
-            if cache.contains_key(name) {
-                return Ok(());
-            }
-            let path = manifest.artifact_path(name)?;
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .with_context(|| format!("parsing HLO text {path:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp).with_context(|| format!("compiling {name}"))?;
-            cache.insert(name.to_string(), LoadedExe { exe, calls: 0 });
-            Ok(())
-        };
-
-        while let Ok(cmd) = rx.recv() {
-            match cmd {
-                Cmd::Warm { artifact, reply } => {
-                    let _ = reply.send(load(&client, &mut cache, &manifest, &artifact));
-                }
-                Cmd::Stats { reply } => {
-                    let _ =
-                        reply.send(cache.iter().map(|(k, v)| (k.clone(), v.calls)).collect());
-                }
-                Cmd::Execute { artifact, inputs, reply } => {
-                    let result = (|| -> Result<Vec<HostTensor>> {
-                        load(&client, &mut cache, &manifest, &artifact)?;
-                        let entry = cache.get_mut(&artifact).unwrap();
-                        entry.calls += 1;
-                        let lits: Vec<xla::Literal> =
-                            inputs.iter().map(to_literal).collect::<Result<_>>()?;
-                        let bufs = entry.exe.execute::<xla::Literal>(&lits)?;
-                        let out = bufs[0][0].to_literal_sync()?;
-                        let parts = out.to_tuple()?;
-                        parts.iter().map(from_literal).collect()
-                    })();
-                    let _ = reply.send(result);
-                }
-            }
+            return;
         }
-    }
+    };
+    // Per-op execute counts live in the backend's `OpCounters`; the
+    // device thread caches only the compiled executables.
+    let mut cache: BTreeMap<String, xla::PjRtLoadedExecutable> = BTreeMap::new();
 
-    fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
-        match t {
-            HostTensor::F32 { data, dims } => Ok(xla::Literal::vec1(data).reshape(dims)?),
-            HostTensor::I32 { data, dims } => Ok(xla::Literal::vec1(data).reshape(dims)?),
+    let load = |client: &xla::PjRtClient,
+                cache: &mut BTreeMap<String, xla::PjRtLoadedExecutable>,
+                manifest: &Manifest,
+                name: &str|
+     -> Result<()> {
+        if cache.contains_key(name) {
+            return Ok(());
         }
-    }
+        let path = manifest.artifact_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        cache.insert(name.to_string(), exe);
+        Ok(())
+    };
 
-    fn from_literal(l: &xla::Literal) -> Result<HostTensor> {
-        let shape = l.array_shape()?;
-        let dims = shape.dims().to_vec();
-        match shape.ty() {
-            xla::ElementType::F32 => Ok(HostTensor::F32 { data: l.to_vec::<f32>()?, dims }),
-            xla::ElementType::S32 => Ok(HostTensor::I32 { data: l.to_vec::<i32>()?, dims }),
-            other => {
-                // Convert anything else (f64/bf16/…) through F32.
-                let conv = l.convert(xla::PrimitiveType::F32)?;
-                let _ = other;
-                Ok(HostTensor::F32 { data: conv.to_vec::<f32>()?, dims })
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::Warm { artifact, reply } => {
+                let _ = reply.send(load(&client, &mut cache, &manifest, &artifact));
+            }
+            Cmd::Execute { artifact, inputs, reply } => {
+                let result = (|| -> Result<Vec<HostTensor>> {
+                    load(&client, &mut cache, &manifest, &artifact)?;
+                    let exe = cache.get(&artifact).unwrap();
+                    let lits: Vec<xla::Literal> =
+                        inputs.iter().map(to_literal).collect::<Result<_>>()?;
+                    let bufs = exe.execute::<xla::Literal>(&lits)?;
+                    let out = bufs[0][0].to_literal_sync()?;
+                    let parts = out.to_tuple()?;
+                    parts.iter().map(from_literal).collect()
+                })();
+                let _ = reply.send(result);
             }
         }
     }
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
+fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
+    match t {
+        HostTensor::F32 { data, dims } => Ok(xla::Literal::vec1(data).reshape(dims)?),
+        HostTensor::I32 { data, dims } => Ok(xla::Literal::vec1(data).reshape(dims)?),
+    }
+}
 
-    fn handle() -> Option<&'static DeviceHandle> {
-        if !Manifest::default_dir().join("manifest.json").exists() {
-            eprintln!("skipping: artifacts not built");
-            return None;
+fn from_literal(l: &xla::Literal) -> Result<HostTensor> {
+    let shape = l.array_shape()?;
+    let dims = shape.dims().to_vec();
+    match shape.ty() {
+        xla::ElementType::F32 => Ok(HostTensor::F32 { data: l.to_vec::<f32>()?, dims }),
+        xla::ElementType::S32 => Ok(HostTensor::I32 { data: l.to_vec::<i32>()?, dims }),
+        other => {
+            // Convert anything else (f64/bf16/…) through F32.
+            let conv = l.convert(xla::PrimitiveType::F32)?;
+            let _ = other;
+            Ok(HostTensor::F32 { data: conv.to_vec::<f32>()?, dims })
         }
-        DeviceHandle::global().ok()
-    }
-
-    #[test]
-    fn executes_full_attn_artifact() {
-        let Some(h) = handle() else { return };
-        let m = Manifest::load(&Manifest::default_dir()).unwrap();
-        let (n, d) = (m.kernel.seq_len, m.kernel.head_dim);
-        let q: Vec<f32> = (0..n * d).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect();
-        let t = |v: &[f32]| HostTensor::f32(v.to_vec(), &[n as i64, d as i64]);
-        let out = h.execute("full_attn", vec![t(&q), t(&q), t(&q)]).unwrap();
-        assert_eq!(out.len(), 1);
-        assert_eq!(out[0].dims(), &[n as i64, d as i64]);
-        assert!(out[0].as_f32().unwrap().iter().all(|v| v.is_finite()));
-    }
-
-    #[test]
-    fn stats_count_executions() {
-        let Some(h) = handle() else { return };
-        let before = h.stats().unwrap().get("power_iter").copied().unwrap_or(0);
-        let m = Manifest::load(&Manifest::default_dir()).unwrap();
-        let n = m.kernel.seq_len;
-        let mat: Vec<f32> = (0..n * n).map(|i| (i % 7) as f32 * 0.1).collect();
-        let v0: Vec<f32> = (0..n).map(|i| 1.0 + (i % 3) as f32).collect();
-        h.execute(
-            "power_iter",
-            vec![
-                HostTensor::f32(mat, &[n as i64, n as i64]),
-                HostTensor::f32(v0, &[n as i64]),
-            ],
-        )
-        .unwrap();
-        let after = h.stats().unwrap()["power_iter"];
-        assert_eq!(after, before + 1);
-    }
-
-    #[test]
-    fn unknown_artifact_errors_cleanly() {
-        let Some(h) = handle() else { return };
-        let err = h.execute("nonexistent", vec![]).unwrap_err();
-        assert!(format!("{err:#}").contains("nonexistent"));
-    }
-
-    #[test]
-    fn handle_is_send_and_clonable() {
-        let Some(h) = handle() else { return };
-        let h2 = h.clone();
-        let t = std::thread::spawn(move || h2.stats().map(|s| s.len()));
-        t.join().unwrap().unwrap();
-    }
-
-    #[test]
-    fn host_handle_works_without_artifacts() {
-        // The host backend needs no files: synthetic manifest end-to-end.
-        let h = DeviceHandle::host(Manifest::synthetic(16, 4));
-        let q: Vec<f32> = (0..16 * 4).map(|i| (i % 5) as f32 * 0.1).collect();
-        let t = |v: &[f32]| HostTensor::f32(v.to_vec(), &[16, 4]);
-        let out = h.execute("full_attn", vec![t(&q), t(&q), t(&q)]).unwrap();
-        assert_eq!(out[0].dims(), &[16, 4]);
-        assert_eq!(h.stats().unwrap()["full_attn"], 1);
     }
 }

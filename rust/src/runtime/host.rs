@@ -1,156 +1,163 @@
-//! Pure-Rust host backend: executes the artifact entry points with the
-//! crate's own numeric kernels when PJRT (feature `pjrt`) is unavailable
-//! or the HLO artifacts have not been built.
+//! Pure-Rust host backend: the *complete* [`Backend`] implementation,
+//! executing every typed op with the crate's own numeric kernels.
 //!
-//! Semantics mirror the L1/L2 artifacts: `full_attn` is causal blocked
-//! attention, `lowrank_attn_r{B}` is the masked factor apply
-//! Y = U·diag(s⊙mask)·(Vᵀ·V_val), `power_iter` is K iterations of
-//! v ← MᵀMv/‖·‖, and `lm_logits` / `lm_eval_loss` evaluate the decoder
-//! LM through `HostLm` on the same flat parameter layout. Inputs and
-//! outputs cross the boundary as f32 `HostTensor`s, matching the device
-//! path's precision.
+//! Semantics mirror the L1/L2 artifacts: full attention is causal
+//! blocked attention, the low-rank op is the masked factor apply
+//! Y = U·diag(s⊙mask)·(Vᵀ·V_val), power iteration runs K rounds of
+//! v ← MᵀMv/‖·‖, the LM ops evaluate/train the decoder LM on the same
+//! flat parameter layout (the train step is a hand-written backward +
+//! fused AdamW — see [`crate::train::lm_loss_and_grad`]), and
+//! `policy_logits` runs the transformer policy encoder on the host
+//! ([`super::host_policy`]). Matrix inputs and outputs are rounded
+//! through f32 at the op boundary, matching the device path's precision,
+//! so swapping backends does not change numerics beyond kernel-level
+//! float noise.
 //!
 //! Unlike the PJRT device thread (whose `Literal`s are not `Send`), the
 //! host backend is `Send + Sync` and executes on the *calling* thread —
 //! concurrent engine workers and per-head fan-out run kernels genuinely
 //! in parallel instead of serializing through one device thread.
 
+use super::backend::{Backend, Capabilities, Op, OpCounters};
 use super::manifest::Manifest;
-use super::tensor::HostTensor;
 use crate::attention::{full_attention, AttnInputs};
-use crate::linalg::{matmul, Mat};
+use crate::linalg::{matmul, Mat, Svd};
 use crate::train::HostLm;
 use anyhow::Result;
-use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
-/// Thread-safe host executor keyed by artifact name.
+/// Round a matrix through f32, mirroring the artifact boundary.
+fn f32_boundary(m: &Mat) -> Mat {
+    Mat::from_f32(m.rows(), m.cols(), &m.to_f32())
+}
+
+/// Thread-safe host executor over a manifest's shapes.
 pub struct HostBackend {
     manifest: Manifest,
-    calls: Mutex<BTreeMap<String, u64>>,
+    ops: Arc<OpCounters>,
     /// Parsed-LM cache keyed by a fingerprint of the flat param vector:
     /// the generation hot path sends identical params on every decode
     /// step, so re-parsing (and re-allocating) the whole model per
     /// `lm_logits` call was pure overhead. Capacity 1 — serving uses one
     /// frozen parameter set at a time.
     lm_cache: Mutex<Option<(u64, Arc<HostLm>)>>,
+    /// Parsed policy cache, same scheme: one forward runs per segment
+    /// decision and the weights are frozen for the registry's lifetime.
+    policy_cache: Mutex<Option<(u64, Arc<super::host_policy::PolicyNet>)>>,
 }
 
 impl HostBackend {
     pub fn new(manifest: Manifest) -> Self {
+        Self::with_counters(manifest, Arc::new(OpCounters::default()))
+    }
+
+    /// Host backend recording into caller-owned counters (the
+    /// [`super::SimBackend`] shares one ledger with its inner host
+    /// executor this way, so op and LM-cache counts surface once).
+    pub(crate) fn with_counters(manifest: Manifest, ops: Arc<OpCounters>) -> Self {
         HostBackend {
             manifest,
-            calls: Mutex::new(BTreeMap::new()),
+            ops,
             lm_cache: Mutex::new(None),
+            policy_cache: Mutex::new(None),
         }
     }
 
-    /// Per-artifact execute counts (mirrors the device thread's stats),
-    /// plus `lm_cache_hit` / `lm_cache_miss` counters for the parsed-LM
-    /// cache.
-    pub fn stats(&self) -> BTreeMap<String, u64> {
-        self.calls.lock().unwrap().clone()
-    }
-
-    fn bump(&self, key: &str) {
-        *self.calls.lock().unwrap().entry(key.to_string()).or_insert(0) += 1;
-    }
-
-    /// Availability check; compilation is a no-op on the host.
-    pub fn warm(&self, artifact: &str) -> Result<()> {
+    /// Parsed host LM for the given flat params, served from the
+    /// fingerprint-keyed cache. The forward runs outside the cache lock
+    /// (`HostLm` evaluation is `&self`), so concurrent callers share one
+    /// parsed model without serializing on each other.
+    fn host_lm(&self, params: &[f32]) -> Result<Arc<HostLm>> {
+        let lm = &self.manifest.lm;
         anyhow::ensure!(
-            self.manifest.artifact_files.contains_key(artifact),
-            "artifact '{artifact}' not in manifest"
+            params.len() == lm.param_count,
+            "param vector len {} vs manifest {}",
+            params.len(),
+            lm.param_count
+        );
+        let fp = params_fingerprint(params);
+        {
+            let g = self.lm_cache.lock().unwrap();
+            if let Some((cached_fp, host)) = g.as_ref() {
+                if *cached_fp == fp {
+                    let host = Arc::clone(host);
+                    drop(g);
+                    self.ops.record_lm_cache(true);
+                    return Ok(host);
+                }
+            }
+        }
+        // Parse outside the lock; a racing miss just parses twice and
+        // the last writer wins.
+        let parsed = Arc::new(HostLm::from_flat(params, lm));
+        *self.lm_cache.lock().unwrap() = Some((fp, Arc::clone(&parsed)));
+        self.ops.record_lm_cache(false);
+        Ok(parsed)
+    }
+
+    fn check_tokens(&self, what: &str, t: &[i32]) -> Result<()> {
+        let lm = &self.manifest.lm;
+        anyhow::ensure!(
+            t.len() == lm.batch * lm.seq_len,
+            "{what}: got {} tokens, want {}x{}",
+            t.len(),
+            lm.batch,
+            lm.seq_len
         );
         Ok(())
     }
+}
 
-    pub fn execute(&self, artifact: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        let out = self.dispatch(artifact, inputs)?;
-        *self.calls.lock().unwrap().entry(artifact.to_string()).or_insert(0) += 1;
-        Ok(out)
+impl Backend for HostBackend {
+    fn name(&self) -> &'static str {
+        "host"
     }
 
-    fn dispatch(&self, artifact: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        match artifact {
-            "full_attn" => self.full_attn(inputs),
-            "power_iter" => self.power_iter(inputs),
-            "lm_logits" => self.lm_logits(inputs),
-            "lm_eval_loss" => self.lm_eval_loss(inputs),
-            name if name.starts_with("lowrank_attn_r") => {
-                let bucket: usize = name["lowrank_attn_r".len()..]
-                    .parse()
-                    .map_err(|_| anyhow::anyhow!("bad rank bucket in '{name}'"))?;
-                self.lowrank_attn(bucket, inputs)
-            }
-            "policy_net" => Err(anyhow::anyhow!(
-                "artifact 'policy_net' needs the AOT transformer policy; the host \
-                 backend cannot execute it — use PolicySource::Actor/Fixed/\
-                 AdaptiveEnergy, or build artifacts and enable the `pjrt` feature"
-            )),
-            "lm_train_step" => Err(anyhow::anyhow!(
-                "artifact 'lm_train_step' (fused AdamW backward) is only available \
-                 with the `pjrt` feature and built artifacts"
-            )),
-            other => Err(anyhow::anyhow!("artifact '{other}' not available on host backend")),
-        }
+    fn capabilities(&self) -> Capabilities {
+        Capabilities::complete()
     }
 
-    fn mat_input(t: &HostTensor, rows: usize, cols: usize, what: &str) -> Result<Mat> {
-        let data = t
-            .as_f32()
-            .ok_or_else(|| anyhow::anyhow!("{what}: expected f32 tensor"))?;
-        anyhow::ensure!(
-            data.len() == rows * cols,
-            "{what}: got {} elements, want {rows}x{cols}",
-            data.len()
-        );
-        Ok(Mat::from_f32(rows, cols, data))
+    fn ops(&self) -> Arc<OpCounters> {
+        Arc::clone(&self.ops)
     }
 
-    fn full_attn(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        let (n, d) = (self.manifest.kernel.seq_len, self.manifest.kernel.head_dim);
-        anyhow::ensure!(inputs.len() == 3, "full_attn takes q,k,v");
+    fn full_attention(&self, q: &Mat, k: &Mat, v: &Mat) -> Result<Mat> {
+        self.ops.record(Op::FullAttention);
         let inp = AttnInputs {
-            q: Self::mat_input(&inputs[0], n, d, "q")?,
-            k: Self::mat_input(&inputs[1], n, d, "k")?,
-            v: Self::mat_input(&inputs[2], n, d, "v")?,
+            q: f32_boundary(q),
+            k: f32_boundary(k),
+            v: f32_boundary(v),
             causal: true,
         };
-        Ok(vec![HostTensor::from_mat(&full_attention(&inp))])
+        Ok(f32_boundary(&full_attention(&inp)))
     }
 
-    /// Y = U·diag(s⊙mask)·(Vᵀ·V_val) — the masked factor apply.
-    fn lowrank_attn(&self, bucket: usize, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        let (n, d) = (self.manifest.kernel.seq_len, self.manifest.kernel.head_dim);
-        anyhow::ensure!(inputs.len() == 5, "lowrank_attn takes u,s,vt,v,mask");
-        let u = Self::mat_input(&inputs[0], n, bucket, "u")?;
-        let s = inputs[1].as_f32().ok_or_else(|| anyhow::anyhow!("s: expected f32"))?;
-        let vt = Self::mat_input(&inputs[2], bucket, n, "vt")?;
-        let v_val = Self::mat_input(&inputs[3], n, d, "v_val")?;
-        let mask = inputs[4].as_f32().ok_or_else(|| anyhow::anyhow!("mask: expected f32"))?;
-        anyhow::ensure!(s.len() == bucket && mask.len() == bucket, "s/mask length");
+    /// Y = U·diag(s⊙mask)·(Vᵀ·V_val) — the masked factor apply, with the
+    /// first `rank` of `bucket` factors live.
+    fn lowrank_attention(&self, svd: &Svd, bucket: usize, rank: usize, v_val: &Mat) -> Result<Mat> {
+        self.ops.record(Op::LowRankAttention);
+        anyhow::ensure!(svd.s.len() >= bucket, "need ≥{bucket} factors, have {}", svd.s.len());
+        let u = f32_boundary(&svd.u.take_cols(bucket));
+        let vt = f32_boundary(&svd.v.take_cols(bucket).transpose());
+        let s32: Vec<f32> = svd.s[..bucket].iter().map(|&x| x as f32).collect();
+        let v_val = f32_boundary(v_val);
         let mut w = matmul(&vt, &v_val); // bucket × d
         for i in 0..bucket {
-            let scale = (s[i] * mask[i]) as f64;
+            let scale = if i < rank { s32[i] as f64 } else { 0.0 };
             for x in w.row_mut(i).iter_mut() {
                 *x *= scale;
             }
         }
-        Ok(vec![HostTensor::from_mat(&matmul(&u, &w))])
+        Ok(f32_boundary(&matmul(&u, &w)))
     }
 
     /// K iterations of v ← MᵀMv/‖·‖ from the given v0, then σ = ‖Mv‖
     /// (mirrors python/compile/kernels/power_iter.py).
-    fn power_iter(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        anyhow::ensure!(inputs.len() == 2, "power_iter takes m, v0");
-        let dims = inputs[0].dims();
-        anyhow::ensure!(dims.len() == 2, "m must be 2-D");
-        let (r, c) = (dims[0] as usize, dims[1] as usize);
-        let m = Self::mat_input(&inputs[0], r, c, "m")?;
-        let v0 = inputs[1].as_f32().ok_or_else(|| anyhow::anyhow!("v0: expected f32"))?;
-        anyhow::ensure!(v0.len() == c, "v0 length {} vs {c}", v0.len());
-        let mut v: Vec<f64> = v0.iter().map(|&x| x as f64).collect();
+    fn power_iter_sigma(&self, m: &Mat, v0: &[f64]) -> Result<f64> {
+        self.ops.record(Op::PowerIterSigma);
+        anyhow::ensure!(v0.len() == m.cols(), "v0 length {} vs {}", v0.len(), m.cols());
+        let m = f32_boundary(m);
+        let mut v: Vec<f64> = v0.iter().map(|&x| (x as f32) as f64).collect();
         let norm = |x: &[f64]| x.iter().map(|a| a * a).sum::<f64>().sqrt();
         let scale = norm(&v).max(1e-30);
         v.iter_mut().for_each(|x| *x /= scale);
@@ -162,90 +169,81 @@ impl HostBackend {
             v = next;
         }
         let sigma = norm(&crate::linalg::matvec(&m, &v));
-        Ok(vec![
-            HostTensor::f32(vec![sigma as f32], &[1]),
-            HostTensor::from_f64s(&v),
-        ])
+        Ok((sigma as f32) as f64)
     }
 
-    fn lm_tokens(t: &HostTensor, batch: usize, seq_len: usize, what: &str) -> Result<Vec<i32>> {
-        let data = t
-            .as_i32()
-            .ok_or_else(|| anyhow::anyhow!("{what}: expected i32 tensor"))?;
-        anyhow::ensure!(
-            data.len() == batch * seq_len,
-            "{what}: got {} tokens, want {batch}x{seq_len}",
-            data.len()
-        );
-        Ok(data.to_vec())
-    }
-
-    /// Parsed host LM for the given flat params, served from the
-    /// fingerprint-keyed cache. The forward runs outside the cache lock
-    /// (`HostLm` evaluation is `&self`), so concurrent callers share one
-    /// parsed model without serializing on each other.
-    fn host_lm(&self, params: &HostTensor) -> Result<Arc<HostLm>> {
-        let lm = &self.manifest.lm;
-        let p = params
-            .as_f32()
-            .ok_or_else(|| anyhow::anyhow!("params: expected f32 tensor"))?;
-        anyhow::ensure!(
-            p.len() == lm.param_count,
-            "param vector len {} vs manifest {}",
-            p.len(),
-            lm.param_count
-        );
-        let fp = params_fingerprint(p);
+    fn policy_logits(&self, weights: &[f32], state: &[f64]) -> Result<Vec<f64>> {
+        self.ops.record(Op::PolicyLogits);
+        let fp = params_fingerprint(weights);
         {
-            let g = self.lm_cache.lock().unwrap();
-            if let Some((cached_fp, host)) = g.as_ref() {
+            let g = self.policy_cache.lock().unwrap();
+            if let Some((cached_fp, net)) = g.as_ref() {
                 if *cached_fp == fp {
-                    let host = Arc::clone(host);
+                    let net = Arc::clone(net);
                     drop(g);
-                    self.bump("lm_cache_hit");
-                    return Ok(host);
+                    return net.forward(state);
                 }
             }
         }
-        // Parse outside the lock; a racing miss just parses twice and
-        // the last writer wins.
-        let parsed = Arc::new(HostLm::from_flat(p, lm));
-        *self.lm_cache.lock().unwrap() = Some((fp, Arc::clone(&parsed)));
-        self.bump("lm_cache_miss");
-        Ok(parsed)
+        let net = Arc::new(super::host_policy::PolicyNet::parse(
+            weights,
+            &self.manifest.policy,
+        )?);
+        *self.policy_cache.lock().unwrap() = Some((fp, Arc::clone(&net)));
+        net.forward(state)
     }
 
-    fn lm_logits(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    fn lm_logits(&self, params: &[f32], tokens: &[i32]) -> Result<Vec<f32>> {
+        self.ops.record(Op::LmLogits);
         let lm = self.manifest.lm.clone();
-        anyhow::ensure!(inputs.len() == 2, "lm_logits takes params, tokens");
-        let host = self.host_lm(&inputs[0])?;
-        let tokens = Self::lm_tokens(&inputs[1], lm.batch, lm.seq_len, "tokens")?;
+        self.check_tokens("tokens", tokens)?;
+        let host = self.host_lm(params)?;
         let mut out = Vec::with_capacity(lm.batch * lm.seq_len * lm.vocab);
         for b in 0..lm.batch {
             let row = &tokens[b * lm.seq_len..(b + 1) * lm.seq_len];
             let logits = host.forward(row, &crate::train::AttnMethod::Full, 1);
             out.extend(logits.data().iter().map(|&x| x as f32));
         }
-        Ok(vec![HostTensor::f32(
-            out,
-            &[lm.batch as i64, lm.seq_len as i64, lm.vocab as i64],
-        )])
+        Ok(out)
     }
 
-    fn lm_eval_loss(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    fn lm_eval_loss(&self, params: &[f32], tokens: &[i32], targets: &[i32]) -> Result<f64> {
+        self.ops.record(Op::LmEvalLoss);
         let lm = self.manifest.lm.clone();
-        anyhow::ensure!(inputs.len() == 3, "lm_eval_loss takes params, tokens, targets");
-        let host = self.host_lm(&inputs[0])?;
-        let tokens = Self::lm_tokens(&inputs[1], lm.batch, lm.seq_len, "tokens")?;
-        let targets = Self::lm_tokens(&inputs[2], lm.batch, lm.seq_len, "targets")?;
+        self.check_tokens("tokens", tokens)?;
+        self.check_tokens("targets", targets)?;
+        let host = self.host_lm(params)?;
         let mut total = 0.0;
         for b in 0..lm.batch {
             let t = &tokens[b * lm.seq_len..(b + 1) * lm.seq_len];
             let g = &targets[b * lm.seq_len..(b + 1) * lm.seq_len];
             total += host.loss(t, g, &crate::train::AttnMethod::Full, 1);
         }
-        let mean = (total / lm.batch as f64) as f32;
-        Ok(vec![HostTensor::f32(vec![mean], &[1])])
+        Ok(((total / lm.batch as f64) as f32) as f64)
+    }
+
+    /// Forward + hand-written backward + fused AdamW on the host — the
+    /// previously PJRT-only train step, now offline.
+    fn lm_train_step(
+        &self,
+        params: &mut Vec<f32>,
+        adam_m: &mut Vec<f32>,
+        adam_v: &mut Vec<f32>,
+        step: f32,
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<f64> {
+        self.ops.record(Op::LmTrainStep);
+        let lm = &self.manifest.lm;
+        self.check_tokens("tokens", tokens)?;
+        self.check_tokens("targets", targets)?;
+        anyhow::ensure!(
+            adam_m.len() == params.len() && adam_v.len() == params.len(),
+            "Adam moment vectors must match the param vector"
+        );
+        let (loss, grad) = crate::train::lm_loss_and_grad(params, lm, tokens, targets)?;
+        crate::train::adamw_step(params, adam_m, adam_v, &grad, step, lm.lr, lm.weight_decay);
+        Ok((loss as f32) as f64)
     }
 }
 
@@ -288,17 +286,7 @@ mod tests {
         let (n, d) = (64, 16);
         let be = backend(n, d);
         let inp = attn_inputs(n, d, 1);
-        let out = be
-            .execute(
-                "full_attn",
-                &[
-                    HostTensor::from_mat(&inp.q),
-                    HostTensor::from_mat(&inp.k),
-                    HostTensor::from_mat(&inp.v),
-                ],
-            )
-            .unwrap();
-        let y = out[0].to_mat(n, d);
+        let y = be.full_attention(&inp.q, &inp.k, &inp.v).unwrap();
         // f32 boundary conversion on inputs, so compare against the
         // reference on the same rounded inputs.
         let rounded = AttnInputs {
@@ -308,6 +296,7 @@ mod tests {
             causal: true,
         };
         assert!(y.allclose(&full_attention(&rounded), 1e-4));
+        assert_eq!(be.ops().get(Op::FullAttention), 1);
     }
 
     #[test]
@@ -319,21 +308,19 @@ mod tests {
         let bucket = 32;
         let svd = top_k_svd(&a, bucket, 3);
         let rank = 20;
-        let mask: Vec<f32> = (0..bucket).map(|i| if i < rank { 1.0 } else { 0.0 }).collect();
-        let out = be
-            .execute(
-                "lowrank_attn_r32",
-                &[
-                    HostTensor::from_mat(&svd.u.take_cols(bucket)),
-                    HostTensor::from_f64s(&svd.s[..bucket]),
-                    HostTensor::from_mat(&svd.v.take_cols(bucket).transpose()),
-                    HostTensor::from_mat(&inp.v),
-                    HostTensor::f32(mask, &[bucket as i64]),
-                ],
-            )
-            .unwrap();
+        let y = be.lowrank_attention(&svd, bucket, rank, &inp.v).unwrap();
         let host = crate::attention::lowrank_attention_output(&svd, rank, &inp.v);
-        assert!(out[0].to_mat(n, d).allclose(&host, 1e-3));
+        assert!(y.allclose(&host, 1e-3));
+    }
+
+    #[test]
+    fn lowrank_attn_rejects_short_spectrum() {
+        let be = backend(16, 4);
+        let mut rng = Pcg32::seeded(3);
+        let a = Mat::randn(16, 16, 1.0, &mut rng);
+        let svd = top_k_svd(&a, 8, 3);
+        let v = Mat::randn(16, 4, 1.0, &mut rng);
+        assert!(be.lowrank_attention(&svd, 16, 8, &v).is_err());
     }
 
     #[test]
@@ -347,17 +334,8 @@ mod tests {
         let u = Mat::randn(n, 1, 1.0, &mut rng);
         let v = Mat::randn(n, 1, 1.0, &mut rng);
         m.axpy(5.0, &crate::linalg::matmul(&u, &v.transpose()));
-        let v0: Vec<f32> = (0..n).map(|i| 1.0 + (i % 3) as f32).collect();
-        let out = be
-            .execute(
-                "power_iter",
-                &[
-                    HostTensor::from_mat(&m),
-                    HostTensor::f32(v0, &[n as i64]),
-                ],
-            )
-            .unwrap();
-        let sigma = out[0].scalar();
+        let v0: Vec<f64> = (0..n).map(|i| 1.0 + (i % 3) as f64).collect();
+        let sigma = be.power_iter_sigma(&m, &v0).unwrap();
         let exact = crate::linalg::svd(&m).s[0];
         assert!((sigma - exact).abs() / exact < 0.05, "sigma {sigma} vs {exact}");
     }
@@ -372,19 +350,9 @@ mod tests {
         let tokens: Vec<i32> =
             (0..lm.batch * lm.seq_len).map(|_| rng.below(lm.vocab as u32) as i32).collect();
         let targets: Vec<i32> = tokens.iter().map(|&t| (t + 1) % lm.vocab as i32).collect();
-        let bl = [lm.batch as i64, lm.seq_len as i64];
-        let p = HostTensor::f32(params, &[lm.param_count as i64]);
-        let logits = be
-            .execute("lm_logits", &[p.clone(), HostTensor::i32(tokens.clone(), &bl)])
-            .unwrap();
-        assert_eq!(logits[0].len(), lm.batch * lm.seq_len * lm.vocab);
-        let loss = be
-            .execute(
-                "lm_eval_loss",
-                &[p, HostTensor::i32(tokens, &bl), HostTensor::i32(targets, &bl)],
-            )
-            .unwrap();
-        let l = loss[0].scalar();
+        let logits = be.lm_logits(&params, &tokens).unwrap();
+        assert_eq!(logits.len(), lm.batch * lm.seq_len * lm.vocab);
+        let l = be.lm_eval_loss(&params, &tokens, &targets).unwrap();
         assert!(l.is_finite() && l > 0.0, "loss {l}");
     }
 
@@ -397,29 +365,62 @@ mod tests {
         rng.fill_normal_f32(&mut params, 0.02);
         let tokens: Vec<i32> =
             (0..lm.batch * lm.seq_len).map(|_| rng.below(lm.vocab as u32) as i32).collect();
-        let bl = [lm.batch as i64, lm.seq_len as i64];
-        let t = HostTensor::i32(tokens, &bl);
-        let p = HostTensor::f32(params.clone(), &[lm.param_count as i64]);
-        let a = be.execute("lm_logits", &[p.clone(), t.clone()]).unwrap();
-        let b = be.execute("lm_logits", &[p, t.clone()]).unwrap();
+        let a = be.lm_logits(&params, &tokens).unwrap();
+        let b = be.lm_logits(&params, &tokens).unwrap();
         // Cached parse must not change results.
-        assert_eq!(a[0].as_f32().unwrap(), b[0].as_f32().unwrap());
-        let mut stats = be.stats();
-        assert_eq!(stats.remove("lm_cache_miss"), Some(1));
-        assert_eq!(stats.remove("lm_cache_hit"), Some(1));
+        assert_eq!(a, b);
+        assert_eq!(be.ops().lm_cache_misses(), 1);
+        assert_eq!(be.ops().lm_cache_hits(), 1);
         // A different parameter vector must invalidate the cache.
         params[0] += 1.0;
-        let p2 = HostTensor::f32(params, &[lm.param_count as i64]);
-        be.execute("lm_logits", &[p2, t]).unwrap();
-        assert_eq!(be.stats().get("lm_cache_miss"), Some(&2));
+        be.lm_logits(&params, &tokens).unwrap();
+        assert_eq!(be.ops().lm_cache_misses(), 2);
     }
 
     #[test]
-    fn unknown_and_unsupported_artifacts_error() {
+    fn host_backend_is_complete() {
         let be = backend(16, 4);
-        assert!(be.execute("nonexistent", &[]).is_err());
-        assert!(be.execute("policy_net", &[]).is_err());
-        assert!(be.warm("full_attn").is_ok());
-        assert!(be.warm("nonexistent").is_err());
+        for op in Op::ALL {
+            assert!(be.capabilities().supports(op), "host must support {op}");
+            assert!(be.warm(op).is_ok());
+        }
+        assert!(be.projected_ms().is_none());
+    }
+
+    #[test]
+    fn policy_logits_run_on_host() {
+        let be = backend(16, 4);
+        let shape = Manifest::synthetic(16, 4).policy;
+        let weights = super::super::host_policy::synthesize_weights(&shape, 42);
+        let state = vec![0.1f64; shape.state_dim];
+        let logits = be.policy_logits(&weights, &state).unwrap();
+        assert_eq!(logits.len(), shape.n_actions);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn lm_train_step_reduces_loss_on_repeated_batch() {
+        let be = backend(16, 4);
+        let lm = Manifest::synthetic(16, 4).lm;
+        let mut rng = Pcg32::seeded(10);
+        let mut params = vec![0f32; lm.param_count];
+        rng.fill_normal_f32(&mut params, 0.02);
+        let mut m = vec![0f32; lm.param_count];
+        let mut v = vec![0f32; lm.param_count];
+        let bl = lm.batch * lm.seq_len;
+        let tokens: Vec<i32> = (0..bl).map(|_| rng.below(lm.vocab as u32) as i32).collect();
+        let targets: Vec<i32> = tokens.iter().map(|&t| (t + 1) % lm.vocab as i32).collect();
+        let first = be.lm_train_step(&mut params, &mut m, &mut v, 0.0, &tokens, &targets).unwrap();
+        let mut last = first;
+        for s in 1..8 {
+            last = be
+                .lm_train_step(&mut params, &mut m, &mut v, s as f32, &tokens, &targets)
+                .unwrap();
+        }
+        assert!(last < first, "loss did not drop: {first} → {last}");
+        // Eval loss agrees with the train-path loss on identical data.
+        let eval = be.lm_eval_loss(&params, &tokens, &targets).unwrap();
+        assert!((eval - last).abs() / last < 0.5, "eval {eval} vs train {last}");
+        assert_eq!(be.ops().get(Op::LmTrainStep), 8);
     }
 }

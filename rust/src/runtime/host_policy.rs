@@ -1,0 +1,349 @@
+//! Host forward of the transformer policy network (paper Eq. 7, §4.5.1).
+//!
+//! π_θ(a|s) = Softmax(MLP(TransformerEncoder(s))) — the same computation
+//! `python/compile/policy_net.py` lowers into the `policy_net` artifact:
+//! the 33-dim state splits into three semantic tokens (conv features,
+//! weight statistics, spectral/positional scalars), projects to
+//! `d_model`, runs `n_blocks` pre-LN encoder blocks and pools into a
+//! tanh-MLP head over the rank grid. Weights arrive as one flat f32
+//! vector in the deterministic `param_order` layout.
+//!
+//! This closes the host backend's `policy_net` gap: `PolicySource::Hlo`
+//! now runs fully offline (synthetic registries generate deterministic
+//! weights via [`synthesize_weights`]; artifact-backed registries load
+//! the trained sidecar file as before).
+
+use super::manifest::PolicyShape;
+use crate::linalg::{matmul, Mat};
+use crate::util::Pcg32;
+use anyhow::Result;
+
+/// State-token split (must mirror policy_net.py / drrl::rl::state):
+/// conv features, weight statistics, and the spectral/positional tail.
+const CONV_FEATS: usize = 16;
+const WSTAT_FEATS: usize = 9;
+
+struct BlockParams {
+    wq: Mat,
+    wk: Mat,
+    wv: Mat,
+    wo: Mat,
+    ln1_g: Vec<f64>,
+    ln1_b: Vec<f64>,
+    w1: Mat,
+    b1: Vec<f64>,
+    w2: Mat,
+    b2: Vec<f64>,
+    ln2_g: Vec<f64>,
+    ln2_b: Vec<f64>,
+}
+
+struct PolicyParams {
+    tok0: Mat, // CONV_FEATS × d
+    tok1: Mat, // WSTAT_FEATS × d
+    tok2: Mat, // tail × d
+    pos: Mat,  // 3 × d
+    blocks: Vec<BlockParams>,
+    head_w1: Mat,
+    head_b1: Vec<f64>,
+    head_w2: Mat,
+    head_b2: Vec<f64>,
+}
+
+fn parse(weights: &[f32], shape: &PolicyShape) -> Result<PolicyParams> {
+    anyhow::ensure!(
+        weights.len() == shape.flat_param_count(),
+        "policy weight vector len {} vs layout {}",
+        weights.len(),
+        shape.flat_param_count()
+    );
+    anyhow::ensure!(
+        shape.state_dim > CONV_FEATS + WSTAT_FEATS,
+        "state dim {} too small for the 16/9/tail token split",
+        shape.state_dim
+    );
+    anyhow::ensure!(
+        shape.d_model % shape.n_heads.max(1) == 0,
+        "policy d_model {} not divisible by n_heads {}",
+        shape.d_model,
+        shape.n_heads
+    );
+    let d = shape.d_model;
+    let tail = shape.state_dim - CONV_FEATS - WSTAT_FEATS;
+    let mut off = 0usize;
+    let mut take_mat = |rows: usize, cols: usize| -> Mat {
+        let n = rows * cols;
+        let m = Mat::from_f32(rows, cols, &weights[off..off + n]);
+        off += n;
+        m
+    };
+    // Order MUST mirror policy_net.py::param_order.
+    let tok0 = take_mat(CONV_FEATS, d);
+    let tok1 = take_mat(WSTAT_FEATS, d);
+    let tok2 = take_mat(tail, d);
+    let pos = take_mat(3, d);
+    let mut blocks = Vec::with_capacity(shape.n_blocks);
+    for _ in 0..shape.n_blocks {
+        let wq = take_mat(d, d);
+        let wk = take_mat(d, d);
+        let wv = take_mat(d, d);
+        let wo = take_mat(d, d);
+        let ln1_g = take_mat(1, d).into_vec();
+        let ln1_b = take_mat(1, d).into_vec();
+        let w1 = take_mat(d, 4 * d);
+        let b1 = take_mat(1, 4 * d).into_vec();
+        let w2 = take_mat(4 * d, d);
+        let b2 = take_mat(1, d).into_vec();
+        let ln2_g = take_mat(1, d).into_vec();
+        let ln2_b = take_mat(1, d).into_vec();
+        blocks.push(BlockParams {
+            wq, wk, wv, wo, ln1_g, ln1_b, w1, b1, w2, b2, ln2_g, ln2_b,
+        });
+    }
+    let head_w1 = take_mat(d, d);
+    let head_b1 = take_mat(1, d).into_vec();
+    let head_w2 = take_mat(d, shape.n_actions);
+    let head_b2 = take_mat(1, shape.n_actions).into_vec();
+    Ok(PolicyParams { tok0, tok1, tok2, pos, blocks, head_w1, head_b1, head_w2, head_b2 })
+}
+
+fn layernorm_rows(x: &mut Mat, g: &[f64], b: &[f64]) {
+    for i in 0..x.rows() {
+        let row = x.row_mut(i);
+        let mu = row.iter().sum::<f64>() / row.len() as f64;
+        let var = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f64>() / row.len() as f64;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = (*v - mu) * inv * g[j] + b[j];
+        }
+    }
+}
+
+fn gelu(x: f64) -> f64 {
+    0.5 * x * (1.0 + ((2.0 / std::f64::consts::PI).sqrt() * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// Non-causal softmax attention over the 3-token sequence for one head
+/// slice `[lo, hi)` of q/k/v.
+fn head_attention(q: &Mat, k: &Mat, v: &Mat, lo: usize, hi: usize) -> Mat {
+    let n = q.rows();
+    let hd = hi - lo;
+    let scale = 1.0 / (hd as f64).sqrt();
+    let mut out = Mat::zeros(n, hd);
+    for i in 0..n {
+        let qi = &q.row(i)[lo..hi];
+        let mut scores = vec![0.0f64; n];
+        for (j, s) in scores.iter_mut().enumerate() {
+            let kj = &k.row(j)[lo..hi];
+            *s = qi.iter().zip(kj).map(|(a, b)| a * b).sum::<f64>() * scale;
+        }
+        let max = scores.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        let mut denom = 0.0;
+        for s in scores.iter_mut() {
+            *s = (*s - max).exp();
+            denom += *s;
+        }
+        let row = out.row_mut(i);
+        for (j, &w) in scores.iter().enumerate() {
+            let vj = &v.row(j)[lo..hi];
+            let w = w / denom;
+            for (o, &x) in row.iter_mut().zip(vj) {
+                *o += w * x;
+            }
+        }
+    }
+    out
+}
+
+/// A parsed policy network, reusable across forwards. The serving hot
+/// path runs one forward per segment decision, so the host backend
+/// caches this (keyed by a weights fingerprint) instead of re-parsing
+/// the flat vector every call.
+pub struct PolicyNet {
+    shape: PolicyShape,
+    p: PolicyParams,
+}
+
+impl PolicyNet {
+    /// Parse the flat weight vector once.
+    pub fn parse(weights: &[f32], shape: &PolicyShape) -> Result<PolicyNet> {
+        Ok(PolicyNet { shape: shape.clone(), p: parse(weights, shape)? })
+    }
+
+    /// 33-dim state → logits over the rank grid.
+    pub fn forward(&self, state: &[f64]) -> Result<Vec<f64>> {
+        forward_parsed(&self.p, state, &self.shape)
+    }
+}
+
+/// Flat weights + 33-dim state → logits over the rank grid (one-shot
+/// parse + forward; the host backend uses [`PolicyNet`] to amortize the
+/// parse).
+pub fn policy_forward(weights: &[f32], state: &[f64], shape: &PolicyShape) -> Result<Vec<f64>> {
+    forward_parsed(&parse(weights, shape)?, state, shape)
+}
+
+fn forward_parsed(p: &PolicyParams, state: &[f64], shape: &PolicyShape) -> Result<Vec<f64>> {
+    anyhow::ensure!(
+        state.len() == shape.state_dim,
+        "state dim {} vs policy {}",
+        state.len(),
+        shape.state_dim
+    );
+    let d = shape.d_model;
+    let hd = d / shape.n_heads.max(1);
+
+    // Token embedding: x = stack(s0·tok0, s1·tok1, s2·tok2) + pos.
+    let s0 = Mat::from_vec(1, CONV_FEATS, state[..CONV_FEATS].to_vec());
+    let s1 = Mat::from_vec(
+        1,
+        WSTAT_FEATS,
+        state[CONV_FEATS..CONV_FEATS + WSTAT_FEATS].to_vec(),
+    );
+    let s2 = Mat::from_vec(
+        1,
+        shape.state_dim - CONV_FEATS - WSTAT_FEATS,
+        state[CONV_FEATS + WSTAT_FEATS..].to_vec(),
+    );
+    let t0 = matmul(&s0, &p.tok0);
+    let t1 = matmul(&s1, &p.tok1);
+    let t2 = matmul(&s2, &p.tok2);
+    let mut x = t0.vcat(&t1).vcat(&t2);
+    x.add_inplace(&p.pos);
+
+    for blk in &p.blocks {
+        // Pre-LN attention sublayer.
+        let mut h = x.clone();
+        layernorm_rows(&mut h, &blk.ln1_g, &blk.ln1_b);
+        let q = matmul(&h, &blk.wq);
+        let k = matmul(&h, &blk.wk);
+        let v = matmul(&h, &blk.wv);
+        let mut cat = Mat::zeros(0, 0);
+        for head in 0..shape.n_heads.max(1) {
+            let o = head_attention(&q, &k, &v, head * hd, (head + 1) * hd);
+            cat = if head == 0 { o } else { cat.hcat(&o) };
+        }
+        x.add_inplace(&matmul(&cat, &blk.wo));
+        // Pre-LN FFN sublayer: x + gelu(h2·w1 + b1)·w2 + b2 (b2 added to
+        // the residual stream, mirroring the python expression).
+        let mut h2 = x.clone();
+        layernorm_rows(&mut h2, &blk.ln2_g, &blk.ln2_b);
+        let mut ff = matmul(&h2, &blk.w1);
+        for i in 0..ff.rows() {
+            for (j, v) in ff.row_mut(i).iter_mut().enumerate() {
+                *v = gelu(*v + blk.b1[j]);
+            }
+        }
+        let mut ff2 = matmul(&ff, &blk.w2);
+        for i in 0..ff2.rows() {
+            for (j, v) in ff2.row_mut(i).iter_mut().enumerate() {
+                *v += blk.b2[j];
+            }
+        }
+        x.add_inplace(&ff2);
+    }
+
+    // Mean-pool the 3 tokens, tanh MLP head.
+    let mut pooled = vec![0.0f64; d];
+    for i in 0..x.rows() {
+        for (p, &v) in pooled.iter_mut().zip(x.row(i)) {
+            *p += v / x.rows() as f64;
+        }
+    }
+    let pooled = Mat::from_vec(1, d, pooled);
+    let mut hid = matmul(&pooled, &p.head_w1);
+    for (j, v) in hid.row_mut(0).iter_mut().enumerate() {
+        *v = (*v + p.head_b1[j]).tanh();
+    }
+    let mut logits = matmul(&hid, &p.head_w2).into_vec();
+    for (l, b) in logits.iter_mut().zip(&p.head_b2) {
+        *l += b;
+    }
+    Ok(logits)
+}
+
+/// Deterministic policy weights for synthetic (artifact-free) manifests,
+/// in the flat `param_order` layout: Xavier-style dense init, 0.02·N(0,1)
+/// positions, unit layernorm gains, zero biases — the same scheme as
+/// `policy_net.init_policy_params`, driven by the crate's own PRNG.
+pub fn synthesize_weights(shape: &PolicyShape, seed: u64) -> Vec<f32> {
+    let d = shape.d_model;
+    let tail = shape.state_dim.saturating_sub(CONV_FEATS + WSTAT_FEATS);
+    let mut rng = Pcg32::seeded(seed);
+    let mut out: Vec<f32> = Vec::with_capacity(shape.flat_param_count());
+    let mut dense = |rng: &mut Pcg32, out: &mut Vec<f32>, i: usize, o: usize| {
+        let std = (2.0 / (i + o) as f64).sqrt();
+        for _ in 0..i * o {
+            out.push((rng.normal() * std) as f32);
+        }
+    };
+    dense(&mut rng, &mut out, CONV_FEATS, d);
+    dense(&mut rng, &mut out, WSTAT_FEATS, d);
+    dense(&mut rng, &mut out, tail, d);
+    for _ in 0..3 * d {
+        out.push((rng.normal() * 0.02) as f32); // pos
+    }
+    for _ in 0..shape.n_blocks {
+        for _ in 0..4 {
+            dense(&mut rng, &mut out, d, d); // wq wk wv wo
+        }
+        out.extend(vec![1.0f32; d]); // ln1_g
+        out.extend(vec![0.0f32; d]); // ln1_b
+        dense(&mut rng, &mut out, d, 4 * d); // w1
+        out.extend(vec![0.0f32; 4 * d]); // b1
+        dense(&mut rng, &mut out, 4 * d, d); // w2
+        out.extend(vec![0.0f32; d]); // b2
+        out.extend(vec![1.0f32; d]); // ln2_g
+        out.extend(vec![0.0f32; d]); // ln2_b
+    }
+    dense(&mut rng, &mut out, d, d); // head_w1
+    out.extend(vec![0.0f32; d]); // head_b1
+    dense(&mut rng, &mut out, d, shape.n_actions); // head_w2
+    out.extend(vec![0.0f32; shape.n_actions]); // head_b2
+    debug_assert_eq!(out.len(), shape.flat_param_count());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    fn shape() -> PolicyShape {
+        Manifest::synthetic(32, 8).policy
+    }
+
+    #[test]
+    fn synthesized_weights_match_layout_and_are_deterministic() {
+        let s = shape();
+        let a = synthesize_weights(&s, 7);
+        let b = synthesize_weights(&s, 7);
+        assert_eq!(a.len(), s.flat_param_count());
+        assert_eq!(a, b, "same seed → same weights");
+        assert_ne!(a, synthesize_weights(&s, 8), "different seed → different weights");
+    }
+
+    #[test]
+    fn forward_emits_finite_grid_logits() {
+        let s = shape();
+        let w = synthesize_weights(&s, 1);
+        let state: Vec<f64> = (0..s.state_dim).map(|i| (i as f64 * 0.1).sin()).collect();
+        let logits = policy_forward(&w, &state, &s).unwrap();
+        assert_eq!(logits.len(), s.n_actions);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        // The state must matter: a different state moves the logits.
+        let state2: Vec<f64> = state.iter().map(|v| v + 0.5).collect();
+        let logits2 = policy_forward(&w, &state2, &s).unwrap();
+        assert_ne!(logits, logits2);
+    }
+
+    #[test]
+    fn forward_validates_dims() {
+        let s = shape();
+        let w = synthesize_weights(&s, 1);
+        let long_state = vec![0.0; s.state_dim + 1];
+        assert!(policy_forward(&w, &long_state, &s).is_err());
+        let state = vec![0.0; s.state_dim];
+        assert!(policy_forward(&w[..w.len() - 1], &state, &s).is_err());
+    }
+}

@@ -19,6 +19,8 @@ pub struct LmShape {
     pub batch: usize,
     pub param_count: usize,
     pub lr: f64,
+    /// AdamW decoupled weight decay (python configs.LmConfig).
+    pub weight_decay: f64,
 }
 
 /// Kernel artifact shapes.
@@ -29,6 +31,21 @@ pub struct KernelShape {
     pub rank_buckets: Vec<usize>,
     pub block_n: usize,
     pub power_iters: usize,
+}
+
+impl KernelShape {
+    /// Smallest compiled rank bucket ≥ the requested rank (DESIGN.md §9);
+    /// falls back to the largest bucket. The single definition of the
+    /// bucket rounding — the registry, the engine pipeline's probe
+    /// planning and the rank controller all route through it.
+    pub fn rank_bucket(&self, rank: usize) -> usize {
+        self.rank_buckets
+            .iter()
+            .copied()
+            .filter(|&b| b >= rank)
+            .min()
+            .unwrap_or_else(|| *self.rank_buckets.iter().max().expect("non-empty buckets"))
+    }
 }
 
 /// Policy artifact shapes.
@@ -42,6 +59,27 @@ pub struct PolicyShape {
     /// argument — HLO text elides large constants).
     pub param_count: usize,
     pub params_file: String,
+    /// Encoder architecture (python configs.PolicyConfig) — needed by the
+    /// host backend to run the transformer policy without an artifact.
+    pub d_model: usize,
+    pub n_blocks: usize,
+    pub n_heads: usize,
+}
+
+impl PolicyShape {
+    /// Parameter count of the flat policy layout (must mirror
+    /// python/compile/policy_net.py::param_order): the three token
+    /// projections + positional rows, `n_blocks` pre-LN encoder blocks,
+    /// and the two-layer MLP head.
+    pub fn flat_param_count(&self) -> usize {
+        let d = self.d_model;
+        // tok0 (16×d) + tok1 (9×d) + tok2 ((state_dim−25)×d) + pos (3×d).
+        let toks = (self.state_dim + 3) * d;
+        // wq..wo 4d² + ln1 2d + w1 d·4d + b1 4d + w2 4d·d + b2 d + ln2 2d.
+        let per_block = 12 * d * d + 9 * d;
+        let head = d * d + d + d * self.n_actions + self.n_actions;
+        toks + self.n_blocks * per_block + head
+    }
 }
 
 /// Parsed manifest.
@@ -81,6 +119,7 @@ impl Manifest {
             batch: 4,
             param_count: 0,
             lr: 5e-4,
+            weight_decay: 0.01,
         };
         lm.param_count = lm.flat_param_count();
         let kernel = KernelShape {
@@ -91,16 +130,24 @@ impl Manifest {
             power_iters: 8,
         };
         let rank_grid = vec![16, 24, 32, 40, 48, 56, 64];
-        let policy = PolicyShape {
+        let mut policy = PolicyShape {
             state_dim: crate::rl::state_dim(),
             n_actions: rank_grid.len(),
             rank_grid,
             bc_accuracy: 0.0,
             param_count: 0,
-            params_file: "policy_params.bin".to_string(),
+            params_file: "<synthetic>".to_string(),
+            // Smaller encoder than the AOT artifact's (d=64): the host
+            // forward runs per decision, and a d=32 policy keeps it cheap.
+            d_model: 32,
+            n_blocks: 2,
+            n_heads: 4,
         };
+        policy.param_count = policy.flat_param_count();
         let mut artifact_files = BTreeMap::new();
-        for name in ["full_attn", "power_iter", "lm_logits", "lm_eval_loss"] {
+        for name in ["full_attn", "power_iter", "lm_logits", "lm_eval_loss", "policy_net",
+            "lm_train_step"]
+        {
             artifact_files.insert(name.to_string(), format!("<host:{name}>"));
         }
         for b in &rank_buckets {
@@ -136,6 +183,7 @@ impl Manifest {
             batch: u(lmj.get("batch"), "lm.batch")?,
             param_count: u(j.get("lm_param_count"), "lm_param_count")?,
             lr: lmj.get("lr").and_then(|x| x.as_f64()).unwrap_or(5e-4),
+            weight_decay: lmj.get("weight_decay").and_then(|x| x.as_f64()).unwrap_or(0.01),
         };
         let kj = j.get("kernel").context("manifest: kernel")?;
         let kernel = KernelShape {
@@ -174,6 +222,10 @@ impl Manifest {
                 .and_then(|x| x.as_str())
                 .unwrap_or("policy_params.bin")
                 .to_string(),
+            // Defaults mirror python configs.PolicyConfig.
+            d_model: pj.get("d_model").and_then(|x| x.as_usize()).unwrap_or(64),
+            n_blocks: pj.get("n_blocks").and_then(|x| x.as_usize()).unwrap_or(2),
+            n_heads: pj.get("n_heads").and_then(|x| x.as_usize()).unwrap_or(4),
         };
         let mut artifact_files = BTreeMap::new();
         for (name, spec) in arts {
@@ -182,6 +234,12 @@ impl Manifest {
             }
         }
         Ok(Manifest { dir: dir.to_path_buf(), lm, kernel, policy, artifact_files })
+    }
+
+    /// True for in-memory manifests built by [`Manifest::synthetic`]
+    /// (no files on disk; policy weights are synthesized, not loaded).
+    pub fn is_synthetic(&self) -> bool {
+        self.dir.as_os_str() == "<host>"
     }
 
     /// Absolute path of a named artifact.
@@ -215,6 +273,54 @@ impl Manifest {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn rank_bucket_boundaries() {
+        // Regression for the single hoisted definition: exact bucket →
+        // itself, one past a bucket → the next, above the top → clamp.
+        let k = Manifest::synthetic(64, 16).kernel;
+        assert_eq!(k.rank_buckets, vec![16, 32, 48, 64]);
+        assert_eq!(k.rank_bucket(1), 16);
+        assert_eq!(k.rank_bucket(16), 16);
+        assert_eq!(k.rank_bucket(17), 32);
+        assert_eq!(k.rank_bucket(32), 32);
+        assert_eq!(k.rank_bucket(33), 48);
+        assert_eq!(k.rank_bucket(48), 48);
+        assert_eq!(k.rank_bucket(49), 64);
+        assert_eq!(k.rank_bucket(64), 64);
+        assert_eq!(k.rank_bucket(65), 64, "above the top bucket clamps");
+        assert_eq!(k.rank_bucket(0), 16);
+    }
+
+    #[test]
+    fn synthetic_manifest_is_complete_and_synthetic() {
+        let m = Manifest::synthetic(32, 8);
+        assert!(m.is_synthetic());
+        assert_eq!(m.lm.param_count, m.lm.flat_param_count());
+        assert_eq!(m.policy.param_count, m.policy.flat_param_count());
+        assert!(m.policy.param_count > 0);
+        assert_eq!(m.policy.state_dim, crate::rl::state_dim());
+        assert!(m.artifact_files.contains_key("policy_net"));
+        assert!(m.artifact_files.contains_key("lm_train_step"));
+    }
+
+    #[test]
+    fn policy_flat_count_matches_aot_layout_at_artifact_shape() {
+        // The AOT PolicyConfig (d=64, 2 blocks, 33-dim state, 7 actions)
+        // flattens to 106375 f32s (python policy_net.flat_param_count).
+        let p = PolicyShape {
+            state_dim: 33,
+            n_actions: 7,
+            rank_grid: vec![16, 24, 32, 40, 48, 56, 64],
+            bc_accuracy: 0.0,
+            param_count: 0,
+            params_file: String::new(),
+            d_model: 64,
+            n_blocks: 2,
+            n_heads: 4,
+        };
+        assert_eq!(p.flat_param_count(), 106_375);
+    }
 
     #[test]
     fn parses_generated_manifest_if_present() {

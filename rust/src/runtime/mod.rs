@@ -1,15 +1,54 @@
-//! PJRT runtime (L3 ↔ artifacts boundary): a dedicated device thread
-//! owns the non-Send PJRT client and compiled executables; callers use
-//! the Send `DeviceHandle` RPC and the typed `ArtifactRegistry` API.
+//! Runtime (L3 ↔ artifacts boundary): the typed, pluggable [`Backend`]
+//! API plus the [`ArtifactRegistry`] validation adapter over it.
+//!
+//! ## Backends
+//!
+//! | backend | construction | execution | completeness |
+//! |---------|--------------|-----------|--------------|
+//! | [`HostBackend`] | [`ArtifactRegistry::open_host`] | pure-Rust kernels on the calling thread | every [`Op`] |
+//! | `PjrtBackend` (feature `pjrt`) | [`ArtifactRegistry::open`] | compiled HLO artifacts on a dedicated device thread | every [`Op`] |
+//! | [`SimBackend`] | [`ArtifactRegistry::open_sim`] | host kernels + roofline latency projection | every [`Op`], `models_latency` |
+//!
+//! Support is declared through [`backend::Capabilities`] — an op a
+//! backend cannot run returns a typed "unsupported" error, never a
+//! panic — and per-op execute counts flow through [`backend::OpCounters`]
+//! into the serving engine's `Metrics::report()`.
+//!
+//! ## Migration from the stringly-typed runtime
+//!
+//! The old API dispatched kernels by artifact-name string through a
+//! process-global device handle. Artifact names now exist *only inside*
+//! backend implementations in this module; everything else calls typed
+//! methods:
+//!
+//! | old (string dispatch)                                   | new (typed)                              |
+//! |---------------------------------------------------------|------------------------------------------|
+//! | process-global device-handle singleton                  | backend owned per registry/engine        |
+//! | `device.execute("full_attn", vec![q, k, v])`            | `reg.full_attention(&q, &k, &v)`         |
+//! | `device.execute("lowrank_attn_r{b}", vec![u, s, vt, …])`| `reg.lowrank_attention(&svd, rank, &v)`  |
+//! | `device.execute("power_iter", vec![m, v0])`             | `reg.power_iter_sigma(&m, &v0)`          |
+//! | `device.execute("policy_net", vec![w, state])`          | `reg.policy_logits(&state)`              |
+//! | `device.execute("lm_logits", vec![p, toks])`            | `reg.lm_logits(&params, &tokens)`        |
+//! | `device.execute("lm_eval_loss", …)`                     | `reg.lm_eval_loss(&params, &t, &g)`      |
+//! | `device.execute("lm_train_step", …)`                    | `reg.lm_train_step(&mut p, &mut m, …)`   |
+//! | `device.warm("full_attn")` per name                     | `reg.warm_all()` / `Backend::warm(Op)`   |
+//! | `device.stats()` → `BTreeMap<String, u64>`              | `reg.ops()` → typed [`backend::OpCounters`] |
 
+pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod device;
 pub mod host;
+pub mod host_policy;
 pub mod manifest;
 pub mod registry;
+pub mod sim;
 pub mod tensor;
 
-pub use device::DeviceHandle;
+pub use backend::{Backend, Capabilities, Op, OpCounters};
+#[cfg(feature = "pjrt")]
+pub use device::PjrtBackend;
 pub use host::HostBackend;
 pub use manifest::{KernelShape, LmShape, Manifest, PolicyShape};
 pub use registry::ArtifactRegistry;
+pub use sim::SimBackend;
 pub use tensor::HostTensor;

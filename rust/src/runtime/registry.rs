@@ -1,20 +1,33 @@
-//! Typed high-level entry points over the device thread: rank-bucket
-//! dispatch for the masked factor-attention kernel, full attention,
-//! power iteration, the transformer policy and the LM train/eval/logits
-//! graphs.
+//! Typed high-level entry points over a pluggable [`Backend`]: shape and
+//! rank-bucket validation for the masked factor-attention op, full
+//! attention, power iteration, the transformer policy and the LM
+//! train/eval/logits graphs.
+//!
+//! The registry is a *thin adapter*: it owns the manifest (the single
+//! source of truth for shapes), validates every call against it, rounds
+//! requested ranks to compiled buckets, resolves policy weights, and
+//! then dispatches to the typed trait methods of the backend it owns.
+//! No artifact-name strings cross this boundary in either direction.
 
-use super::device::DeviceHandle;
+use super::backend::{Backend, Capabilities, Op, OpCounters};
+use super::host::HostBackend;
 use super::manifest::Manifest;
-use super::tensor::HostTensor;
+use super::sim::SimBackend;
 use crate::linalg::{Mat, Svd};
+use crate::sim::DeviceProfile;
 use anyhow::Result;
+use std::sync::Arc;
 
-/// High-level artifact API used by the coordinator and trainers.
+/// High-level execution API used by the coordinator and trainers: a
+/// manifest plus the backend instance it validates calls for. Engines
+/// own one registry each (`Arc`-shared across their workers).
 pub struct ArtifactRegistry {
     pub manifest: Manifest,
-    pub device: DeviceHandle,
-    /// Lazily loaded transformer-policy weights (runtime argument to the
-    /// policy artifact — see DESIGN.md §9 on constant elision).
+    backend: Box<dyn Backend>,
+    /// Lazily resolved transformer-policy weights (runtime argument to
+    /// the policy op — see DESIGN.md §9 on constant elision). Loaded
+    /// from the sidecar file for artifact manifests; synthesized
+    /// deterministically for synthetic ones.
     policy_weights: std::sync::OnceLock<Vec<f32>>,
 }
 
@@ -23,114 +36,214 @@ impl ArtifactRegistry {
         Self::open(&Manifest::default_dir())
     }
 
+    /// Registry over the artifacts in `dir`. With the `pjrt` feature the
+    /// backend is the PJRT device thread; otherwise the manifest's
+    /// shapes drive the host backend.
     pub fn open(dir: &std::path::Path) -> Result<Self> {
-        Ok(ArtifactRegistry {
-            manifest: Manifest::load(dir)?,
-            device: DeviceHandle::spawn(dir)?,
-            policy_weights: std::sync::OnceLock::new(),
-        })
+        let manifest = Manifest::load(dir)?;
+        #[cfg(feature = "pjrt")]
+        let backend: Box<dyn Backend> =
+            Box::new(super::device::PjrtBackend::spawn(manifest.clone())?);
+        #[cfg(not(feature = "pjrt"))]
+        let backend: Box<dyn Backend> = Box::new(HostBackend::new(manifest.clone()));
+        Ok(Self::with_backend(manifest, backend))
     }
 
-    /// Registry over the pure-Rust host backend with a synthetic manifest
-    /// (no artifacts on disk). `kernel_seq_len`/`head_dim` size the
-    /// attention kernels; the LM uses a small fixed shape. The AOT-only
-    /// entry points (`policy_net`, `lm_train_step`) return errors — use
-    /// non-Hlo policy sources with host registries.
+    /// Registry over the pure-Rust host backend with a synthetic
+    /// manifest (no artifacts on disk). `kernel_seq_len`/`head_dim` size
+    /// the attention kernels; the LM and policy use small fixed shapes.
+    /// Every op is available — `PolicySource::Hlo` and `LmTrainer` run
+    /// fully offline.
     pub fn open_host(kernel_seq_len: usize, head_dim: usize) -> Self {
         let manifest = Manifest::synthetic(kernel_seq_len, head_dim);
+        let backend = Box::new(HostBackend::new(manifest.clone()));
+        Self::with_backend(manifest, backend)
+    }
+
+    /// Registry over the hardware-simulating backend: host kernels plus
+    /// a roofline latency model for `profile` (see
+    /// [`ArtifactRegistry::projected_ms`]).
+    pub fn open_sim(kernel_seq_len: usize, head_dim: usize, profile: DeviceProfile) -> Self {
+        let manifest = Manifest::synthetic(kernel_seq_len, head_dim);
+        let backend = Box::new(SimBackend::new(manifest.clone(), profile));
+        Self::with_backend(manifest, backend)
+    }
+
+    /// Registry from a `--backend` spec string — the single parser every
+    /// CLI/example shares:
+    ///
+    /// * `auto` — artifacts if present, else the host backend;
+    /// * `host` — pure-Rust host backend, synthetic manifest;
+    /// * `sim[:a100|apple-m|cpu]` — host kernels + roofline latency
+    ///   projection (default profile `a100`);
+    /// * `pjrt` — the device backend; errors unless built with
+    ///   `--features pjrt`.
+    ///
+    /// Unknown kinds and profiles are rejected, never silently remapped.
+    pub fn open_spec(spec: &str) -> Result<Self> {
+        let (kind, profile) = match spec.split_once(':') {
+            Some((k, p)) => (k, Some(p)),
+            None => (spec, None),
+        };
+        anyhow::ensure!(
+            profile.is_none() || kind == "sim",
+            "backend '{kind}' takes no ':profile' suffix"
+        );
+        match kind {
+            "auto" => Ok(match Self::open_default() {
+                Ok(r) => r,
+                Err(e) => {
+                    crate::log_warn!(
+                        "artifacts unavailable ({e:#}); using the pure-Rust host backend"
+                    );
+                    Self::open_host(128, 32)
+                }
+            }),
+            "host" => Ok(Self::open_host(128, 32)),
+            "sim" => {
+                let profile = match profile.unwrap_or("a100") {
+                    "a100" => DeviceProfile::A100,
+                    "apple-m" => DeviceProfile::APPLE_M,
+                    "cpu" => DeviceProfile::CPU_DEFAULT,
+                    other => anyhow::bail!(
+                        "unknown sim profile '{other}' (expected a100|apple-m|cpu)"
+                    ),
+                };
+                Ok(Self::open_sim(128, 32, profile))
+            }
+            "pjrt" => {
+                #[cfg(feature = "pjrt")]
+                {
+                    Self::open_default()
+                }
+                #[cfg(not(feature = "pjrt"))]
+                {
+                    anyhow::bail!(
+                        "backend 'pjrt' requires building with `--features pjrt` \
+                         (this binary only has the host and sim backends)"
+                    )
+                }
+            }
+            other => anyhow::bail!("unknown backend '{other}' (auto|host|sim[:profile]|pjrt)"),
+        }
+    }
+
+    /// Registry over an explicit backend instance (tests, custom
+    /// deployments).
+    pub fn with_backend(manifest: Manifest, backend: Box<dyn Backend>) -> Self {
         ArtifactRegistry {
-            device: DeviceHandle::host(manifest.clone()),
             manifest,
+            backend,
             policy_weights: std::sync::OnceLock::new(),
         }
     }
 
-    /// Load (once) the flat policy weight vector from its sidecar file.
+    /// The backend executing this registry's ops.
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend.as_ref()
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    pub fn capabilities(&self) -> Capabilities {
+        self.backend.capabilities()
+    }
+
+    /// Shared per-op execute counters (folded into
+    /// `coordinator::Metrics::report()` by the serving engine).
+    pub fn ops(&self) -> Arc<OpCounters> {
+        self.backend.ops()
+    }
+
+    /// Cumulative projected device latency, when the backend models one.
+    pub fn projected_ms(&self) -> Option<f64> {
+        self.backend.projected_ms()
+    }
+
+    /// Warm every supported op (compile artifacts ahead of first use on
+    /// PJRT; validation elsewhere).
+    pub fn warm_all(&self) -> Result<()> {
+        self.warm_ops(&Op::ALL)
+    }
+
+    /// Warm a subset of ops, silently skipping ones the backend does not
+    /// support (serving demos warm only the kernels they exercise).
+    pub fn warm_ops(&self, ops: &[Op]) -> Result<()> {
+        let caps = self.backend.capabilities();
+        for &op in ops {
+            if caps.supports(op) {
+                self.backend.warm(op)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Load (or synthesize) the flat policy weight vector once.
     fn policy_weights(&self) -> Result<&[f32]> {
         if let Some(w) = self.policy_weights.get() {
             return Ok(w);
         }
-        let path = self.manifest.dir.join(&self.manifest.policy.params_file);
-        let bytes = std::fs::read(&path)
-            .map_err(|e| anyhow::anyhow!("reading policy weights {path:?}: {e}"))?;
-        anyhow::ensure!(
-            bytes.len() == self.manifest.policy.param_count * 4,
-            "policy weight file size {} vs manifest count {}",
-            bytes.len(),
-            self.manifest.policy.param_count
-        );
-        let w: Vec<f32> = bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect();
+        let w = if self.manifest.is_synthetic() {
+            super::host_policy::synthesize_weights(&self.manifest.policy, 0x9011C7)
+        } else {
+            let path = self.manifest.dir.join(&self.manifest.policy.params_file);
+            let bytes = std::fs::read(&path)
+                .map_err(|e| anyhow::anyhow!("reading policy weights {path:?}: {e}"))?;
+            anyhow::ensure!(
+                bytes.len() == self.manifest.policy.param_count * 4,
+                "policy weight file size {} vs manifest count {}",
+                bytes.len(),
+                self.manifest.policy.param_count
+            );
+            bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()
+        };
         let _ = self.policy_weights.set(w);
         Ok(self.policy_weights.get().unwrap())
     }
 
-    /// Smallest compiled rank bucket ≥ the requested rank (DESIGN.md §9);
-    /// falls back to the largest bucket.
+    /// Smallest compiled rank bucket ≥ the requested rank; falls back to
+    /// the largest bucket. Delegates to the single hoisted definition on
+    /// [`super::KernelShape`].
     pub fn rank_bucket(&self, rank: usize) -> usize {
-        let buckets = &self.manifest.kernel.rank_buckets;
-        buckets
-            .iter()
-            .copied()
-            .filter(|&b| b >= rank)
-            .min()
-            .unwrap_or_else(|| *buckets.iter().max().expect("non-empty buckets"))
+        self.manifest.kernel.rank_bucket(rank)
     }
 
-    /// Masked factor attention on the device: Y = U·diag(s⊙mask)·(Vᵀ·V).
+    /// Masked factor attention: Y = U·diag(s⊙mask)·(Vᵀ·V).
     pub fn lowrank_attention(&self, svd: &Svd, rank: usize, v_val: &Mat) -> Result<Mat> {
         let bucket = self.rank_bucket(rank);
         let n = self.manifest.kernel.seq_len;
         let d = self.manifest.kernel.head_dim;
         anyhow::ensure!(
             svd.u.rows() == n && v_val.rows() == n && v_val.cols() == d,
-            "artifact shape mismatch: svd {}x{}, v {:?} vs kernel {n}x{d}",
+            "kernel shape mismatch: svd {}x{}, v {:?} vs kernel {n}x{d}",
             svd.u.rows(),
             svd.u.cols(),
             v_val.shape()
         );
         anyhow::ensure!(svd.s.len() >= bucket, "need ≥{bucket} factors, have {}", svd.s.len());
-        let u = svd.u.take_cols(bucket);
-        let vt = svd.v.take_cols(bucket).transpose();
-        let s: Vec<f64> = svd.s[..bucket].to_vec();
-        let rank = rank.min(bucket);
-        let mask: Vec<f32> = (0..bucket).map(|i| if i < rank { 1.0 } else { 0.0 }).collect();
-        let out = self.device.execute(
-            &format!("lowrank_attn_r{bucket}"),
-            vec![
-                HostTensor::from_mat(&u),
-                HostTensor::from_f64s(&s),
-                HostTensor::from_mat(&vt),
-                HostTensor::from_mat(v_val),
-                HostTensor::f32(mask, &[bucket as i64]),
-            ],
-        )?;
-        Ok(out[0].to_mat(n, d))
+        self.backend.lowrank_attention(svd, bucket, rank.min(bucket), v_val)
     }
 
-    /// Full attention kernel on the device.
+    /// Full attention kernel.
     pub fn full_attention(&self, q: &Mat, k: &Mat, v: &Mat) -> Result<Mat> {
         let n = self.manifest.kernel.seq_len;
         let d = self.manifest.kernel.head_dim;
         anyhow::ensure!(q.shape() == (n, d), "q shape {:?} vs kernel {n}x{d}", q.shape());
-        let out = self.device.execute(
-            "full_attn",
-            vec![HostTensor::from_mat(q), HostTensor::from_mat(k), HostTensor::from_mat(v)],
-        )?;
-        Ok(out[0].to_mat(n, d))
+        self.backend.full_attention(q, k, v)
     }
 
-    /// Device-side power-iteration spectral norm.
+    /// Power-iteration spectral norm.
     pub fn power_iter_sigma(&self, m: &Mat, v0: &[f64]) -> Result<f64> {
-        let out = self
-            .device
-            .execute("power_iter", vec![HostTensor::from_mat(m), HostTensor::from_f64s(v0)])?;
-        Ok(out[0].scalar())
+        anyhow::ensure!(v0.len() == m.cols(), "v0 length {} vs {} cols", v0.len(), m.cols());
+        self.backend.power_iter_sigma(m, v0)
     }
 
-    /// Transformer-policy logits (baked weights).
+    /// Transformer-policy logits over the rank grid.
     pub fn policy_logits(&self, state: &[f64]) -> Result<Vec<f64>> {
         anyhow::ensure!(
             state.len() == self.manifest.policy.state_dim,
@@ -138,18 +251,35 @@ impl ArtifactRegistry {
             state.len(),
             self.manifest.policy.state_dim
         );
-        let weights = self.policy_weights()?.to_vec();
-        let wlen = weights.len() as i64;
-        let out = self.device.execute(
-            "policy_net",
-            vec![HostTensor::f32(weights, &[wlen]), HostTensor::from_f64s(state)],
-        )?;
-        Ok(out[0].as_f32().unwrap().iter().map(|&x| x as f64).collect())
+        let weights = self.policy_weights()?;
+        self.backend.policy_logits(weights, state)
     }
 
     // ---- LM graphs (e2e training / eval / serving) ----
 
-    /// One fused AdamW train step. State tensors are (P,)-vectors.
+    fn check_lm_batch(&self, what: &str, t: &[i32]) -> Result<()> {
+        let lm = &self.manifest.lm;
+        anyhow::ensure!(
+            t.len() == lm.batch * lm.seq_len,
+            "{what}: got {} tokens, want {}x{}",
+            t.len(),
+            lm.batch,
+            lm.seq_len
+        );
+        Ok(())
+    }
+
+    fn check_lm_params(&self, p: &[f32]) -> Result<()> {
+        anyhow::ensure!(
+            p.len() == self.manifest.lm.param_count,
+            "param vector len {} vs manifest {}",
+            p.len(),
+            self.manifest.lm.param_count
+        );
+        Ok(())
+    }
+
+    /// One fused AdamW train step. State vectors are (P,)-shaped.
     #[allow(clippy::too_many_arguments)]
     pub fn lm_train_step(
         &self,
@@ -160,55 +290,25 @@ impl ArtifactRegistry {
         tokens: &[i32],
         targets: &[i32],
     ) -> Result<f64> {
-        let lm = &self.manifest.lm;
-        let p = lm.param_count as i64;
-        let bl = [lm.batch as i64, lm.seq_len as i64];
-        let out = self.device.execute(
-            "lm_train_step",
-            vec![
-                HostTensor::f32(std::mem::take(params), &[p]),
-                HostTensor::f32(std::mem::take(adam_m), &[p]),
-                HostTensor::f32(std::mem::take(adam_v), &[p]),
-                HostTensor::scalar_f32(step),
-                HostTensor::i32(tokens.to_vec(), &bl),
-                HostTensor::i32(targets.to_vec(), &bl),
-            ],
-        )?;
-        anyhow::ensure!(out.len() == 4, "train_step returns 4 outputs, got {}", out.len());
-        let mut it = out.into_iter();
-        *params = it.next().unwrap().expect_f32();
-        *adam_m = it.next().unwrap().expect_f32();
-        *adam_v = it.next().unwrap().expect_f32();
-        Ok(it.next().unwrap().scalar())
+        self.check_lm_params(params)?;
+        self.check_lm_batch("tokens", tokens)?;
+        self.check_lm_batch("targets", targets)?;
+        self.backend.lm_train_step(params, adam_m, adam_v, step, tokens, targets)
     }
 
     /// Evaluation loss on one batch.
     pub fn lm_eval_loss(&self, params: &[f32], tokens: &[i32], targets: &[i32]) -> Result<f64> {
-        let lm = &self.manifest.lm;
-        let bl = [lm.batch as i64, lm.seq_len as i64];
-        let out = self.device.execute(
-            "lm_eval_loss",
-            vec![
-                HostTensor::f32(params.to_vec(), &[lm.param_count as i64]),
-                HostTensor::i32(tokens.to_vec(), &bl),
-                HostTensor::i32(targets.to_vec(), &bl),
-            ],
-        )?;
-        Ok(out[0].scalar())
+        self.check_lm_params(params)?;
+        self.check_lm_batch("tokens", tokens)?;
+        self.check_lm_batch("targets", targets)?;
+        self.backend.lm_eval_loss(params, tokens, targets)
     }
 
-    /// Inference logits (Pallas-kernel trunk): (B·L·V) flattened.
+    /// Inference logits: (B·L·V) flattened.
     pub fn lm_logits(&self, params: &[f32], tokens: &[i32]) -> Result<Vec<f32>> {
-        let lm = &self.manifest.lm;
-        let bl = [lm.batch as i64, lm.seq_len as i64];
-        let out = self.device.execute(
-            "lm_logits",
-            vec![
-                HostTensor::f32(params.to_vec(), &[lm.param_count as i64]),
-                HostTensor::i32(tokens.to_vec(), &bl),
-            ],
-        )?;
-        Ok(out.into_iter().next().unwrap().expect_f32())
+        self.check_lm_params(params)?;
+        self.check_lm_batch("tokens", tokens)?;
+        self.backend.lm_logits(params, tokens)
     }
 }
 
@@ -229,12 +329,64 @@ mod tests {
     }
 
     #[test]
-    fn bucket_selection() {
-        let Some(reg) = registry() else { return };
+    fn bucket_selection_on_host_registry() {
+        let reg = ArtifactRegistry::open_host(64, 16);
         assert_eq!(reg.rank_bucket(16), 16);
         assert_eq!(reg.rank_bucket(20), 32);
         assert_eq!(reg.rank_bucket(64), 64);
         assert_eq!(reg.rank_bucket(100), 64);
+    }
+
+    #[test]
+    fn registry_validates_shapes_before_dispatch() {
+        let reg = ArtifactRegistry::open_host(32, 8);
+        let mut rng = Pcg32::seeded(1);
+        let wrong = Mat::randn(16, 8, 1.0, &mut rng);
+        assert!(reg.full_attention(&wrong, &wrong, &wrong).is_err());
+        assert!(reg.policy_logits(&[0.0; 4]).is_err());
+        assert!(reg.lm_logits(&[0.0f32; 4], &[0i32; 4]).is_err());
+        // Dispatch never happened: the backend op counters stay zero.
+        assert_eq!(reg.ops().total(), 0);
+    }
+
+    #[test]
+    fn host_registry_reports_backend_and_capabilities() {
+        let reg = ArtifactRegistry::open_host(32, 8);
+        assert_eq!(reg.backend_name(), "host");
+        assert!(reg.capabilities().supports(Op::LmTrainStep));
+        assert!(reg.projected_ms().is_none());
+        assert!(reg.warm_all().is_ok());
+        let sim = ArtifactRegistry::open_sim(32, 8, DeviceProfile::A100);
+        assert_eq!(sim.backend_name(), "sim");
+        assert_eq!(sim.projected_ms(), Some(0.0));
+    }
+
+    #[test]
+    fn open_spec_parses_backends_and_rejects_typos() {
+        assert_eq!(ArtifactRegistry::open_spec("host").unwrap().backend_name(), "host");
+        assert_eq!(ArtifactRegistry::open_spec("sim").unwrap().backend_name(), "sim");
+        assert_eq!(
+            ArtifactRegistry::open_spec("sim:apple-m").unwrap().backend_name(),
+            "sim"
+        );
+        assert!(ArtifactRegistry::open_spec("hots").is_err(), "typo must be rejected");
+        assert!(ArtifactRegistry::open_spec("sim:foo").is_err(), "unknown profile rejected");
+        assert!(ArtifactRegistry::open_spec("host:a100").is_err(), "profile on non-sim");
+        #[cfg(not(feature = "pjrt"))]
+        assert!(
+            ArtifactRegistry::open_spec("pjrt").is_err(),
+            "pjrt without the feature must error, not silently degrade"
+        );
+    }
+
+    #[test]
+    fn synthetic_policy_weights_resolve_once() {
+        let reg = ArtifactRegistry::open_host(32, 8);
+        let state = vec![0.2f64; reg.manifest.policy.state_dim];
+        let a = reg.policy_logits(&state).unwrap();
+        let b = reg.policy_logits(&state).unwrap();
+        assert_eq!(a, b, "cached weights must be deterministic");
+        assert_eq!(a.len(), reg.manifest.policy.n_actions);
     }
 
     #[test]
@@ -252,10 +404,10 @@ mod tests {
         let a = attention_matrix(&inp);
         let rank = 20; // → bucket 32
         let svd = top_k_svd(&a, reg.rank_bucket(rank), 3);
-        let via_device = reg.lowrank_attention(&svd, rank, &inp.v).unwrap();
+        let via_backend = reg.lowrank_attention(&svd, rank, &inp.v).unwrap();
         let on_host = crate::attention::lowrank_attention_output(&svd, rank, &inp.v);
-        let diff = via_device.max_abs_diff(&on_host);
-        assert!(diff < 1e-4, "device vs host diff {diff}");
+        let diff = via_backend.max_abs_diff(&on_host);
+        assert!(diff < 1e-4, "backend vs host diff {diff}");
     }
 
     #[test]

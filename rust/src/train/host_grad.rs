@@ -1,0 +1,631 @@
+//! Host gradient of the decoder LM + the fused AdamW update — the pure-
+//! Rust equivalent of the `lm_train_step` artifact
+//! (python/compile/model.py::train_step), closing the host backend's
+//! last PJRT-only gap so [`super::LmTrainer`] runs fully offline.
+//!
+//! The forward mirrors [`super::HostLm`] under full-rank causal
+//! attention (the differentiable train path — the low-rank approximators
+//! are a serving-time substitution, exactly as in the AOT graph, which
+//! trains through the `ref` attention oracle). The backward is a
+//! hand-written reverse pass over the same flat f32 parameter layout:
+//! cross-entropy → unembedding → final layernorm → per-layer FFN/GELU,
+//! layernorm, causal-softmax attention and QKV/output projections →
+//! positional/token embeddings. Gradients accumulate in f64 and cross
+//! back to f32 only at the AdamW update, matching the boundary precision
+//! of the device path.
+
+use crate::linalg::{matmul, matmul_at, matmul_bt, Mat};
+use crate::runtime::LmShape;
+use anyhow::Result;
+
+struct LayerParams {
+    ln1_g: Vec<f64>,
+    ln1_b: Vec<f64>,
+    wq: Mat,
+    wk: Mat,
+    wv: Mat,
+    wo: Mat,
+    ln2_g: Vec<f64>,
+    ln2_b: Vec<f64>,
+    w1: Mat,
+    b1: Vec<f64>,
+    w2: Mat,
+    b2: Vec<f64>,
+}
+
+struct Params {
+    embed: Mat, // V × d
+    pos: Mat,   // L × d
+    layers: Vec<LayerParams>,
+    lnf_g: Vec<f64>,
+    lnf_b: Vec<f64>,
+    head: Mat, // d × V
+}
+
+/// Gradient accumulator with the same structure; flattened back into the
+/// AOT layout at the end (so no offset bookkeeping can drift from the
+/// parse order).
+struct Grads {
+    embed: Mat,
+    pos: Mat,
+    layers: Vec<LayerGrads>,
+    lnf_g: Vec<f64>,
+    lnf_b: Vec<f64>,
+    head: Mat,
+}
+
+struct LayerGrads {
+    ln1_g: Vec<f64>,
+    ln1_b: Vec<f64>,
+    wq: Mat,
+    wk: Mat,
+    wv: Mat,
+    wo: Mat,
+    ln2_g: Vec<f64>,
+    ln2_b: Vec<f64>,
+    w1: Mat,
+    b1: Vec<f64>,
+    w2: Mat,
+    b2: Vec<f64>,
+}
+
+fn parse(params: &[f32], shape: &LmShape) -> Params {
+    assert_eq!(params.len(), shape.param_count, "param vector size");
+    let d = shape.d_model;
+    let mut off = 0usize;
+    let mut take = |rows: usize, cols: usize| -> Mat {
+        let n = rows * cols;
+        let m = Mat::from_f32(rows, cols, &params[off..off + n]);
+        off += n;
+        m
+    };
+    // Order MUST mirror python model.py::param_slices / HostLm::from_flat.
+    let embed = take(shape.vocab, d);
+    let pos = take(shape.seq_len, d);
+    let mut layers = Vec::with_capacity(shape.n_layers);
+    for _ in 0..shape.n_layers {
+        layers.push(LayerParams {
+            ln1_g: take(1, d).into_vec(),
+            ln1_b: take(1, d).into_vec(),
+            wq: take(d, d),
+            wk: take(d, d),
+            wv: take(d, d),
+            wo: take(d, d),
+            ln2_g: take(1, d).into_vec(),
+            ln2_b: take(1, d).into_vec(),
+            w1: take(d, shape.d_ff),
+            b1: take(1, shape.d_ff).into_vec(),
+            w2: take(shape.d_ff, d),
+            b2: take(1, d).into_vec(),
+        });
+    }
+    let lnf_g = take(1, d).into_vec();
+    let lnf_b = take(1, d).into_vec();
+    let head = take(d, shape.vocab);
+    Params { embed, pos, layers, lnf_g, lnf_b, head }
+}
+
+impl Grads {
+    fn zeros(shape: &LmShape) -> Grads {
+        let d = shape.d_model;
+        Grads {
+            embed: Mat::zeros(shape.vocab, d),
+            pos: Mat::zeros(shape.seq_len, d),
+            layers: (0..shape.n_layers)
+                .map(|_| LayerGrads {
+                    ln1_g: vec![0.0; d],
+                    ln1_b: vec![0.0; d],
+                    wq: Mat::zeros(d, d),
+                    wk: Mat::zeros(d, d),
+                    wv: Mat::zeros(d, d),
+                    wo: Mat::zeros(d, d),
+                    ln2_g: vec![0.0; d],
+                    ln2_b: vec![0.0; d],
+                    w1: Mat::zeros(d, shape.d_ff),
+                    b1: vec![0.0; shape.d_ff],
+                    w2: Mat::zeros(shape.d_ff, d),
+                    b2: vec![0.0; d],
+                })
+                .collect(),
+            lnf_g: vec![0.0; d],
+            lnf_b: vec![0.0; d],
+            head: Mat::zeros(d, shape.vocab),
+        }
+    }
+
+    /// Flatten into the AOT parameter layout as f32.
+    fn into_flat(self, shape: &LmShape) -> Vec<f32> {
+        let mut out: Vec<f32> = Vec::with_capacity(shape.param_count);
+        let push_mat = |out: &mut Vec<f32>, m: &Mat| {
+            out.extend(m.data().iter().map(|&x| x as f32));
+        };
+        let push_vec = |out: &mut Vec<f32>, v: &[f64]| {
+            out.extend(v.iter().map(|&x| x as f32));
+        };
+        push_mat(&mut out, &self.embed);
+        push_mat(&mut out, &self.pos);
+        for l in &self.layers {
+            push_vec(&mut out, &l.ln1_g);
+            push_vec(&mut out, &l.ln1_b);
+            push_mat(&mut out, &l.wq);
+            push_mat(&mut out, &l.wk);
+            push_mat(&mut out, &l.wv);
+            push_mat(&mut out, &l.wo);
+            push_vec(&mut out, &l.ln2_g);
+            push_vec(&mut out, &l.ln2_b);
+            push_mat(&mut out, &l.w1);
+            push_vec(&mut out, &l.b1);
+            push_mat(&mut out, &l.w2);
+            push_vec(&mut out, &l.b2);
+        }
+        push_vec(&mut out, &self.lnf_g);
+        push_vec(&mut out, &self.lnf_b);
+        push_mat(&mut out, &self.head);
+        debug_assert_eq!(out.len(), shape.param_count);
+        out
+    }
+}
+
+// ── layernorm with cached normalization state ──
+
+struct LnCache {
+    xhat: Mat,
+    inv: Vec<f64>,
+}
+
+fn ln_forward(x: &Mat, g: &[f64], b: &[f64]) -> (Mat, LnCache) {
+    let (n, d) = x.shape();
+    let mut y = Mat::zeros(n, d);
+    let mut xhat = Mat::zeros(n, d);
+    let mut inv = vec![0.0; n];
+    for i in 0..n {
+        let row = x.row(i);
+        let mu = row.iter().sum::<f64>() / d as f64;
+        let var = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f64>() / d as f64;
+        let iv = 1.0 / (var + 1e-5).sqrt();
+        inv[i] = iv;
+        for j in 0..d {
+            let h = (row[j] - mu) * iv;
+            xhat.row_mut(i)[j] = h;
+            y.row_mut(i)[j] = h * g[j] + b[j];
+        }
+    }
+    (y, LnCache { xhat, inv })
+}
+
+fn ln_backward(
+    dy: &Mat,
+    cache: &LnCache,
+    g: &[f64],
+    dg: &mut [f64],
+    db: &mut [f64],
+) -> Mat {
+    let (n, d) = dy.shape();
+    let mut dx = Mat::zeros(n, d);
+    for i in 0..n {
+        let dyr = dy.row(i);
+        let xh = cache.xhat.row(i);
+        for j in 0..d {
+            dg[j] += dyr[j] * xh[j];
+            db[j] += dyr[j];
+        }
+        // dxhat = dy ⊙ g; dx = inv·(dxhat − mean(dxhat) − xhat·mean(dxhat⊙xhat)).
+        let mut mean_dxh = 0.0;
+        let mut mean_dxh_xh = 0.0;
+        for j in 0..d {
+            let dxh = dyr[j] * g[j];
+            mean_dxh += dxh;
+            mean_dxh_xh += dxh * xh[j];
+        }
+        mean_dxh /= d as f64;
+        mean_dxh_xh /= d as f64;
+        let dxr = dx.row_mut(i);
+        for j in 0..d {
+            let dxh = dyr[j] * g[j];
+            dxr[j] = cache.inv[i] * (dxh - mean_dxh - xh[j] * mean_dxh_xh);
+        }
+    }
+    dx
+}
+
+// ── gelu (tanh approximation, matching jax.nn.gelu) ──
+
+fn gelu(x: f64) -> f64 {
+    0.5 * x * (1.0 + ((2.0 / std::f64::consts::PI).sqrt() * (x + 0.044715 * x * x * x)).tanh())
+}
+
+fn gelu_grad(x: f64) -> f64 {
+    let c = (2.0 / std::f64::consts::PI).sqrt();
+    let u = c * (x + 0.044715 * x * x * x);
+    let t = u.tanh();
+    let sech2 = 1.0 - t * t;
+    0.5 * (1.0 + t) + 0.5 * x * sech2 * c * (1.0 + 3.0 * 0.044715 * x * x)
+}
+
+// ── causal softmax attention with cached attention matrices ──
+
+fn slice_head(m: &Mat, lo: usize, hi: usize) -> Mat {
+    let n = m.rows();
+    let mut out = Mat::zeros(n, hi - lo);
+    for i in 0..n {
+        out.row_mut(i).copy_from_slice(&m.row(i)[lo..hi]);
+    }
+    out
+}
+
+fn scatter_head(dst: &mut Mat, src: &Mat, lo: usize) {
+    for i in 0..src.rows() {
+        let row = dst.row_mut(i);
+        for (j, &v) in src.row(i).iter().enumerate() {
+            row[lo + j] += v;
+        }
+    }
+}
+
+/// Forward one causal softmax head; returns (Y, A).
+fn attn_forward(q: &Mat, k: &Mat, v: &Mat) -> (Mat, Mat) {
+    let (n, hd) = q.shape();
+    let scale = 1.0 / (hd as f64).sqrt();
+    let mut a = Mat::zeros(n, n);
+    for i in 0..n {
+        let qi = q.row(i);
+        let mut max = f64::NEG_INFINITY;
+        let mut scores = vec![0.0f64; i + 1];
+        for (j, s) in scores.iter_mut().enumerate() {
+            let kj = k.row(j);
+            *s = qi.iter().zip(kj).map(|(x, y)| x * y).sum::<f64>() * scale;
+            max = max.max(*s);
+        }
+        let mut denom = 0.0;
+        for s in scores.iter_mut() {
+            *s = (*s - max).exp();
+            denom += *s;
+        }
+        let ar = a.row_mut(i);
+        for (j, &s) in scores.iter().enumerate() {
+            ar[j] = s / denom;
+        }
+    }
+    (matmul(&a, v), a)
+}
+
+/// Backward one head: given dY and the cached A, accumulate (dQ, dK, dV).
+fn attn_backward(dy: &Mat, a: &Mat, q: &Mat, k: &Mat, v: &Mat) -> (Mat, Mat, Mat) {
+    let (n, hd) = q.shape();
+    let scale = 1.0 / (hd as f64).sqrt();
+    let dv = matmul_at(a, dy); // Aᵀ·dY
+    let da = matmul_bt(dy, v); // dY·Vᵀ
+    // dS = A ⊙ (dA − rowsum(dA ⊙ A)); masked (j > i) entries have A = 0.
+    let mut ds = Mat::zeros(n, n);
+    for i in 0..n {
+        let ar = a.row(i);
+        let dar = da.row(i);
+        let dot: f64 = ar.iter().zip(dar).map(|(x, y)| x * y).sum();
+        let dsr = ds.row_mut(i);
+        for j in 0..=i {
+            dsr[j] = ar[j] * (dar[j] - dot) * scale;
+        }
+    }
+    let dq = matmul(&ds, k);
+    let dk = matmul_at(&ds, q); // dSᵀ·Q
+    (dq, dk, dv)
+}
+
+/// Loss and flat gradient of the mean next-token cross-entropy over one
+/// (B, L) batch under full-rank causal attention. The gradient layout is
+/// the AOT flat parameter layout.
+pub fn lm_loss_and_grad(
+    params: &[f32],
+    shape: &LmShape,
+    tokens: &[i32],
+    targets: &[i32],
+) -> Result<(f64, Vec<f32>)> {
+    let (b, n, d) = (shape.batch, shape.seq_len, shape.d_model);
+    anyhow::ensure!(params.len() == shape.param_count, "param vector size");
+    anyhow::ensure!(tokens.len() == b * n && targets.len() == b * n, "token batch shape");
+    let p = parse(params, shape);
+    let mut g = Grads::zeros(shape);
+    let n_heads = shape.n_heads;
+    let hd = d / n_heads;
+    let total_positions = (b * n) as f64;
+    let mut total_loss = 0.0;
+
+    for row in 0..b {
+        let toks = &tokens[row * n..(row + 1) * n];
+        let tgts = &targets[row * n..(row + 1) * n];
+        let clamp = |t: i32| t.clamp(0, shape.vocab as i32 - 1) as usize;
+
+        // ── forward with caches ──
+        let mut x = Mat::zeros(n, d);
+        for (i, &t) in toks.iter().enumerate() {
+            let e = p.embed.row(clamp(t));
+            let ps = p.pos.row(i);
+            for (j, v) in x.row_mut(i).iter_mut().enumerate() {
+                *v = e[j] + ps[j];
+            }
+        }
+        struct LayerCache {
+            h: Mat,
+            ln1: LnCache,
+            q: Mat,
+            k: Mat,
+            v: Mat,
+            heads_a: Vec<Mat>,
+            cat: Mat,
+            h2: Mat,
+            ln2: LnCache,
+            ff_pre: Mat,
+        }
+        let mut caches: Vec<LayerCache> = Vec::with_capacity(shape.n_layers);
+        for lp in &p.layers {
+            let (h, ln1) = ln_forward(&x, &lp.ln1_g, &lp.ln1_b);
+            let q = matmul(&h, &lp.wq);
+            let k = matmul(&h, &lp.wk);
+            let v = matmul(&h, &lp.wv);
+            let mut cat = Mat::zeros(n, d);
+            let mut heads_a = Vec::with_capacity(n_heads);
+            for head in 0..n_heads {
+                let (lo, hi) = (head * hd, (head + 1) * hd);
+                let (y, a) =
+                    attn_forward(&slice_head(&q, lo, hi), &slice_head(&k, lo, hi), &slice_head(&v, lo, hi));
+                for i in 0..n {
+                    cat.row_mut(i)[lo..hi].copy_from_slice(y.row(i));
+                }
+                heads_a.push(a);
+            }
+            x.add_inplace(&matmul(&cat, &lp.wo));
+            let (h2, ln2) = ln_forward(&x, &lp.ln2_g, &lp.ln2_b);
+            let mut ff_pre = matmul(&h2, &lp.w1);
+            for i in 0..n {
+                for (j, v) in ff_pre.row_mut(i).iter_mut().enumerate() {
+                    *v += lp.b1[j];
+                }
+            }
+            let ff_act = ff_pre.map(gelu);
+            let mut ff2 = matmul(&ff_act, &lp.w2);
+            for i in 0..n {
+                for (j, v) in ff2.row_mut(i).iter_mut().enumerate() {
+                    *v += lp.b2[j];
+                }
+            }
+            x.add_inplace(&ff2);
+            caches.push(LayerCache { h, ln1, q, k, v, heads_a, cat, h2, ln2, ff_pre });
+        }
+        let (xf, lnf) = ln_forward(&x, &p.lnf_g, &p.lnf_b);
+        let logits = matmul(&xf, &p.head);
+
+        // ── loss + dlogits (softmax − onehot, scaled by 1/(B·L)) ──
+        let mut dlogits = Mat::zeros(n, shape.vocab);
+        for i in 0..n {
+            let lr = logits.row(i);
+            let max = lr.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+            let denom: f64 = lr.iter().map(|v| (v - max).exp()).sum();
+            let lse = max + denom.ln();
+            let t = clamp(tgts[i]);
+            total_loss += lse - lr[t];
+            let dr = dlogits.row_mut(i);
+            for j in 0..shape.vocab {
+                dr[j] = ((lr[j] - max).exp() / denom
+                    - if j == t { 1.0 } else { 0.0 })
+                    / total_positions;
+            }
+        }
+
+        // ── backward ──
+        g.head.add_inplace(&matmul_at(&xf, &dlogits));
+        let dxf = matmul_bt(&dlogits, &p.head);
+        let mut dx = ln_backward(&dxf, &lnf, &p.lnf_g, &mut g.lnf_g, &mut g.lnf_b);
+
+        for (li, lp) in p.layers.iter().enumerate().rev() {
+            let c = &caches[li];
+            let gl = &mut g.layers[li];
+            // FFN sublayer: x_out = x_mid + gelu(ff_pre)·w2 + b2.
+            let ff_act = c.ff_pre.map(gelu);
+            for i in 0..n {
+                for (j, &v) in dx.row(i).iter().enumerate() {
+                    gl.b2[j] += v;
+                }
+            }
+            gl.w2.add_inplace(&matmul_at(&ff_act, &dx));
+            let dff_act = matmul_bt(&dx, &lp.w2);
+            let mut dff_pre = Mat::zeros(n, shape.d_ff);
+            for i in 0..n {
+                let pre = c.ff_pre.row(i);
+                let da = dff_act.row(i);
+                let dp = dff_pre.row_mut(i);
+                for j in 0..shape.d_ff {
+                    dp[j] = da[j] * gelu_grad(pre[j]);
+                    gl.b1[j] += dp[j];
+                }
+            }
+            gl.w1.add_inplace(&matmul_at(&c.h2, &dff_pre));
+            let dh2 = matmul_bt(&dff_pre, &lp.w1);
+            // Residual: dx (through the skip) + LN2 backward into x_mid.
+            dx.add_inplace(&ln_backward(&dh2, &c.ln2, &lp.ln2_g, &mut gl.ln2_g, &mut gl.ln2_b));
+
+            // Attention sublayer: x_mid = x_in + cat·wo.
+            gl.wo.add_inplace(&matmul_at(&c.cat, &dx));
+            let dcat = matmul_bt(&dx, &lp.wo);
+            let mut dq_full = Mat::zeros(n, d);
+            let mut dk_full = Mat::zeros(n, d);
+            let mut dv_full = Mat::zeros(n, d);
+            for head in 0..n_heads {
+                let (lo, hi) = (head * hd, (head + 1) * hd);
+                let (dq, dk, dv) = attn_backward(
+                    &slice_head(&dcat, lo, hi),
+                    &c.heads_a[head],
+                    &slice_head(&c.q, lo, hi),
+                    &slice_head(&c.k, lo, hi),
+                    &slice_head(&c.v, lo, hi),
+                );
+                scatter_head(&mut dq_full, &dq, lo);
+                scatter_head(&mut dk_full, &dk, lo);
+                scatter_head(&mut dv_full, &dv, lo);
+            }
+            gl.wq.add_inplace(&matmul_at(&c.h, &dq_full));
+            gl.wk.add_inplace(&matmul_at(&c.h, &dk_full));
+            gl.wv.add_inplace(&matmul_at(&c.h, &dv_full));
+            let mut dh = matmul_bt(&dq_full, &lp.wq);
+            dh.add_inplace(&matmul_bt(&dk_full, &lp.wk));
+            dh.add_inplace(&matmul_bt(&dv_full, &lp.wv));
+            dx.add_inplace(&ln_backward(&dh, &c.ln1, &lp.ln1_g, &mut gl.ln1_g, &mut gl.ln1_b));
+        }
+
+        // Embeddings.
+        for (i, &t) in toks.iter().enumerate() {
+            let dr = dx.row(i);
+            let er = g.embed.row_mut(clamp(t));
+            for (e, &v) in er.iter_mut().zip(dr) {
+                *e += v;
+            }
+            let pr = g.pos.row_mut(i);
+            for (pv, &v) in pr.iter_mut().zip(dr) {
+                *pv += v;
+            }
+        }
+    }
+
+    Ok((total_loss / total_positions, g.into_flat(shape)))
+}
+
+/// One fused AdamW update over the flat vectors, matching the AOT
+/// train-step hyperparameters (β₁ = 0.9, β₂ = 0.999, ε = 1e-8, decoupled
+/// weight decay). `step` counts completed steps before this one.
+pub fn adamw_step(
+    params: &mut [f32],
+    adam_m: &mut [f32],
+    adam_v: &mut [f32],
+    grad: &[f32],
+    step: f32,
+    lr: f64,
+    weight_decay: f64,
+) {
+    let (b1, b2, eps) = (0.9f64, 0.999f64, 1e-8f64);
+    let t = step as f64 + 1.0;
+    let mc = 1.0 - b1.powf(t);
+    let vc = 1.0 - b2.powf(t);
+    for i in 0..params.len() {
+        let gi = grad[i] as f64;
+        let m = b1 * adam_m[i] as f64 + (1.0 - b1) * gi;
+        let v = b2 * adam_v[i] as f64 + (1.0 - b2) * gi * gi;
+        adam_m[i] = m as f32;
+        adam_v[i] = v as f32;
+        let update = (m / mc) / ((v / vc).sqrt() + eps) + weight_decay * params[i] as f64;
+        params[i] = (params[i] as f64 - lr * update) as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+    use crate::train::HostLm;
+    use crate::util::Pcg32;
+
+    fn tiny_shape() -> LmShape {
+        let mut lm = Manifest::synthetic(16, 4).lm;
+        // Shrink for the finite-difference check.
+        lm.vocab = 11;
+        lm.seq_len = 6;
+        lm.d_model = 8;
+        lm.n_layers = 1;
+        lm.n_heads = 2;
+        lm.d_ff = 12;
+        lm.batch = 2;
+        lm.param_count = lm.flat_param_count();
+        lm
+    }
+
+    fn batch(shape: &LmShape, seed: u64) -> (Vec<f32>, Vec<i32>, Vec<i32>) {
+        let mut rng = Pcg32::seeded(seed);
+        let mut params = vec![0f32; shape.param_count];
+        rng.fill_normal_f32(&mut params, 0.05);
+        let bl = shape.batch * shape.seq_len;
+        let tokens: Vec<i32> = (0..bl).map(|_| rng.below(shape.vocab as u32) as i32).collect();
+        let targets: Vec<i32> =
+            tokens.iter().map(|&t| (t + 1) % shape.vocab as i32).collect();
+        (params, tokens, targets)
+    }
+
+    #[test]
+    fn loss_matches_host_lm_forward() {
+        let shape = tiny_shape();
+        let (params, tokens, targets) = batch(&shape, 3);
+        let (loss, _) = lm_loss_and_grad(&params, &shape, &tokens, &targets).unwrap();
+        let host = HostLm::from_flat(&params, &shape);
+        let mut want = 0.0;
+        for b in 0..shape.batch {
+            want += host.loss(
+                &tokens[b * shape.seq_len..(b + 1) * shape.seq_len],
+                &targets[b * shape.seq_len..(b + 1) * shape.seq_len],
+                &crate::train::AttnMethod::Full,
+                1,
+            );
+        }
+        want /= shape.batch as f64;
+        // Same math, possibly different summation association than the
+        // blocked reference kernel — equal to float-noise tolerance.
+        assert!((loss - want).abs() < 1e-6, "grad-path loss {loss} vs forward {want}");
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let shape = tiny_shape();
+        let (params, tokens, targets) = batch(&shape, 4);
+        let (_, grad) = lm_loss_and_grad(&params, &shape, &tokens, &targets).unwrap();
+
+        let loss_at = |p: &[f32]| -> f64 {
+            let host = HostLm::from_flat(p, &shape);
+            let mut total = 0.0;
+            for b in 0..shape.batch {
+                total += host.loss(
+                    &tokens[b * shape.seq_len..(b + 1) * shape.seq_len],
+                    &targets[b * shape.seq_len..(b + 1) * shape.seq_len],
+                    &crate::train::AttnMethod::Full,
+                    1,
+                );
+            }
+            total / shape.batch as f64
+        };
+
+        // Probe a deterministic spread of parameters across every group
+        // (embeddings, layer weights, final LN, head).
+        let mut rng = Pcg32::seeded(9);
+        let eps = 1e-3f32;
+        let mut checked = 0;
+        let mut max_rel: f64 = 0.0;
+        for _ in 0..24 {
+            let i = rng.range(0, params.len());
+            let mut up = params.clone();
+            up[i] += eps;
+            let mut dn = params.clone();
+            dn[i] -= eps;
+            let fd = (loss_at(&up) - loss_at(&dn)) / (2.0 * eps as f64);
+            let an = grad[i] as f64;
+            let denom = fd.abs().max(an.abs());
+            if denom < 1e-5 {
+                continue; // both ~zero — uninformative
+            }
+            max_rel = max_rel.max((fd - an).abs() / denom);
+            checked += 1;
+        }
+        assert!(checked >= 10, "too few informative probes ({checked})");
+        assert!(max_rel < 5e-2, "finite-diff mismatch: max rel err {max_rel}");
+    }
+
+    #[test]
+    fn adamw_steps_reduce_loss_on_repeated_batch() {
+        let shape = tiny_shape();
+        let (mut params, tokens, targets) = batch(&shape, 5);
+        let mut m = vec![0f32; params.len()];
+        let mut v = vec![0f32; params.len()];
+        let (first, _) = lm_loss_and_grad(&params, &shape, &tokens, &targets).unwrap();
+        let mut last = first;
+        for step in 0..12 {
+            let (loss, grad) = lm_loss_and_grad(&params, &shape, &tokens, &targets).unwrap();
+            adamw_step(&mut params, &mut m, &mut v, &grad, step as f32, shape.lr, shape.weight_decay);
+            last = loss;
+        }
+        assert!(last < first, "loss did not drop: {first} → {last}");
+    }
+}

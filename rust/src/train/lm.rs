@@ -1,8 +1,11 @@
-//! LM training / evaluation drivers over the AOT train-step artifact.
+//! LM training / evaluation drivers over the typed backend's
+//! `lm_train_step` op (the AOT artifact under PJRT, the hand-written
+//! backward + fused AdamW on the host — see [`super::host_grad`]).
 //!
 //! The Rust side owns all state (params + Adam moments as flat f32
-//! vectors) and drives the device thread step by step — Python never
-//! runs. PPL = exp(mean CE loss over validation batches).
+//! vectors) and drives the backend step by step — Python never runs,
+//! and no artifacts are required. PPL = exp(mean CE loss over
+//! validation batches).
 
 use crate::data::Corpus;
 use crate::runtime::ArtifactRegistry;

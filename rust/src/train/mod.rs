@@ -2,9 +2,11 @@
 //! and the swappable-attention sentiment classifier (Table 3).
 
 pub mod classifier;
+pub mod host_grad;
 pub mod host_lm;
 pub mod lm;
 
 pub use classifier::{AttnMethod, SentimentClassifier};
+pub use host_grad::{adamw_step, lm_loss_and_grad};
 pub use host_lm::HostLm;
 pub use lm::{generate_greedy, LmTrainer};

@@ -1,0 +1,272 @@
+//! Backend conformance suite: every compiled-in backend runs the same
+//! fixture through all typed ops; declared capabilities must match
+//! behavior (supported ops execute, unsupported ops error — never
+//! panic); host kernels must match the crate's reference kernels
+//! bit-for-bit at the f32 boundary; and the previously PJRT-only paths
+//! (`PolicySource::Hlo`, `LmTrainer`) must run end-to-end on the host
+//! with no artifacts present.
+
+use drrl::attention::{attention_matrix, full_attention, AttnInputs, MhsaWeights};
+use drrl::coordinator::{BatchPolicy, ControllerConfig, PolicySource, ServingEngine};
+use drrl::data::{Corpus, CorpusProfile};
+use drrl::linalg::{top_k_svd, Mat};
+use drrl::runtime::{ArtifactRegistry, Backend, HostBackend, Manifest, Op, SimBackend};
+use drrl::sim::DeviceProfile;
+use drrl::train::LmTrainer;
+use drrl::util::Pcg32;
+use std::sync::Arc;
+use std::time::Duration;
+
+const KERNEL_N: usize = 32;
+const HEAD_DIM: usize = 8;
+
+/// Every backend the default feature set compiles in, by name.
+fn backends() -> Vec<Box<dyn Backend>> {
+    let manifest = Manifest::synthetic(KERNEL_N, HEAD_DIM);
+    vec![
+        Box::new(HostBackend::new(manifest.clone())),
+        Box::new(SimBackend::new(manifest, DeviceProfile::A100)),
+    ]
+}
+
+fn fixture_inputs(seed: u64) -> AttnInputs {
+    let mut rng = Pcg32::seeded(seed);
+    AttnInputs {
+        q: Mat::randn(KERNEL_N, HEAD_DIM, 0.7, &mut rng),
+        k: Mat::randn(KERNEL_N, HEAD_DIM, 0.7, &mut rng),
+        v: Mat::randn(KERNEL_N, HEAD_DIM, 1.0, &mut rng),
+        causal: true,
+    }
+}
+
+fn lm_fixture(manifest: &Manifest, seed: u64) -> (Vec<f32>, Vec<i32>, Vec<i32>) {
+    let lm = &manifest.lm;
+    let mut rng = Pcg32::seeded(seed);
+    let mut params = vec![0f32; lm.param_count];
+    rng.fill_normal_f32(&mut params, 0.02);
+    let tokens: Vec<i32> =
+        (0..lm.batch * lm.seq_len).map(|_| rng.below(lm.vocab as u32) as i32).collect();
+    let targets: Vec<i32> = tokens.iter().map(|&t| (t + 1) % lm.vocab as i32).collect();
+    (params, tokens, targets)
+}
+
+/// Run one op against the backend, returning whether it succeeded. The
+/// fixture is valid for every op, so a supported op must return Ok.
+fn run_op(be: &dyn Backend, manifest: &Manifest, op: Op) -> anyhow::Result<()> {
+    let inp = fixture_inputs(11);
+    match op {
+        Op::FullAttention => {
+            be.full_attention(&inp.q, &inp.k, &inp.v)?;
+        }
+        Op::LowRankAttention => {
+            let a = attention_matrix(&inp);
+            let svd = top_k_svd(&a, 16, 3);
+            be.lowrank_attention(&svd, 16, 12, &inp.v)?;
+        }
+        Op::PowerIterSigma => {
+            let mut rng = Pcg32::seeded(12);
+            let m = Mat::randn(16, 16, 1.0, &mut rng);
+            let v0: Vec<f64> = (0..16).map(|i| 1.0 + (i % 3) as f64).collect();
+            be.power_iter_sigma(&m, &v0)?;
+        }
+        Op::PolicyLogits => {
+            let weights = drrl::runtime::host_policy::synthesize_weights(&manifest.policy, 5);
+            let state = vec![0.1f64; manifest.policy.state_dim];
+            be.policy_logits(&weights, &state)?;
+        }
+        Op::LmLogits => {
+            let (params, tokens, _) = lm_fixture(manifest, 13);
+            be.lm_logits(&params, &tokens)?;
+        }
+        Op::LmEvalLoss => {
+            let (params, tokens, targets) = lm_fixture(manifest, 14);
+            be.lm_eval_loss(&params, &tokens, &targets)?;
+        }
+        Op::LmTrainStep => {
+            let (mut params, tokens, targets) = lm_fixture(manifest, 15);
+            let mut m = vec![0f32; params.len()];
+            let mut v = vec![0f32; params.len()];
+            let loss = be.lm_train_step(&mut params, &mut m, &mut v, 0.0, &tokens, &targets)?;
+            anyhow::ensure!(loss.is_finite() && loss > 0.0, "train loss {loss}");
+            anyhow::ensure!(
+                m.iter().any(|&x| x != 0.0),
+                "train step must update the Adam moments"
+            );
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn every_backend_honors_its_declared_capabilities() {
+    let manifest = Manifest::synthetic(KERNEL_N, HEAD_DIM);
+    for be in backends() {
+        let caps = be.capabilities();
+        for op in Op::ALL {
+            let result = run_op(be.as_ref(), &manifest, op);
+            if caps.supports(op) {
+                result.unwrap_or_else(|e| {
+                    panic!("backend '{}' claims {op} but failed: {e:#}", be.name())
+                });
+                assert!(
+                    be.ops().get(op) > 0,
+                    "backend '{}' must count {op} executes",
+                    be.name()
+                );
+                assert!(be.warm(op).is_ok(), "warm({op}) on '{}'", be.name());
+            } else {
+                assert!(
+                    result.is_err(),
+                    "backend '{}' does not claim {op} yet executed it",
+                    be.name()
+                );
+            }
+        }
+    }
+}
+
+/// A backend that overrides nothing: the trait's default bodies must
+/// report typed "unsupported" errors, never panic, for every op.
+struct EmptyBackend(Arc<drrl::runtime::OpCounters>);
+
+impl Backend for EmptyBackend {
+    fn name(&self) -> &'static str {
+        "empty"
+    }
+
+    fn capabilities(&self) -> drrl::runtime::Capabilities {
+        drrl::runtime::Capabilities { supported: vec![], models_latency: false }
+    }
+
+    fn ops(&self) -> Arc<drrl::runtime::OpCounters> {
+        Arc::clone(&self.0)
+    }
+}
+
+#[test]
+fn unsupported_ops_error_via_capabilities_not_panics() {
+    let manifest = Manifest::synthetic(KERNEL_N, HEAD_DIM);
+    let be = EmptyBackend(Arc::new(drrl::runtime::OpCounters::default()));
+    for op in Op::ALL {
+        assert!(!be.capabilities().supports(op));
+        let err = run_op(&be, &manifest, op).expect_err("unsupported op must error");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("not supported"), "{op}: {msg}");
+        assert!(msg.contains("empty"), "{op}: error names the backend: {msg}");
+    }
+}
+
+#[test]
+fn host_full_attention_is_bit_identical_to_reference_kernel() {
+    let manifest = Manifest::synthetic(KERNEL_N, HEAD_DIM);
+    let host = HostBackend::new(manifest);
+    let inp = fixture_inputs(21);
+    let got = host.full_attention(&inp.q, &inp.k, &inp.v).unwrap();
+    // The backend quantizes through f32 at the boundary; the reference
+    // on identically quantized inputs must agree bit-for-bit.
+    let rounded = AttnInputs {
+        q: Mat::from_f32(KERNEL_N, HEAD_DIM, &inp.q.to_f32()),
+        k: Mat::from_f32(KERNEL_N, HEAD_DIM, &inp.k.to_f32()),
+        v: Mat::from_f32(KERNEL_N, HEAD_DIM, &inp.v.to_f32()),
+        causal: true,
+    };
+    let reference = full_attention(&rounded);
+    let reference = Mat::from_f32(KERNEL_N, HEAD_DIM, &reference.to_f32());
+    assert_eq!(got.data(), reference.data(), "host kernel must be bit-identical");
+}
+
+#[test]
+fn sim_backend_is_bit_identical_to_host_and_models_latency() {
+    let manifest = Manifest::synthetic(KERNEL_N, HEAD_DIM);
+    let host = HostBackend::new(manifest.clone());
+    let sim = SimBackend::new(manifest, DeviceProfile::APPLE_M);
+    let inp = fixture_inputs(22);
+    let a = attention_matrix(&inp);
+    let svd = top_k_svd(&a, 16, 3);
+    let y_host = host.lowrank_attention(&svd, 16, 12, &inp.v).unwrap();
+    let y_sim = sim.lowrank_attention(&svd, 16, 12, &inp.v).unwrap();
+    assert_eq!(y_host.data(), y_sim.data());
+    assert!(sim.capabilities().models_latency);
+    assert!(!host.capabilities().models_latency);
+    assert!(sim.projected_ms().unwrap() > 0.0);
+    assert!(host.projected_ms().is_none());
+}
+
+#[test]
+fn registries_for_all_backends_serve_the_same_validated_surface() {
+    for reg in [
+        ArtifactRegistry::open_host(KERNEL_N, HEAD_DIM),
+        ArtifactRegistry::open_sim(KERNEL_N, HEAD_DIM, DeviceProfile::A100),
+    ] {
+        let inp = fixture_inputs(23);
+        let y = reg.full_attention(&inp.q, &inp.k, &inp.v).unwrap();
+        assert_eq!(y.shape(), (KERNEL_N, HEAD_DIM));
+        // The registry owns bucket rounding: rank 12 runs in bucket 16.
+        let a = attention_matrix(&inp);
+        let svd = top_k_svd(&a, reg.rank_bucket(12), 3);
+        let out = reg.lowrank_attention(&svd, 12, &inp.v).unwrap();
+        let reference = drrl::attention::lowrank_attention_output(&svd, 12, &inp.v);
+        assert!(out.allclose(&reference, 1e-3));
+        assert!(reg.warm_all().is_ok());
+    }
+}
+
+#[test]
+fn hlo_policy_serves_end_to_end_on_host_without_artifacts() {
+    // Acceptance: PolicySource::Hlo — the transformer policy — drives
+    // rank selection through the host backend's typed policy op. The
+    // kernel is 128 tokens so the full default rank grid (which must
+    // match the synthetic policy's 7 actions) fits.
+    let (n, d) = (128, 32);
+    let reg = Arc::new(ArtifactRegistry::open_host(n, d));
+    let grid = reg.manifest.policy.rank_grid.clone();
+    assert_eq!(grid, ControllerConfig::default().rank_grid);
+    let mut rng = Pcg32::seeded(31);
+    let layers: Vec<MhsaWeights> = (0..2).map(|_| MhsaWeights::init(d, 1, &mut rng)).collect();
+    let mut params = vec![0f32; reg.manifest.lm.param_count];
+    rng.fill_normal_f32(&mut params, 0.02);
+    let engine = ServingEngine::start(
+        Arc::clone(&reg),
+        Arc::new(params),
+        layers,
+        ControllerConfig { segment_len: 4, ..Default::default() },
+        PolicySource::Hlo,
+        BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            capacity: 64,
+            overdrain: 0,
+        },
+    );
+    let mut tickets = Vec::new();
+    for i in 0..6 {
+        let x = Mat::randn(n, d, 1.0, &mut rng);
+        tickets.push(engine.submit_attention(x.into_vec(), n, d, i % 2).expect("submit"));
+    }
+    for ticket in tickets {
+        let resp = ticket
+            .wait_timeout(Duration::from_secs(120))
+            .expect("response")
+            .expect("hlo policy must serve on host");
+        for r in resp.ranks {
+            assert!(grid.contains(&r), "rank {r} from the policy grid");
+        }
+    }
+    // The policy op really ran on the backend.
+    assert!(reg.ops().get(Op::PolicyLogits) > 0, "policy_logits executed");
+}
+
+#[test]
+fn lm_trainer_runs_end_to_end_on_host_without_artifacts() {
+    // Acceptance: LmTrainer (train → eval → generate) fully offline.
+    let reg = ArtifactRegistry::open_host(KERNEL_N, HEAD_DIM);
+    let corpus = Corpus::build(CorpusProfile::Ptb, 60_000, 1);
+    let mut tr = LmTrainer::new(&reg, 42);
+    tr.train(&corpus, 8, 0).unwrap();
+    assert!(tr.last_loss() < tr.curve[0].1, "loss must drop in 8 host steps");
+    let ppl = tr.eval_ppl(&corpus, 2).unwrap();
+    assert!(ppl.is_finite() && ppl > 1.0, "ppl {ppl}");
+    let out = drrl::train::generate_greedy(&reg, &tr.params, &[b'a' as i32], 3).unwrap();
+    assert_eq!(out.len(), 3);
+    assert!(reg.ops().get(Op::LmTrainStep) >= 6);
+}

@@ -1,0 +1,186 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The real crate wraps the PJRT C API; this stub mirrors exactly the
+//! surface `drrl`'s `pjrt` backend uses so `cargo build --features pjrt`
+//! compile-checks the device backend without network access or native
+//! libraries. Every runtime entry point fails through
+//! [`PjRtClient::cpu`] with a descriptive error — the device thread
+//! already degrades gracefully when the client is unavailable — so
+//! swapping in real bindings is a Cargo.toml change, not a code change.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: everything fails with this until real bindings are wired.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what} is unavailable — the offline build vendors an API stub; \
+         wire the real xla bindings to execute PJRT artifacts"
+    )))
+}
+
+/// Element types the runtime distinguishes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    F64,
+    Bf16,
+    F16,
+    Pred,
+}
+
+/// Conversion targets for [`Literal::convert`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimitiveType {
+    F32,
+    S32,
+}
+
+/// Scalar types that cross the literal boundary.
+pub trait NativeType: Copy {}
+
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+
+/// Host-side literal (stub: carries no data).
+#[derive(Debug, Default, Clone)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal::default()
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        unavailable("Literal::array_shape")
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    pub fn convert(&self, _ty: PrimitiveType) -> Result<Literal> {
+        unavailable("Literal::convert")
+    }
+}
+
+/// Array shape of a literal.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Parsed HLO module proto.
+#[derive(Debug, Default)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation built from a proto.
+#[derive(Debug, Default)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation::default()
+    }
+}
+
+/// Device buffer handle.
+#[derive(Debug, Default)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Loaded executable handle.
+#[derive(Debug, Default)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// PJRT client handle. The stub constructor always fails, which the
+/// runtime's device thread turns into clean per-request errors.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_loud_and_typed() {
+        let err = PjRtClient::cpu().unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("xla stub"), "{msg}");
+        assert!(HloModuleProto::from_text_file("/nope").is_err());
+        assert!(Literal::vec1(&[1.0f32]).reshape(&[1]).is_err());
+    }
+}
