@@ -8,10 +8,14 @@
 //! when `make artifacts` has not run) serves everything — including the
 //! transformer `Hlo` policy — through the pure-Rust host backend, and
 //! `--backend sim[:a100|apple-m|cpu]` additionally projects every kernel
-//! onto a roofline device model and reports the projected latency.
+//! onto a roofline device model; each engine's metrics report then
+//! carries a live projected-latency ledger (spent vs the full-rank
+//! counterfactual). `--reward-profile a100|apple-m|cpu` projects that
+//! ledger for a deployment device even on the plain host backend.
 //!
 //! Run: `cargo run --release --example serve_adaptive -- [--requests 64]
-//!       [--engines 1] [--workers 4] [--backend auto|host|sim[:profile]]`
+//!       [--engines 1] [--workers 4] [--backend auto|host|sim[:profile]]
+//!       [--reward-profile a100|apple-m|cpu]`
 
 use drrl::attention::MhsaWeights;
 use drrl::coordinator::{
@@ -20,6 +24,7 @@ use drrl::coordinator::{
 };
 use drrl::linalg::Mat;
 use drrl::runtime::{ArtifactRegistry, Op};
+use drrl::sim::DeviceProfile;
 use drrl::util::{Args, Pcg32, Stopwatch};
 use std::sync::Arc;
 use std::time::Duration;
@@ -30,6 +35,7 @@ fn run_policy(
     layers: &[MhsaWeights],
     params: &Arc<Vec<f32>>,
     source: PolicySource,
+    reward_profile: Option<DeviceProfile>,
     n_requests: usize,
     n_engines: usize,
     n_workers: usize,
@@ -41,7 +47,7 @@ fn run_policy(
             Arc::clone(reg),
             Arc::clone(params),
             layers.to_vec(),
-            ControllerConfig { segment_len: 16, ..Default::default() },
+            ControllerConfig { segment_len: 16, reward_profile, ..Default::default() },
             src,
             EngineConfig {
                 n_workers,
@@ -135,6 +141,8 @@ fn main() -> anyhow::Result<()> {
     // the roofline-simulating backend. Every backend runs the complete
     // op set, so the transformer `Hlo` policy serves offline too.
     let reg = Arc::new(ArtifactRegistry::open_spec(args.get_or("backend", "auto"))?);
+    let reward_profile = DeviceProfile::parse_reward_profile(args.get("reward-profile"))
+        .map_err(anyhow::Error::msg)?;
     let adaptive_policy = PolicySource::Hlo;
     let d = reg.manifest.kernel.head_dim;
     let mut rng = Pcg32::seeded(9);
@@ -155,12 +163,23 @@ fn main() -> anyhow::Result<()> {
     // inflate startup on the PJRT backend).
     reg.warm_ops(&[Op::FullAttention, Op::LowRankAttention, Op::PolicyLogits])?;
 
-    run_policy(&reg, &layers, &params, adaptive_policy, n_requests, n_engines, n_workers, 1)?;
+    run_policy(
+        &reg,
+        &layers,
+        &params,
+        adaptive_policy,
+        reward_profile,
+        n_requests,
+        n_engines,
+        n_workers,
+        1,
+    )?;
     run_policy(
         &reg,
         &layers,
         &params,
         PolicySource::Fixed(32),
+        reward_profile,
         n_requests,
         n_engines,
         n_workers,
@@ -171,16 +190,17 @@ fn main() -> anyhow::Result<()> {
         &layers,
         &params,
         PolicySource::FullRank,
+        reward_profile,
         n_requests,
         n_engines,
         n_workers,
         3,
     )?;
-    if let Some(ms) = reg.projected_ms() {
-        println!(
-            "\nsim backend: projected device kernel latency {ms:.2} ms total across all runs"
-        );
-    }
-    println!("\nOK — DR-RL policy served with adaptive ranks; compare the flops_saving lines.");
+    // Per-run projected-latency ledgers (spent vs full-rank, per device
+    // profile) are part of each engine's metrics report above.
+    println!(
+        "\nOK — DR-RL policy served with adaptive ranks; compare the flops_saving \
+         and projected[] lines."
+    );
     Ok(())
 }

@@ -5,10 +5,16 @@
 //! curve, validation perplexity and a generation sample. The recorded
 //! run lives in EXPERIMENTS.md.
 //!
-//! Run: `cargo run --release --example train_lm_e2e -- [--steps 300]`
+//! Run: `cargo run --release --example train_lm_e2e -- [--steps 300]
+//!       [--reward-profile a100|apple-m|cpu]`
+//!
+//! `--reward-profile` projects the run's train-step cost onto a
+//! deployment device's roofline model (the same charge the sim backend
+//! ledgers per `lm_train_step` call).
 
 use drrl::data::{Corpus, CorpusProfile};
 use drrl::runtime::ArtifactRegistry;
+use drrl::sim::{project_latency_ms, DeviceProfile};
 use drrl::train::{generate_greedy, LmTrainer};
 use drrl::util::{Args, Stopwatch};
 
@@ -17,6 +23,8 @@ fn main() -> anyhow::Result<()> {
     let steps = args.usize_or("steps", 300);
     let corpus_bytes = args.usize_or("corpus-bytes", 600_000);
     let seed = args.u64_or("seed", 42);
+    let reward_profile = DeviceProfile::parse_reward_profile(args.get("reward-profile"))
+        .map_err(anyhow::Error::msg)?;
 
     // The typed host backend implements the fused-AdamW train step, so
     // the driver runs offline too (smaller synthetic LM shape);
@@ -61,6 +69,18 @@ fn main() -> anyhow::Result<()> {
          ({:.0} tok/s) | val ppl {ppl0:.1} → {ppl1:.2}",
         tokens_seen as f64 / secs
     );
+    // Projected training cost per deployment device (one fused train-step
+    // dispatch per step — the exact charge the sim backend's roofline
+    // ledger records per call, resolved with serving's profile
+    // precedence).
+    if let Some(p) = reg.projection_profile(reward_profile) {
+        let per_step = project_latency_ms(lm.train_step_flops(), &p);
+        println!(
+            "projected[{}]: {per_step:.4} ms/train-step → {:.2} ms for the whole run",
+            p.name,
+            per_step * steps as f64
+        );
+    }
     anyhow::ensure!(ppl1 < ppl0 * 0.5, "training failed to reduce PPL substantially");
 
     // Generation sample through the Pallas-kernel logits artifact.

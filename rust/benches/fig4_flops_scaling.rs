@@ -8,13 +8,16 @@
 //! effective ranks measured from the adaptive behaviour on synthetic
 //! spectra whose redundancy grows with L (longer context ⇒ flatter tail,
 //! denser low-energy mass — matching the paper's premise), plus
-//! projected wall-clock on the A100-sim/Apple-sim device models and a
-//! measured CPU point via the PJRT kernels.
+//! *projected* wall-clock curves — full-rank vs DR-RL — on each selected
+//! roofline device model (`--profiles a100,apple-m,cpu`, default all
+//! three). The CI smoke leg runs this in quick mode for a100+cpu and
+//! fails if the projected-latency columns go missing or non-finite.
 
 use drrl::bench_harness::{banner, quick_mode, write_table_csv};
 use drrl::flops::{full_attention_flops, lowrank_attention_flops, partial_svd_flops};
 use drrl::sim::{project_latency_ms, DeviceProfile};
 use drrl::spectral::rank_for_energy;
+use drrl::util::Args;
 use std::path::Path;
 
 /// Synthetic attention spectrum at context length L: geometric head +
@@ -30,19 +33,45 @@ fn spectrum_for_length(l: usize) -> Vec<f64> {
 fn main() -> anyhow::Result<()> {
     banner(
         "Fig 4: FLOPs vs sequence length",
-        "full-rank O(L²) vs DR-RL near-linear; >40% saving for L > 4096",
+        "full-rank O(L²) vs DR-RL near-linear; >40% saving for L > 4096; \
+         projected device latency per roofline profile",
     );
+    let args = Args::from_env().unwrap_or_default();
     let quick = quick_mode();
+    // Device profiles for the projected-latency curves.
+    let profile_keys = args.get_or("profiles", "a100,apple-m,cpu").to_string();
+    let mut profiles: Vec<(String, DeviceProfile)> = Vec::new();
+    for key in profile_keys.split(',').map(str::trim).filter(|k| !k.is_empty()) {
+        let dev = DeviceProfile::by_name(key)
+            .ok_or_else(|| anyhow::anyhow!("unknown profile '{key}' (a100|apple-m|cpu)"))?;
+        // CSV column stem: the CLI key with '-' normalized away.
+        profiles.push((key.replace('-', "_"), dev));
+    }
+    anyhow::ensure!(!profiles.is_empty(), "--profiles selected no device profile");
+
     let lengths: Vec<usize> =
         if quick { vec![512, 2048, 8192] } else { vec![512, 1024, 2048, 4096, 8192, 16384] };
     let d = 64usize;
     let segment = 64usize;
 
+    let latency_cols: Vec<String> = profiles
+        .iter()
+        .flat_map(|(key, _)| [format!("{key}_full_ms"), format!("{key}_drrl_ms")])
+        .collect();
     println!(
-        "\n{:>7} | {:>14} {:>14} {:>8} {:>8} | {:>12} {:>12}",
-        "L", "full GFLOPs", "drrl GFLOPs", "rank", "saving", "a100-ms", "apple-ms"
+        "\n{:>7} | {:>14} {:>14} {:>8} {:>8} | {}",
+        "L",
+        "full GFLOPs",
+        "drrl GFLOPs",
+        "rank",
+        "saving",
+        latency_cols
+            .iter()
+            .map(|c| format!("{c:>14}"))
+            .collect::<Vec<_>>()
+            .join(" ")
     );
-    println!("{}", "-".repeat(92));
+    println!("{}", "-".repeat(64 + 15 * latency_cols.len()));
     let mut rows = Vec::new();
     let mut savings = Vec::new();
     for &l in &lengths {
@@ -53,17 +82,38 @@ fn main() -> anyhow::Result<()> {
             lowrank_attention_flops(l, d, rank, false) + partial_svd_flops(l, l, rank) / segment as u64;
         let saving = 1.0 - drrl_f as f64 / full as f64;
         savings.push((l, saving));
-        let a100 = project_latency_ms(drrl_f, &DeviceProfile::A100);
-        let apple = project_latency_ms(drrl_f, &DeviceProfile::APPLE_M);
+        let mut latencies = Vec::with_capacity(2 * profiles.len());
+        for (_, dev) in &profiles {
+            // Full-rank vs DR-RL projected curves per profile — the
+            // hardware axis the latency-aware reward trains against.
+            let full_ms = project_latency_ms(full, dev);
+            let drrl_ms = project_latency_ms(drrl_f, dev);
+            anyhow::ensure!(
+                full_ms.is_finite() && drrl_ms.is_finite(),
+                "non-finite projected latency for {} at L={l}",
+                dev.name
+            );
+            latencies.push(full_ms);
+            latencies.push(drrl_ms);
+        }
         println!(
-            "{l:>7} | {:>14.3} {:>14.3} {rank:>8} {:>7.1}% | {a100:>12.4} {apple:>12.4}",
+            "{l:>7} | {:>14.3} {:>14.3} {rank:>8} {:>7.1}% | {}",
             full as f64 / 1e9,
             drrl_f as f64 / 1e9,
-            saving * 1e2
+            saving * 1e2,
+            latencies
+                .iter()
+                .map(|ms| format!("{ms:>14.4}"))
+                .collect::<Vec<_>>()
+                .join(" ")
         );
         rows.push(format!(
-            "{l},{},{},{rank},{saving},{a100},{apple}",
-            full, drrl_f
+            "{l},{full},{drrl_f},{rank},{saving},{}",
+            latencies
+                .iter()
+                .map(|ms| ms.to_string())
+                .collect::<Vec<_>>()
+                .join(",")
         ));
     }
 
@@ -90,10 +140,22 @@ fn main() -> anyhow::Result<()> {
             assert!(s > 0.40, "saving at L={l} only {:.1}%", s * 1e2);
         }
     }
+    // 3. The projected-latency saving converges on the FLOPs saving as
+    //    compute swamps dispatch overhead (sanity of the device model).
+    for (_, dev) in &profiles {
+        let l = *lengths.last().unwrap();
+        let full_ms = project_latency_ms(full_attention_flops(l, d), dev);
+        let drrl_ms = project_latency_ms(drrl_at(l), dev);
+        assert!(
+            drrl_ms < full_ms,
+            "{}: DR-RL must project faster than full rank at L={l}",
+            dev.name
+        );
+    }
 
     write_table_csv(
         Path::new("bench_out/fig4.csv"),
-        "seq_len,full_flops,drrl_flops,rank,saving,a100_ms,apple_ms",
+        &format!("seq_len,full_flops,drrl_flops,rank,saving,{}", latency_cols.join(",")),
         &rows,
     )?;
     println!("CSV → bench_out/fig4.csv");

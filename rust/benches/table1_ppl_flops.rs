@@ -17,6 +17,7 @@ use drrl::flops::{BlockDims, ModelDims};
 use drrl::linalg::Mat;
 use drrl::rl::{train_hybrid, EnvConfig, RankEnv, TrainerConfig};
 use drrl::runtime::ArtifactRegistry;
+use drrl::sim::{project_latency_ms, DeviceProfile};
 use drrl::train::{AttnMethod, HostLm, LmTrainer};
 use drrl::util::Pcg32;
 use std::path::Path;
@@ -126,35 +127,51 @@ fn main() -> anyhow::Result<()> {
     // FLOPs column: analytic model at paper scale — L=4096 (the regime
     // where attention dominates, §5.3), unembedding excluded, and the
     // absolute scale normalized so the full-rank row reads the paper's
-    // 8.2 GFLOPs (our substrate differs; the *ratios* are ours).
+    // 8.2 GFLOPs (our substrate differs; the *ratios* are ours). The
+    // same absolute flops also project per-method latency onto every
+    // built-in device profile (the hardware axis of the reward).
     let block = BlockDims { n: 4096, d_model: 512, n_heads: 8, d_ff: 2048 };
     let model = ModelDims { block, n_layers: 12, vocab: 1 };
-    let full_flops = model.full_model_flops() as f64;
+    let full_flops = model.full_model_flops();
+    let mut projected: Vec<Vec<f64>> = Vec::with_capacity(methods.len());
     for (mi, _) in methods.iter().enumerate() {
-        let ratio = if measured[mi].2 > 0.0 {
+        let abs_flops = if measured[mi].2 > 0.0 {
             let r = measured[mi].2 as usize;
             let ranks = vec![vec![r; 8]; 12];
-            model.lowrank_model_flops(&ranks, 64) as f64 / full_flops
+            model.lowrank_model_flops(&ranks, 64)
         } else {
-            1.0
+            full_flops
         };
-        measured[mi].3 = 8.2 * ratio;
+        measured[mi].3 = 8.2 * abs_flops as f64 / full_flops as f64;
+        let row: Vec<f64> = DeviceProfile::BUILTIN
+            .iter()
+            .map(|dev| {
+                let ms = project_latency_ms(abs_flops, dev);
+                assert!(ms.is_finite(), "non-finite projection for {}", dev.name);
+                ms
+            })
+            .collect();
+        projected.push(row);
     }
 
     // ---- report ----
-    println!("\n{:<16} | {:>9} {:>9} {:>9} | {:>10} | paper (wiki/ptb/book @GFLOPs)",
-        "method", "wiki-sim", "ptb-sim", "book-sim", "GFLOPs");
-    println!("{}", "-".repeat(100));
+    println!(
+        "\n{:<16} | {:>9} {:>9} {:>9} | {:>10} | {:>10} {:>10} {:>10} | paper (wiki/ptb/book @GFLOPs)",
+        "method", "wiki-sim", "ptb-sim", "book-sim", "GFLOPs", "a100-ms", "apple-ms", "cpu-ms"
+    );
+    println!("{}", "-".repeat(136));
     let mut rows = Vec::new();
     for (mi, (name, ppls, mean_rank, gflops)) in measured.iter().enumerate() {
         let p = paper_ppl[mi].1;
+        let prj = &projected[mi];
         println!(
-            "{name:<16} | {:>9.2} {:>9.2} {:>9.2} | {gflops:>10.1} | {:.1}/{:.1}/{:.1} @{:.1}G",
-            ppls[0], ppls[1], ppls[2], p[0], p[1], p[2], methods[mi].2
+            "{name:<16} | {:>9.2} {:>9.2} {:>9.2} | {gflops:>10.1} | {:>10.3} {:>10.3} {:>10.1} | \
+             {:.1}/{:.1}/{:.1} @{:.1}G",
+            ppls[0], ppls[1], ppls[2], prj[0], prj[1], prj[2], p[0], p[1], p[2], methods[mi].2
         );
         rows.push(format!(
-            "{name},{},{},{},{gflops},{mean_rank}",
-            ppls[0], ppls[1], ppls[2]
+            "{name},{},{},{},{gflops},{mean_rank},{},{},{}",
+            ppls[0], ppls[1], ppls[2], prj[0], prj[1], prj[2]
         ));
     }
     let full_g = measured[0].3;
@@ -175,9 +192,24 @@ fn main() -> anyhow::Result<()> {
         assert!(drrl_p <= fixed * 1.10, "corpus {ci}: DR-RL should beat fixed");
         assert!(drrl_p <= random * 1.10, "corpus {ci}: DR-RL should beat random");
     }
+    // Projected-latency shape: DR-RL must beat full rank on every
+    // profile (the latency-aware reward's whole premise at this scale).
+    let idx_of = |want: &str| {
+        methods.iter().position(|(n, _, _)| *n == want).expect("method present")
+    };
+    let full_idx = idx_of("full-rank");
+    let drrl_idx = idx_of("dr-rl");
+    for (pi, dev) in DeviceProfile::BUILTIN.iter().enumerate() {
+        assert!(
+            projected[drrl_idx][pi] < projected[full_idx][pi],
+            "{}: DR-RL projected slower than full rank",
+            dev.name
+        );
+    }
+
     write_table_csv(
         Path::new("bench_out/table1.csv"),
-        "method,ppl_wiki,ppl_ptb,ppl_book,gflops,mean_rank",
+        "method,ppl_wiki,ppl_ptb,ppl_book,gflops,mean_rank,a100_ms,apple_m_ms,cpu_ms",
         &rows,
     )?;
     println!("CSV → bench_out/table1.csv");

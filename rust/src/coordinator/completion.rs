@@ -305,7 +305,12 @@ impl<T: CompletionPayload> Ticket<T> {
     /// Cancel the request. The `Cancelled` error is posted immediately
     /// (if no result arrived yet) and the engine drops the queued work
     /// at drain time, before spending any probe/SVD compute on it.
-    /// In-flight compute is not interrupted; its late result is dropped.
+    /// Work already inside the attention pipeline is cancelled
+    /// cooperatively: the engine re-checks this flag at every stage
+    /// boundary (after plan, after the probe wave, before apply), so a
+    /// mid-flight request stops before its next stage; only the stage
+    /// currently executing runs to completion, and its late result is
+    /// dropped.
     pub fn cancel(&self) {
         self.slot.cancel();
     }
@@ -733,6 +738,7 @@ mod tests {
             queued_ms: 0.0,
             compute_ms: 0.0,
             batch_size: 1,
+            projected_ms: None,
         })
     }
 

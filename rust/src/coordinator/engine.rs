@@ -108,6 +108,18 @@ pub(crate) struct EngineShared {
     /// Prompt-shutdown flag: once set, workers stop computing queued
     /// work and post explicit errors instead.
     pub(crate) stopped: AtomicBool,
+    /// Test-only hook the pipeline calls right after its probe wave, so
+    /// regression tests can land a cancel deterministically mid-flight.
+    #[cfg(test)]
+    pub(crate) after_probe_hook: Option<Box<dyn Fn() + Send + Sync>>,
+}
+
+impl EngineShared {
+    /// The device profile serving projects latency onto — the registry's
+    /// single precedence rule applied to this engine's configuration.
+    pub(crate) fn projection_profile(&self) -> Option<crate::sim::DeviceProfile> {
+        self.reg.projection_profile(self.controller_cfg.reward_profile)
+    }
 }
 
 /// Engine handle. Submit from any thread.
@@ -172,7 +184,15 @@ impl ServingEngine {
             controller_cfg,
             metrics: Arc::clone(&metrics),
             stopped: AtomicBool::new(false),
+            #[cfg(test)]
+            after_probe_hook: None,
         });
+        // Surface the projected-latency ledger in Metrics::report() when
+        // a projection profile is in scope (sim backend or configured
+        // reward profile) — live reporting, not an exit-time print.
+        if let Some(p) = shared.projection_profile() {
+            metrics.set_projection_profile(p.name);
+        }
         let n_workers = config.n_workers.max(1);
         let workers = (0..n_workers)
             .map(|i| {
@@ -536,6 +556,18 @@ fn serve_generate_chunk(
         }
     }
     let compute_ms = sw.elapsed_ms();
+    // Projected device latency of this chunk: one fixed-shape lm_logits
+    // dispatch per decode step — exactly the charge the sim backend's
+    // roofline ledger records per call, so the metrics ledger matches
+    // it. The LM path has no rank adaptation, so the counterfactual
+    // equals the spend.
+    let projected_ms = shared.projection_profile().map(|p| {
+        max_steps as f64
+            * crate::sim::project_latency_ms(reg.manifest.lm.batch_forward_flops(), &p)
+    });
+    if let Some(ms) = projected_ms {
+        shared.metrics.record_projected(ms, ms);
+    }
     for (i, (pend, req, reply)) in chunk.iter_mut().enumerate() {
         let queued_ms = pend.queued_ms();
         shared.metrics.record_request(queued_ms, compute_ms, batch_size);
@@ -545,6 +577,7 @@ fn serve_generate_chunk(
             queued_ms,
             compute_ms,
             batch_size,
+            projected_ms,
         }));
     }
     Ok(())

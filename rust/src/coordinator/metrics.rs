@@ -1,5 +1,7 @@
 //! Serving metrics: latency percentiles, batch-size histogram, rank
-//! histogram, the FLOPs ledger (spent vs full-rank counterfactual) and
+//! histogram, the FLOPs ledger (spent vs full-rank counterfactual), the
+//! projected-device-latency ledger (per `DeviceProfile` roofline — spent
+//! vs full-rank counterfactual, matching the sim backend's charges) and
 //! safety-check counters — everything EXPERIMENTS.md reports for the
 //! serving examples.
 
@@ -28,6 +30,14 @@ struct Inner {
     rank_counts: Vec<u64>, // histogram: index = rank
     flops_spent: u64,
     flops_full: u64,
+    /// Projected-device-latency ledger (ms): what the served requests'
+    /// backend kernel charges project to on the attached profile, vs
+    /// the full-rank counterfactual of the same requests. Live — folded
+    /// into every `report()`, not printed once at process exit.
+    projected_spent_ms: f64,
+    projected_full_ms: f64,
+    /// Name of the `DeviceProfile` the projection is priced on.
+    projection_profile: Option<&'static str>,
     requests: u64,
     rejected: u64,
     /// Tickets cancelled by the client and reaped at drain time (their
@@ -100,6 +110,46 @@ impl Metrics {
         let mut g = self.inner.lock().unwrap();
         g.flops_spent += spent;
         g.flops_full += full;
+    }
+
+    /// Attach the device profile the projected-latency ledger prices on
+    /// (the engine sets it at start when one is in scope).
+    pub fn set_projection_profile(&self, name: &'static str) {
+        self.inner.lock().unwrap().projection_profile = Some(name);
+    }
+
+    pub fn projection_profile(&self) -> Option<&'static str> {
+        self.inner.lock().unwrap().projection_profile
+    }
+
+    /// Fold one request's (or one generate chunk's) projected device
+    /// latency into the ledger: `spent_ms` mirrors the backend kernel
+    /// charges it drove, `full_ms` the full-rank counterfactual.
+    pub fn record_projected(&self, spent_ms: f64, full_ms: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.projected_spent_ms += spent_ms;
+        g.projected_full_ms += full_ms;
+    }
+
+    /// Total projected device latency spent (ms). On a sim backend this
+    /// matches the backend's own ledger to float-sum precision.
+    pub fn projected_spent_ms(&self) -> f64 {
+        self.inner.lock().unwrap().projected_spent_ms
+    }
+
+    /// Full-rank counterfactual projection (ms) of the same requests.
+    pub fn projected_full_ms(&self) -> f64 {
+        self.inner.lock().unwrap().projected_full_ms
+    }
+
+    /// 1 − spent/full on the projected-latency ledger.
+    pub fn projected_saving(&self) -> f64 {
+        let g = self.inner.lock().unwrap();
+        if g.projected_full_ms == 0.0 {
+            0.0
+        } else {
+            1.0 - g.projected_spent_ms / g.projected_full_ms
+        }
     }
 
     /// One drained attention batch went through the staged pipeline:
@@ -277,6 +327,19 @@ impl Metrics {
             mean_batch,
             saving * 1e2,
         );
+        if let Some(profile) = g.projection_profile {
+            let psave = if g.projected_full_ms == 0.0 {
+                0.0
+            } else {
+                1.0 - g.projected_spent_ms / g.projected_full_ms
+            };
+            out.push_str(&format!(
+                "\nprojected[{profile}]: spent={:.4}ms full_rank={:.4}ms saving={:.1}%",
+                g.projected_spent_ms,
+                g.projected_full_ms,
+                psave * 1e2,
+            ));
+        }
         drop(g);
         if let Some(ops) = self.backend_ops() {
             // Counters live on the backend, which engines may share — so
@@ -360,6 +423,31 @@ mod tests {
         // The counters stay shared: later backend activity shows up.
         ops.record(Op::LowRankAttention);
         assert!(m.report().contains("lowrank_attention=2"));
+    }
+
+    #[test]
+    fn projected_ledger_accumulates_and_reports_per_profile() {
+        let m = Metrics::new();
+        // No profile attached → no projected section.
+        m.record_projected(1.0, 2.0);
+        assert!(!m.report().contains("projected["), "{}", m.report());
+        m.set_projection_profile("a100-sim");
+        m.record_projected(0.5, 2.0);
+        assert_eq!(m.projection_profile(), Some("a100-sim"));
+        assert!((m.projected_spent_ms() - 1.5).abs() < 1e-12);
+        assert!((m.projected_full_ms() - 4.0).abs() < 1e-12);
+        assert!((m.projected_saving() - 0.625).abs() < 1e-12);
+        let rep = m.report();
+        assert!(rep.contains("projected[a100-sim]:"), "{rep}");
+        assert!(rep.contains("saving=62.5%"), "{rep}");
+    }
+
+    #[test]
+    fn empty_projected_ledger_is_zero_saving() {
+        let m = Metrics::new();
+        m.set_projection_profile("cpu");
+        assert_eq!(m.projected_saving(), 0.0);
+        assert!(m.report().contains("projected[cpu]: spent=0.0000ms"), "{}", m.report());
     }
 
     #[test]

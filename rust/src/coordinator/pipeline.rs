@@ -71,7 +71,17 @@ struct JobState {
     queued_ms: f64,
     plan: Option<Planned>,
     error: Option<String>,
+    /// Cancel/deadline reap landed at a stage boundary: the reply has
+    /// already been posted and every later stage skips this job.
+    reaped: bool,
     decisions: Vec<Option<Decision>>,
+}
+
+impl JobState {
+    /// True when a later stage should still run work for this job.
+    fn live(&self) -> bool {
+        self.error.is_none() && !self.reaped
+    }
 }
 
 /// Per-layer slice of the batch: the replay-ordered steps plus their
@@ -91,6 +101,33 @@ enum ApplyTask {
     Factor { lw: usize, si: usize },
     /// Dense full-rank kernel for job `j`, head `h`.
     Dense { j: usize, h: usize },
+}
+
+/// Cooperative cancellation at a stage boundary: re-check every still
+/// live job's cancel/deadline state so an in-flight request stops
+/// burning SVD waves and factor applies the moment its ticket dies.
+/// Reaped jobs reply immediately (first post wins, so a client-side
+/// `cancel()` that already posted makes this a no-op) and are skipped
+/// by every later stage; their plan-stage stream bookkeeping — like a
+/// failed request's — has already advanced, which is exactly the
+/// sequential-serving behavior for a cancel landing mid-request.
+fn reap_boundary(
+    shared: &EngineShared,
+    states: &mut [JobState],
+    replies: &[AttnReply],
+    reqs: &[AttentionRequest],
+) {
+    let now = Instant::now();
+    for (j, state) in states.iter_mut().enumerate() {
+        if !state.live() {
+            continue;
+        }
+        if let Some(kind) = replies[j].reap_kind(now) {
+            record_reap(&shared.metrics, kind);
+            replies[j].fulfill(Err(reap_error(reqs[j].id, kind)));
+            state.reaped = true;
+        }
+    }
 }
 
 fn plan_job(shared: &EngineShared, req: &AttentionRequest) -> Result<Planned> {
@@ -114,7 +151,11 @@ fn plan_job(shared: &EngineShared, req: &AttentionRequest) -> Result<Planned> {
 ///
 /// Jobs whose ticket was cancelled or whose deadline expired while
 /// queued are reaped here — before the plan stage — so they never cost
-/// a head projection, a probe, or a lock take.
+/// a head projection, a probe, or a lock take. Cancellation stays
+/// *cooperative inside* the pipeline too: the cancel/deadline state is
+/// re-checked at every stage boundary (after plan, after the probe
+/// wave, before the apply wave), so a ticket that dies mid-flight stops
+/// burning SVD waves and runs no apply work.
 pub(crate) fn run_attention_batch(shared: &EngineShared, jobs: Vec<AttnJob>) {
     let now = Instant::now();
     let mut live = Vec::with_capacity(jobs.len());
@@ -144,6 +185,7 @@ pub(crate) fn run_attention_batch(shared: &EngineShared, jobs: Vec<AttnJob>) {
             queued_ms: job.arrived.elapsed().as_secs_f64() * 1e3,
             plan: None,
             error: None,
+            reaped: false,
             decisions: Vec::new(),
         });
         reqs.push(job.req);
@@ -165,6 +207,10 @@ pub(crate) fn run_attention_batch(shared: &EngineShared, jobs: Vec<AttnJob>) {
         }
     }
 
+    // Stage boundary: a ticket cancelled (or expired) while its heads
+    // were being projected drops out before any controller bookkeeping.
+    reap_boundary(shared, &mut states, &replies, &reqs);
+
     let full_rank = matches!(shared.source.as_ref(), PolicySource::FullRank);
 
     // Group plannable jobs by layer, preserving drained (arrival) order.
@@ -173,7 +219,7 @@ pub(crate) fn run_attention_batch(shared: &EngineShared, jobs: Vec<AttnJob>) {
     let mut by_layer: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
     if !full_rank {
         for (j, state) in states.iter().enumerate() {
-            if state.plan.is_some() {
+            if state.plan.is_some() && !state.reaped {
                 by_layer.entry(reqs[j].layer).or_default().push(j);
             }
         }
@@ -252,6 +298,16 @@ pub(crate) fn run_attention_batch(shared: &EngineShared, jobs: Vec<AttnJob>) {
         work.svds = resolve_probes(&work.steps, &refreshes[lw], chunk);
     }
 
+    // Stage boundary: a cancel that landed while the probe wave ran
+    // stops the request here — its decisions are never replayed and no
+    // apply work is dispatched for it (the probes it contributed stay
+    // published, exactly like an errored request's).
+    #[cfg(test)]
+    if let Some(hook) = &shared.after_probe_hook {
+        hook();
+    }
+    reap_boundary(shared, &mut states, &replies, &reqs);
+
     // ---- Stage 3: decide — one lock take per layer, serial replay in
     // (request-arrival, head) order. ----
     for work in works.iter_mut() {
@@ -271,10 +327,10 @@ pub(crate) fn run_attention_batch(shared: &EngineShared, jobs: Vec<AttnJob>) {
             if matches!(work.steps[si].probe, ProbeSource::Refresh { .. }) {
                 controller.commit_probe(layer, work.steps[si].head, Arc::clone(&work.svds[si]));
             }
-            if states[j].error.is_some() {
-                // A failed request replays no further decisions (its
-                // calls counters already advanced, as on the
-                // per-request path).
+            if !states[j].live() {
+                // A failed or boundary-reaped request replays no further
+                // decisions (its calls counters already advanced, as on
+                // the per-request path).
                 continue;
             }
             // Snapshot steps re-read the stream under the decide lock:
@@ -308,11 +364,15 @@ pub(crate) fn run_attention_batch(shared: &EngineShared, jobs: Vec<AttnJob>) {
         }
     }
 
+    // Stage boundary: last chance to drop a dead request before paying
+    // for its factor applies.
+    reap_boundary(shared, &mut states, &replies, &reqs);
+
     // ---- Stage 4: apply — one pooled dispatch across all layers. ----
     let mut apply_tasks: Vec<ApplyTask> = Vec::new();
     if full_rank {
         for (j, state) in states.iter().enumerate() {
-            if state.error.is_some() {
+            if !state.live() {
                 continue;
             }
             if let Some(plan) = &state.plan {
@@ -325,12 +385,13 @@ pub(crate) fn run_attention_batch(shared: &EngineShared, jobs: Vec<AttnJob>) {
         for (lw, work) in works.iter().enumerate() {
             for si in 0..work.steps.len() {
                 let (j, _) = work.owner[si];
-                if states[j].error.is_none() {
+                if states[j].live() {
                     apply_tasks.push(ApplyTask::Factor { lw, si });
                 }
             }
         }
     }
+    let projection = shared.projection_profile();
     let applied = {
         let works_ref = &works;
         let states_ref = &states;
@@ -371,10 +432,10 @@ pub(crate) fn run_attention_batch(shared: &EngineShared, jobs: Vec<AttnJob>) {
                 }
             }
         }
-        if full_rank && states[j].error.is_none() {
+        if full_rank && states[j].live() {
             let inp = &states[j].plan.as_ref().expect("planned").heads[h];
             states[j].decisions[h] =
-                Some(full_rank_decision(inp.seq_len(), inp.head_dim()));
+                Some(full_rank_decision(inp.seq_len(), inp.head_dim(), projection.as_ref()));
         }
     }
 
@@ -385,6 +446,10 @@ pub(crate) fn run_attention_batch(shared: &EngineShared, jobs: Vec<AttnJob>) {
         .record_attention_batch(co_batched as u64, n_probes, probe_dispatches, shard_locks);
     for (j, state) in states.iter().enumerate() {
         let reply = &replies[j];
+        if state.reaped {
+            // Boundary reap already posted the cancel/deadline error.
+            continue;
+        }
         if let Some(msg) = &state.error {
             crate::log_warn!("attention req {} failed: {msg}", reqs[j].id);
             reply.fulfill(Err(EngineError::new(reqs[j].id, ErrorKind::Internal, msg.clone())));
@@ -395,6 +460,7 @@ pub(crate) fn run_attention_batch(shared: &EngineShared, jobs: Vec<AttnJob>) {
         let mut head_outs = Vec::with_capacity(plan.heads.len());
         let mut ranks = Vec::with_capacity(plan.heads.len());
         let (mut spent, mut full) = (0u64, 0u64);
+        let (mut proj_spent, mut proj_full) = (0.0f64, 0.0f64);
         for h in 0..plan.heads.len() {
             let y = outs[j][h].take().expect("apply produced every head");
             let dec = state.decisions[h].expect("decision recorded");
@@ -404,10 +470,16 @@ pub(crate) fn run_attention_batch(shared: &EngineShared, jobs: Vec<AttnJob>) {
             }
             spent += dec.flops_spent;
             full += dec.flops_full;
+            proj_spent += dec.projected_ms.unwrap_or(0.0);
+            proj_full += dec.projected_full_ms.unwrap_or(0.0);
             ranks.push(dec.rank);
             head_outs.push(y);
         }
         shared.metrics.record_flops(spent, full);
+        let projected_ms = projection.is_some().then_some(proj_spent);
+        if projection.is_some() {
+            shared.metrics.record_projected(proj_spent, proj_full);
+        }
         let merged = merge_heads(&head_outs, w);
         shared.metrics.record_request(state.queued_ms, compute_ms, co_batched);
         reply.fulfill(Ok(AttentionResponse {
@@ -419,6 +491,108 @@ pub(crate) fn run_attention_batch(shared: &EngineShared, jobs: Vec<AttnJob>) {
             queued_ms: state.queued_ms,
             compute_ms,
             batch_size: co_batched,
+            projected_ms,
         }));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::MhsaWeights;
+    use crate::coordinator::completion::{Slot, Ticket};
+    use crate::coordinator::metrics::Metrics;
+    use crate::coordinator::rank_controller::{ControllerConfig, RankController};
+    use crate::coordinator::request::{AttentionResponse, ErrorKind, SubmitOptions};
+    use crate::runtime::{ArtifactRegistry, Op};
+    use crate::util::Pcg32;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Mutex;
+    use std::time::Duration;
+
+    fn shared_with_hook(hook: Option<Box<dyn Fn() + Send + Sync>>) -> EngineShared {
+        let reg = Arc::new(ArtifactRegistry::open_host(64, 16));
+        let mut rng = Pcg32::seeded(7);
+        let layers = vec![MhsaWeights::init(16, 1, &mut rng)];
+        let cfg = ControllerConfig::default();
+        let source = Arc::new(PolicySource::Fixed(32));
+        let shards = vec![Mutex::new(RankController::with_shared_source(
+            cfg.clone(),
+            Arc::clone(&source),
+        ))];
+        let lm_params = Arc::new(vec![0f32; reg.manifest.lm.param_count]);
+        EngineShared {
+            reg,
+            lm_params,
+            layers,
+            shards,
+            source,
+            controller_cfg: cfg,
+            metrics: Arc::new(Metrics::new()),
+            stopped: AtomicBool::new(false),
+            after_probe_hook: hook,
+        }
+    }
+
+    fn job_and_ticket(opts: &SubmitOptions) -> (AttnJob, Ticket<AttentionResponse>) {
+        let mut rng = Pcg32::seeded(11);
+        let x = crate::linalg::Mat::randn(64, 16, 1.0, &mut rng);
+        let slot = Slot::new(1, opts.deadline);
+        let ticket = Ticket::new(Arc::clone(&slot));
+        let job = AttnJob {
+            arrived: Instant::now(),
+            req: AttentionRequest { id: 1, x: x.into_vec(), n: 64, d_model: 16, layer: 0 },
+            reply: AttnReply::new(slot),
+        };
+        (job, ticket)
+    }
+
+    #[test]
+    fn cancel_landing_mid_probe_runs_no_apply_work() {
+        // The cancel lands *after* the probe wave has already run (the
+        // hook fires between the probe and decide stages) — cooperative
+        // cancellation must stop the request at the boundary: no
+        // decisions, no factor applies, an explicit Cancelled error.
+        let mut shared = shared_with_hook(None);
+        let (job, ticket) = job_and_ticket(&SubmitOptions::default());
+        let token = ticket.cancel_token();
+        shared.after_probe_hook = Some(Box::new(move || token.cancel()));
+        run_attention_batch(&shared, vec![job]);
+
+        let err = ticket.wait().expect_err("cancelled mid-probe");
+        assert_eq!(err.kind, ErrorKind::Cancelled);
+        assert_eq!(shared.metrics.cancelled(), 1);
+        assert_eq!(shared.metrics.probes(), 1, "the probe wave did run");
+        let ops = shared.reg.ops();
+        assert_eq!(ops.get(Op::LowRankAttention), 0, "no apply work after the cancel");
+        assert_eq!(ops.get(Op::FullAttention), 0);
+        assert_eq!(shared.metrics.requests(), 0, "no completed-request record");
+    }
+
+    #[test]
+    fn deadline_expiring_mid_probe_stops_the_request() {
+        let mut shared = shared_with_hook(None);
+        // Alive at drain time, dead by the post-probe boundary.
+        let opts = SubmitOptions::deadline_in(Duration::from_millis(250));
+        let (job, ticket) = job_and_ticket(&opts);
+        shared.after_probe_hook =
+            Some(Box::new(|| std::thread::sleep(Duration::from_millis(600))));
+        run_attention_batch(&shared, vec![job]);
+
+        let err = ticket.wait().expect_err("expired mid-probe");
+        assert_eq!(err.kind, ErrorKind::DeadlineExceeded);
+        assert_eq!(shared.metrics.expired(), 1);
+        assert_eq!(shared.reg.ops().get(Op::LowRankAttention), 0);
+    }
+
+    #[test]
+    fn live_tickets_flow_through_boundaries_untouched() {
+        // The boundary checks must not disturb a live request.
+        let shared = shared_with_hook(None);
+        let (job, ticket) = job_and_ticket(&SubmitOptions::default());
+        run_attention_batch(&shared, vec![job]);
+        let resp = ticket.wait().expect("served");
+        assert_eq!(resp.ranks.len(), 1);
+        assert!(shared.reg.ops().get(Op::LowRankAttention) > 0);
     }
 }

@@ -41,6 +41,7 @@ use crate::flops;
 use crate::linalg::{IncrementalCache, Mat, Svd};
 use crate::rl::{featurize, ActorCritic, ConvFeaturizer, RankState};
 use crate::runtime::ArtifactRegistry;
+use crate::sim::{project_latency_ms, DeviceProfile};
 use crate::spectral::{assess_transition, TrustRegion};
 use crate::util::{global_pool, Pcg32};
 use anyhow::Result;
@@ -86,6 +87,13 @@ pub struct ControllerConfig {
     /// runs.
     pub segment_len: usize,
     pub seed: u64,
+    /// Deployment profile to project per-decision latency onto when the
+    /// backend has no latency model of its own. A backend that *does*
+    /// model latency (the sim backend) always wins, so the serving
+    /// ledger in `Metrics` matches the backend's charge-for-charge.
+    /// `None` (default) on a host backend disables projection entirely —
+    /// bit-identical pre-latency behavior.
+    pub reward_profile: Option<DeviceProfile>,
 }
 
 impl Default for ControllerConfig {
@@ -97,6 +105,7 @@ impl Default for ControllerConfig {
             lambda: 5e-5,
             segment_len: 16,
             seed: 0xC011,
+            reward_profile: None,
         }
     }
 }
@@ -118,15 +127,29 @@ pub struct Decision {
     pub prev_rank: usize,
     pub masked_by_safety: bool,
     pub perturbation: f64,
+    /// Analytic FLOPs of the step at the *executed* kernel widths: the
+    /// factor apply at the rank's compiled bucket (what the backend
+    /// actually runs — `KernelShape::rank_bucket`, not the requested
+    /// rank) plus the segment-amortized probe.
     pub flops_spent: u64,
     pub flops_full: u64,
+    /// Projected device latency attributable to this step's *backend*
+    /// kernel charges (factor apply at the bucket, plus the policy op at
+    /// boundaries on the `Hlo` source), when a projection profile is in
+    /// scope — mirrors the sim backend's roofline ledger charge for
+    /// charge. `None` when neither the backend nor the controller
+    /// config carries a profile.
+    pub projected_ms: Option<f64>,
+    /// Full-rank counterfactual projection of the same step.
+    pub projected_full_ms: Option<f64>,
     /// True when this call re-ran the policy (segment boundary).
     pub fresh_decision: bool,
 }
 
 /// Decision record for the dense full-rank path (no controller state).
-pub fn full_rank_decision(n: usize, d: usize) -> Decision {
+pub fn full_rank_decision(n: usize, d: usize, profile: Option<&DeviceProfile>) -> Decision {
     let full = flops::full_attention_flops(n, d);
+    let projected = profile.map(|p| project_latency_ms(full, p));
     Decision {
         rank: n,
         prev_rank: n,
@@ -134,6 +157,8 @@ pub fn full_rank_decision(n: usize, d: usize) -> Decision {
         perturbation: 0.0,
         flops_spent: full,
         flops_full: full,
+        projected_ms: projected,
+        projected_full_ms: projected,
         fresh_decision: true,
     }
 }
@@ -260,6 +285,12 @@ impl RankController {
     /// Largest grid rank (the probe decomposes to its bucket).
     pub fn r_max(&self) -> usize {
         *self.cfg.rank_grid.iter().max().expect("non-empty rank grid")
+    }
+
+    /// The profile decisions project latency onto — the registry's
+    /// single precedence rule applied to this controller's config.
+    pub fn projection_profile(&self, reg: &ArtifactRegistry) -> Option<DeviceProfile> {
+        reg.projection_profile(self.cfg.reward_profile)
     }
 
     /// Pick a rank for the state/spectrum under the safety mask.
@@ -433,11 +464,38 @@ impl RankController {
             self.rank_trace.push((ctx.layer, step.calls / seg.max(1), rank));
         }
 
-        // FLOPs ledger: the probe amortizes over the segment.
+        // FLOPs ledger: the kernel part is charged at the rank's
+        // *compiled bucket* — the masked factor apply always runs full
+        // bucket-width matmuls, so charging the requested rank would
+        // understate what the backend executes (and disagree with the
+        // sim backend's roofline charges). The probe amortizes over the
+        // segment.
+        let bucket = ctx.reg.rank_bucket(rank);
+        let kernel_flops = flops::lowrank_attention_flops(n, d, bucket, false);
         let bucket_max = ctx.reg.rank_bucket(r_max);
-        let spent = flops::lowrank_attention_flops(n, d, rank, false)
-            + flops::partial_svd_flops(n, n, bucket_max)
-                / self.cfg.segment_len.max(1) as u64;
+        let amortize = self.cfg.segment_len.max(1) as u64;
+        let spent = kernel_flops + flops::partial_svd_flops(n, n, bucket_max) / amortize;
+
+        // Projected-latency attribution: mirror exactly the charges this
+        // step drives into the backend — the factor apply at the bucket
+        // and, at boundaries on the Hlo source, one policy-net call. The
+        // host-side probe is not a backend op and is deliberately absent,
+        // so the per-request ledger matches the sim backend's to 1e-9.
+        let profile = self.projection_profile(ctx.reg);
+        let projected_ms = profile.map(|p| {
+            let mut ms = project_latency_ms(kernel_flops, &p);
+            if fresh && matches!(self.source.as_ref(), PolicySource::Hlo) {
+                let pol = &ctx.reg.manifest.policy;
+                ms += project_latency_ms(
+                    flops::policy_overhead_flops(pol.state_dim, pol.d_model, pol.n_actions),
+                    &p,
+                );
+            }
+            ms
+        });
+        let projected_full_ms =
+            profile.map(|p| project_latency_ms(flops::full_attention_flops(n, d), &p));
+
         self.streams
             .get_mut(&key)
             .expect("stream planned before decide")
@@ -449,6 +507,8 @@ impl RankController {
             perturbation,
             flops_spent: spent,
             flops_full: flops::full_attention_flops(n, d),
+            projected_ms,
+            projected_full_ms,
             fresh_decision: fresh,
         })
     }
@@ -501,9 +561,13 @@ impl RankController {
                 let inp = heads[i].1;
                 reg.full_attention(&inp.q, &inp.k, &inp.v)
             });
+            let profile = self.projection_profile(reg);
             let mut result = Vec::with_capacity(heads.len());
             for (y, &(_, inp)) in outs.into_iter().zip(heads) {
-                result.push((y?, full_rank_decision(inp.seq_len(), inp.head_dim())));
+                result.push((
+                    y?,
+                    full_rank_decision(inp.seq_len(), inp.head_dim(), profile.as_ref()),
+                ));
             }
             return Ok(result);
         }
@@ -669,10 +733,49 @@ mod tests {
 
     #[test]
     fn full_rank_decision_spends_full_flops() {
-        let d = full_rank_decision(64, 16);
+        let d = full_rank_decision(64, 16, None);
         assert_eq!(d.rank, 64);
         assert_eq!(d.flops_spent, d.flops_full);
         assert!(d.fresh_decision && !d.masked_by_safety);
+        assert!(d.projected_ms.is_none() && d.projected_full_ms.is_none());
+
+        let p = DeviceProfile::A100;
+        let dp = full_rank_decision(64, 16, Some(&p));
+        let want = project_latency_ms(flops::full_attention_flops(64, 16), &p);
+        assert_eq!(dp.projected_ms, Some(want));
+        assert_eq!(dp.projected_full_ms, Some(want));
+    }
+
+    #[test]
+    fn decide_step_charges_executed_bucket_widths() {
+        // Grid rank 40 executes in the 48-wide compiled bucket: the
+        // FLOPs ledger and the latency projection must price the bucket,
+        // not the requested rank (regression for the metrics-vs-sim
+        // ledger disagreement).
+        let reg = ArtifactRegistry::open_host(64, 16);
+        assert_eq!(reg.rank_bucket(40), 48);
+        let cfg = ControllerConfig {
+            reward_profile: Some(DeviceProfile::CPU_DEFAULT),
+            ..Default::default()
+        };
+        let mut c = RankController::new(cfg, PolicySource::Fixed(40));
+        let mut rng = Pcg32::seeded(4);
+        let x = Mat::randn(64, 16, 1.0, &mut rng);
+        let w = MhsaWeights::init(16, 1, &mut rng);
+        let heads = crate::attention::project_heads(&x, &w, true);
+        let inp = &heads[0];
+        let (_, dec) = c
+            .attention(&reg, &x, &w, inp, 0, 0, 1)
+            .expect("controller attention");
+        assert_eq!(dec.rank, 40);
+        let n = inp.seq_len();
+        let d = inp.head_dim();
+        let kernel = flops::lowrank_attention_flops(n, d, 48, false);
+        let amortized = flops::partial_svd_flops(n, n, reg.rank_bucket(64))
+            / c.cfg.segment_len as u64;
+        assert_eq!(dec.flops_spent, kernel + amortized, "bucket width, not rank 40");
+        let want_ms = project_latency_ms(kernel, &DeviceProfile::CPU_DEFAULT);
+        assert_eq!(dec.projected_ms, Some(want_ms));
     }
 
     // Device-backed integration tests live in rust/tests/serving.rs; the

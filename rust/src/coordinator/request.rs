@@ -137,6 +137,11 @@ pub struct GenerateResponse {
     /// Number of generation requests co-batched in the same drained
     /// batch (same-type convention as `AttentionResponse::batch_size`).
     pub batch_size: usize,
+    /// Projected device latency of the LM chunk that decoded this
+    /// request (shared by every request packed into the chunk, like
+    /// `compute_ms`), when a projection profile is in scope — the sim
+    /// backend's own, or the engine's configured `reward_profile`.
+    pub projected_ms: Option<f64>,
 }
 
 /// One incremental token produced by a streaming generation ticket,
@@ -167,6 +172,12 @@ pub struct AttentionResponse {
     pub compute_ms: f64,
     /// Number of attention requests co-batched into that pipeline run.
     pub batch_size: usize,
+    /// Projected device latency attributable to *this request's* backend
+    /// kernel charges (summed over its heads), when a projection profile
+    /// is in scope. Per-request — unlike `compute_ms`, co-batched
+    /// requests do not share it; summing it across a wave reproduces the
+    /// sim backend's ledger charge for that wave.
+    pub projected_ms: Option<f64>,
 }
 
 /// Internal envelope carrying arrival time and the optional deadline

@@ -12,15 +12,22 @@
 //!   drrl train --steps 200 --corpus wiki103-sim --out bench_out/lm.bin
 //!   drrl serve --requests 64 --engines 2 --policy hlo
 //!   drrl serve --backend sim:a100 --policy hlo   # roofline-projected latency
+//!   drrl agent --reward-profile cpu              # latency-aware reward
 //!
 //! `serve` takes `--backend auto|host|sim[:a100|apple-m|cpu]|pjrt` to pick
 //! the typed execution backend (every backend implements the full op set).
+//! `train`, `serve` and `agent` take `--reward-profile a100|apple-m|cpu`
+//! to price the efficiency axis as *projected device latency* on that
+//! profile: `agent` trains a hardware-in-the-loop policy, `serve` folds a
+//! per-profile projected-latency ledger into its live metrics report, and
+//! `train` summarizes the projected cost of the training run.
 
 use drrl::coordinator::{BatchPolicy, ControllerConfig, PolicySource, RouteStrategy, Router};
 use drrl::data::{Corpus, CorpusProfile};
 use drrl::model::ExperimentConfig;
-use drrl::rl::{train_hybrid, EnvConfig, RankEnv, TrainerConfig};
+use drrl::rl::{train_hybrid, EnvConfig, RankEnv, RewardConfig, TrainerConfig};
 use drrl::runtime::{ArtifactRegistry, Manifest};
+use drrl::sim::{project_latency_ms, DeviceProfile};
 use drrl::train::{generate_greedy, LmTrainer};
 use drrl::util::{Args, Pcg32};
 use drrl::{attention::MhsaWeights, linalg::Mat};
@@ -68,6 +75,13 @@ fn profile_from(args: &Args) -> CorpusProfile {
     }
 }
 
+/// Parse `--reward-profile a100|apple-m|cpu` — the deployment device the
+/// latency-aware reward (and the serving projected-latency ledger)
+/// prices compute on. Absent flag = hardware-blind pre-latency behavior.
+fn reward_profile_from(args: &Args) -> Result<Option<DeviceProfile>, String> {
+    DeviceProfile::parse_reward_profile(args.get("reward-profile"))
+}
+
 fn cmd_train(args: &Args) -> i32 {
     let steps = args.usize_or("steps", 200);
     let corpus_bytes = args.usize_or("corpus-bytes", 400_000);
@@ -83,6 +97,13 @@ fn cmd_train(args: &Args) -> i32 {
         }
     };
     println!("backend: {}", reg.backend_name());
+    let reward_profile = match reward_profile_from(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
     let corpus = Corpus::build(profile_from(args), corpus_bytes, seed);
     let mut tr = LmTrainer::new(&reg, seed);
     println!("training {} steps on {}…", steps, corpus.profile.name());
@@ -93,6 +114,23 @@ fn cmd_train(args: &Args) -> i32 {
         tr.last_loss(),
         ppl
     );
+    // Projected device latency of the training run: one fused train-step
+    // dispatch per step (the same charge the sim backend's roofline
+    // ledger records per lm_train_step call), on the same profile
+    // precedence serving uses — so this figure matches the sim ledger
+    // printed below.
+    if let Some(p) = reg.projection_profile(reward_profile) {
+        let per_step = project_latency_ms(reg.manifest.lm.train_step_flops(), &p);
+        println!(
+            "projected[{}]: {:.4} ms/train-step, {:.2} ms for {steps} steps",
+            p.name,
+            per_step,
+            per_step * steps as f64
+        );
+    }
+    if let Some(ms) = reg.projected_ms() {
+        println!("sim ledger (all ops incl. eval): {ms:.2} ms");
+    }
     if let Some(out) = args.get("out") {
         save_params(out, &tr.params);
         println!("params saved to {out}");
@@ -151,6 +189,17 @@ fn cmd_serve(args: &Args) -> i32 {
         }
     };
     println!("backend: {}", reg.backend_name());
+    // `--reward-profile` projects serving latency for a deployment
+    // device even on backends without a latency model of their own (a
+    // sim backend's profile always wins, so the reported ledger matches
+    // the backend's charges).
+    let reward_profile = match reward_profile_from(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
     let n_requests = args.usize_or("requests", 32);
     let n_workers = args.usize_or("workers", 2);
     let policy = match args.get_or("policy", "hlo") {
@@ -179,6 +228,7 @@ fn cmd_serve(args: &Args) -> i32 {
             ControllerConfig {
                 segment_len: cfg.serving.segment_len,
                 use_trust_region: cfg.serving.use_trust_region,
+                reward_profile,
                 ..Default::default()
             },
             policy,
@@ -236,10 +286,10 @@ fn cmd_serve(args: &Args) -> i32 {
     if failed > 0 {
         eprintln!("{failed} request(s) failed");
     }
+    // The projected-latency ledger (spent vs full-rank counterfactual,
+    // per device profile) is part of every engine's Metrics::report()
+    // now — no exit-time sim-ledger print needed.
     println!("{}", router.report());
-    if let Some(ms) = reg.projected_ms() {
-        println!("sim backend: projected device kernel latency {ms:.2} ms total");
-    }
     0
 }
 
@@ -252,11 +302,30 @@ fn cmd_agent(args: &Args) -> i32 {
         .map(|_| MhsaWeights::init(d_model, n_heads, &mut rng))
         .collect();
     let grid = args.usize_list_or("ranks", &[4, 8, 12, 16]);
+    // Hardware-in-the-loop training: with `--reward-profile` the β term
+    // prices projected device latency instead of normalized FLOPs, so
+    // the trained policy adapts its ranks to the deployment device
+    // (`--eco` additionally recalibrates β per profile, §6.2).
+    let reward_profile = match reward_profile_from(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let mut reward = RewardConfig { profile: reward_profile, ..Default::default() };
+    if args.flag("eco") {
+        reward = reward.eco_mode();
+    }
+    if let Some(p) = &reward.profile {
+        println!("reward profile: {} (β = {:.2})", p.name, reward.beta);
+    }
     let mut env = RankEnv::new(
         layers,
         EnvConfig {
             rank_grid: grid,
             use_trust_region: !args.flag("no-trust-region"),
+            reward,
             ..Default::default()
         },
     );
@@ -272,8 +341,8 @@ fn cmd_agent(args: &Args) -> i32 {
     println!("BC accuracy: {:.3}", agent.bc_accuracy);
     for p in &agent.curve {
         println!(
-            "round {:3}  reward {:+.4}  mean_rank {:5.1}  entropy {:.3}",
-            p.round, p.mean_reward, p.mean_rank, p.stats.entropy
+            "round {:3}  reward {:+.4}  mean_rank {:5.1}  eff_cost {:.3}  entropy {:.3}",
+            p.round, p.mean_reward, p.mean_rank, p.mean_efficiency_cost, p.stats.entropy
         );
     }
     0

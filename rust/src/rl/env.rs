@@ -3,11 +3,14 @@
 //! One episode = one decision segment propagated through all layers of a
 //! transformer stack: at layer l the agent observes s_t, picks a rank
 //! from the discrete grid, the environment applies rank-r attention,
-//! scores fidelity vs the full-rank output, charges FLOPs and the
-//! perturbation penalty, and hands the (low-rank) activations to the
-//! next layer.
+//! scores fidelity vs the full-rank output, charges the efficiency term
+//! (normalized FLOPs, or the rank's *projected device latency* when the
+//! reward carries a deployment `DeviceProfile`) and the perturbation
+//! penalty, and hands the (low-rank) activations to the next layer.
+//! Training against different profiles therefore yields different
+//! policies — the hardware-in-the-loop axis of the paper.
 
-use super::reward::{reward, RewardConfig, RewardInputs};
+use super::reward::{efficiency_cost, reward, RewardConfig, RewardInputs};
 use super::state::{featurize, ConvFeaturizer, RankState};
 use crate::attention::{attention_matrix, mhsa_full, mhsa_lowrank, project_heads, MhsaWeights};
 use crate::linalg::{top_k_svd, Mat};
@@ -64,6 +67,9 @@ pub struct StepInfo {
     pub prev_rank: usize,
     pub similarity: f64,
     pub perturbation: f64,
+    /// The β-term base charged for this step: normalized FLOPs without a
+    /// reward profile, normalized projected device latency with one.
+    pub efficiency_cost: f64,
     pub masked_by_safety: bool,
     pub reward: f64,
 }
@@ -236,6 +242,7 @@ impl RankEnv {
             prev_rank: self.prev_rank,
             similarity,
             perturbation: assessment.delta_a_fro,
+            efficiency_cost: efficiency_cost(&self.cfg.reward, n, head_dim, rank),
             masked_by_safety: masked,
             reward: r,
         };
@@ -340,6 +347,37 @@ mod tests {
         let self_idx = env.cfg.rank_grid.iter().position(|&r| r == 12).unwrap();
         assert!(mask[self_idx]);
         assert!(!mask[0], "rank 4 jump should be masked: {mask:?}");
+    }
+
+    #[test]
+    fn latency_profile_reprices_steps_without_changing_dynamics() {
+        use crate::sim::DeviceProfile;
+        let mk = |profile: Option<DeviceProfile>| {
+            let mut rng = Pcg32::seeded(3);
+            let layers: Vec<MhsaWeights> =
+                (0..2).map(|_| MhsaWeights::init(16, 2, &mut rng)).collect();
+            RankEnv::new(
+                layers,
+                EnvConfig {
+                    rank_grid: vec![4, 8, 12, 16],
+                    use_trust_region: false,
+                    reward: RewardConfig { profile, ..Default::default() },
+                    ..Default::default()
+                },
+            )
+        };
+        let mut blind = mk(None);
+        let mut cpu = mk(Some(DeviceProfile::CPU_DEFAULT));
+        blind.reset(input(20));
+        cpu.reset(input(20));
+        let a = blind.step(1);
+        let b = cpu.step(1);
+        // Same dynamics (identical seeds/actions)…
+        assert_eq!(a.info.similarity, b.info.similarity);
+        assert_eq!(a.info.perturbation, b.info.perturbation);
+        // …different efficiency pricing, hence different rewards.
+        assert_ne!(a.info.efficiency_cost, b.info.efficiency_cost);
+        assert_ne!(a.reward, b.reward);
     }
 
     #[test]

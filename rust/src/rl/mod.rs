@@ -21,6 +21,6 @@ pub use env::{EnvConfig, RankEnv, StepInfo, StepResult};
 pub use gae::{gae, normalize};
 pub use oracle::greedy_episode;
 pub use ppo::{ppo_update, PpoConfig, PpoStats};
-pub use reward::{reward, RewardConfig, RewardInputs};
+pub use reward::{efficiency_cost, latency_fraction, reward, RewardConfig, RewardInputs};
 pub use state::{featurize, state_dim, ConvFeaturizer, RankState};
 pub use trainer::{train_hybrid, TrainedAgent, TrainPoint, TrainerConfig};

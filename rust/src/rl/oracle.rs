@@ -2,6 +2,12 @@
 //! every admissible rank with the true reward and picks the argmax. Too
 //! slow for deployment (it computes full and low-rank attention per
 //! candidate) but ideal for generating behavior-cloning trajectories.
+//!
+//! The "true reward" is whatever the environment's `RewardConfig`
+//! prices: with a deployment `DeviceProfile` configured, the oracle's
+//! argmax — and therefore the BC warm start — is already
+//! latency-aware, so no separate oracle plumbing is needed for
+//! hardware-in-the-loop training.
 
 use super::buffer::BcDataset;
 use super::env::{RankEnv, StepInfo};

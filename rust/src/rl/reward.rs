@@ -1,12 +1,35 @@
 //! The DR-RL reward (paper Eq. 8 and its stability-shaped form Eq. 13):
 //!
-//!   R_t = α·sim(A_full, A_r) − β·FLOPs(r_t) − γ·‖ΔA‖_F
+//!   R_t = α·sim(A_full, A_r) − β·C(r_t) − γ·‖ΔA‖_F
 //!
-//! `sim` is cosine similarity between full-rank and rank-r attention,
-//! FLOPs(r) is the normalized compute cost, and the γ term penalizes
-//! large perturbations from the previous rank (ablatable for Table 2).
+//! `sim` is cosine similarity between full-rank and rank-r attention and
+//! the γ term penalizes large perturbations from the previous rank
+//! (ablatable for Table 2). The efficiency term C(r) comes in two forms:
+//!
+//! * **Hardware-blind** (`profile == None`, the original Eq. 8 shape):
+//!   C(r) = FLOPs(r) / FLOPs(full) — the normalized analytic compute
+//!   cost, identical on every device.
+//! * **Hardware-in-the-loop** (`profile == Some(dev)`): C(r) =
+//!   `project_latency_ms(FLOPs(r), dev) / project_latency_ms(FLOPs(full),
+//!   dev)` — the rank-r attention kernel's *projected device latency*
+//!   under the deployment [`DeviceProfile`]'s roofline model, normalized
+//!   by the full-rank projection. This is the paper's "strictly balances
+//!   attention fidelity against computational latency" under hardware
+//!   constraints: on dispatch-bound devices (an A100 at short sequence
+//!   lengths) the term flattens — rank barely buys latency, so the
+//!   policy spends rank on fidelity — while on compute-bound devices it
+//!   tracks the FLOPs ratio and presses ranks down.
+//!
+//! With no profile configured the reward is bit-for-bit the pre-latency
+//! behavior (pinned by `prop_no_profile_reward_is_flops_ratio_bitwise`
+//! in `rust/tests/proptest_invariants.rs`).
 
-use crate::flops::normalized_flops;
+use crate::flops::{full_attention_flops, lowrank_attention_flops, normalized_flops};
+use crate::sim::{project_latency_ms, DeviceProfile};
+
+/// Reference shape for the eco-mode recalibration: the paper's bench
+/// block (L=1024, head dim 64) over the r ∈ [16, 64] grid extremes.
+const ECO_REF: (usize, usize, usize, usize) = (1024, 64, 16, 64);
 
 /// Reward coefficients. Paper defaults favour fidelity (α) with a gentle
 /// compute pressure (β) and a stability term (γ).
@@ -15,17 +38,26 @@ pub struct RewardConfig {
     pub alpha: f64,
     pub beta: f64,
     pub gamma: f64,
+    /// Deployment device the β term prices compute on. `None` keeps the
+    /// hardware-blind normalized-FLOPs term (bit-for-bit the original
+    /// Eq. 8/13 behavior).
+    pub profile: Option<DeviceProfile>,
 }
 
 impl Default for RewardConfig {
     fn default() -> Self {
         // Calibrated so a good policy earns ~[0.3, 0.9] per step:
-        // sim ∈ [0.9, 1], normalized FLOPs ∈ [0.05, 1], ‖ΔA‖ ∈ [0, ~0.5].
-        RewardConfig { alpha: 1.0, beta: 0.5, gamma: 0.2 }
+        // sim ∈ [0.9, 1], normalized cost ∈ [0.05, 1], ‖ΔA‖ ∈ [0, ~0.5].
+        RewardConfig { alpha: 1.0, beta: 0.5, gamma: 0.2, profile: None }
     }
 }
 
 impl RewardConfig {
+    /// Price the efficiency term as projected latency on `profile`.
+    pub fn with_profile(self, profile: DeviceProfile) -> Self {
+        RewardConfig { profile: Some(profile), ..self }
+    }
+
     /// Ablation: no reward shaping (β = 0), Table 2 row 4.
     pub fn without_efficiency_penalty(self) -> Self {
         RewardConfig { beta: 0.0, ..self }
@@ -39,8 +71,26 @@ impl RewardConfig {
 
     /// "Eco mode" reweighting from the paper's §6.2 (edge deployment):
     /// prioritizes the energy/compute axis.
+    ///
+    /// The classic calibration (β = 2) assumes the normalized-FLOPs term,
+    /// whose spread across the rank grid is the same on every device.
+    /// With a [`DeviceProfile`] the latency term's spread differs —
+    /// dispatch overhead floors fast devices and compresses the range —
+    /// so β is recalibrated to keep the same eco pressure *per unit of
+    /// achievable latency saving* at the reference shape, capped so the
+    /// efficiency term cannot swamp fidelity entirely.
     pub fn eco_mode(self) -> Self {
-        RewardConfig { alpha: 0.5, beta: 2.0, gamma: self.gamma }
+        let (n, d, r_lo, r_hi) = ECO_REF;
+        let beta = match &self.profile {
+            None => 2.0,
+            Some(dev) => {
+                let flops_spread = normalized_flops(n, d, r_hi) - normalized_flops(n, d, r_lo);
+                let latency_spread =
+                    latency_fraction(n, d, r_hi, dev) - latency_fraction(n, d, r_lo, dev);
+                (2.0 * flops_spread / latency_spread.max(1e-9)).min(32.0)
+            }
+        };
+        RewardConfig { alpha: 0.5, beta, gamma: self.gamma, profile: self.profile }
     }
 }
 
@@ -49,7 +99,7 @@ impl RewardConfig {
 pub struct RewardInputs {
     /// cosine sim(A_full, A_r) or sim(Y_full, Y_r) — fidelity term.
     pub similarity: f64,
-    /// Sequence length / head dim / selected rank for the FLOPs term.
+    /// Sequence length / head dim / selected rank for the efficiency term.
     pub n: usize,
     pub d: usize,
     pub rank: usize,
@@ -57,10 +107,35 @@ pub struct RewardInputs {
     pub perturbation: f64,
 }
 
+/// Rank-r attention latency projected on `dev`, normalized by the
+/// full-rank projection — the hardware-in-the-loop efficiency term.
+/// Strictly increasing in `rank`; in (0, 1] for r < n on compute-bound
+/// devices, approaching 1 everywhere on dispatch-bound ones.
+///
+/// Granularity note: like the hardware-blind Eq. 8 term, this prices the
+/// *requested* rank. The training environment is registry-free — its
+/// action grid is not tied to any deployment's compiled bucket set — so
+/// bucket rounding (a serving-runtime artifact) stays out of the reward;
+/// the serving ledgers (`Decision::flops_spent`/`projected_ms`) charge
+/// the executed bucket widths.
+pub fn latency_fraction(n: usize, d: usize, rank: usize, dev: &DeviceProfile) -> f64 {
+    project_latency_ms(lowrank_attention_flops(n, d, rank, false), dev)
+        / project_latency_ms(full_attention_flops(n, d), dev)
+}
+
+/// The β-term base C(r): normalized FLOPs without a profile (original
+/// Eq. 8), normalized projected latency with one.
+pub fn efficiency_cost(cfg: &RewardConfig, n: usize, d: usize, rank: usize) -> f64 {
+    match &cfg.profile {
+        None => normalized_flops(n, d, rank),
+        Some(dev) => latency_fraction(n, d, rank, dev),
+    }
+}
+
 /// Compute R_t (Eq. 13). With `cfg.gamma == 0` this is exactly Eq. 8.
 pub fn reward(cfg: &RewardConfig, inp: &RewardInputs) -> f64 {
     cfg.alpha * inp.similarity
-        - cfg.beta * normalized_flops(inp.n, inp.d, inp.rank)
+        - cfg.beta * efficiency_cost(cfg, inp.n, inp.d, inp.rank)
         - cfg.gamma * inp.perturbation
 }
 
@@ -121,5 +196,47 @@ mod tests {
         let delta_eco = reward(&eco, &RewardInputs { rank: 8, ..base_inputs() })
             - reward(&eco, &RewardInputs { rank: 64, ..base_inputs() });
         assert!(delta_eco > delta_std);
+    }
+
+    #[test]
+    fn latency_term_flattens_on_dispatch_bound_devices() {
+        // At short sequence lengths the A100 is dispatch-bound: rank
+        // barely buys latency, so the term compresses toward 1, while
+        // the slow-CPU projection stays compute-bound and keeps a wide
+        // spread. This asymmetry is exactly what makes trained policies
+        // device-dependent.
+        let (n, d) = (64, 16);
+        let spread = |dev: &DeviceProfile| {
+            latency_fraction(n, d, 48, dev) - latency_fraction(n, d, 8, dev)
+        };
+        let a100 = spread(&DeviceProfile::A100);
+        let cpu = spread(&DeviceProfile::CPU_DEFAULT);
+        assert!(a100 > 0.0, "still strictly increasing: {a100}");
+        assert!(cpu > 10.0 * a100, "cpu spread {cpu} vs a100 {a100}");
+    }
+
+    #[test]
+    fn profiled_reward_still_orders_by_rank() {
+        for dev in DeviceProfile::BUILTIN {
+            let cfg = RewardConfig::default().with_profile(dev);
+            let cheap = reward(&cfg, &RewardInputs { rank: 8, ..base_inputs() });
+            let pricey = reward(&cfg, &RewardInputs { rank: 128, ..base_inputs() });
+            assert!(cheap > pricey, "profile {}", dev.name);
+        }
+    }
+
+    #[test]
+    fn eco_mode_recalibrates_beta_per_profile() {
+        // Hardware-blind eco keeps the classic β = 2; a dispatch-bound
+        // device (compressed latency spread) gets a larger β so the eco
+        // pressure per unit of achievable saving is preserved, within
+        // the cap; a compute-bound device stays near the classic value.
+        let blind = RewardConfig::default().eco_mode();
+        assert_eq!(blind.beta, 2.0);
+        let a100 = RewardConfig::default().with_profile(DeviceProfile::A100).eco_mode();
+        let cpu = RewardConfig::default().with_profile(DeviceProfile::CPU_DEFAULT).eco_mode();
+        assert!(a100.beta > cpu.beta, "a100 β {} vs cpu β {}", a100.beta, cpu.beta);
+        assert!(a100.beta <= 32.0, "β capped: {}", a100.beta);
+        assert!((cpu.beta - 2.0).abs() < 1.0, "compute-bound β near classic: {}", cpu.beta);
     }
 }

@@ -1,6 +1,13 @@
 //! Hybrid training driver (paper §4.5.3): behavior-clone from the greedy
 //! oracle, then PPO fine-tune on live environment rollouts. Produces the
 //! deployable `DrRlPolicy` and the training curves for Fig 2.
+//!
+//! The reward (and hence both the oracle labels and the PPO signal)
+//! flows through the environment's `RewardConfig`: configure a
+//! deployment `DeviceProfile` there and the whole pipeline trains
+//! against *projected device latency* instead of hardware-blind FLOPs —
+//! policies trained for different devices select measurably different
+//! ranks (`rust/tests/latency_reward.rs`).
 
 use super::actor_critic::ActorCritic;
 use super::bc::{behavior_clone, BcConfig};
@@ -46,6 +53,11 @@ pub struct TrainPoint {
     pub round: usize,
     pub mean_reward: f64,
     pub mean_rank: f64,
+    /// Mean β-term base over the round's rollouts: normalized FLOPs, or
+    /// normalized projected device latency when the environment's reward
+    /// carries a deployment `DeviceProfile` — the curve that shows the
+    /// policy trading fidelity against the *device's* latency.
+    pub mean_efficiency_cost: f64,
     pub stats: PpoStats,
 }
 
@@ -83,6 +95,7 @@ pub fn train_hybrid(
     for round in 0..cfg.ppo_rounds {
         let mut buf = RolloutBuffer::new();
         let mut rank_sum = 0.0;
+        let mut eff_sum = 0.0;
         let mut rank_n = 0usize;
         for _ in 0..cfg.episodes_per_round {
             let x = sample_input(&mut rng);
@@ -95,6 +108,7 @@ pub fn train_hybrid(
                 let value = ac.value(&state.features);
                 let res = env.step(action);
                 rank_sum += res.info.rank as f64;
+                eff_sum += res.info.efficiency_cost;
                 rank_n += 1;
                 buf.push(Transition {
                     state: state.features.clone(),
@@ -117,6 +131,7 @@ pub fn train_hybrid(
             round,
             mean_reward,
             mean_rank: rank_sum / rank_n.max(1) as f64,
+            mean_efficiency_cost: eff_sum / rank_n.max(1) as f64,
             stats,
         });
     }

@@ -180,10 +180,20 @@ impl OpCounters {
 
 /// Cumulative projected-latency ledger for backends that model hardware
 /// timing (the [`super::SimBackend`]).
+///
+/// Besides the running total, the ledger supports *scoped* reads: take a
+/// [`LedgerMark`] before an op wave and read [`LatencyLedger::since`]
+/// after it to attribute the wave's charges — that is how per-request
+/// `projected_ms` attribution is pinned against the backend's own
+/// accounting (see `rust/tests/backend_conformance.rs`).
 #[derive(Default)]
 pub struct LatencyLedger {
     total_ms: Mutex<f64>,
 }
+
+/// A point-in-time ledger position, for delta (scoped) reads.
+#[derive(Debug, Clone, Copy)]
+pub struct LedgerMark(f64);
 
 impl LatencyLedger {
     pub fn add_ms(&self, ms: f64) {
@@ -192,6 +202,18 @@ impl LatencyLedger {
 
     pub fn total_ms(&self) -> f64 {
         *self.total_ms.lock().unwrap()
+    }
+
+    /// The current ledger position, for a later scoped read.
+    pub fn mark(&self) -> LedgerMark {
+        LedgerMark(self.total_ms())
+    }
+
+    /// Milliseconds charged since `mark` was taken. Only attributable to
+    /// one op wave when no other backend traffic interleaves — callers
+    /// scope marks to exclusive sections (single-worker runs, tests).
+    pub fn since(&self, mark: LedgerMark) -> f64 {
+        self.total_ms() - mark.0
     }
 }
 
@@ -277,6 +299,20 @@ pub trait Backend: Send + Sync {
     fn projected_ms(&self) -> Option<f64> {
         None
     }
+
+    /// The [`LatencyLedger`] behind [`Backend::projected_ms`], for scoped
+    /// (delta) reads. `Some` exactly when `models_latency` is true.
+    fn latency_ledger(&self) -> Option<&LatencyLedger> {
+        None
+    }
+
+    /// The device profile this backend's latency model projects onto.
+    /// `Some` exactly when [`Capabilities::models_latency`] is true; the
+    /// serving stack uses it to attribute per-request `projected_ms`
+    /// with the same roofline formulas the backend charges with.
+    fn device_profile(&self) -> Option<crate::sim::DeviceProfile> {
+        None
+    }
 }
 
 #[cfg(test)]
@@ -311,6 +347,20 @@ mod tests {
             assert!(be.warm(op).is_err());
         }
         assert!(be.projected_ms().is_none());
+        assert!(be.latency_ledger().is_none());
+        assert!(be.device_profile().is_none());
+    }
+
+    #[test]
+    fn ledger_scoped_reads_attribute_deltas() {
+        let l = LatencyLedger::default();
+        l.add_ms(1.5);
+        let mark = l.mark();
+        assert_eq!(l.since(mark), 0.0);
+        l.add_ms(2.25);
+        l.add_ms(0.25);
+        assert!((l.since(mark) - 2.5).abs() < 1e-12);
+        assert!((l.total_ms() - 4.0).abs() < 1e-12);
     }
 
     #[test]

@@ -23,6 +23,34 @@ pub struct LmShape {
     pub weight_decay: f64,
 }
 
+impl LmShape {
+    /// Analytic forward FLOPs of one whole (batch × seq_len) LM call —
+    /// the single definition both the `SimBackend` roofline charges and
+    /// the serving engine's per-request `projected_ms` attribution use,
+    /// so the two ledgers cannot drift.
+    pub fn batch_forward_flops(&self) -> u64 {
+        let dims = crate::flops::ModelDims {
+            block: crate::flops::BlockDims {
+                n: self.seq_len,
+                d_model: self.d_model,
+                n_heads: self.n_heads,
+                d_ff: self.d_ff,
+            },
+            n_layers: self.n_layers,
+            vocab: self.vocab,
+        };
+        dims.full_model_flops() * self.batch as u64
+    }
+
+    /// Analytic FLOPs of one fused AdamW train step on the same batch:
+    /// forward plus the standard backward ≈ 2× forward rule of thumb.
+    /// Single definition shared by the `SimBackend` charge and the
+    /// CLIs' projected train-cost summaries, so they cannot drift.
+    pub fn train_step_flops(&self) -> u64 {
+        3 * self.batch_forward_flops()
+    }
+}
+
 /// Kernel artifact shapes.
 #[derive(Debug, Clone)]
 pub struct KernelShape {

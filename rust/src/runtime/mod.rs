@@ -14,6 +14,22 @@
 //! panic — and per-op execute counts flow through [`backend::OpCounters`]
 //! into the serving engine's `Metrics::report()`.
 //!
+//! ## Projected-latency surfaces (`models_latency` backends)
+//!
+//! | surface | what it reads |
+//! |---------|---------------|
+//! | [`ArtifactRegistry::projected_ms`] | cumulative backend ledger total (ms) |
+//! | [`ArtifactRegistry::latency_ledger`] | the [`LatencyLedger`] itself — scoped `mark()`/`since()` delta reads attribute charges per op wave |
+//! | [`ArtifactRegistry::device_profile`] | the roofline [`crate::sim::DeviceProfile`] charges are priced on |
+//! | `AttentionResponse::projected_ms` | *per-request* attribution: that request's kernel charges (sums across a co-batched wave to the backend ledger, 1e-9) |
+//! | `GenerateResponse::projected_ms` | per-chunk attribution of the LM decode dispatches |
+//! | `Metrics::report()` | live `projected[profile]` ledger: spent vs full-rank counterfactual |
+//!
+//! The serving engine also accepts a `reward_profile` in its controller
+//! config: a backend with no latency model then still projects (same
+//! roofline formulas), while a `models_latency` backend's own profile
+//! always wins so the metrics ledger matches the backend's.
+//!
 //! ## Migration from the stringly-typed runtime
 //!
 //! The old API dispatched kernels by artifact-name string through a
@@ -44,7 +60,7 @@ pub mod registry;
 pub mod sim;
 pub mod tensor;
 
-pub use backend::{Backend, Capabilities, Op, OpCounters};
+pub use backend::{Backend, Capabilities, LatencyLedger, LedgerMark, Op, OpCounters};
 #[cfg(feature = "pjrt")]
 pub use device::PjrtBackend;
 pub use host::HostBackend;

@@ -101,14 +101,10 @@ impl ArtifactRegistry {
             }),
             "host" => Ok(Self::open_host(128, 32)),
             "sim" => {
-                let profile = match profile.unwrap_or("a100") {
-                    "a100" => DeviceProfile::A100,
-                    "apple-m" => DeviceProfile::APPLE_M,
-                    "cpu" => DeviceProfile::CPU_DEFAULT,
-                    other => anyhow::bail!(
-                        "unknown sim profile '{other}' (expected a100|apple-m|cpu)"
-                    ),
-                };
+                let key = profile.unwrap_or("a100");
+                let profile = DeviceProfile::by_name(key).ok_or_else(|| {
+                    anyhow::anyhow!("unknown sim profile '{key}' (expected a100|apple-m|cpu)")
+                })?;
                 Ok(Self::open_sim(128, 32, profile))
             }
             "pjrt" => {
@@ -160,6 +156,30 @@ impl ArtifactRegistry {
     /// Cumulative projected device latency, when the backend models one.
     pub fn projected_ms(&self) -> Option<f64> {
         self.backend.projected_ms()
+    }
+
+    /// The backend's projected-latency ledger, for scoped (delta) reads.
+    pub fn latency_ledger(&self) -> Option<&crate::runtime::backend::LatencyLedger> {
+        self.backend.latency_ledger()
+    }
+
+    /// The device profile the backend's latency model projects onto
+    /// (`Some` for the sim backend). Serving attributes per-request
+    /// `projected_ms` with this profile so its ledger matches the
+    /// backend's charge-for-charge.
+    pub fn device_profile(&self) -> Option<DeviceProfile> {
+        self.backend.device_profile()
+    }
+
+    /// THE precedence rule for latency projection, shared by the serving
+    /// engine, the rank controller and the CLIs: a backend that models
+    /// latency always wins (its ledger is the ground truth projected
+    /// figures must match), else the caller's configured reward profile.
+    pub fn projection_profile(
+        &self,
+        reward_profile: Option<DeviceProfile>,
+    ) -> Option<DeviceProfile> {
+        self.device_profile().or(reward_profile)
     }
 
     /// Warm every supported op (compile artifacts ahead of first use on

@@ -51,20 +51,10 @@ impl SimBackend {
         self.ledger.add_ms(project_latency_ms(flops, &self.profile));
     }
 
-    /// Whole-LM forward FLOPs for one (B, L) batch.
+    /// Whole-LM forward FLOPs for one (B, L) batch — the hoisted
+    /// definition shared with the engine's per-request attribution.
     fn lm_forward_flops(&self) -> u64 {
-        let lm = &self.manifest.lm;
-        let dims = flops::ModelDims {
-            block: flops::BlockDims {
-                n: lm.seq_len,
-                d_model: lm.d_model,
-                n_heads: lm.n_heads,
-                d_ff: lm.d_ff,
-            },
-            n_layers: lm.n_layers,
-            vocab: lm.vocab,
-        };
-        dims.full_model_flops() * lm.batch as u64
+        self.manifest.lm.batch_forward_flops()
     }
 }
 
@@ -128,13 +118,20 @@ impl Backend for SimBackend {
         tokens: &[i32],
         targets: &[i32],
     ) -> Result<f64> {
-        // Standard rule of thumb: backward ≈ 2× forward.
-        self.charge(3 * self.lm_forward_flops());
+        self.charge(self.manifest.lm.train_step_flops());
         self.inner.lm_train_step(params, adam_m, adam_v, step, tokens, targets)
     }
 
     fn projected_ms(&self) -> Option<f64> {
         Some(self.ledger.total_ms())
+    }
+
+    fn latency_ledger(&self) -> Option<&LatencyLedger> {
+        Some(&self.ledger)
+    }
+
+    fn device_profile(&self) -> Option<DeviceProfile> {
+        Some(self.profile)
     }
 }
 

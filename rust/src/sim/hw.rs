@@ -46,6 +46,35 @@ impl DeviceProfile {
         dispatch_us: 50.0,
     };
 
+    /// Every built-in profile, in a stable order (property sweeps).
+    pub const BUILTIN: [DeviceProfile; 3] =
+        [DeviceProfile::A100, DeviceProfile::APPLE_M, DeviceProfile::CPU_DEFAULT];
+
+    /// Look a built-in profile up by its CLI key (`a100`, `apple-m`,
+    /// `cpu`) — the single parser behind `--backend sim:<profile>` and
+    /// `--reward-profile <profile>`.
+    pub fn by_name(name: &str) -> Option<DeviceProfile> {
+        match name {
+            "a100" => Some(DeviceProfile::A100),
+            "apple-m" => Some(DeviceProfile::APPLE_M),
+            "cpu" => Some(DeviceProfile::CPU_DEFAULT),
+            _ => None,
+        }
+    }
+
+    /// Parse an optional `--reward-profile` CLI value. `None` (flag
+    /// absent) keeps the hardware-blind behavior; an unknown key reports
+    /// the accepted set. The single implementation behind every CLI and
+    /// example taking the flag.
+    pub fn parse_reward_profile(arg: Option<&str>) -> Result<Option<DeviceProfile>, String> {
+        match arg {
+            None => Ok(None),
+            Some(name) => DeviceProfile::by_name(name).map(Some).ok_or_else(|| {
+                format!("unknown --reward-profile '{name}' (expected a100|apple-m|cpu)")
+            }),
+        }
+    }
+
     /// Build a CPU profile from a measured (flops, seconds) sample.
     pub fn calibrated_cpu(flops: u64, seconds: f64) -> DeviceProfile {
         let gflops = flops as f64 / seconds.max(1e-9) / 1e9;
@@ -96,5 +125,24 @@ mod tests {
     fn dispatch_overhead_floors_small_kernels() {
         let tiny = project_latency_ms(1, &DeviceProfile::A100);
         assert!(tiny >= DeviceProfile::A100.dispatch_us / 1e3);
+    }
+
+    #[test]
+    fn by_name_resolves_builtin_profiles() {
+        assert_eq!(DeviceProfile::by_name("a100").unwrap().name, "a100-sim");
+        assert_eq!(DeviceProfile::by_name("apple-m").unwrap().name, "apple-m-sim");
+        assert_eq!(DeviceProfile::by_name("cpu").unwrap().name, "cpu");
+        assert!(DeviceProfile::by_name("tpu").is_none());
+        assert_eq!(DeviceProfile::BUILTIN.len(), 3);
+    }
+
+    #[test]
+    fn parse_reward_profile_flag_semantics() {
+        assert!(DeviceProfile::parse_reward_profile(None).unwrap().is_none());
+        let p = DeviceProfile::parse_reward_profile(Some("apple-m")).unwrap().unwrap();
+        assert_eq!(p.name, "apple-m-sim");
+        let err = DeviceProfile::parse_reward_profile(Some("tpu")).unwrap_err();
+        assert!(err.contains("unknown --reward-profile 'tpu'"), "{err}");
+        assert!(err.contains("a100|apple-m|cpu"), "{err}");
     }
 }

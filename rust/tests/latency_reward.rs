@@ -1,0 +1,114 @@
+//! Hardware-in-the-loop acceptance: training the DR-RL agent against
+//! different deployment `DeviceProfile`s must produce measurably
+//! different policies.
+//!
+//! The mechanism: at small attention shapes an A100 is dispatch-bound —
+//! rank barely buys projected latency, so the latency-priced β term is
+//! nearly flat and the policy spends rank on fidelity. The slow-CPU
+//! profile stays compute-bound at the same shapes, the β term tracks the
+//! FLOPs ratio, and the policy presses ranks down. Same environment,
+//! same seeds, same trainer — only the priced device differs.
+
+use drrl::attention::MhsaWeights;
+use drrl::linalg::Mat;
+use drrl::rl::{train_hybrid, EnvConfig, RankEnv, RewardConfig, TrainerConfig};
+use drrl::sim::DeviceProfile;
+use drrl::util::Pcg32;
+
+const N: usize = 64;
+const D_MODEL: usize = 16;
+const GRID: [usize; 4] = [8, 16, 32, 48];
+
+fn env_for(profile: DeviceProfile) -> RankEnv {
+    let mut rng = Pcg32::seeded(3);
+    let layers: Vec<MhsaWeights> =
+        (0..2).map(|_| MhsaWeights::init(D_MODEL, 2, &mut rng)).collect();
+    // β = 4 sharpens the contrast (eco-mode territory); γ/trust region
+    // off keeps the test on the efficiency axis alone.
+    let reward = RewardConfig { alpha: 1.0, beta: 4.0, gamma: 0.0, profile: Some(profile) };
+    RankEnv::new(
+        layers,
+        EnvConfig {
+            rank_grid: GRID.to_vec(),
+            reward,
+            use_trust_region: false,
+            ..Default::default()
+        },
+    )
+}
+
+/// Train a small agent against `profile` and return the mean rank its
+/// greedy (argmax) policy selects on fresh evaluation inputs.
+fn trained_mean_rank(profile: DeviceProfile) -> f64 {
+    let mut env = env_for(profile);
+    let mut sampler = |r: &mut Pcg32| Mat::randn(N, D_MODEL, 1.0, r);
+    let cfg = TrainerConfig {
+        bc_episodes: 8,
+        ppo_rounds: 2,
+        episodes_per_round: 4,
+        ..Default::default()
+    };
+    let agent = train_hybrid(&mut env, &mut sampler, &cfg);
+
+    let mut eval_rng = Pcg32::seeded(77);
+    let mut rank_sum = 0.0;
+    let mut steps = 0usize;
+    for _ in 0..4 {
+        let x = Mat::randn(N, D_MODEL, 1.0, &mut eval_rng);
+        let mut e = env_for(profile);
+        let mut s = e.reset(x);
+        loop {
+            let a = agent.ac.distribution(&s.features, None).argmax();
+            let res = e.step(a);
+            rank_sum += res.info.rank as f64;
+            steps += 1;
+            if res.done {
+                break;
+            }
+            s = res.state.unwrap();
+        }
+    }
+    rank_sum / steps as f64
+}
+
+#[test]
+fn trained_policy_mean_rank_differs_between_device_profiles() {
+    let cpu = trained_mean_rank(DeviceProfile::CPU_DEFAULT);
+    let a100 = trained_mean_rank(DeviceProfile::A100);
+    // Compute-bound pricing must push ranks measurably below the
+    // dispatch-bound policy's — the acceptance bar for "the simulator is
+    // the training loop's hardware model", not a reporting toy.
+    assert!(
+        a100 - cpu >= 4.0,
+        "profiles did not separate: cpu-trained mean rank {cpu:.1}, \
+         a100-trained mean rank {a100:.1}"
+    );
+}
+
+#[test]
+fn greedy_oracle_is_latency_aware() {
+    // The oracle maximizes the environment's true reward, so its labels
+    // — the BC warm-start supervision — already separate by device.
+    use drrl::rl::{greedy_episode, BcDataset};
+    let mean_oracle_rank = |profile: DeviceProfile| {
+        let mut env = env_for(profile);
+        let mut rng = Pcg32::seeded(9);
+        let mut ds = BcDataset::default();
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for _ in 0..3 {
+            let x = Mat::randn(N, D_MODEL, 1.0, &mut rng);
+            for info in greedy_episode(&mut env, x, &mut ds) {
+                sum += info.rank as f64;
+                n += 1;
+            }
+        }
+        sum / n as f64
+    };
+    let cpu = mean_oracle_rank(DeviceProfile::CPU_DEFAULT);
+    let a100 = mean_oracle_rank(DeviceProfile::A100);
+    assert!(
+        a100 > cpu,
+        "oracle ranks did not separate: cpu {cpu:.1} vs a100 {a100:.1}"
+    );
+}

@@ -193,3 +193,74 @@ fn prop_incremental_extension_matches_direct() {
         }
     });
 }
+
+// ---- latency-aware reward (hardware-in-the-loop β term) ----
+
+#[test]
+fn prop_latency_reward_monotone_in_rank_for_every_builtin_profile() {
+    use drrl::rl::{latency_fraction, reward, RewardConfig, RewardInputs};
+    use drrl::sim::DeviceProfile;
+    for dev in DeviceProfile::BUILTIN {
+        forall_seeds(20, |rng| {
+            let n = rng.range(8, 1024);
+            let d = rng.range(4, 128);
+            let r1 = rng.range(1, n.max(2));
+            let r2 = rng.range(r1 + 1, n + 2);
+            // The latency fraction is strictly increasing in rank…
+            let f1 = latency_fraction(n, d, r1, &dev);
+            let f2 = latency_fraction(n, d, r2, &dev);
+            assert!(
+                f2 > f1,
+                "{}: fraction not increasing at n={n} d={d} r {r1}→{r2}: {f1} vs {f2}",
+                dev.name
+            );
+            assert!(f1.is_finite() && f1 > 0.0);
+            // …so with fidelity and stability held fixed, the reward is
+            // strictly decreasing in rank.
+            let cfg = RewardConfig::default().with_profile(dev);
+            let at = |rank| {
+                reward(
+                    &cfg,
+                    &RewardInputs { similarity: 0.97, n, d, rank, perturbation: 0.1 },
+                )
+            };
+            assert!(
+                at(r1) > at(r2),
+                "{}: reward not decreasing in rank at n={n} d={d}",
+                dev.name
+            );
+        });
+    }
+}
+
+#[test]
+fn prop_no_profile_reward_is_flops_ratio_bitwise() {
+    use drrl::flops::normalized_flops;
+    use drrl::rl::{reward, RewardConfig, RewardInputs};
+    // profile == None must reproduce the pre-latency reward bit-for-bit:
+    // exactly α·sim − β·(FLOPs ratio) − γ·‖ΔA‖, same float ops.
+    forall_seeds(40, |rng| {
+        let cfg = RewardConfig {
+            alpha: rng.uniform(0.1, 2.0),
+            beta: rng.uniform(0.0, 3.0),
+            gamma: rng.uniform(0.0, 1.0),
+            profile: None,
+        };
+        let inp = RewardInputs {
+            similarity: rng.uniform(-1.0, 1.0),
+            n: rng.range(4, 2048),
+            d: rng.range(2, 128),
+            rank: rng.range(1, 256),
+            perturbation: rng.uniform(0.0, 2.0),
+        };
+        let got = reward(&cfg, &inp);
+        let expected = cfg.alpha * inp.similarity
+            - cfg.beta * normalized_flops(inp.n, inp.d, inp.rank)
+            - cfg.gamma * inp.perturbation;
+        assert_eq!(
+            got.to_bits(),
+            expected.to_bits(),
+            "bitwise drift: {got} vs {expected}"
+        );
+    });
+}
