@@ -68,6 +68,7 @@ fn mk_engine(
                 capacity: 1 << 16,
                 overdrain: max_batch,
             },
+            ..Default::default()
         },
     )
 }
@@ -227,6 +228,7 @@ fn main() -> anyhow::Result<()> {
                 capacity: 1 << 16,
                 overdrain: 8,
             },
+            ..Default::default()
         },
     );
     let n_flight = if quick_mode() { 128 } else { 320 };

@@ -160,6 +160,38 @@ fn main() -> anyhow::Result<()> {
          (paper: shaping cuts FLOPs without accuracy gain)"
     );
 
+    // Extra baseline (not a paper ablation, so outside the shape checks):
+    // SoftLMs-style soft thresholding (arXiv:2411.10543) — rank = number
+    // of singular values above τ·σ₀. A training-free spectral heuristic
+    // the learned policy should beat on the PPL/FLOPs frontier.
+    {
+        let tau = 0.25;
+        let method = AttnMethod::SoftThreshold { tau, r_max: 64 };
+        let host = HostLm::from_flat(&tr.params, &lm);
+        let mut total = 0.0;
+        let mut count = 0;
+        for (tok, tgt) in &batches {
+            for b in 0..(if quick { 2 } else { 4 }).min(lm.batch) {
+                total += host.loss(
+                    &tok[b * lm.seq_len..(b + 1) * lm.seq_len],
+                    &tgt[b * lm.seq_len..(b + 1) * lm.seq_len],
+                    &method,
+                    31 + b as u64,
+                );
+                count += 1;
+            }
+        }
+        let ppl = (total / count as f64).exp();
+        let mean_rank = if host.mean_rank() > 0.0 { host.mean_rank() } else { 32.0 };
+        let ranks = vec![vec![mean_rank as usize; 8]; 12];
+        let gflops = 8.2 * paper_model.lowrank_model_flops(&ranks, 64) as f64 / full_norm;
+        println!(
+            "{:<20} | {ppl:>9.2} {mean_rank:>10.1} {gflops:>10.1} | (baseline, τ={tau})",
+            "soft-threshold"
+        );
+        rows.push(format!("soft-threshold,{ppl},{mean_rank},{gflops}"));
+    }
+
     write_table_csv(
         Path::new("bench_out/table2.csv"),
         "variant,ppl,mean_rank,gflops",

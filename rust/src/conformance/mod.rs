@@ -1,0 +1,112 @@
+//! Differential fuzzing + adversarial-schedule conformance layer.
+//!
+//! One `u64` seed expands ([`Scenario::generate`]) into a complete
+//! serving scenario, and [`run_seed`] drives the same request trace
+//! through every paired execution path the engine promises are
+//! equivalent:
+//!
+//! * **host vs sim** — the sim backend delegates compute to the host
+//!   kernels and only adds roofline latency accounting, so outputs,
+//!   rank schedules and FLOPs ledgers must be bit-identical
+//!   (`f64::to_bits`), and the per-request `projected_ms` attribution
+//!   must agree with the sim's latency ledger to 1e-9;
+//! * **co-batched vs serial** — draining requests in batches must not
+//!   change any per-request result;
+//! * **N workers vs 1** — for order-insensitive scenarios, worker
+//!   parallelism must not change results either;
+//! * **adversarial schedules** — seeded jitter at the post-probe stage
+//!   boundary permutes batch interleavings; the serialized decide
+//!   trace (observed via [`crate::coordinator::PipelineHooks`]) must
+//!   stay a legal permutation with identical per-request schedules,
+//!   and racing cancels/deadlines must resolve every ticket with a
+//!   typed lifecycle error.
+//!
+//! Every failure carries its seed; `drrl fuzz --seed N` replays it
+//! deterministically. `CONFORMANCE.md` at the repo root catalogues the
+//! invariants this module machine-checks.
+//!
+//! The sibling [`lint`] pass (`drrl lint`) enforces the source-level
+//! contracts the fuzzer relies on: poison-shedding lock discipline, no
+//! wall-clock reads in decide-critical sections, no raw channels
+//! outside the completion layer.
+
+pub mod differential;
+pub mod lint;
+pub mod perturb;
+pub mod scenario;
+
+pub use differential::{
+    batched_vs_serial_failures, host_vs_sim_failures, sim_ledger_failures, workers_failures,
+};
+pub use lint::{run_lint, scan_source, LintViolation};
+pub use perturb::{cancel_race_failures, perturbation_failures, validate_trace};
+pub use scenario::{PolicyKind, Scenario};
+
+use std::fmt;
+
+/// Everything a failing seed needs to be reproduced: the seed, the
+/// expanded scenario and every differential mismatch it produced.
+#[derive(Debug)]
+pub struct FailureReport {
+    pub seed: u64,
+    pub scenario: String,
+    pub failures: Vec<String>,
+}
+
+impl fmt::Display for FailureReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "seed {} failed conformance", self.seed)?;
+        writeln!(f, "  scenario: {}", self.scenario)?;
+        for failure in &self.failures {
+            writeln!(f, "  - {failure}")?;
+        }
+        write!(f, "  reproduce with: {}", repro_command(self.seed))
+    }
+}
+
+/// The one-command reproduction for a failing seed.
+pub fn repro_command(seed: u64) -> String {
+    format!("drrl fuzz --seed {seed}")
+}
+
+/// Run every conformance pairing for one seed. `Ok(())` means the seed's
+/// scenario is indistinguishable across all paired execution paths.
+pub fn run_seed(seed: u64) -> Result<(), FailureReport> {
+    let sc = Scenario::generate(seed);
+    let mut failures = Vec::new();
+    failures.extend(host_vs_sim_failures(&sc));
+    failures.extend(batched_vs_serial_failures(&sc));
+    failures.extend(workers_failures(&sc));
+    failures.extend(sim_ledger_failures(&sc, 0.0));
+    failures.extend(perturbation_failures(&sc));
+    failures.extend(cancel_race_failures(&sc));
+    if failures.is_empty() {
+        Ok(())
+    } else {
+        Err(FailureReport { seed, scenario: sc.describe(), failures })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn the_repro_command_round_trips_the_seed() {
+        assert_eq!(repro_command(0xDEAD), "drrl fuzz --seed 57005");
+    }
+
+    #[test]
+    fn failure_reports_print_seed_scenario_and_repro() {
+        let report = FailureReport {
+            seed: 7,
+            scenario: "n=64 ...".into(),
+            failures: vec!["host-vs-sim: y[0] differs".into()],
+        };
+        let text = report.to_string();
+        assert!(text.contains("seed 7"));
+        assert!(text.contains("n=64"));
+        assert!(text.contains("y[0] differs"));
+        assert!(text.contains("drrl fuzz --seed 7"));
+    }
+}

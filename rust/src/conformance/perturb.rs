@@ -1,0 +1,338 @@
+//! Adversarial-schedule conformance: record the serialized decide order
+//! through [`PipelineHooks::on_decide`], perturb worker timing so
+//! batches interleave differently, and assert the serialization
+//! invariants still hold.
+//!
+//! The decide stage replays rank decisions under the layer's shard lock,
+//! so the `on_decide` emission order *is* the serialization the
+//! bit-identity guarantees are defined over. An adversarial schedule
+//! (worker jitter at the post-probe boundary, different worker counts,
+//! permuted batch formation) may legally change which decisions land in
+//! which drained batch — but it must never:
+//!
+//! * change any order-insensitive scenario's per-request results,
+//! * decide a (request, head) pair twice or drop one,
+//! * replay one request's heads out of head order within a layer,
+//! * turn a boundary decision stale (`segment_len == 1` ⇒ every
+//!   decision fresh).
+//!
+//! [`validate_trace`] checks the last three properties as a pure
+//! function over recorded traces, so tests can corrupt a trace and
+//! watch the validator catch it (the "previously-unpinned invariant
+//! class" demanded by the conformance issue).
+//!
+//! The same hook machinery drives the cancel/deadline race harness:
+//! seeded cancel timings land tickets' deaths right at the post-probe
+//! stage boundary across permuted schedules, pinning the pipeline's
+//! cooperative-cancellation contract (typed errors only, every ticket
+//! resolves, no completed-request metrics for reaped work).
+
+use super::differential::{build_engine, compare_runs, run_trace};
+use super::scenario::Scenario;
+use crate::coordinator::{
+    DecideEvent, ErrorKind, PipelineHooks, SubmitOptions,
+};
+use crate::runtime::ArtifactRegistry;
+use crate::util::{LockExt, Pcg32};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// A shared decide-trace sink plus the hooks that feed it.
+pub fn recording_hooks() -> (Arc<Mutex<Vec<DecideEvent>>>, PipelineHooks) {
+    let sink: Arc<Mutex<Vec<DecideEvent>>> = Arc::new(Mutex::new(Vec::new()));
+    let writer = Arc::clone(&sink);
+    let hooks = PipelineHooks {
+        after_probe: None,
+        on_decide: Some(Arc::new(move |e| writer.lock_unpoisoned().push(e))),
+    };
+    (sink, hooks)
+}
+
+/// Seeded worker jitter at the post-probe stage boundary: each firing
+/// sleeps 0–4 ms, drawn from a shared deterministic stream. Under
+/// multiple workers this permutes how same-layer batches interleave at
+/// the decide lock.
+pub fn jitter_hook(seed: u64) -> Arc<dyn Fn() + Send + Sync> {
+    let rng = Mutex::new(Pcg32::new(seed, 0x7177_e4));
+    Arc::new(move || {
+        let ms = rng.lock_unpoisoned().below(5) as u64;
+        std::thread::sleep(Duration::from_millis(ms));
+    })
+}
+
+/// Validate a recorded decide trace against the reference run's trace.
+///
+/// Checks, per layer stream:
+/// 1. the perturbed schedule decided exactly the same (request, head)
+///    pairs — none dropped, none doubled;
+/// 2. each pair's decided rank matches the reference (rank schedules of
+///    order-insensitive scenarios are schedule-independent);
+/// 3. within each request, heads replay in ascending head order (the
+///    pipeline's request-major, head-minor replay rule);
+/// 4. when `all_fresh`, every decision re-ran the policy (`segment_len
+///    == 1` makes every call a boundary).
+///
+/// Pure: tests corrupt a trace and assert this reports it.
+pub fn validate_trace(
+    perturbed: &[DecideEvent],
+    reference: &[DecideEvent],
+    all_fresh: bool,
+) -> Result<(), String> {
+    type Key = (usize, u64, usize); // (layer, request, head)
+    let count = |trace: &[DecideEvent]| -> BTreeMap<Key, (usize, usize)> {
+        let mut m: BTreeMap<Key, (usize, usize)> = BTreeMap::new();
+        for e in trace {
+            let entry = m.entry((e.layer, e.request, e.head)).or_insert((0, e.rank));
+            entry.0 += 1;
+            entry.1 = e.rank;
+        }
+        m
+    };
+    let got = count(perturbed);
+    let want = count(reference);
+    for (key, (n, _)) in &got {
+        match want.get(key) {
+            None => {
+                return Err(format!(
+                    "trace: decided (layer {}, request {}, head {}) which the reference never did",
+                    key.0, key.1, key.2
+                ))
+            }
+            Some(_) if *n != 1 => {
+                return Err(format!(
+                    "trace: (layer {}, request {}, head {}) decided {n} times",
+                    key.0, key.1, key.2
+                ))
+            }
+            Some((_, want_rank)) => {
+                let got_rank = got[key].1;
+                if got_rank != *want_rank {
+                    return Err(format!(
+                        "trace: (layer {}, request {}, head {}) rank {got_rank} != reference \
+                         rank {want_rank}",
+                        key.0, key.1, key.2
+                    ));
+                }
+            }
+        }
+    }
+    if let Some(key) = want.keys().find(|k| !got.contains_key(*k)) {
+        return Err(format!(
+            "trace: (layer {}, request {}, head {}) was never decided",
+            key.0, key.1, key.2
+        ));
+    }
+    // Head order within each (layer, request) must ascend.
+    let mut last_head: BTreeMap<(usize, u64), usize> = BTreeMap::new();
+    for e in perturbed {
+        if let Some(&prev) = last_head.get(&(e.layer, e.request)) {
+            if e.head <= prev {
+                return Err(format!(
+                    "trace: layer {} request {} replayed head {} after head {prev} \
+                     (head order must ascend within a request)",
+                    e.layer, e.request, e.head
+                ));
+            }
+        }
+        last_head.insert((e.layer, e.request), e.head);
+    }
+    if all_fresh {
+        if let Some(e) = perturbed.iter().find(|e| !e.fresh) {
+            return Err(format!(
+                "trace: layer {} request {} head {} reused a stale decision with \
+                 segment_len == 1",
+                e.layer, e.request, e.head
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Schedule-perturbation check for one scenario: a single-worker
+/// reference run vs a multi-worker run with seeded post-probe jitter.
+/// Only order-insensitive scenarios are compared (the pairing would be
+/// vacuous otherwise).
+pub fn perturbation_failures(sc: &Scenario) -> Vec<String> {
+    if !sc.order_insensitive() {
+        return Vec::new();
+    }
+    let reg_ref = Arc::new(ArtifactRegistry::open_host(sc.n, sc.head_dim));
+    let (ref_trace, ref_hooks) = recording_hooks();
+    let reference = {
+        let engine = build_engine(sc, reg_ref, 1, sc.max_batch, ref_hooks);
+        run_trace(sc, &engine)
+    };
+
+    let reg_adv = Arc::new(ArtifactRegistry::open_host(sc.n, sc.head_dim));
+    let (adv_trace, mut adv_hooks) = recording_hooks();
+    adv_hooks.after_probe = Some(jitter_hook(sc.seed ^ 0xAD7E));
+    let perturbed = {
+        let engine = build_engine(sc, reg_adv, sc.n_workers, sc.max_batch, adv_hooks);
+        run_trace(sc, &engine)
+    };
+
+    let mut failures = compare_runs("perturbed-schedule", &perturbed, &reference, true);
+    let reference_events = ref_trace.lock_unpoisoned();
+    let perturbed_events = adv_trace.lock_unpoisoned();
+    if let Err(e) = validate_trace(&perturbed_events, &reference_events, true) {
+        failures.push(format!("perturbed-schedule: {e}"));
+    }
+    failures
+}
+
+/// Cancel/deadline race harness: a seeded subset of the trace's tickets
+/// is cancelled from a client thread while seeded jitter stretches the
+/// post-probe boundary, and another subset carries deadlines tight
+/// enough to expire mid-flight. Every ticket must resolve with either a
+/// success or a *typed* cancel/deadline error — never `Internal`, never
+/// a hang — and completed-request metrics must count exactly the
+/// successes.
+pub fn cancel_race_failures(sc: &Scenario) -> Vec<String> {
+    let mut failures = Vec::new();
+    let reg = Arc::new(ArtifactRegistry::open_host(sc.n, sc.head_dim));
+    let hooks = PipelineHooks {
+        after_probe: Some(jitter_hook(sc.seed ^ 0xCA4C)),
+        on_decide: None,
+    };
+    let engine = build_engine(sc, Arc::clone(&reg), sc.n_workers, sc.max_batch, hooks);
+
+    let mut rng = Pcg32::new(sc.seed ^ 0xCA4C_E11E, 3);
+    let mut tickets = Vec::new();
+    let mut cancellers = Vec::new();
+    for i in 0..sc.n_requests() {
+        // Per-request fate: 0 = plain, 1 = racing client cancel,
+        // 2 = tight deadline that may expire at a stage boundary.
+        let fate = rng.below(3);
+        let opts = if fate == 2 {
+            SubmitOptions::deadline_in(Duration::from_millis(rng.below(4) as u64))
+        } else {
+            SubmitOptions::default()
+        };
+        match engine.submit_attention_opts(
+            sc.request_input(i),
+            sc.n,
+            sc.d_model(),
+            sc.request_layers[i],
+            opts,
+        ) {
+            Ok(ticket) => {
+                if fate == 1 {
+                    let token = ticket.cancel_token();
+                    let delay = Duration::from_millis(rng.below(6) as u64);
+                    cancellers.push(std::thread::spawn(move || {
+                        std::thread::sleep(delay);
+                        token.cancel();
+                    }));
+                }
+                tickets.push((i, ticket));
+            }
+            Err(e) => {
+                // Submit-time expiry of an already-dead deadline is a
+                // legal typed outcome; anything else is a failure.
+                if e.kind != ErrorKind::DeadlineExceeded {
+                    failures.push(format!("cancel-race: request {i} rejected at submit: {e}"));
+                }
+            }
+        }
+    }
+
+    let mut ok = 0u64;
+    for (i, ticket) in tickets {
+        match ticket.wait_timeout(Duration::from_secs(30)) {
+            None => failures.push(format!("cancel-race: request {i} never resolved")),
+            Some(Ok(_)) => ok += 1,
+            Some(Err(e)) => match e.kind {
+                ErrorKind::Cancelled | ErrorKind::DeadlineExceeded => {}
+                other => failures.push(format!(
+                    "cancel-race: request {i} failed with non-lifecycle kind {other}: {e}"
+                )),
+            },
+        }
+    }
+    for c in cancellers {
+        let _ = c.join();
+    }
+    if engine.metrics.requests() != ok {
+        failures.push(format!(
+            "cancel-race: metrics counted {} completed requests but {ok} tickets succeeded",
+            engine.metrics.requests()
+        ));
+    }
+    failures
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn event(layer: usize, request: u64, head: usize, rank: usize) -> DecideEvent {
+        DecideEvent { layer, head, request, step: 0, rank, prev_rank: rank, fresh: true }
+    }
+
+    #[test]
+    fn validator_accepts_a_reordered_but_legal_trace() {
+        // Requests may interleave across batches; head order within a
+        // request must hold. This reordering is legal.
+        let reference = vec![
+            event(0, 1, 0, 32),
+            event(0, 1, 1, 16),
+            event(0, 2, 0, 32),
+            event(0, 2, 1, 64),
+        ];
+        let perturbed = vec![
+            event(0, 2, 0, 32),
+            event(0, 1, 0, 32),
+            event(0, 2, 1, 64),
+            event(0, 1, 1, 16),
+        ];
+        validate_trace(&perturbed, &reference, true).expect("legal interleaving");
+    }
+
+    #[test]
+    fn validator_catches_a_permuted_head_order() {
+        // Deliberate bug injection: swapping one request's two head
+        // events breaks the request-major, head-minor replay rule.
+        let reference = vec![event(0, 1, 0, 32), event(0, 1, 1, 16)];
+        let corrupted = vec![event(0, 1, 1, 16), event(0, 1, 0, 32)];
+        let err = validate_trace(&corrupted, &reference, true)
+            .expect_err("permuted head order must be caught");
+        assert!(err.contains("head order"), "unexpected message: {err}");
+    }
+
+    #[test]
+    fn validator_catches_dropped_and_doubled_decisions() {
+        let reference = vec![event(0, 1, 0, 32), event(0, 2, 0, 32)];
+        let dropped = vec![event(0, 1, 0, 32)];
+        assert!(validate_trace(&dropped, &reference, true).is_err());
+        let doubled = vec![event(0, 1, 0, 32), event(0, 1, 0, 32), event(0, 2, 0, 32)];
+        assert!(validate_trace(&doubled, &reference, true).is_err());
+    }
+
+    #[test]
+    fn validator_catches_a_rank_divergence_and_staleness() {
+        let reference = vec![event(0, 1, 0, 32)];
+        let diverged = vec![event(0, 1, 0, 64)];
+        let err = validate_trace(&diverged, &reference, true).expect_err("rank divergence");
+        assert!(err.contains("rank"), "unexpected message: {err}");
+        let stale =
+            vec![DecideEvent { fresh: false, ..event(0, 1, 0, 32) }];
+        let err = validate_trace(&stale, &reference, true).expect_err("stale decision");
+        assert!(err.contains("stale"), "unexpected message: {err}");
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // spawns engine threads; covered natively
+    fn a_quick_seed_survives_perturbation_and_cancel_races() {
+        // Seed 3 generates an order-insensitive scenario under the
+        // current generator; the assert guards that so a generator
+        // change can't silently turn this test vacuous.
+        let sc = (3..64)
+            .map(Scenario::generate)
+            .find(|s| s.order_insensitive())
+            .expect("some seed in 3..64 is order-insensitive");
+        let mut failures = perturbation_failures(&sc);
+        failures.extend(cancel_race_failures(&sc));
+        assert!(failures.is_empty(), "failures:\n{}", failures.join("\n"));
+    }
+}

@@ -1,0 +1,266 @@
+//! Seeded scenario generation for the differential conformance fuzzer.
+//!
+//! One `u64` seed deterministically expands into a full serving
+//! scenario: kernel shape, layer stack, rank grid, segment length,
+//! policy source, batching knobs, worker counts, a device profile for
+//! the sim pairing, and the request trace itself. Every differential
+//! check replays the *same* scenario through paired execution paths, so
+//! a failure always reprints its seed as a one-command reproduction.
+
+use crate::attention::MhsaWeights;
+use crate::coordinator::{BatchPolicy, ControllerConfig, PolicySource};
+use crate::linalg::Mat;
+use crate::sim::DeviceProfile;
+use crate::util::Pcg32;
+use std::time::Duration;
+
+/// Policy generators the fuzzer draws rank schedules from. Each is
+/// deterministic given the probe spectrum (no RNG, no cross-stream
+/// state), so identical traces produce identical schedules on every
+/// paired path — the property the bit-identity checks are defined over.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PolicyKind {
+    Fixed(usize),
+    AdaptiveEnergy(f64),
+    /// Soft-thresholding schedule (SoftLMs, arXiv:2411.10543) — the
+    /// third rank-schedule generator.
+    SoftThreshold(f64),
+    FullRank,
+}
+
+impl PolicyKind {
+    /// A fresh `PolicySource` (the source is not `Clone`; every engine
+    /// of a pairing gets its own, built from the same scenario).
+    pub fn source(&self) -> PolicySource {
+        match *self {
+            PolicyKind::Fixed(r) => PolicySource::Fixed(r),
+            PolicyKind::AdaptiveEnergy(th) => PolicySource::AdaptiveEnergy(th),
+            PolicyKind::SoftThreshold(tau) => PolicySource::SoftThreshold(tau),
+            PolicyKind::FullRank => PolicySource::FullRank,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Fixed(_) => "fixed",
+            PolicyKind::AdaptiveEnergy(_) => "adaptive-energy",
+            PolicyKind::SoftThreshold(_) => "soft-threshold",
+            PolicyKind::FullRank => "full-rank",
+        }
+    }
+}
+
+/// One fully-expanded fuzz scenario.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub seed: u64,
+    /// Kernel sequence length (= request n).
+    pub n: usize,
+    pub head_dim: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    /// Rank grid the controllers decide over (subset of the default
+    /// grid; max entry ≤ n so every probe fits the attention matrix).
+    pub rank_grid: Vec<usize>,
+    pub segment_len: usize,
+    pub use_trust_region: bool,
+    pub policy: PolicyKind,
+    /// Worker count for the multi-worker side of the N-vs-1 pairing.
+    pub n_workers: usize,
+    pub max_batch: usize,
+    pub overdrain: usize,
+    /// Device profile for the host-vs-sim pairing's sim side.
+    pub profile: DeviceProfile,
+    /// Target layer per request, in submission order.
+    pub request_layers: Vec<usize>,
+}
+
+impl Scenario {
+    /// Expand a seed into a scenario. Pure: same seed, same scenario.
+    pub fn generate(seed: u64) -> Scenario {
+        let mut rng = Pcg32::new(seed, 0xfe2d_c0de);
+        let n = 64;
+        let head_dim = [8usize, 16][rng.below(2) as usize];
+        let n_heads = 1 + rng.below(2) as usize;
+        let n_layers = 1 + rng.below(3) as usize;
+
+        // Random subset (≥ 2 entries) of the default grid, kept sorted.
+        let full_grid = ControllerConfig::default().rank_grid;
+        let mut rank_grid: Vec<usize> =
+            full_grid.iter().copied().filter(|_| rng.below(2) == 0).collect();
+        while rank_grid.len() < 2 {
+            let r = full_grid[rng.below(full_grid.len() as u32) as usize];
+            if !rank_grid.contains(&r) {
+                rank_grid.push(r);
+            }
+        }
+        rank_grid.sort_unstable();
+
+        // Weighted toward 1 so the order-insensitive pairings (N-vs-1
+        // workers, schedule perturbation) run often.
+        let segment_len = [1usize, 1, 2, 3][rng.below(4) as usize];
+        let use_trust_region = rng.below(4) == 0;
+
+        let policy = match rng.below(4) {
+            0 => PolicyKind::Fixed(rank_grid[rng.below(rank_grid.len() as u32) as usize]),
+            1 => PolicyKind::AdaptiveEnergy(rng.uniform(0.7, 0.99)),
+            2 => PolicyKind::SoftThreshold(rng.uniform(0.05, 0.6)),
+            _ => PolicyKind::FullRank,
+        };
+
+        let n_workers = 2 + rng.below(3) as usize;
+        let max_batch = 2 + rng.below(4) as usize;
+        let overdrain = rng.below(1 + max_batch as u32) as usize;
+        let profile = DeviceProfile::BUILTIN[rng.below(3) as usize];
+
+        let n_requests = 4 + rng.below(7) as usize;
+        let request_layers =
+            (0..n_requests).map(|_| rng.below(n_layers as u32) as usize).collect();
+
+        Scenario {
+            seed,
+            n,
+            head_dim,
+            n_heads,
+            n_layers,
+            rank_grid,
+            segment_len,
+            use_trust_region,
+            policy,
+            n_workers,
+            max_batch,
+            overdrain,
+            profile,
+            request_layers,
+        }
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.head_dim * self.n_heads
+    }
+
+    pub fn n_requests(&self) -> usize {
+        self.request_layers.len()
+    }
+
+    /// The i-th request's input activations (n × d_model, row-major) —
+    /// derived from a per-request RNG stream so every paired engine sees
+    /// byte-identical inputs.
+    pub fn request_input(&self, i: usize) -> Vec<f64> {
+        let mut rng = Pcg32::new(self.seed ^ 0x1269_7a11, i as u64);
+        Mat::randn(self.n, self.d_model(), 1.0, &mut rng).into_vec()
+    }
+
+    /// The frozen layer stack every engine of a pairing starts with.
+    pub fn layers(&self) -> Vec<MhsaWeights> {
+        let mut rng = Pcg32::new(self.seed ^ 0x11A7_ee15, 7);
+        (0..self.n_layers)
+            .map(|_| MhsaWeights::init(self.d_model(), self.n_heads, &mut rng))
+            .collect()
+    }
+
+    pub fn controller_config(&self) -> ControllerConfig {
+        ControllerConfig {
+            rank_grid: self.rank_grid.clone(),
+            use_trust_region: self.use_trust_region,
+            segment_len: self.segment_len,
+            seed: self.seed ^ 0xC011,
+            ..Default::default()
+        }
+    }
+
+    pub fn batch_policy(&self, max_batch: usize) -> BatchPolicy {
+        BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_millis(2),
+            capacity: 4096,
+            overdrain: self.overdrain,
+        }
+    }
+
+    /// True when the scenario's rank schedule is independent of the
+    /// cross-request decide order: every call is a segment boundary and
+    /// the trust region (whose mask depends on the previous rank chain)
+    /// is off. Only such scenarios are compared across *different*
+    /// worker counts or adversarial schedules; the other pairings hold
+    /// the serialization fixed.
+    pub fn order_insensitive(&self) -> bool {
+        self.segment_len == 1 && !self.use_trust_region
+    }
+
+    /// Largest grid rank.
+    pub fn r_max(&self) -> usize {
+        *self.rank_grid.iter().max().expect("non-empty grid")
+    }
+
+    /// One-line summary for fuzz progress output.
+    pub fn describe(&self) -> String {
+        format!(
+            "n={} d_head={} heads={} layers={} grid={:?} seg={} trust={} policy={} \
+             workers={} max_batch={} overdrain={} profile={} requests={}",
+            self.n,
+            self.head_dim,
+            self.n_heads,
+            self.n_layers,
+            self.rank_grid,
+            self.segment_len,
+            self.use_trust_region,
+            self.policy.name(),
+            self.n_workers,
+            self.max_batch,
+            self.overdrain,
+            self.profile.name,
+            self.n_requests(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = Scenario::generate(42);
+        let b = Scenario::generate(42);
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        assert_eq!(a.request_input(3), b.request_input(3));
+    }
+
+    #[test]
+    fn seeds_vary_the_scenario() {
+        // Not a tautology: at least one of 16 consecutive seeds must
+        // differ from seed 0 in its summary line.
+        let base = Scenario::generate(0).describe();
+        assert!((1..16).any(|s| Scenario::generate(s).describe() != base));
+    }
+
+    #[test]
+    fn scenarios_are_well_formed() {
+        for seed in 0..64 {
+            let sc = Scenario::generate(seed);
+            assert!(sc.rank_grid.len() >= 2);
+            assert!(sc.r_max() <= sc.n, "grid must fit the attention matrix");
+            assert!(sc.rank_grid.windows(2).all(|w| w[0] < w[1]), "sorted, deduped");
+            assert!(!sc.request_layers.is_empty());
+            assert!(sc.request_layers.iter().all(|&l| l < sc.n_layers));
+            assert!(sc.n_workers >= 2);
+            assert_eq!(sc.request_input(0).len(), sc.n * sc.d_model());
+            assert_eq!(sc.layers().len(), sc.n_layers);
+        }
+    }
+
+    #[test]
+    fn all_policy_kinds_reachable() {
+        let mut seen = [false; 4];
+        for seed in 0..64 {
+            match Scenario::generate(seed).policy {
+                PolicyKind::Fixed(_) => seen[0] = true,
+                PolicyKind::AdaptiveEnergy(_) => seen[1] = true,
+                PolicyKind::SoftThreshold(_) => seen[2] = true,
+                PolicyKind::FullRank => seen[3] = true,
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "64 seeds must cover every policy kind");
+    }
+}

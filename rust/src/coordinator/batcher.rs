@@ -23,6 +23,7 @@
 //!   co-batch → one probe wave — instead of several shallow ones.
 
 use super::request::Pending;
+use crate::util::{CondvarExt, LockExt};
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -136,7 +137,7 @@ impl<T> DynamicBatcher<T> {
         deadline: Option<Instant>,
         blocking: bool,
     ) -> Result<(), SubmitError> {
-        let mut g = self.state.lock().unwrap();
+        let mut g = self.state.lock_unpoisoned();
         loop {
             if g.closed {
                 return Err(SubmitError::Closed);
@@ -148,13 +149,13 @@ impl<T> DynamicBatcher<T> {
                 return Err(SubmitError::Full);
             }
             match deadline {
-                None => g = self.space_cv.wait(g).unwrap(),
+                None => g = self.space_cv.wait_unpoisoned(g),
                 Some(d) => {
                     let now = Instant::now();
                     if now >= d {
                         return Err(SubmitError::Expired);
                     }
-                    let (ng, _) = self.space_cv.wait_timeout(g, d - now).unwrap();
+                    let (ng, _) = self.space_cv.wait_timeout_unpoisoned(g, d - now);
                     g = ng;
                 }
             }
@@ -184,7 +185,7 @@ impl<T> DynamicBatcher<T> {
     }
 
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().queue.len()
+        self.state.lock_unpoisoned().queue.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -193,7 +194,7 @@ impl<T> DynamicBatcher<T> {
 
     /// Close the queue; pullers drain whatever remains, then get None.
     pub fn close(&self) {
-        self.state.lock().unwrap().closed = true;
+        self.state.lock_unpoisoned().closed = true;
         self.cv.notify_all();
         self.space_cv.notify_all();
     }
@@ -229,7 +230,7 @@ impl<T> DynamicBatcher<T> {
     ///   * the oldest waiter exceeded max_wait and the queue is non-empty.
     /// Returns None once closed and drained.
     pub fn next_batch(&self) -> Option<Vec<Pending<T>>> {
-        let mut g = self.state.lock().unwrap();
+        let mut g = self.state.lock_unpoisoned();
         loop {
             if g.queue.len() >= self.policy.max_batch {
                 return Some(self.drain(&mut g, self.policy.max_batch));
@@ -243,13 +244,13 @@ impl<T> DynamicBatcher<T> {
                 }
                 // Wait the remaining window (or for more arrivals).
                 let remaining = self.policy.max_wait - elapsed;
-                let (ng, _timeout) = self.cv.wait_timeout(g, remaining).unwrap();
+                let (ng, _timeout) = self.cv.wait_timeout_unpoisoned(g, remaining);
                 g = ng;
             } else {
                 if g.closed {
                     return None;
                 }
-                g = self.cv.wait(g).unwrap();
+                g = self.cv.wait_unpoisoned(g);
             }
             if g.closed && g.queue.is_empty() {
                 return None;
@@ -259,7 +260,7 @@ impl<T> DynamicBatcher<T> {
 
     /// Non-blocking: batch only if one is ready *right now*.
     pub fn try_next_batch(&self) -> Option<Vec<Pending<T>>> {
-        let mut g = self.state.lock().unwrap();
+        let mut g = self.state.lock_unpoisoned();
         if g.queue.len() >= self.policy.max_batch {
             return Some(self.drain(&mut g, self.policy.max_batch));
         }

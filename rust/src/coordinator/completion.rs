@@ -18,6 +18,7 @@ use super::request::{
     AttentionResponse, EngineError, EngineResult, ErrorKind, GenerateDelta, GenerateResponse,
     RequestId,
 };
+use crate::util::{CondvarExt, LockExt};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -137,7 +138,7 @@ impl<T: CompletionPayload> Slot<T> {
     /// there, otherwise it is parked for `poll`/`wait`.
     pub(crate) fn fulfill(&self, result: EngineResult<T>) {
         let queue = {
-            let mut g = self.state.lock().unwrap();
+            let mut g = self.state.lock_unpoisoned();
             if g.fulfilled {
                 return;
             }
@@ -181,7 +182,7 @@ impl<T: CompletionPayload> Slot<T> {
     }
 
     fn take_result(&self) -> Option<EngineResult<T>> {
-        let mut g = self.state.lock().unwrap();
+        let mut g = self.state.lock_unpoisoned();
         let r = g.result.take();
         if r.is_some() {
             g.taken = true;
@@ -206,7 +207,7 @@ impl<T: CompletionPayload> Slot<T> {
     /// will ever reach the queue (the result was already consumed).
     fn attach(&self, queue: &Arc<CqShared>) -> bool {
         let forward = {
-            let mut g = self.state.lock().unwrap();
+            let mut g = self.state.lock_unpoisoned();
             if !g.fulfilled {
                 g.queue = Some(Arc::clone(queue));
                 return true;
@@ -262,7 +263,7 @@ impl<T: CompletionPayload> Ticket<T> {
     /// completion (success, typed error, or shutdown error), so this
     /// does not hang on engine shutdown.
     pub fn wait(self) -> EngineResult<T> {
-        let mut g = self.slot.state.lock().unwrap();
+        let mut g = self.slot.state.lock_unpoisoned();
         loop {
             if let Some(r) = g.result.take() {
                 g.taken = true;
@@ -276,7 +277,7 @@ impl<T: CompletionPayload> Ticket<T> {
                     "result already consumed",
                 ));
             }
-            g = self.slot.cv.wait(g).unwrap();
+            g = self.slot.cv.wait_unpoisoned(g);
         }
     }
 
@@ -284,7 +285,7 @@ impl<T: CompletionPayload> Ticket<T> {
     /// in time (the ticket stays valid and can be waited on again).
     pub fn wait_timeout(&self, timeout: Duration) -> Option<EngineResult<T>> {
         let deadline = Instant::now() + timeout;
-        let mut g = self.slot.state.lock().unwrap();
+        let mut g = self.slot.state.lock_unpoisoned();
         loop {
             if let Some(r) = g.result.take() {
                 g.taken = true;
@@ -297,7 +298,7 @@ impl<T: CompletionPayload> Ticket<T> {
             if now >= deadline {
                 return None;
             }
-            let (ng, _) = self.slot.cv.wait_timeout(g, deadline - now).unwrap();
+            let (ng, _) = self.slot.cv.wait_timeout_unpoisoned(g, deadline - now);
             g = ng;
         }
     }
@@ -362,7 +363,7 @@ pub(crate) struct CqShared {
 
 impl CqShared {
     fn push(&self, c: Completion) {
-        let mut g = self.state.lock().unwrap();
+        let mut g = self.state.lock_unpoisoned();
         g.ready.push_back(c);
         g.outstanding = g.outstanding.saturating_sub(1);
         drop(g);
@@ -371,7 +372,7 @@ impl CqShared {
     }
 
     fn add_watcher(&self, w: std::sync::Weak<SelectWaker>) {
-        let mut g = self.watchers.lock().unwrap();
+        let mut g = self.watchers.lock_unpoisoned();
         // Prune here as well as on wake: a queue that never receives a
         // push must not accumulate one dead watcher per past select call.
         g.retain(|w| w.strong_count() > 0);
@@ -379,7 +380,7 @@ impl CqShared {
     }
 
     fn wake_watchers(&self) {
-        let mut g = self.watchers.lock().unwrap();
+        let mut g = self.watchers.lock_unpoisoned();
         g.retain(|w| match w.upgrade() {
             Some(waker) => {
                 waker.wake();
@@ -401,18 +402,18 @@ struct SelectWaker {
 
 impl SelectWaker {
     fn epoch(&self) -> u64 {
-        *self.epoch.lock().unwrap()
+        *self.epoch.lock_unpoisoned()
     }
 
     fn wake(&self) {
-        *self.epoch.lock().unwrap() += 1;
+        *self.epoch.lock_unpoisoned() += 1;
         self.cv.notify_all();
     }
 
     fn wait_past(&self, seen: u64) {
-        let mut g = self.epoch.lock().unwrap();
+        let mut g = self.epoch.lock_unpoisoned();
         while *g == seen {
-            g = self.cv.wait(g).unwrap();
+            g = self.cv.wait_unpoisoned(g);
         }
     }
 }
@@ -485,7 +486,7 @@ impl CompletionQueue {
     /// Atomically pop the next ready completion (if any) and read the
     /// outstanding-ticket count.
     fn pop_with_outstanding(&self) -> (Option<Completion>, usize) {
-        let mut g = self.shared.state.lock().unwrap();
+        let mut g = self.shared.state.lock_unpoisoned();
         (g.ready.pop_front(), g.outstanding)
     }
 
@@ -496,14 +497,14 @@ impl CompletionQueue {
     pub fn add<T: CompletionPayload>(&self, ticket: Ticket<T>) -> RequestId {
         let id = ticket.id();
         {
-            let mut g = self.shared.state.lock().unwrap();
+            let mut g = self.shared.state.lock_unpoisoned();
             g.outstanding += 1;
         }
         if !ticket.slot.attach(&self.shared) {
             // Result was already consumed through the ticket: nothing
             // will ever arrive for it. Wake consumers so a drain loop
             // blocked on the transient outstanding count re-checks.
-            let mut g = self.shared.state.lock().unwrap();
+            let mut g = self.shared.state.lock_unpoisoned();
             g.outstanding = g.outstanding.saturating_sub(1);
             drop(g);
             self.shared.cv.notify_all();
@@ -514,7 +515,7 @@ impl CompletionQueue {
 
     /// Completions not yet drained.
     pub fn len(&self) -> usize {
-        self.shared.state.lock().unwrap().ready.len()
+        self.shared.state.lock_unpoisoned().ready.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -523,19 +524,19 @@ impl CompletionQueue {
 
     /// Tickets added but not yet completed.
     pub fn outstanding(&self) -> usize {
-        self.shared.state.lock().unwrap().outstanding
+        self.shared.state.lock_unpoisoned().outstanding
     }
 
     /// Non-blocking: the next completion if one is ready.
     pub fn try_next(&self) -> Option<Completion> {
-        self.shared.state.lock().unwrap().ready.pop_front()
+        self.shared.state.lock_unpoisoned().ready.pop_front()
     }
 
     /// Block for the next completion. Returns `None` once every added
     /// ticket has completed and been drained (never hangs on an empty
     /// queue).
     pub fn next(&self) -> Option<Completion> {
-        let mut g = self.shared.state.lock().unwrap();
+        let mut g = self.shared.state.lock_unpoisoned();
         loop {
             if let Some(c) = g.ready.pop_front() {
                 return Some(c);
@@ -543,7 +544,7 @@ impl CompletionQueue {
             if g.outstanding == 0 {
                 return None;
             }
-            g = self.shared.cv.wait(g).unwrap();
+            g = self.shared.cv.wait_unpoisoned(g);
         }
     }
 
@@ -551,7 +552,7 @@ impl CompletionQueue {
     /// or when nothing is outstanding.
     pub fn next_timeout(&self, timeout: Duration) -> Option<Completion> {
         let deadline = Instant::now() + timeout;
-        let mut g = self.shared.state.lock().unwrap();
+        let mut g = self.shared.state.lock_unpoisoned();
         loop {
             if let Some(c) = g.ready.pop_front() {
                 return Some(c);
@@ -563,7 +564,7 @@ impl CompletionQueue {
             if now >= deadline {
                 return None;
             }
-            let (ng, _) = self.shared.cv.wait_timeout(g, deadline - now).unwrap();
+            let (ng, _) = self.shared.cv.wait_timeout_unpoisoned(g, deadline - now);
             g = ng;
         }
     }
@@ -583,7 +584,7 @@ impl DeltaStream {
     }
 
     pub(crate) fn push(&self, delta: GenerateDelta) {
-        let mut g = self.state.lock().unwrap();
+        let mut g = self.state.lock_unpoisoned();
         if g.1 {
             return; // closed: late deltas are dropped
         }
@@ -595,12 +596,12 @@ impl DeltaStream {
     /// Close the stream (the final result was posted). Pending deltas
     /// stay drainable.
     pub(crate) fn close(&self) {
-        self.state.lock().unwrap().1 = true;
+        self.state.lock_unpoisoned().1 = true;
         self.cv.notify_all();
     }
 
     fn next(&self) -> Option<GenerateDelta> {
-        let mut g = self.state.lock().unwrap();
+        let mut g = self.state.lock_unpoisoned();
         loop {
             if let Some(d) = g.0.pop_front() {
                 return Some(d);
@@ -608,12 +609,12 @@ impl DeltaStream {
             if g.1 {
                 return None;
             }
-            g = self.cv.wait(g).unwrap();
+            g = self.cv.wait_unpoisoned(g);
         }
     }
 
     fn try_next(&self) -> Option<GenerateDelta> {
-        self.state.lock().unwrap().0.pop_front()
+        self.state.lock_unpoisoned().0.pop_front()
     }
 }
 

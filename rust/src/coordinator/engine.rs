@@ -83,11 +83,65 @@ pub struct EngineConfig {
     /// segments and generation batches overlap.
     pub n_workers: usize,
     pub batch_policy: BatchPolicy,
+    /// Pipeline observation hooks (conformance harnesses, adversarial
+    /// schedule tests). Empty by default: the pipeline checks each slot
+    /// with a branch and calls nothing.
+    pub hooks: PipelineHooks,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        EngineConfig { n_workers: 2, batch_policy: BatchPolicy::default() }
+        EngineConfig {
+            n_workers: 2,
+            batch_policy: BatchPolicy::default(),
+            hooks: PipelineHooks::default(),
+        }
+    }
+}
+
+/// One replayed rank decision, as observed by
+/// [`PipelineHooks::on_decide`] *under the layer's shard lock* — the
+/// emission order is therefore exactly the serialized decide order the
+/// bit-identity invariants are defined over.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DecideEvent {
+    pub layer: usize,
+    pub head: usize,
+    /// The request this decision belongs to.
+    pub request: RequestId,
+    /// Replay position within the layer's step sequence for this batch.
+    pub step: usize,
+    pub rank: usize,
+    pub prev_rank: usize,
+    /// False when the segment reused the previous decision (non-boundary
+    /// call).
+    pub fresh: bool,
+}
+
+/// Observation hooks into the staged attention pipeline.
+///
+/// `after_probe` fires between the probe wave and the decide stage —
+/// conformance and regression tests use it to land cancels/deadline
+/// expiries deterministically mid-flight, or to jitter worker timing so
+/// batches from different workers interleave on one layer.
+/// `on_decide` fires for every replayed decision while the shard lock is
+/// held, giving an exact serialization of the decide order (the
+/// schedule-perturbation harness records and replays these traces).
+///
+/// Hooks run on engine worker threads: keep them short, never submit to
+/// the same engine from inside one, and never take a shard lock.
+#[derive(Clone, Default)]
+pub struct PipelineHooks {
+    pub after_probe: Option<Arc<dyn Fn() + Send + Sync>>,
+    pub on_decide: Option<Arc<dyn Fn(DecideEvent) + Send + Sync>>,
+}
+
+impl std::fmt::Debug for PipelineHooks {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PipelineHooks")
+            .field("after_probe", &self.after_probe.is_some())
+            .field("on_decide", &self.on_decide.is_some())
+            .finish()
     }
 }
 
@@ -108,10 +162,10 @@ pub(crate) struct EngineShared {
     /// Prompt-shutdown flag: once set, workers stop computing queued
     /// work and post explicit errors instead.
     pub(crate) stopped: AtomicBool,
-    /// Test-only hook the pipeline calls right after its probe wave, so
-    /// regression tests can land a cancel deterministically mid-flight.
-    #[cfg(test)]
-    pub(crate) after_probe_hook: Option<Box<dyn Fn() + Send + Sync>>,
+    /// Pipeline observation hooks (always compiled — conformance
+    /// harnesses in `rust/tests/` and the `conformance` module install
+    /// them through `EngineConfig::hooks`).
+    pub(crate) hooks: PipelineHooks,
 }
 
 impl EngineShared {
@@ -184,8 +238,7 @@ impl ServingEngine {
             controller_cfg,
             metrics: Arc::clone(&metrics),
             stopped: AtomicBool::new(false),
-            #[cfg(test)]
-            after_probe_hook: None,
+            hooks: config.hooks,
         });
         // Surface the projected-latency ledger in Metrics::report() when
         // a projection profile is in scope (sim backend or configured

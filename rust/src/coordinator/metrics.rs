@@ -6,7 +6,7 @@
 //! serving examples.
 
 use crate::runtime::OpCounters;
-use crate::util::LatencyStats;
+use crate::util::{LatencyStats, LockExt};
 use std::sync::{Arc, Mutex};
 
 /// Aggregated metrics, cheap to share behind a Mutex (all updates are
@@ -78,16 +78,16 @@ impl Metrics {
     /// Attach the serving backend's shared op counters so they surface
     /// in [`Metrics::report`].
     pub fn attach_backend_ops(&self, ops: Arc<OpCounters>) {
-        *self.backend_ops.lock().unwrap() = Some(ops);
+        *self.backend_ops.lock_unpoisoned() = Some(ops);
     }
 
     /// The attached backend op counters, if any.
     pub fn backend_ops(&self) -> Option<Arc<OpCounters>> {
-        self.backend_ops.lock().unwrap().clone()
+        self.backend_ops.lock_unpoisoned().clone()
     }
 
     pub fn record_request(&self, queued_ms: f64, compute_ms: f64, batch_size: usize) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock_unpoisoned();
         g.queued.record(queued_ms);
         g.compute.record(compute_ms);
         g.e2e.record(queued_ms + compute_ms);
@@ -99,7 +99,7 @@ impl Metrics {
     }
 
     pub fn record_rank(&self, rank: usize) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock_unpoisoned();
         if g.rank_counts.len() <= rank {
             g.rank_counts.resize(rank + 1, 0);
         }
@@ -107,7 +107,7 @@ impl Metrics {
     }
 
     pub fn record_flops(&self, spent: u64, full: u64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock_unpoisoned();
         g.flops_spent += spent;
         g.flops_full += full;
     }
@@ -115,18 +115,18 @@ impl Metrics {
     /// Attach the device profile the projected-latency ledger prices on
     /// (the engine sets it at start when one is in scope).
     pub fn set_projection_profile(&self, name: &'static str) {
-        self.inner.lock().unwrap().projection_profile = Some(name);
+        self.inner.lock_unpoisoned().projection_profile = Some(name);
     }
 
     pub fn projection_profile(&self) -> Option<&'static str> {
-        self.inner.lock().unwrap().projection_profile
+        self.inner.lock_unpoisoned().projection_profile
     }
 
     /// Fold one request's (or one generate chunk's) projected device
     /// latency into the ledger: `spent_ms` mirrors the backend kernel
     /// charges it drove, `full_ms` the full-rank counterfactual.
     pub fn record_projected(&self, spent_ms: f64, full_ms: f64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock_unpoisoned();
         g.projected_spent_ms += spent_ms;
         g.projected_full_ms += full_ms;
     }
@@ -134,17 +134,17 @@ impl Metrics {
     /// Total projected device latency spent (ms). On a sim backend this
     /// matches the backend's own ledger to float-sum precision.
     pub fn projected_spent_ms(&self) -> f64 {
-        self.inner.lock().unwrap().projected_spent_ms
+        self.inner.lock_unpoisoned().projected_spent_ms
     }
 
     /// Full-rank counterfactual projection (ms) of the same requests.
     pub fn projected_full_ms(&self) -> f64 {
-        self.inner.lock().unwrap().projected_full_ms
+        self.inner.lock_unpoisoned().projected_full_ms
     }
 
     /// 1 − spent/full on the projected-latency ledger.
     pub fn projected_saving(&self) -> f64 {
-        let g = self.inner.lock().unwrap();
+        let g = self.inner.lock_unpoisoned();
         if g.projected_full_ms == 0.0 {
             0.0
         } else {
@@ -166,7 +166,7 @@ impl Metrics {
         probe_dispatches: u64,
         shard_locks: u64,
     ) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock_unpoisoned();
         g.attn_batches += 1;
         g.attn_co_batched += co_batched;
         g.probes += probes;
@@ -175,88 +175,88 @@ impl Metrics {
     }
 
     pub fn attention_batches(&self) -> u64 {
-        self.inner.lock().unwrap().attn_batches
+        self.inner.lock_unpoisoned().attn_batches
     }
 
     /// Per-head probe decompositions run by the pipeline.
     pub fn probes(&self) -> u64 {
-        self.inner.lock().unwrap().probes
+        self.inner.lock_unpoisoned().probes
     }
 
     /// Pooled probe waves dispatched (≤ one per drained batch).
     pub fn probe_dispatches(&self) -> u64 {
-        self.inner.lock().unwrap().probe_dispatches
+        self.inner.lock_unpoisoned().probe_dispatches
     }
 
     /// Layer-shard lock round-trips taken by the attention pipeline.
     pub fn shard_locks(&self) -> u64 {
-        self.inner.lock().unwrap().shard_locks
+        self.inner.lock_unpoisoned().shard_locks
     }
 
     /// Mean number of attention requests co-batched per drained batch.
     pub fn mean_co_batch(&self) -> f64 {
-        self.inner.lock().unwrap().mean_co_batch()
+        self.inner.lock_unpoisoned().mean_co_batch()
     }
 
     pub fn record_rejection(&self) {
-        self.inner.lock().unwrap().rejected += 1;
+        self.inner.lock_unpoisoned().rejected += 1;
     }
 
     /// A cancelled ticket's request was reaped before running.
     pub fn record_cancelled(&self) {
-        self.inner.lock().unwrap().cancelled += 1;
+        self.inner.lock_unpoisoned().cancelled += 1;
     }
 
     /// A request was dropped because its deadline expired before it ran.
     pub fn record_expired(&self) {
-        self.inner.lock().unwrap().expired += 1;
+        self.inner.lock_unpoisoned().expired += 1;
     }
 
     /// A request failed submit-time validation.
     pub fn record_invalid(&self) {
-        self.inner.lock().unwrap().invalid += 1;
+        self.inner.lock_unpoisoned().invalid += 1;
     }
 
     /// `extra` same-key requests were drained past `max_batch`.
     pub fn record_over_drain(&self, extra: u64) {
-        self.inner.lock().unwrap().over_drained += extra;
+        self.inner.lock_unpoisoned().over_drained += extra;
     }
 
     pub fn cancelled(&self) -> u64 {
-        self.inner.lock().unwrap().cancelled
+        self.inner.lock_unpoisoned().cancelled
     }
 
     pub fn expired(&self) -> u64 {
-        self.inner.lock().unwrap().expired
+        self.inner.lock_unpoisoned().expired
     }
 
     pub fn invalid(&self) -> u64 {
-        self.inner.lock().unwrap().invalid
+        self.inner.lock_unpoisoned().invalid
     }
 
     pub fn over_drained(&self) -> u64 {
-        self.inner.lock().unwrap().over_drained
+        self.inner.lock_unpoisoned().over_drained
     }
 
     pub fn record_safety_mask(&self) {
-        self.inner.lock().unwrap().safety_masked += 1;
+        self.inner.lock_unpoisoned().safety_masked += 1;
     }
 
     pub fn requests(&self) -> u64 {
-        self.inner.lock().unwrap().requests
+        self.inner.lock_unpoisoned().requests
     }
 
     pub fn rejected(&self) -> u64 {
-        self.inner.lock().unwrap().rejected
+        self.inner.lock_unpoisoned().rejected
     }
 
     pub fn safety_masked(&self) -> u64 {
-        self.inner.lock().unwrap().safety_masked
+        self.inner.lock_unpoisoned().safety_masked
     }
 
     /// 1 − spent/full: the served FLOPs saving.
     pub fn flops_saving(&self) -> f64 {
-        let g = self.inner.lock().unwrap();
+        let g = self.inner.lock_unpoisoned();
         if g.flops_full == 0 {
             0.0
         } else {
@@ -266,7 +266,7 @@ impl Metrics {
 
     /// Mean selected rank.
     pub fn mean_rank(&self) -> f64 {
-        let g = self.inner.lock().unwrap();
+        let g = self.inner.lock_unpoisoned();
         let total: u64 = g.rank_counts.iter().sum();
         if total == 0 {
             return 0.0;
@@ -281,7 +281,7 @@ impl Metrics {
 
     /// Text report for examples/benches.
     pub fn report(&self) -> String {
-        let g = self.inner.lock().unwrap();
+        let g = self.inner.lock_unpoisoned();
         let mean_batch = {
             let total: u64 = g.batch_sizes.iter().sum();
             if total == 0 {

@@ -73,7 +73,7 @@ pub use batcher::{BatchPolicy, DynamicBatcher, SubmitError};
 pub use completion::{
     CancelToken, Completion, CompletionPayload, CompletionQueue, StreamingTicket, Ticket,
 };
-pub use engine::{EngineConfig, ServingEngine};
+pub use engine::{DecideEvent, EngineConfig, PipelineHooks, ServingEngine};
 pub use metrics::Metrics;
 pub use rank_controller::{ControllerConfig, Decision, PolicySource, RankController};
 pub use request::{

@@ -38,7 +38,7 @@
 //! sequential one — the equality tests pin this bit-for-bit.
 
 use super::completion::AttnReply;
-use super::engine::{reap_error, record_reap, EngineShared};
+use super::engine::{reap_error, record_reap, DecideEvent, EngineShared};
 use super::rank_controller::{
     full_rank_decision, probe_head, resolve_probes, DecideCtx, Decision, PolicySource,
     ProbeSource, StepPlan,
@@ -46,7 +46,7 @@ use super::rank_controller::{
 use super::request::{AttentionRequest, AttentionResponse, EngineError, ErrorKind};
 use crate::attention::{merge_heads, project_heads, AttnInputs};
 use crate::linalg::{Mat, Svd};
-use crate::util::{global_pool, Stopwatch};
+use crate::util::{global_pool, LockExt, Stopwatch};
 use anyhow::Result;
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -240,7 +240,7 @@ pub(crate) fn run_attention_batch(shared: &EngineShared, jobs: Vec<AttnJob>) {
             }
         }
         let steps = {
-            let mut controller = shared.shards[layer].lock().unwrap();
+            let mut controller = shared.shards[layer].lock_unpoisoned();
             shard_locks += 1;
             controller.plan_steps(layer, &head_seq)
         };
@@ -302,8 +302,7 @@ pub(crate) fn run_attention_batch(shared: &EngineShared, jobs: Vec<AttnJob>) {
     // stops the request here — its decisions are never replayed and no
     // apply work is dispatched for it (the probes it contributed stay
     // published, exactly like an errored request's).
-    #[cfg(test)]
-    if let Some(hook) = &shared.after_probe_hook {
+    if let Some(hook) = &shared.hooks.after_probe {
         hook();
     }
     reap_boundary(shared, &mut states, &replies, &reqs);
@@ -313,7 +312,7 @@ pub(crate) fn run_attention_batch(shared: &EngineShared, jobs: Vec<AttnJob>) {
     for work in works.iter_mut() {
         let layer = work.layer;
         let weights = &shared.layers[layer];
-        let mut controller = shared.shards[layer].lock().unwrap();
+        let mut controller = shared.shards[layer].lock_unpoisoned();
         shard_locks += 1;
         for si in 0..work.steps.len() {
             let (j, h) = work.owner[si];
@@ -358,7 +357,22 @@ pub(crate) fn run_attention_batch(shared: &EngineShared, jobs: Vec<AttnJob>) {
                 inp.seq_len(),
                 inp.head_dim(),
             ) {
-                Ok(dec) => states[j].decisions[h] = Some(dec),
+                Ok(dec) => {
+                    // Emitted under the shard lock: observers see the
+                    // exact serialized decide order.
+                    if let Some(observe) = &shared.hooks.on_decide {
+                        observe(DecideEvent {
+                            layer,
+                            head: work.steps[si].head,
+                            request: reqs[j].id,
+                            step: si,
+                            rank: dec.rank,
+                            prev_rank: dec.prev_rank,
+                            fresh: dec.fresh_decision,
+                        });
+                    }
+                    states[j].decisions[h] = Some(dec);
+                }
                 Err(e) => states[j].error = Some(format!("{e:#}")),
             }
         }
@@ -501,6 +515,7 @@ mod tests {
     use super::*;
     use crate::attention::MhsaWeights;
     use crate::coordinator::completion::{Slot, Ticket};
+    use crate::coordinator::engine::PipelineHooks;
     use crate::coordinator::metrics::Metrics;
     use crate::coordinator::rank_controller::{ControllerConfig, RankController};
     use crate::coordinator::request::{AttentionResponse, ErrorKind, SubmitOptions};
@@ -510,7 +525,7 @@ mod tests {
     use std::sync::Mutex;
     use std::time::Duration;
 
-    fn shared_with_hook(hook: Option<Box<dyn Fn() + Send + Sync>>) -> EngineShared {
+    fn shared_with_hooks(hooks: PipelineHooks) -> EngineShared {
         let reg = Arc::new(ArtifactRegistry::open_host(64, 16));
         let mut rng = Pcg32::seeded(7);
         let layers = vec![MhsaWeights::init(16, 1, &mut rng)];
@@ -530,7 +545,7 @@ mod tests {
             controller_cfg: cfg,
             metrics: Arc::new(Metrics::new()),
             stopped: AtomicBool::new(false),
-            after_probe_hook: hook,
+            hooks,
         }
     }
 
@@ -553,10 +568,10 @@ mod tests {
         // hook fires between the probe and decide stages) — cooperative
         // cancellation must stop the request at the boundary: no
         // decisions, no factor applies, an explicit Cancelled error.
-        let mut shared = shared_with_hook(None);
+        let mut shared = shared_with_hooks(PipelineHooks::default());
         let (job, ticket) = job_and_ticket(&SubmitOptions::default());
         let token = ticket.cancel_token();
-        shared.after_probe_hook = Some(Box::new(move || token.cancel()));
+        shared.hooks.after_probe = Some(Arc::new(move || token.cancel()));
         run_attention_batch(&shared, vec![job]);
 
         let err = ticket.wait().expect_err("cancelled mid-probe");
@@ -571,12 +586,12 @@ mod tests {
 
     #[test]
     fn deadline_expiring_mid_probe_stops_the_request() {
-        let mut shared = shared_with_hook(None);
+        let mut shared = shared_with_hooks(PipelineHooks::default());
         // Alive at drain time, dead by the post-probe boundary.
         let opts = SubmitOptions::deadline_in(Duration::from_millis(250));
         let (job, ticket) = job_and_ticket(&opts);
-        shared.after_probe_hook =
-            Some(Box::new(|| std::thread::sleep(Duration::from_millis(600))));
+        shared.hooks.after_probe =
+            Some(Arc::new(|| std::thread::sleep(Duration::from_millis(600))));
         run_attention_batch(&shared, vec![job]);
 
         let err = ticket.wait().expect_err("expired mid-probe");
@@ -588,11 +603,30 @@ mod tests {
     #[test]
     fn live_tickets_flow_through_boundaries_untouched() {
         // The boundary checks must not disturb a live request.
-        let shared = shared_with_hook(None);
+        let shared = shared_with_hooks(PipelineHooks::default());
         let (job, ticket) = job_and_ticket(&SubmitOptions::default());
         run_attention_batch(&shared, vec![job]);
         let resp = ticket.wait().expect("served");
         assert_eq!(resp.ranks.len(), 1);
         assert!(shared.reg.ops().get(Op::LowRankAttention) > 0);
+    }
+
+    #[test]
+    fn on_decide_observes_the_serialized_decide_order() {
+        let mut shared = shared_with_hooks(PipelineHooks::default());
+        let events: Arc<Mutex<Vec<DecideEvent>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink = Arc::clone(&events);
+        shared.hooks.on_decide =
+            Some(Arc::new(move |e| sink.lock_unpoisoned().push(e)));
+        let (job, ticket) = job_and_ticket(&SubmitOptions::default());
+        run_attention_batch(&shared, vec![job]);
+        let resp = ticket.wait().expect("served");
+        let trace = events.lock_unpoisoned();
+        assert_eq!(trace.len(), 1, "one head, one decision");
+        assert_eq!(trace[0].layer, 0);
+        assert_eq!(trace[0].request, 1);
+        assert_eq!(trace[0].step, 0);
+        assert!(trace[0].fresh, "first call on a stream is a boundary");
+        assert_eq!(trace[0].rank, resp.ranks[0], "event matches the response");
     }
 }

@@ -57,6 +57,9 @@ pub enum PolicySource {
     /// Baselines for A/B serving experiments.
     Fixed(usize),
     AdaptiveEnergy(f64),
+    /// Soft-thresholding rule (SoftLMs, arXiv:2411.10543): keep the
+    /// singular values surviving `σ_i − τ·σ_0 > 0`, rounded to the grid.
+    SoftThreshold(f64),
     Random,
     /// Full rank (upper bound; disables the low-rank path).
     FullRank,
@@ -69,6 +72,7 @@ impl PolicySource {
             PolicySource::Actor(_) => "actor-policy",
             PolicySource::Fixed(_) => "fixed",
             PolicySource::AdaptiveEnergy(_) => "adaptive-energy",
+            PolicySource::SoftThreshold(_) => "soft-threshold",
             PolicySource::Random => "random",
             PolicySource::FullRank => "full-rank",
         }
@@ -337,6 +341,10 @@ impl RankController {
             PolicySource::Fixed(r) => nearest_open(&grid, *r, &mask),
             PolicySource::AdaptiveEnergy(th) => {
                 let wanted = crate::spectral::rank_for_energy(spectrum, *th);
+                nearest_open(&grid, wanted, &mask)
+            }
+            PolicySource::SoftThreshold(tau) => {
+                let wanted = crate::spectral::soft_threshold_rank(spectrum, *tau);
                 nearest_open(&grid, wanted, &mask)
             }
             PolicySource::Random => {
@@ -689,6 +697,24 @@ mod tests {
     fn policy_source_names() {
         assert_eq!(PolicySource::Hlo.name(), "hlo-policy");
         assert_eq!(PolicySource::Fixed(32).name(), "fixed");
+        assert_eq!(PolicySource::SoftThreshold(0.3).name(), "soft-threshold");
+    }
+
+    #[test]
+    fn soft_threshold_source_serves_and_counts_flops() {
+        let reg = ArtifactRegistry::open_host(64, 16);
+        let cfg = ControllerConfig { use_trust_region: false, ..Default::default() };
+        let mut c = RankController::new(cfg, PolicySource::SoftThreshold(0.5));
+        let mut rng = Pcg32::seeded(12);
+        let x = Mat::randn(64, 16, 1.0, &mut rng);
+        let w = MhsaWeights::init(16, 1, &mut rng);
+        let heads = crate::attention::project_heads(&x, &w, true);
+        let (y, dec) = c
+            .attention(&reg, &x, &w, &heads[0], 0, 0, 1)
+            .expect("controller attention");
+        assert_eq!((y.rows(), y.cols()), (64, 16));
+        assert!(c.cfg.rank_grid.contains(&dec.rank), "rank {} on grid", dec.rank);
+        assert!(dec.flops_spent < dec.flops_full, "low-rank path must save FLOPs");
     }
 
     #[test]

@@ -19,6 +19,7 @@
 
 pub mod attention;
 pub mod bench_harness;
+pub mod conformance;
 pub mod coordinator;
 pub mod data;
 pub mod flops;

@@ -50,6 +50,8 @@ fn main() {
         Some("serve") => cmd_serve(&args),
         Some("agent") => cmd_agent(&args),
         Some("info") => cmd_info(&args),
+        Some("fuzz") => cmd_fuzz(&args),
+        Some("lint") => cmd_lint(&args),
         _ => {
             print_usage();
             0
@@ -61,9 +63,12 @@ fn main() {
 fn print_usage() {
     println!(
         "drrl — Dynamic Rank RL for adaptive low-rank attention\n\
-         usage: drrl <train|eval|generate|serve|agent|info> [--flags]\n\
+         usage: drrl <train|eval|generate|serve|agent|info|fuzz|lint> [--flags]\n\
          run each subcommand with no flags for sensible defaults;\n\
-         see README.md for the full flag reference."
+         fuzz: differential conformance fuzzing\n\
+         \x20      (--seed N | --budget N [--base-seed N] | --seeds FILE)\n\
+         lint: concurrency-hygiene source lint over the serving stack\n\
+         see README.md and CONFORMANCE.md for the full reference."
     );
 }
 
@@ -205,6 +210,7 @@ fn cmd_serve(args: &Args) -> i32 {
     let policy = match args.get_or("policy", "hlo") {
         "fixed" => PolicySource::Fixed(args.usize_or("rank", 32)),
         "adaptive" => PolicySource::AdaptiveEnergy(0.9),
+        "soft" => PolicySource::SoftThreshold(args.f64_or("tau", 0.3)),
         "random" => PolicySource::Random,
         "full" => PolicySource::FullRank,
         _ => PolicySource::Hlo,
@@ -241,6 +247,7 @@ fn cmd_serve(args: &Args) -> i32 {
                     // Same-layer backlogs co-batch deeper than max_batch.
                     overdrain: cfg.serving.max_batch,
                 },
+                ..Default::default()
             },
         )
     };
@@ -250,6 +257,7 @@ fn cmd_serve(args: &Args) -> i32 {
                 PolicySource::Hlo => PolicySource::Hlo,
                 PolicySource::Fixed(r) => PolicySource::Fixed(*r),
                 PolicySource::AdaptiveEnergy(t) => PolicySource::AdaptiveEnergy(*t),
+                PolicySource::SoftThreshold(t) => PolicySource::SoftThreshold(*t),
                 PolicySource::Random => PolicySource::Random,
                 PolicySource::FullRank => PolicySource::FullRank,
                 PolicySource::Actor(_) => PolicySource::Hlo,
@@ -378,6 +386,105 @@ fn cmd_info(_args: &Args) -> i32 {
         Err(e) => {
             eprintln!("no artifacts: {e:#} — run `make artifacts`");
             1
+        }
+    }
+}
+
+/// `drrl fuzz` — differential conformance fuzzing (see CONFORMANCE.md).
+///
+/// Modes:
+///   --seed N        replay exactly one seed (the repro command failures
+///                   print); ignores --seeds/--budget
+///   --seeds FILE    replay a pinned corpus (one seed per line, #
+///                   comments)
+///   --budget N      total seeds to run (default 50): the corpus first,
+///                   then sequential seeds from --base-seed (default
+///                   0x5EED) until the budget is spent
+fn cmd_fuzz(args: &Args) -> i32 {
+    let seeds: Vec<u64> = if let Some(s) = args.get("seed") {
+        match s.parse() {
+            Ok(seed) => vec![seed],
+            Err(_) => {
+                eprintln!("--seed must be a u64, got {s:?}");
+                return 2;
+            }
+        }
+    } else {
+        let mut seeds = Vec::new();
+        if let Some(path) = args.get("seeds") {
+            let text = match std::fs::read_to_string(path) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("cannot read seed corpus {path}: {e}");
+                    return 2;
+                }
+            };
+            for (i, line) in text.lines().enumerate() {
+                let line = line.split('#').next().unwrap_or("").trim();
+                if line.is_empty() {
+                    continue;
+                }
+                match line.parse() {
+                    Ok(seed) => seeds.push(seed),
+                    Err(_) => {
+                        eprintln!("{path}:{}: not a u64 seed: {line:?}", i + 1);
+                        return 2;
+                    }
+                }
+            }
+        }
+        let budget = args.u64_or("budget", 50).max(seeds.len() as u64);
+        let base = args.u64_or("base-seed", 0x5EED);
+        let mut next = base;
+        while (seeds.len() as u64) < budget {
+            if !seeds.contains(&next) {
+                seeds.push(next);
+            }
+            next = next.wrapping_add(1);
+        }
+        seeds
+    };
+
+    let total = seeds.len();
+    println!("fuzzing {total} seed(s)…");
+    let mut failed = 0usize;
+    for (i, &seed) in seeds.iter().enumerate() {
+        let sc = drrl::conformance::Scenario::generate(seed);
+        println!("[{}/{total}] seed {seed}: {}", i + 1, sc.describe());
+        if let Err(report) = drrl::conformance::run_seed(seed) {
+            eprintln!("{report}");
+            failed += 1;
+        }
+    }
+    if failed > 0 {
+        eprintln!("{failed}/{total} seed(s) failed conformance");
+        1
+    } else {
+        println!("all {total} seed(s) passed every differential pairing");
+        0
+    }
+}
+
+/// `drrl lint` — concurrency-hygiene source lint over `rust/src/coordinator/`
+/// and `rust/src/runtime/` (lock-unwrap, instant-in-decide, raw-mpsc; see
+/// CONFORMANCE.md). `--root` points at the repo root (default `.`).
+fn cmd_lint(args: &Args) -> i32 {
+    let root = args.get_or("root", ".");
+    match drrl::conformance::run_lint(std::path::Path::new(root)) {
+        Ok(violations) if violations.is_empty() => {
+            println!("lint: serving stack clean");
+            0
+        }
+        Ok(violations) => {
+            for v in &violations {
+                eprintln!("{v}");
+            }
+            eprintln!("lint: {} violation(s)", violations.len());
+            1
+        }
+        Err(e) => {
+            eprintln!("lint: cannot scan {root}: {e}");
+            2
         }
     }
 }

@@ -9,7 +9,9 @@ pub mod static_baselines;
 
 pub use drrl::DrRlPolicy;
 pub use static_attention::{nystrom_attention, performer_attention, StaticAttnKind};
-pub use static_baselines::{AdaptiveSvdPolicy, FixedRankPolicy, OraclePolicy, RandomRankPolicy};
+pub use static_baselines::{
+    AdaptiveSvdPolicy, FixedRankPolicy, OraclePolicy, RandomRankPolicy, SoftThresholdPolicy,
+};
 
 use crate::rl::RankState;
 

@@ -2,7 +2,7 @@
 
 use super::RankPolicy;
 use crate::rl::{RankEnv, RankState};
-use crate::spectral::rank_for_energy;
+use crate::spectral::{rank_for_energy, soft_threshold_rank};
 use crate::util::Pcg32;
 
 /// Fixed Low-Rank (Linformer-style, paper r=32): one rank for every
@@ -58,6 +58,33 @@ impl RankPolicy for AdaptiveSvdPolicy {
 
     fn name(&self) -> &'static str {
         "adaptive-svd"
+    }
+}
+
+/// Soft-thresholding rank rule (SoftLMs, arXiv:2411.10543): keep the
+/// singular values surviving `σ_i − τ·σ_0 > 0` and round the count to
+/// the nearest admissible grid rank. Unlike Adaptive-SVD's cumulative
+/// energy rule, this thresholds each σ_i individually against the
+/// spectral norm, so it reacts to the spectrum's *tail height* rather
+/// than its integrated mass.
+pub struct SoftThresholdPolicy {
+    grid: Vec<usize>,
+    pub tau: f64,
+}
+
+impl SoftThresholdPolicy {
+    pub fn new(grid: Vec<usize>, tau: f64) -> Self {
+        SoftThresholdPolicy { grid, tau }
+    }
+}
+
+impl RankPolicy for SoftThresholdPolicy {
+    fn choose(&mut self, _state: &RankState, spectrum: &[f64], mask: &[bool]) -> usize {
+        nearest_admissible(&self.grid, soft_threshold_rank(spectrum, self.tau), mask)
+    }
+
+    fn name(&self) -> &'static str {
+        "soft-threshold"
     }
 }
 
@@ -166,6 +193,25 @@ mod tests {
         s.extend(vec![1e-6; 11]);
         let a = p.choose(&dummy_state(), &s, &[true; 3]);
         assert_eq!(a, 1);
+    }
+
+    #[test]
+    fn soft_threshold_rank_tracks_tail_height() {
+        let mut p = SoftThresholdPolicy::new(vec![4, 8, 16, 32], 0.5);
+        // Sharply decaying spectrum → few σ survive half the top σ.
+        let sharp: Vec<f64> = (0..32).map(|i| (0.3f64).powi(i)).collect();
+        assert_eq!(p.choose(&dummy_state(), &sharp, &[true; 4]), 0);
+        // Flat spectrum → everything survives → max grid rank.
+        let flat = vec![1.0; 32];
+        assert_eq!(p.choose(&dummy_state(), &flat, &[true; 4]), 3);
+    }
+
+    #[test]
+    fn soft_threshold_respects_mask() {
+        let mut p = SoftThresholdPolicy::new(vec![4, 8, 16, 32], 0.9);
+        // Wants a tiny rank, but index 0 is masked → nearest open.
+        let sharp: Vec<f64> = (0..32).map(|i| (0.3f64).powi(i)).collect();
+        assert_eq!(p.choose(&dummy_state(), &sharp, &[false, true, true, true]), 1);
     }
 
     #[test]

@@ -24,6 +24,7 @@
 //! to this contract.
 
 use crate::linalg::{Mat, Svd};
+use crate::util::LockExt;
 use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -197,11 +198,11 @@ pub struct LedgerMark(f64);
 
 impl LatencyLedger {
     pub fn add_ms(&self, ms: f64) {
-        *self.total_ms.lock().unwrap() += ms;
+        *self.total_ms.lock_unpoisoned() += ms;
     }
 
     pub fn total_ms(&self) -> f64 {
-        *self.total_ms.lock().unwrap()
+        *self.total_ms.lock_unpoisoned()
     }
 
     /// The current ledger position, for a later scoped read.

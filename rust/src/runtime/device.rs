@@ -18,8 +18,12 @@ use super::backend::{Backend, Capabilities, Op, OpCounters};
 use super::manifest::Manifest;
 use super::tensor::HostTensor;
 use crate::linalg::{Mat, Svd};
+use crate::util::LockExt;
 use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
+// lint:allow(mpsc) — the device thread is the sole owner of non-Send
+// PJRT state; a private channel pair per call is the marshalling
+// boundary, not a client-facing receiver API.
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
 
@@ -58,8 +62,7 @@ impl PjrtBackend {
     fn execute(&self, artifact: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
         let (reply, rx) = channel();
         self.tx
-            .lock()
-            .unwrap()
+            .lock_unpoisoned()
             .send(Cmd::Execute { artifact: artifact.to_string(), inputs, reply })
             .map_err(|_| anyhow!("device thread gone"))?;
         rx.recv().map_err(|_| anyhow!("device thread dropped reply"))?
@@ -68,8 +71,7 @@ impl PjrtBackend {
     fn warm_artifact(&self, artifact: &str) -> Result<()> {
         let (reply, rx) = channel();
         self.tx
-            .lock()
-            .unwrap()
+            .lock_unpoisoned()
             .send(Cmd::Warm { artifact: artifact.to_string(), reply })
             .map_err(|_| anyhow!("device thread gone"))?;
         rx.recv().map_err(|_| anyhow!("device thread dropped reply"))?
@@ -252,6 +254,8 @@ impl Backend for PjrtBackend {
     }
 }
 
+// lint:allow(mpsc) — receiving end of the device thread's private
+// marshalling channel (see the module header).
 fn device_main(manifest: Manifest, rx: std::sync::mpsc::Receiver<Cmd>) {
     let client = match xla::PjRtClient::cpu() {
         Ok(c) => c,

@@ -23,6 +23,7 @@ use super::manifest::Manifest;
 use crate::attention::{full_attention, AttnInputs};
 use crate::linalg::{matmul, Mat, Svd};
 use crate::train::HostLm;
+use crate::util::LockExt;
 use anyhow::Result;
 use std::sync::{Arc, Mutex};
 
@@ -77,7 +78,7 @@ impl HostBackend {
         );
         let fp = params_fingerprint(params);
         {
-            let g = self.lm_cache.lock().unwrap();
+            let g = self.lm_cache.lock_unpoisoned();
             if let Some((cached_fp, host)) = g.as_ref() {
                 if *cached_fp == fp {
                     let host = Arc::clone(host);
@@ -90,7 +91,7 @@ impl HostBackend {
         // Parse outside the lock; a racing miss just parses twice and
         // the last writer wins.
         let parsed = Arc::new(HostLm::from_flat(params, lm));
-        *self.lm_cache.lock().unwrap() = Some((fp, Arc::clone(&parsed)));
+        *self.lm_cache.lock_unpoisoned() = Some((fp, Arc::clone(&parsed)));
         self.ops.record_lm_cache(false);
         Ok(parsed)
     }
@@ -176,7 +177,7 @@ impl Backend for HostBackend {
         self.ops.record(Op::PolicyLogits);
         let fp = params_fingerprint(weights);
         {
-            let g = self.policy_cache.lock().unwrap();
+            let g = self.policy_cache.lock_unpoisoned();
             if let Some((cached_fp, net)) = g.as_ref() {
                 if *cached_fp == fp {
                     let net = Arc::clone(net);
@@ -189,7 +190,7 @@ impl Backend for HostBackend {
             weights,
             &self.manifest.policy,
         )?);
-        *self.policy_cache.lock().unwrap() = Some((fp, Arc::clone(&net)));
+        *self.policy_cache.lock_unpoisoned() = Some((fp, Arc::clone(&net)));
         net.forward(state)
     }
 

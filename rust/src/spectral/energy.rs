@@ -30,6 +30,21 @@ pub fn rank_for_energy(singular_values: &[f64], threshold: f64) -> usize {
     singular_values.len()
 }
 
+/// Soft-thresholding rank rule (SoftLMs, arXiv:2411.10543): keep every
+/// singular value whose soft-thresholded magnitude `σ_i − τ·σ_0` stays
+/// positive, where σ_0 is the spectral norm. A relative threshold makes
+/// the rule scale-invariant: `τ = 0` keeps the full numerical rank,
+/// `τ → 1` collapses to rank 1. Always returns at least 1 so downstream
+/// low-rank kernels get a usable rank.
+pub fn soft_threshold_rank(singular_values: &[f64], tau: f64) -> usize {
+    let sigma0 = singular_values.first().copied().unwrap_or(0.0);
+    if sigma0 <= 0.0 {
+        return 1;
+    }
+    let cut = tau * sigma0;
+    singular_values.iter().filter(|&&s| s - cut > 0.0).count().max(1)
+}
+
 /// Spectral-decay summary features fed into the RL state: NER at a few
 /// probe ranks, the decay exponent estimate, and entropy of the σ² mass.
 pub fn spectrum_features(singular_values: &[f64], probes: &[usize]) -> Vec<f64> {
@@ -132,6 +147,35 @@ mod tests {
         assert_eq!(ner(&[], 3), 1.0);
         assert_eq!(rank_for_energy(&[0.0, 0.0], 0.9), 1);
         assert_eq!(spectral_entropy(&[]), 0.0);
+    }
+
+    #[test]
+    fn soft_threshold_counts_surviving_sigmas() {
+        let s = [10.0, 6.0, 3.0, 0.5];
+        // cut = 0.5·10 = 5 → σ ∈ {10, 6} survive.
+        assert_eq!(soft_threshold_rank(&s, 0.5), 2);
+        // τ = 0 keeps everything above zero.
+        assert_eq!(soft_threshold_rank(&s, 0.0), 4);
+        // τ ≥ 1 collapses to the floor of 1 (σ_0 − σ_0 is not > 0).
+        assert_eq!(soft_threshold_rank(&s, 1.0), 1);
+    }
+
+    #[test]
+    fn soft_threshold_monotone_in_tau() {
+        let s: Vec<f64> = (0..32).map(|i| (0.85f64).powi(i)).collect();
+        let mut last = usize::MAX;
+        for i in 0..=10 {
+            let r = soft_threshold_rank(&s, i as f64 / 10.0);
+            assert!(r <= last, "rank must shrink as τ grows");
+            assert!(r >= 1);
+            last = r;
+        }
+    }
+
+    #[test]
+    fn soft_threshold_zero_spectrum_floor() {
+        assert_eq!(soft_threshold_rank(&[], 0.3), 1);
+        assert_eq!(soft_threshold_rank(&[0.0, 0.0], 0.3), 1);
     }
 
     #[test]

@@ -6,7 +6,10 @@ pub mod energy;
 pub mod perturbation;
 pub mod trust_region;
 
-pub use energy::{decay_exponent, ner, rank_for_energy, spectral_entropy, spectrum_features};
+pub use energy::{
+    decay_exponent, ner, rank_for_energy, soft_threshold_rank, spectral_entropy,
+    spectrum_features,
+};
 pub use perturbation::{
     assess_transition, final_output_bound, output_bound, qk_bound_from_mats,
     qk_residual_bound, rank_transition_perturbation, relative_transition_perturbation,

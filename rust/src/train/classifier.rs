@@ -16,7 +16,7 @@ use crate::linalg::{top_k_svd, Mat};
 use crate::nn::{Act, AdamW, Categorical, Mlp};
 use crate::policy::{nystrom_attention, performer_attention};
 use crate::rl::{featurize, ConvFeaturizer};
-use crate::spectral::rank_for_energy;
+use crate::spectral::{rank_for_energy, soft_threshold_rank};
 use crate::util::Pcg32;
 
 /// Attention mechanism under test.
@@ -27,6 +27,9 @@ pub enum AttnMethod {
     DrRl { grid: Vec<usize>, actor: std::sync::Arc<crate::rl::ActorCritic> },
     FixedRank(usize),
     AdaptiveSvd { threshold: f64, r_max: usize },
+    /// Soft-thresholding rule (SoftLMs, arXiv:2411.10543): rank = #{σ_i :
+    /// σ_i − τ·σ_0 > 0} over the probe spectrum.
+    SoftThreshold { tau: f64, r_max: usize },
     Performer { n_features: usize },
     Nystrom { n_landmarks: usize },
     /// Uniform-random rank from the grid (Table 1 control).
@@ -40,6 +43,7 @@ impl AttnMethod {
             AttnMethod::DrRl { .. } => "dr-rl",
             AttnMethod::FixedRank(_) => "fixed-rank",
             AttnMethod::AdaptiveSvd { .. } => "adaptive-svd",
+            AttnMethod::SoftThreshold { .. } => "soft-threshold",
             AttnMethod::Performer { .. } => "performer",
             AttnMethod::Nystrom { .. } => "nystromformer",
             AttnMethod::RandomRank { .. } => "random-rank",
@@ -141,6 +145,14 @@ impl SentimentClassifier {
                 let a = crate::attention::attention_matrix(inp);
                 let probe = top_k_svd(&a, (*r_max).min(a.rows()), seed);
                 let r = rank_for_energy(&probe.s, *threshold).min(*r_max);
+                self.rank_sum += r as u64;
+                self.rank_count += 1;
+                crate::attention::lowrank_attention_output(&probe, r, &inp.v)
+            }
+            AttnMethod::SoftThreshold { tau, r_max } => {
+                let a = crate::attention::attention_matrix(inp);
+                let probe = top_k_svd(&a, (*r_max).min(a.rows()), seed);
+                let r = soft_threshold_rank(&probe.s, *tau).min(*r_max);
                 self.rank_sum += r as u64;
                 self.rank_count += 1;
                 crate::attention::lowrank_attention_output(&probe, r, &inp.v)
@@ -274,8 +286,25 @@ mod tests {
     }
 
     #[test]
+    fn soft_threshold_tracks_mean_rank() {
+        let data = generate_dataset(20, 48, 12);
+        let mut clf = SentimentClassifier::new(32, 2,
+            AttnMethod::SoftThreshold { tau: 0.3, r_max: 8 }, 6);
+        for e in &data {
+            clf.features(&e.word_tokens);
+        }
+        assert!(clf.rank_count > 0);
+        let mr = clf.mean_rank();
+        assert!((1.0..=8.0).contains(&mr), "mean rank {mr}");
+    }
+
+    #[test]
     fn method_names() {
         assert_eq!(AttnMethod::Full.name(), "full-rank");
         assert_eq!(AttnMethod::Performer { n_features: 8 }.name(), "performer");
+        assert_eq!(
+            AttnMethod::SoftThreshold { tau: 0.3, r_max: 8 }.name(),
+            "soft-threshold"
+        );
     }
 }

@@ -16,7 +16,7 @@ use crate::attention::{
 use crate::linalg::{matmul, top_k_svd, Mat};
 use crate::policy::{nystrom_attention, performer_attention};
 use crate::runtime::LmShape;
-use crate::spectral::rank_for_energy;
+use crate::spectral::{rank_for_energy, soft_threshold_rank};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -164,6 +164,13 @@ impl HostLm {
                 let a = crate::attention::attention_matrix(inp);
                 let probe = top_k_svd(&a, (*r_max).min(a.rows()), seed);
                 let r = rank_for_energy(&probe.s, *threshold).min(*r_max);
+                self.count_rank(r);
+                crate::attention::lowrank_attention_output(&probe, r, &inp.v)
+            }
+            AttnMethod::SoftThreshold { tau, r_max } => {
+                let a = crate::attention::attention_matrix(inp);
+                let probe = top_k_svd(&a, (*r_max).min(a.rows()), seed);
+                let r = soft_threshold_rank(&probe.s, *tau).min(*r_max);
                 self.count_rank(r);
                 crate::attention::lowrank_attention_output(&probe, r, &inp.v)
             }

@@ -6,11 +6,13 @@ pub mod cli;
 pub mod json;
 pub mod logger;
 pub mod rng;
+pub mod sync;
 pub mod threadpool;
 pub mod timer;
 
 pub use cli::Args;
 pub use json::Json;
 pub use rng::Pcg32;
+pub use sync::{CondvarExt, LockExt};
 pub use threadpool::{global_pool, ThreadPool};
 pub use timer::{LatencyStats, Stopwatch};

@@ -1,0 +1,101 @@
+//! Poison-recovering lock/condvar helpers.
+//!
+//! `Mutex::lock().unwrap()` turns one panicked thread into a cascade of
+//! secondary panics in every other thread that touches the same lock —
+//! the serving engine would rather keep draining tickets with the data
+//! the panicking thread left behind (every guarded structure here is a
+//! counter ledger or a controller whose invariants are re-checked at use
+//! time). These extension traits recover the guard from a
+//! [`std::sync::PoisonError`] instead of unwrapping it, and the
+//! `conformance::lint` pass forbids the raw `.lock().unwrap()` /
+//! `.lock().expect(..)` pattern in `coordinator/` and `runtime/` so new
+//! code cannot reintroduce the cascade.
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError, WaitTimeoutResult};
+use std::time::Duration;
+
+/// Poison-recovering [`Mutex::lock`].
+pub trait LockExt<T> {
+    /// Lock, recovering the guard if a previous holder panicked.
+    fn lock_unpoisoned(&self) -> MutexGuard<'_, T>;
+}
+
+impl<T> LockExt<T> for Mutex<T> {
+    fn lock_unpoisoned(&self) -> MutexGuard<'_, T> {
+        self.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+/// Poison-recovering [`Condvar`] waits.
+pub trait CondvarExt {
+    /// [`Condvar::wait`], recovering the guard on poison.
+    fn wait_unpoisoned<'a, T>(&self, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T>;
+
+    /// [`Condvar::wait_timeout`], recovering the guard on poison.
+    fn wait_timeout_unpoisoned<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> (MutexGuard<'a, T>, WaitTimeoutResult);
+}
+
+impl CondvarExt for Condvar {
+    fn wait_unpoisoned<'a, T>(&self, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+        self.wait(guard).unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn wait_timeout_unpoisoned<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+        self.wait_timeout(guard, dur).unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Condvar, Mutex};
+
+    #[test]
+    fn lock_unpoisoned_recovers_after_panic() {
+        let m = Arc::new(Mutex::new(7usize));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.lock().is_err(), "lock should be poisoned");
+        assert_eq!(*m.lock_unpoisoned(), 7);
+    }
+
+    #[test]
+    fn wait_timeout_unpoisoned_times_out_normally() {
+        let m = Mutex::new(());
+        let cv = Condvar::new();
+        let g = m.lock_unpoisoned();
+        let (_g, res) = cv.wait_timeout_unpoisoned(g, Duration::from_millis(5));
+        assert!(res.timed_out());
+    }
+
+    #[test]
+    fn wait_unpoisoned_wakes_on_notify() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let pair2 = Arc::clone(&pair);
+        let t = std::thread::spawn(move || {
+            let (m, cv) = &*pair2;
+            let mut g = m.lock_unpoisoned();
+            while !*g {
+                g = cv.wait_unpoisoned(g);
+            }
+        });
+        {
+            let (m, cv) = &*pair;
+            *m.lock_unpoisoned() = true;
+            cv.notify_all();
+        }
+        t.join().unwrap();
+    }
+}

@@ -302,6 +302,7 @@ fn per_request_projected_ms_attribution_across_a_co_batched_wave() {
                 capacity: 64,
                 overdrain: 0,
             },
+            ..Default::default()
         },
     );
     let ledger = reg.latency_ledger().expect("sim backend has a ledger");

@@ -68,6 +68,7 @@ fn mk_engine(
                 capacity: 4096,
                 overdrain,
             },
+            ..Default::default()
         },
     )
 }

@@ -68,6 +68,7 @@ fn mk_engine(reg: &Arc<ArtifactRegistry>, n_workers: usize, source: PolicySource
                 capacity: 4096,
                 overdrain: 0,
             },
+            ..Default::default()
         },
     )
 }
@@ -280,6 +281,7 @@ fn mk_pipeline_engine(
                 capacity: 4096,
                 overdrain: 0,
             },
+            ..Default::default()
         },
     )
 }

@@ -1,0 +1,122 @@
+//! Differential conformance fuzzing — the CI-facing entry points.
+//!
+//! The conformance layer's unit tests live next to the code
+//! (`rust/src/conformance/`); this integration test runs a small seed
+//! sweep end-to-end exactly the way `drrl fuzz` does, and — critically —
+//! proves the harness *detects* violations by injecting deliberate bugs:
+//! a tampered sim latency ledger and a permuted decide trace. A fuzzer
+//! that has never caught a planted bug proves nothing.
+//!
+//! The full bounded sweep runs in CI as `drrl fuzz --budget 200 --seeds
+//! ci_corpus.txt`; this test keeps the in-`cargo test` cost to a few
+//! seeds.
+
+#![cfg(not(miri))] // spins real engine threads; miri covers the unit layer
+
+use drrl::conformance::differential::{build_engine, run_trace};
+use drrl::conformance::perturb::recording_hooks;
+use drrl::conformance::{repro_command, run_seed, sim_ledger_failures, validate_trace, Scenario};
+use drrl::runtime::ArtifactRegistry;
+use drrl::util::LockExt;
+use std::sync::Arc;
+
+#[test]
+fn a_small_seed_sweep_passes_every_pairing() {
+    for seed in [0u64, 1, 2] {
+        if let Err(report) = run_seed(seed) {
+            panic!("{report}");
+        }
+    }
+}
+
+#[test]
+fn failing_seeds_reproduce_deterministically() {
+    // The fuzzer's contract: same seed, same verdict and same report
+    // text (modulo nothing — the report embeds only seed-derived data).
+    let verdict = |seed| match run_seed(seed) {
+        Ok(()) => String::from("ok"),
+        Err(report) => report.to_string(),
+    };
+    assert_eq!(verdict(4), verdict(4));
+    assert!(repro_command(4).contains("--seed 4"));
+}
+
+#[test]
+fn injected_ledger_drift_is_caught_end_to_end() {
+    // Deliberate bug: charge the sim's latency ledger 0.5 ms that no
+    // request accounts for. The projected-vs-ledger invariant must flag
+    // it — this pins the "ledger drift" violation class.
+    let sc = Scenario::generate(5);
+    let failures = sim_ledger_failures(&sc, 0.5);
+    assert!(
+        failures.iter().any(|f| f.contains("disagrees with the")),
+        "tampered ledger must be reported, got: {failures:?}"
+    );
+    // And without the tamper the same scenario is clean.
+    assert!(sim_ledger_failures(&sc, 0.0).is_empty());
+}
+
+#[test]
+fn injected_decide_trace_permutation_is_caught() {
+    // Record a real serialized decide trace, then corrupt it the way a
+    // broken scheduler would: replay one request's heads out of order.
+    // The trace validator must flag the permutation — this pins the
+    // "schedule permutation" violation class on live engine output, not
+    // just synthetic events.
+    let sc = (0..64)
+        .map(Scenario::generate)
+        .find(|s| s.order_insensitive() && s.n_heads > 1)
+        .expect("some seed in 0..64 is order-insensitive with 2 heads");
+    let reg = Arc::new(ArtifactRegistry::open_host(sc.n, sc.head_dim));
+    let (trace, hooks) = recording_hooks();
+    {
+        let engine = build_engine(&sc, reg, 1, sc.max_batch, hooks);
+        run_trace(&sc, &engine);
+    }
+    let reference = trace.lock_unpoisoned().clone();
+    assert!(
+        reference.len() >= 2,
+        "trace must cover every (request, head) decision"
+    );
+    validate_trace(&reference, &reference, true).expect("the genuine trace is legal");
+
+    let mut corrupted = reference.clone();
+    let (a, b) = {
+        // Find two events of the same (layer, request): adjacent heads.
+        let pos = corrupted
+            .windows(2)
+            .position(|w| w[0].layer == w[1].layer && w[0].request == w[1].request)
+            .expect("a 2-head request decides adjacent events");
+        (pos, pos + 1)
+    };
+    corrupted.swap(a, b);
+    let err = validate_trace(&corrupted, &reference, true)
+        .expect_err("permuted head order must be caught");
+    assert!(err.contains("head order"), "unexpected report: {err}");
+}
+
+#[test]
+fn the_ci_corpus_parses_and_its_head_seeds_pass() {
+    // `ci_corpus.txt` is the pinned regression corpus the fuzz-smoke CI
+    // leg replays. Keep it parseable and spot-check its first entries so
+    // a stale corpus fails here, not in CI.
+    let text = std::fs::read_to_string(concat!(env!("CARGO_MANIFEST_DIR"), "/ci_corpus.txt"))
+        .expect("ci_corpus.txt at the repo root");
+    let seeds: Vec<u64> = text
+        .lines()
+        .filter_map(|l| {
+            let l = l.split('#').next().unwrap_or("").trim();
+            if l.is_empty() {
+                None
+            } else {
+                Some(l.parse().expect("corpus lines are u64 seeds"))
+            }
+        })
+        .collect();
+    assert!(!seeds.is_empty(), "corpus must pin at least one seed");
+    for &seed in seeds.iter().take(2) {
+        if let Err(report) = run_seed(seed) {
+            panic!("corpus seed regressed:\n{report}");
+        }
+    }
+}

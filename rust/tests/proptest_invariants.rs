@@ -1,20 +1,46 @@
 //! Property-based invariant tests (proptest is unavailable offline, so
 //! this uses a seeded-generator sweep harness: every property is checked
-//! over many randomly generated cases; failures print the case seed for
-//! reproduction).
+//! over many randomly generated cases; failures print the case seed and
+//! the exact environment to replay just that case).
+//!
+//! Reproduction: a failure prints a `DRRL_PROP_SEED=… DRRL_PROP_CASES=1
+//! cargo test …` command. `DRRL_PROP_SEED` overrides the base seed
+//! (default 0xBEEF) and `DRRL_PROP_CASES` overrides every property's
+//! case count — so the printed command re-runs precisely the failing
+//! case, and CI can crank the sweep wider without a code change.
 
 use drrl::attention::{attention_matrix, AttnInputs};
 use drrl::linalg::{matmul, svd, top_k_svd, Mat};
 use drrl::spectral::{ner, rank_for_energy, rank_transition_perturbation};
 use drrl::util::Pcg32;
 
-/// Run `prop` over `cases` random seeds; panic with the failing seed.
+fn env_u64(name: &str, default: u64) -> u64 {
+    match std::env::var(name) {
+        Ok(v) => v
+            .trim()
+            .parse()
+            .unwrap_or_else(|_| panic!("{name} must be a u64, got {v:?}")),
+        Err(_) => default,
+    }
+}
+
+/// Run `prop` over `cases` random seeds (base seed and case count
+/// overridable via `DRRL_PROP_SEED` / `DRRL_PROP_CASES`); rethrow the
+/// first failure after printing the one-command reproduction.
 fn forall_seeds(cases: u64, prop: impl Fn(&mut Pcg32)) {
+    let base = env_u64("DRRL_PROP_SEED", 0xBEEF);
+    let cases = env_u64("DRRL_PROP_CASES", cases);
     for seed in 0..cases {
-        let mut rng = Pcg32::seeded(0xBEEF ^ seed);
+        let case_seed = base ^ seed;
+        let mut rng = Pcg32::seeded(case_seed);
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
-        if result.is_err() {
-            panic!("property failed at seed {seed}");
+        if let Err(cause) = result {
+            eprintln!(
+                "property failed at case seed {case_seed} (base {base}, case {seed}); \
+                 reproduce just this case with:\n  DRRL_PROP_SEED={case_seed} \
+                 DRRL_PROP_CASES=1 cargo test --test proptest_invariants"
+            );
+            std::panic::resume_unwind(cause);
         }
     }
 }
