@@ -30,7 +30,7 @@
 //! `target/release/`). `DRRL_BENCH_QUICK=1` shrinks the request count.
 
 use drrl::attention::MhsaWeights;
-use drrl::bench_harness::{banner, quick_mode};
+use drrl::bench_harness::{banner, bench_json_path, quick_mode, Bench};
 use drrl::coordinator::{
     BatchPolicy, CompletionQueue, ControllerConfig, EngineConfig, ErrorKind, PolicySource,
     ServingEngine, SubmitOptions,
@@ -149,6 +149,9 @@ fn main() -> anyhow::Result<()> {
         "staged pipeline amortizes SVD dispatches and shard locks per drained batch",
     );
     let n_requests = if quick_mode() { 8 } else { 24 };
+    // Scenario metrics are recorded into a Bench so `--bench-json` can
+    // emit the machine-readable BENCH_engine.json snapshot.
+    let mut snap = Bench::new();
     let reg = Arc::new(ArtifactRegistry::open_host(KERNEL_N, HEAD_DIM));
     let mut rng = Pcg32::seeded(0x5CA1E);
     let layers: Vec<MhsaWeights> =
@@ -180,6 +183,8 @@ fn main() -> anyhow::Result<()> {
     let tpn = n_requests as f64 / tn;
     println!("{n_multi}-worker      : {tn:>7.2}s  {tpn:>6.2} req/s");
     println!("speedup: {:.2}× (target ≥ 1.5× on a multi-core host)\n", t1 / tn);
+    snap.record("worker_scaling single-worker", n_requests as u64, t1 * 1e3, Some(tp1));
+    snap.record("worker_scaling 4-worker", n_requests as u64, tn * 1e3, Some(tpn));
 
     println!("── same-layer contention (cross-request pipeline) ──");
     let same_layer: Vec<(Vec<f64>, usize)> = (0..n_requests)
@@ -201,6 +206,18 @@ fn main() -> anyhow::Result<()> {
         "speedup: {:.2}×  SVD-dispatch reduction: {pw_s}→{pw_c}  lock reduction: \
          {locks_s}→{locks_c}\n",
         ts / tc
+    );
+    snap.record(
+        "same_layer per-request",
+        n_requests as u64,
+        ts * 1e3,
+        Some(n_requests as f64 / ts),
+    );
+    snap.record(
+        "same_layer co-batched",
+        n_requests as u64,
+        tc * 1e3,
+        Some(n_requests as f64 / tc),
     );
 
     println!("── completion-queue multiplexing (single client thread) ──");
@@ -279,6 +296,12 @@ fn main() -> anyhow::Result<()> {
         engine.metrics.expired(),
         engine.metrics.over_drained()
     );
+    snap.record(
+        "completion_queue mux",
+        n_flight as u64,
+        mux_wall * 1e3,
+        Some((ok + cancelled + expired - submit_expired) as f64 / mux_wall),
+    );
     drop(engine);
 
     println!("── host LM parse cache (lm_logits) ──");
@@ -304,11 +327,18 @@ fn main() -> anyhow::Result<()> {
     println!("cached params : {cached_ms:>8.3} ms/call");
     println!("re-parsed     : {uncached_ms:>8.3} ms/call");
     println!("parse-cache speedup: {:.2}×", uncached_ms / cached_ms);
+    snap.record("lm_parse_cache cached", iters as u64, cached_ms, None);
+    snap.record("lm_parse_cache re-parsed", iters as u64, uncached_ms, None);
 
     // Typed per-op execute counters (the stats()-BTreeMap replacement):
     // the same counters the engines folded into their Metrics::report().
     println!("\n── backend op counters ──");
     println!("attention registry : {}", reg.ops().summary());
     println!("mux registry       : {}", mux_reg.ops().summary());
+
+    if let Some(path) = bench_json_path() {
+        snap.write_json(&path, "engine_scaling")?;
+        println!("JSON → {}", path.display());
+    }
     Ok(())
 }

@@ -4,10 +4,11 @@
 //! dispatch overhead.
 
 use drrl::attention::{attention_matrix, full_attention, AttnInputs};
-use drrl::bench_harness::{banner, quick_mode, Bench};
+use drrl::bench_harness::{banner, bench_json_path, quick_mode, Bench};
 use drrl::coordinator::{BatchPolicy, DynamicBatcher};
 use drrl::linalg::{
-    batched_partial_svd, extend, matmul, spectral_norm_fast, top_k_svd, Mat,
+    batched_partial_svd, extend, matmul, matmul_bt, partial_svd_with, spectral_norm_fast,
+    top_k_svd, Mat, ProbeKernel,
 };
 use drrl::runtime::{ArtifactRegistry, Manifest};
 use drrl::util::Pcg32;
@@ -25,12 +26,27 @@ fn main() -> anyhow::Result<()> {
     b.case("matmul 256x256x256", || {
         std::hint::black_box(matmul(&a256, &b256));
     });
-    b.throughput(2.0 * 256f64.powi(3) / 1e9); // GFLOP per iter
+    b.gflops(2.0 * 256f64.powi(3) / 1e9);
+
+    b.case("matmul_bt 256x256x256", || {
+        std::hint::black_box(matmul_bt(&a256, &b256));
+    });
+    b.gflops(2.0 * 256f64.powi(3) / 1e9);
 
     b.case("matmul_at 256x256x256", || {
         std::hint::black_box(drrl::linalg::matmul_at(&a256, &b256));
     });
-    b.throughput(2.0 * 256f64.powi(3) / 1e9);
+    b.gflops(2.0 * 256f64.powi(3) / 1e9);
+
+    // Rank-bucket widths: the monomorphized micro-kernel hot path
+    // (low-rank apply / probe projections are skinny-N products).
+    for &w in &[8usize, 16, 24, 32, 48, 64] {
+        let bw = Mat::randn(256, w, 1.0, &mut rng);
+        b.case(&format!("matmul 256x256x{w} (bucket)"), || {
+            std::hint::black_box(matmul(&a256, &bw));
+        });
+        b.gflops(2.0 * 256.0 * 256.0 * w as f64 / 1e9);
+    }
 
     let a128 = Mat::randn(128, 128, 1.0, &mut rng);
     b.case("top_k_svd n=128 k=64", || {
@@ -38,6 +54,14 @@ fn main() -> anyhow::Result<()> {
     });
     b.case("top_k_svd n=128 k=16", || {
         std::hint::black_box(top_k_svd(&a128, 16, 1));
+    });
+    // Fused (packed-A reuse) vs direct probe pass — same bits, different
+    // wall clock; the gap is the amortized packing cost.
+    b.case("partial_svd fused probe n=128 k=16", || {
+        std::hint::black_box(partial_svd_with(&a128, 16, 8, 2, 1, ProbeKernel::Fused));
+    });
+    b.case("partial_svd direct probe n=128 k=16", || {
+        std::hint::black_box(partial_svd_with(&a128, 16, 8, 2, 1, ProbeKernel::Direct));
     });
     let mats: Vec<Mat> = (0..8).map(|i| Mat::randn(128, 128, 1.0, &mut Pcg32::seeded(i))).collect();
     b.case("batched_partial_svd 8x(128,k=32)", || {
@@ -112,5 +136,9 @@ fn main() -> anyhow::Result<()> {
 
     b.write_csv(Path::new("bench_out/microbench.csv"))?;
     println!("CSV → bench_out/microbench.csv");
+    if let Some(path) = bench_json_path() {
+        b.write_json(&path, "microbench")?;
+        println!("JSON → {}", path.display());
+    }
     Ok(())
 }

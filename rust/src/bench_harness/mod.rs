@@ -1,8 +1,10 @@
 //! Self-built micro/macro benchmark harness (criterion is unavailable in
-//! the offline build): warmup, timed iterations, mean/p50/p99, throughput
-//! and CSV emission for the experiment benches in `rust/benches/`.
+//! the offline build): warmup, timed iterations, mean/p50/p99, throughput,
+//! CSV emission, and a machine-readable JSON snapshot (`write_json`) for
+//! the committed `BENCH_*.json` perf trajectory.
 
-use crate::util::{LatencyStats, Stopwatch};
+use crate::util::{global_pool, Json, LatencyStats, Stopwatch};
+use std::collections::BTreeMap;
 use std::io::Write;
 use std::path::Path;
 
@@ -17,6 +19,9 @@ pub struct BenchResult {
     pub min_ms: f64,
     /// Optional items/second (set via `Bench::throughput`).
     pub throughput: Option<f64>,
+    /// Optional GFLOP/s (set via `Bench::gflops` where the case declares
+    /// a flop count).
+    pub gflops: Option<f64>,
 }
 
 impl BenchResult {
@@ -25,9 +30,10 @@ impl BenchResult {
             .throughput
             .map(|t| format!(" {t:>12.1}/s"))
             .unwrap_or_default();
+        let gf = self.gflops.map(|g| format!(" {g:>8.2} GFLOP/s")).unwrap_or_default();
         format!(
-            "{:<40} {:>8} iters  mean {:>10.4}ms  p50 {:>10.4}ms  p99 {:>10.4}ms{}",
-            self.name, self.iters, self.mean_ms, self.p50_ms, self.p99_ms, tput
+            "{:<40} {:>8} iters  mean {:>10.4}ms  p50 {:>10.4}ms  p99 {:>10.4}ms{}{}",
+            self.name, self.iters, self.mean_ms, self.p50_ms, self.p99_ms, tput, gf
         )
     }
 }
@@ -88,6 +94,7 @@ impl Bench {
             p99_ms: stats.p99(),
             min_ms: stats.min(),
             throughput: None,
+            gflops: None,
         });
         println!("{}", self.results.last().unwrap().row());
         self.results.last().unwrap()
@@ -99,6 +106,32 @@ impl Bench {
             last.throughput = Some(items_per_iter / (last.mean_ms / 1e3));
             println!("  ↳ {:.1} items/s", last.throughput.unwrap());
         }
+    }
+
+    /// Attach a GFLOP/s figure (declared GFLOP per iteration) to the last
+    /// case.
+    pub fn gflops(&mut self, gflop_per_iter: f64) {
+        if let Some(last) = self.results.last_mut() {
+            last.gflops = Some(gflop_per_iter / (last.mean_ms / 1e3));
+            println!("  ↳ {:.2} GFLOP/s", last.gflops.unwrap());
+        }
+    }
+
+    /// Record an externally measured scenario metric (macro benches that
+    /// time one structured run rather than a tight loop): p50/p99/min are
+    /// pinned to the mean.
+    pub fn record(&mut self, name: &str, iters: u64, mean_ms: f64, throughput: Option<f64>) {
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ms,
+            p50_ms: mean_ms,
+            p99_ms: mean_ms,
+            min_ms: mean_ms,
+            throughput,
+            gflops: None,
+        });
+        println!("{}", self.results.last().unwrap().row());
     }
 
     /// Write all results as CSV.
@@ -123,6 +156,74 @@ impl Bench {
         }
         Ok(())
     }
+
+    /// Serialize all results as the machine-readable `BENCH_*.json`
+    /// schema (see CI's bench-snapshot leg and `drrl bench-check`):
+    /// schema_version, bench name, quick flag, host fingerprint, and one
+    /// entry per case with ns/iter plus the full timing row.
+    pub fn to_json(&self, bench_name: &str) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("schema_version".into(), Json::Num(1.0));
+        root.insert("bench".into(), Json::Str(bench_name.to_string()));
+        root.insert("quick".into(), Json::Bool(quick_mode()));
+        let mut host = BTreeMap::new();
+        host.insert("os".into(), Json::Str(std::env::consts::OS.to_string()));
+        host.insert("arch".into(), Json::Str(std::env::consts::ARCH.to_string()));
+        let n_cpus =
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) as f64;
+        host.insert("n_cpus".into(), Json::Num(n_cpus));
+        host.insert("pool_threads".into(), Json::Num(global_pool().size() as f64));
+        root.insert("host".into(), Json::Obj(host));
+        let cases: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                let mut c = BTreeMap::new();
+                c.insert("name".into(), Json::Str(r.name.clone()));
+                c.insert("iters".into(), Json::Num(r.iters as f64));
+                c.insert("ns_per_iter".into(), Json::Num(r.mean_ms * 1e6));
+                c.insert("mean_ms".into(), Json::Num(r.mean_ms));
+                c.insert("p50_ms".into(), Json::Num(r.p50_ms));
+                c.insert("p99_ms".into(), Json::Num(r.p99_ms));
+                c.insert("min_ms".into(), Json::Num(r.min_ms));
+                if let Some(t) = r.throughput {
+                    c.insert("throughput_per_s".into(), Json::Num(t));
+                }
+                if let Some(g) = r.gflops {
+                    c.insert("gflops".into(), Json::Num(g));
+                }
+                Json::Obj(c)
+            })
+            .collect();
+        root.insert("cases".into(), Json::Arr(cases));
+        Json::Obj(root)
+    }
+
+    /// Write the JSON snapshot to `path` (pretty-printed: the files are
+    /// committed and diffed as the repo's perf trajectory).
+    pub fn write_json(&self, path: &Path, bench_name: &str) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_json(bench_name).to_string_pretty())
+    }
+}
+
+/// Parse `--bench-json <path>` (or `--bench-json=path`) from argv — the
+/// benches write their JSON snapshot there when present.
+pub fn bench_json_path() -> Option<std::path::PathBuf> {
+    let args: Vec<String> = std::env::args().collect();
+    for (i, a) in args.iter().enumerate() {
+        if a == "--bench-json" {
+            return args.get(i + 1).map(std::path::PathBuf::from);
+        }
+        if let Some(rest) = a.strip_prefix("--bench-json=") {
+            return Some(std::path::PathBuf::from(rest));
+        }
+    }
+    None
 }
 
 /// Write arbitrary experiment rows (non-timing tables/series) as CSV.
@@ -169,6 +270,36 @@ mod tests {
         assert_eq!(b.results.len(), 1);
         assert!(b.results[0].iters >= 5);
         assert!(acc > 0);
+    }
+
+    #[test]
+    fn json_snapshot_schema() {
+        let mut b = Bench { measure_secs: 0.01, warmup_iters: 0, ..Default::default() };
+        // Enough work that mean_ms is strictly positive on any clock, so
+        // the derived gflops stays finite.
+        let mut acc = 0u64;
+        b.case("noop", || {
+            for i in 0..50_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+        });
+        assert!(acc > 0);
+        b.gflops(0.001);
+        let j = b.to_json("unit");
+        assert_eq!(j.get("schema_version").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(j.get("bench").and_then(|v| v.as_str()), Some("unit"));
+        assert!(j.get("host").and_then(|h| h.get("n_cpus")).is_some());
+        let cases = j.get("cases").and_then(|c| c.as_arr()).unwrap();
+        assert_eq!(cases.len(), 1);
+        let c0 = &cases[0];
+        assert_eq!(c0.get("name").and_then(|v| v.as_str()), Some("noop"));
+        for field in ["iters", "ns_per_iter", "mean_ms", "p50_ms", "p99_ms", "min_ms", "gflops"] {
+            let v = c0.get(field).and_then(|v| v.as_f64()).unwrap();
+            assert!(v.is_finite(), "{field}");
+        }
+        // Round-trips through the parser (pretty output is valid JSON).
+        let reparsed = crate::util::Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(reparsed.get("bench").and_then(|v| v.as_str()), Some("unit"));
     }
 
     #[test]

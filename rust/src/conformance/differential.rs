@@ -335,6 +335,73 @@ pub fn batched_vs_serial_failures(sc: &Scenario) -> Vec<String> {
     compare_runs("batched-vs-serial", &batched, &serial, true)
 }
 
+/// Kernel-path pairing: route the probe's matmuls through the fused
+/// (packed-A reuse) and direct (`matmul_at`) paths and demand bit
+/// identity, on scenario-shaped data.
+///
+/// Three checks per seed:
+/// 1. `partial_svd_with` Fused vs Direct on an n×n attention-shaped
+///    matrix (subspace depth varied by the scenario's `probe_kernel`
+///    knob) — U/σ/V must agree to the bit;
+/// 2. `PackedAt::matmul_at` vs `matmul_at` on a rank-grid-width RHS —
+///    bit identity of the raw product;
+/// 3. the packed GEMM core vs the `matmul_naive` oracle at 1e-9
+///    absolute (values may legally differ in bits from the oracle —
+///    only the paired kernel paths are held to bit identity).
+pub fn probe_kernel_failures(sc: &Scenario) -> Vec<String> {
+    use crate::linalg::matmul::matmul_naive;
+    use crate::linalg::{matmul, matmul_at, partial_svd_with, Mat, PackedAt, ProbeKernel};
+    use crate::util::Pcg32;
+
+    let mut failures = Vec::new();
+    let mut rng = Pcg32::new(sc.seed ^ 0x9106_be75, 3);
+    let a = Mat::randn(sc.n, sc.n, 1.0, &mut rng);
+
+    // 1. Fused vs direct probe pass.
+    let n_iter = match sc.probe_kernel {
+        ProbeKernel::Fused => 2,
+        ProbeKernel::Direct => 1,
+    };
+    let k = sc.r_max().min(sc.n);
+    let svd_seed = sc.seed ^ 0x0b5e;
+    let f = partial_svd_with(&a, k, 8, n_iter, svd_seed, ProbeKernel::Fused);
+    let d = partial_svd_with(&a, k, 8, n_iter, svd_seed, ProbeKernel::Direct);
+    if f.s.iter().zip(&d.s).any(|(x, y)| x.to_bits() != y.to_bits())
+        || f.u.data().iter().zip(d.u.data()).any(|(x, y)| x.to_bits() != y.to_bits())
+        || f.v.data().iter().zip(d.v.data()).any(|(x, y)| x.to_bits() != y.to_bits())
+    {
+        failures.push(format!(
+            "probe-kernel: fused vs direct partial_svd differ in bits \
+             (n={} k={k} n_iter={n_iter})",
+            sc.n
+        ));
+    }
+
+    // 2. Packed vs direct Aᵀ·B on a rank-grid-width RHS.
+    let w = sc.rank_grid[0].min(sc.n).max(1);
+    let q = Mat::randn(sc.n, w, 1.0, &mut rng);
+    let direct = matmul_at(&a, &q);
+    let packed = PackedAt::pack(&a, w).matmul_at(&q);
+    if direct.data().iter().zip(packed.data()).any(|(x, y)| x.to_bits() != y.to_bits()) {
+        failures.push(format!(
+            "probe-kernel: PackedAt::matmul_at differs in bits from matmul_at (n={} w={w})",
+            sc.n
+        ));
+    }
+
+    // 3. Packed core vs naive oracle (tolerance, not bits).
+    let got = matmul(&a, &q);
+    let want = matmul_naive(&a, &q);
+    if !got.allclose(&want, 1e-9) {
+        failures.push(format!(
+            "probe-kernel: packed matmul drifts from the naive oracle beyond 1e-9 \
+             (n={} w={w})",
+            sc.n
+        ));
+    }
+    failures
+}
+
 /// Pairing 3: N workers vs 1 worker (order-insensitive scenarios only).
 pub fn workers_failures(sc: &Scenario) -> Vec<String> {
     if !sc.order_insensitive() {
@@ -374,6 +441,7 @@ mod tests {
         failures.extend(batched_vs_serial_failures(&sc));
         failures.extend(workers_failures(&sc));
         failures.extend(sim_ledger_failures(&sc, 0.0));
+        failures.extend(probe_kernel_failures(&sc));
         assert!(failures.is_empty(), "seed 1 failures:\n{}", failures.join("\n"));
     }
 

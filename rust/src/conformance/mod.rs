@@ -19,7 +19,11 @@
 //!   trace (observed via [`crate::coordinator::PipelineHooks`]) must
 //!   stay a legal permutation with identical per-request schedules,
 //!   and racing cancels/deadlines must resolve every ticket with a
-//!   typed lifecycle error.
+//!   typed lifecycle error;
+//! * **fused vs direct probe kernels** — the probe's matmuls through
+//!   the packed-A-reuse path and the per-call `matmul_at` path must be
+//!   bit-identical, and the packed GEMM core must stay within 1e-9 of
+//!   the naive oracle.
 //!
 //! Every failure carries its seed; `drrl fuzz --seed N` replays it
 //! deterministically. `CONFORMANCE.md` at the repo root catalogues the
@@ -36,7 +40,8 @@ pub mod perturb;
 pub mod scenario;
 
 pub use differential::{
-    batched_vs_serial_failures, host_vs_sim_failures, sim_ledger_failures, workers_failures,
+    batched_vs_serial_failures, host_vs_sim_failures, probe_kernel_failures, sim_ledger_failures,
+    workers_failures,
 };
 pub use lint::{run_lint, scan_source, LintViolation};
 pub use perturb::{cancel_race_failures, perturbation_failures, validate_trace};
@@ -80,6 +85,7 @@ pub fn run_seed(seed: u64) -> Result<(), FailureReport> {
     failures.extend(sim_ledger_failures(&sc, 0.0));
     failures.extend(perturbation_failures(&sc));
     failures.extend(cancel_race_failures(&sc));
+    failures.extend(probe_kernel_failures(&sc));
     if failures.is_empty() {
         Ok(())
     } else {

@@ -9,7 +9,7 @@
 
 use crate::attention::MhsaWeights;
 use crate::coordinator::{BatchPolicy, ControllerConfig, PolicySource};
-use crate::linalg::Mat;
+use crate::linalg::{Mat, ProbeKernel};
 use crate::sim::DeviceProfile;
 use crate::util::Pcg32;
 use std::time::Duration;
@@ -73,6 +73,11 @@ pub struct Scenario {
     pub profile: DeviceProfile,
     /// Target layer per request, in submission order.
     pub request_layers: Vec<usize>,
+    /// Which kernel path the probe's matmuls take on this scenario's
+    /// side of the fused-vs-direct differential (`probe_kernel_failures`
+    /// exercises both regardless; this knob varies the subspace-iteration
+    /// depth the pairing runs at).
+    pub probe_kernel: ProbeKernel,
 }
 
 impl Scenario {
@@ -117,6 +122,11 @@ impl Scenario {
         let request_layers =
             (0..n_requests).map(|_| rng.below(n_layers as u32) as usize).collect();
 
+        // Drawn LAST so every earlier field keeps its pre-existing
+        // seed→value mapping (pinned fuzz corpora stay meaningful).
+        let probe_kernel =
+            if rng.below(2) == 0 { ProbeKernel::Fused } else { ProbeKernel::Direct };
+
         Scenario {
             seed,
             n,
@@ -132,6 +142,7 @@ impl Scenario {
             overdrain,
             profile,
             request_layers,
+            probe_kernel,
         }
     }
 
@@ -197,7 +208,7 @@ impl Scenario {
     pub fn describe(&self) -> String {
         format!(
             "n={} d_head={} heads={} layers={} grid={:?} seg={} trust={} policy={} \
-             workers={} max_batch={} overdrain={} profile={} requests={}",
+             workers={} max_batch={} overdrain={} profile={} requests={} probe={:?}",
             self.n,
             self.head_dim,
             self.n_heads,
@@ -211,6 +222,7 @@ impl Scenario {
             self.overdrain,
             self.profile.name,
             self.n_requests(),
+            self.probe_kernel,
         )
     }
 }

@@ -1,0 +1,611 @@
+//! Register-tiled, panel-packed GEMM core shared by every matmul
+//! variant, plus the blocked dot/axpy primitives the QR and power-iter
+//! paths sit on.
+//!
+//! # Architecture
+//!
+//! The design is the classic BLIS decomposition scaled to this crate's
+//! problem sizes (n ≤ a few hundred, the low-rank hot path n ∈
+//! {8..64}):
+//!
+//! * the depth dimension is blocked at [`KC`] = 256;
+//! * per depth block, the right-hand operand is packed once into
+//!   contiguous kc×[`NR`] column panels (panel-major: panel `jp`, then
+//!   depth row `p`, then `NR` = 8 contiguous doubles, zero-padded past
+//!   the matrix edge);
+//! * an [`MR`]×[`NR`] = 4×8 register-accumulator micro-kernel walks the
+//!   packed panel with a branch-free inner loop — four broadcast
+//!   multiply-adds per packed row into `[f64; 8]` accumulators that the
+//!   compiler keeps in vector registers (AVX-512: one zmm per row) —
+//!   and only bounds the *writeback* by the row/column remainders;
+//! * for the rank-bucket widths (n ∈ {8, 16, 24, 32, 48, 64}, i.e.
+//!   n = NP·NR, NP ≤ 8) the panel-count loop is monomorphized via
+//!   `gemm_rows_bucket::<NP>`, so the low-rank apply and the probe's
+//!   skinny products run a kernel whose N extent is compile-known.
+//!
+//! Row remainders clamp the extra A-row pointers back to the tile's
+//! first row (they read valid memory; their accumulator rows are
+//! discarded by the `mr`-bounded writeback). Column remainders are
+//! zero-padded in the panel and clipped by the `jn`-bounded writeback.
+//!
+//! # Determinism contract
+//!
+//! Every partition here — KC blocks, MR tiles, NR panels, the
+//! [`K_CHUNK`] reduction chunks of the Aᵀ·B path — is a pure function
+//! of the problem shape, never of pool size or calling context. For a
+//! fixed output element the accumulation order is: depth blocks
+//! ascending, `p` ascending within each block (tile and panel
+//! membership do not reorder per-element sums), partial-C chunks
+//! reduced in ascending chunk order. Consequently parallel and serial
+//! execution, any pool size, and the packed vs. unpacked probe paths
+//! are bit-identical by construction — the property the conformance
+//! layer's `f64::to_bits` pairings assert. Absolute values may differ
+//! from other kernel versions (and from `matmul_naive`): bit-identity
+//! is pairwise-per-build, not a cross-version golden.
+//!
+//! # 0·inf / NaN semantics
+//!
+//! The old scalar kernels skipped zero multiplicands
+//! (`if av == 0.0 { continue; }`), which silently dropped `0 × ±inf`
+//! and `0 × NaN` products. The packed core is branch-free: those
+//! products now propagate NaN per IEEE-754, matching `matmul_naive`'s
+//! documented role as a *finite-data* oracle.
+
+use super::mat::Mat;
+use crate::util::global_pool;
+use crate::util::threadpool::SendPtr;
+
+/// Micro-kernel row extent (A rows per tile).
+pub const MR: usize = 4;
+/// Micro-kernel column extent (packed-panel width, f64 lanes).
+pub const NR: usize = 8;
+/// Depth blocking: the packed panel covers at most KC rows of B.
+pub const KC: usize = 256;
+/// Depth partition of the parallel Aᵀ·B reduction (see `matmul_at`).
+pub const K_CHUNK: usize = 64;
+
+// ---------------------------------------------------------------------
+// Packing
+// ---------------------------------------------------------------------
+
+/// Pack rows [p0, p0+kc) of row-major `b` (row stride `n`) into
+/// panel-major kc×NR panels, zero-padding the last panel past column n.
+pub(super) fn pack_b(b: &[f64], n: usize, p0: usize, kc: usize, bp: &mut [f64], n_panels: usize) {
+    for jp in 0..n_panels {
+        let j0 = jp * NR;
+        let jn = (n - j0).min(NR);
+        let panel = &mut bp[jp * kc * NR..(jp + 1) * kc * NR];
+        for p in 0..kc {
+            let brow = &b[(p0 + p) * n + j0..(p0 + p) * n + j0 + jn];
+            let dst = &mut panel[p * NR..(p + 1) * NR];
+            dst[..jn].copy_from_slice(brow);
+            dst[jn..].fill(0.0);
+        }
+    }
+}
+
+/// Pack columns [p0, p0+kc) of row-major `b` (nb×k: the transposed
+/// operand of A·Bᵀ) into the same panel layout `pack_b` would produce
+/// for Bᵀ.
+pub(super) fn pack_bt(
+    b: &[f64],
+    k: usize,
+    nb: usize,
+    p0: usize,
+    kc: usize,
+    bp: &mut [f64],
+    n_panels: usize,
+) {
+    for jp in 0..n_panels {
+        let j0 = jp * NR;
+        let jn = (nb - j0).min(NR);
+        let panel = &mut bp[jp * kc * NR..(jp + 1) * kc * NR];
+        for p in 0..kc {
+            let dst = &mut panel[p * NR..(p + 1) * NR];
+            for (x, d) in dst[..jn].iter_mut().enumerate() {
+                *d = b[(j0 + x) * k + (p0 + p)];
+            }
+            dst[jn..].fill(0.0);
+        }
+    }
+}
+
+/// Pack rows [p0, p0+kc) of row-major `a` (k×m: the transposed left
+/// operand of Aᵀ·B) into tile-major kc×MR tiles, zero-padding the last
+/// tile past column m.
+pub(super) fn pack_at(
+    a: &[f64],
+    m: usize,
+    p0: usize,
+    kc: usize,
+    ap: &mut [f64],
+    n_tiles: usize,
+) {
+    for t in 0..n_tiles {
+        let i0 = t * MR;
+        let mr = (m - i0).min(MR);
+        let tile = &mut ap[t * kc * MR..(t + 1) * kc * MR];
+        for p in 0..kc {
+            let arow = &a[(p0 + p) * m + i0..(p0 + p) * m + i0 + mr];
+            let dst = &mut tile[p * MR..(p + 1) * MR];
+            dst[..mr].copy_from_slice(arow);
+            dst[mr..].fill(0.0);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Micro-kernels
+// ---------------------------------------------------------------------
+
+/// 4×8 micro-kernel, A rows streamed unpacked (each `aN` starts at its
+/// row's depth offset; remainder rows are clamped duplicates whose
+/// accumulators the writeback discards).
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn kern(
+    a0: &[f64],
+    a1: &[f64],
+    a2: &[f64],
+    a3: &[f64],
+    panel: &[f64],
+    kc: usize,
+    c: &mut [f64],
+    cs: usize,
+    c0: usize,
+    mr: usize,
+    jn: usize,
+) {
+    let mut acc0 = [0.0f64; NR];
+    let mut acc1 = [0.0f64; NR];
+    let mut acc2 = [0.0f64; NR];
+    let mut acc3 = [0.0f64; NR];
+    let (a0, a1, a2, a3) = (&a0[..kc], &a1[..kc], &a2[..kc], &a3[..kc]);
+    let panel = &panel[..kc * NR];
+    for p in 0..kc {
+        let bv = &panel[p * NR..p * NR + NR];
+        let (s0, s1, s2, s3) = (a0[p], a1[p], a2[p], a3[p]);
+        for x in 0..NR {
+            let b = bv[x];
+            acc0[x] += s0 * b;
+            acc1[x] += s1 * b;
+            acc2[x] += s2 * b;
+            acc3[x] += s3 * b;
+        }
+    }
+    writeback(c, cs, c0, mr, jn, &acc0, &acc1, &acc2, &acc3);
+}
+
+/// 4×8 micro-kernel over a packed A tile (kc×MR, from [`pack_at`]).
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn kern_packed(
+    tile: &[f64],
+    panel: &[f64],
+    kc: usize,
+    c: &mut [f64],
+    cs: usize,
+    c0: usize,
+    mr: usize,
+    jn: usize,
+) {
+    let mut acc0 = [0.0f64; NR];
+    let mut acc1 = [0.0f64; NR];
+    let mut acc2 = [0.0f64; NR];
+    let mut acc3 = [0.0f64; NR];
+    let tile = &tile[..kc * MR];
+    let panel = &panel[..kc * NR];
+    for p in 0..kc {
+        let bv = &panel[p * NR..p * NR + NR];
+        let av = &tile[p * MR..p * MR + MR];
+        let (s0, s1, s2, s3) = (av[0], av[1], av[2], av[3]);
+        for x in 0..NR {
+            let b = bv[x];
+            acc0[x] += s0 * b;
+            acc1[x] += s1 * b;
+            acc2[x] += s2 * b;
+            acc3[x] += s3 * b;
+        }
+    }
+    writeback(c, cs, c0, mr, jn, &acc0, &acc1, &acc2, &acc3);
+}
+
+/// `mr`/`jn`-bounded accumulator writeback shared by both kernels.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn writeback(
+    c: &mut [f64],
+    cs: usize,
+    c0: usize,
+    mr: usize,
+    jn: usize,
+    acc0: &[f64; NR],
+    acc1: &[f64; NR],
+    acc2: &[f64; NR],
+    acc3: &[f64; NR],
+) {
+    let crow = &mut c[c0..c0 + jn];
+    for x in 0..jn {
+        crow[x] += acc0[x];
+    }
+    if mr > 1 {
+        let crow = &mut c[c0 + cs..c0 + cs + jn];
+        for x in 0..jn {
+            crow[x] += acc1[x];
+        }
+    }
+    if mr > 2 {
+        let crow = &mut c[c0 + 2 * cs..c0 + 2 * cs + jn];
+        for x in 0..jn {
+            crow[x] += acc2[x];
+        }
+    }
+    if mr > 3 {
+        let crow = &mut c[c0 + 3 * cs..c0 + 3 * cs + jn];
+        for x in 0..jn {
+            crow[x] += acc3[x];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Row-sweep drivers
+// ---------------------------------------------------------------------
+
+/// General row sweep: accumulate rows [r0, r1) of C += A[·, p0..p0+kc] ·
+/// B_packed for a runtime panel count (jn-bounded final panel).
+#[allow(clippy::too_many_arguments)]
+fn gemm_rows(
+    a: &[f64],
+    astride: usize,
+    c: &mut [f64],
+    n: usize,
+    r0: usize,
+    r1: usize,
+    p0: usize,
+    kc: usize,
+    bp: &[f64],
+    n_panels: usize,
+) {
+    for i0 in (r0..r1).step_by(MR) {
+        let mr = (r1 - i0).min(MR);
+        let a0 = &a[i0 * astride + p0..];
+        let a1 = &a[(i0 + usize::from(mr > 1)) * astride + p0..];
+        let a2 = &a[(i0 + if mr > 2 { 2 } else { 0 }) * astride + p0..];
+        let a3 = &a[(i0 + if mr > 3 { 3 } else { 0 }) * astride + p0..];
+        for jp in 0..n_panels {
+            let j0 = jp * NR;
+            let jn = (n - j0).min(NR);
+            kern(
+                a0,
+                a1,
+                a2,
+                a3,
+                &bp[jp * kc * NR..(jp + 1) * kc * NR],
+                kc,
+                c,
+                n,
+                i0 * n + j0,
+                mr,
+                jn,
+            );
+        }
+    }
+}
+
+/// Rank-bucket row sweep: n = NP·NR exactly, panel count compile-known,
+/// every panel full-width. Bit-identical to [`gemm_rows`] (same
+/// accumulation order per element) — only the control flow is
+/// monomorphized.
+#[allow(clippy::too_many_arguments)]
+fn gemm_rows_bucket<const NP: usize>(
+    a: &[f64],
+    astride: usize,
+    c: &mut [f64],
+    r0: usize,
+    r1: usize,
+    p0: usize,
+    kc: usize,
+    bp: &[f64],
+) {
+    let n = NP * NR;
+    for i0 in (r0..r1).step_by(MR) {
+        let mr = (r1 - i0).min(MR);
+        let a0 = &a[i0 * astride + p0..];
+        let a1 = &a[(i0 + usize::from(mr > 1)) * astride + p0..];
+        let a2 = &a[(i0 + if mr > 2 { 2 } else { 0 }) * astride + p0..];
+        let a3 = &a[(i0 + if mr > 3 { 3 } else { 0 }) * astride + p0..];
+        for jp in 0..NP {
+            kern(
+                a0,
+                a1,
+                a2,
+                a3,
+                &bp[jp * kc * NR..(jp + 1) * kc * NR],
+                kc,
+                c,
+                n,
+                i0 * n + jp * NR,
+                mr,
+                NR,
+            );
+        }
+    }
+}
+
+/// Row-sweep dispatch: route the `KernelShape::rank_bucket` widths
+/// (n = NP·NR ≤ 64) to their monomorphized variant, everything else to
+/// the general sweep.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn gemm_rows_dispatch(
+    a: &[f64],
+    astride: usize,
+    c: &mut [f64],
+    n: usize,
+    r0: usize,
+    r1: usize,
+    p0: usize,
+    kc: usize,
+    bp: &[f64],
+    n_panels: usize,
+) {
+    if n != 0 && n % NR == 0 && n <= 8 * NR {
+        match n / NR {
+            1 => gemm_rows_bucket::<1>(a, astride, c, r0, r1, p0, kc, bp),
+            2 => gemm_rows_bucket::<2>(a, astride, c, r0, r1, p0, kc, bp),
+            3 => gemm_rows_bucket::<3>(a, astride, c, r0, r1, p0, kc, bp),
+            4 => gemm_rows_bucket::<4>(a, astride, c, r0, r1, p0, kc, bp),
+            5 => gemm_rows_bucket::<5>(a, astride, c, r0, r1, p0, kc, bp),
+            6 => gemm_rows_bucket::<6>(a, astride, c, r0, r1, p0, kc, bp),
+            7 => gemm_rows_bucket::<7>(a, astride, c, r0, r1, p0, kc, bp),
+            8 => gemm_rows_bucket::<8>(a, astride, c, r0, r1, p0, kc, bp),
+            _ => unreachable!("n ≤ 8·NR"),
+        }
+        return;
+    }
+    gemm_rows(a, astride, c, n, r0, r1, p0, kc, bp, n_panels);
+}
+
+/// Accumulate C += Aᵀ[·, ·]·B over depth rows [k0, k1) using packed A
+/// tiles and B panels (the shared core of `matmul_at` and
+/// [`PackedAt::matmul_at`]). `bp`/`ap` are scratch of at least
+/// `n_panels·KC·NR` / `n_tiles·KC·MR`.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn at_range(
+    a: &[f64],
+    m: usize,
+    b: &[f64],
+    n: usize,
+    c: &mut [f64],
+    k0: usize,
+    k1: usize,
+    bp: &mut [f64],
+    ap: &mut [f64],
+) {
+    let n_panels = n.div_ceil(NR);
+    let n_tiles = m.div_ceil(MR);
+    let mut p0 = k0;
+    while p0 < k1 {
+        let kc = (k1 - p0).min(KC);
+        pack_b(b, n, p0, kc, bp, n_panels);
+        pack_at(a, m, p0, kc, ap, n_tiles);
+        at_block(&ap[..n_tiles * kc * MR], &bp[..n_panels * kc * NR], m, n, kc, c);
+        p0 += kc;
+    }
+}
+
+/// One packed depth block of the Aᵀ·B sweep: every tile × every panel.
+fn at_block(ap: &[f64], bp: &[f64], m: usize, n: usize, kc: usize, c: &mut [f64]) {
+    let n_panels = n.div_ceil(NR);
+    let n_tiles = m.div_ceil(MR);
+    for t in 0..n_tiles {
+        let i0 = t * MR;
+        let mr = (m - i0).min(MR);
+        for jp in 0..n_panels {
+            let j0 = jp * NR;
+            let jn = (n - j0).min(NR);
+            kern_packed(
+                &ap[t * kc * MR..(t + 1) * kc * MR],
+                &bp[jp * kc * NR..(jp + 1) * kc * NR],
+                kc,
+                c,
+                n,
+                i0 * n + j0,
+                mr,
+                jn,
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Reusable packed Aᵀ operand (the fused probe pass)
+// ---------------------------------------------------------------------
+
+/// A pre-packed left operand for repeated `Aᵀ·B` products against the
+/// same A — the randomized range finder's subspace iterations hit
+/// `matmul_at(a, q)` once per iteration, and packing A's tiles once
+/// amortizes the dominant re-streaming cost across them.
+///
+/// The tile partition mirrors `matmul_at`'s exact depth partition for
+/// the shape `(k, m, n_hint)` (serial KC blocks below the 64³ work
+/// threshold, [`K_CHUNK`] reduction chunks above it), so
+/// [`PackedAt::matmul_at`] is **bit-identical** to
+/// `matmul::matmul_at(a, b)` by construction — the conformance layer
+/// fuzzes that pairing per seed.
+pub struct PackedAt {
+    k: usize,
+    m: usize,
+    n_hint: usize,
+    serial: bool,
+    /// Packed tile data per depth block, ascending `p0`; on the chunked
+    /// path blocks correspond 1:1 with the K_CHUNK partition.
+    blocks: Vec<AtBlock>,
+}
+
+struct AtBlock {
+    p0: usize,
+    kc: usize,
+    tiles: Vec<f64>,
+}
+
+impl PackedAt {
+    /// Pack `a` (k×m) for repeated Aᵀ·B products whose right-hand side
+    /// has `n_hint` columns (the partition — and therefore the summation
+    /// association — depends on the full problem shape).
+    pub fn pack(a: &Mat, n_hint: usize) -> PackedAt {
+        let (k, m) = a.shape();
+        let n_tiles = m.div_ceil(MR);
+        let serial = k * m * n_hint < 64 * 64 * 64;
+        let step = if serial { KC } else { K_CHUNK };
+        let mut blocks = Vec::new();
+        let mut p0 = 0;
+        while p0 < k {
+            let kc = (k - p0).min(step);
+            let mut tiles = vec![0.0; n_tiles * kc * MR];
+            pack_at(a.data(), m, p0, kc, &mut tiles, n_tiles);
+            blocks.push(AtBlock { p0, kc, tiles });
+            p0 += kc;
+        }
+        PackedAt { k, m, n_hint, serial, blocks }
+    }
+
+    /// C = Aᵀ·B against the packed operand. Requires the shape the pack
+    /// was built for (`b.cols() == n_hint`); bit-identical to
+    /// `matmul::matmul_at` on the unpacked A.
+    pub fn matmul_at(&self, b: &Mat) -> Mat {
+        assert_eq!(self.k, b.rows(), "inner dims for packed At·B");
+        assert_eq!(self.n_hint, b.cols(), "PackedAt was packed for n = {}", self.n_hint);
+        let (m, n) = (self.m, b.cols());
+        let n_panels = n.div_ceil(NR);
+        let mut c = Mat::zeros(m, n);
+        if self.serial {
+            let mut bp = vec![0.0; n_panels * KC * NR];
+            for blk in &self.blocks {
+                pack_b(b.data(), n, blk.p0, blk.kc, &mut bp, n_panels);
+                at_block(&blk.tiles, &bp[..n_panels * blk.kc * NR], m, n, blk.kc, c.data_mut());
+            }
+            return c;
+        }
+        // Chunked reduction: same partition, partial order and reduce
+        // order as `matmul_at` (see the determinism contract above).
+        let n_chunks = self.blocks.len();
+        let mut partials: Vec<Mat> = (0..n_chunks).map(|_| Mat::zeros(m, n)).collect();
+        let ptr = SendPtr::new(&mut partials);
+        global_pool().scoped_for(n_chunks, |ci| {
+            // SAFETY: each chunk index writes only its own partial.
+            let partial = &mut unsafe { ptr.get() }[ci];
+            let blk = &self.blocks[ci];
+            let mut bp = vec![0.0; n_panels * blk.kc * NR];
+            pack_b(b.data(), n, blk.p0, blk.kc, &mut bp, n_panels);
+            at_block(&blk.tiles, &bp, m, n, blk.kc, partial.data_mut());
+        });
+        for partial in &partials {
+            c.add_inplace(partial);
+        }
+        c
+    }
+}
+
+// ---------------------------------------------------------------------
+// Blocked vector primitives
+// ---------------------------------------------------------------------
+
+/// Blocked dot product: eight independent lanes reduced by a fixed tree,
+/// then the scalar tail. The reduction order is a pure function of the
+/// length, so results are deterministic across call sites and builds of
+/// the same kernel version.
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len(), "dot length mismatch");
+    let split = x.len() - x.len() % NR;
+    let (xm, xt) = x.split_at(split);
+    let (ym, yt) = y.split_at(split);
+    let mut acc = [0.0f64; NR];
+    for (xc, yc) in xm.chunks_exact(NR).zip(ym.chunks_exact(NR)) {
+        for l in 0..NR {
+            acc[l] += xc[l] * yc[l];
+        }
+    }
+    let mut tail = 0.0;
+    for (a, b) in xt.iter().zip(yt) {
+        tail += a * b;
+    }
+    (((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))) + tail
+}
+
+/// y += alpha·x, branch-free (no zero-skip: see the 0·inf note above).
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), y.len(), "axpy length mismatch");
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// ‖x‖₂ on the blocked dot.
+pub fn norm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::{matmul_at, matmul_naive};
+    use crate::util::Pcg32;
+
+    #[test]
+    fn dot_matches_naive_and_is_deterministic() {
+        let mut rng = Pcg32::seeded(90);
+        for len in [0, 1, 7, 8, 9, 16, 63, 100] {
+            let x: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+            let y: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+            let naive: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+            let d = dot(&x, &y);
+            assert!((d - naive).abs() <= 1e-12 * (1.0 + naive.abs()), "len {len}");
+            assert_eq!(d.to_bits(), dot(&x, &y).to_bits(), "len {len} rerun");
+        }
+    }
+
+    #[test]
+    fn axpy_accumulates_without_zero_skip() {
+        let x = vec![1.0, f64::INFINITY, 2.0];
+        let mut y = vec![0.0; 3];
+        axpy(0.0, &x, &mut y);
+        // 0·inf = NaN must propagate (the old guarded loops dropped it).
+        assert!(y[1].is_nan());
+        assert_eq!(y[0], 0.0);
+    }
+
+    #[test]
+    fn packed_at_is_bit_identical_to_matmul_at() {
+        let mut rng = Pcg32::seeded(91);
+        // One shape under the serial threshold, one over it (chunked).
+        for &(k, m, n) in &[(40, 24, 12), (150, 80, 40)] {
+            let a = Mat::randn(k, m, 1.0, &mut rng);
+            let b = Mat::randn(k, n, 1.0, &mut rng);
+            let direct = matmul_at(&a, &b);
+            let packed = PackedAt::pack(&a, n).matmul_at(&b);
+            assert_eq!(direct.shape(), packed.shape());
+            for (x, y) in direct.data().iter().zip(packed.data()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "({k},{m},{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_at_reuse_matches_oracle() {
+        let mut rng = Pcg32::seeded(92);
+        let a = Mat::randn(33, 17, 1.0, &mut rng);
+        let packed = PackedAt::pack(&a, 5);
+        for trial in 0..3 {
+            let b = Mat::randn(33, 5, 1.0, &mut rng);
+            let want = matmul_naive(&a.transpose(), &b);
+            assert!(packed.matmul_at(&b).allclose(&want, 1e-10), "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn norm2_matches_reference() {
+        let x = vec![3.0, 4.0];
+        assert!((norm2(&x) - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,12 +1,21 @@
-//! Matrix multiplication kernels: naive (reference), cache-blocked with
-//! transposed-B packing, and a thread-pool-parallel variant used on the
-//! serving hot path.
+//! Matrix multiplication entry points: naive (reference oracle), plus
+//! the packed-panel register-tiled kernels from [`super::kernel`] behind
+//! the same serial/parallel switching the crate has always used.
+//!
+//! All dense inner loops are branch-free (no zero-skip guards — see the
+//! 0·inf/NaN note in the kernel module docs), and every partition is a
+//! pure function of the problem shape, so serial, parallel and
+//! any-pool-size execution produce bit-identical results per kernel
+//! version.
 
+use super::kernel::{self, at_range, gemm_rows_dispatch, pack_b, pack_bt, KC, K_CHUNK, MR, NR};
 use super::mat::Mat;
-use crate::util::global_pool;
 use crate::util::threadpool::SendPtr;
+use crate::util::{global_pool, ThreadPool};
 
-/// Reference ikj matmul (used by tests as oracle for the blocked kernels).
+/// Reference ikj matmul (used by tests as oracle for the blocked
+/// kernels; retains the zero-skip guard, so it is a *finite-data*
+/// oracle — the packed kernels propagate 0·inf → NaN, this does not).
 pub fn matmul_naive(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols(), b.rows(), "inner dims");
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
@@ -27,121 +36,141 @@ pub fn matmul_naive(a: &Mat, b: &Mat) -> Mat {
     c
 }
 
-/// Cache-blocked single-threaded matmul.
+/// Pack every KC-depth block of row-major `b` (k×n) up front; entries
+/// are `(p0, kc, panels)` in ascending depth order.
+fn pack_b_blocks(b: &[f64], k: usize, n: usize) -> Vec<(usize, usize, Vec<f64>)> {
+    let n_panels = n.div_ceil(NR);
+    let mut blocks = Vec::with_capacity(k.div_ceil(KC).max(1));
+    for p0 in (0..k).step_by(KC) {
+        let kc = (k - p0).min(KC);
+        let mut bp = vec![0.0; n_panels * kc * NR];
+        pack_b(b, n, p0, kc, &mut bp, n_panels);
+        blocks.push((p0, kc, bp));
+    }
+    blocks
+}
+
+/// Same, but packing the transposed operand of A·Bᵀ (`b` is nb×k).
+fn pack_bt_blocks(b: &[f64], k: usize, nb: usize) -> Vec<(usize, usize, Vec<f64>)> {
+    let n_panels = nb.div_ceil(NR);
+    let mut blocks = Vec::with_capacity(k.div_ceil(KC).max(1));
+    for p0 in (0..k).step_by(KC) {
+        let kc = (k - p0).min(KC);
+        let mut bp = vec![0.0; n_panels * kc * NR];
+        pack_bt(b, k, nb, p0, kc, &mut bp, n_panels);
+        blocks.push((p0, kc, bp));
+    }
+    blocks
+}
+
+/// Compute rows [r0, r1) of C += A·B against pre-packed B blocks.
+fn gemm_packed_rows(
+    a: &Mat,
+    blocks: &[(usize, usize, Vec<f64>)],
+    c: &mut Mat,
+    n: usize,
+    r0: usize,
+    r1: usize,
+) {
+    let k = a.cols();
+    let n_panels = n.div_ceil(NR);
+    for (p0, kc, bp) in blocks {
+        gemm_rows_dispatch(a.data(), k, c.data_mut(), n, r0, r1, *p0, *kc, bp, n_panels);
+    }
+}
+
+/// Cache-blocked single-threaded matmul on the packed-panel core.
 pub fn matmul_blocked(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols(), b.rows(), "inner dims");
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
     let mut c = Mat::zeros(m, n);
-    matmul_into_range(a, b, &mut c, 0, m);
-    let _ = k;
+    let blocks = pack_b_blocks(b.data(), k, n);
+    gemm_packed_rows(a, &blocks, &mut c, n, 0, m);
     c
 }
 
-/// Compute rows [r0, r1) of C = A·B into a preallocated C.
-#[inline]
-fn matmul_into_range(a: &Mat, b: &Mat, c: &mut Mat, r0: usize, r1: usize) {
-    const MC: usize = 64; // row block
-    const KC: usize = 128; // depth block
-    let (k, n) = (a.cols(), b.cols());
-    for i0 in (r0..r1).step_by(MC) {
-        let i1 = (i0 + MC).min(r1);
-        for p0 in (0..k).step_by(KC) {
-            let p1 = (p0 + KC).min(k);
-            for i in i0..i1 {
-                let arow = a.row(i);
-                let crow = c.row_mut(i);
-                for p in p0..p1 {
-                    let av = arow[p];
-                    if av == 0.0 {
-                        continue;
-                    }
-                    let brow = b.row(p);
-                    // Inner loop over contiguous memory in both B and C —
-                    // auto-vectorizes.
-                    for j in 0..n {
-                        crow[j] += av * brow[j];
-                    }
-                }
-            }
-        }
-    }
+/// Parallel matmul over the global thread pool; falls back to the
+/// single-threaded sweep for small problems where spawn overhead
+/// dominates.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    matmul_pooled(a, b, global_pool())
 }
 
-/// Parallel matmul over the global thread pool; falls back to blocked for
-/// small problems where spawn overhead dominates.
-pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+/// [`matmul`] against an explicit pool. Row partitioning never changes
+/// per-element accumulation order, so the result is bit-identical for
+/// every pool size (including the serial fallback).
+pub fn matmul_pooled(a: &Mat, b: &Mat, pool: &ThreadPool) -> Mat {
     assert_eq!(a.cols(), b.rows(), "inner dims: {:?} x {:?}", a.shape(), b.shape());
-    let (m, n) = (a.rows(), b.cols());
-    let work = m * a.cols() * n;
-    if work < 64 * 64 * 64 {
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    if m * k * n < 64 * 64 * 64 {
         return matmul_blocked(a, b);
     }
+    // Pack B's depth blocks once; row chunks share them read-only.
+    let blocks = pack_b_blocks(b.data(), k, n);
     let mut c = Mat::zeros(m, n);
-    // Split row ranges across the pool; each range writes disjoint rows.
     let c_ptr = SendPtr::new(&mut c);
-    global_pool().chunked_for(m, 16, |r0, r1| {
+    pool.chunked_for(m, 16, |r0, r1| {
         // SAFETY: ranges are disjoint row slices of c; &Mat reads are shared.
         let c = unsafe { c_ptr.get() };
-        matmul_into_range(a, b, c, r0, r1);
+        gemm_packed_rows(a, &blocks, c, n, r0, r1);
     });
     c
 }
 
-/// C = A·Bᵀ without materializing Bᵀ (dot-product form, contiguous rows).
+/// C = A·Bᵀ without materializing Bᵀ: B's columns-of-the-product are
+/// packed straight out of its rows into the same panel layout, then the
+/// shared register-tiled sweep runs (previously a scalar dot loop with
+/// no cache blocking).
 pub fn matmul_bt(a: &Mat, b: &Mat) -> Mat {
+    matmul_bt_pooled(a, b, global_pool())
+}
+
+/// [`matmul_bt`] against an explicit pool (bit-identical across pool
+/// sizes, same argument as [`matmul_pooled`]).
+pub fn matmul_bt_pooled(a: &Mat, b: &Mat, pool: &ThreadPool) -> Mat {
     assert_eq!(a.cols(), b.cols(), "inner dims for A·Bt");
-    let (m, n, k) = (a.rows(), b.rows(), a.cols());
-    let mut c = Mat::zeros(m, n);
-    let c_ptr = SendPtr::new(&mut c);
-    let body = |r0: usize, r1: usize| {
-        let c = unsafe { c_ptr.get() };
-        for i in r0..r1 {
-            let arow = a.row(i);
-            let crow = c.row_mut(i);
-            for j in 0..n {
-                let brow = b.row(j);
-                let mut acc = 0.0;
-                for p in 0..k {
-                    acc += arow[p] * brow[p];
-                }
-                crow[j] = acc;
-            }
-        }
-    };
-    if m * n * k < 64 * 64 * 64 {
-        body(0, m);
-    } else {
-        global_pool().chunked_for(m, 16, body);
+    let (m, nb, k) = (a.rows(), b.rows(), a.cols());
+    let blocks = pack_bt_blocks(b.data(), k, nb);
+    let mut c = Mat::zeros(m, nb);
+    if m * nb * k < 64 * 64 * 64 {
+        gemm_packed_rows(a, &blocks, &mut c, nb, 0, m);
+        return c;
     }
+    let c_ptr = SendPtr::new(&mut c);
+    pool.chunked_for(m, 16, |r0, r1| {
+        // SAFETY: ranges are disjoint row slices of c; &Mat reads are shared.
+        let c = unsafe { c_ptr.get() };
+        gemm_packed_rows(a, &blocks, c, nb, r0, r1);
+    });
     c
 }
 
-/// Accumulate rows [k0, k1) of the Aᵀ·B contraction into `c`.
+/// Accumulate depth rows [k0, k1) of the Aᵀ·B contraction into `c`,
+/// packing both operands block-by-block.
 #[inline]
 fn matmul_at_range(a: &Mat, b: &Mat, c: &mut Mat, k0: usize, k1: usize) {
     let (m, n) = (a.cols(), b.cols());
-    for p in k0..k1 {
-        let arow = a.row(p);
-        let brow = b.row(p);
-        for i in 0..m {
-            let av = arow[i];
-            if av == 0.0 {
-                continue;
-            }
-            let crow = c.row_mut(i);
-            for j in 0..n {
-                crow[j] += av * brow[j];
-            }
-        }
-    }
+    let n_panels = n.div_ceil(NR);
+    let n_tiles = m.div_ceil(MR);
+    let mut bp = vec![0.0; n_panels * KC * NR];
+    let mut ap = vec![0.0; n_tiles * KC * MR];
+    at_range(a.data(), m, b.data(), n, c.data_mut(), k0, k1, &mut bp, &mut ap);
 }
 
 /// C = Aᵀ·B without materializing Aᵀ. The contraction runs over A's rows,
 /// so (unlike `matmul`/`matmul_bt`) output rows are not disjoint per input
 /// chunk; the parallel path gives each chunk of the k-dimension its own
 /// partial C and reduces them at the end. Sits on the low-rank hot path
-/// via `lowrank_attention_output`.
+/// via `lowrank_attention_output`; the probe's repeated products against
+/// a fixed A should use [`kernel::PackedAt`] instead.
 pub fn matmul_at(a: &Mat, b: &Mat) -> Mat {
+    matmul_at_pooled(a, b, global_pool())
+}
+
+/// [`matmul_at`] against an explicit pool. The K_CHUNK partition and the
+/// ascending-chunk reduce order depend only on the problem shape, so the
+/// result is bit-identical for every pool size.
+pub fn matmul_at_pooled(a: &Mat, b: &Mat, pool: &ThreadPool) -> Mat {
     assert_eq!(a.rows(), b.rows(), "inner dims for At·B");
     let (k, m, n) = (a.rows(), a.cols(), b.cols());
     let mut c = Mat::zeros(m, n);
@@ -154,11 +183,10 @@ pub fn matmul_at(a: &Mat, b: &Mat) -> Mat {
     // thus the f64 result) is identical on any machine, whether the
     // chunks run in parallel, inline on a pool worker, or on a 1-thread
     // pool. SVD seeds and rank decisions downstream rely on this.
-    const K_CHUNK: usize = 64;
     let n_chunks = k.div_ceil(K_CHUNK);
     let mut partials: Vec<Mat> = (0..n_chunks).map(|_| Mat::zeros(m, n)).collect();
     let ptr = SendPtr::new(&mut partials);
-    global_pool().scoped_for(n_chunks, |ci| {
+    pool.scoped_for(n_chunks, |ci| {
         // SAFETY: each chunk index writes only its own partial.
         let partial = &mut unsafe { ptr.get() }[ci];
         let k0 = ci * K_CHUNK;
@@ -173,26 +201,19 @@ pub fn matmul_at(a: &Mat, b: &Mat) -> Mat {
     c
 }
 
-/// y = A·x for a vector x.
+/// y = A·x for a vector x (blocked dot per row).
 pub fn matvec(a: &Mat, x: &[f64]) -> Vec<f64> {
     assert_eq!(a.cols(), x.len());
-    (0..a.rows())
-        .map(|i| a.row(i).iter().zip(x.iter()).map(|(p, q)| p * q).sum())
-        .collect()
+    (0..a.rows()).map(|i| kernel::dot(a.row(i), x)).collect()
 }
 
-/// y = Aᵀ·x.
+/// y = Aᵀ·x. Branch-free axpy per row (no zero-skip: 0·inf/NaN inputs
+/// now propagate per IEEE-754 instead of being silently dropped).
 pub fn matvec_t(a: &Mat, x: &[f64]) -> Vec<f64> {
     assert_eq!(a.rows(), x.len());
     let mut y = vec![0.0; a.cols()];
-    for i in 0..a.rows() {
-        let xi = x[i];
-        if xi == 0.0 {
-            continue;
-        }
-        for (j, aij) in a.row(i).iter().enumerate() {
-            y[j] += aij * xi;
-        }
+    for (i, &xi) in x.iter().enumerate() {
+        kernel::axpy(xi, a.row(i), &mut y);
     }
     y
 }
@@ -211,6 +232,20 @@ mod tests {
             let c1 = matmul_naive(&a, &b);
             let c2 = matmul_blocked(&a, &b);
             assert!(c1.allclose(&c2, 1e-10), "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn rank_bucket_widths_match_naive() {
+        // The monomorphized bucket kernels cover exactly these widths.
+        let mut rng = Pcg32::seeded(49);
+        for &n in &[8, 16, 24, 32, 48, 64] {
+            let a = Mat::randn(37, 300, 1.0, &mut rng);
+            let b = Mat::randn(300, n, 1.0, &mut rng);
+            assert!(
+                matmul_blocked(&a, &b).allclose(&matmul_naive(&a, &b), 1e-9),
+                "bucket n={n}"
+            );
         }
     }
 
@@ -234,6 +269,15 @@ mod tests {
         let b2 = Mat::randn(15, 25, 1.0, &mut rng);
         let want2 = matmul_naive(&a2.transpose(), &b2);
         assert!(matmul_at(&a2, &b2).allclose(&want2, 1e-10));
+    }
+
+    #[test]
+    fn parallel_bt_matches_naive_above_threshold() {
+        let mut rng = Pcg32::seeded(50);
+        let a = Mat::randn(130, 70, 1.0, &mut rng);
+        let b = Mat::randn(90, 70, 1.0, &mut rng);
+        let want = matmul_naive(&a, &b.transpose());
+        assert!(matmul_bt(&a, &b).allclose(&want, 1e-9));
     }
 
     #[test]

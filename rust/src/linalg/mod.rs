@@ -4,8 +4,34 @@
 //! SVD (ground truth), randomized/batched partial SVD (`O(n²r)`, the
 //! paper's cuSOLVER substitute), incremental rank extension (Eq. 12) and
 //! power-iteration spectral norms (Eq. 16) — with no external crates.
+//!
+//! # Kernel architecture
+//!
+//! Every dense product routes through the register-tiled, panel-packed
+//! GEMM core in [`kernel`]:
+//!
+//! * **Packing layout** — the depth dimension is blocked at
+//!   `kernel::KC` = 256; per block the right-hand operand is packed into
+//!   contiguous kc×`NR` column panels (`NR` = 8 f64 lanes, zero-padded
+//!   at the matrix edge), and the Aᵀ·B path additionally packs the left
+//!   operand into kc×`MR` row tiles (`MR` = 4).
+//! * **Tile constants** — the `MR`×`NR` = 4×8 micro-kernel accumulates
+//!   into `[f64; 8]` register lanes with a branch-free inner loop; for
+//!   the rank-bucket widths n ∈ {8, 16, 24, 32, 48, 64} the panel loop
+//!   is monomorphized (`gemm_rows_bucket::<NP>`), so the low-rank apply
+//!   and probe products run compile-known-N kernels.
+//! * **Determinism contract** — all partitions (KC blocks, tiles,
+//!   panels, the `K_CHUNK` = 64 reduction chunks of Aᵀ·B) are pure
+//!   functions of the problem shape, never of pool size; per-element
+//!   accumulation order is depth-ascending with a fixed reduce order,
+//!   so serial/parallel/any-pool-size runs — and the fused vs. direct
+//!   probe paths — are bit-identical per kernel version. Bit values are
+//!   *not* stable across kernel versions; tests pin `matmul_naive` as a
+//!   tolerance oracle, and the conformance layer's bit pairings compare
+//!   like-for-like within one build.
 
 pub mod incremental;
+pub mod kernel;
 pub mod mat;
 pub mod matmul;
 pub mod partial_svd;
@@ -14,9 +40,13 @@ pub mod qr;
 pub mod svd;
 
 pub use incremental::{extend, truncate, IncrementalCache};
+pub use kernel::{axpy, dot, norm2, PackedAt};
 pub use mat::Mat;
-pub use matmul::{matmul, matmul_at, matmul_bt, matvec, matvec_t};
-pub use partial_svd::{batched_partial_svd, partial_svd, top_k_svd};
+pub use matmul::{
+    matmul, matmul_at, matmul_at_pooled, matmul_bt, matmul_bt_pooled, matmul_pooled, matvec,
+    matvec_t,
+};
+pub use partial_svd::{batched_partial_svd, partial_svd, partial_svd_with, top_k_svd, ProbeKernel};
 pub use power_iter::{spectral_norm, spectral_norm_fast};
 pub use qr::{orthonormalize, qr_thin};
 pub use svd::{svd, Svd};

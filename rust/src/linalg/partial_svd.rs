@@ -3,12 +3,30 @@
 //! CPU substrate. Also the batched front-end used by the coordinator for
 //! per-head decompositions.
 
+use super::kernel::PackedAt;
 use super::mat::Mat;
 use super::matmul::{matmul, matmul_at};
 use super::qr::orthonormalize;
 use super::svd::{svd, Svd};
 use crate::util::threadpool::SendPtr;
 use crate::util::{global_pool, Pcg32};
+
+/// Which kernel path the probe's range finder uses for its repeated
+/// `AᵀQ` products.
+///
+/// [`ProbeKernel::Fused`] packs A's micro-kernel tiles once and reuses
+/// them across every subspace iteration; [`ProbeKernel::Direct`] calls
+/// `matmul_at` each iteration, re-streaming (and re-packing) A every
+/// time. The packed path mirrors `matmul_at`'s exact depth partition,
+/// so the two are **bit-identical** — the conformance layer fuzzes the
+/// pairing per seed (`probe_kernel_failures`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProbeKernel {
+    /// Pack A once per probe, reuse across subspace iterations (default).
+    Fused,
+    /// Re-pack A on every `matmul_at` call (reference pairing path).
+    Direct,
+}
 
 /// Randomized top-k SVD with oversampling and subspace (power) iterations.
 ///
@@ -17,6 +35,19 @@ use crate::util::{global_pool, Pcg32};
 /// defaults (8, 2) are good for attention matrices whose spectra decay
 /// fast after softmax.
 pub fn partial_svd(a: &Mat, k: usize, oversample: usize, n_iter: usize, seed: u64) -> Svd {
+    partial_svd_with(a, k, oversample, n_iter, seed, ProbeKernel::Fused)
+}
+
+/// [`partial_svd`] with an explicit kernel-path selection for the
+/// range-finder chain `A·Ω → orth → AᵀQ → orth → A·QZ`.
+pub fn partial_svd_with(
+    a: &Mat,
+    k: usize,
+    oversample: usize,
+    n_iter: usize,
+    seed: u64,
+    kernel: ProbeKernel,
+) -> Svd {
     let (m, n) = a.shape();
     let k = k.min(m).min(n).max(1);
     let p = (k + oversample).min(n);
@@ -24,10 +55,19 @@ pub fn partial_svd(a: &Mat, k: usize, oversample: usize, n_iter: usize, seed: u6
     // Range finder: Y = A·Ω, Ω ~ N(0,1)^{n×p}.
     let omega = Mat::randn(n, p, 1.0, &mut rng);
     let mut y = matmul(a, &omega);
+    // Fused probe pass: the subspace loop hits Aᵀ·Q once per iteration
+    // against the *same* A — pack its tiles once and amortize.
+    let packed = match kernel {
+        ProbeKernel::Fused if n_iter > 0 => Some(PackedAt::pack(a, p)),
+        _ => None,
+    };
     // Subspace iterations with re-orthonormalization for stability.
     for _ in 0..n_iter {
         let q = orthonormalize(&y);
-        let z = matmul_at(a, &q); // Aᵀ Q : n×p
+        let z = match &packed {
+            Some(pk) => pk.matmul_at(&q), // Aᵀ Q : n×p, packed tiles reused
+            None => matmul_at(a, &q),
+        };
         let qz = orthonormalize(&z);
         y = matmul(a, &qz);
     }
@@ -130,6 +170,26 @@ mod tests {
             for j in 0..3 {
                 assert!((batch[i].s[j] - single.s[j]).abs() < 1e-9);
             }
+        }
+    }
+
+    #[test]
+    fn fused_matches_direct_bitwise() {
+        // The packed probe pass mirrors matmul_at's partition exactly,
+        // so both kernel paths must agree to the bit (the conformance
+        // differential fuzzes this same pairing).
+        let a = spiked_matrix(48, 36, 5, 0.05, 8);
+        let f = partial_svd_with(&a, 5, 8, 2, 21, ProbeKernel::Fused);
+        let d = partial_svd_with(&a, 5, 8, 2, 21, ProbeKernel::Direct);
+        assert_eq!(f.s.len(), d.s.len());
+        for (x, y) in f.s.iter().zip(&d.s) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        for (x, y) in f.u.data().iter().zip(d.u.data()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        for (x, y) in f.v.data().iter().zip(d.v.data()) {
+            assert_eq!(x.to_bits(), y.to_bits());
         }
     }
 

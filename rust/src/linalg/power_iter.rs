@@ -44,7 +44,8 @@ pub fn spectral_norm_fast(a: &Mat, seed: u64) -> f64 {
 }
 
 fn norm(v: &[f64]) -> f64 {
-    v.iter().map(|x| x * x).sum::<f64>().sqrt()
+    // Blocked dot with fixed reduction tree — deterministic and SIMD-friendly.
+    super::kernel::norm2(v)
 }
 
 fn normalize(v: &mut [f64]) {

@@ -1,6 +1,12 @@
 //! Householder QR decomposition (thin form), used by the randomized
 //! partial SVD for subspace orthonormalization.
+//!
+//! Reflector application runs row-major on the blocked `kernel::axpy`
+//! primitive (contiguous rows of R/Q, per-element accumulation order
+//! rows-ascending — deterministic and autovectorizable), instead of the
+//! old strided per-column scalar loops.
 
+use super::kernel::{axpy, norm2};
 use super::mat::Mat;
 
 /// Thin QR: A (m×n, m>=n) = Q (m×n, orthonormal cols) · R (n×n upper).
@@ -16,24 +22,22 @@ pub fn qr_thin(a: &Mat) -> (Mat, Mat) {
         for i in k..m {
             x[i - k] = r[(i, k)];
         }
-        let alpha = -x[0].signum() * x.iter().map(|v| v * v).sum::<f64>().sqrt();
+        let alpha = -x[0].signum() * norm2(&x);
         let mut v = x;
         v[0] -= alpha;
-        let vnorm = v.iter().map(|t| t * t).sum::<f64>().sqrt();
+        let vnorm = norm2(&v);
         if vnorm > 1e-300 {
             for t in v.iter_mut() {
                 *t /= vnorm;
             }
-            // Apply H = I - 2vvᵀ to the trailing submatrix of R.
-            for j in k..n {
-                let mut dot = 0.0;
-                for i in k..m {
-                    dot += v[i - k] * r[(i, j)];
-                }
-                let dot2 = 2.0 * dot;
-                for i in k..m {
-                    r[(i, j)] -= dot2 * v[i - k];
-                }
+            // Apply H = I - 2vvᵀ to the trailing submatrix of R:
+            // dots = Rᵀv over rows ascending, then one fused update per row.
+            let mut dots = vec![0.0; n - k];
+            for i in k..m {
+                axpy(v[i - k], &r.row(i)[k..n], &mut dots);
+            }
+            for i in k..m {
+                axpy(-2.0 * v[i - k], &dots, &mut r.row_mut(i)[k..n]);
             }
         } else {
             v = vec![0.0; m - k];
@@ -58,15 +62,12 @@ pub fn qr_thin(a: &Mat) -> (Mat, Mat) {
         if v.iter().all(|&t| t == 0.0) {
             continue;
         }
-        for j in 0..n {
-            let mut dot = 0.0;
-            for i in k..m {
-                dot += v[i - k] * q[(i, j)];
-            }
-            let dot2 = 2.0 * dot;
-            for i in k..m {
-                q[(i, j)] -= dot2 * v[i - k];
-            }
+        let mut dots = vec![0.0; n];
+        for i in k..m {
+            axpy(v[i - k], q.row(i), &mut dots);
+        }
+        for i in k..m {
+            axpy(-2.0 * v[i - k], &dots, q.row_mut(i));
         }
     }
     (q, rr)

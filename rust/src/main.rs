@@ -52,6 +52,7 @@ fn main() {
         Some("info") => cmd_info(&args),
         Some("fuzz") => cmd_fuzz(&args),
         Some("lint") => cmd_lint(&args),
+        Some("bench-check") => cmd_bench_check(&args),
         _ => {
             print_usage();
             0
@@ -63,11 +64,12 @@ fn main() {
 fn print_usage() {
     println!(
         "drrl — Dynamic Rank RL for adaptive low-rank attention\n\
-         usage: drrl <train|eval|generate|serve|agent|info|fuzz|lint> [--flags]\n\
+         usage: drrl <train|eval|generate|serve|agent|info|fuzz|lint|bench-check> [--flags]\n\
          run each subcommand with no flags for sensible defaults;\n\
          fuzz: differential conformance fuzzing\n\
          \x20      (--seed N | --budget N [--base-seed N] | --seeds FILE)\n\
          lint: concurrency-hygiene source lint over the serving stack\n\
+         bench-check: validate BENCH_*.json snapshots (--files a.json,b.json)\n\
          see README.md and CONFORMANCE.md for the full reference."
     );
 }
@@ -462,6 +464,97 @@ fn cmd_fuzz(args: &Args) -> i32 {
     } else {
         println!("all {total} seed(s) passed every differential pairing");
         0
+    }
+}
+
+/// `drrl bench-check` — validate committed/generated `BENCH_*.json`
+/// snapshots against the bench-harness schema: required top-level fields
+/// (schema_version/bench/host/cases), required numeric per-case timing
+/// fields, and *every* number in the file finite (CI's bench-snapshot leg
+/// fails on NaN/inf or missing fields).
+fn cmd_bench_check(args: &Args) -> i32 {
+    let files = match args.get("files") {
+        Some(f) => f.split(',').map(str::trim).filter(|s| !s.is_empty()).collect::<Vec<_>>(),
+        None => {
+            eprintln!("--files a.json,b.json required");
+            return 2;
+        }
+    };
+    if files.is_empty() {
+        eprintln!("--files list is empty");
+        return 2;
+    }
+    let mut bad = 0usize;
+    for path in &files {
+        match check_bench_file(path) {
+            Ok(n_cases) => println!("{path}: ok ({n_cases} cases)"),
+            Err(e) => {
+                eprintln!("{path}: {e}");
+                bad += 1;
+            }
+        }
+    }
+    if bad > 0 {
+        eprintln!("bench-check: {bad}/{} file(s) failed", files.len());
+        1
+    } else {
+        0
+    }
+}
+
+fn check_bench_file(path: &str) -> Result<usize, String> {
+    use drrl::util::Json;
+    let text = std::fs::read_to_string(path).map_err(|e| format!("cannot read: {e}"))?;
+    let j = Json::parse(&text).map_err(|e| format!("invalid JSON: {e}"))?;
+    let sv = j
+        .get("schema_version")
+        .and_then(|v| v.as_f64())
+        .ok_or("missing numeric schema_version")?;
+    if sv != 1.0 {
+        return Err(format!("unsupported schema_version {sv}"));
+    }
+    j.get("bench").and_then(|v| v.as_str()).ok_or("missing string field: bench")?;
+    let host = j.get("host").and_then(|h| h.as_obj()).ok_or("missing object field: host")?;
+    for f in ["n_cpus", "pool_threads"] {
+        host.get(f)
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| format!("host missing numeric {f}"))?;
+    }
+    let cases = j.get("cases").and_then(|c| c.as_arr()).ok_or("missing array field: cases")?;
+    if cases.is_empty() {
+        return Err("cases array is empty".into());
+    }
+    for (i, c) in cases.iter().enumerate() {
+        c.get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("case {i}: missing string name"))?;
+        for f in ["iters", "ns_per_iter", "mean_ms", "p50_ms", "p99_ms", "min_ms"] {
+            c.get(f)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| format!("case {i}: missing numeric {f}"))?;
+        }
+    }
+    check_all_finite(&j, "$").map(|_| cases.len())
+}
+
+/// Recursive walk: every Num anywhere in the document must be finite.
+fn check_all_finite(j: &drrl::util::Json, at: &str) -> Result<(), String> {
+    use drrl::util::Json;
+    match j {
+        Json::Num(x) if !x.is_finite() => Err(format!("non-finite number at {at}: {x}")),
+        Json::Arr(a) => {
+            for (i, v) in a.iter().enumerate() {
+                check_all_finite(v, &format!("{at}[{i}]"))?;
+            }
+            Ok(())
+        }
+        Json::Obj(o) => {
+            for (k, v) in o {
+                check_all_finite(v, &format!("{at}.{k}"))?;
+            }
+            Ok(())
+        }
+        _ => Ok(()),
     }
 }
 

@@ -1,0 +1,159 @@
+//! Packed-panel GEMM kernel conformance: every matmul variant against
+//! the `matmul_naive` oracle across adversarial shapes (tile/panel
+//! remainders on every side, every rank-bucket width), plus the
+//! determinism contract — run-to-run and pool-size bit-independence.
+
+use drrl::linalg::matmul::{matmul_blocked, matmul_naive};
+use drrl::linalg::{
+    matmul, matmul_at, matmul_at_pooled, matmul_bt, matmul_bt_pooled, matmul_pooled, matvec_t,
+    partial_svd_with, Mat, PackedAt, ProbeKernel,
+};
+use drrl::util::{Pcg32, ThreadPool};
+
+/// Shape sweep values: 1, MR−1/MR/MR+1 (4×-row tile edges), NR−1/NR/NR+1
+/// (8-wide panel edges), every rank-bucket width, KC-adjacent and odd
+/// sizes. Kept coarse on two axes so the debug-mode oracle stays fast.
+const DIMS: &[usize] = &[1, 3, 4, 5, 7, 8, 9, 16, 17, 24, 31, 32, 33, 48, 63, 64, 65];
+
+#[test]
+fn oracle_sweep_all_variants() {
+    let mut rng = Pcg32::seeded(0xE11);
+    for (ai, &m) in DIMS.iter().enumerate() {
+        for (bi, &k) in DIMS.iter().enumerate().step_by(2) {
+            for (ci, &n) in DIMS.iter().enumerate().step_by(2) {
+                // Vary which index is offset so all remainder pairings
+                // appear without the full cubic cross-product.
+                if (ai + bi + ci) % 2 == 1 {
+                    continue;
+                }
+                let a = Mat::randn(m, k, 1.0, &mut rng);
+                let b = Mat::randn(k, n, 1.0, &mut rng);
+                let want = matmul_naive(&a, &b);
+                assert!(
+                    matmul_blocked(&a, &b).allclose(&want, 1e-10),
+                    "blocked ({m},{k},{n})"
+                );
+                assert!(matmul(&a, &b).allclose(&want, 1e-10), "matmul ({m},{k},{n})");
+
+                let bt = Mat::randn(n, k, 1.0, &mut rng);
+                let want_bt = matmul_naive(&a, &bt.transpose());
+                assert!(matmul_bt(&a, &bt).allclose(&want_bt, 1e-10), "bt ({m},{k},{n})");
+
+                let at = Mat::randn(k, m, 1.0, &mut rng);
+                let want_at = matmul_naive(&at.transpose(), &b);
+                assert!(matmul_at(&at, &b).allclose(&want_at, 1e-10), "at ({k},{m},{n})");
+            }
+        }
+    }
+}
+
+#[test]
+fn bucket_widths_hit_remainder_rows() {
+    // Every monomorphized bucket width × row counts around the MR tile
+    // edge, deep enough in k to cross a KC block boundary (k = 300).
+    let mut rng = Pcg32::seeded(0xE12);
+    for &n in &[8usize, 16, 24, 32, 48, 64] {
+        for &m in &[1usize, 3, 4, 5, 37] {
+            let a = Mat::randn(m, 300, 1.0, &mut rng);
+            let b = Mat::randn(300, n, 1.0, &mut rng);
+            assert!(
+                matmul_blocked(&a, &b).allclose(&matmul_naive(&a, &b), 1e-9),
+                "bucket ({m},300,{n})"
+            );
+        }
+    }
+}
+
+#[test]
+fn run_to_run_bit_identity() {
+    let mut rng = Pcg32::seeded(0xE13);
+    let a = Mat::randn(130, 150, 1.0, &mut rng);
+    let b = Mat::randn(150, 90, 1.0, &mut rng);
+    let bt = Mat::randn(90, 150, 1.0, &mut rng);
+    let at = Mat::randn(150, 130, 1.0, &mut rng);
+    let (c1, c2) = (matmul(&a, &b), matmul(&a, &b));
+    assert!(c1.allclose(&c2, 0.0), "matmul rerun drift");
+    let (d1, d2) = (matmul_bt(&a, &bt), matmul_bt(&a, &bt));
+    assert!(d1.allclose(&d2, 0.0), "matmul_bt rerun drift");
+    let (e1, e2) = (matmul_at(&at, &b), matmul_at(&at, &b));
+    assert!(e1.allclose(&e2, 0.0), "matmul_at rerun drift");
+}
+
+#[test]
+fn pool_size_never_changes_bits() {
+    // The determinism contract: chunk partitions and reduction order are
+    // pure functions of the problem shape, so a 1-, 2- and 8-thread pool
+    // must produce the exact bits of the global-pool run (shapes above
+    // the 64³ work threshold so the parallel paths actually engage).
+    let mut rng = Pcg32::seeded(0xE14);
+    let a = Mat::randn(130, 150, 1.0, &mut rng);
+    let b = Mat::randn(150, 90, 1.0, &mut rng);
+    let bt = Mat::randn(90, 150, 1.0, &mut rng);
+    let at = Mat::randn(150, 130, 1.0, &mut rng);
+    let base = matmul(&a, &b);
+    let base_bt = matmul_bt(&a, &bt);
+    let base_at = matmul_at(&at, &b);
+    for threads in [1usize, 2, 8] {
+        let pool = ThreadPool::new(threads);
+        assert!(
+            matmul_pooled(&a, &b, &pool).allclose(&base, 0.0),
+            "matmul differs on a {threads}-thread pool"
+        );
+        assert!(
+            matmul_bt_pooled(&a, &bt, &pool).allclose(&base_bt, 0.0),
+            "matmul_bt differs on a {threads}-thread pool"
+        );
+        assert!(
+            matmul_at_pooled(&at, &b, &pool).allclose(&base_at, 0.0),
+            "matmul_at differs on a {threads}-thread pool"
+        );
+    }
+}
+
+#[test]
+fn packed_at_bit_identical_and_reusable() {
+    let mut rng = Pcg32::seeded(0xE15);
+    // Serial (below 64³) and chunked (above) shapes.
+    for &(k, m, n) in &[(40usize, 24usize, 12usize), (150, 80, 40)] {
+        let a = Mat::randn(k, m, 1.0, &mut rng);
+        let packed = PackedAt::pack(&a, n);
+        for trial in 0..2 {
+            let b = Mat::randn(k, n, 1.0, &mut rng);
+            let direct = matmul_at(&a, &b);
+            let fused = packed.matmul_at(&b);
+            for (x, y) in direct.data().iter().zip(fused.data()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "({k},{m},{n}) trial {trial}");
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_probe_matches_direct_bitwise() {
+    let mut rng = Pcg32::seeded(0xE16);
+    let a = Mat::randn(64, 64, 1.0, &mut rng);
+    let f = partial_svd_with(&a, 8, 8, 2, 5, ProbeKernel::Fused);
+    let d = partial_svd_with(&a, 8, 8, 2, 5, ProbeKernel::Direct);
+    for (x, y) in f.s.iter().zip(&d.s) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+    for (x, y) in f.u.data().iter().zip(d.u.data()) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+    for (x, y) in f.v.data().iter().zip(d.v.data()) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+}
+
+#[test]
+fn matvec_t_matches_oracle_without_zero_skip() {
+    let mut rng = Pcg32::seeded(0xE17);
+    let a = Mat::randn(21, 13, 1.0, &mut rng);
+    let mut x: Vec<f64> = (0..21).map(|_| rng.normal()).collect();
+    x[3] = 0.0; // exercise the dropped zero-skip guard
+    let got = matvec_t(&a, &x);
+    let want = matmul_naive(&a.transpose(), &Mat::from_vec(21, 1, x));
+    for (j, g) in got.iter().enumerate() {
+        assert!((g - want[(j, 0)]).abs() < 1e-10, "col {j}");
+    }
+}
