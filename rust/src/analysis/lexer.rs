@@ -1,0 +1,521 @@
+//! Token-level lexer for Rust source.
+//!
+//! The line-oriented scanner this subsystem replaced could be fooled by
+//! a `lock()` inside a string literal, a brace inside a raw string, or a
+//! nested block comment — anything where text and token disagree. This
+//! lexer produces a real token stream so the rules in
+//! [`crate::analysis::rules`] match *code*, never prose:
+//!
+//! * line comments and **nested** block comments are captured separately
+//!   (comments carry the `lint:allow(rule)` annotations, so they are
+//!   kept, just out of the token stream);
+//! * string, byte-string, raw-string (`r#"…"#`, any number of `#`s) and
+//!   char literals become single [`TokKind::Literal`] tokens — their
+//!   contents can never match a rule pattern;
+//! * lifetimes (`'a`) are distinguished from char literals (`'a'`) by
+//!   lookahead, and raw identifiers (`r#type`) from raw strings
+//!   (`r#"…"#`) by the byte after the `#`s;
+//! * everything else is an [`TokKind::Ident`] or a one-character
+//!   [`TokKind::Punct`], each tagged with its 1-based source line.
+//!
+//! The lexer is intentionally lossy in ways the rules never observe
+//! (literal contents are kept only for diagnostics, numeric suffixes are
+//! not split) and total: any byte sequence lexes without panicking.
+
+/// Token classification. `Punct` tokens are single characters; multi-
+/// character operators (`::`, `->`) appear as consecutive `Punct`s.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Lifetime,
+    Literal,
+    Punct,
+}
+
+/// One token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: usize,
+}
+
+impl Token {
+    /// Is this the identifier `s`?
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    /// Is this the punctuation character `c`?
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct && self.text.len() == c.len_utf8() && self.text.starts_with(c)
+    }
+}
+
+/// A comment (line or block) with the source lines it spans.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    /// First line of the comment, 1-based.
+    pub line: usize,
+    /// Last line (equal to `line` for line comments).
+    pub end_line: usize,
+    pub text: String,
+}
+
+/// Lexed source: the code token stream plus the comments beside it.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<Comment>,
+}
+
+impl Lexed {
+    /// The identifier text at token index `i`, if it is an identifier.
+    pub fn ident(&self, i: usize) -> Option<&str> {
+        let t = self.tokens.get(i)?;
+        (t.kind == TokKind::Ident).then_some(t.text.as_str())
+    }
+
+    /// Is token `i` the punctuation `c`?
+    pub fn punct(&self, i: usize, c: char) -> bool {
+        self.tokens.get(i).is_some_and(|t| t.is_punct(c))
+    }
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+
+fn is_ident_cont(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Lex `src` into tokens + comments. Total: never panics, any input.
+pub fn lex(src: &str) -> Lexed {
+    Lexer { b: src.as_bytes(), i: 0, line: 1, out: Lexed::default() }.run()
+}
+
+struct Lexer<'a> {
+    b: &'a [u8],
+    i: usize,
+    line: usize,
+    out: Lexed,
+}
+
+impl<'a> Lexer<'a> {
+    fn run(mut self) -> Lexed {
+        while self.i < self.b.len() {
+            let c = self.b[self.i];
+            match c {
+                b'\n' => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                c if c.is_ascii_whitespace() => self.i += 1,
+                b'/' if self.peek(1) == Some(b'/') => self.line_comment(),
+                b'/' if self.peek(1) == Some(b'*') => self.block_comment(),
+                b'"' => self.string(),
+                b'\'' => self.char_or_lifetime(),
+                b'r' | b'b' if self.raw_or_byte_prefix() => {}
+                c if is_ident_start(c) => self.ident(),
+                c if c.is_ascii_digit() => self.number(),
+                _ => self.punct_or_utf8(),
+            }
+        }
+        self.out
+    }
+
+    fn peek(&self, ahead: usize) -> Option<u8> {
+        self.b.get(self.i + ahead).copied()
+    }
+
+    fn push(&mut self, kind: TokKind, text: String, line: usize) {
+        self.out.tokens.push(Token { kind, text, line });
+    }
+
+    fn line_comment(&mut self) {
+        let start = self.i;
+        while self.i < self.b.len() && self.b[self.i] != b'\n' {
+            self.i += 1;
+        }
+        let text = String::from_utf8_lossy(&self.b[start..self.i]).into_owned();
+        self.out.comments.push(Comment { line: self.line, end_line: self.line, text });
+    }
+
+    /// Block comment with Rust's nesting semantics (`/* /* */ */`).
+    fn block_comment(&mut self) {
+        let (start, start_line) = (self.i, self.line);
+        self.i += 2;
+        let mut depth = 1usize;
+        while self.i < self.b.len() && depth > 0 {
+            match (self.b[self.i], self.peek(1)) {
+                (b'/', Some(b'*')) => {
+                    depth += 1;
+                    self.i += 2;
+                }
+                (b'*', Some(b'/')) => {
+                    depth -= 1;
+                    self.i += 2;
+                }
+                (b'\n', _) => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                _ => self.i += 1,
+            }
+        }
+        let text = String::from_utf8_lossy(&self.b[start..self.i]).into_owned();
+        self.out.comments.push(Comment { line: start_line, end_line: self.line, text });
+    }
+
+    /// `"…"` with escapes; newlines inside are legal and counted.
+    fn string(&mut self) {
+        let (start, start_line) = (self.i, self.line);
+        self.i += 1;
+        while self.i < self.b.len() {
+            match self.b[self.i] {
+                b'\\' => self.i += 2.min(self.b.len() - self.i),
+                b'"' => {
+                    self.i += 1;
+                    break;
+                }
+                b'\n' => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                _ => self.i += 1,
+            }
+        }
+        let text = String::from_utf8_lossy(&self.b[start..self.i.min(self.b.len())]).into_owned();
+        self.push(TokKind::Literal, text, start_line);
+    }
+
+    /// Handle `r"…"`, `r#"…"#`, `br"…"`, `b"…"`, `b'…'`, and raw idents
+    /// `r#ident`. Returns true (via the caller's guard) only when the
+    /// prefix really starts one of those; plain idents starting with
+    /// `r`/`b` fall through to `ident()`.
+    fn raw_or_byte_prefix(&mut self) -> bool {
+        let c = self.b[self.i];
+        // b"…" / b'…'
+        if c == b'b' {
+            match self.peek(1) {
+                Some(b'"') => {
+                    self.i += 1;
+                    self.string();
+                    return true;
+                }
+                Some(b'\'') => {
+                    self.i += 1;
+                    self.char_or_lifetime();
+                    return true;
+                }
+                Some(b'r') => {
+                    // br#"…"# — delegate to the raw-string scan below.
+                    if self.raw_string_at(self.i + 2) {
+                        return true;
+                    }
+                    return false;
+                }
+                _ => return false,
+            }
+        }
+        // r"…" / r#"…"# / r#ident
+        let mut j = self.i + 1;
+        let mut hashes = 0usize;
+        while self.b.get(j) == Some(&b'#') {
+            hashes += 1;
+            j += 1;
+        }
+        match self.b.get(j) {
+            Some(b'"') => self.raw_string_at(self.i + 1),
+            Some(&c2) if hashes == 1 && is_ident_start(c2) => {
+                // Raw identifier r#type: token is the bare ident.
+                self.i = j;
+                self.ident();
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Scan a raw string whose `#`s begin at byte `from` (i.e. `from`
+    /// points just past the `r`). Returns false if there is no raw
+    /// string there.
+    fn raw_string_at(&mut self, from: usize) -> bool {
+        let mut j = from;
+        let mut hashes = 0usize;
+        while self.b.get(j) == Some(&b'#') {
+            hashes += 1;
+            j += 1;
+        }
+        if self.b.get(j) != Some(&b'"') {
+            return false;
+        }
+        let (start, start_line) = (self.i, self.line);
+        j += 1;
+        // No escapes in raw strings: scan for `"` + hashes `#`s.
+        'scan: while j < self.b.len() {
+            if self.b[j] == b'\n' {
+                self.line += 1;
+                j += 1;
+                continue;
+            }
+            if self.b[j] == b'"' {
+                let mut k = 0usize;
+                while k < hashes && self.b.get(j + 1 + k) == Some(&b'#') {
+                    k += 1;
+                }
+                if k == hashes {
+                    j += 1 + hashes;
+                    break 'scan;
+                }
+            }
+            j += 1;
+        }
+        let text = String::from_utf8_lossy(&self.b[start..j.min(self.b.len())]).into_owned();
+        self.i = j;
+        self.push(TokKind::Literal, text, start_line);
+        true
+    }
+
+    /// `'a'` (char literal) vs `'a` (lifetime): a quote two bytes out
+    /// (or an escape) means char literal; otherwise lifetime.
+    fn char_or_lifetime(&mut self) {
+        let start_line = self.line;
+        let start = self.i;
+        match self.peek(1) {
+            Some(b'\\') => {
+                // Escaped char literal: consume the escaped scalar (so
+                // '\'' terminates on the right quote), then scan to the
+                // closing quote (covers multi-byte escapes like \u{7f}).
+                self.i += 2;
+                if self.i < self.b.len() {
+                    self.i += 1;
+                }
+                while self.i < self.b.len() && self.b[self.i] != b'\'' {
+                    self.i += 1;
+                }
+                self.i = (self.i + 1).min(self.b.len());
+                let text = String::from_utf8_lossy(&self.b[start..self.i]).into_owned();
+                self.push(TokKind::Literal, text, start_line);
+            }
+            Some(c) if is_ident_start(c) => {
+                // 'a' is a char, 'a / 'static are lifetimes. A char
+                // literal's payload is one scalar, so find where the
+                // ident run ends and check for a closing quote.
+                let mut j = self.i + 1;
+                while self.b.get(j).copied().is_some_and(is_ident_cont) {
+                    j += 1;
+                }
+                if self.b.get(j) == Some(&b'\'') {
+                    self.i = j + 1;
+                    let text = String::from_utf8_lossy(&self.b[start..self.i]).into_owned();
+                    self.push(TokKind::Literal, text, start_line);
+                } else {
+                    let text = String::from_utf8_lossy(&self.b[start + 1..j]).into_owned();
+                    self.i = j;
+                    self.push(TokKind::Lifetime, text, start_line);
+                }
+            }
+            Some(_) => {
+                // Char literal of a non-ident scalar ('{', '\u{…}'
+                // handled above, multibyte UTF-8, …): scan to close.
+                self.i += 1;
+                while self.i < self.b.len() && self.b[self.i] != b'\'' {
+                    if self.b[self.i] == b'\n' {
+                        self.line += 1;
+                    }
+                    self.i += 1;
+                }
+                self.i = (self.i + 1).min(self.b.len());
+                let text = String::from_utf8_lossy(&self.b[start..self.i]).into_owned();
+                self.push(TokKind::Literal, text, start_line);
+            }
+            None => {
+                self.i += 1;
+                self.push(TokKind::Punct, "'".into(), start_line);
+            }
+        }
+    }
+
+    fn ident(&mut self) {
+        let start = self.i;
+        while self.i < self.b.len() && is_ident_cont(self.b[self.i]) {
+            self.i += 1;
+        }
+        let text = String::from_utf8_lossy(&self.b[start..self.i]).into_owned();
+        self.push(TokKind::Ident, text, self.line);
+    }
+
+    /// Numeric literal: digits, `_`, hex/suffix letters, a decimal point
+    /// followed by a digit, and a sign directly after an exponent `e`.
+    fn number(&mut self) {
+        let start = self.i;
+        self.i += 1;
+        while self.i < self.b.len() {
+            let c = self.b[self.i];
+            if c.is_ascii_alphanumeric() || c == b'_' {
+                self.i += 1;
+            } else if c == b'.' && self.peek(1).is_some_and(|d| d.is_ascii_digit()) {
+                self.i += 1;
+            } else if (c == b'+' || c == b'-')
+                && matches!(self.b[self.i - 1], b'e' | b'E')
+                && self.b[start].is_ascii_digit()
+            {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        let text = String::from_utf8_lossy(&self.b[start..self.i]).into_owned();
+        self.push(TokKind::Literal, text, self.line);
+    }
+
+    fn punct_or_utf8(&mut self) {
+        let c = self.b[self.i];
+        if c < 0x80 {
+            self.push(TokKind::Punct, (c as char).to_string(), self.line);
+            self.i += 1;
+        } else {
+            // One UTF-8 scalar as a punct token (only reachable from
+            // non-ASCII code points outside strings/comments — rare).
+            let s = &self.b[self.i..];
+            let len = match std::str::from_utf8(s) {
+                Ok(t) => t.chars().next().map(|c| c.len_utf8()).unwrap_or(1),
+                Err(e) if e.valid_up_to() > 0 => {
+                    let t = std::str::from_utf8(&s[..e.valid_up_to()]).unwrap_or("?");
+                    t.chars().next().map(|c| c.len_utf8()).unwrap_or(1)
+                }
+                Err(_) => 1,
+            };
+            let text = String::from_utf8_lossy(&s[..len]).into_owned();
+            self.push(TokKind::Punct, text, self.line);
+            self.i += len;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn basic_tokens_carry_lines() {
+        let lx = lex("fn f() {\n    x.lock()\n}\n");
+        let lock = lx.tokens.iter().find(|t| t.is_ident("lock")).unwrap();
+        assert_eq!(lock.line, 2);
+        assert!(lx.tokens.iter().any(|t| t.is_punct('{')));
+        assert!(lx.tokens.iter().any(|t| t.is_punct('}')));
+    }
+
+    #[test]
+    fn line_and_nested_block_comments_leave_no_tokens() {
+        let src = "// x.lock().unwrap()\n/* outer /* inner */ x.lock() */ real\n";
+        let lx = lex(src);
+        assert_eq!(idents(src), vec!["real"]);
+        assert_eq!(lx.comments.len(), 2);
+        assert_eq!(lx.comments[0].line, 1);
+        assert!(lx.comments[1].text.contains("inner"));
+    }
+
+    #[test]
+    fn block_comment_spans_lines() {
+        let lx = lex("/* a\nb\nc */ after\n");
+        assert_eq!(lx.comments[0].line, 1);
+        assert_eq!(lx.comments[0].end_line, 3);
+        assert_eq!(lx.tokens[0].line, 3);
+    }
+
+    #[test]
+    fn string_contents_never_tokenize() {
+        // The adversarial cases the old line scanner got wrong: code-like
+        // text inside string literals.
+        let src = r#"let s = "x.lock().unwrap() { } // not a comment";"#;
+        let names = idents(src);
+        assert_eq!(names, vec!["let", "s"]);
+        let lx = lex(src);
+        assert!(lx.comments.is_empty());
+        assert!(!lx.tokens.iter().any(|t| t.is_punct('{')));
+    }
+
+    #[test]
+    fn raw_strings_with_hashes_and_braces() {
+        let src = "let s = r#\"contains lock() and \"quotes\" and { braces }\"#; done();";
+        let names = idents(src);
+        assert_eq!(names, vec!["let", "s", "done"]);
+        // Multi-hash raw string containing a single-hash terminator.
+        let src2 = "let t = r##\"inner \"# still open\"##; fin();";
+        assert_eq!(idents(src2), vec!["let", "t", "fin"]);
+    }
+
+    #[test]
+    fn byte_strings_and_byte_chars() {
+        let src = "let a = b\"lock()\"; let c = b'x'; let r = br#\"raw { }\"#; ok();";
+        assert_eq!(idents(src), vec!["let", "a", "let", "c", "let", "r", "ok"]);
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let lx = lex("fn f<'a>(x: &'a str) { let c = 'a'; let n = '\\n'; let brace = '{'; }");
+        let lifetimes: Vec<_> =
+            lx.tokens.iter().filter(|t| t.kind == TokKind::Lifetime).collect();
+        assert_eq!(lifetimes.len(), 2, "{lifetimes:?}");
+        assert!(lifetimes.iter().all(|t| t.text == "a"));
+        // '{' must be a char literal, not an open brace: only the fn
+        // body's open brace survives.
+        let opens = lx.tokens.iter().filter(|t| t.is_punct('{')).count();
+        assert_eq!(opens, 1);
+        assert!(lx.tokens.iter().any(|t| t.kind == TokKind::Lifetime));
+    }
+
+    #[test]
+    fn static_lifetime_and_multichar() {
+        let lx = lex("&'static str");
+        assert!(lx.tokens.iter().any(|t| t.kind == TokKind::Lifetime && t.text == "static"));
+    }
+
+    #[test]
+    fn raw_identifiers() {
+        let lx = lex("let r#type = 1;");
+        assert!(lx.tokens.iter().any(|t| t.is_ident("type")));
+        assert!(!lx.tokens.iter().any(|t| t.kind == TokKind::Literal));
+    }
+
+    #[test]
+    fn numbers_with_exponents_and_ranges() {
+        let lx = lex("for i in 0..10 { let x = 1.5e-3; let h = 0xFF_u32; }");
+        let lits: Vec<_> = lx
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Literal)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(lits, vec!["0", "10", "1.5e-3", "0xFF_u32"]);
+        // The range dots survive as puncts.
+        assert_eq!(lx.tokens.iter().filter(|t| t.is_punct('.')).count(), 2);
+    }
+
+    #[test]
+    fn multiline_strings_count_lines() {
+        let lx = lex("let s = \"a\nb\"; after();");
+        let after = lx.tokens.iter().find(|t| t.is_ident("after")).unwrap();
+        assert_eq!(after.line, 2);
+    }
+
+    #[test]
+    fn total_on_garbage() {
+        // Unterminated everything — must not panic or loop.
+        for src in ["\"abc", "r#\"abc", "/* abc", "'", "b'", "let x = 'a", "é ident"] {
+            let _ = lex(src);
+        }
+    }
+}

@@ -1,0 +1,260 @@
+//! Token-level static analysis over the crate's own sources.
+//!
+//! The engine's conformance story has two halves: `drrl fuzz`
+//! dynamically checks that paired execution paths are bit-identical
+//! (see [`crate::conformance`]), and `drrl lint` statically checks the
+//! source-level contracts the fuzzer relies on. This module is the
+//! static half — a three-layer pipeline, all in-tree (no proc-macro or
+//! syn dependency; the container is offline):
+//!
+//! 1. **[`lexer`]** — a small Rust lexer producing a token stream
+//!    (identifiers, lifetimes, literals, punctuation) with comments
+//!    captured separately. It understands nested block comments,
+//!    string/raw-string/byte-string literals (`r#"…"#` at any hash
+//!    depth), char-literal vs lifetime disambiguation and raw
+//!    identifiers, so rules never fire on code that only *appears*
+//!    inside a string or comment — the failure mode of the
+//!    line-oriented scanner this subsystem replaced.
+//!
+//! 2. **[`model`]** — a structural model per file: matched brace pairs,
+//!    `#[cfg(test)]`/`#[test]` region masks, fn spans, lock-guard
+//!    liveness (a let-bound guard lives to the end of its enclosing
+//!    block or an explicit `drop(guard)`, a temporary to the end of its
+//!    statement), receiver paths for method calls, intra-crate call
+//!    sites, and thread-pool closure regions (detached `execute`/
+//!    `spawn` bodies run on other threads, so caller guards are not
+//!    live inside them; scoped `scoped_for`/`scoped_map`/`chunked_for`
+//!    bodies block the caller, so they are).
+//!
+//! 3. **[`rules`]** — the seven rules R1–R7 matched over the model
+//!    (see [`rules::RULES`] for the catalogue and CONFORMANCE.md's
+//!    "Static rules" section for the contracts). File-local rules run
+//!    per file; the lock-order rule (R4) builds one acquisition graph
+//!    across every file and reports cycles.
+//!
+//! [`run_lint`] walks **all of `rust/src/`** recursively and analyzes
+//! every `.rs` file as one crate. [`report_json`] renders the result in
+//! the machine-readable schema the CI lint leg uploads, and
+//! [`validate_report`] re-validates that schema the same way
+//! `drrl bench-check` validates bench snapshots. Suppressions are
+//! rule-scoped: a `lint:allow(<rule>)` marker in a comment on the
+//! flagged line, or in the contiguous comment block directly above it,
+//! silences exactly that rule at that site.
+
+pub mod lexer;
+pub mod model;
+pub mod rules;
+
+pub use rules::{analyze_crate, analyze_source, LintViolation, RuleInfo, RULES};
+
+use crate::util::json::{obj, Json};
+use std::path::{Path, PathBuf};
+
+/// Schema version of the `drrl lint --json` report.
+pub const LINT_SCHEMA_VERSION: u64 = 1;
+
+/// The outcome of linting a tree: which files were scanned and every
+/// violation found.
+#[derive(Debug)]
+pub struct LintReport {
+    pub files_scanned: Vec<PathBuf>,
+    pub violations: Vec<LintViolation>,
+}
+
+/// Recursively collect every `.rs` file under `dir`, sorted for
+/// deterministic output. Shared by `drrl lint` and any future pass that
+/// needs the same tree walk (the old scanner's top-level-only walk let
+/// submodules silently escape linting).
+pub fn walk_rs_files(dir: &Path) -> Result<Vec<PathBuf>, String> {
+    fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+        let entries =
+            std::fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+        for entry in entries {
+            let entry = entry.map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+            let path = entry.path();
+            if path.is_dir() {
+                walk(&path, out)?;
+            } else if path.extension().is_some_and(|x| x == "rs") {
+                out.push(path);
+            }
+        }
+        Ok(())
+    }
+    let mut files = Vec::new();
+    walk(dir, &mut files)?;
+    files.sort();
+    Ok(files)
+}
+
+/// Lint the whole crate: every `.rs` file under `<root>/rust/src`,
+/// analyzed together so cross-file rules (lock-order) see the full
+/// call graph.
+pub fn run_lint_report(root: &Path) -> Result<LintReport, String> {
+    let src_root = root.join("rust").join("src");
+    let files = walk_rs_files(&src_root)?;
+    let mut sources = Vec::with_capacity(files.len());
+    for path in &files {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        sources.push((path.clone(), text));
+    }
+    let violations = analyze_crate(&sources);
+    Ok(LintReport { files_scanned: files, violations })
+}
+
+/// Compatibility wrapper: just the violations (the shape the original
+/// `conformance::lint::run_lint` exposed).
+pub fn run_lint(root: &Path) -> Result<Vec<LintViolation>, String> {
+    run_lint_report(root).map(|r| r.violations)
+}
+
+/// Render a [`LintReport`] in the `drrl lint --json` schema:
+///
+/// ```json
+/// {
+///   "schema_version": 1,
+///   "files_scanned": 40,
+///   "clean": false,
+///   "rules": [{"name": "lock-order", "contract": "…"}, …],
+///   "violations": [{"file": "…", "line": 12, "rule": "…", "text": "…"}, …]
+/// }
+/// ```
+pub fn report_json(report: &LintReport) -> Json {
+    let rules = RULES
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("name", Json::Str(r.name.to_string())),
+                ("contract", Json::Str(r.contract.to_string())),
+            ])
+        })
+        .collect();
+    let violations = report
+        .violations
+        .iter()
+        .map(|v| {
+            obj(vec![
+                ("file", Json::Str(v.file.display().to_string())),
+                ("line", Json::Num(v.line as f64)),
+                ("rule", Json::Str(v.rule.to_string())),
+                ("text", Json::Str(v.text.trim().to_string())),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("schema_version", Json::Num(LINT_SCHEMA_VERSION as f64)),
+        ("files_scanned", Json::Num(report.files_scanned.len() as f64)),
+        ("clean", Json::Bool(report.violations.is_empty())),
+        ("rules", Json::Arr(rules)),
+        ("violations", Json::Arr(violations)),
+    ])
+}
+
+/// Validate a parsed `drrl lint --json` report: required fields present,
+/// well-typed, and every number finite — the same discipline
+/// `drrl bench-check` applies to bench snapshots.
+pub fn validate_report(v: &Json) -> Result<(), String> {
+    let version = v
+        .get("schema_version")
+        .and_then(Json::as_f64)
+        .ok_or("missing schema_version")?;
+    if version != LINT_SCHEMA_VERSION as f64 {
+        return Err(format!("unsupported schema_version {version}"));
+    }
+    let scanned =
+        v.get("files_scanned").and_then(Json::as_f64).ok_or("missing files_scanned")?;
+    if !scanned.is_finite() || scanned < 0.0 {
+        return Err(format!("bad files_scanned {scanned}"));
+    }
+    v.get("clean").and_then(Json::as_bool).ok_or("missing clean")?;
+    let rules = v.get("rules").and_then(Json::as_arr).ok_or("missing rules")?;
+    if rules.len() != RULES.len() {
+        return Err(format!("expected {} rules, got {}", RULES.len(), rules.len()));
+    }
+    for r in rules {
+        r.get("name").and_then(Json::as_str).ok_or("rule missing name")?;
+        r.get("contract").and_then(Json::as_str).ok_or("rule missing contract")?;
+    }
+    let violations = v.get("violations").and_then(Json::as_arr).ok_or("missing violations")?;
+    for viol in violations {
+        viol.get("file").and_then(Json::as_str).ok_or("violation missing file")?;
+        let line = viol.get("line").and_then(Json::as_f64).ok_or("violation missing line")?;
+        if !line.is_finite() || line < 1.0 {
+            return Err(format!("bad violation line {line}"));
+        }
+        let rule = viol.get("rule").and_then(Json::as_str).ok_or("violation missing rule")?;
+        if !RULES.iter().any(|r| r.name == rule) {
+            return Err(format!("unknown rule {rule:?}"));
+        }
+        viol.get("text").and_then(Json::as_str).ok_or("violation missing text")?;
+    }
+    let clean = v.get("clean").and_then(Json::as_bool).unwrap_or(false);
+    if clean != violations.is_empty() {
+        return Err("clean flag inconsistent with violations array".into());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_json_round_trips_through_the_validator() {
+        let report = LintReport {
+            files_scanned: vec![PathBuf::from("rust/src/lib.rs")],
+            violations: vec![LintViolation {
+                file: PathBuf::from("rust/src/coordinator/x.rs"),
+                line: 7,
+                rule: "lock-unwrap",
+                text: "let g = m.lock().unwrap();".into(),
+            }],
+        };
+        let json = report_json(&report);
+        let text = json.to_string_pretty();
+        let parsed = Json::parse(&text).expect("report must be parseable JSON");
+        validate_report(&parsed).expect("report must validate");
+        assert_eq!(parsed.get("clean").and_then(Json::as_bool), Some(false));
+        assert_eq!(parsed.get("files_scanned").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(
+            parsed.get("violations").and_then(Json::as_arr).map(<[Json]>::len),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn validator_rejects_malformed_reports() {
+        let missing = Json::parse(r#"{"schema_version": 1}"#).unwrap();
+        assert!(validate_report(&missing).is_err());
+
+        let bad_rule = Json::parse(
+            r#"{"schema_version": 1, "files_scanned": 1, "clean": false,
+                "rules": [], "violations": [
+                  {"file": "x.rs", "line": 3, "rule": "made-up", "text": "t"}
+                ]}"#,
+        )
+        .unwrap();
+        assert!(validate_report(&bad_rule).is_err());
+
+        let clean_report = report_json(&LintReport { files_scanned: vec![], violations: vec![] });
+        let mut inconsistent = clean_report.to_string_compact();
+        inconsistent = inconsistent.replace("\"clean\":true", "\"clean\":false");
+        let parsed = Json::parse(&inconsistent).unwrap();
+        assert!(validate_report(&parsed).is_err());
+    }
+
+    #[test]
+    fn walker_recurses_into_submodules() {
+        let dir = std::env::temp_dir().join(format!("drrl_walk_{}", std::process::id()));
+        let sub = dir.join("a").join("b");
+        std::fs::create_dir_all(&sub).unwrap();
+        std::fs::write(dir.join("top.rs"), "fn t() {}\n").unwrap();
+        std::fs::write(sub.join("deep.rs"), "fn d() {}\n").unwrap();
+        std::fs::write(sub.join("notes.txt"), "skip me\n").unwrap();
+        let files = walk_rs_files(&dir).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        let names: Vec<_> =
+            files.iter().map(|p| p.file_name().unwrap().to_str().unwrap().to_string()).collect();
+        assert_eq!(names, vec!["deep.rs", "top.rs"], "sorted, recursive, .rs only");
+    }
+}

@@ -1,0 +1,741 @@
+//! Lightweight structural model over the token stream.
+//!
+//! Built once per file from [`crate::analysis::lexer::lex`] output, this
+//! model gives the rules everything they pattern-match against:
+//!
+//! * **block structure** — matched braces (`close_of`) and, per token,
+//!   the nearest enclosing open brace (`enclosing_open`);
+//! * **test regions** — a per-token mask covering `#[cfg(test)]` items
+//!   and `#[test]` functions, so rules scoped to non-test code skip
+//!   them without textual heuristics;
+//! * **items** — every `fn` with its name, body token range and
+//!   test-ness, the basis of the intra-crate call graph;
+//! * **guard liveness** — every lock acquisition (`.lock()`,
+//!   `.lock_unpoisoned()`, `.read()`, `.write()`, `.try_lock()`, empty
+//!   argument lists only) with the token range its guard stays live:
+//!   `let`-bound guards live to the end of the enclosing block or an
+//!   explicit `drop(guard)`, temporaries to the end of their statement;
+//! * **call sites** — `name(…)` and `.name(…)` occurrences inside each
+//!   fn body, resolved against crate fn names by the rules layer for
+//!   one level of lock-set propagation;
+//! * **detached closures** — bodies of closures handed to `execute` /
+//!   `spawn` run on another thread, so a caller-held guard is *not*
+//!   held inside them (scoped closures — `scoped_for`, `scoped_map`,
+//!   `chunked_for` — do block the caller and stay included).
+//!
+//! The model is heuristic, not a full parser: it never resolves types
+//! or imports. The rules compensate by matching conservative patterns
+//! and offering `lint:allow(rule)` for the rare justified exception.
+
+use super::lexer::{lex, Lexed, TokKind};
+
+/// One `fn` item: name, body token range (indices of `{` and `}`).
+#[derive(Debug, Clone)]
+pub struct FnInfo {
+    pub name: String,
+    pub line: usize,
+    /// Token index of the body's open brace.
+    pub open: usize,
+    /// Token index of the matching close brace.
+    pub close: usize,
+    pub is_test: bool,
+}
+
+/// One lock acquisition and the region its guard is live.
+#[derive(Debug, Clone)]
+pub struct LockAcq {
+    /// Lock identity: the final field/variable identifier of the
+    /// receiver chain (`shared.shards[i].lock()` → `shards`).
+    pub name: String,
+    /// Full receiver path for diagnostics (`shared.shards`).
+    pub path: String,
+    /// Token index of the lock-method identifier.
+    pub tok: usize,
+    pub line: usize,
+    /// Tokens `[start, end]` (inclusive) where the guard is live.
+    pub live: (usize, usize),
+    /// True when the acquisition sits inside a detached closure
+    /// (`execute` / `spawn`): it runs on another thread, so guards of
+    /// the enclosing fn are not held around it and it must not join
+    /// the enclosing fn's propagated lock summary.
+    pub detached: bool,
+}
+
+/// One call site inside a fn body.
+#[derive(Debug, Clone)]
+pub struct CallSite {
+    pub callee: String,
+    pub tok: usize,
+    pub line: usize,
+}
+
+/// A token range `[start, end]` (inclusive) of a worker-context closure
+/// or worker-loop fn body.
+pub type Region = (usize, usize);
+
+/// Methods whose empty-argument call acquires a guard.
+pub const LOCK_METHODS: [&str; 5] = ["lock", "lock_unpoisoned", "read", "write", "try_lock"];
+
+/// Methods taking a closure that runs on *another* thread (fire and
+/// forget): caller guards are not held inside.
+pub const DETACHED_CLOSURE_METHODS: [&str; 2] = ["execute", "spawn"];
+
+/// Methods taking a closure that blocks the caller until completion:
+/// caller guards stay held, and these closures are worker contexts.
+pub const SCOPED_CLOSURE_METHODS: [&str; 3] = ["scoped_for", "scoped_map", "chunked_for"];
+
+/// Structural model of one file.
+pub struct FileModel {
+    pub lexed: Lexed,
+    pub fns: Vec<FnInfo>,
+    /// Per-token: inside `#[cfg(test)]` / `#[test]` code.
+    pub test_mask: Vec<bool>,
+    /// For each `{` token index, the matching `}` index.
+    pub close_of: Vec<Option<usize>>,
+    /// For each token, the nearest enclosing `{` token index.
+    pub enclosing_open: Vec<Option<usize>>,
+    /// All lock acquisitions, fn-attributed by token range.
+    pub locks: Vec<LockAcq>,
+    /// All call sites across the file.
+    pub calls: Vec<CallSite>,
+    /// Worker-context regions: detached + scoped thread-pool closures
+    /// and bodies of `*worker*` / `*_main` / `*_loop` fns.
+    pub worker_regions: Vec<Region>,
+    /// Detached-closure regions only (subset of `worker_regions`).
+    pub detached_regions: Vec<Region>,
+}
+
+impl FileModel {
+    pub fn build(source: &str) -> FileModel {
+        let lexed = lex(source);
+        let n = lexed.tokens.len();
+        let (close_of, enclosing_open) = match_braces(&lexed);
+        let test_mask = test_regions(&lexed, &close_of);
+        let fns = find_fns(&lexed, &close_of, &test_mask);
+        let (worker_regions, detached_regions) = closure_regions(&lexed, &close_of, &fns);
+        let locks = find_locks(&lexed, &close_of, &enclosing_open, &detached_regions);
+        let calls = find_calls(&lexed);
+        let mut m = FileModel {
+            lexed,
+            fns,
+            test_mask,
+            close_of,
+            enclosing_open,
+            locks,
+            calls,
+            worker_regions,
+            detached_regions,
+        };
+        debug_assert_eq!(m.test_mask.len(), n);
+        m.locks.sort_by_key(|l| l.tok);
+        m
+    }
+
+    /// Is token `i` inside test code?
+    pub fn in_test(&self, i: usize) -> bool {
+        self.test_mask.get(i).copied().unwrap_or(false)
+    }
+
+    /// The fn whose body contains token `i`.
+    pub fn fn_at(&self, i: usize) -> Option<&FnInfo> {
+        // Innermost wins (nested fns): pick the smallest containing body.
+        self.fns
+            .iter()
+            .filter(|f| f.open < i && i < f.close)
+            .min_by_key(|f| f.close - f.open)
+    }
+
+    /// Guards live at token `i` (their live range covers `i`), excluding
+    /// guards acquired outside a detached closure when `i` is inside one
+    /// (the closure runs on another thread).
+    pub fn live_guards_at(&self, i: usize) -> Vec<&LockAcq> {
+        let in_detached =
+            self.detached_regions.iter().find(|&&(s, e)| s <= i && i <= e).copied();
+        self.locks
+            .iter()
+            .filter(|l| l.live.0 <= i && i <= l.live.1 && l.tok != i)
+            .filter(|l| match in_detached {
+                // Inside a detached closure only guards acquired in the
+                // same closure are genuinely held.
+                Some((s, e)) => s <= l.tok && l.tok <= e,
+                None => true,
+            })
+            .collect()
+    }
+}
+
+/// Brace matching over the token stream.
+fn match_braces(lx: &Lexed) -> (Vec<Option<usize>>, Vec<Option<usize>>) {
+    let n = lx.tokens.len();
+    let mut close_of = vec![None; n];
+    let mut enclosing = vec![None; n];
+    let mut stack: Vec<usize> = Vec::new();
+    for i in 0..n {
+        if lx.punct(i, '}') {
+            if let Some(o) = stack.pop() {
+                close_of[o] = Some(i);
+            }
+        }
+        enclosing[i] = stack.last().copied();
+        if lx.punct(i, '{') {
+            stack.push(i);
+        }
+    }
+    (close_of, enclosing)
+}
+
+/// Does the attribute token slice mark test code? `#[test]` yes,
+/// `#[cfg(test)]` yes, `#[cfg(not(test))]` no (it contains `not`).
+fn attr_is_test(lx: &Lexed, content: std::ops::Range<usize>) -> bool {
+    let mut has_test = false;
+    for i in content {
+        if lx.ident(i) == Some("not") {
+            return false;
+        }
+        if lx.ident(i) == Some("test") {
+            has_test = true;
+        }
+    }
+    has_test
+}
+
+/// Per-token mask of `#[cfg(test)]` / `#[test]` items.
+fn test_regions(lx: &Lexed, close_of: &[Option<usize>]) -> Vec<bool> {
+    let n = lx.tokens.len();
+    let mut mask = vec![false; n];
+    let mut i = 0usize;
+    while i + 1 < n {
+        if !(lx.punct(i, '#') && lx.punct(i + 1, '[')) {
+            i += 1;
+            continue;
+        }
+        // Find the attribute's closing `]` (nesting-aware).
+        let mut depth = 0i64;
+        let mut j = i + 1;
+        let attr_end = loop {
+            if j >= n {
+                break n - 1;
+            }
+            if lx.punct(j, '[') {
+                depth += 1;
+            } else if lx.punct(j, ']') {
+                depth -= 1;
+                if depth == 0 {
+                    break j;
+                }
+            }
+            j += 1;
+        };
+        if !attr_is_test(lx, i + 2..attr_end) {
+            i = attr_end + 1;
+            continue;
+        }
+        // Mark from the attribute through the end of the annotated item:
+        // skip further attributes, then through the matching `}` of the
+        // first body brace (or through a `;` for braceless items).
+        let mut k = attr_end + 1;
+        let mut paren = 0i64;
+        let item_end = loop {
+            if k >= n {
+                break n - 1;
+            }
+            if lx.punct(k, '#') && lx.punct(k + 1, '[') {
+                // Another attribute: skip it.
+                let mut d = 0i64;
+                k += 1;
+                while k < n {
+                    if lx.punct(k, '[') {
+                        d += 1;
+                    } else if lx.punct(k, ']') {
+                        d -= 1;
+                        if d == 0 {
+                            break;
+                        }
+                    }
+                    k += 1;
+                }
+                k += 1;
+                continue;
+            }
+            if lx.punct(k, '(') || lx.punct(k, '[') {
+                paren += 1;
+            } else if lx.punct(k, ')') || lx.punct(k, ']') {
+                paren -= 1;
+            } else if paren == 0 && lx.punct(k, '{') {
+                break close_of[k].unwrap_or(n - 1);
+            } else if paren == 0 && lx.punct(k, ';') {
+                break k;
+            }
+            k += 1;
+        };
+        for m in mask.iter_mut().take(item_end + 1).skip(i) {
+            *m = true;
+        }
+        i = item_end + 1;
+    }
+    mask
+}
+
+/// Every `fn name … { … }` item (declarations without bodies skipped).
+fn find_fns(lx: &Lexed, close_of: &[Option<usize>], test_mask: &[bool]) -> Vec<FnInfo> {
+    let n = lx.tokens.len();
+    let mut fns = Vec::new();
+    for i in 0..n.saturating_sub(1) {
+        if lx.ident(i) != Some("fn") {
+            continue;
+        }
+        let Some(name) = lx.ident(i + 1) else { continue };
+        // Scan for the body's `{` (or a `;` ending a bodyless
+        // declaration) outside parens/brackets.
+        let mut depth = 0i64;
+        let mut k = i + 2;
+        let mut open = None;
+        while k < n {
+            if lx.punct(k, '(') || lx.punct(k, '[') {
+                depth += 1;
+            } else if lx.punct(k, ')') || lx.punct(k, ']') {
+                depth -= 1;
+            } else if depth == 0 && lx.punct(k, '{') {
+                open = Some(k);
+                break;
+            } else if depth == 0 && lx.punct(k, ';') {
+                break;
+            }
+            k += 1;
+        }
+        if let Some(open) = open {
+            if let Some(close) = close_of[open] {
+                fns.push(FnInfo {
+                    name: name.to_string(),
+                    line: lx.tokens[i + 1].line,
+                    open,
+                    close,
+                    is_test: test_mask.get(i).copied().unwrap_or(false),
+                });
+            }
+        }
+    }
+    fns
+}
+
+/// Worker-context regions: closures passed to thread-pool methods, and
+/// the bodies of fns whose names mark them as worker loops.
+fn closure_regions(
+    lx: &Lexed,
+    close_of: &[Option<usize>],
+    fns: &[FnInfo],
+) -> (Vec<Region>, Vec<Region>) {
+    let n = lx.tokens.len();
+    let mut worker = Vec::new();
+    let mut detached = Vec::new();
+    for i in 0..n.saturating_sub(1) {
+        let Some(name) = lx.ident(i) else { continue };
+        let is_detached = DETACHED_CLOSURE_METHODS.contains(&name);
+        let is_scoped = SCOPED_CLOSURE_METHODS.contains(&name);
+        if (!is_detached && !is_scoped) || !lx.punct(i + 1, '(') {
+            continue;
+        }
+        // Inside the call's argument list, find the closure: `|params|`
+        // (possibly after `move`), then a block or a bare expression.
+        let mut depth = 0i64;
+        let mut j = i + 1;
+        let mut call_close = None;
+        let mut bar = None;
+        while j < n {
+            if lx.punct(j, '(') {
+                depth += 1;
+            } else if lx.punct(j, ')') {
+                depth -= 1;
+                if depth == 0 {
+                    call_close = Some(j);
+                    break;
+                }
+            } else if depth == 1 && bar.is_none() && lx.punct(j, '|') {
+                bar = Some(j);
+            } else if lx.punct(j, '{') {
+                // Skip nested blocks while hunting the closure head.
+                j = close_of[j].unwrap_or(j);
+            }
+            j += 1;
+        }
+        let (Some(bar), Some(call_close)) = (bar, call_close) else { continue };
+        // Params end at the next `|` ( `||` → immediately).
+        let mut p = bar + 1;
+        while p < n && !lx.punct(p, '|') && p < call_close {
+            p += 1;
+        }
+        if p >= call_close {
+            continue;
+        }
+        // Body: block → matching braces; expression → rest of the call.
+        let body: Region = if lx.punct(p + 1, '{') {
+            (p + 1, close_of[p + 1].unwrap_or(call_close))
+        } else {
+            (p + 1, call_close)
+        };
+        worker.push(body);
+        if is_detached {
+            detached.push(body);
+        }
+    }
+    for f in fns {
+        let lname = f.name.to_lowercase();
+        if lname.contains("worker") || lname.ends_with("_main") || lname.ends_with("_loop") {
+            worker.push((f.open, f.close));
+        }
+    }
+    worker.sort_unstable();
+    detached.sort_unstable();
+    (worker, detached)
+}
+
+/// Walk backwards from a method call's `.` to recover the receiver
+/// chain: idents joined by `.`/`::`, skipping index (`[…]`) and call
+/// (`(…)`) suffixes. Returns idents in source order.
+pub fn receiver_path(lx: &Lexed, dot: usize) -> Vec<String> {
+    let mut path = Vec::new();
+    let mut i = dot; // points at the `.` before the lock method
+    loop {
+        if i == 0 {
+            break;
+        }
+        // Element before the `.`/`::`:
+        let mut j = i - 1;
+        // Skip one or more trailing `[…]` / `(…)` groups.
+        loop {
+            if lx.punct(j, ']') || lx.punct(j, ')') {
+                let (open, close) = if lx.punct(j, ']') { ('[', ']') } else { ('(', ')') };
+                let mut depth = 0i64;
+                while j > 0 {
+                    if lx.punct(j, close) {
+                        depth += 1;
+                    } else if lx.punct(j, open) {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    j -= 1;
+                }
+                if j == 0 {
+                    return path;
+                }
+                j -= 1;
+            } else {
+                break;
+            }
+        }
+        match lx.tokens.get(j).map(|t| t.kind) {
+            Some(TokKind::Ident) => path.push(lx.tokens[j].text.clone()),
+            _ => break,
+        }
+        // Continue the chain through `.` or `::`.
+        if j >= 1 && lx.punct(j - 1, '.') {
+            i = j - 1;
+        } else if j >= 2 && lx.punct(j - 1, ':') && lx.punct(j - 2, ':') {
+            i = j - 2;
+        } else {
+            break;
+        }
+    }
+    path.reverse();
+    path
+}
+
+/// Find lock acquisitions and compute guard live ranges.
+fn find_locks(
+    lx: &Lexed,
+    close_of: &[Option<usize>],
+    enclosing_open: &[Option<usize>],
+    detached_regions: &[Region],
+) -> Vec<LockAcq> {
+    let n = lx.tokens.len();
+    let mut out = Vec::new();
+    for i in 2..n {
+        let Some(m) = lx.ident(i) else { continue };
+        if !LOCK_METHODS.contains(&m) {
+            continue;
+        }
+        // `.method()` with an empty argument list — RwLock/Mutex style.
+        if !(lx.punct(i - 1, '.') && lx.punct(i + 1, '(') && lx.punct(i + 2, ')')) {
+            continue;
+        }
+        let path = receiver_path(lx, i - 1);
+        let Some(last) = path.last() else { continue };
+        let name = last.clone();
+        let path_str = path.join(".");
+
+        // Statement start: walk back to the previous `;`, `{` or `}`.
+        let mut s = i;
+        while s > 0 && !(lx.punct(s - 1, ';') || lx.punct(s - 1, '{') || lx.punct(s - 1, '}')) {
+            s -= 1;
+        }
+        // `let [mut] guard = …` binding?
+        let mut guard_var: Option<String> = None;
+        if lx.ident(s) == Some("let") {
+            let mut v = s + 1;
+            if lx.ident(v) == Some("mut") {
+                v += 1;
+            }
+            if let Some(var) = lx.ident(v) {
+                // `let _ = x.lock()` drops the guard immediately.
+                if var != "_" {
+                    guard_var = Some(var.to_string());
+                }
+            }
+        }
+
+        // Statement end: forward to the `;` at relative depth 0.
+        let stmt_end = {
+            let mut depth = 0i64;
+            let mut k = i;
+            loop {
+                if k >= n {
+                    break n - 1;
+                }
+                if lx.punct(k, '(') || lx.punct(k, '[') || lx.punct(k, '{') {
+                    depth += 1;
+                } else if lx.punct(k, ')') || lx.punct(k, ']') || lx.punct(k, '}') {
+                    depth -= 1;
+                    if depth < 0 {
+                        break k;
+                    }
+                } else if depth == 0 && lx.punct(k, ';') {
+                    break k;
+                }
+                k += 1;
+            }
+        };
+
+        let live_end = match &guard_var {
+            None => stmt_end,
+            Some(var) => {
+                // To the end of the enclosing block, or an explicit
+                // `drop(var)`.
+                let block_end = enclosing_open[i]
+                    .and_then(|o| close_of[o])
+                    .unwrap_or(n - 1);
+                let mut end = block_end;
+                let mut k = stmt_end;
+                while k + 3 <= block_end {
+                    if lx.ident(k) == Some("drop")
+                        && lx.punct(k + 1, '(')
+                        && lx.ident(k + 2) == Some(var)
+                        && lx.punct(k + 3, ')')
+                    {
+                        end = k;
+                        break;
+                    }
+                    k += 1;
+                }
+                end
+            }
+        };
+
+        let detached = detached_regions.iter().any(|&(s, e)| s <= i && i <= e);
+        out.push(LockAcq {
+            name,
+            path: path_str,
+            tok: i,
+            line: lx.tokens[i].line,
+            live: (i, live_end),
+            detached,
+        });
+    }
+    out
+}
+
+/// Keywords that look like calls (`if (…)`, `while (…)` …).
+const CALL_KEYWORDS: [&str; 10] =
+    ["if", "while", "for", "match", "loop", "return", "fn", "let", "in", "move"];
+
+/// `name(…)` / `.name(…)` call sites (macros `name!(…)` excluded).
+fn find_calls(lx: &Lexed) -> Vec<CallSite> {
+    let n = lx.tokens.len();
+    let mut out = Vec::new();
+    for i in 0..n.saturating_sub(1) {
+        let Some(name) = lx.ident(i) else { continue };
+        if CALL_KEYWORDS.contains(&name) || !lx.punct(i + 1, '(') {
+            continue;
+        }
+        // `fn name(` is a definition, not a call.
+        if i >= 1 && lx.ident(i - 1) == Some("fn") {
+            continue;
+        }
+        out.push(CallSite { callee: name.to_string(), tok: i, line: lx.tokens[i].line });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fns_and_braces() {
+        let m = FileModel::build("fn a() { inner(); }\nfn b(x: usize) -> usize { x }\n");
+        assert_eq!(m.fns.len(), 2);
+        assert_eq!(m.fns[0].name, "a");
+        assert_eq!(m.fns[1].name, "b");
+        assert!(m.close_of[m.fns[0].open] == Some(m.fns[0].close));
+    }
+
+    #[test]
+    fn bodyless_declarations_are_skipped() {
+        let m = FileModel::build("trait T { fn sig(&self) -> usize; fn has_body(&self) {} }");
+        let names: Vec<_> = m.fns.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, vec!["has_body"]);
+    }
+
+    #[test]
+    fn test_mask_covers_cfg_test_mod_and_test_fns() {
+        let src = concat!(
+            "fn live() { x.lock().unwrap(); }\n",
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    #[test]\n",
+            "    fn t() { y.lock().unwrap(); }\n",
+            "}\n",
+        );
+        let m = FileModel::build(src);
+        let live = m.fns.iter().find(|f| f.name == "live").unwrap();
+        let t = m.fns.iter().find(|f| f.name == "t").unwrap();
+        assert!(!live.is_test);
+        assert!(t.is_test);
+        assert!(!m.in_test(live.open));
+        assert!(m.in_test(t.open));
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_test_code() {
+        let src = "#[cfg(not(test))]\nfn shipping() { work(); }\n";
+        let m = FileModel::build(src);
+        assert!(!m.fns[0].is_test);
+    }
+
+    #[test]
+    fn let_bound_guard_lives_to_block_end() {
+        let src = concat!(
+            "fn f() {\n",
+            "    let g = state.lock_unpoisoned();\n", // line 2
+            "    use_it(&g);\n",
+            "    other.lock_unpoisoned();\n", // line 4: acquired under g
+            "}\n",
+            "fn after() { clean(); }\n",
+        );
+        let m = FileModel::build(src);
+        assert_eq!(m.locks.len(), 2);
+        let other = m.locks.iter().find(|l| l.name == "other").unwrap();
+        let held = m.live_guards_at(other.tok);
+        assert_eq!(held.len(), 1);
+        assert_eq!(held[0].name, "state");
+        // Nothing is live in the next fn.
+        let clean_call = m.calls.iter().find(|c| c.callee == "clean").unwrap();
+        assert!(m.live_guards_at(clean_call.tok).is_empty());
+    }
+
+    #[test]
+    fn drop_ends_the_guard_early() {
+        let src = concat!(
+            "fn f() {\n",
+            "    let g = state.lock_unpoisoned();\n",
+            "    drop(g);\n",
+            "    other.lock_unpoisoned();\n",
+            "}\n",
+        );
+        let m = FileModel::build(src);
+        let other = m.locks.iter().find(|l| l.name == "other").unwrap();
+        assert!(m.live_guards_at(other.tok).is_empty());
+    }
+
+    #[test]
+    fn temporary_guard_dies_at_statement_end() {
+        let src = concat!(
+            "fn f() {\n",
+            "    counters.lock_unpoisoned().push(1);\n",
+            "    other.lock_unpoisoned();\n",
+            "}\n",
+        );
+        let m = FileModel::build(src);
+        let other = m.locks.iter().find(|l| l.name == "other").unwrap();
+        assert!(m.live_guards_at(other.tok).is_empty());
+    }
+
+    #[test]
+    fn receiver_paths_skip_indexing() {
+        let m = FileModel::build("fn f() { let g = shared.shards[layer].lock_unpoisoned(); }");
+        assert_eq!(m.locks.len(), 1);
+        assert_eq!(m.locks[0].name, "shards");
+        assert_eq!(m.locks[0].path, "shared.shards");
+    }
+
+    #[test]
+    fn read_with_arguments_is_not_a_lock() {
+        // io::Read::read takes a buffer; RwLock::read takes nothing.
+        let m = FileModel::build("fn f() { file.read(&mut buf); rw.read(); }");
+        assert_eq!(m.locks.len(), 1);
+        assert_eq!(m.locks[0].name, "rw");
+    }
+
+    #[test]
+    fn detached_closures_shed_caller_guards() {
+        let src = concat!(
+            "fn f() {\n",
+            "    let g = state.lock_unpoisoned();\n",
+            "    pool.execute(move || {\n",
+            "        inner.lock_unpoisoned();\n",
+            "    });\n",
+            "}\n",
+        );
+        let m = FileModel::build(src);
+        let inner = m.locks.iter().find(|l| l.name == "inner").unwrap();
+        assert!(inner.detached);
+        assert!(
+            m.live_guards_at(inner.tok).is_empty(),
+            "caller guard must not appear held inside a detached closure"
+        );
+    }
+
+    #[test]
+    fn scoped_closures_keep_caller_guards() {
+        let src = concat!(
+            "fn f() {\n",
+            "    let g = state.lock_unpoisoned();\n",
+            "    pool.scoped_for(4, |i| {\n",
+            "        inner.lock_unpoisoned();\n",
+            "    });\n",
+            "}\n",
+        );
+        let m = FileModel::build(src);
+        let inner = m.locks.iter().find(|l| l.name == "inner").unwrap();
+        assert!(!inner.detached);
+        let held = m.live_guards_at(inner.tok);
+        assert_eq!(held.len(), 1);
+        assert_eq!(held[0].name, "state");
+    }
+
+    #[test]
+    fn worker_regions_cover_loop_fns_and_closures() {
+        let src = concat!(
+            "fn device_main() { work(); }\n",
+            "fn submit(pool: &P) { pool.execute(|| job()); }\n",
+        );
+        let m = FileModel::build(src);
+        let work = m.calls.iter().find(|c| c.callee == "work").unwrap();
+        let job = m.calls.iter().find(|c| c.callee == "job").unwrap();
+        assert!(m.worker_regions.iter().any(|&(s, e)| s <= work.tok && work.tok <= e));
+        assert!(m.worker_regions.iter().any(|&(s, e)| s <= job.tok && job.tok <= e));
+        let submit = m.calls.iter().find(|c| c.callee == "execute").unwrap();
+        assert!(!m.worker_regions.iter().any(|&(s, e)| s <= submit.tok && submit.tok <= e));
+    }
+
+    #[test]
+    fn calls_exclude_macros_and_keywords() {
+        let m = FileModel::build("fn f() { println!(\"x\"); helper(); if (a) { g(); } }");
+        let names: Vec<_> = m.calls.iter().map(|c| c.callee.as_str()).collect();
+        assert!(names.contains(&"helper"));
+        assert!(names.contains(&"g"));
+        assert!(!names.contains(&"println"));
+        assert!(!names.contains(&"if"));
+    }
+}

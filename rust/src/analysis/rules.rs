@@ -1,0 +1,973 @@
+//! The seven static rules, matched over the structural model.
+//!
+//! | Rule | Contract |
+//! |---|---|
+//! | R1 `lock-unwrap` | no poisoning `.lock().unwrap()` / `.expect(…)` (or condvar-wait equivalents) — shed poison via `util::sync` |
+//! | R2 `instant-in-decide` | no `Instant::now()` in decide-critical sections: anywhere in `rank_controller.rs`, or while a shard-lock guard is live (crate-wide) |
+//! | R3 `raw-mpsc` | no `std::sync::mpsc` outside `coordinator/completion.rs` |
+//! | R4 `lock-order` | the lock-acquisition graph (lock taken while another guard is live, propagated one level through the call graph) must be acyclic |
+//! | R5 `nondet-iter` | no `HashMap`/`HashSet` iteration in bit-identity-critical modules (`coordinator/`, `linalg/`, `conformance/`) |
+//! | R6 `panic-in-worker` | no `unwrap()` / `expect(…)` / `panic!` inside thread-pool closures or worker-loop fns (non-test) |
+//! | R7 `pool-shape-partition` | no pool-size / thread-count reads inside `linalg/` — chunk partitions are pure functions of problem shape |
+//!
+//! Every rule skips test code (`#[cfg(test)]` items, `#[test]` fns) and
+//! honors a `lint:allow(<rule>)` annotation in a comment on the flagged
+//! line or in the contiguous comment block directly above it.
+
+use super::model::{receiver_path, FileModel, LockAcq};
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// One rule violation at a source location.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LintViolation {
+    pub file: PathBuf,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: &'static str,
+    pub text: String,
+}
+
+impl fmt::Display for LintViolation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file.display(), self.line, self.rule, self.text.trim())
+    }
+}
+
+/// Catalogue entry for one rule (drives `--json` output and docs).
+#[derive(Debug, Clone, Copy)]
+pub struct RuleInfo {
+    pub name: &'static str,
+    pub contract: &'static str,
+}
+
+/// The rule catalogue, R1–R7 in order.
+pub const RULES: [RuleInfo; 7] = [
+    RuleInfo {
+        name: "lock-unwrap",
+        contract: "no poisoning .lock()/.read()/.write()/.wait(..) unwrap/expect on sync \
+                   primitives; shed poison via util::sync::{LockExt, CondvarExt}",
+    },
+    RuleInfo {
+        name: "instant-in-decide",
+        contract: "no Instant::now() in decide-critical sections (rank_controller.rs, or \
+                   while a shard-lock guard is live anywhere in the crate)",
+    },
+    RuleInfo {
+        name: "raw-mpsc",
+        contract: "no std::sync::mpsc outside coordinator/completion.rs; annotated \
+                   exceptions only",
+    },
+    RuleInfo {
+        name: "lock-order",
+        contract: "the crate-wide lock acquisition graph (lock B taken while guard A is \
+                   live, one level of call propagation) must have no cycles",
+    },
+    RuleInfo {
+        name: "nondet-iter",
+        contract: "no HashMap/HashSet iteration inside bit-identity-critical modules \
+                   (coordinator/, linalg/, conformance/)",
+    },
+    RuleInfo {
+        name: "panic-in-worker",
+        contract: "no unwrap()/expect(..)/panic! inside thread-pool closures or worker \
+                   loops (non-test code)",
+    },
+    RuleInfo {
+        name: "pool-shape-partition",
+        contract: "no pool-size/thread-count reads inside linalg/; chunk partitions are \
+                   pure functions of problem shape",
+    },
+];
+
+/// Analysis context for one file.
+struct Ctx {
+    path: PathBuf,
+    model: FileModel,
+    lines: Vec<String>,
+}
+
+impl Ctx {
+    fn new(path: PathBuf, source: &str) -> Ctx {
+        Ctx { model: FileModel::build(source), lines: source.lines().map(String::from).collect(), path }
+    }
+
+    fn file_name(&self) -> &str {
+        self.path.file_name().and_then(|n| n.to_str()).unwrap_or("")
+    }
+
+    /// Is the file inside `rust/src/<module>/` (by path component)?
+    fn in_module(&self, module: &str) -> bool {
+        self.path.components().any(|c| c.as_os_str() == module)
+    }
+
+    fn line_text(&self, line: usize) -> String {
+        self.lines.get(line.saturating_sub(1)).cloned().unwrap_or_default()
+    }
+
+    /// Is `lint:allow(<rule>)` present on `line` or in the contiguous
+    /// comment block directly above it? `aliases` supplements the rule
+    /// name (e.g. the legacy `lint:allow(mpsc)` spelling).
+    fn allowed(&self, line: usize, rule: &str, aliases: &[&str]) -> bool {
+        let mut markers: Vec<String> = vec![format!("lint:allow({rule})")];
+        markers.extend(aliases.iter().map(|a| format!("lint:allow({a})")));
+        let has_marker =
+            |text: &str| markers.iter().any(|m| text.contains(m.as_str()));
+        // Same-line trailing comment.
+        for c in &self.model.lexed.comments {
+            if c.line <= line && line <= c.end_line && has_marker(&c.text) {
+                return true;
+            }
+        }
+        // Contiguous comment block ending directly above `line`: walk the
+        // chain of comments whose spans stack without gaps.
+        let mut want_end = line - 1;
+        loop {
+            let Some(c) = self.model.lexed.comments.iter().find(|c| c.end_line == want_end)
+            else {
+                return false;
+            };
+            if has_marker(&c.text) {
+                return true;
+            }
+            if c.line == 0 {
+                return false;
+            }
+            want_end = c.line - 1;
+        }
+    }
+
+    fn push(&self, out: &mut Vec<LintViolation>, line: usize, rule: &'static str, text: String) {
+        out.push(LintViolation { file: self.path.clone(), line, rule, text });
+    }
+
+    fn flag_line(
+        &self,
+        out: &mut Vec<LintViolation>,
+        line: usize,
+        rule: &'static str,
+        aliases: &[&str],
+    ) {
+        if !self.allowed(line, rule, aliases) {
+            self.push(out, line, rule, self.line_text(line));
+        }
+    }
+}
+
+/// Analyze one standalone source file (all file-local rules plus any
+/// lock-order cycles visible within the file).
+pub fn analyze_source(path: &Path, source: &str) -> Vec<LintViolation> {
+    analyze_crate(&[(path.to_path_buf(), source.to_string())])
+}
+
+/// Analyze a set of files as one crate: every file-local rule per file,
+/// plus the crate-wide lock-order graph (R4).
+pub fn analyze_crate(files: &[(PathBuf, String)]) -> Vec<LintViolation> {
+    let ctxs: Vec<Ctx> =
+        files.iter().map(|(p, s)| Ctx::new(p.clone(), s)).collect();
+    let mut out = Vec::new();
+    for ctx in &ctxs {
+        r1_lock_unwrap(ctx, &mut out);
+        r2_instant_in_decide(ctx, &mut out);
+        r3_raw_mpsc(ctx, &mut out);
+        r5_nondet_iter(ctx, &mut out);
+        r6_panic_in_worker(ctx, &mut out);
+        r7_pool_shape_partition(ctx, &mut out);
+    }
+    r4_lock_order(&ctxs, &mut out);
+    out.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    out
+}
+
+/// Skip-matching over a balanced `(…)` group starting at open paren `i`;
+/// returns the index of the matching `)`.
+fn matching_paren(m: &FileModel, i: usize) -> Option<usize> {
+    let lx = &m.lexed;
+    let mut depth = 0i64;
+    let mut j = i;
+    while j < lx.tokens.len() {
+        if lx.punct(j, '(') {
+            depth += 1;
+        } else if lx.punct(j, ')') {
+            depth -= 1;
+            if depth == 0 {
+                return Some(j);
+            }
+        }
+        j += 1;
+    }
+    None
+}
+
+/// R1 — poisoning unwrap/expect on lock, rwlock and condvar-wait
+/// results, crate-wide outside test code.
+fn r1_lock_unwrap(ctx: &Ctx, out: &mut Vec<LintViolation>) {
+    let m = &ctx.model;
+    let lx = &m.lexed;
+    for i in 1..lx.tokens.len() {
+        if m.in_test(i) || !lx.punct(i - 1, '.') {
+            continue;
+        }
+        let Some(name) = lx.ident(i) else { continue };
+        let poisoning_tail = |after: usize| -> bool {
+            lx.punct(after, '.')
+                && ((lx.ident(after + 1) == Some("unwrap")
+                    && lx.punct(after + 2, '(')
+                    && lx.punct(after + 3, ')'))
+                    || (lx.ident(after + 1) == Some("expect") && lx.punct(after + 2, '(')))
+        };
+        let hit = match name {
+            // `.lock().unwrap()` and friends: empty argument lists.
+            "lock" | "read" | "write" | "try_lock" => {
+                lx.punct(i + 1, '(') && lx.punct(i + 2, ')') && poisoning_tail(i + 3)
+            }
+            // `.wait(guard).unwrap()` / `.wait_timeout(guard, d).expect(…)`.
+            "wait" | "wait_timeout" => lx.punct(i + 1, '(')
+                && matching_paren(m, i + 1).is_some_and(|close| poisoning_tail(close + 1)),
+            _ => false,
+        };
+        if hit {
+            ctx.flag_line(out, lx.tokens[i].line, "lock-unwrap", &[]);
+        }
+    }
+}
+
+/// Token index sequence of `Instant::now`.
+fn is_instant_now(m: &FileModel, i: usize) -> bool {
+    let lx = &m.lexed;
+    lx.ident(i) == Some("Instant")
+        && lx.punct(i + 1, ':')
+        && lx.punct(i + 2, ':')
+        && lx.ident(i + 3) == Some("now")
+}
+
+/// R2 — wall-clock reads in decide-critical sections: any non-test
+/// `Instant::now` in `rank_controller.rs`, or — crate-wide — one
+/// evaluated while a shard-lock guard is live.
+fn r2_instant_in_decide(ctx: &Ctx, out: &mut Vec<LintViolation>) {
+    let m = &ctx.model;
+    let whole_file = ctx.file_name() == "rank_controller.rs";
+    for i in 0..m.lexed.tokens.len() {
+        if m.in_test(i) || !is_instant_now(m, i) {
+            continue;
+        }
+        let in_shard_guard = m
+            .live_guards_at(i)
+            .iter()
+            .any(|g| g.name.contains("shard") || g.path.contains("shard"));
+        if whole_file || in_shard_guard {
+            ctx.flag_line(out, m.lexed.tokens[i].line, "instant-in-decide", &[]);
+        }
+    }
+}
+
+/// R3 — raw std channels outside the completion layer, crate-wide.
+fn r3_raw_mpsc(ctx: &Ctx, out: &mut Vec<LintViolation>) {
+    if ctx.file_name() == "completion.rs" {
+        return;
+    }
+    let m = &ctx.model;
+    let mut last_line = 0usize;
+    for i in 0..m.lexed.tokens.len() {
+        if m.in_test(i) || m.lexed.ident(i) != Some("mpsc") {
+            continue;
+        }
+        let line = m.lexed.tokens[i].line;
+        if line == last_line {
+            continue; // one violation per line, as the old scanner did
+        }
+        last_line = line;
+        ctx.flag_line(out, line, "raw-mpsc", &["mpsc"]);
+    }
+}
+
+/// One edge of the lock-order graph.
+#[derive(Debug, Clone)]
+struct LockEdge {
+    from: String,
+    to: String,
+    file: PathBuf,
+    line: usize,
+    /// Set when the edge came from one level of call propagation.
+    via: Option<String>,
+}
+
+/// R4 — cycles in the lock-acquisition order graph.
+///
+/// Nodes are lock identities (the receiver chain's final field name).
+/// A direct edge `A → B` is recorded when `B` is acquired while a guard
+/// of `A` is live in the same fn; a propagated edge when a fn is called
+/// with `A` held and the callee (matched by name anywhere in the crate)
+/// directly acquires `B`. Any cycle — including a self-loop, i.e.
+/// re-acquiring a lock of the same identity while it is held — is a
+/// potential deadlock under some thread interleaving.
+fn r4_lock_order(ctxs: &[Ctx], out: &mut Vec<LintViolation>) {
+    // fn name → (ctx idx, fn idx) for call propagation.
+    let mut fns_by_name: BTreeMap<&str, Vec<(usize, usize)>> = BTreeMap::new();
+    for (ci, ctx) in ctxs.iter().enumerate() {
+        for (fi, f) in ctx.model.fns.iter().enumerate() {
+            if !f.is_test {
+                fns_by_name.entry(f.name.as_str()).or_default().push((ci, fi));
+            }
+        }
+    }
+    // Direct, non-detached acquisitions of one fn (the callee summary).
+    fn direct_acqs<'a>(ctx: &'a Ctx, fi: usize) -> Vec<&'a LockAcq> {
+        let f = &ctx.model.fns[fi];
+        ctx.model
+            .locks
+            .iter()
+            .filter(|l| f.open < l.tok && l.tok < f.close && !l.detached)
+            .filter(|l| !ctx.model.in_test(l.tok))
+            .collect()
+    }
+
+    let mut edges: Vec<LockEdge> = Vec::new();
+    for ctx in ctxs {
+        let m = &ctx.model;
+        // Direct edges: acquisition under a live guard.
+        for a in &m.locks {
+            if m.in_test(a.tok) || ctx.allowed(a.line, "lock-order", &[]) {
+                continue;
+            }
+            for g in m.live_guards_at(a.tok) {
+                edges.push(LockEdge {
+                    from: g.name.clone(),
+                    to: a.name.clone(),
+                    file: ctx.path.clone(),
+                    line: a.line,
+                    via: None,
+                });
+            }
+        }
+        // Propagated edges: call made under a live guard, callee locks.
+        for c in &m.calls {
+            if m.in_test(c.tok) || ctx.allowed(c.line, "lock-order", &[]) {
+                continue;
+            }
+            // Name matching cannot type-resolve method receivers, so only
+            // free-function calls and `self.` method calls propagate —
+            // `g.queue.len()` must not alias some other type's `len`.
+            if c.tok > 0 && m.lexed.punct(c.tok - 1, '.') {
+                let recv = receiver_path(&m.lexed, c.tok - 1);
+                if recv != ["self"] {
+                    continue;
+                }
+            }
+            let held = m.live_guards_at(c.tok);
+            if held.is_empty() {
+                continue;
+            }
+            let Some(targets) = fns_by_name.get(c.callee.as_str()) else { continue };
+            for &(ci, fi) in targets {
+                for a in direct_acqs(&ctxs[ci], fi) {
+                    if ctxs[ci].allowed(a.line, "lock-order", &[]) {
+                        continue;
+                    }
+                    for g in &held {
+                        edges.push(LockEdge {
+                            from: g.name.clone(),
+                            to: a.name.clone(),
+                            file: ctx.path.clone(),
+                            line: c.line,
+                            via: Some(format!("{}() at {}:{}", c.callee,
+                                ctxs[ci].file_name(), a.line)),
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    // Dedup to one representative edge per (from, to).
+    let mut adj: BTreeMap<&str, BTreeSet<&str>> = BTreeMap::new();
+    let mut rep: BTreeMap<(&str, &str), &LockEdge> = BTreeMap::new();
+    for e in &edges {
+        adj.entry(e.from.as_str()).or_default().insert(e.to.as_str());
+        rep.entry((e.from.as_str(), e.to.as_str())).or_insert(e);
+    }
+
+    // For every edge A→B, a path B→…→A closes a cycle. Self-loops are
+    // the degenerate case. Report each distinct node set once.
+    let mut reported: BTreeSet<Vec<&str>> = BTreeSet::new();
+    for (&(from, to), _) in rep.iter() {
+        let Some(path) = find_path(&adj, to, from) else { continue };
+        // Cycle nodes: from → to → … (the path ends back at `from`; drop
+        // that duplicate so the wrap-around edge closes the cycle).
+        let mut nodes: Vec<&str> = Vec::with_capacity(path.len() + 1);
+        nodes.push(from);
+        nodes.extend(path.iter().copied());
+        if nodes.len() > 1 && nodes.last() == Some(&from) {
+            nodes.pop();
+        }
+        let mut key: Vec<&str> = nodes.clone();
+        key.sort_unstable();
+        key.dedup();
+        if !reported.insert(key) {
+            continue;
+        }
+        // Describe the cycle edge by edge with sites.
+        let mut desc = String::from("lock-order cycle: ");
+        for w in 0..nodes.len() {
+            let a = nodes[w];
+            let b = nodes[(w + 1) % nodes.len()];
+            if w > 0 {
+                desc.push_str(" -> ");
+            }
+            if let Some(e) = rep.get(&(a, b)) {
+                let via = e.via.as_deref().map(|v| format!(" via {v}")).unwrap_or_default();
+                desc.push_str(&format!(
+                    "{a} ({}:{}{via})",
+                    e.file.file_name().and_then(|n| n.to_str()).unwrap_or("?"),
+                    e.line
+                ));
+            } else {
+                desc.push_str(a);
+            }
+        }
+        desc.push_str(" — potential deadlock");
+        let first = rep[&(from, to)];
+        out.push(LintViolation {
+            file: first.file.clone(),
+            line: first.line,
+            rule: "lock-order",
+            text: desc,
+        });
+    }
+}
+
+/// BFS path from `start` to `goal` over the adjacency map. Returns the
+/// node sequence `[start, …, goal]` (singleton when `start == goal` and
+/// a self-loop exists is handled by the caller's edge iteration).
+fn find_path<'a>(
+    adj: &BTreeMap<&'a str, BTreeSet<&'a str>>,
+    start: &'a str,
+    goal: &str,
+) -> Option<Vec<&'a str>> {
+    let mut prev: BTreeMap<&str, &str> = BTreeMap::new();
+    let mut queue = std::collections::VecDeque::new();
+    queue.push_back(start);
+    let mut seen: BTreeSet<&str> = BTreeSet::new();
+    seen.insert(start);
+    while let Some(n) = queue.pop_front() {
+        if n == goal {
+            let mut path = vec![n];
+            let mut cur = n;
+            while let Some(&p) = prev.get(cur) {
+                path.push(p);
+                cur = p;
+            }
+            path.reverse();
+            return Some(path);
+        }
+        for &nx in adj.get(n).into_iter().flatten() {
+            if seen.insert(nx) {
+                prev.insert(nx, n);
+                queue.push_back(nx);
+            }
+        }
+    }
+    None
+}
+
+/// Methods whose call iterates an unordered container.
+const ITER_METHODS: [&str; 10] = [
+    "iter", "iter_mut", "keys", "values", "values_mut", "into_iter", "drain", "retain",
+    "into_keys", "into_values",
+];
+
+/// R5 — unordered-container iteration in bit-identity-critical modules.
+fn r5_nondet_iter(ctx: &Ctx, out: &mut Vec<LintViolation>) {
+    if !(ctx.in_module("coordinator") || ctx.in_module("linalg") || ctx.in_module("conformance")) {
+        return;
+    }
+    let m = &ctx.model;
+    let lx = &m.lexed;
+    let n = lx.tokens.len();
+
+    // Names bound to HashMap/HashSet in this file: `name: HashMap<…>`
+    // (let ascription or struct field) and `let name = HashMap::…`.
+    let mut unordered: BTreeSet<String> = BTreeSet::new();
+    for i in 0..n {
+        let Some(ty) = lx.ident(i) else { continue };
+        if ty != "HashMap" && ty != "HashSet" {
+            continue;
+        }
+        if i >= 2 && lx.punct(i - 1, ':') && !lx.punct(i - 2, ':') {
+            if let Some(name) = lx.ident(i - 2) {
+                unordered.insert(name.to_string());
+            }
+        }
+        if i >= 2 && lx.punct(i - 1, '=') {
+            if let Some(name) = lx.ident(i - 2) {
+                unordered.insert(name.to_string());
+            }
+        }
+    }
+    if unordered.is_empty() {
+        return;
+    }
+
+    for i in 0..n {
+        if m.in_test(i) {
+            continue;
+        }
+        // `name.iter()` / `.keys()` / `.drain()` … on a tracked name.
+        if let Some(name) = lx.ident(i) {
+            if unordered.contains(name) && lx.punct(i + 1, '.') {
+                if let Some(meth) = lx.ident(i + 2) {
+                    if ITER_METHODS.contains(&meth) && lx.punct(i + 3, '(') {
+                        ctx.flag_line(out, lx.tokens[i].line, "nondet-iter", &[]);
+                        continue;
+                    }
+                }
+            }
+        }
+        // `for pat in [&][mut] name {` — direct iteration of the map.
+        if lx.ident(i) == Some("for") {
+            let mut j = i + 1;
+            let mut depth = 0i64;
+            while j < n && !(depth == 0 && lx.ident(j) == Some("in")) && !lx.punct(j, '{') {
+                if lx.punct(j, '(') {
+                    depth += 1;
+                } else if lx.punct(j, ')') {
+                    depth -= 1;
+                }
+                j += 1;
+            }
+            if j >= n || !matches!(lx.ident(j), Some("in")) {
+                continue;
+            }
+            let mut k = j + 1;
+            while k < n && (lx.punct(k, '&') || lx.ident(k) == Some("mut") || lx.punct(k, '(')) {
+                k += 1;
+            }
+            if let Some(name) = lx.ident(k) {
+                if unordered.contains(name) && (lx.punct(k + 1, '{') || lx.punct(k + 1, ')')) {
+                    ctx.flag_line(out, lx.tokens[k].line, "nondet-iter", &[]);
+                }
+            }
+        }
+    }
+}
+
+/// R6 — panics inside worker contexts (thread-pool closures, worker-loop
+/// fns), non-test code.
+fn r6_panic_in_worker(ctx: &Ctx, out: &mut Vec<LintViolation>) {
+    let m = &ctx.model;
+    let lx = &m.lexed;
+    for &(start, end) in &m.worker_regions {
+        for i in start..=end.min(lx.tokens.len().saturating_sub(1)) {
+            if m.in_test(i) {
+                continue;
+            }
+            let Some(name) = lx.ident(i) else { continue };
+            let hit = match name {
+                "unwrap" => {
+                    i >= 1 && lx.punct(i - 1, '.') && lx.punct(i + 1, '(') && lx.punct(i + 2, ')')
+                }
+                "expect" => i >= 1 && lx.punct(i - 1, '.') && lx.punct(i + 1, '('),
+                "panic" | "todo" | "unimplemented" => lx.punct(i + 1, '!'),
+                _ => false,
+            };
+            if hit {
+                ctx.flag_line(out, lx.tokens[i].line, "panic-in-worker", &[]);
+            }
+        }
+    }
+}
+
+/// Identifiers whose mere appearance in `linalg/` reads a pool size or
+/// thread count.
+const POOL_SIZE_IDENTS: [&str; 5] =
+    ["available_parallelism", "n_threads", "num_threads", "pool_threads", "n_workers"];
+
+/// R7 — pool-size / thread-count reads inside `linalg/`: partitions must
+/// be pure functions of problem shape (CONFORMANCE.md, PR 7 contract).
+fn r7_pool_shape_partition(ctx: &Ctx, out: &mut Vec<LintViolation>) {
+    if !ctx.in_module("linalg") {
+        return;
+    }
+    let m = &ctx.model;
+    let lx = &m.lexed;
+    for i in 0..lx.tokens.len() {
+        if m.in_test(i) {
+            continue;
+        }
+        let Some(name) = lx.ident(i) else { continue };
+        let hit = POOL_SIZE_IDENTS.contains(&name)
+            || (name == "size"
+                && i >= 1
+                && lx.punct(i - 1, '.')
+                && lx.punct(i + 1, '(')
+                && lx.punct(i + 2, ')')
+                && receiver_path(lx, i - 1).iter().any(|p| p.to_lowercase().contains("pool")));
+        if hit {
+            ctx.flag_line(out, lx.tokens[i].line, "pool-shape-partition", &[]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(file: &str, src: &str) -> Vec<LintViolation> {
+        analyze_source(Path::new(file), src)
+    }
+
+    // ---- R1 (migrated from the line scanner, now token-exact) ----
+
+    #[test]
+    fn r1_flags_poisoning_lock_unwraps() {
+        let src = "fn f() {\n    let g = state.lock().unwrap();\n}\n";
+        let v = scan("rust/src/coordinator/engine.rs", src);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "lock-unwrap");
+        assert_eq!(v[0].line, 2);
+
+        let ok = "fn f() {\n    let g = state.lock_unpoisoned();\n}\n";
+        assert!(scan("rust/src/coordinator/engine.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn r1_flags_condvar_unwraps_but_not_ticket_waits() {
+        let bad = "fn f() { let g = cv.wait(guard).unwrap(); }\n";
+        assert_eq!(scan("rust/src/coordinator/engine.rs", bad).len(), 1);
+        // Ticket::wait returns a plain result the caller may handle.
+        let ok = "fn f() { let r = ticket.wait(); r.ok(); }\n";
+        assert!(scan("rust/src/coordinator/engine.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn r1_is_not_fooled_by_strings_or_comments() {
+        // The cases the old line-oriented scanner could not distinguish.
+        let src = concat!(
+            "fn f() {\n",
+            "    // state.lock().unwrap() — do not resurrect\n",
+            "    let msg = \"state.lock().unwrap()\";\n",
+            "    let raw = r#\"cv.wait(g).unwrap()\"#;\n",
+            "}\n",
+        );
+        assert!(scan("rust/src/coordinator/engine.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r1_skips_test_code() {
+        let src = concat!(
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    #[test]\n",
+            "    fn t() { let g = m.lock().unwrap(); }\n",
+            "}\n",
+        );
+        assert!(scan("rust/src/util/threadpool.rs", src).is_empty());
+    }
+
+    // ---- R2 ----
+
+    #[test]
+    fn r2_flags_instant_now_anywhere_in_rank_controller() {
+        let src = "fn decide() {\n    let t = Instant::now();\n}\n";
+        let v = scan("rust/src/coordinator/rank_controller.rs", src);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "instant-in-decide");
+        // Same text outside any decide-critical scope is fine.
+        assert!(scan("rust/src/coordinator/batcher.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r2_tracks_shard_guard_regions_anywhere() {
+        let bad = concat!(
+            "fn decide_stage() {\n",
+            "    {\n",
+            "        let mut shard = shared.shards[layer].lock_unpoisoned();\n",
+            "        let t = Instant::now();\n",
+            "    }\n",
+            "    let after = Instant::now();\n",
+            "}\n",
+        );
+        let v = scan("rust/src/coordinator/pipeline.rs", bad);
+        assert_eq!(v.len(), 1, "only the in-guard read is critical: {v:?}");
+        assert_eq!(v[0].line, 4);
+        // The guard-region rule is crate-wide now, not pipeline-only.
+        let v2 = scan("rust/src/runtime/host.rs", bad);
+        assert_eq!(v2.len(), 1);
+    }
+
+    // ---- R3 ----
+
+    #[test]
+    fn r3_flags_raw_mpsc_unless_annotated() {
+        let bad = "use std::sync::mpsc;\n";
+        let v = scan("rust/src/runtime/worker.rs", bad);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "raw-mpsc");
+
+        let allowed = concat!(
+            "// PJRT literals are not Send; a thread-local channel is the\n",
+            "// sanctioned escape hatch here. lint:allow(mpsc)\n",
+            "use std::sync::mpsc;\n",
+        );
+        assert!(scan("rust/src/runtime/worker.rs", allowed).is_empty());
+
+        // A blank line breaks the annotation's contiguous block.
+        let broken = "// lint:allow(mpsc)\n\nuse std::sync::mpsc;\n";
+        assert_eq!(scan("rust/src/runtime/worker.rs", broken).len(), 1);
+
+        // completion.rs owns the channel surface.
+        assert!(scan("rust/src/coordinator/completion.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn r3_accepts_rule_scoped_allow_spelling() {
+        let allowed = "// internal queue. lint:allow(raw-mpsc)\nuse std::sync::mpsc;\n";
+        assert!(scan("rust/src/util/threadpool.rs", allowed).is_empty());
+    }
+
+    // ---- R4 ----
+
+    #[test]
+    fn r4_detects_two_lock_order_inversion() {
+        let src = concat!(
+            "fn forward(s: &S) {\n",
+            "    let a = s.alpha.lock_unpoisoned();\n",
+            "    let b = s.beta.lock_unpoisoned();\n",
+            "}\n",
+            "fn backward(s: &S) {\n",
+            "    let b = s.beta.lock_unpoisoned();\n",
+            "    let a = s.alpha.lock_unpoisoned();\n",
+            "}\n",
+        );
+        let v = scan("rust/src/coordinator/sched.rs", src);
+        let cycles: Vec<_> = v.iter().filter(|v| v.rule == "lock-order").collect();
+        assert_eq!(cycles.len(), 1, "{v:?}");
+        assert!(cycles[0].text.contains("alpha"));
+        assert!(cycles[0].text.contains("beta"));
+    }
+
+    #[test]
+    fn r4_consistent_order_is_clean() {
+        let src = concat!(
+            "fn one(s: &S) {\n",
+            "    let a = s.alpha.lock_unpoisoned();\n",
+            "    let b = s.beta.lock_unpoisoned();\n",
+            "}\n",
+            "fn two(s: &S) {\n",
+            "    let a = s.alpha.lock_unpoisoned();\n",
+            "    let b = s.beta.lock_unpoisoned();\n",
+            "}\n",
+        );
+        assert!(scan("rust/src/coordinator/sched.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r4_propagates_one_call_level() {
+        let src = concat!(
+            "fn outer(s: &S) {\n",
+            "    let a = s.alpha.lock_unpoisoned();\n",
+            "    helper(s);\n",
+            "}\n",
+            "fn helper(s: &S) {\n",
+            "    let b = s.beta.lock_unpoisoned();\n",
+            "}\n",
+            "fn inverted(s: &S) {\n",
+            "    let b = s.beta.lock_unpoisoned();\n",
+            "    let a = s.alpha.lock_unpoisoned();\n",
+            "}\n",
+        );
+        let v = scan("rust/src/coordinator/sched.rs", src);
+        let cycles: Vec<_> = v.iter().filter(|v| v.rule == "lock-order").collect();
+        assert_eq!(cycles.len(), 1, "{v:?}");
+        assert!(cycles[0].text.contains("helper"), "{}", cycles[0].text);
+    }
+
+    #[test]
+    fn r4_self_relock_is_a_cycle() {
+        let src = concat!(
+            "fn f(s: &S) {\n",
+            "    let a = s.table.lock_unpoisoned();\n",
+            "    let b = s.table.lock_unpoisoned();\n",
+            "}\n",
+        );
+        let v = scan("rust/src/coordinator/sched.rs", src);
+        assert_eq!(v.iter().filter(|v| v.rule == "lock-order").count(), 1);
+    }
+
+    #[test]
+    fn r4_detached_closures_do_not_edge() {
+        // The guard is NOT held inside an execute() closure — no edge.
+        let src = concat!(
+            "fn f(s: &S) {\n",
+            "    let a = s.alpha.lock_unpoisoned();\n",
+            "    pool.execute(move || {\n",
+            "        let b = s.beta.lock_unpoisoned();\n",
+            "    });\n",
+            "}\n",
+            "fn g(s: &S) {\n",
+            "    let b = s.beta.lock_unpoisoned();\n",
+            "    let a = s.alpha.lock_unpoisoned();\n",
+            "}\n",
+        );
+        assert!(scan("rust/src/coordinator/sched.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r4_allow_suppresses_the_edge() {
+        let src = concat!(
+            "fn forward(s: &S) {\n",
+            "    let a = s.alpha.lock_unpoisoned();\n",
+            "    let b = s.beta.lock_unpoisoned();\n",
+            "}\n",
+            "fn backward(s: &S) {\n",
+            "    let b = s.beta.lock_unpoisoned();\n",
+            "    // audited: disjoint shard index sets. lint:allow(lock-order)\n",
+            "    let a = s.alpha.lock_unpoisoned();\n",
+            "}\n",
+        );
+        assert!(scan("rust/src/coordinator/sched.rs", src).is_empty());
+    }
+
+    // ---- R5 ----
+
+    #[test]
+    fn r5_flags_hashmap_iteration_in_critical_modules() {
+        let src = concat!(
+            "use std::collections::HashMap;\n",
+            "fn reduce(xs: &[f64]) -> f64 {\n",
+            "    let mut acc: HashMap<usize, f64> = HashMap::new();\n",
+            "    for (i, x) in xs.iter().enumerate() { *acc.entry(i % 4).or_insert(0.0) += x; }\n",
+            "    let mut total = 0.0;\n",
+            "    for (_, v) in &acc { total += v; }\n",
+            "    total\n",
+            "}\n",
+        );
+        let v = scan("rust/src/linalg/reduce.rs", src);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "nondet-iter");
+        assert_eq!(v[0].line, 6);
+        // Outside the critical modules the same code is fine.
+        assert!(scan("rust/src/rl/replay.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r5_flags_iter_method_chains() {
+        let src = concat!(
+            "fn f() {\n",
+            "    let seen = HashSet::new();\n",
+            "    let total: usize = seen.iter().count();\n",
+            "}\n",
+        );
+        let v = scan("rust/src/coordinator/track.rs", src);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].line, 3);
+    }
+
+    #[test]
+    fn r5_btreemap_is_fine() {
+        let src = concat!(
+            "fn f() {\n",
+            "    let mut m: BTreeMap<usize, f64> = BTreeMap::new();\n",
+            "    for (k, v) in &m { use_it(k, v); }\n",
+            "}\n",
+        );
+        assert!(scan("rust/src/coordinator/track.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r5_lookup_without_iteration_is_fine() {
+        let src = concat!(
+            "fn f() {\n",
+            "    let m: HashMap<usize, f64> = HashMap::new();\n",
+            "    let x = m.get(&3).copied().unwrap_or(0.0);\n",
+            "}\n",
+        );
+        assert!(scan("rust/src/coordinator/track.rs", src).is_empty());
+    }
+
+    // ---- R6 ----
+
+    #[test]
+    fn r6_flags_unwrap_in_pool_closures() {
+        let src = concat!(
+            "fn submit(pool: &ThreadPool, rx: Receiver<J>) {\n",
+            "    pool.execute(move || {\n",
+            "        let job = rx.recv().unwrap();\n",
+            "        job.run();\n",
+            "    });\n",
+            "}\n",
+        );
+        let v = scan("rust/src/coordinator/jobs.rs", src);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "panic-in-worker");
+        assert_eq!(v[0].line, 3);
+    }
+
+    #[test]
+    fn r6_flags_panic_in_worker_loop_fns() {
+        let src = concat!(
+            "fn device_worker_loop(rx: &R) {\n",
+            "    loop {\n",
+            "        let Some(cmd) = rx.next() else { panic!(\"torn queue\") };\n",
+            "        cmd.run().expect(\"cmd\");\n",
+            "    }\n",
+            "}\n",
+        );
+        let v = scan("rust/src/runtime/dev.rs", src);
+        assert_eq!(v.len(), 2, "{v:?}");
+        assert!(v.iter().all(|v| v.rule == "panic-in-worker"));
+    }
+
+    #[test]
+    fn r6_ignores_unwrap_outside_worker_contexts() {
+        let src = "fn setup() { let cfg = load().unwrap(); }\n";
+        assert!(scan("rust/src/coordinator/jobs.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r6_allow_annotation() {
+        let src = concat!(
+            "fn submit(pool: &ThreadPool) {\n",
+            "    pool.execute(move || {\n",
+            "        // invariant: slot filled by construction. lint:allow(panic-in-worker)\n",
+            "        let v = slot.take().unwrap();\n",
+            "    });\n",
+            "}\n",
+        );
+        assert!(scan("rust/src/coordinator/jobs.rs", src).is_empty());
+    }
+
+    // ---- R7 ----
+
+    #[test]
+    fn r7_flags_pool_size_reads_in_linalg() {
+        let src = concat!(
+            "fn partition(total: usize, pool: &ThreadPool) -> usize {\n",
+            "    let n_chunks = (total / 64).max(pool.size());\n",
+            "    n_chunks\n",
+            "}\n",
+        );
+        let v = scan("rust/src/linalg/split.rs", src);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "pool-shape-partition");
+        // The same read outside linalg/ is not this rule's business.
+        assert!(scan("rust/src/util/threadpool.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r7_flags_available_parallelism() {
+        let src = "fn chunks() -> usize { std::thread::available_parallelism().unwrap().get() }\n";
+        let v = scan("rust/src/linalg/split.rs", src);
+        assert!(v.iter().any(|v| v.rule == "pool-shape-partition"), "{v:?}");
+    }
+
+    #[test]
+    fn r7_shape_derived_partition_is_clean() {
+        let src = concat!(
+            "const K_CHUNK: usize = 64;\n",
+            "fn partition(k: usize) -> usize { k.div_ceil(K_CHUNK) }\n",
+        );
+        assert!(scan("rust/src/linalg/split.rs", src).is_empty());
+    }
+}

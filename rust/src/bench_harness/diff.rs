@@ -1,0 +1,242 @@
+//! Snapshot diffing for the committed `BENCH_*.json` perf trajectory.
+//!
+//! `drrl bench-diff <baseline.json> <current.json>` compares two
+//! harness snapshots case by case and reports the per-benchmark delta.
+//! Each case is judged on its best available metric: GFLOP/s when both
+//! snapshots carry it (higher is better), otherwise `ns_per_iter`
+//! (lower is better). A case whose delta is worse than the regression
+//! threshold (default 20%) marks the diff as failed; cases present in
+//! only one snapshot are reported but never fail the diff (benches come
+//! and go across PRs).
+
+use crate::util::Json;
+use std::collections::BTreeMap;
+
+/// One per-case comparison between baseline and current snapshots.
+#[derive(Debug, Clone)]
+pub struct BenchDelta {
+    pub name: String,
+    /// Which metric the delta is computed on: `"gflops"` or `"ns_per_iter"`.
+    pub metric: &'static str,
+    pub base: f64,
+    pub cur: f64,
+    /// Signed percent change, oriented so positive = improvement
+    /// (throughput up, or time down).
+    pub pct: f64,
+    /// True when the case got worse by more than the threshold.
+    pub regression: bool,
+}
+
+impl BenchDelta {
+    /// One formatted report line.
+    pub fn row(&self) -> String {
+        let unit = if self.metric == "gflops" { "GFLOP/s" } else { "ns/iter" };
+        let tag = if self.regression { "  << REGRESSION" } else { "" };
+        format!(
+            "{:<40} {:>12.2} -> {:>12.2} {unit}  {:>+7.1}%{tag}",
+            self.name, self.base, self.cur, self.pct
+        )
+    }
+}
+
+/// The full diff: per-case deltas plus the cases unique to either side.
+#[derive(Debug, Clone, Default)]
+pub struct DiffReport {
+    pub deltas: Vec<BenchDelta>,
+    pub only_in_baseline: Vec<String>,
+    pub only_in_current: Vec<String>,
+}
+
+impl DiffReport {
+    pub fn regressions(&self) -> usize {
+        self.deltas.iter().filter(|d| d.regression).count()
+    }
+}
+
+/// Per-case fields the diff needs, pulled out of one snapshot.
+struct CaseMetrics {
+    ns_per_iter: f64,
+    gflops: Option<f64>,
+}
+
+fn cases_of(j: &Json, which: &str) -> Result<BTreeMap<String, CaseMetrics>, String> {
+    let sv = j
+        .get("schema_version")
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| format!("{which}: missing numeric schema_version"))?;
+    if sv != 1.0 {
+        return Err(format!("{which}: unsupported schema_version {sv}"));
+    }
+    let cases = j
+        .get("cases")
+        .and_then(|c| c.as_arr())
+        .ok_or_else(|| format!("{which}: missing array field: cases"))?;
+    let mut out = BTreeMap::new();
+    for (i, c) in cases.iter().enumerate() {
+        let name = c
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("{which}: case {i}: missing string name"))?;
+        let ns = c
+            .get("ns_per_iter")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| format!("{which}: case {i} ({name}): missing ns_per_iter"))?;
+        if !ns.is_finite() || ns <= 0.0 {
+            return Err(format!("{which}: case {i} ({name}): bad ns_per_iter {ns}"));
+        }
+        let gflops = c.get("gflops").and_then(|v| v.as_f64());
+        if let Some(g) = gflops {
+            if !g.is_finite() || g <= 0.0 {
+                return Err(format!("{which}: case {i} ({name}): bad gflops {g}"));
+            }
+        }
+        out.insert(name.to_string(), CaseMetrics { ns_per_iter: ns, gflops });
+    }
+    Ok(out)
+}
+
+/// Diff two parsed snapshots. `max_regress_pct` is the allowed
+/// worsening per case, in percent (e.g. 20.0).
+pub fn diff_snapshots(
+    baseline: &Json,
+    current: &Json,
+    max_regress_pct: f64,
+) -> Result<DiffReport, String> {
+    if !(max_regress_pct.is_finite() && max_regress_pct >= 0.0) {
+        return Err(format!("bad regression threshold {max_regress_pct}"));
+    }
+    let base = cases_of(baseline, "baseline")?;
+    let cur = cases_of(current, "current")?;
+    let mut report = DiffReport::default();
+    for (name, b) in &base {
+        let Some(c) = cur.get(name) else {
+            report.only_in_baseline.push(name.clone());
+            continue;
+        };
+        // GFLOP/s when both sides have it (higher better), else
+        // ns_per_iter (lower better). `pct` is oriented so positive is
+        // always an improvement.
+        let (metric, bval, cval, pct) = match (b.gflops, c.gflops) {
+            (Some(bg), Some(cg)) => ("gflops", bg, cg, (cg / bg - 1.0) * 1e2),
+            _ => (
+                "ns_per_iter",
+                b.ns_per_iter,
+                c.ns_per_iter,
+                (b.ns_per_iter / c.ns_per_iter - 1.0) * 1e2,
+            ),
+        };
+        report.deltas.push(BenchDelta {
+            name: name.clone(),
+            metric,
+            base: bval,
+            cur: cval,
+            pct,
+            regression: pct < -max_regress_pct,
+        });
+    }
+    for name in cur.keys() {
+        if !base.contains_key(name) {
+            report.only_in_current.push(name.clone());
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(cases: &[(&str, f64, Option<f64>)]) -> Json {
+        let case_objs: Vec<Json> = cases
+            .iter()
+            .map(|(name, ns, gf)| {
+                let mut pairs = vec![
+                    ("name".to_string(), Json::Str((*name).into())),
+                    ("ns_per_iter".to_string(), Json::Num(*ns)),
+                ];
+                if let Some(g) = gf {
+                    pairs.push(("gflops".to_string(), Json::Num(*g)));
+                }
+                Json::Obj(pairs.into_iter().collect())
+            })
+            .collect();
+        Json::Obj(
+            [
+                ("schema_version".to_string(), Json::Num(1.0)),
+                ("cases".to_string(), Json::Arr(case_objs)),
+            ]
+            .into_iter()
+            .collect(),
+        )
+    }
+
+    #[test]
+    fn gflops_preferred_and_oriented_higher_better() {
+        let base = snap(&[("mm", 1000.0, Some(50.0))]);
+        let cur = snap(&[("mm", 2000.0, Some(55.0))]);
+        let r = diff_snapshots(&base, &cur, 20.0).unwrap();
+        assert_eq!(r.deltas.len(), 1);
+        let d = &r.deltas[0];
+        assert_eq!(d.metric, "gflops");
+        assert!((d.pct - 10.0).abs() < 1e-9, "pct {}", d.pct);
+        assert!(!d.regression);
+    }
+
+    #[test]
+    fn ns_per_iter_oriented_lower_better() {
+        // 1000 -> 500 ns is a 100% improvement; 1000 -> 2000 is -50%.
+        let base = snap(&[("fast", 1000.0, None), ("slow", 1000.0, None)]);
+        let cur = snap(&[("fast", 500.0, None), ("slow", 2000.0, None)]);
+        let r = diff_snapshots(&base, &cur, 20.0).unwrap();
+        let fast = r.deltas.iter().find(|d| d.name == "fast").unwrap();
+        let slow = r.deltas.iter().find(|d| d.name == "slow").unwrap();
+        assert!((fast.pct - 100.0).abs() < 1e-9);
+        assert!(!fast.regression);
+        assert!((slow.pct + 50.0).abs() < 1e-9);
+        assert!(slow.regression);
+    }
+
+    #[test]
+    fn threshold_is_exclusive_at_the_boundary() {
+        // Exactly -20% with a 20% threshold is allowed (pct < -max).
+        let base = snap(&[("m", 1000.0, Some(100.0))]);
+        let cur = snap(&[("m", 1000.0, Some(80.0))]);
+        let r = diff_snapshots(&base, &cur, 20.0).unwrap();
+        assert!(!r.deltas[0].regression);
+        let r = diff_snapshots(&base, &cur, 19.9).unwrap();
+        assert!(r.deltas[0].regression);
+        assert_eq!(r.regressions(), 1);
+    }
+
+    #[test]
+    fn disjoint_cases_reported_but_never_fail() {
+        let base = snap(&[("gone", 1000.0, None), ("both", 1000.0, None)]);
+        let cur = snap(&[("both", 1001.0, None), ("new", 10.0, None)]);
+        let r = diff_snapshots(&base, &cur, 20.0).unwrap();
+        assert_eq!(r.only_in_baseline, vec!["gone".to_string()]);
+        assert_eq!(r.only_in_current, vec!["new".to_string()]);
+        assert_eq!(r.deltas.len(), 1);
+        assert_eq!(r.regressions(), 0);
+    }
+
+    #[test]
+    fn mixed_gflops_presence_falls_back_to_time() {
+        let base = snap(&[("m", 1000.0, Some(100.0))]);
+        let cur = snap(&[("m", 900.0, None)]);
+        let r = diff_snapshots(&base, &cur, 20.0).unwrap();
+        assert_eq!(r.deltas[0].metric, "ns_per_iter");
+    }
+
+    #[test]
+    fn malformed_snapshots_are_rejected() {
+        let no_cases = Json::Obj(
+            [("schema_version".to_string(), Json::Num(1.0))].into_iter().collect(),
+        );
+        assert!(diff_snapshots(&no_cases, &no_cases, 20.0).is_err());
+        let bad_ns = snap(&[("m", f64::NAN, None)]);
+        let ok = snap(&[("m", 1.0, None)]);
+        assert!(diff_snapshots(&bad_ns, &ok, 20.0).is_err());
+        assert!(diff_snapshots(&ok, &bad_ns, 20.0).is_err());
+        assert!(diff_snapshots(&ok, &ok, f64::NAN).is_err());
+    }
+}

@@ -3,6 +3,10 @@
 //! CSV emission, and a machine-readable JSON snapshot (`write_json`) for
 //! the committed `BENCH_*.json` perf trajectory.
 
+pub mod diff;
+
+pub use diff::{diff_snapshots, BenchDelta, DiffReport};
+
 use crate::util::{global_pool, Json, LatencyStats, Stopwatch};
 use std::collections::BTreeMap;
 use std::io::Write;

@@ -1,271 +1,40 @@
-//! Source-scanning lint pass for the concurrency-critical tree.
+//! Source-level lint pass — thin shim over [`crate::analysis`].
 //!
-//! `cargo clippy` cannot see project-local contracts, so `drrl lint`
-//! enforces three of them over `rust/src/coordinator/` and
-//! `rust/src/runtime/` by scanning the source text directly:
+//! PR 6's deliberately dumb line-oriented scanner lived here; it has
+//! been replaced by the token-level analysis subsystem in
+//! [`crate::analysis`] (lexer → structural model → rules R1–R7), which
+//! scans **all of `rust/src/`** instead of two hand-picked directories.
+//! This module keeps the conformance-layer surface stable:
+//! [`run_lint`], [`scan_source`] and [`LintViolation`] re-export or
+//! wrap the analysis implementations, and the live-tree test below
+//! pins the real repository clean under the full rule set.
 //!
-//! * **R1 `lock-unwrap`** — no `.lock().unwrap()` / `.lock().expect(..)`
-//!   (or the condvar equivalents) on synchronization primitives. A
-//!   worker panic would poison the lock and cascade into every other
-//!   thread; the tree must go through [`crate::util::LockExt`] /
-//!   [`crate::util::CondvarExt`], which shed poison instead.
-//! * **R2 `instant-in-decide`** — no `Instant::now()` inside
-//!   decide-critical sections. Decisions must be a pure function of the
-//!   trace so the differential fuzzer can demand bit-identity; wall
-//!   -clock reads belong at stage boundaries, outside the shard lock.
-//!   Scope: all of `rank_controller.rs`, plus any region of
-//!   `pipeline.rs` holding a shard lock guard (tracked by brace depth).
-//! * **R3 `raw-mpsc`** — no `std::sync::mpsc` outside
-//!   `coordinator/completion.rs`; tickets and completion queues are the
-//!   one sanctioned channel surface. A site that genuinely needs a raw
-//!   channel (e.g. PJRT literals that are not `Send`-safe through the
-//!   completion queue) documents itself with a `lint:allow(mpsc)`
-//!   comment in the contiguous comment block directly above the line.
-//!
-//! The scanner is deliberately dumb — line-oriented, no parsing — so it
-//! can't be wrong in interesting ways; unit tests feed it synthetic
-//! sources per rule, and a live-tree test keeps the real tree clean.
+//! See CONFORMANCE.md § "Static rules" for the R1–R7 catalogue and the
+//! `lint:allow(rule)` suppression mechanism.
 
-use std::fmt;
-use std::fs;
-use std::io;
-use std::path::{Path, PathBuf};
+use std::path::Path;
 
-/// One rule violation at a source location.
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub struct LintViolation {
-    pub file: PathBuf,
-    /// 1-based line number.
-    pub line: usize,
-    pub rule: &'static str,
-    pub text: String,
-}
+pub use crate::analysis::{run_lint, LintViolation};
 
-impl fmt::Display for LintViolation {
-    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "{}:{}: [{}] {}", self.file.display(), self.line, self.rule, self.text.trim())
-    }
-}
-
-/// Scan the repository rooted at `root` (the directory holding
-/// `rust/src/`) and return every violation, sorted by file then line.
-pub fn run_lint(root: &Path) -> io::Result<Vec<LintViolation>> {
-    let mut violations = Vec::new();
-    for dir in ["rust/src/coordinator", "rust/src/runtime"] {
-        let dir = root.join(dir);
-        let mut entries: Vec<PathBuf> = fs::read_dir(&dir)?
-            .filter_map(|e| e.ok().map(|e| e.path()))
-            .filter(|p| p.extension().is_some_and(|x| x == "rs"))
-            .collect();
-        entries.sort();
-        for path in entries {
-            let source = fs::read_to_string(&path)?;
-            violations.extend(scan_source(&path, &source));
-        }
-    }
-    violations.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
-    Ok(violations)
-}
-
-/// Scan one file's source text. Split out from [`run_lint`] so tests can
-/// feed synthetic sources without touching the filesystem.
+/// Analyze one file's source text under every file-local rule (plus any
+/// lock-order cycle visible within the file). Kept for API continuity
+/// with the old scanner; tests feed synthetic sources without touching
+/// the filesystem.
 pub fn scan_source(path: &Path, source: &str) -> Vec<LintViolation> {
-    let lines: Vec<&str> = source.lines().collect();
-    let file_name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
-    let in_completion = path.ends_with("coordinator/completion.rs") || file_name == "completion.rs";
-    let mut violations = Vec::new();
-
-    // R2 region tracking for pipeline.rs: while a shard-lock guard is
-    // live (brace depth has not dropped below the depth at the lock
-    // line), Instant::now is decide-critical.
-    let mut depth: i64 = 0;
-    let mut shard_lock_depths: Vec<i64> = Vec::new();
-
-    for (idx, raw) in lines.iter().enumerate() {
-        let line_no = idx + 1;
-        let line = strip_line_comment(raw);
-        let trimmed = raw.trim_start();
-        let is_comment = trimmed.starts_with("//");
-
-        if !is_comment {
-            // R1: poisoning unwrap/expect on lock or condvar results.
-            if line.contains(".lock().unwrap()")
-                || line.contains(".lock().expect(")
-                || line.contains(".read().unwrap()")
-                || line.contains(".write().unwrap()")
-                || (line.contains(".wait(") || line.contains(".wait_timeout("))
-                    && (line.contains(").unwrap()") || line.contains(").expect("))
-            {
-                violations.push(LintViolation {
-                    file: path.to_path_buf(),
-                    line: line_no,
-                    rule: "lock-unwrap",
-                    text: raw.to_string(),
-                });
-            }
-
-            // R3: raw std channels outside the completion layer.
-            if !in_completion
-                && (line.contains("std::sync::mpsc") || line.contains("use mpsc::"))
-                && !allowed_above(&lines, idx, "lint:allow(mpsc)")
-            {
-                violations.push(LintViolation {
-                    file: path.to_path_buf(),
-                    line: line_no,
-                    rule: "raw-mpsc",
-                    text: raw.to_string(),
-                });
-            }
-        }
-
-        // R2 scoping.
-        let decide_critical = match file_name {
-            "rank_controller.rs" => true,
-            "pipeline.rs" => {
-                if !is_comment && line.contains("shards") && line.contains(".lock") {
-                    shard_lock_depths.push(depth);
-                }
-                !shard_lock_depths.is_empty()
-            }
-            _ => false,
-        };
-        if decide_critical && !is_comment && line.contains("Instant::now") {
-            violations.push(LintViolation {
-                file: path.to_path_buf(),
-                line: line_no,
-                rule: "instant-in-decide",
-                text: raw.to_string(),
-            });
-        }
-
-        if !is_comment {
-            for ch in line.chars() {
-                match ch {
-                    '{' => depth += 1,
-                    '}' => {
-                        depth -= 1;
-                        while shard_lock_depths.last().is_some_and(|&d| depth < d) {
-                            shard_lock_depths.pop();
-                        }
-                    }
-                    _ => {}
-                }
-            }
-        }
-    }
-    violations
-}
-
-/// Drop a trailing `// ...` comment so commented-out code on the same
-/// line as real code can't trip a rule. (String literals containing
-/// `//` are rare enough in this tree to not matter; the scanner errs
-/// toward fewer false positives.)
-fn strip_line_comment(line: &str) -> &str {
-    match line.find("//") {
-        Some(pos) => &line[..pos],
-        None => line,
-    }
-}
-
-/// Is `marker` present in the contiguous comment block directly above
-/// line `idx` (0-based)?
-fn allowed_above(lines: &[&str], idx: usize, marker: &str) -> bool {
-    for prior in lines[..idx].iter().rev() {
-        let t = prior.trim_start();
-        if t.starts_with("//") || t.starts_with("#[") {
-            if t.contains(marker) {
-                return true;
-            }
-        } else if t.is_empty() {
-            return false; // blank line breaks the contiguous block
-        } else {
-            return false;
-        }
-    }
-    false
+    crate::analysis::analyze_source(path, source)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn scan(file: &str, src: &str) -> Vec<LintViolation> {
-        scan_source(Path::new(file), src)
-    }
-
     #[test]
-    fn r1_flags_poisoning_lock_unwraps() {
+    fn scan_source_matches_the_analysis_pass() {
         let src = "fn f() {\n    let g = state.lock().unwrap();\n}\n";
-        let v = scan("rust/src/coordinator/engine.rs", src);
+        let v = scan_source(Path::new("rust/src/coordinator/engine.rs"), src);
         assert_eq!(v.len(), 1);
         assert_eq!(v[0].rule, "lock-unwrap");
         assert_eq!(v[0].line, 2);
-
-        let ok = "fn f() {\n    let g = state.lock_unpoisoned();\n}\n";
-        assert!(scan("rust/src/coordinator/engine.rs", ok).is_empty());
-    }
-
-    #[test]
-    fn r1_flags_condvar_unwraps_but_not_ticket_waits() {
-        let bad = "let g = cv.wait(guard).unwrap();\n";
-        assert_eq!(scan("rust/src/coordinator/engine.rs", bad).len(), 1);
-        // Ticket::wait returns a result, not a poisoned guard.
-        let ok = "let r = ticket.wait();\n";
-        assert!(scan("rust/src/coordinator/engine.rs", ok).is_empty());
-    }
-
-    #[test]
-    fn r2_flags_instant_now_anywhere_in_rank_controller() {
-        let src = "fn decide() {\n    let t = Instant::now();\n}\n";
-        let v = scan("rust/src/coordinator/rank_controller.rs", src);
-        assert_eq!(v.len(), 1);
-        assert_eq!(v[0].rule, "instant-in-decide");
-        // Same text in a file outside the decide-critical scope is fine.
-        assert!(scan("rust/src/coordinator/batcher.rs", src).is_empty());
-    }
-
-    #[test]
-    fn r2_tracks_shard_lock_regions_in_pipeline() {
-        let bad = concat!(
-            "fn decide_stage() {\n",
-            "    {\n",
-            "        let mut shard = shared.shards[layer].lock_unpoisoned();\n",
-            "        let t = Instant::now();\n",
-            "    }\n",
-            "    let after = Instant::now();\n",
-            "}\n",
-        );
-        let v = scan("rust/src/coordinator/pipeline.rs", bad);
-        assert_eq!(v.len(), 1, "only the in-guard read is critical: {v:?}");
-        assert_eq!(v[0].line, 4);
-    }
-
-    #[test]
-    fn r3_flags_raw_mpsc_unless_annotated() {
-        let bad = "use std::sync::mpsc;\n";
-        let v = scan("rust/src/runtime/worker.rs", bad);
-        assert_eq!(v.len(), 1);
-        assert_eq!(v[0].rule, "raw-mpsc");
-
-        let allowed = concat!(
-            "// PJRT literals are not Send; a thread-local channel is the\n",
-            "// sanctioned escape hatch here. lint:allow(mpsc)\n",
-            "use std::sync::mpsc;\n",
-        );
-        assert!(scan("rust/src/runtime/worker.rs", allowed).is_empty());
-
-        // A blank line breaks the annotation's contiguous block.
-        let broken = "// lint:allow(mpsc)\n\nuse std::sync::mpsc;\n";
-        assert_eq!(scan("rust/src/runtime/worker.rs", broken).len(), 1);
-
-        // completion.rs owns the channel surface.
-        assert!(scan("rust/src/coordinator/completion.rs", bad).is_empty());
-    }
-
-    #[test]
-    fn comment_lines_never_match() {
-        let src = "// old code: state.lock().unwrap() — do not resurrect\n";
-        assert!(scan("rust/src/coordinator/engine.rs", src).is_empty());
     }
 
     #[test]

@@ -29,10 +29,14 @@
 //! deterministically. `CONFORMANCE.md` at the repo root catalogues the
 //! invariants this module machine-checks.
 //!
-//! The sibling [`lint`] pass (`drrl lint`) enforces the source-level
-//! contracts the fuzzer relies on: poison-shedding lock discipline, no
-//! wall-clock reads in decide-critical sections, no raw channels
-//! outside the completion layer.
+//! The sibling [`lint`] pass (`drrl lint`, implemented by
+//! [`crate::analysis`]) enforces the source-level contracts the fuzzer
+//! relies on across all of `rust/src/`: poison-shedding lock
+//! discipline, no wall-clock reads in decide-critical sections, no raw
+//! channels outside the completion layer, an acyclic lock-order graph,
+//! ordered iteration in bit-identity-critical modules, panic-free
+//! worker contexts, and shape-pure `linalg` partitions (rules R1–R7 in
+//! CONFORMANCE.md § "Static rules").
 
 pub mod differential;
 pub mod lint;

@@ -283,6 +283,8 @@ pub(crate) fn run_attention_batch(shared: &EngineShared, jobs: Vec<AttnJob>) {
         global_pool().scoped_map(tasks_ref.len(), |t| {
             let (lw, si) = tasks_ref[t];
             let (j, h) = works_ref[lw].owner[si];
+            // by_layer groups only jobs with plan.is_some(), so the probe
+            // wave cannot see an unplanned job. lint:allow(panic-in-worker)
             let inp = &states_ref[j].plan.as_ref().expect("grouped jobs are planned").heads[h];
             match &works_ref[lw].steps[si].probe {
                 ProbeSource::Refresh { cache_seed } => probe_head(inp, *cache_seed, bucket_max),
@@ -414,11 +416,16 @@ pub(crate) fn run_attention_batch(shared: &EngineShared, jobs: Vec<AttnJob>) {
         global_pool().scoped_map(tasks_ref.len(), |t| match tasks_ref[t] {
             ApplyTask::Factor { lw, si } => {
                 let (j, h) = works_ref[lw].owner[si];
+                // Factor tasks exist only for live planned+decided jobs
+                // (filtered above). lint:allow(panic-in-worker)
                 let plan = states_ref[j].plan.as_ref().expect("grouped jobs are planned");
+                // Same filter covers decisions. lint:allow(panic-in-worker)
                 let rank = states_ref[j].decisions[h].expect("decided").rank;
                 reg.lowrank_attention(&works_ref[lw].svds[si], rank, &plan.heads[h].v)
             }
             ApplyTask::Dense { j, h } => {
+                // Dense tasks are pushed per planned head only.
+                // lint:allow(panic-in-worker)
                 let inp = &states_ref[j].plan.as_ref().expect("planned").heads[h];
                 reg.full_attention(&inp.q, &inp.k, &inp.v)
             }

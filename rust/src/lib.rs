@@ -17,6 +17,7 @@
 //! Python never runs on the request path; the binary is self-contained
 //! once `artifacts/` is built.
 
+pub mod analysis;
 pub mod attention;
 pub mod bench_harness;
 pub mod conformance;

@@ -53,6 +53,7 @@ fn main() {
         Some("fuzz") => cmd_fuzz(&args),
         Some("lint") => cmd_lint(&args),
         Some("bench-check") => cmd_bench_check(&args),
+        Some("bench-diff") => cmd_bench_diff(&args),
         _ => {
             print_usage();
             0
@@ -64,12 +65,15 @@ fn main() {
 fn print_usage() {
     println!(
         "drrl — Dynamic Rank RL for adaptive low-rank attention\n\
-         usage: drrl <train|eval|generate|serve|agent|info|fuzz|lint|bench-check> [--flags]\n\
+         usage: drrl <train|eval|generate|serve|agent|info|fuzz|lint|bench-check|bench-diff> [--flags]\n\
          run each subcommand with no flags for sensible defaults;\n\
          fuzz: differential conformance fuzzing\n\
          \x20      (--seed N | --budget N [--base-seed N] | --seeds FILE)\n\
-         lint: concurrency-hygiene source lint over the serving stack\n\
+         lint: token-level static analysis (rules R1-R7) over rust/src/\n\
+         \x20      (--root DIR, --json for a machine-readable report)\n\
          bench-check: validate BENCH_*.json snapshots (--files a.json,b.json)\n\
+         bench-diff: compare two snapshots (drrl bench-diff base.json cur.json\n\
+         \x20      [--max-regress PCT] [--report-only])\n\
          see README.md and CONFORMANCE.md for the full reference."
     );
 }
@@ -558,28 +562,90 @@ fn check_all_finite(j: &drrl::util::Json, at: &str) -> Result<(), String> {
     }
 }
 
-/// `drrl lint` — concurrency-hygiene source lint over `rust/src/coordinator/`
-/// and `rust/src/runtime/` (lock-unwrap, instant-in-decide, raw-mpsc; see
-/// CONFORMANCE.md). `--root` points at the repo root (default `.`).
+/// `drrl lint` — token-level static analysis over all of `rust/src/`
+/// (rules R1–R7: lock hygiene, decide-section wall-clock reads, raw
+/// channels, lock-order cycles, unordered iteration, worker panics,
+/// pool-shaped partitions; see CONFORMANCE.md § "Static rules" and
+/// [`drrl::analysis`]). `--root` points at the repo root (default `.`);
+/// `--json` prints the machine-readable report (schema v1, validated by
+/// the same style of checker as `drrl bench-check`) to stdout.
+/// Exit codes: 0 clean, 1 violations, 2 scan error.
 fn cmd_lint(args: &Args) -> i32 {
     let root = args.get_or("root", ".");
-    match drrl::conformance::run_lint(std::path::Path::new(root)) {
-        Ok(violations) if violations.is_empty() => {
-            println!("lint: serving stack clean");
-            0
-        }
-        Ok(violations) => {
-            for v in &violations {
-                eprintln!("{v}");
-            }
-            eprintln!("lint: {} violation(s)", violations.len());
-            1
-        }
+    let report = match drrl::analysis::run_lint_report(std::path::Path::new(root)) {
+        Ok(r) => r,
         Err(e) => {
             eprintln!("lint: cannot scan {root}: {e}");
-            2
+            return 2;
         }
+    };
+    if args.flag("json") {
+        println!("{}", drrl::analysis::report_json(&report).to_string_pretty());
+    } else if report.violations.is_empty() {
+        println!(
+            "lint: clean ({} files, {} rules)",
+            report.files_scanned.len(),
+            drrl::analysis::RULES.len()
+        );
+    } else {
+        for v in &report.violations {
+            eprintln!("{v}");
+        }
+        eprintln!("lint: {} violation(s)", report.violations.len());
     }
+    i32::from(!report.violations.is_empty())
+}
+
+/// `drrl bench-diff <baseline.json> <current.json>` — per-benchmark
+/// GFLOP/s (or ns/iter) deltas between two harness snapshots. Exits 1
+/// when any case regressed by more than `--max-regress` percent
+/// (default 20), 0 otherwise; `--report-only` always exits 0 (CI's
+/// advisory trend leg). Exit 2 on unreadable/malformed snapshots.
+fn cmd_bench_diff(args: &Args) -> i32 {
+    use drrl::util::Json;
+    let [base_path, cur_path] = match args.positional.as_slice() {
+        [b, c] => [b, c],
+        _ => {
+            eprintln!("usage: drrl bench-diff <baseline.json> <current.json> [--max-regress PCT]");
+            return 2;
+        }
+    };
+    let max_regress = args.f64_or("max-regress", 20.0);
+    let load = |path: &str| -> Result<Json, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("cannot read {path}: {e}"))?;
+        Json::parse(&text).map_err(|e| format!("{path}: invalid JSON: {e}"))
+    };
+    let report = match load(base_path)
+        .and_then(|b| load(cur_path).map(|c| (b, c)))
+        .and_then(|(b, c)| drrl::bench_harness::diff_snapshots(&b, &c, max_regress))
+    {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("bench-diff: {e}");
+            return 2;
+        }
+    };
+    println!("bench-diff: {base_path} -> {cur_path} (max regression {max_regress}%)");
+    for d in &report.deltas {
+        println!("{}", d.row());
+    }
+    for name in &report.only_in_baseline {
+        println!("{name:<40} (only in baseline)");
+    }
+    for name in &report.only_in_current {
+        println!("{name:<40} (only in current)");
+    }
+    let regressions = report.regressions();
+    if regressions > 0 {
+        eprintln!("bench-diff: {regressions}/{} case(s) regressed", report.deltas.len());
+        if args.flag("report-only") {
+            eprintln!("bench-diff: --report-only, not failing");
+            return 0;
+        }
+        return 1;
+    }
+    println!("bench-diff: no regressions past {max_regress}% in {} case(s)", report.deltas.len());
+    0
 }
 
 // -- tiny param (de)serialization: raw little-endian f32 --

@@ -7,9 +7,10 @@
 //! counter ledger or a controller whose invariants are re-checked at use
 //! time). These extension traits recover the guard from a
 //! [`std::sync::PoisonError`] instead of unwrapping it, and the
-//! `conformance::lint` pass forbids the raw `.lock().unwrap()` /
-//! `.lock().expect(..)` pattern in `coordinator/` and `runtime/` so new
-//! code cannot reintroduce the cascade.
+//! `drrl lint` pass (rule R1 `lock-unwrap`, see [`crate::analysis`])
+//! forbids the raw `.lock().unwrap()` / `.lock().expect(..)` pattern
+//! across all of `rust/src/` so new code cannot reintroduce the
+//! cascade.
 
 use std::sync::{Condvar, Mutex, MutexGuard, PoisonError, WaitTimeoutResult};
 use std::time::Duration;

@@ -2,8 +2,11 @@
 //! the offline build). Supports fire-and-forget jobs and a scoped
 //! parallel-for used by the blocked matmul and batched SVD.
 
+use crate::util::sync::{CondvarExt, LockExt};
 use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
+// The pool's internal job queue, not a request-path channel surface
+// (those go through coordinator/completion.rs). lint:allow(mpsc)
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -28,6 +31,7 @@ enum Msg {
 /// Fixed-size thread pool.
 pub struct ThreadPool {
     tx: Sender<Msg>,
+    // Same internal queue as above. lint:allow(mpsc)
     shared_rx: Arc<Mutex<std::sync::mpsc::Receiver<Msg>>>,
     workers: Vec<JoinHandle<()>>,
     size: usize,
@@ -48,7 +52,7 @@ impl ThreadPool {
                     .spawn(move || {
                         IN_POOL_WORKER.with(|f| f.set(true));
                         loop {
-                            let msg = { rx.lock().unwrap().recv() };
+                            let msg = { rx.lock_unpoisoned().recv() };
                             match msg {
                                 Ok(Msg::Run(job)) => job(),
                                 Ok(Msg::Shutdown) | Err(_) => break,
@@ -180,15 +184,15 @@ impl Latch {
 
     pub fn count_down(&self) {
         if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
-            let _g = self.mu.lock().unwrap();
+            let _g = self.mu.lock_unpoisoned();
             self.cv.notify_all();
         }
     }
 
     pub fn wait(&self) {
-        let mut g = self.mu.lock().unwrap();
+        let mut g = self.mu.lock_unpoisoned();
         while self.remaining.load(Ordering::Acquire) != 0 {
-            g = self.cv.wait(g).unwrap();
+            g = self.cv.wait_unpoisoned(g);
         }
     }
 }

@@ -1,0 +1,280 @@
+//! Integration tests for the `rust/src/analysis/` static-analysis
+//! subsystem and the `bench-diff` snapshot comparator.
+//!
+//! Planted-bug fixtures prove each crate-wide rule (R4–R7) actually
+//! bites; the live-tree test proves the real sources lint clean; the
+//! JSON tests prove `drrl lint --json` round-trips through the same
+//! validator style as `drrl bench-check`.
+
+use drrl::analysis::{
+    analyze_crate, analyze_source, report_json, run_lint_report, validate_report, LintReport,
+};
+use drrl::bench_harness::diff_snapshots;
+use drrl::util::Json;
+use std::path::{Path, PathBuf};
+
+fn crate_of(files: &[(&str, &str)]) -> Vec<drrl::analysis::LintViolation> {
+    let owned: Vec<(PathBuf, String)> =
+        files.iter().map(|(p, s)| (PathBuf::from(*p), (*s).to_string())).collect();
+    analyze_crate(&owned)
+}
+
+fn rules_of(v: &[drrl::analysis::LintViolation]) -> Vec<&'static str> {
+    v.iter().map(|x| x.rule).collect()
+}
+
+// ---- R4: lock-order cycles across files ----
+
+#[test]
+fn r4_cross_file_lock_order_cycle_fires() {
+    // forward: alpha -> beta, backward (other file): beta -> alpha.
+    let fwd = "impl Engine {\n\
+               \x20   fn forward(&self) {\n\
+               \x20       let ga = self.alpha.lock_unpoisoned();\n\
+               \x20       let gb = self.beta.lock_unpoisoned();\n\
+               \x20       drop(gb);\n\
+               \x20       drop(ga);\n\
+               \x20   }\n\
+               }\n";
+    let bwd = "impl Engine {\n\
+               \x20   fn backward(&self) {\n\
+               \x20       let gb = self.beta.lock_unpoisoned();\n\
+               \x20       let ga = self.alpha.lock_unpoisoned();\n\
+               \x20       drop(ga);\n\
+               \x20       drop(gb);\n\
+               \x20   }\n\
+               }\n";
+    let v = crate_of(&[
+        ("rust/src/coordinator/fwd.rs", fwd),
+        ("rust/src/coordinator/bwd.rs", bwd),
+    ]);
+    assert!(
+        rules_of(&v).contains(&"lock-order"),
+        "cycle alpha<->beta must be reported: {v:?}"
+    );
+    // Each file alone is acyclic — the cycle only exists crate-wide.
+    assert!(analyze_source(Path::new("rust/src/coordinator/fwd.rs"), fwd).is_empty());
+    assert!(analyze_source(Path::new("rust/src/coordinator/bwd.rs"), bwd).is_empty());
+}
+
+#[test]
+fn r4_propagates_through_self_calls_only() {
+    // caller holds alpha across `self.helper()`, helper locks beta:
+    // propagated edge alpha -> beta; rev's direct beta -> alpha closes
+    // the cycle.
+    let cyclic = "impl Engine {\n\
+                  \x20   fn helper(&self) {\n\
+                  \x20       let gb = self.beta.lock_unpoisoned();\n\
+                  \x20       drop(gb);\n\
+                  \x20   }\n\
+                  \x20   fn caller(&self) {\n\
+                  \x20       let ga = self.alpha.lock_unpoisoned();\n\
+                  \x20       self.helper();\n\
+                  \x20       drop(ga);\n\
+                  \x20   }\n\
+                  \x20   fn rev(&self) {\n\
+                  \x20       let gb = self.beta.lock_unpoisoned();\n\
+                  \x20       let ga = self.alpha.lock_unpoisoned();\n\
+                  \x20       drop(ga);\n\
+                  \x20       drop(gb);\n\
+                  \x20   }\n\
+                  }\n";
+    let v = analyze_source(Path::new("rust/src/coordinator/prop.rs"), cyclic);
+    assert!(rules_of(&v).contains(&"lock-order"), "{v:?}");
+
+    // A foreign-receiver method call must NOT propagate: `other.helper()`
+    // could resolve to any type's `helper`, so name matching stays out.
+    let foreign = cyclic.replace("self.helper();", "other.helper();");
+    let v = analyze_source(Path::new("rust/src/coordinator/prop.rs"), &foreign);
+    assert!(v.is_empty(), "foreign receiver must not alias Engine::helper: {v:?}");
+}
+
+#[test]
+fn r4_allow_annotation_is_rule_scoped() {
+    let src = "impl Engine {\n\
+               \x20   fn forward(&self) {\n\
+               \x20       let ga = self.alpha.lock_unpoisoned();\n\
+               \x20       // audited: ordered by shard index. lint:allow(lock-order)\n\
+               \x20       let gb = self.beta.lock_unpoisoned();\n\
+               \x20       drop(gb);\n\
+               \x20       drop(ga);\n\
+               \x20   }\n\
+               \x20   fn backward(&self) {\n\
+               \x20       let gb = self.beta.lock_unpoisoned();\n\
+               \x20       let ga = self.alpha.lock_unpoisoned();\n\
+               \x20       drop(ga);\n\
+               \x20       drop(gb);\n\
+               \x20   }\n\
+               }\n";
+    let v = analyze_source(Path::new("rust/src/coordinator/fwd.rs"), src);
+    assert!(v.is_empty(), "annotated edge must not close the cycle: {v:?}");
+}
+
+// ---- R5: unordered iteration in bit-identity-critical modules ----
+
+#[test]
+fn r5_hashmap_iteration_fires_in_coordinator_only() {
+    let src = "use std::collections::HashMap;\n\
+               fn tally() {\n\
+               \x20   let mut counts: HashMap<String, u32> = HashMap::new();\n\
+               \x20   counts.insert(String::from(\"a\"), 1);\n\
+               \x20   for (k, v) in counts.iter() {\n\
+               \x20       let _ = (k, v);\n\
+               \x20   }\n\
+               }\n";
+    let v = analyze_source(Path::new("rust/src/coordinator/tally.rs"), src);
+    assert_eq!(rules_of(&v), ["nondet-iter"], "{v:?}");
+
+    // Same source outside the critical modules is fine.
+    assert!(analyze_source(Path::new("rust/src/bench_harness/tally.rs"), src).is_empty());
+    // BTreeMap iteration is ordered and fine anywhere.
+    let ordered = src.replace("HashMap", "BTreeMap");
+    assert!(analyze_source(Path::new("rust/src/coordinator/tally.rs"), &ordered).is_empty());
+}
+
+// ---- R6: panics in worker contexts ----
+
+#[test]
+fn r6_unwrap_in_pool_closure_and_worker_loop_fires() {
+    let src = "fn submit(pool: &Pool) {\n\
+               \x20   pool.execute(move || {\n\
+               \x20       let v = channel.recv();\n\
+               \x20       let _ = v.unwrap();\n\
+               \x20   });\n\
+               }\n\
+               fn worker_loop(state: &State) {\n\
+               \x20   let job = state.next_job().expect(\"job\");\n\
+               \x20   job.run();\n\
+               }\n";
+    let v = analyze_source(Path::new("rust/src/runtime/pool_user.rs"), src);
+    assert_eq!(rules_of(&v), ["panic-in-worker", "panic-in-worker"], "{v:?}");
+
+    // The same unwrap on the caller's thread is not a worker panic.
+    let caller = "fn submit(pool: &Pool) {\n\
+                  \x20   let v = channel.recv();\n\
+                  \x20   let _ = v.unwrap();\n\
+                  \x20   pool.execute(move || {});\n\
+                  }\n";
+    assert!(analyze_source(Path::new("rust/src/runtime/pool_user.rs"), caller).is_empty());
+
+    // An invariant-backed expect can be annotated away.
+    let allowed = src.replace(
+        "let job = state.next_job().expect(\"job\");",
+        "// queue is non-empty by construction. lint:allow(panic-in-worker)\n\
+         \x20   let job = state.next_job().expect(\"job\");",
+    );
+    let v = analyze_source(Path::new("rust/src/runtime/pool_user.rs"), &allowed);
+    assert_eq!(rules_of(&v), ["panic-in-worker"], "only the closure unwrap remains: {v:?}");
+}
+
+// ---- R7: pool-shaped partitions in linalg ----
+
+#[test]
+fn r7_pool_size_reads_fire_in_linalg_only() {
+    let src = "fn chunks(n: usize) -> usize {\n\
+               \x20   let t = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);\n\
+               \x20   n.div_ceil(t)\n\
+               }\n";
+    let v = analyze_source(Path::new("rust/src/linalg/partition.rs"), src);
+    assert_eq!(rules_of(&v), ["pool-shape-partition"], "{v:?}");
+    // The coordinator may shape work by pool size; only linalg may not.
+    assert!(analyze_source(Path::new("rust/src/coordinator/partition.rs"), src).is_empty());
+
+    let pool_size = "fn chunks(reg: &Registry, n: usize) -> usize {\n\
+                     \x20   n.div_ceil(reg.pool.size())\n\
+                     }\n";
+    let v = analyze_source(Path::new("rust/src/linalg/partition.rs"), pool_size);
+    assert_eq!(rules_of(&v), ["pool-shape-partition"], "{v:?}");
+}
+
+// ---- live tree + JSON report ----
+
+#[test]
+fn live_tree_lints_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = run_lint_report(root).expect("lint scan of the real tree");
+    assert!(
+        report.files_scanned.len() > 30,
+        "whole-crate walk should see every module, got {}",
+        report.files_scanned.len()
+    );
+    assert!(
+        report.violations.is_empty(),
+        "live tree must lint clean:\n{}",
+        report
+            .violations
+            .iter()
+            .map(ToString::to_string)
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+#[test]
+fn json_report_with_planted_violations_round_trips() {
+    let src = "fn f() {\n    let g = state.lock().unwrap();\n}\n";
+    let path = PathBuf::from("rust/src/coordinator/planted.rs");
+    let violations = analyze_source(&path, src);
+    assert!(!violations.is_empty());
+    let report = LintReport { files_scanned: vec![path], violations };
+    let json = report_json(&report);
+    let parsed = Json::parse(&json.to_string_pretty()).expect("report is valid JSON");
+    validate_report(&parsed).expect("report validates");
+    assert_eq!(parsed.get("clean").and_then(Json::as_bool), Some(false));
+    let first = &parsed.get("violations").and_then(Json::as_arr).unwrap()[0];
+    assert_eq!(first.get("rule").and_then(Json::as_str), Some("lock-unwrap"));
+    assert_eq!(first.get("line").and_then(Json::as_f64), Some(2.0));
+}
+
+#[test]
+fn live_tree_json_report_validates() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = run_lint_report(root).expect("lint scan");
+    let parsed = Json::parse(&report_json(&report).to_string_pretty()).expect("valid JSON");
+    validate_report(&parsed).expect("live report validates");
+    assert_eq!(parsed.get("clean").and_then(Json::as_bool), Some(true));
+}
+
+// ---- bench-diff ----
+
+#[test]
+fn bench_diff_flags_throughput_regressions() {
+    let base = Json::parse(
+        r#"{"schema_version": 1, "cases": [
+            {"name": "mm", "ns_per_iter": 1000.0, "gflops": 100.0},
+            {"name": "probe", "ns_per_iter": 500.0}
+        ]}"#,
+    )
+    .unwrap();
+    let cur = Json::parse(
+        r#"{"schema_version": 1, "cases": [
+            {"name": "mm", "ns_per_iter": 1000.0, "gflops": 70.0},
+            {"name": "probe", "ns_per_iter": 480.0}
+        ]}"#,
+    )
+    .unwrap();
+    let r = diff_snapshots(&base, &cur, 20.0).expect("diff");
+    assert_eq!(r.regressions(), 1, "{:?}", r.deltas);
+    let mm = r.deltas.iter().find(|d| d.name == "mm").unwrap();
+    assert!(mm.regression && mm.metric == "gflops");
+    let probe = r.deltas.iter().find(|d| d.name == "probe").unwrap();
+    assert!(!probe.regression && probe.metric == "ns_per_iter");
+}
+
+#[test]
+fn committed_snapshots_parse_and_diff() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let load = |name: &str| {
+        let text = std::fs::read_to_string(root.join(name)).unwrap_or_else(|e| {
+            panic!("missing committed snapshot {name}: {e}")
+        });
+        Json::parse(&text).unwrap_or_else(|e| panic!("{name} is not valid JSON: {e}"))
+    };
+    let base = load("BENCH_micro_baseline.json");
+    let cur = load("BENCH_micro.json");
+    let r = diff_snapshots(&base, &cur, 20.0).expect("committed snapshots must diff");
+    assert!(
+        !r.deltas.is_empty(),
+        "baseline and current micro snapshots should share at least one case"
+    );
+}
