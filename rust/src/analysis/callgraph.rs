@@ -1,0 +1,152 @@
+//! Crate-wide call graph over the per-file structural models.
+//!
+//! Nodes are every non-test `fn` across the scanned files; edges are
+//! call sites resolved *by name* against those fns. Resolution is
+//! deliberately conservative (see [`crate::analysis::model::Receiver`]):
+//! only free/path calls (`helper(…)`, `Instant::now(…)`) and
+//! `self.method(…)` calls resolve — a call through any other receiver
+//! (`g.queue.len()`) is never matched, because token-level analysis
+//! cannot type-resolve what `g.queue` is. A name with several non-test
+//! definitions resolves to *all* of them (over-approximation: dataflow
+//! facts may be attributed to the wrong same-named fn, never silently
+//! dropped).
+//!
+//! The graph is pure indices — `FnId = (file index, fn index)` into the
+//! model slice it was built from — so it borrows nothing and the
+//! fixed-point engine in [`crate::analysis::dataflow`] can iterate it
+//! freely.
+
+use std::collections::BTreeMap;
+
+use super::model::FileModel;
+
+/// A fn identified by (file index, fn index) within the model slice the
+/// graph was built from.
+pub type FnId = (usize, usize);
+
+/// One resolved call edge.
+#[derive(Debug, Clone)]
+pub struct ResolvedCall {
+    pub caller: FnId,
+    pub callee: FnId,
+    /// The callee name as written at the call site.
+    pub callee_name: String,
+    /// Token index of the call identifier in the caller's file.
+    pub tok: usize,
+    /// Source line of the call site.
+    pub line: usize,
+    /// The call sits inside a detached (`execute`/`spawn`) closure: it
+    /// runs on another thread and must not join caller summaries.
+    pub detached: bool,
+}
+
+/// Crate-wide call graph: non-test fns + name-resolved call edges.
+pub struct CallGraph {
+    /// Every non-test fn, in (file, fn) order.
+    pub nodes: Vec<FnId>,
+    /// fn name → every non-test fn with that name.
+    pub fns_by_name: BTreeMap<String, Vec<FnId>>,
+    /// Resolved call edges grouped by caller.
+    pub calls_from: BTreeMap<FnId, Vec<ResolvedCall>>,
+}
+
+impl CallGraph {
+    pub fn build(models: &[&FileModel]) -> CallGraph {
+        let mut nodes: Vec<FnId> = Vec::new();
+        let mut fns_by_name: BTreeMap<String, Vec<FnId>> = BTreeMap::new();
+        for (mi, m) in models.iter().enumerate() {
+            for (k, f) in m.fns.iter().enumerate() {
+                if !f.is_test {
+                    nodes.push((mi, k));
+                    fns_by_name.entry(f.name.clone()).or_default().push((mi, k));
+                }
+            }
+        }
+        let mut calls_from: BTreeMap<FnId, Vec<ResolvedCall>> = BTreeMap::new();
+        for (mi, m) in models.iter().enumerate() {
+            for c in &m.calls {
+                if !c.resolvable() || m.in_test(c.tok) {
+                    continue;
+                }
+                let Some(caller_idx) = innermost_fn(m, c.tok) else { continue };
+                if m.fns[caller_idx].is_test {
+                    continue;
+                }
+                let Some(targets) = fns_by_name.get(&c.callee) else { continue };
+                for &callee in targets {
+                    calls_from.entry((mi, caller_idx)).or_default().push(ResolvedCall {
+                        caller: (mi, caller_idx),
+                        callee,
+                        callee_name: c.callee.clone(),
+                        tok: c.tok,
+                        line: c.line,
+                        detached: c.detached,
+                    });
+                }
+            }
+        }
+        CallGraph { nodes, fns_by_name, calls_from }
+    }
+}
+
+/// Index of the innermost fn whose body contains token `i`.
+pub fn innermost_fn(m: &FileModel, i: usize) -> Option<usize> {
+    m.fns
+        .iter()
+        .enumerate()
+        .filter(|(_, f)| f.open < i && i < f.close)
+        .min_by_key(|(_, f)| f.close - f.open)
+        .map(|(k, _)| k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn models(srcs: &[&str]) -> Vec<FileModel> {
+        srcs.iter().map(|s| FileModel::build(s)).collect()
+    }
+
+    #[test]
+    fn resolves_free_and_self_calls_across_files() {
+        let ms = models(&[
+            "fn a(&self) { helper(); self.own(); other.len(); }",
+            "fn helper() {} fn own(&self) {} fn len(&self) {}",
+        ]);
+        let refs: Vec<&FileModel> = ms.iter().collect();
+        let g = CallGraph::build(&refs);
+        let edges = &g.calls_from[&(0, 0)];
+        let callees: Vec<&str> = edges.iter().map(|e| e.callee_name.as_str()).collect();
+        assert!(callees.contains(&"helper"));
+        assert!(callees.contains(&"own"));
+        // `other.len()` must not alias the crate's `len`.
+        assert!(!callees.contains(&"len"));
+        assert!(edges.iter().all(|e| e.callee.0 == 1));
+    }
+
+    #[test]
+    fn test_fns_are_not_nodes_or_callers() {
+        let ms = models(&[concat!(
+            "fn live() { helper(); }\n",
+            "fn helper() {}\n",
+            "#[cfg(test)]\n",
+            "mod tests { fn t() { helper(); } }\n",
+        )]);
+        let refs: Vec<&FileModel> = ms.iter().collect();
+        let g = CallGraph::build(&refs);
+        // Two non-test fns; the in-test call never becomes an edge.
+        assert_eq!(g.nodes.len(), 2);
+        let total: usize = g.calls_from.values().map(|v| v.len()).sum();
+        assert_eq!(total, 1);
+    }
+
+    #[test]
+    fn detached_calls_keep_their_flag() {
+        let ms = models(&["fn a() { pool.execute(|| { helper(); }); }\nfn helper() {}"]);
+        let refs: Vec<&FileModel> = ms.iter().collect();
+        let g = CallGraph::build(&refs);
+        let edges = &g.calls_from[&(0, 0)];
+        let h = edges.iter().find(|e| e.callee_name == "helper").unwrap();
+        assert!(h.detached);
+    }
+}

@@ -1,0 +1,210 @@
+//! Fixed-point fact propagation over the crate call graph.
+//!
+//! The engine is rule-agnostic: a rule seeds each fn with the *direct*
+//! facts its body establishes (locks it acquires, blocking operations
+//! it performs, …), and `propagate` folds every fn's facts into its
+//! callers along resolved, non-detached call edges until nothing
+//! changes. Each propagated fact carries the call chain that reaches
+//! its origin, so a diagnostic at a call site can print the complete
+//! path (`h1() at file:12 -> h2() at file:40 -> state acquired at
+//! file:77`) instead of a bare lock name.
+//!
+//! `depth` controls how many call hops a fact may travel when it is
+//! finally consumed at a call site:
+//!
+//! * `Some(1)` reproduces the PR 8 analyzer exactly — a call site sees
+//!   only the callee's *direct* facts (zero propagation rounds, one
+//!   hop at the site). The regression tests use this to prove the
+//!   fixed-point engine catches cycles the one-level analyzer missed.
+//! * `None` runs to a fixed point (bounded by the node count, the
+//!   longest possible acyclic chain), which is what `drrl lint` ships.
+//!
+//! Facts are keyed: one fn keeps at most one fact per key, and a fact
+//! already present never gets replaced. That makes the iteration
+//! monotone (it terminates even on recursive call graphs) and keeps
+//! the recorded chain the *shortest* one found, since facts arriving
+//! in earlier rounds win.
+
+use std::collections::BTreeMap;
+
+use super::callgraph::{CallGraph, FnId};
+
+/// One call hop on the path from a fn's body to a fact's origin:
+/// `callee` was called at `file`:`line`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Hop {
+    pub callee: String,
+    /// File index (into the model slice the graph was built from).
+    pub file: usize,
+    pub line: usize,
+}
+
+/// A dataflow fact attributed to a fn: directly seeded, or reached
+/// through `chain` (outermost call first).
+#[derive(Debug, Clone)]
+pub struct Fact {
+    /// Stable identity (e.g. the lock name, the blocking ident). One
+    /// fact per key per fn.
+    pub key: String,
+    /// File index of the originating site.
+    pub file: usize,
+    /// Source line of the originating site.
+    pub line: usize,
+    /// Call chain from the owning fn's body to the origin; empty for
+    /// direct facts.
+    pub chain: Vec<Hop>,
+}
+
+/// Per-fn fact sets, keyed for monotone merging.
+pub type FactMap = BTreeMap<FnId, BTreeMap<String, Fact>>;
+
+/// Seed `facts` with a direct fact of `fn_id` (first key wins).
+pub fn seed(facts: &mut FactMap, fn_id: FnId, key: &str, file: usize, line: usize) {
+    facts.entry(fn_id).or_default().entry(key.to_string()).or_insert(Fact {
+        key: key.to_string(),
+        file,
+        line,
+        chain: Vec::new(),
+    });
+}
+
+/// Propagate facts up the call graph. See the module docs for the
+/// `depth` contract (`Some(1)` = legacy one-level, `None` = fixed
+/// point).
+pub fn propagate(graph: &CallGraph, seeds: &FactMap, depth: Option<usize>) -> FactMap {
+    let rounds = match depth {
+        // One hop happens at the consuming call site; `depth - 1`
+        // rounds happen here.
+        Some(d) => d.saturating_sub(1),
+        // An acyclic chain visits each fn at most once.
+        None => graph.nodes.len().saturating_add(1),
+    };
+    let mut facts = seeds.clone();
+    for _ in 0..rounds {
+        let prev = facts.clone();
+        let mut changed = false;
+        for calls in graph.calls_from.values() {
+            for rc in calls {
+                if rc.detached {
+                    continue;
+                }
+                let Some(callee_facts) = prev.get(&rc.callee) else { continue };
+                for f in callee_facts.values() {
+                    let entry = facts.entry(rc.caller).or_default();
+                    if entry.contains_key(&f.key) {
+                        continue;
+                    }
+                    let mut chain = Vec::with_capacity(f.chain.len() + 1);
+                    chain.push(Hop {
+                        callee: rc.callee_name.clone(),
+                        file: rc.caller.0,
+                        line: rc.line,
+                    });
+                    chain.extend(f.chain.iter().cloned());
+                    entry.insert(
+                        f.key.clone(),
+                        Fact { key: f.key.clone(), file: f.file, line: f.line, chain },
+                    );
+                    changed = true;
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    facts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::model::FileModel;
+
+    /// caller -> h1 -> h2 -> h3 (h3 acquires the lock).
+    fn three_deep() -> Vec<FileModel> {
+        vec![FileModel::build(concat!(
+            "fn caller() { h1(); }\n",
+            "fn h1() { h2(); }\n",
+            "fn h2() { h3(); }\n",
+            "fn h3() { let g = state.lock_unpoisoned(); }\n",
+        ))]
+    }
+
+    fn seeds_of(ms: &[FileModel]) -> (CallGraph, FactMap) {
+        let refs: Vec<&FileModel> = ms.iter().collect();
+        let g = CallGraph::build(&refs);
+        let mut s: FactMap = FactMap::new();
+        for (mi, m) in ms.iter().enumerate() {
+            for l in &m.locks {
+                if l.detached || m.in_test(l.tok) {
+                    continue;
+                }
+                if let Some(k) = m
+                    .fns
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, f)| f.open < l.tok && l.tok < f.close)
+                    .min_by_key(|(_, f)| f.close - f.open)
+                    .map(|(k, _)| k)
+                {
+                    seed(&mut s, (mi, k), &l.name, mi, l.line);
+                }
+            }
+        }
+        (g, s)
+    }
+
+    #[test]
+    fn fixed_point_reaches_three_deep_fact_with_chain() {
+        let ms = three_deep();
+        let (g, s) = seeds_of(&ms);
+        let full = propagate(&g, &s, None);
+        // caller is fn index 0; its summary must contain h3's lock.
+        let caller = full.get(&(0, 0)).expect("caller has propagated facts");
+        let fact = caller.get("state").expect("state lock reaches caller");
+        let hops: Vec<&str> = fact.chain.iter().map(|h| h.callee.as_str()).collect();
+        assert_eq!(hops, vec!["h1", "h2", "h3"]);
+        assert_eq!(fact.line, 4);
+    }
+
+    #[test]
+    fn depth_one_sees_only_direct_facts() {
+        let ms = three_deep();
+        let (g, s) = seeds_of(&ms);
+        let legacy = propagate(&g, &s, Some(1));
+        // Zero rounds: summaries equal the seeds, so caller/h1/h2 stay
+        // empty and only h3 carries its own lock. This is exactly why
+        // the one-level analyzer missed transitive cycles.
+        assert!(legacy.get(&(0, 0)).is_none());
+        assert!(legacy.get(&(0, 1)).is_none());
+        assert!(legacy.get(&(0, 2)).is_none());
+        assert!(legacy.get(&(0, 3)).is_some());
+    }
+
+    #[test]
+    fn recursion_terminates_and_keeps_shortest_chain() {
+        let ms = vec![FileModel::build(concat!(
+            "fn a() { b(); }\n",
+            "fn b() { a(); let g = mu.lock_unpoisoned(); }\n",
+        ))];
+        let (g, s) = seeds_of(&ms);
+        let full = propagate(&g, &s, None);
+        let a = full.get(&(0, 0)).unwrap();
+        assert_eq!(a.get("mu").unwrap().chain.len(), 1);
+        let b = full.get(&(0, 1)).unwrap();
+        // b's own fact stays direct (chain empty), not the a->b loop.
+        assert!(b.get("mu").unwrap().chain.is_empty());
+    }
+
+    #[test]
+    fn detached_edges_do_not_carry_facts() {
+        let ms = vec![FileModel::build(concat!(
+            "fn a() { pool.execute(|| { locker(); }); }\n",
+            "fn locker() { let g = mu.lock_unpoisoned(); }\n",
+        ))];
+        let (g, s) = seeds_of(&ms);
+        let full = propagate(&g, &s, None);
+        assert!(full.get(&(0, 0)).is_none(), "detached call must not join a's summary");
+    }
+}

@@ -32,12 +32,25 @@ pub enum TokKind {
     Punct,
 }
 
-/// One token with its 1-based source line.
+/// One token with its 1-based source line and byte-accurate span.
+///
+/// Span invariant (checked by `rules::verify_spans` and the R12 rule):
+/// `text == String::from_utf8_lossy(&src[start..end])`, `line` is
+/// 1 + the number of newlines before `start`, and `col` is the 1-based
+/// byte column of `start` on that line. Prefixed tokens narrow the span
+/// to the part `text` keeps: a lifetime `'a` spans just the `a`, a raw
+/// identifier `r#type` spans just `type`.
 #[derive(Debug, Clone)]
 pub struct Token {
     pub kind: TokKind,
     pub text: String,
     pub line: usize,
+    /// Byte offset of the first byte of `text` in the source.
+    pub start: usize,
+    /// Byte offset one past the last byte of `text`.
+    pub end: usize,
+    /// 1-based byte column of `start` on `line`.
+    pub col: usize,
 }
 
 impl Token {
@@ -92,13 +105,16 @@ fn is_ident_cont(b: u8) -> bool {
 
 /// Lex `src` into tokens + comments. Total: never panics, any input.
 pub fn lex(src: &str) -> Lexed {
-    Lexer { b: src.as_bytes(), i: 0, line: 1, out: Lexed::default() }.run()
+    Lexer { b: src.as_bytes(), i: 0, line: 1, line_start: 0, out: Lexed::default() }.run()
 }
 
 struct Lexer<'a> {
     b: &'a [u8],
     i: usize,
     line: usize,
+    /// Byte offset where the current line begins (columns are 1-based
+    /// offsets from here).
+    line_start: usize,
     out: Lexed,
 }
 
@@ -110,6 +126,7 @@ impl<'a> Lexer<'a> {
                 b'\n' => {
                     self.line += 1;
                     self.i += 1;
+                    self.line_start = self.i;
                 }
                 c if c.is_ascii_whitespace() => self.i += 1,
                 b'/' if self.peek(1) == Some(b'/') => self.line_comment(),
@@ -129,8 +146,22 @@ impl<'a> Lexer<'a> {
         self.b.get(self.i + ahead).copied()
     }
 
-    fn push(&mut self, kind: TokKind, text: String, line: usize) {
-        self.out.tokens.push(Token { kind, text, line });
+    fn push(
+        &mut self,
+        kind: TokKind,
+        text: String,
+        line: usize,
+        start: usize,
+        end: usize,
+        col: usize,
+    ) {
+        self.out.tokens.push(Token { kind, text, line, start, end, col });
+    }
+
+    /// 1-based byte column of byte offset `at` on the current line.
+    /// Call *before* consuming any newline the token may contain.
+    fn col_of(&self, at: usize) -> usize {
+        at - self.line_start + 1
     }
 
     fn line_comment(&mut self) {
@@ -160,6 +191,7 @@ impl<'a> Lexer<'a> {
                 (b'\n', _) => {
                     self.line += 1;
                     self.i += 1;
+                    self.line_start = self.i;
                 }
                 _ => self.i += 1,
             }
@@ -170,7 +202,7 @@ impl<'a> Lexer<'a> {
 
     /// `"…"` with escapes; newlines inside are legal and counted.
     fn string(&mut self) {
-        let (start, start_line) = (self.i, self.line);
+        let (start, start_line, start_col) = (self.i, self.line, self.col_of(self.i));
         self.i += 1;
         while self.i < self.b.len() {
             match self.b[self.i] {
@@ -182,12 +214,14 @@ impl<'a> Lexer<'a> {
                 b'\n' => {
                     self.line += 1;
                     self.i += 1;
+                    self.line_start = self.i;
                 }
                 _ => self.i += 1,
             }
         }
-        let text = String::from_utf8_lossy(&self.b[start..self.i.min(self.b.len())]).into_owned();
-        self.push(TokKind::Literal, text, start_line);
+        let end = self.i.min(self.b.len());
+        let text = String::from_utf8_lossy(&self.b[start..end]).into_owned();
+        self.push(TokKind::Literal, text, start_line, start, end, start_col);
     }
 
     /// Handle `r"…"`, `r#"…"#`, `br"…"`, `b"…"`, `b'…'`, and raw idents
@@ -251,13 +285,14 @@ impl<'a> Lexer<'a> {
         if self.b.get(j) != Some(&b'"') {
             return false;
         }
-        let (start, start_line) = (self.i, self.line);
+        let (start, start_line, start_col) = (self.i, self.line, self.col_of(self.i));
         j += 1;
         // No escapes in raw strings: scan for `"` + hashes `#`s.
         'scan: while j < self.b.len() {
             if self.b[j] == b'\n' {
                 self.line += 1;
                 j += 1;
+                self.line_start = j;
                 continue;
             }
             if self.b[j] == b'"' {
@@ -272,9 +307,10 @@ impl<'a> Lexer<'a> {
             }
             j += 1;
         }
-        let text = String::from_utf8_lossy(&self.b[start..j.min(self.b.len())]).into_owned();
+        let end = j.min(self.b.len());
+        let text = String::from_utf8_lossy(&self.b[start..end]).into_owned();
         self.i = j;
-        self.push(TokKind::Literal, text, start_line);
+        self.push(TokKind::Literal, text, start_line, start, end, start_col);
         true
     }
 
@@ -283,6 +319,7 @@ impl<'a> Lexer<'a> {
     fn char_or_lifetime(&mut self) {
         let start_line = self.line;
         let start = self.i;
+        let start_col = self.col_of(start);
         match self.peek(1) {
             Some(b'\\') => {
                 // Escaped char literal: consume the escaped scalar (so
@@ -297,7 +334,7 @@ impl<'a> Lexer<'a> {
                 }
                 self.i = (self.i + 1).min(self.b.len());
                 let text = String::from_utf8_lossy(&self.b[start..self.i]).into_owned();
-                self.push(TokKind::Literal, text, start_line);
+                self.push(TokKind::Literal, text, start_line, start, self.i, start_col);
             }
             Some(c) if is_ident_start(c) => {
                 // 'a' is a char, 'a / 'static are lifetimes. A char
@@ -310,11 +347,13 @@ impl<'a> Lexer<'a> {
                 if self.b.get(j) == Some(&b'\'') {
                     self.i = j + 1;
                     let text = String::from_utf8_lossy(&self.b[start..self.i]).into_owned();
-                    self.push(TokKind::Literal, text, start_line);
+                    self.push(TokKind::Literal, text, start_line, start, self.i, start_col);
                 } else {
+                    // Span covers the ident only (past the quote), so
+                    // text == source slice holds for lifetimes too.
                     let text = String::from_utf8_lossy(&self.b[start + 1..j]).into_owned();
                     self.i = j;
-                    self.push(TokKind::Lifetime, text, start_line);
+                    self.push(TokKind::Lifetime, text, start_line, start + 1, j, start_col + 1);
                 }
             }
             Some(_) => {
@@ -324,33 +363,36 @@ impl<'a> Lexer<'a> {
                 while self.i < self.b.len() && self.b[self.i] != b'\'' {
                     if self.b[self.i] == b'\n' {
                         self.line += 1;
+                        self.line_start = self.i + 1;
                     }
                     self.i += 1;
                 }
                 self.i = (self.i + 1).min(self.b.len());
                 let text = String::from_utf8_lossy(&self.b[start..self.i]).into_owned();
-                self.push(TokKind::Literal, text, start_line);
+                self.push(TokKind::Literal, text, start_line, start, self.i, start_col);
             }
             None => {
                 self.i += 1;
-                self.push(TokKind::Punct, "'".into(), start_line);
+                self.push(TokKind::Punct, "'".into(), start_line, start, self.i, start_col);
             }
         }
     }
 
     fn ident(&mut self) {
         let start = self.i;
+        let start_col = self.col_of(start);
         while self.i < self.b.len() && is_ident_cont(self.b[self.i]) {
             self.i += 1;
         }
         let text = String::from_utf8_lossy(&self.b[start..self.i]).into_owned();
-        self.push(TokKind::Ident, text, self.line);
+        self.push(TokKind::Ident, text, self.line, start, self.i, start_col);
     }
 
     /// Numeric literal: digits, `_`, hex/suffix letters, a decimal point
     /// followed by a digit, and a sign directly after an exponent `e`.
     fn number(&mut self) {
         let start = self.i;
+        let start_col = self.col_of(start);
         self.i += 1;
         while self.i < self.b.len() {
             let c = self.b[self.i];
@@ -368,14 +410,16 @@ impl<'a> Lexer<'a> {
             }
         }
         let text = String::from_utf8_lossy(&self.b[start..self.i]).into_owned();
-        self.push(TokKind::Literal, text, self.line);
+        self.push(TokKind::Literal, text, self.line, start, self.i, start_col);
     }
 
     fn punct_or_utf8(&mut self) {
         let c = self.b[self.i];
+        let start = self.i;
+        let start_col = self.col_of(start);
         if c < 0x80 {
-            self.push(TokKind::Punct, (c as char).to_string(), self.line);
             self.i += 1;
+            self.push(TokKind::Punct, (c as char).to_string(), self.line, start, self.i, start_col);
         } else {
             // One UTF-8 scalar as a punct token (only reachable from
             // non-ASCII code points outside strings/comments — rare).
@@ -389,8 +433,8 @@ impl<'a> Lexer<'a> {
                 Err(_) => 1,
             };
             let text = String::from_utf8_lossy(&s[..len]).into_owned();
-            self.push(TokKind::Punct, text, self.line);
             self.i += len;
+            self.push(TokKind::Punct, text, self.line, start, self.i, start_col);
         }
     }
 }
@@ -509,6 +553,40 @@ mod tests {
         let lx = lex("let s = \"a\nb\"; after();");
         let after = lx.tokens.iter().find(|t| t.is_ident("after")).unwrap();
         assert_eq!(after.line, 2);
+    }
+
+    #[test]
+    fn spans_are_byte_accurate() {
+        let src = "fn f() {\n    x.lock()\n}\nlet s = \"a\nb\"; fin();\n";
+        let lx = lex(src);
+        for t in &lx.tokens {
+            assert_eq!(
+                t.text,
+                String::from_utf8_lossy(&src.as_bytes()[t.start..t.end]),
+                "span of {t:?} does not reproduce its text"
+            );
+            let before = &src.as_bytes()[..t.start];
+            let line = 1 + before.iter().filter(|&&b| b == b'\n').count();
+            assert_eq!(t.line, line, "{t:?}");
+            let line_start =
+                before.iter().rposition(|&b| b == b'\n').map(|p| p + 1).unwrap_or(0);
+            assert_eq!(t.col, t.start - line_start + 1, "{t:?}");
+        }
+        let lock = lx.tokens.iter().find(|t| t.is_ident("lock")).unwrap();
+        assert_eq!((lock.line, lock.col), (2, 7));
+        // `fin` comes after a multi-line string: line/col must resync.
+        let fin = lx.tokens.iter().find(|t| t.is_ident("fin")).unwrap();
+        assert_eq!((fin.line, fin.col), (5, 5));
+    }
+
+    #[test]
+    fn lifetime_and_raw_ident_spans_cover_their_text() {
+        let src = "&'a str; let r#type = 1;";
+        let lx = lex(src);
+        let lt = lx.tokens.iter().find(|t| t.kind == TokKind::Lifetime).unwrap();
+        assert_eq!(&src[lt.start..lt.end], "a");
+        let raw = lx.tokens.iter().find(|t| t.is_ident("type")).unwrap();
+        assert_eq!(&src[raw.start..raw.end], "type");
     }
 
     #[test]

@@ -1,10 +1,11 @@
-//! Token-level static analysis over the crate's own sources.
+//! Static analysis over the crate's own sources: token level + an
+//! interprocedural dataflow layer.
 //!
 //! The engine's conformance story has two halves: `drrl fuzz`
 //! dynamically checks that paired execution paths are bit-identical
 //! (see [`crate::conformance`]), and `drrl lint` statically checks the
 //! source-level contracts the fuzzer relies on. This module is the
-//! static half — a three-layer pipeline, all in-tree (no proc-macro or
+//! static half — a five-layer pipeline, all in-tree (no proc-macro or
 //! syn dependency; the container is offline):
 //!
 //! 1. **[`lexer`]** — a small Rust lexer producing a token stream
@@ -18,47 +19,100 @@
 //!
 //! 2. **[`model`]** — a structural model per file: matched brace pairs,
 //!    `#[cfg(test)]`/`#[test]` region masks, fn spans, lock-guard
-//!    liveness (a let-bound guard lives to the end of its enclosing
-//!    block or an explicit `drop(guard)`, a temporary to the end of its
-//!    statement), receiver paths for method calls, intra-crate call
+//!    liveness, receiver paths for method calls, intra-crate call
 //!    sites, and thread-pool closure regions (detached `execute`/
 //!    `spawn` bodies run on other threads, so caller guards are not
 //!    live inside them; scoped `scoped_for`/`scoped_map`/`chunked_for`
 //!    bodies block the caller, so they are).
 //!
-//! 3. **[`rules`]** — the seven rules R1–R7 matched over the model
-//!    (see [`rules::RULES`] for the catalogue and CONFORMANCE.md's
-//!    "Static rules" section for the contracts). File-local rules run
-//!    per file; the lock-order rule (R4) builds one acquisition graph
-//!    across every file and reports cycles.
+//! 3. **[`callgraph`]** — one crate-wide call graph over every file's
+//!    model: nodes are non-test fns, edges are conservatively
+//!    name-resolved call sites (free/path calls and `self.` calls
+//!    only; arbitrary receivers never resolve).
 //!
-//! [`run_lint`] walks **all of `rust/src/`** recursively and analyzes
-//! every `.rs` file as one crate. [`report_json`] renders the result in
-//! the machine-readable schema the CI lint leg uploads, and
-//! [`validate_report`] re-validates that schema the same way
-//! `drrl bench-check` validates bench snapshots. Suppressions are
-//! rule-scoped: a `lint:allow(<rule>)` marker in a comment on the
-//! flagged line, or in the contiguous comment block directly above it,
-//! silences exactly that rule at that site.
+//! 4. **[`dataflow`]** — rule-agnostic fixed-point fact propagation
+//!    over that graph. Rules seed each fn with its direct facts (locks
+//!    acquired, blocking ops performed) and get back summaries whose
+//!    facts carry the full call chain to their origin, so diagnostics
+//!    print `h1() at file:12 -> h2() at file:40 -> beta acquired at
+//!    file:77` instead of a bare name. The PR 8 analyzer propagated
+//!    exactly one call level; the fixed point closes the transitive
+//!    gap (and `AnalysisOptions { lock_depth: Some(1) }` reproduces
+//!    the old behavior for regression contrast).
+//!
+//! 5. **[`rules`]** — the twelve rules R1–R12 matched over the model
+//!    and the summaries (see [`rules::RULES`] for the catalogue and
+//!    CONFORMANCE.md § "Static rules" for the contracts). R4
+//!    (lock-order) and R8 (blocking-under-lock) are interprocedural;
+//!    R12 re-verifies every emitted span byte-for-byte.
+//!
+//! [`run_lint_report`] walks `rust/src/`, `rust/tests/`,
+//! `rust/benches/` and `examples/` (whichever exist) and analyzes them
+//! as one crate. Findings in `rust/src/` non-test code are
+//! **error**-level; findings in test/bench/example code are
+//! **advisory** (reported, never CI-failing). [`report_json`] renders
+//! the machine-readable report (schema v1, additive — it now carries
+//! byte spans, severity, suggestions, wall time and a bench-diff
+//! compatible `cases` entry), and [`validate_report`] re-validates
+//! that schema the same way `drrl bench-check` validates snapshots.
+//!
+//! **Baseline gating** (`lint_baseline.json` at the repo root): CI
+//! fails only on *new* error-level findings. [`baseline_json`] writes
+//! the current errors as a baseline, [`parse_baseline`] loads one, and
+//! [`diff_against_baseline`] multiset-diffs current errors against it
+//! on (file, rule, text) — moving a finding within a file does not
+//! trip the gate, fixing one shrinks the baseline. [`sarif`] renders
+//! the same findings as SARIF 2.1.0 for code-scanning upload.
+//!
+//! Suppressions are rule-scoped: a `lint:allow(<rule>)` marker in a
+//! comment on the flagged line, or in the contiguous comment block
+//! directly above it, silences exactly that rule at that site — and
+//! R11 requires the marker's comment block to carry a rationale.
 
+pub mod callgraph;
+pub mod dataflow;
 pub mod lexer;
 pub mod model;
 pub mod rules;
+pub mod sarif;
 
-pub use rules::{analyze_crate, analyze_source, LintViolation, RuleInfo, RULES};
+pub use rules::{
+    analyze_crate, analyze_crate_with, analyze_source, verify_spans, AnalysisOptions, FileKind,
+    Level, LintViolation, RuleInfo, RULES,
+};
+pub use sarif::{to_sarif, validate_sarif};
 
 use crate::util::json::{obj, Json};
 use std::path::{Path, PathBuf};
 
-/// Schema version of the `drrl lint --json` report.
+/// Schema version of the `drrl lint --json` report. Still v1: every
+/// field added since the first cut (spans, severity, wall time,
+/// `cases`) is additive, and the validator accepts the superset only.
 pub const LINT_SCHEMA_VERSION: u64 = 1;
 
-/// The outcome of linting a tree: which files were scanned and every
-/// violation found.
+/// Schema version of `lint_baseline.json`.
+pub const BASELINE_SCHEMA_VERSION: u64 = 1;
+
+/// The outcome of linting a tree: which files were scanned, every
+/// violation found, and how long the pass took.
 #[derive(Debug)]
 pub struct LintReport {
     pub files_scanned: Vec<PathBuf>,
     pub violations: Vec<LintViolation>,
+    /// Wall-clock time of the scan+analyze pass, in milliseconds.
+    pub wall_ms: u64,
+}
+
+impl LintReport {
+    /// Error-level findings (the ones gating can fail on).
+    pub fn errors(&self) -> usize {
+        self.violations.iter().filter(|v| v.level == Level::Error).count()
+    }
+
+    /// Advisory findings (test/bench/example code — never CI-failing).
+    pub fn advisories(&self) -> usize {
+        self.violations.len() - self.errors()
+    }
 }
 
 /// Recursively collect every `.rs` file under `dir`, sorted for
@@ -86,12 +140,24 @@ pub fn walk_rs_files(dir: &Path) -> Result<Vec<PathBuf>, String> {
     Ok(files)
 }
 
-/// Lint the whole crate: every `.rs` file under `<root>/rust/src`,
-/// analyzed together so cross-file rules (lock-order) see the full
-/// call graph.
+/// The scan roots, relative to the repo root. `rust/src` must exist;
+/// the rest are scanned when present (their findings are advisory —
+/// see [`rules::FileKind`]).
+const SCAN_ROOTS: [&str; 4] = ["rust/src", "rust/tests", "rust/benches", "examples"];
+
+/// Lint the whole tree: every `.rs` file under the scan roots,
+/// analyzed together so cross-file rules (lock-order,
+/// blocking-under-lock) see the full call graph.
 pub fn run_lint_report(root: &Path) -> Result<LintReport, String> {
-    let src_root = root.join("rust").join("src");
-    let files = walk_rs_files(&src_root)?;
+    let t0 = std::time::Instant::now();
+    let mut files = Vec::new();
+    for (i, rel) in SCAN_ROOTS.iter().enumerate() {
+        let dir = root.join(rel);
+        if i == 0 || dir.is_dir() {
+            files.extend(walk_rs_files(&dir)?);
+        }
+    }
+    files.sort();
     let mut sources = Vec::with_capacity(files.len());
     for path in &files {
         let text =
@@ -99,7 +165,8 @@ pub fn run_lint_report(root: &Path) -> Result<LintReport, String> {
         sources.push((path.clone(), text));
     }
     let violations = analyze_crate(&sources);
-    Ok(LintReport { files_scanned: files, violations })
+    let wall_ms = t0.elapsed().as_millis() as u64;
+    Ok(LintReport { files_scanned: files, violations, wall_ms })
 }
 
 /// Compatibility wrapper: just the violations (the shape the original
@@ -115,10 +182,21 @@ pub fn run_lint(root: &Path) -> Result<Vec<LintViolation>, String> {
 ///   "schema_version": 1,
 ///   "files_scanned": 40,
 ///   "clean": false,
+///   "errors": 1,
+///   "advisories": 2,
+///   "wall_ms": 84,
+///   "cases": [{"name": "drrl-lint", "ns_per_iter": 84000000.0}],
 ///   "rules": [{"name": "lock-order", "contract": "…"}, …],
-///   "violations": [{"file": "…", "line": 12, "rule": "…", "text": "…"}, …]
+///   "violations": [{"file": "…", "line": 12, "col": 9, "byte_start": 188,
+///                   "byte_end": 203, "snippet": "…", "rule": "…",
+///                   "level": "error", "text": "…"}, …]
 /// }
 /// ```
+///
+/// `clean` means *no error-level findings* (advisories in test code do
+/// not dirty the tree). `cases` mirrors the bench-snapshot case shape
+/// so `drrl bench-diff` can trend lint wall time across commits like
+/// any other benchmark.
 pub fn report_json(report: &LintReport) -> Json {
     let rules = RULES
         .iter()
@@ -133,26 +211,46 @@ pub fn report_json(report: &LintReport) -> Json {
         .violations
         .iter()
         .map(|v| {
-            obj(vec![
+            let mut pairs = vec![
                 ("file", Json::Str(v.file.display().to_string())),
                 ("line", Json::Num(v.line as f64)),
+                ("col", Json::Num(v.col as f64)),
+                ("byte_start", Json::Num(v.byte_start as f64)),
+                ("byte_end", Json::Num(v.byte_end as f64)),
+                ("snippet", Json::Str(v.snippet.clone())),
                 ("rule", Json::Str(v.rule.to_string())),
+                ("level", Json::Str(v.level.as_str().to_string())),
                 ("text", Json::Str(v.text.trim().to_string())),
-            ])
+            ];
+            if let Some(s) = &v.suggestion {
+                pairs.push(("suggestion", Json::Str(s.clone())));
+            }
+            obj(pairs)
         })
         .collect();
     obj(vec![
         ("schema_version", Json::Num(LINT_SCHEMA_VERSION as f64)),
         ("files_scanned", Json::Num(report.files_scanned.len() as f64)),
-        ("clean", Json::Bool(report.violations.is_empty())),
+        ("clean", Json::Bool(report.errors() == 0)),
+        ("errors", Json::Num(report.errors() as f64)),
+        ("advisories", Json::Num(report.advisories() as f64)),
+        ("wall_ms", Json::Num(report.wall_ms as f64)),
+        (
+            "cases",
+            Json::Arr(vec![obj(vec![
+                ("name", Json::Str("drrl-lint".to_string())),
+                ("ns_per_iter", Json::Num(report.wall_ms as f64 * 1e6)),
+            ])]),
+        ),
         ("rules", Json::Arr(rules)),
         ("violations", Json::Arr(violations)),
     ])
 }
 
 /// Validate a parsed `drrl lint --json` report: required fields present,
-/// well-typed, and every number finite — the same discipline
-/// `drrl bench-check` applies to bench snapshots.
+/// well-typed, every number finite, and the summary counts consistent
+/// with the violations array — the same discipline `drrl bench-check`
+/// applies to bench snapshots.
 pub fn validate_report(v: &Json) -> Result<(), String> {
     let version = v
         .get("schema_version")
@@ -166,7 +264,22 @@ pub fn validate_report(v: &Json) -> Result<(), String> {
     if !scanned.is_finite() || scanned < 0.0 {
         return Err(format!("bad files_scanned {scanned}"));
     }
-    v.get("clean").and_then(Json::as_bool).ok_or("missing clean")?;
+    let clean = v.get("clean").and_then(Json::as_bool).ok_or("missing clean")?;
+    let errors = v.get("errors").and_then(Json::as_usize).ok_or("missing errors")?;
+    let advisories =
+        v.get("advisories").and_then(Json::as_usize).ok_or("missing advisories")?;
+    let wall = v.get("wall_ms").and_then(Json::as_f64).ok_or("missing wall_ms")?;
+    if !wall.is_finite() || wall < 0.0 {
+        return Err(format!("bad wall_ms {wall}"));
+    }
+    let cases = v.get("cases").and_then(Json::as_arr).ok_or("missing cases")?;
+    for c in cases {
+        c.get("name").and_then(Json::as_str).ok_or("case missing name")?;
+        let ns = c.get("ns_per_iter").and_then(Json::as_f64).ok_or("case missing ns_per_iter")?;
+        if !ns.is_finite() || ns < 0.0 {
+            return Err(format!("bad case ns_per_iter {ns}"));
+        }
+    }
     let rules = v.get("rules").and_then(Json::as_arr).ok_or("missing rules")?;
     if rules.len() != RULES.len() {
         return Err(format!("expected {} rules, got {}", RULES.len(), rules.len()));
@@ -176,50 +289,179 @@ pub fn validate_report(v: &Json) -> Result<(), String> {
         r.get("contract").and_then(Json::as_str).ok_or("rule missing contract")?;
     }
     let violations = v.get("violations").and_then(Json::as_arr).ok_or("missing violations")?;
+    let mut err_count = 0usize;
     for viol in violations {
         viol.get("file").and_then(Json::as_str).ok_or("violation missing file")?;
         let line = viol.get("line").and_then(Json::as_f64).ok_or("violation missing line")?;
         if !line.is_finite() || line < 1.0 {
             return Err(format!("bad violation line {line}"));
         }
+        viol.get("col").and_then(Json::as_usize).ok_or("violation missing col")?;
+        let bs = viol.get("byte_start").and_then(Json::as_usize).ok_or("missing byte_start")?;
+        let be = viol.get("byte_end").and_then(Json::as_usize).ok_or("missing byte_end")?;
+        if be < bs {
+            return Err(format!("violation span ends ({be}) before it starts ({bs})"));
+        }
+        viol.get("snippet").and_then(Json::as_str).ok_or("violation missing snippet")?;
         let rule = viol.get("rule").and_then(Json::as_str).ok_or("violation missing rule")?;
         if !RULES.iter().any(|r| r.name == rule) {
             return Err(format!("unknown rule {rule:?}"));
         }
+        match viol.get("level").and_then(Json::as_str) {
+            Some("error") => err_count += 1,
+            Some("advisory") => {}
+            other => return Err(format!("bad violation level {other:?}")),
+        }
         viol.get("text").and_then(Json::as_str).ok_or("violation missing text")?;
     }
-    let clean = v.get("clean").and_then(Json::as_bool).unwrap_or(false);
-    if clean != violations.is_empty() {
-        return Err("clean flag inconsistent with violations array".into());
+    if errors != err_count {
+        return Err(format!("errors={errors} but {err_count} error-level violations listed"));
+    }
+    if errors + advisories != violations.len() {
+        return Err("errors+advisories inconsistent with violations array".into());
+    }
+    if clean != (errors == 0) {
+        return Err("clean flag inconsistent with error count".into());
     }
     Ok(())
+}
+
+/// One accepted finding in `lint_baseline.json`: (file, rule, text).
+/// Line numbers are deliberately absent so unrelated edits that shift
+/// a known finding within its file do not trip the gate.
+pub type BaselineEntry = (String, String, String);
+
+fn baseline_key(v: &LintViolation) -> BaselineEntry {
+    (v.file.display().to_string(), v.rule.to_string(), v.text.trim().to_string())
+}
+
+/// Render the error-level findings as a baseline document. Advisories
+/// are never written: they cannot fail CI, so grandfathering them
+/// would only hide them.
+pub fn baseline_json(violations: &[LintViolation]) -> Json {
+    let findings = violations
+        .iter()
+        .filter(|v| v.level == Level::Error)
+        .map(|v| {
+            let (file, rule, text) = baseline_key(v);
+            obj(vec![
+                ("file", Json::Str(file)),
+                ("rule", Json::Str(rule)),
+                ("text", Json::Str(text)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("schema_version", Json::Num(BASELINE_SCHEMA_VERSION as f64)),
+        ("findings", Json::Arr(findings)),
+    ])
+}
+
+/// Parse a baseline document into its accepted findings.
+pub fn parse_baseline(doc: &Json) -> Result<Vec<BaselineEntry>, String> {
+    let version =
+        doc.get("schema_version").and_then(Json::as_f64).ok_or("baseline missing schema_version")?;
+    if version != BASELINE_SCHEMA_VERSION as f64 {
+        return Err(format!("unsupported baseline schema_version {version}"));
+    }
+    let findings =
+        doc.get("findings").and_then(Json::as_arr).ok_or("baseline missing findings array")?;
+    let mut out = Vec::with_capacity(findings.len());
+    for (i, f) in findings.iter().enumerate() {
+        let file = f.get("file").and_then(Json::as_str).ok_or(format!("finding {i}: no file"))?;
+        let rule = f.get("rule").and_then(Json::as_str).ok_or(format!("finding {i}: no rule"))?;
+        if !RULES.iter().any(|r| r.name == rule) {
+            return Err(format!("finding {i}: unknown rule {rule:?}"));
+        }
+        let text = f.get("text").and_then(Json::as_str).ok_or(format!("finding {i}: no text"))?;
+        out.push((file.to_string(), rule.to_string(), text.trim().to_string()));
+    }
+    Ok(out)
+}
+
+/// The gate's verdict: which current error-level findings the baseline
+/// does not cover, and how many baseline entries no longer match
+/// anything (fixed — the baseline should be regenerated to shrink).
+pub struct BaselineDiff<'a> {
+    pub new: Vec<&'a LintViolation>,
+    pub fixed: usize,
+}
+
+/// Multiset-diff the current error-level findings against a baseline.
+/// Each baseline entry absorbs at most one matching finding, so a rule
+/// firing *more* often than the baseline recorded is correctly "new".
+/// Advisories never participate.
+pub fn diff_against_baseline<'a>(
+    violations: &'a [LintViolation],
+    baseline: &[BaselineEntry],
+) -> BaselineDiff<'a> {
+    let mut budget: std::collections::BTreeMap<&BaselineEntry, usize> =
+        std::collections::BTreeMap::new();
+    for b in baseline {
+        *budget.entry(b).or_insert(0) += 1;
+    }
+    let mut new = Vec::new();
+    for v in violations.iter().filter(|v| v.level == Level::Error) {
+        let key = baseline_key(v);
+        match budget.get_mut(&key) {
+            Some(n) if *n > 0 => *n -= 1,
+            _ => new.push(v),
+        }
+    }
+    let fixed: usize = budget.values().sum();
+    BaselineDiff { new, fixed }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn report_with(src: &str) -> LintReport {
+        let files = vec![(PathBuf::from("rust/src/coordinator/x.rs"), src.to_string())];
+        let violations = analyze_crate(&files);
+        LintReport {
+            files_scanned: files.into_iter().map(|(p, _)| p).collect(),
+            violations,
+            wall_ms: 7,
+        }
+    }
+
     #[test]
     fn report_json_round_trips_through_the_validator() {
-        let report = LintReport {
-            files_scanned: vec![PathBuf::from("rust/src/lib.rs")],
-            violations: vec![LintViolation {
-                file: PathBuf::from("rust/src/coordinator/x.rs"),
-                line: 7,
-                rule: "lock-unwrap",
-                text: "let g = m.lock().unwrap();".into(),
-            }],
-        };
+        let report = report_with("fn f() {\n    let g = m.lock().unwrap();\n}\n");
+        assert_eq!(report.errors(), 1);
         let json = report_json(&report);
         let text = json.to_string_pretty();
         let parsed = Json::parse(&text).expect("report must be parseable JSON");
         validate_report(&parsed).expect("report must validate");
         assert_eq!(parsed.get("clean").and_then(Json::as_bool), Some(false));
-        assert_eq!(parsed.get("files_scanned").and_then(Json::as_f64), Some(1.0));
-        assert_eq!(
-            parsed.get("violations").and_then(Json::as_arr).map(<[Json]>::len),
-            Some(1)
-        );
+        assert_eq!(parsed.get("errors").and_then(Json::as_usize), Some(1));
+        let v0 = &parsed.get("violations").unwrap().as_arr().unwrap()[0];
+        assert_eq!(v0.get("level").and_then(Json::as_str), Some("error"));
+        assert_eq!(v0.get("snippet").and_then(Json::as_str), Some("lock().unwrap()"));
+        assert_eq!(v0.get("suggestion").and_then(Json::as_str), Some("lock_unpoisoned()"));
+        let case = &parsed.get("cases").unwrap().as_arr().unwrap()[0];
+        assert_eq!(case.get("name").and_then(Json::as_str), Some("drrl-lint"));
+        assert_eq!(case.get("ns_per_iter").and_then(Json::as_f64), Some(7e6));
+    }
+
+    #[test]
+    fn advisories_do_not_dirty_the_report() {
+        let files = vec![(
+            PathBuf::from("rust/tests/fixture.rs"),
+            "fn f() { let g = m.lock().unwrap(); }\n".to_string(),
+        )];
+        let violations = analyze_crate(&files);
+        let report = LintReport {
+            files_scanned: vec![PathBuf::from("rust/tests/fixture.rs")],
+            violations,
+            wall_ms: 1,
+        };
+        assert_eq!(report.errors(), 0);
+        assert_eq!(report.advisories(), 1);
+        let parsed = Json::parse(&report_json(&report).to_string_compact()).unwrap();
+        validate_report(&parsed).unwrap();
+        assert_eq!(parsed.get("clean").and_then(Json::as_bool), Some(true));
     }
 
     #[test]
@@ -227,20 +469,98 @@ mod tests {
         let missing = Json::parse(r#"{"schema_version": 1}"#).unwrap();
         assert!(validate_report(&missing).is_err());
 
-        let bad_rule = Json::parse(
-            r#"{"schema_version": 1, "files_scanned": 1, "clean": false,
-                "rules": [], "violations": [
-                  {"file": "x.rs", "line": 3, "rule": "made-up", "text": "t"}
-                ]}"#,
+        // Inconsistent summary counts.
+        let report = report_with("fn f() {\n    let g = m.lock().unwrap();\n}\n");
+        let text = report_json(&report).to_string_compact();
+        let lying = text.replace("\"clean\":false", "\"clean\":true");
+        assert!(validate_report(&Json::parse(&lying).unwrap()).is_err());
+        let miscounted = text.replace("\"errors\":1", "\"errors\":0");
+        assert!(validate_report(&Json::parse(&miscounted).unwrap()).is_err());
+    }
+
+    #[test]
+    fn baseline_round_trip_and_diff() {
+        let report = report_with(concat!(
+            "fn f() {\n",
+            "    let g = m.lock().unwrap();\n",
+            "    let h = q.lock().unwrap();\n",
+            "}\n",
+        ));
+        assert_eq!(report.errors(), 2);
+        let doc = baseline_json(&report.violations);
+        let parsed = Json::parse(&doc.to_string_pretty()).unwrap();
+        let baseline = parse_baseline(&parsed).unwrap();
+        assert_eq!(baseline.len(), 2);
+
+        // Everything is grandfathered: nothing new, nothing fixed.
+        let d = diff_against_baseline(&report.violations, &baseline);
+        assert!(d.new.is_empty());
+        assert_eq!(d.fixed, 0);
+
+        // A finding disappears -> fixed count, still nothing new.
+        let fewer = report_with("fn f() {\n    let g = m.lock().unwrap();\n}\n");
+        let d = diff_against_baseline(&fewer.violations, &baseline);
+        assert!(d.new.is_empty());
+        assert_eq!(d.fixed, 1);
+
+        // A third distinct finding appears -> exactly it is new.
+        let more = report_with(concat!(
+            "fn f() {\n",
+            "    let g = m.lock().unwrap();\n",
+            "    let h = q.lock().unwrap();\n",
+            "    let i = z.lock().unwrap();\n",
+            "}\n",
+        ));
+        let d = diff_against_baseline(&more.violations, &baseline);
+        assert_eq!(d.new.len(), 1);
+        assert!(d.new[0].text.contains("z.lock()"), "{}", d.new[0].text);
+    }
+
+    #[test]
+    fn baseline_is_a_multiset_not_a_set() {
+        // Two identical findings on different lines of the same file:
+        // one baseline entry must absorb only one of them.
+        let report = report_with(concat!(
+            "fn f() {\n",
+            "    let g = m.lock().unwrap();\n",
+            "}\n",
+            "fn g() {\n",
+            "    let g = m.lock().unwrap();\n",
+            "}\n",
+        ));
+        assert_eq!(report.errors(), 2);
+        let one = vec![report.violations[0].clone()];
+        let baseline = parse_baseline(&Json::parse(
+            &baseline_json(&one).to_string_compact(),
+        ).unwrap())
+        .unwrap();
+        let d = diff_against_baseline(&report.violations, &baseline);
+        assert_eq!(d.new.len(), 1, "second identical finding is new");
+    }
+
+    #[test]
+    fn baseline_ignores_advisories() {
+        let files = vec![(
+            PathBuf::from("rust/tests/fixture.rs"),
+            "fn f() { let g = m.lock().unwrap(); }\n".to_string(),
+        )];
+        let violations = analyze_crate(&files);
+        assert_eq!(violations.len(), 1);
+        let doc = baseline_json(&violations);
+        assert_eq!(doc.get("findings").unwrap().as_arr().unwrap().len(), 0);
+        let d = diff_against_baseline(&violations, &[]);
+        assert!(d.new.is_empty(), "advisories never gate");
+    }
+
+    #[test]
+    fn parse_baseline_rejects_unknown_rules() {
+        let bad = Json::parse(
+            r#"{"schema_version": 1, "findings": [{"file": "x.rs", "rule": "nope", "text": "t"}]}"#,
         )
         .unwrap();
-        assert!(validate_report(&bad_rule).is_err());
-
-        let clean_report = report_json(&LintReport { files_scanned: vec![], violations: vec![] });
-        let mut inconsistent = clean_report.to_string_compact();
-        inconsistent = inconsistent.replace("\"clean\":true", "\"clean\":false");
-        let parsed = Json::parse(&inconsistent).unwrap();
-        assert!(validate_report(&parsed).is_err());
+        assert!(parse_baseline(&bad).is_err());
+        let wrong_version = Json::parse(r#"{"schema_version": 2, "findings": []}"#).unwrap();
+        assert!(parse_baseline(&wrong_version).is_err());
     }
 
     #[test]

@@ -61,12 +61,38 @@ pub struct LockAcq {
     pub detached: bool,
 }
 
+/// How a call names its receiver. Name resolution cannot type-resolve
+/// method receivers, so only `Free` calls and `SelfMethod` calls may be
+/// matched against crate fn names — `g.queue.len()` must never alias
+/// some other type's `len`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Receiver {
+    /// `name(…)` with no `.` before it (free fns and `Path::name(…)`).
+    Free,
+    /// `self.name(…)`.
+    SelfMethod,
+    /// `expr.name(…)` on a non-`self` receiver — never name-resolved.
+    Other,
+}
+
 /// One call site inside a fn body.
 #[derive(Debug, Clone)]
 pub struct CallSite {
     pub callee: String,
     pub tok: usize,
     pub line: usize,
+    pub receiver: Receiver,
+    /// True when the call sits inside a detached (`execute`/`spawn`)
+    /// closure: it runs on another thread, so it must not contribute to
+    /// the enclosing fn's propagated summaries.
+    pub detached: bool,
+}
+
+impl CallSite {
+    /// May this call be name-resolved against crate fns?
+    pub fn resolvable(&self) -> bool {
+        matches!(self.receiver, Receiver::Free | Receiver::SelfMethod)
+    }
 }
 
 /// A token range `[start, end]` (inclusive) of a worker-context closure
@@ -114,7 +140,7 @@ impl FileModel {
         let fns = find_fns(&lexed, &close_of, &test_mask);
         let (worker_regions, detached_regions) = closure_regions(&lexed, &close_of, &fns);
         let locks = find_locks(&lexed, &close_of, &enclosing_open, &detached_regions);
-        let calls = find_calls(&lexed);
+        let calls = find_calls(&lexed, &detached_regions);
         let mut m = FileModel {
             lexed,
             fns,
@@ -550,7 +576,7 @@ const CALL_KEYWORDS: [&str; 10] =
     ["if", "while", "for", "match", "loop", "return", "fn", "let", "in", "move"];
 
 /// `name(…)` / `.name(…)` call sites (macros `name!(…)` excluded).
-fn find_calls(lx: &Lexed) -> Vec<CallSite> {
+fn find_calls(lx: &Lexed, detached_regions: &[Region]) -> Vec<CallSite> {
     let n = lx.tokens.len();
     let mut out = Vec::new();
     for i in 0..n.saturating_sub(1) {
@@ -562,7 +588,23 @@ fn find_calls(lx: &Lexed) -> Vec<CallSite> {
         if i >= 1 && lx.ident(i - 1) == Some("fn") {
             continue;
         }
-        out.push(CallSite { callee: name.to_string(), tok: i, line: lx.tokens[i].line });
+        let receiver = if i >= 1 && lx.punct(i - 1, '.') {
+            if receiver_path(lx, i - 1) == ["self"] {
+                Receiver::SelfMethod
+            } else {
+                Receiver::Other
+            }
+        } else {
+            Receiver::Free
+        };
+        let detached = detached_regions.iter().any(|&(s, e)| s <= i && i <= e);
+        out.push(CallSite {
+            callee: name.to_string(),
+            tok: i,
+            line: lx.tokens[i].line,
+            receiver,
+            detached,
+        });
     }
     out
 }
@@ -737,5 +779,28 @@ mod tests {
         assert!(names.contains(&"g"));
         assert!(!names.contains(&"println"));
         assert!(!names.contains(&"if"));
+    }
+
+    #[test]
+    fn call_receivers_are_classified() {
+        let m = FileModel::build(
+            "fn f(&self) { free(); Instant::now(); self.own(); other.theirs(); }",
+        );
+        let recv = |name: &str| m.calls.iter().find(|c| c.callee == name).unwrap().receiver;
+        assert_eq!(recv("free"), Receiver::Free);
+        // Path calls resolve by name like free calls (Pending::now …).
+        assert_eq!(recv("now"), Receiver::Free);
+        assert_eq!(recv("own"), Receiver::SelfMethod);
+        assert_eq!(recv("theirs"), Receiver::Other);
+        assert!(m.calls.iter().find(|c| c.callee == "own").unwrap().resolvable());
+        assert!(!m.calls.iter().find(|c| c.callee == "theirs").unwrap().resolvable());
+    }
+
+    #[test]
+    fn calls_in_detached_closures_are_marked() {
+        let src = "fn f() { pool.execute(move || { inner(); }); outer(); }";
+        let m = FileModel::build(src);
+        assert!(m.calls.iter().find(|c| c.callee == "inner").unwrap().detached);
+        assert!(!m.calls.iter().find(|c| c.callee == "outer").unwrap().detached);
     }
 }

@@ -1,37 +1,135 @@
-//! The seven static rules, matched over the structural model.
+//! The twelve static rules, matched over the structural model and the
+//! crate-wide dataflow summaries.
 //!
 //! | Rule | Contract |
 //! |---|---|
 //! | R1 `lock-unwrap` | no poisoning `.lock().unwrap()` / `.expect(…)` (or condvar-wait equivalents) — shed poison via `util::sync` |
 //! | R2 `instant-in-decide` | no `Instant::now()` in decide-critical sections: anywhere in `rank_controller.rs`, or while a shard-lock guard is live (crate-wide) |
 //! | R3 `raw-mpsc` | no `std::sync::mpsc` outside `coordinator/completion.rs` |
-//! | R4 `lock-order` | the lock-acquisition graph (lock taken while another guard is live, propagated one level through the call graph) must be acyclic |
+//! | R4 `lock-order` | the lock-acquisition graph (lock taken while another guard is live, propagated to a fixed point over the crate call graph) must be acyclic |
 //! | R5 `nondet-iter` | no `HashMap`/`HashSet` iteration in bit-identity-critical modules (`coordinator/`, `linalg/`, `conformance/`) |
-//! | R6 `panic-in-worker` | no `unwrap()` / `expect(…)` / `panic!` inside thread-pool closures or worker-loop fns (non-test) |
+//! | R6 `panic-in-worker` | no `unwrap()` / `expect(…)` / `panic!` inside thread-pool closures or worker-loop fns (advisory in test code) |
 //! | R7 `pool-shape-partition` | no pool-size / thread-count reads inside `linalg/` — chunk partitions are pure functions of problem shape |
+//! | R8 `blocking-under-lock` | no blocking operation (condvar/ticket wait, channel recv, sleep, pool dispatch, blocking IO) reachable — directly or through resolved calls — while a shard guard is live |
+//! | R9 `charge-at-bucket` | FLOPs-ledger charge widths must derive from `rank_bucket(..)` (the PR 5 `Fixed(40)` → 48 bug class) |
+//! | R10 `ticket-resolve` | a fn that binds a reply handle must resolve or move it before any `?` / `return` early exit |
+//! | R11 `allow-rationale` | every `lint:allow(<rule>)` marker carries a non-empty rationale in its comment block |
+//! | R12 `span-fidelity` | every diagnostic span is byte-accurate (engine self-check via [`verify_spans`]) |
 //!
-//! Every rule skips test code (`#[cfg(test)]` items, `#[test]` fns) and
-//! honors a `lint:allow(<rule>)` annotation in a comment on the flagged
-//! line or in the contiguous comment block directly above it.
+//! Severity: findings in `rust/src/` are [`Level::Error`]; findings in
+//! test, bench and example files are [`Level::Advisory`], as are R6
+//! findings inside `#[cfg(test)]` code (the only rule that still runs
+//! there — everything else skips Src test code, while in tests/benches/
+//! examples files the test mask is ignored or the whole file would be
+//! silenced). Every rule honors a `lint:allow(<rule>)` annotation in a
+//! comment on the flagged line or in the contiguous comment block
+//! directly above it; R11 polices the markers themselves.
+//!
+//! The interprocedural rules (R4, R8) seed per-fn facts from each
+//! file's structural model and run
+//! [`dataflow::propagate`](super::dataflow::propagate) over the
+//! [`CallGraph`] to a fixed point ([`AnalysisOptions::lock_depth`]
+//! caps the depth; `Some(1)` reproduces the PR 8 one-level analyzer
+//! for regression tests). Diagnostics from propagated facts print the
+//! complete call chain with file:line spans.
 
-use super::model::{receiver_path, FileModel, LockAcq};
+use super::callgraph::{innermost_fn, CallGraph};
+use super::dataflow::{propagate, seed, Fact, FactMap};
+use super::model::{receiver_path, FileModel};
 use std::collections::{BTreeMap, BTreeSet};
 use std::fmt;
 use std::path::{Path, PathBuf};
 
+/// Finding severity. Errors gate CI; advisories are informational.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Advisory,
+    Error,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Advisory => "advisory",
+        }
+    }
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// What kind of source tree a scanned file belongs to, by path
+/// component. Non-`Src` files run every rule at advisory level with
+/// the `#[cfg(test)]` mask ignored (a `tests/*.rs` file is all test
+/// code; masking it would silence the scan entirely).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FileKind {
+    Src,
+    Tests,
+    Benches,
+    Examples,
+}
+
+impl FileKind {
+    pub fn of(path: &Path) -> FileKind {
+        for c in path.components() {
+            let c = c.as_os_str();
+            if c == "tests" {
+                return FileKind::Tests;
+            }
+            if c == "benches" {
+                return FileKind::Benches;
+            }
+            if c == "examples" {
+                return FileKind::Examples;
+            }
+        }
+        FileKind::Src
+    }
+}
+
 /// One rule violation at a source location.
+///
+/// Span invariant (policed by R12): `snippet` equals the source bytes
+/// `byte_start..byte_end`, `line` is 1 + the number of newlines before
+/// `byte_start`, and `col` is the 1-based byte column of `byte_start`
+/// on that line.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LintViolation {
     pub file: PathBuf,
-    /// 1-based line number.
+    /// 1-based line number of the span start.
     pub line: usize,
+    /// 1-based byte column of the span start.
+    pub col: usize,
+    /// Byte offset where the flagged span starts.
+    pub byte_start: usize,
+    /// Byte offset one past the flagged span's end.
+    pub byte_end: usize,
+    /// The exact source text of the span.
+    pub snippet: String,
     pub rule: &'static str,
+    pub level: Level,
     pub text: String,
+    /// Mechanical replacement for the span, when one exists.
+    pub suggestion: Option<String>,
 }
 
 impl fmt::Display for LintViolation {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "{}:{}: [{}] {}", self.file.display(), self.line, self.rule, self.text.trim())
+        write!(
+            f,
+            "{}:{}:{}: {} [{}] {}",
+            self.file.display(),
+            self.line,
+            self.col,
+            self.level,
+            self.rule,
+            self.text.trim()
+        )
     }
 }
 
@@ -42,8 +140,8 @@ pub struct RuleInfo {
     pub contract: &'static str,
 }
 
-/// The rule catalogue, R1–R7 in order.
-pub const RULES: [RuleInfo; 7] = [
+/// The rule catalogue, R1–R12 in order.
+pub const RULES: [RuleInfo; 12] = [
     RuleInfo {
         name: "lock-unwrap",
         contract: "no poisoning .lock()/.read()/.write()/.wait(..) unwrap/expect on sync \
@@ -62,7 +160,8 @@ pub const RULES: [RuleInfo; 7] = [
     RuleInfo {
         name: "lock-order",
         contract: "the crate-wide lock acquisition graph (lock B taken while guard A is \
-                   live, one level of call propagation) must have no cycles",
+                   live, propagated to a fixed point over the call graph) must have no \
+                   cycles",
     },
     RuleInfo {
         name: "nondet-iter",
@@ -72,25 +171,69 @@ pub const RULES: [RuleInfo; 7] = [
     RuleInfo {
         name: "panic-in-worker",
         contract: "no unwrap()/expect(..)/panic! inside thread-pool closures or worker \
-                   loops (non-test code)",
+                   loops (advisory in test code)",
     },
     RuleInfo {
         name: "pool-shape-partition",
         contract: "no pool-size/thread-count reads inside linalg/; chunk partitions are \
                    pure functions of problem shape",
     },
+    RuleInfo {
+        name: "blocking-under-lock",
+        contract: "no blocking operation (condvar/ticket wait, channel recv, sleep, pool \
+                   dispatch, blocking IO) reachable while a shard-lock guard is live, \
+                   through any depth of resolved calls",
+    },
+    RuleInfo {
+        name: "charge-at-bucket",
+        contract: "every FLOPs-ledger charge site derives its width argument from \
+                   rank_bucket(..), never from a raw rank",
+    },
+    RuleInfo {
+        name: "ticket-resolve",
+        contract: "a fn that binds a reply handle resolves or moves it before any ?/return \
+                   early exit, so ticket outcomes stay explicit on every path",
+    },
+    RuleInfo {
+        name: "allow-rationale",
+        contract: "every lint:allow(<rule>) marker carries a non-empty rationale in its \
+                   comment block",
+    },
+    RuleInfo {
+        name: "span-fidelity",
+        contract: "every diagnostic carries a byte-accurate span (snippet, line and col \
+                   agree with the source bytes); self-check emitted by the engine",
+    },
 ];
+
+/// Knobs for [`analyze_crate_with`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AnalysisOptions {
+    /// How many call hops a lock/blocking fact may travel: `None`
+    /// (default) runs the dataflow engine to a fixed point; `Some(1)`
+    /// reproduces the PR 8 one-level analyzer (regression tests use it
+    /// to prove what the old analyzer missed).
+    pub lock_depth: Option<usize>,
+}
 
 /// Analysis context for one file.
 struct Ctx {
     path: PathBuf,
+    kind: FileKind,
     model: FileModel,
+    src: String,
     lines: Vec<String>,
 }
 
 impl Ctx {
     fn new(path: PathBuf, source: &str) -> Ctx {
-        Ctx { model: FileModel::build(source), lines: source.lines().map(String::from).collect(), path }
+        Ctx {
+            kind: FileKind::of(&path),
+            model: FileModel::build(source),
+            src: source.to_string(),
+            lines: source.lines().map(String::from).collect(),
+            path,
+        }
     }
 
     fn file_name(&self) -> &str {
@@ -106,14 +249,46 @@ impl Ctx {
         self.lines.get(line.saturating_sub(1)).cloned().unwrap_or_default()
     }
 
+    /// Byte offset where 1-based `line` begins.
+    fn line_start_byte(&self, line: usize) -> usize {
+        if line <= 1 {
+            return 0;
+        }
+        let mut seen = 1usize;
+        for (off, b) in self.src.bytes().enumerate() {
+            if b == b'\n' {
+                seen += 1;
+                if seen == line {
+                    return off + 1;
+                }
+            }
+        }
+        self.src.len()
+    }
+
+    /// Test-masked for rule gating. Only meaningful in `Src` files — in
+    /// tests/benches/examples everything is test code and the file
+    /// already runs at advisory level, so masking there would silence
+    /// the scan entirely.
+    fn masked(&self, i: usize) -> bool {
+        self.kind == FileKind::Src && self.model.in_test(i)
+    }
+
+    fn base_level(&self) -> Level {
+        if self.kind == FileKind::Src {
+            Level::Error
+        } else {
+            Level::Advisory
+        }
+    }
+
     /// Is `lint:allow(<rule>)` present on `line` or in the contiguous
     /// comment block directly above it? `aliases` supplements the rule
     /// name (e.g. the legacy `lint:allow(mpsc)` spelling).
     fn allowed(&self, line: usize, rule: &str, aliases: &[&str]) -> bool {
         let mut markers: Vec<String> = vec![format!("lint:allow({rule})")];
         markers.extend(aliases.iter().map(|a| format!("lint:allow({a})")));
-        let has_marker =
-            |text: &str| markers.iter().any(|m| text.contains(m.as_str()));
+        let has_marker = |text: &str| markers.iter().any(|m| text.contains(m.as_str()));
         // Same-line trailing comment.
         for c in &self.model.lexed.comments {
             if c.line <= line && line <= c.end_line && has_marker(&c.text) {
@@ -138,20 +313,59 @@ impl Ctx {
         }
     }
 
-    fn push(&self, out: &mut Vec<LintViolation>, line: usize, rule: &'static str, text: String) {
-        out.push(LintViolation { file: self.path.clone(), line, rule, text });
-    }
-
-    fn flag_line(
+    /// Push a violation spanning tokens `i..=j` (no allow check).
+    #[allow(clippy::too_many_arguments)]
+    fn push_span(
         &self,
         out: &mut Vec<LintViolation>,
-        line: usize,
+        i: usize,
+        j: usize,
+        rule: &'static str,
+        level: Level,
+        text: String,
+        suggestion: Option<String>,
+    ) {
+        let lx = &self.model.lexed;
+        let t = &lx.tokens[i];
+        let end = lx.tokens[j.min(lx.tokens.len() - 1)].end.max(t.end);
+        out.push(LintViolation {
+            file: self.path.clone(),
+            line: t.line,
+            col: t.col,
+            byte_start: t.start,
+            byte_end: end,
+            snippet: self.src.get(t.start..end).unwrap_or("").to_string(),
+            rule,
+            level,
+            text,
+            suggestion,
+        });
+    }
+
+    /// Flag tokens `i..=j` unless an allow marker covers the line.
+    /// `text` of `None` uses the trimmed source line.
+    #[allow(clippy::too_many_arguments)]
+    fn flag(
+        &self,
+        out: &mut Vec<LintViolation>,
+        i: usize,
+        j: usize,
         rule: &'static str,
         aliases: &[&str],
+        level: Level,
+        text: Option<String>,
+        suggestion: Option<String>,
     ) {
-        if !self.allowed(line, rule, aliases) {
-            self.push(out, line, rule, self.line_text(line));
+        let line = self.model.lexed.tokens[i].line;
+        if self.allowed(line, rule, aliases) {
+            return;
         }
+        let text = text.unwrap_or_else(|| self.line_text(line).trim().to_string());
+        self.push_span(out, i, j, rule, level, text, suggestion);
+    }
+
+    fn flag_tok(&self, out: &mut Vec<LintViolation>, i: usize, rule: &'static str, aliases: &[&str]) {
+        self.flag(out, i, i, rule, aliases, self.base_level(), None, None);
     }
 }
 
@@ -161,11 +375,19 @@ pub fn analyze_source(path: &Path, source: &str) -> Vec<LintViolation> {
     analyze_crate(&[(path.to_path_buf(), source.to_string())])
 }
 
-/// Analyze a set of files as one crate: every file-local rule per file,
-/// plus the crate-wide lock-order graph (R4).
+/// Analyze a set of files as one crate with default options (dataflow
+/// to a fixed point).
 pub fn analyze_crate(files: &[(PathBuf, String)]) -> Vec<LintViolation> {
-    let ctxs: Vec<Ctx> =
-        files.iter().map(|(p, s)| Ctx::new(p.clone(), s)).collect();
+    analyze_crate_with(files, AnalysisOptions::default())
+}
+
+/// Analyze a set of files as one crate: every file-local rule per file,
+/// plus the interprocedural rules (R4, R8) over the crate call graph,
+/// plus the R12 span self-check over everything emitted.
+pub fn analyze_crate_with(files: &[(PathBuf, String)], opts: AnalysisOptions) -> Vec<LintViolation> {
+    let ctxs: Vec<Ctx> = files.iter().map(|(p, s)| Ctx::new(p.clone(), s)).collect();
+    let models: Vec<&FileModel> = ctxs.iter().map(|c| &c.model).collect();
+    let graph = CallGraph::build(&models);
     let mut out = Vec::new();
     for ctx in &ctxs {
         r1_lock_unwrap(ctx, &mut out);
@@ -174,9 +396,15 @@ pub fn analyze_crate(files: &[(PathBuf, String)]) -> Vec<LintViolation> {
         r5_nondet_iter(ctx, &mut out);
         r6_panic_in_worker(ctx, &mut out);
         r7_pool_shape_partition(ctx, &mut out);
+        r9_charge_at_bucket(ctx, &mut out);
+        r10_ticket_resolve(ctx, &mut out);
+        r11_allow_rationale(ctx, &mut out);
     }
-    r4_lock_order(&ctxs, &mut out);
-    out.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    r4_lock_order(&ctxs, &graph, opts, &mut out);
+    r8_blocking_under_lock(&ctxs, &graph, opts, &mut out);
+    let fidelity = verify_spans(files, &out);
+    out.extend(fidelity);
+    out.sort_by(|a, b| (&a.file, a.line, a.col, a.rule).cmp(&(&b.file, b.line, b.col, b.rule)));
     out
 }
 
@@ -201,34 +429,68 @@ fn matching_paren(m: &FileModel, i: usize) -> Option<usize> {
 }
 
 /// R1 — poisoning unwrap/expect on lock, rwlock and condvar-wait
-/// results, crate-wide outside test code.
+/// results, crate-wide outside test code. Carries a mechanical fix
+/// where `util::sync` has the drop-in unpoisoned variant.
 fn r1_lock_unwrap(ctx: &Ctx, out: &mut Vec<LintViolation>) {
     let m = &ctx.model;
     let lx = &m.lexed;
     for i in 1..lx.tokens.len() {
-        if m.in_test(i) || !lx.punct(i - 1, '.') {
+        if ctx.masked(i) || !lx.punct(i - 1, '.') {
             continue;
         }
         let Some(name) = lx.ident(i) else { continue };
-        let poisoning_tail = |after: usize| -> bool {
-            lx.punct(after, '.')
-                && ((lx.ident(after + 1) == Some("unwrap")
-                    && lx.punct(after + 2, '(')
-                    && lx.punct(after + 3, ')'))
-                    || (lx.ident(after + 1) == Some("expect") && lx.punct(after + 2, '(')))
+        // Last token of a `.unwrap()` / `.expect(…)` tail after `after`.
+        let poisoning_tail = |after: usize| -> Option<usize> {
+            if !lx.punct(after, '.') {
+                return None;
+            }
+            if lx.ident(after + 1) == Some("unwrap")
+                && lx.punct(after + 2, '(')
+                && lx.punct(after + 3, ')')
+            {
+                return Some(after + 3);
+            }
+            if lx.ident(after + 1) == Some("expect") && lx.punct(after + 2, '(') {
+                return matching_paren(m, after + 2);
+            }
+            None
         };
-        let hit = match name {
+        let hit: Option<(usize, Option<String>)> = match name {
             // `.lock().unwrap()` and friends: empty argument lists.
             "lock" | "read" | "write" | "try_lock" => {
-                lx.punct(i + 1, '(') && lx.punct(i + 2, ')') && poisoning_tail(i + 3)
+                if lx.punct(i + 1, '(') && lx.punct(i + 2, ')') {
+                    poisoning_tail(i + 3).map(|end| {
+                        let fix = (name == "lock" && lx.ident(i + 4) == Some("unwrap"))
+                            .then(|| "lock_unpoisoned()".to_string());
+                        (end, fix)
+                    })
+                } else {
+                    None
+                }
             }
             // `.wait(guard).unwrap()` / `.wait_timeout(guard, d).expect(…)`.
-            "wait" | "wait_timeout" => lx.punct(i + 1, '(')
-                && matching_paren(m, i + 1).is_some_and(|close| poisoning_tail(close + 1)),
-            _ => false,
+            "wait" | "wait_timeout" => {
+                if lx.punct(i + 1, '(') {
+                    matching_paren(m, i + 1).and_then(|close| {
+                        poisoning_tail(close + 1).map(|end| {
+                            let fix = (lx.ident(close + 2) == Some("unwrap")).then(|| {
+                                let args = ctx
+                                    .src
+                                    .get(lx.tokens[i + 1].start..lx.tokens[close].end)
+                                    .unwrap_or("(..)");
+                                format!("{name}_unpoisoned{args}")
+                            });
+                            (end, fix)
+                        })
+                    })
+                } else {
+                    None
+                }
+            }
+            _ => None,
         };
-        if hit {
-            ctx.flag_line(out, lx.tokens[i].line, "lock-unwrap", &[]);
+        if let Some((end, suggestion)) = hit {
+            ctx.flag(out, i, end, "lock-unwrap", &[], ctx.base_level(), None, suggestion);
         }
     }
 }
@@ -249,7 +511,7 @@ fn r2_instant_in_decide(ctx: &Ctx, out: &mut Vec<LintViolation>) {
     let m = &ctx.model;
     let whole_file = ctx.file_name() == "rank_controller.rs";
     for i in 0..m.lexed.tokens.len() {
-        if m.in_test(i) || !is_instant_now(m, i) {
+        if ctx.masked(i) || !is_instant_now(m, i) {
             continue;
         }
         let in_shard_guard = m
@@ -257,7 +519,7 @@ fn r2_instant_in_decide(ctx: &Ctx, out: &mut Vec<LintViolation>) {
             .iter()
             .any(|g| g.name.contains("shard") || g.path.contains("shard"));
         if whole_file || in_shard_guard {
-            ctx.flag_line(out, m.lexed.tokens[i].line, "instant-in-decide", &[]);
+            ctx.flag(out, i, i + 3, "instant-in-decide", &[], ctx.base_level(), None, None);
         }
     }
 }
@@ -270,7 +532,7 @@ fn r3_raw_mpsc(ctx: &Ctx, out: &mut Vec<LintViolation>) {
     let m = &ctx.model;
     let mut last_line = 0usize;
     for i in 0..m.lexed.tokens.len() {
-        if m.in_test(i) || m.lexed.ident(i) != Some("mpsc") {
+        if ctx.masked(i) || m.lexed.ident(i) != Some("mpsc") {
             continue;
         }
         let line = m.lexed.tokens[i].line;
@@ -278,7 +540,7 @@ fn r3_raw_mpsc(ctx: &Ctx, out: &mut Vec<LintViolation>) {
             continue; // one violation per line, as the old scanner did
         }
         last_line = line;
-        ctx.flag_line(out, line, "raw-mpsc", &["mpsc"]);
+        ctx.flag_tok(out, i, "raw-mpsc", &["mpsc"]);
     }
 }
 
@@ -287,10 +549,24 @@ fn r3_raw_mpsc(ctx: &Ctx, out: &mut Vec<LintViolation>) {
 struct LockEdge {
     from: String,
     to: String,
-    file: PathBuf,
+    /// Ctx index and token index of the site that created the edge.
+    ci: usize,
+    tok: usize,
     line: usize,
-    /// Set when the edge came from one level of call propagation.
+    /// Call chain rendering, when the edge came from propagation.
     via: Option<String>,
+}
+
+/// Render the call chain from a consumed call site to a propagated
+/// fact's origin: `callee() -> hop() at file:line -> … -> <what> at
+/// file:line`.
+fn render_chain(callee: &str, fact: &Fact, what: &str, ctxs: &[Ctx]) -> String {
+    let mut s = format!("{callee}()");
+    for h in &fact.chain {
+        s.push_str(&format!(" -> {}() at {}:{}", h.callee, ctxs[h.file].file_name(), h.line));
+    }
+    s.push_str(&format!(" -> {what} at {}:{}", ctxs[fact.file].file_name(), fact.line));
+    s
 }
 
 /// R4 — cycles in the lock-acquisition order graph.
@@ -298,33 +574,38 @@ struct LockEdge {
 /// Nodes are lock identities (the receiver chain's final field name).
 /// A direct edge `A → B` is recorded when `B` is acquired while a guard
 /// of `A` is live in the same fn; a propagated edge when a fn is called
-/// with `A` held and the callee (matched by name anywhere in the crate)
-/// directly acquires `B`. Any cycle — including a self-loop, i.e.
-/// re-acquiring a lock of the same identity while it is held — is a
-/// potential deadlock under some thread interleaving.
-fn r4_lock_order(ctxs: &[Ctx], out: &mut Vec<LintViolation>) {
-    // fn name → (ctx idx, fn idx) for call propagation.
-    let mut fns_by_name: BTreeMap<&str, Vec<(usize, usize)>> = BTreeMap::new();
+/// with `A` held and the callee's *transitive* summary (fixed-point
+/// dataflow over the crate call graph, capped by
+/// [`AnalysisOptions::lock_depth`]) acquires `B`. Any cycle — including
+/// a self-loop, i.e. re-acquiring a lock of the same identity while it
+/// is held — is a potential deadlock under some thread interleaving.
+fn r4_lock_order(ctxs: &[Ctx], graph: &CallGraph, opts: AnalysisOptions, out: &mut Vec<LintViolation>) {
+    // Seed each fn with its direct, non-detached, non-test, non-allowed
+    // acquisitions, then let the dataflow engine fold them upward.
+    let mut seeds: FactMap = FactMap::new();
     for (ci, ctx) in ctxs.iter().enumerate() {
-        for (fi, f) in ctx.model.fns.iter().enumerate() {
-            if !f.is_test {
-                fns_by_name.entry(f.name.as_str()).or_default().push((ci, fi));
+        if ctx.kind != FileKind::Src {
+            continue;
+        }
+        let m = &ctx.model;
+        for l in &m.locks {
+            if l.detached || m.in_test(l.tok) || ctx.allowed(l.line, "lock-order", &[]) {
+                continue;
             }
+            let Some(fi) = innermost_fn(m, l.tok) else { continue };
+            if m.fns[fi].is_test {
+                continue;
+            }
+            seed(&mut seeds, (ci, fi), &l.name, ci, l.line);
         }
     }
-    // Direct, non-detached acquisitions of one fn (the callee summary).
-    fn direct_acqs<'a>(ctx: &'a Ctx, fi: usize) -> Vec<&'a LockAcq> {
-        let f = &ctx.model.fns[fi];
-        ctx.model
-            .locks
-            .iter()
-            .filter(|l| f.open < l.tok && l.tok < f.close && !l.detached)
-            .filter(|l| !ctx.model.in_test(l.tok))
-            .collect()
-    }
+    let summaries = propagate(graph, &seeds, opts.lock_depth);
 
     let mut edges: Vec<LockEdge> = Vec::new();
-    for ctx in ctxs {
+    for (ci, ctx) in ctxs.iter().enumerate() {
+        if ctx.kind != FileKind::Src {
+            continue;
+        }
         let m = &ctx.model;
         // Direct edges: acquisition under a live guard.
         for a in &m.locks {
@@ -335,44 +616,41 @@ fn r4_lock_order(ctxs: &[Ctx], out: &mut Vec<LintViolation>) {
                 edges.push(LockEdge {
                     from: g.name.clone(),
                     to: a.name.clone(),
-                    file: ctx.path.clone(),
+                    ci,
+                    tok: a.tok,
                     line: a.line,
                     via: None,
                 });
             }
         }
-        // Propagated edges: call made under a live guard, callee locks.
+        // Propagated edges: resolved call made under a live guard whose
+        // transitive summary acquires. Resolution is conservative — see
+        // `CallSite::resolvable` (free/path calls and `self.` methods).
         for c in &m.calls {
-            if m.in_test(c.tok) || ctx.allowed(c.line, "lock-order", &[]) {
+            if !c.resolvable() || m.in_test(c.tok) || ctx.allowed(c.line, "lock-order", &[]) {
                 continue;
-            }
-            // Name matching cannot type-resolve method receivers, so only
-            // free-function calls and `self.` method calls propagate —
-            // `g.queue.len()` must not alias some other type's `len`.
-            if c.tok > 0 && m.lexed.punct(c.tok - 1, '.') {
-                let recv = receiver_path(&m.lexed, c.tok - 1);
-                if recv != ["self"] {
-                    continue;
-                }
             }
             let held = m.live_guards_at(c.tok);
             if held.is_empty() {
                 continue;
             }
-            let Some(targets) = fns_by_name.get(c.callee.as_str()) else { continue };
-            for &(ci, fi) in targets {
-                for a in direct_acqs(&ctxs[ci], fi) {
-                    if ctxs[ci].allowed(a.line, "lock-order", &[]) {
+            let Some(targets) = graph.fns_by_name.get(&c.callee) else { continue };
+            let mut seen_keys: BTreeSet<&str> = BTreeSet::new();
+            for t in targets {
+                let Some(facts) = summaries.get(t) else { continue };
+                for f in facts.values() {
+                    if !seen_keys.insert(f.key.as_str()) {
                         continue;
                     }
+                    let via = render_chain(&c.callee, f, &format!("{} acquired", f.key), ctxs);
                     for g in &held {
                         edges.push(LockEdge {
                             from: g.name.clone(),
-                            to: a.name.clone(),
-                            file: ctx.path.clone(),
+                            to: f.key.clone(),
+                            ci,
+                            tok: c.tok,
                             line: c.line,
-                            via: Some(format!("{}() at {}:{}", c.callee,
-                                ctxs[ci].file_name(), a.line)),
+                            via: Some(via.clone()),
                         });
                     }
                 }
@@ -417,23 +695,22 @@ fn r4_lock_order(ctxs: &[Ctx], out: &mut Vec<LintViolation>) {
             }
             if let Some(e) = rep.get(&(a, b)) {
                 let via = e.via.as_deref().map(|v| format!(" via {v}")).unwrap_or_default();
-                desc.push_str(&format!(
-                    "{a} ({}:{}{via})",
-                    e.file.file_name().and_then(|n| n.to_str()).unwrap_or("?"),
-                    e.line
-                ));
+                desc.push_str(&format!("{a} ({}:{}{via})", ctxs[e.ci].file_name(), e.line));
             } else {
                 desc.push_str(a);
             }
         }
         desc.push_str(" — potential deadlock");
         let first = rep[&(from, to)];
-        out.push(LintViolation {
-            file: first.file.clone(),
-            line: first.line,
-            rule: "lock-order",
-            text: desc,
-        });
+        ctxs[first.ci].push_span(
+            out,
+            first.tok,
+            first.tok,
+            "lock-order",
+            Level::Error,
+            desc,
+            None,
+        );
     }
 }
 
@@ -510,7 +787,7 @@ fn r5_nondet_iter(ctx: &Ctx, out: &mut Vec<LintViolation>) {
     }
 
     for i in 0..n {
-        if m.in_test(i) {
+        if ctx.masked(i) {
             continue;
         }
         // `name.iter()` / `.keys()` / `.drain()` … on a tracked name.
@@ -518,7 +795,7 @@ fn r5_nondet_iter(ctx: &Ctx, out: &mut Vec<LintViolation>) {
             if unordered.contains(name) && lx.punct(i + 1, '.') {
                 if let Some(meth) = lx.ident(i + 2) {
                     if ITER_METHODS.contains(&meth) && lx.punct(i + 3, '(') {
-                        ctx.flag_line(out, lx.tokens[i].line, "nondet-iter", &[]);
+                        ctx.flag_tok(out, i, "nondet-iter", &[]);
                         continue;
                     }
                 }
@@ -545,7 +822,7 @@ fn r5_nondet_iter(ctx: &Ctx, out: &mut Vec<LintViolation>) {
             }
             if let Some(name) = lx.ident(k) {
                 if unordered.contains(name) && (lx.punct(k + 1, '{') || lx.punct(k + 1, ')')) {
-                    ctx.flag_line(out, lx.tokens[k].line, "nondet-iter", &[]);
+                    ctx.flag_tok(out, k, "nondet-iter", &[]);
                 }
             }
         }
@@ -553,26 +830,30 @@ fn r5_nondet_iter(ctx: &Ctx, out: &mut Vec<LintViolation>) {
 }
 
 /// R6 — panics inside worker contexts (thread-pool closures, worker-loop
-/// fns), non-test code.
+/// fns). The only rule that still fires in test code — at advisory
+/// level (a panicking test worker hangs the suite less politely than a
+/// failing assert, but that's the test's business).
 fn r6_panic_in_worker(ctx: &Ctx, out: &mut Vec<LintViolation>) {
     let m = &ctx.model;
     let lx = &m.lexed;
     for &(start, end) in &m.worker_regions {
         for i in start..=end.min(lx.tokens.len().saturating_sub(1)) {
-            if m.in_test(i) {
-                continue;
-            }
             let Some(name) = lx.ident(i) else { continue };
-            let hit = match name {
-                "unwrap" => {
-                    i >= 1 && lx.punct(i - 1, '.') && lx.punct(i + 1, '(') && lx.punct(i + 2, ')')
-                }
-                "expect" => i >= 1 && lx.punct(i - 1, '.') && lx.punct(i + 1, '('),
-                "panic" | "todo" | "unimplemented" => lx.punct(i + 1, '!'),
-                _ => false,
+            let hit_end = match name {
+                "unwrap" => (i >= 1
+                    && lx.punct(i - 1, '.')
+                    && lx.punct(i + 1, '(')
+                    && lx.punct(i + 2, ')'))
+                .then_some(i + 2),
+                "expect" => (i >= 1 && lx.punct(i - 1, '.') && lx.punct(i + 1, '('))
+                    .then(|| matching_paren(m, i + 1).unwrap_or(i + 1)),
+                "panic" | "todo" | "unimplemented" => lx.punct(i + 1, '!').then_some(i + 1),
+                _ => None,
             };
-            if hit {
-                ctx.flag_line(out, lx.tokens[i].line, "panic-in-worker", &[]);
+            if let Some(j) = hit_end {
+                let level =
+                    if ctx.masked(i) { Level::Advisory } else { ctx.base_level() };
+                ctx.flag(out, i, j, "panic-in-worker", &[], level, None, None);
             }
         }
     }
@@ -592,7 +873,7 @@ fn r7_pool_shape_partition(ctx: &Ctx, out: &mut Vec<LintViolation>) {
     let m = &ctx.model;
     let lx = &m.lexed;
     for i in 0..lx.tokens.len() {
-        if m.in_test(i) {
+        if ctx.masked(i) {
             continue;
         }
         let Some(name) = lx.ident(i) else { continue };
@@ -604,9 +885,527 @@ fn r7_pool_shape_partition(ctx: &Ctx, out: &mut Vec<LintViolation>) {
                 && lx.punct(i + 2, ')')
                 && receiver_path(lx, i - 1).iter().any(|p| p.to_lowercase().contains("pool")));
         if hit {
-            ctx.flag_line(out, lx.tokens[i].line, "pool-shape-partition", &[]);
+            ctx.flag_tok(out, i, "pool-shape-partition", &[]);
         }
     }
+}
+
+/// Identifiers that block the calling thread when invoked as a call:
+/// condvar/ticket waits, channel receives, sleeps, pool dispatch
+/// (scoped waves block until the pool drains; `execute`/`spawn` queue
+/// behind a contended pool), and blocking IO. `join` and `flush` are
+/// deliberately absent — `Path::join`/`slice::join` and formatter
+/// `flush` collide with the names at token level.
+const BLOCKING_IDENTS: [&str; 17] = [
+    "wait",
+    "wait_timeout",
+    "wait_unpoisoned",
+    "wait_timeout_unpoisoned",
+    "recv",
+    "recv_timeout",
+    "recv_deadline",
+    "sleep",
+    "park",
+    "execute",
+    "spawn",
+    "scoped_for",
+    "scoped_map",
+    "chunked_for",
+    "read_to_string",
+    "read_line",
+    "write_all",
+];
+
+/// Is token `i` a call of a blocking identifier (`name(…)`, not a
+/// definition `fn name(…)`)?
+fn is_blocking_call(m: &FileModel, i: usize) -> bool {
+    let lx = &m.lexed;
+    let Some(name) = lx.ident(i) else { return false };
+    BLOCKING_IDENTS.contains(&name)
+        && lx.punct(i + 1, '(')
+        && !(i >= 1 && lx.ident(i - 1) == Some("fn"))
+}
+
+/// R8 — blocking operations reachable while a shard-lock guard is live:
+/// directly in the guard region, or transitively through resolved calls
+/// (fixed-point dataflow, same engine and depth cap as R4). A decide
+/// shard is the pipeline's serialization point — anything that parks
+/// the thread there stalls every request on the shard.
+fn r8_blocking_under_lock(
+    ctxs: &[Ctx],
+    graph: &CallGraph,
+    opts: AnalysisOptions,
+    out: &mut Vec<LintViolation>,
+) {
+    let shard_guard_live = |m: &FileModel, i: usize| {
+        m.live_guards_at(i)
+            .iter()
+            .any(|g| g.name.contains("shard") || g.path.contains("shard"))
+    };
+    // Direct sites + per-fn seeds.
+    let mut seeds: FactMap = FactMap::new();
+    for (ci, ctx) in ctxs.iter().enumerate() {
+        if ctx.kind != FileKind::Src {
+            continue;
+        }
+        let m = &ctx.model;
+        let lx = &m.lexed;
+        for i in 0..lx.tokens.len() {
+            if m.in_test(i) || !is_blocking_call(m, i) {
+                continue;
+            }
+            let name = lx.ident(i).unwrap_or_default();
+            if shard_guard_live(m, i) && !ctx.allowed(lx.tokens[i].line, "blocking-under-lock", &[])
+            {
+                let text = format!(
+                    "blocking `{name}(..)` while a shard guard is live: {}",
+                    ctx.line_text(lx.tokens[i].line).trim()
+                );
+                ctx.push_span(
+                    out,
+                    i,
+                    i,
+                    "blocking-under-lock",
+                    ctx.base_level(),
+                    text,
+                    None,
+                );
+            }
+            // Seed the owning fn unless the op runs on a detached thread
+            // (an execute/spawn closure body blocks its worker, not the
+            // fn's caller — but the dispatch call itself, which sits
+            // outside the closure body, still seeds).
+            if m.detached_regions.iter().any(|&(s, e)| s <= i && i <= e) {
+                continue;
+            }
+            if let Some(fi) = innermost_fn(m, i) {
+                if !m.fns[fi].is_test {
+                    seed(&mut seeds, (ci, fi), name, ci, lx.tokens[i].line);
+                }
+            }
+        }
+    }
+    let summaries = propagate(graph, &seeds, opts.lock_depth);
+    // Transitive sites: a resolved call under a live shard guard whose
+    // callee summary contains a blocking fact.
+    for ctx in ctxs {
+        if ctx.kind != FileKind::Src {
+            continue;
+        }
+        let m = &ctx.model;
+        let mut flagged: BTreeSet<(usize, String)> = BTreeSet::new();
+        for c in &m.calls {
+            if !c.resolvable() || m.in_test(c.tok) || !shard_guard_live(m, c.tok) {
+                continue;
+            }
+            if ctx.allowed(c.line, "blocking-under-lock", &[]) {
+                continue;
+            }
+            let Some(targets) = graph.fns_by_name.get(&c.callee) else { continue };
+            for t in targets {
+                let Some(facts) = summaries.get(t) else { continue };
+                for f in facts.values() {
+                    if !flagged.insert((c.line, f.key.clone())) {
+                        continue;
+                    }
+                    let text = format!(
+                        "blocking `{}(..)` reachable while a shard guard is live: {}",
+                        f.key,
+                        render_chain(&c.callee, f, &format!("{} blocks", f.key), ctxs)
+                    );
+                    ctx.push_span(
+                        out,
+                        c.tok,
+                        c.tok,
+                        "blocking-under-lock",
+                        ctx.base_level(),
+                        text,
+                        None,
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// FLOPs-ledger charge fns and the (0-based) argument positions that
+/// carry a rank width. The width at a charge site must be a bucket
+/// (`rank_bucket(..)` output), never a raw decided rank — the PR 5
+/// `Fixed(40)` policy bug charged 40 while the kernel ran the 48-wide
+/// bucket, and the ledger conservation check only caught it at runtime.
+const CHARGE_FNS: [(&str, &[usize]); 3] = [
+    ("lowrank_attention_flops", &[2]),
+    ("partial_svd_flops", &[2]),
+    ("incremental_svd_flops", &[2, 3]),
+];
+
+/// Split the argument list of a call (open paren at `open`, matching
+/// close at `close`) into half-open token ranges, one per argument.
+fn split_args(m: &FileModel, open: usize, close: usize) -> Vec<(usize, usize)> {
+    let lx = &m.lexed;
+    let mut args = Vec::new();
+    let mut depth = 0i64;
+    let mut start = open + 1;
+    for j in open + 1..close {
+        if lx.punct(j, '(') || lx.punct(j, '[') || lx.punct(j, '{') {
+            depth += 1;
+        } else if lx.punct(j, ')') || lx.punct(j, ']') || lx.punct(j, '}') {
+            depth -= 1;
+        } else if depth == 0 && lx.punct(j, ',') {
+            args.push((start, j));
+            start = j + 1;
+        }
+    }
+    if start < close {
+        args.push((start, close));
+    }
+    args
+}
+
+/// Does the argument token range `lo..hi` derive from a rank bucket —
+/// mention `rank_bucket(..)` (or any `*bucket*` ident) inline, or name
+/// a local whose `let` initializer does?
+fn bucket_derived(ctx: &Ctx, lo: usize, hi: usize) -> bool {
+    let lx = &ctx.model.lexed;
+    for j in lo..hi {
+        if lx.ident(j).is_some_and(|id| id.contains("bucket")) {
+            return true;
+        }
+    }
+    if hi == lo + 1 {
+        if let Some(v) = lx.ident(lo) {
+            return let_init_mentions_bucket(ctx, v);
+        }
+    }
+    false
+}
+
+/// Is there a `let [mut] <v> = …;` in the file whose initializer
+/// mentions a `*bucket*` ident?
+fn let_init_mentions_bucket(ctx: &Ctx, v: &str) -> bool {
+    let lx = &ctx.model.lexed;
+    let n = lx.tokens.len();
+    for i in 0..n {
+        if lx.ident(i) != Some("let") {
+            continue;
+        }
+        let mut j = i + 1;
+        if lx.ident(j) == Some("mut") {
+            j += 1;
+        }
+        if lx.ident(j) != Some(v) || !lx.punct(j + 1, '=') {
+            continue;
+        }
+        let mut k = j + 2;
+        while k < n && !lx.punct(k, ';') {
+            if lx.ident(k).is_some_and(|id| id.contains("bucket")) {
+                return true;
+            }
+            k += 1;
+        }
+    }
+    false
+}
+
+/// R9 — FLOPs charge widths must derive from `rank_bucket(..)`.
+/// Scoped to the serving stack (`coordinator/`, `runtime/`,
+/// `conformance/`): the definitions in `flops.rs` and the RL reward
+/// estimators legitimately take raw ranks.
+fn r9_charge_at_bucket(ctx: &Ctx, out: &mut Vec<LintViolation>) {
+    if ctx.kind != FileKind::Src
+        || !(ctx.in_module("coordinator")
+            || ctx.in_module("runtime")
+            || ctx.in_module("conformance"))
+    {
+        return;
+    }
+    let m = &ctx.model;
+    let lx = &m.lexed;
+    for i in 0..lx.tokens.len() {
+        if ctx.masked(i) {
+            continue;
+        }
+        let Some(name) = lx.ident(i) else { continue };
+        let Some(&(_, watched)) = CHARGE_FNS.iter().find(|(f, _)| *f == name) else {
+            continue;
+        };
+        if !lx.punct(i + 1, '(') || (i >= 1 && lx.ident(i - 1) == Some("fn")) {
+            continue;
+        }
+        let Some(close) = matching_paren(m, i + 1) else { continue };
+        let args = split_args(m, i + 1, close);
+        for &ai in watched {
+            let Some(&(lo, hi)) = args.get(ai) else { continue };
+            if !bucket_derived(ctx, lo, hi) {
+                let text = format!(
+                    "width argument {} of {name}(..) does not derive from rank_bucket(..)",
+                    ai + 1
+                );
+                ctx.flag(out, i, close, "charge-at-bucket", &[], ctx.base_level(), Some(text), None);
+                break;
+            }
+        }
+    }
+}
+
+/// Methods that explicitly resolve a reply handle.
+const RESOLVE_METHODS: [&str; 3] = ["post", "fulfill", "abandon"];
+
+/// R10 — a fn that binds a reply handle (`GenReply` / `AttnReply` in a
+/// `let` initializer) must resolve it — `.post(..)`/`.fulfill(..)`/
+/// `.abandon(..)`, `drop(..)`, or a move (argument position, struct
+/// field, return) — before any `?` or `return` early exit. The handles'
+/// `Drop` backstop keeps tickets from hanging even on the flagged
+/// paths, but an implicit abandon on an error path is exactly the kind
+/// of outcome this rule wants stated in the source. Path-insensitive:
+/// the first resolution or early exit in token order wins.
+fn r10_ticket_resolve(ctx: &Ctx, out: &mut Vec<LintViolation>) {
+    if ctx.kind != FileKind::Src {
+        return;
+    }
+    let m = &ctx.model;
+    let lx = &m.lexed;
+    for f in &m.fns {
+        if f.is_test {
+            continue;
+        }
+        let mut i = f.open;
+        while i < f.close {
+            if lx.ident(i) != Some("let") || m.in_test(i) {
+                i += 1;
+                continue;
+            }
+            let mut j = i + 1;
+            if lx.ident(j) == Some("mut") {
+                j += 1;
+            }
+            let (Some(v), true) = (lx.ident(j), lx.punct(j + 1, '=')) else {
+                i += 1;
+                continue;
+            };
+            // Find the statement end and look for a handle type in the
+            // initializer.
+            let mut k = j + 2;
+            let mut depth = 0i64;
+            let mut has_handle = false;
+            while k < f.close {
+                if lx.punct(k, '(') || lx.punct(k, '{') || lx.punct(k, '[') {
+                    depth += 1;
+                } else if lx.punct(k, ')') || lx.punct(k, '}') || lx.punct(k, ']') {
+                    depth -= 1;
+                } else if depth <= 0 && lx.punct(k, ';') {
+                    break;
+                }
+                if matches!(lx.ident(k), Some("GenReply") | Some("AttnReply")) {
+                    has_handle = true;
+                }
+                k += 1;
+            }
+            if has_handle && !ctx.allowed(lx.tokens[i].line, "ticket-resolve", &[]) {
+                scan_handle_paths(ctx, v, k + 1, f.close, out);
+            }
+            i = k + 1;
+        }
+    }
+}
+
+/// Scan tokens `from..to` for the first resolution of handle `v` or the
+/// first `?`/`return` early exit, flagging the exit if it comes first.
+fn scan_handle_paths(
+    ctx: &Ctx,
+    v: &str,
+    from: usize,
+    to: usize,
+    out: &mut Vec<LintViolation>,
+) {
+    let lx = &ctx.model.lexed;
+    let mut r = from;
+    while r < to {
+        if lx.ident(r) == Some(v) && !(r >= 1 && lx.punct(r - 1, '.')) {
+            // `v.post(..)` / `v.fulfill(..)` / `v.abandon(..)`.
+            if lx.punct(r + 1, '.')
+                && lx.ident(r + 2).is_some_and(|mth| RESOLVE_METHODS.contains(&mth))
+                && lx.punct(r + 3, '(')
+            {
+                return;
+            }
+            // `drop(v)`.
+            if r >= 2
+                && lx.ident(r - 2) == Some("drop")
+                && lx.punct(r - 1, '(')
+                && lx.punct(r + 1, ')')
+            {
+                return;
+            }
+            // Moved out: argument position, struct field, reassignment,
+            // or returned.
+            let prev_ok = r >= 1
+                && (lx.punct(r - 1, '(')
+                    || lx.punct(r - 1, ',')
+                    || lx.punct(r - 1, ':')
+                    || lx.punct(r - 1, '='));
+            let next_ok = lx.punct(r + 1, ')')
+                || lx.punct(r + 1, ',')
+                || lx.punct(r + 1, ';')
+                || lx.punct(r + 1, '}');
+            if prev_ok && next_ok {
+                return;
+            }
+        }
+        if lx.punct(r, '?') || lx.ident(r) == Some("return") {
+            let text = format!(
+                "early exit while reply handle `{v}` is unresolved — resolve, move, or \
+                 drop(..) it first so the ticket outcome is explicit on this path"
+            );
+            ctx.flag(out, r, r, "ticket-resolve", &[], ctx.base_level(), Some(text), None);
+            return;
+        }
+        r += 1;
+    }
+}
+
+/// Strip every `lint:allow(<rule>)` marker from a comment group's text,
+/// leaving whatever rationale surrounds them.
+fn strip_allow_markers(text: &str) -> String {
+    let mut s = text.to_string();
+    while let Some(p) = s.find("lint:allow(") {
+        let close = s[p..].find(')').map(|q| p + q + 1).unwrap_or(s.len());
+        s.replace_range(p..close, "");
+    }
+    s
+}
+
+/// R11 — every `lint:allow(<rule>)` marker must carry a rationale:
+/// after stripping the markers themselves, the contiguous comment block
+/// they live in must still say something (≥ 10 alphanumeric chars).
+fn r11_allow_rationale(ctx: &Ctx, out: &mut Vec<LintViolation>) {
+    let comments = &ctx.model.lexed.comments;
+    if comments.is_empty() {
+        return;
+    }
+    // Line ranges of test-masked tokens: a marker inside Src test code
+    // is gated with the rest of the test code.
+    let mut masked_ranges: Vec<(usize, usize)> = Vec::new();
+    if ctx.kind == FileKind::Src {
+        let lx = &ctx.model.lexed;
+        let mut run: Option<(usize, usize)> = None;
+        for i in 0..lx.tokens.len() {
+            if ctx.model.in_test(i) {
+                let l = lx.tokens[i].line;
+                run = Some(match run {
+                    Some((a, _)) => (a, l),
+                    None => (l, l),
+                });
+            } else if let Some(rg) = run.take() {
+                masked_ranges.push(rg);
+            }
+        }
+        if let Some(rg) = run {
+            masked_ranges.push(rg);
+        }
+    }
+    let mut gi = 0;
+    while gi < comments.len() {
+        // Contiguous comment group: each next comment starts no later
+        // than the line after the previous one ends.
+        let mut ge = gi;
+        while ge + 1 < comments.len() && comments[ge + 1].line <= comments[ge].end_line + 1 {
+            ge += 1;
+        }
+        let group_text: String = comments[gi..=ge]
+            .iter()
+            .map(|c| c.text.as_str())
+            .collect::<Vec<_>>()
+            .join("\n");
+        if let Some(marker) =
+            comments[gi..=ge].iter().find(|c| c.text.contains("lint:allow("))
+        {
+            let masked =
+                masked_ranges.iter().any(|&(a, b)| a <= marker.line && marker.line <= b);
+            let stripped = strip_allow_markers(&group_text);
+            let said = stripped.chars().filter(|c| c.is_alphanumeric()).count();
+            if !masked && said < 10 {
+                let lt = ctx.line_text(marker.line);
+                let sidx = lt.find("lint:allow(").unwrap_or(0);
+                let eidx = lt[sidx..].find(')').map(|p| sidx + p + 1).unwrap_or(lt.len());
+                let base = ctx.line_start_byte(marker.line);
+                out.push(LintViolation {
+                    file: ctx.path.clone(),
+                    line: marker.line,
+                    col: sidx + 1,
+                    byte_start: base + sidx,
+                    byte_end: base + eidx,
+                    snippet: lt.get(sidx..eidx).unwrap_or("").to_string(),
+                    rule: "allow-rationale",
+                    level: ctx.base_level(),
+                    text: "suppression without a rationale — say in the marker's comment \
+                           block why it is sound"
+                        .to_string(),
+                    suggestion: None,
+                });
+            }
+        }
+        gi = ge + 1;
+    }
+}
+
+/// R12 — verify the span invariant of every diagnostic against the
+/// scanned sources: the snippet must equal the byte range, and line/col
+/// must agree with the newlines before it. The engine calls this on its
+/// own output (a clean run emits nothing); tests corrupt violations and
+/// feed them back to prove the check bites.
+pub fn verify_spans(
+    files: &[(PathBuf, String)],
+    violations: &[LintViolation],
+) -> Vec<LintViolation> {
+    let by_path: BTreeMap<&Path, &str> =
+        files.iter().map(|(p, s)| (p.as_path(), s.as_str())).collect();
+    let mut out = Vec::new();
+    for v in violations {
+        if v.rule == "span-fidelity" {
+            continue;
+        }
+        let Some(&src) = by_path.get(v.file.as_path()) else { continue };
+        let bytes = src.as_bytes();
+        let mut problems: Vec<String> = Vec::new();
+        if v.byte_start > v.byte_end || v.byte_end > bytes.len() {
+            problems.push(format!("byte range {}..{} out of bounds", v.byte_start, v.byte_end));
+        } else {
+            if src.get(v.byte_start..v.byte_end) != Some(v.snippet.as_str()) {
+                problems.push("snippet does not match the byte range".to_string());
+            }
+            let line = 1 + bytes[..v.byte_start].iter().filter(|&&b| b == b'\n').count();
+            if line != v.line {
+                problems.push(format!("line says {} but the span starts on line {line}", v.line));
+            }
+            let line_start =
+                bytes[..v.byte_start].iter().rposition(|&b| b == b'\n').map_or(0, |p| p + 1);
+            let col = v.byte_start - line_start + 1;
+            if col != v.col {
+                problems.push(format!("col says {} but the span starts at col {col}", v.col));
+            }
+        }
+        if !problems.is_empty() {
+            out.push(LintViolation {
+                file: v.file.clone(),
+                line: 1,
+                col: 1,
+                byte_start: 0,
+                byte_end: 0,
+                snippet: String::new(),
+                rule: "span-fidelity",
+                level: Level::Error,
+                text: format!(
+                    "diagnostic [{}] at line {} carries an unfaithful span: {}",
+                    v.rule,
+                    v.line,
+                    problems.join("; ")
+                ),
+                suggestion: None,
+            });
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -626,9 +1425,30 @@ mod tests {
         assert_eq!(v.len(), 1, "{v:?}");
         assert_eq!(v[0].rule, "lock-unwrap");
         assert_eq!(v[0].line, 2);
+        assert_eq!(v[0].level, Level::Error);
 
         let ok = "fn f() {\n    let g = state.lock_unpoisoned();\n}\n";
         assert!(scan("rust/src/coordinator/engine.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn r1_spans_and_suggestions_are_mechanical() {
+        let src = "fn f() {\n    let g = state.lock().unwrap();\n}\n";
+        let v = scan("rust/src/coordinator/engine.rs", src);
+        assert_eq!(v[0].snippet, "lock().unwrap()");
+        assert_eq!(v[0].suggestion.as_deref(), Some("lock_unpoisoned()"));
+        assert_eq!(&src[v[0].byte_start..v[0].byte_end], v[0].snippet);
+
+        let cv = "fn f() { let g = cv.wait(guard).unwrap(); }\n";
+        let v = scan("rust/src/coordinator/engine.rs", cv);
+        assert_eq!(v[0].suggestion.as_deref(), Some("wait_unpoisoned(guard)"));
+
+        // expect(..) carries a message the fix can't keep — no
+        // suggestion, just the finding.
+        let ex = "fn f() { let g = state.lock().expect(\"poisoned\"); }\n";
+        let v = scan("rust/src/coordinator/engine.rs", ex);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].suggestion.is_none());
     }
 
     #[test]
@@ -673,6 +1493,7 @@ mod tests {
         let v = scan("rust/src/coordinator/rank_controller.rs", src);
         assert_eq!(v.len(), 1);
         assert_eq!(v[0].rule, "instant-in-decide");
+        assert_eq!(v[0].snippet, "Instant::now");
         // Same text outside any decide-critical scope is fine.
         assert!(scan("rust/src/coordinator/batcher.rs", src).is_empty());
     }
@@ -712,9 +1533,11 @@ mod tests {
         );
         assert!(scan("rust/src/runtime/worker.rs", allowed).is_empty());
 
-        // A blank line breaks the annotation's contiguous block.
+        // A blank line breaks the annotation's contiguous block (the
+        // stranded bare marker is R11's finding, not R3's).
         let broken = "// lint:allow(mpsc)\n\nuse std::sync::mpsc;\n";
-        assert_eq!(scan("rust/src/runtime/worker.rs", broken).len(), 1);
+        let v = scan("rust/src/runtime/worker.rs", broken);
+        assert_eq!(v.iter().filter(|v| v.rule == "raw-mpsc").count(), 1);
 
         // completion.rs owns the channel surface.
         assert!(scan("rust/src/coordinator/completion.rs", bad).is_empty());
@@ -722,7 +1545,7 @@ mod tests {
 
     #[test]
     fn r3_accepts_rule_scoped_allow_spelling() {
-        let allowed = "// internal queue. lint:allow(raw-mpsc)\nuse std::sync::mpsc;\n";
+        let allowed = "// internal queue only. lint:allow(raw-mpsc)\nuse std::sync::mpsc;\n";
         assert!(scan("rust/src/util/threadpool.rs", allowed).is_empty());
     }
 
@@ -781,6 +1604,7 @@ mod tests {
         let cycles: Vec<_> = v.iter().filter(|v| v.rule == "lock-order").collect();
         assert_eq!(cycles.len(), 1, "{v:?}");
         assert!(cycles[0].text.contains("helper"), "{}", cycles[0].text);
+        assert!(cycles[0].text.contains("beta acquired at sched.rs:6"), "{}", cycles[0].text);
     }
 
     #[test]
@@ -810,7 +1634,8 @@ mod tests {
             "    let a = s.alpha.lock_unpoisoned();\n",
             "}\n",
         );
-        assert!(scan("rust/src/coordinator/sched.rs", src).is_empty());
+        let v = scan("rust/src/coordinator/sched.rs", src);
+        assert!(v.iter().all(|v| v.rule != "lock-order"), "{v:?}");
     }
 
     #[test]
@@ -902,6 +1727,7 @@ mod tests {
         assert_eq!(v.len(), 1, "{v:?}");
         assert_eq!(v[0].rule, "panic-in-worker");
         assert_eq!(v[0].line, 3);
+        assert_eq!(v[0].level, Level::Error);
     }
 
     #[test]
@@ -938,6 +1764,23 @@ mod tests {
         assert!(scan("rust/src/coordinator/jobs.rs", src).is_empty());
     }
 
+    #[test]
+    fn r6_is_advisory_in_test_code() {
+        let src = concat!(
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    #[test]\n",
+            "    fn t() {\n",
+            "        pool.execute(move || { let v = slot.take().unwrap(); });\n",
+            "    }\n",
+            "}\n",
+        );
+        let v = scan("rust/src/coordinator/jobs.rs", src);
+        let r6: Vec<_> = v.iter().filter(|v| v.rule == "panic-in-worker").collect();
+        assert_eq!(r6.len(), 1, "{v:?}");
+        assert_eq!(r6[0].level, Level::Advisory);
+    }
+
     // ---- R7 ----
 
     #[test]
@@ -969,5 +1812,398 @@ mod tests {
             "fn partition(k: usize) -> usize { k.div_ceil(K_CHUNK) }\n",
         );
         assert!(scan("rust/src/linalg/split.rs", src).is_empty());
+    }
+}
+
+#[cfg(test)]
+mod interprocedural_tests {
+    use super::*;
+
+    fn scan(file: &str, src: &str) -> Vec<LintViolation> {
+        analyze_source(Path::new(file), src)
+    }
+
+    fn scan_with(file: &str, src: &str, opts: AnalysisOptions) -> Vec<LintViolation> {
+        analyze_crate_with(&[(PathBuf::from(file), src.to_string())], opts)
+    }
+
+    fn rule<'a>(v: &'a [LintViolation], r: &str) -> Vec<&'a LintViolation> {
+        v.iter().filter(|x| x.rule == r).collect()
+    }
+
+    // ---- R4, fixed point vs the PR 8 one-level analyzer ----
+
+    const THREE_DEEP: &str = concat!(
+        "fn outer(s: &S) {\n",          // 1
+        "    let a = s.alpha.lock_unpoisoned();\n", // 2
+        "    h1(s);\n",                 // 3
+        "}\n",
+        "fn h1(s: &S) { h2(s); }\n",    // 5
+        "fn h2(s: &S) { h3(s); }\n",    // 6
+        "fn h3(s: &S) {\n",             // 7
+        "    let b = s.beta.lock_unpoisoned();\n",  // 8
+        "}\n",
+        "fn inverted(s: &S) {\n",       // 10
+        "    let b = s.beta.lock_unpoisoned();\n",  // 11
+        "    let a = s.alpha.lock_unpoisoned();\n", // 12
+        "}\n",
+    );
+
+    #[test]
+    fn r4_one_level_misses_the_three_deep_cycle() {
+        let v = scan_with(
+            "rust/src/coordinator/sched.rs",
+            THREE_DEEP,
+            AnalysisOptions { lock_depth: Some(1) },
+        );
+        assert!(rule(&v, "lock-order").is_empty(), "one-level must miss it: {v:?}");
+    }
+
+    #[test]
+    fn r4_fixed_point_catches_it_and_prints_the_chain() {
+        let v = scan("rust/src/coordinator/sched.rs", THREE_DEEP);
+        let cycles = rule(&v, "lock-order");
+        assert_eq!(cycles.len(), 1, "{v:?}");
+        let text = &cycles[0].text;
+        assert!(text.contains("h1()"), "{text}");
+        assert!(text.contains("h2() at sched.rs:5"), "{text}");
+        assert!(text.contains("h3() at sched.rs:6"), "{text}");
+        assert!(text.contains("beta acquired at sched.rs:8"), "{text}");
+    }
+
+    // ---- R8 ----
+
+    #[test]
+    fn r8_flags_blocking_directly_under_shard_guard() {
+        let src = concat!(
+            "fn drain_stage(s: &S, rx: &Receiver<C>) {\n",
+            "    let shard = s.shards.lock_unpoisoned();\n",
+            "    let cmd = rx.recv();\n",
+            "}\n",
+        );
+        let v = scan("rust/src/coordinator/pipeline.rs", src);
+        let r8 = rule(&v, "blocking-under-lock");
+        assert_eq!(r8.len(), 1, "{v:?}");
+        assert_eq!(r8[0].line, 3);
+        assert_eq!(r8[0].level, Level::Error);
+        assert!(r8[0].text.contains("recv"), "{}", r8[0].text);
+    }
+
+    #[test]
+    fn r8_clean_once_the_guard_is_dropped() {
+        let src = concat!(
+            "fn drain_stage(s: &S, rx: &Receiver<C>) {\n",
+            "    {\n",
+            "        let shard = s.shards.lock_unpoisoned();\n",
+            "    }\n",
+            "    let cmd = rx.recv();\n",
+            "}\n",
+        );
+        let v = scan("rust/src/coordinator/pipeline.rs", src);
+        assert!(rule(&v, "blocking-under-lock").is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn r8_reaches_blocking_through_two_calls() {
+        let src = concat!(
+            "fn stage(s: &S) {\n",                        // 1
+            "    let shard = s.shard.lock_unpoisoned();\n", // 2
+            "    helper();\n",                            // 3
+            "}\n",
+            "fn helper() { waiter(); }\n",                // 5
+            "fn waiter() { std::thread::sleep(d); }\n",   // 6
+        );
+        let v = scan("rust/src/coordinator/sched.rs", src);
+        let r8 = rule(&v, "blocking-under-lock");
+        assert_eq!(r8.len(), 1, "{v:?}");
+        assert_eq!(r8[0].line, 3, "flag the call site under the guard");
+        let text = &r8[0].text;
+        assert!(text.contains("sleep"), "{text}");
+        assert!(text.contains("waiter() at sched.rs:5"), "{text}");
+        assert!(text.contains("sleep blocks at sched.rs:6"), "{text}");
+
+        // The one-level analyzer's view: helper() has no *direct*
+        // blocking fact, so the same tree scans clean.
+        let legacy = scan_with(
+            "rust/src/coordinator/sched.rs",
+            src,
+            AnalysisOptions { lock_depth: Some(1) },
+        );
+        assert!(rule(&legacy, "blocking-under-lock").is_empty(), "{legacy:?}");
+    }
+
+    #[test]
+    fn r8_flags_pool_dispatch_under_shard_guard() {
+        let src = concat!(
+            "fn fanout(s: &S, pool: &ThreadPool) {\n",
+            "    let shard = s.shard.lock_unpoisoned();\n",
+            "    pool.execute(move || { heavy(); });\n",
+            "}\n",
+            "fn heavy() {}\n",
+        );
+        let v = scan("rust/src/coordinator/pipeline.rs", src);
+        let r8 = rule(&v, "blocking-under-lock");
+        assert_eq!(r8.len(), 1, "{v:?}");
+        assert!(r8[0].text.contains("execute"), "{}", r8[0].text);
+    }
+
+    #[test]
+    fn r8_allow_suppresses_with_rationale() {
+        let src = concat!(
+            "fn drain_stage(s: &S, rx: &Receiver<C>) {\n",
+            "    let shard = s.shards.lock_unpoisoned();\n",
+            "    // bounded: sender is the same thread pool, queue depth 1.\n",
+            "    // lint:allow(blocking-under-lock)\n",
+            "    let cmd = rx.recv();\n",
+            "}\n",
+        );
+        let v = scan("rust/src/coordinator/pipeline.rs", src);
+        assert!(rule(&v, "blocking-under-lock").is_empty(), "{v:?}");
+        assert!(rule(&v, "allow-rationale").is_empty(), "{v:?}");
+    }
+
+    // ---- R9 ----
+
+    #[test]
+    fn r9_flags_raw_rank_at_charge_site() {
+        let src = concat!(
+            "fn charge(&self, r: usize) {\n",
+            "    self.ledger.add(lowrank_attention_flops(self.seq, self.dim, r));\n",
+            "}\n",
+        );
+        let v = scan("rust/src/coordinator/ledger.rs", src);
+        let r9 = rule(&v, "charge-at-bucket");
+        assert_eq!(r9.len(), 1, "{v:?}");
+        assert!(r9[0].text.contains("argument 3"), "{}", r9[0].text);
+        assert!(r9[0].text.contains("rank_bucket"), "{}", r9[0].text);
+    }
+
+    #[test]
+    fn r9_bucket_derived_widths_are_clean() {
+        let direct = concat!(
+            "fn charge(&self, r: usize) {\n",
+            "    self.ledger.add(lowrank_attention_flops(self.seq, self.dim, self.ladder.rank_bucket(r)));\n",
+            "}\n",
+        );
+        assert!(rule(&scan("rust/src/coordinator/ledger.rs", direct), "charge-at-bucket")
+            .is_empty());
+
+        // A local whose initializer mentions a bucket also counts.
+        let via_let = concat!(
+            "fn charge(&self, r: usize) {\n",
+            "    let width = self.ladder.rank_bucket(r);\n",
+            "    self.ledger.add(lowrank_attention_flops(self.seq, self.dim, width));\n",
+            "}\n",
+        );
+        assert!(rule(&scan("rust/src/coordinator/ledger.rs", via_let), "charge-at-bucket")
+            .is_empty());
+    }
+
+    #[test]
+    fn r9_checks_each_watched_argument() {
+        let src = concat!(
+            "fn charge(&self, r_old: usize, next_bucket: usize) {\n",
+            "    self.ledger.add(incremental_svd_flops(self.seq, self.dim, r_old, next_bucket));\n",
+            "}\n",
+        );
+        let v = scan("rust/src/coordinator/ledger.rs", src);
+        let r9 = rule(&v, "charge-at-bucket");
+        assert_eq!(r9.len(), 1, "only the raw arg flags: {v:?}");
+        assert!(r9[0].text.contains("argument 3"), "{}", r9[0].text);
+    }
+
+    #[test]
+    fn r9_is_scoped_to_charge_call_sites_not_the_flops_module() {
+        // flops.rs internals pass raw ranks between the charge helpers
+        // by design; the rule watches the *call* surface.
+        let src = concat!(
+            "pub fn lowrank_attention_flops(s: usize, d: usize, r: usize) -> u64 {\n",
+            "    partial_svd_flops(s, d, r)\n",
+            "}\n",
+        );
+        assert!(rule(&scan("rust/src/flops.rs", src), "charge-at-bucket").is_empty());
+    }
+
+    // ---- R10 ----
+
+    #[test]
+    fn r10_flags_early_exit_before_handle_resolution() {
+        let src = concat!(
+            "fn submit(&self, req: Req) -> Result<(), E> {\n",
+            "    let reply = GenReply { slot: self.slot(), stream: None };\n",
+            "    self.preflight()?;\n",
+            "    self.send(Work::Generate(req, reply))\n",
+            "}\n",
+        );
+        let v = scan("rust/src/coordinator/engine.rs", src);
+        let r10 = rule(&v, "ticket-resolve");
+        assert_eq!(r10.len(), 1, "{v:?}");
+        assert_eq!(r10[0].line, 3);
+        assert!(r10[0].text.contains("`reply`"), "{}", r10[0].text);
+    }
+
+    #[test]
+    fn r10_move_before_the_exit_is_clean() {
+        let src = concat!(
+            "fn submit(&self, req: Req) -> Result<(), E> {\n",
+            "    self.preflight()?;\n",
+            "    let reply = GenReply { slot: self.slot(), stream: None };\n",
+            "    self.send(Work::Generate(req, reply))\n",
+            "}\n",
+        );
+        assert!(rule(&scan("rust/src/coordinator/engine.rs", src), "ticket-resolve")
+            .is_empty());
+    }
+
+    #[test]
+    fn r10_explicit_drop_and_resolve_methods_are_clean() {
+        let dropped = concat!(
+            "fn cancel(&self) -> Result<(), E> {\n",
+            "    let reply = GenReply { slot: self.slot(), stream: None };\n",
+            "    if self.closed() { drop(reply); return Err(E::Closed); }\n",
+            "    Ok(())\n",
+            "}\n",
+        );
+        assert!(rule(&scan("rust/src/coordinator/engine.rs", dropped), "ticket-resolve")
+            .is_empty());
+
+        let abandoned = concat!(
+            "fn cancel(&self) -> Result<(), E> {\n",
+            "    let reply = AttnReply { slot: self.slot() };\n",
+            "    reply.abandon();\n",
+            "    return Err(E::Closed);\n",
+            "}\n",
+        );
+        assert!(rule(&scan("rust/src/coordinator/engine.rs", abandoned), "ticket-resolve")
+            .is_empty());
+    }
+
+    // ---- R11 ----
+
+    #[test]
+    fn r11_flags_bare_allow_markers() {
+        let src = concat!(
+            "fn f(pool: &P, x: &Slot) {\n",
+            "    pool.execute(move || {\n",
+            "        // lint:allow(panic-in-worker)\n",
+            "        let v = x.take().unwrap();\n",
+            "    });\n",
+            "}\n",
+        );
+        let v = scan("rust/src/coordinator/jobs.rs", src);
+        let r11 = rule(&v, "allow-rationale");
+        assert_eq!(r11.len(), 1, "{v:?}");
+        assert_eq!(r11[0].line, 3);
+        assert_eq!(r11[0].level, Level::Error);
+        // The marker still suppresses its target rule.
+        assert!(rule(&v, "panic-in-worker").is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn r11_accepts_rationale_in_the_same_comment_block() {
+        let inline = concat!(
+            "fn f(pool: &P, x: &Slot) {\n",
+            "    pool.execute(move || {\n",
+            "        // invariant: slot filled by construction. lint:allow(panic-in-worker)\n",
+            "        let v = x.take().unwrap();\n",
+            "    });\n",
+            "}\n",
+        );
+        assert!(rule(&scan("rust/src/coordinator/jobs.rs", inline), "allow-rationale")
+            .is_empty());
+
+        let above = concat!(
+            "fn f(pool: &P, x: &Slot) {\n",
+            "    pool.execute(move || {\n",
+            "        // Slot is filled by construction before dispatch.\n",
+            "        // lint:allow(panic-in-worker)\n",
+            "        let v = x.take().unwrap();\n",
+            "    });\n",
+            "}\n",
+        );
+        assert!(rule(&scan("rust/src/coordinator/jobs.rs", above), "allow-rationale")
+            .is_empty());
+    }
+
+    #[test]
+    fn r11_ignores_markers_in_test_code() {
+        let src = concat!(
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    #[test]\n",
+            "    fn t() {\n",
+            "        // lint:allow(nondet-iter)\n",
+            "        for (k, v) in &map { use_it(k, v); }\n",
+            "    }\n",
+            "}\n",
+        );
+        assert!(rule(&scan("rust/src/coordinator/jobs.rs", src), "allow-rationale")
+            .is_empty());
+    }
+
+    // ---- R12 ----
+
+    #[test]
+    fn r12_clean_run_carries_faithful_spans() {
+        let src = "fn f() {\n    let g = state.lock().unwrap();\n}\n";
+        let files = vec![(
+            PathBuf::from("rust/src/coordinator/engine.rs"),
+            src.to_string(),
+        )];
+        let v = analyze_crate_with(&files, AnalysisOptions::default());
+        assert!(!v.is_empty());
+        assert!(rule(&v, "span-fidelity").is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn r12_catches_a_corrupted_span() {
+        let src = "fn f() {\n    let g = state.lock().unwrap();\n}\n";
+        let files = vec![(
+            PathBuf::from("rust/src/coordinator/engine.rs"),
+            src.to_string(),
+        )];
+        let mut v = analyze_crate_with(&files, AnalysisOptions::default());
+        v[0].byte_start += 1;
+        let bad = verify_spans(&files, &v);
+        assert_eq!(bad.len(), 1, "{bad:?}");
+        assert_eq!(bad[0].rule, "span-fidelity");
+        assert_eq!(bad[0].level, Level::Error);
+        assert!(bad[0].text.contains("unfaithful span"), "{}", bad[0].text);
+    }
+
+    // ---- severity by file kind ----
+
+    #[test]
+    fn findings_outside_src_are_advisory() {
+        let src = "fn f() { let g = state.lock().unwrap(); }\n";
+        for file in
+            ["rust/tests/conformance.rs", "rust/benches/decode.rs", "examples/demo.rs"]
+        {
+            let v = scan(file, src);
+            let r1 = rule(&v, "lock-unwrap");
+            assert_eq!(r1.len(), 1, "{file}: {v:?}");
+            assert_eq!(r1[0].level, Level::Advisory, "{file}");
+        }
+    }
+
+    #[test]
+    fn test_mask_is_ignored_outside_src() {
+        // In rust/tests/ everything is test code; the in-file test mask
+        // must not blank the whole file.
+        let src = concat!(
+            "#[test]\n",
+            "fn t() { let g = state.lock().unwrap(); }\n",
+        );
+        let v = scan("rust/tests/conformance.rs", src);
+        assert_eq!(rule(&v, "lock-unwrap").len(), 1, "{v:?}");
+    }
+
+    #[test]
+    fn rule_table_matches_the_rule_set() {
+        assert_eq!(RULES.len(), 12);
+        let ids: BTreeSet<&str> = RULES.iter().map(|r| r.name).collect();
+        assert_eq!(ids.len(), 12);
+        assert_eq!(RULES[7].name, "blocking-under-lock");
+        assert_eq!(RULES[11].name, "span-fidelity");
     }
 }

@@ -1,0 +1,271 @@
+//! SARIF 2.1.0 emission for the lint findings.
+//!
+//! SARIF (Static Analysis Results Interchange Format) is the standard
+//! CI-ingestible report shape: one `run` by one `tool.driver`, a rule
+//! catalogue, and one `result` per finding with a physical location.
+//! We emit the minimal profile that code-scanning UIs consume —
+//! `ruleId`, `level`, `message.text`, and a `physicalLocation` with
+//! both line/column and byte-offset regions (R12 guarantees the two
+//! agree) — plus a `fix` when the finding carries a mechanical
+//! suggestion.
+//!
+//! The serializer is the crate's own [`crate::util::json`]; there is no
+//! external SARIF dependency to drift against, so `validate_sarif`
+//! pins the shape the tests (and CI uploaders) rely on.
+
+use crate::util::json::{obj, Json};
+
+use super::rules::{Level, LintViolation, RULES};
+
+/// SARIF version emitted and accepted by [`validate_sarif`].
+pub const SARIF_VERSION: &str = "2.1.0";
+const SARIF_SCHEMA: &str =
+    "https://docs.oasis-open.org/sarif/sarif/v2.1.0/errata01/os/schemas/sarif-schema-2.1.0.json";
+
+fn level_str(l: Level) -> &'static str {
+    match l {
+        Level::Error => "error",
+        // SARIF has no "advisory"; "note" is its non-failing severity.
+        Level::Advisory => "note",
+    }
+}
+
+fn location(v: &LintViolation) -> Json {
+    obj(vec![(
+        "physicalLocation",
+        obj(vec![
+            (
+                "artifactLocation",
+                obj(vec![(
+                    "uri",
+                    Json::Str(v.file.to_string_lossy().replace('\\', "/")),
+                )]),
+            ),
+            (
+                "region",
+                obj(vec![
+                    ("startLine", Json::Num(v.line as f64)),
+                    ("startColumn", Json::Num(v.col as f64)),
+                    ("byteOffset", Json::Num(v.byte_start as f64)),
+                    ("byteLength", Json::Num((v.byte_end - v.byte_start) as f64)),
+                    ("snippet", obj(vec![("text", Json::Str(v.snippet.clone()))])),
+                ]),
+            ),
+        ]),
+    )])
+}
+
+fn result(v: &LintViolation) -> Json {
+    let mut pairs = vec![
+        ("ruleId", Json::Str(v.rule.to_string())),
+        ("level", Json::Str(level_str(v.level).to_string())),
+        ("message", obj(vec![("text", Json::Str(v.text.clone()))])),
+        ("locations", Json::Arr(vec![location(v)])),
+    ];
+    if let Some(s) = &v.suggestion {
+        pairs.push((
+            "fixes",
+            Json::Arr(vec![obj(vec![
+                (
+                    "description",
+                    obj(vec![("text", Json::Str(format!("replace with `{s}`")))]),
+                ),
+                (
+                    "artifactChanges",
+                    Json::Arr(vec![obj(vec![
+                        (
+                            "artifactLocation",
+                            obj(vec![(
+                                "uri",
+                                Json::Str(v.file.to_string_lossy().replace('\\', "/")),
+                            )]),
+                        ),
+                        (
+                            "replacements",
+                            Json::Arr(vec![obj(vec![
+                                (
+                                    "deletedRegion",
+                                    obj(vec![
+                                        ("byteOffset", Json::Num(v.byte_start as f64)),
+                                        (
+                                            "byteLength",
+                                            Json::Num((v.byte_end - v.byte_start) as f64),
+                                        ),
+                                    ]),
+                                ),
+                                (
+                                    "insertedContent",
+                                    obj(vec![("text", Json::Str(s.clone()))]),
+                                ),
+                            ])]),
+                        ),
+                    ])]),
+                ),
+            ])]),
+        ));
+    }
+    obj(pairs)
+}
+
+/// Render `violations` as a single-run SARIF 2.1.0 log.
+pub fn to_sarif(violations: &[LintViolation]) -> Json {
+    let rules: Vec<Json> = RULES
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("id", Json::Str(r.name.to_string())),
+                (
+                    "shortDescription",
+                    obj(vec![("text", Json::Str(r.contract.to_string()))]),
+                ),
+            ])
+        })
+        .collect();
+    let results: Vec<Json> = violations.iter().map(result).collect();
+    obj(vec![
+        ("$schema", Json::Str(SARIF_SCHEMA.to_string())),
+        ("version", Json::Str(SARIF_VERSION.to_string())),
+        (
+            "runs",
+            Json::Arr(vec![obj(vec![
+                (
+                    "tool",
+                    obj(vec![(
+                        "driver",
+                        obj(vec![
+                            ("name", Json::Str("drrl-lint".to_string())),
+                            ("informationUri", Json::Str("CONFORMANCE.md".to_string())),
+                            ("rules", Json::Arr(rules)),
+                        ]),
+                    )]),
+                ),
+                ("results", Json::Arr(results)),
+            ])]),
+        ),
+    ])
+}
+
+/// Shape-check a SARIF log: the invariants CI uploaders and the tests
+/// depend on. Returns the list of problems (empty = valid).
+pub fn validate_sarif(doc: &Json) -> Vec<String> {
+    let mut errs = Vec::new();
+    if doc.get("version").and_then(|v| v.as_str()) != Some(SARIF_VERSION) {
+        errs.push(format!("version must be \"{SARIF_VERSION}\""));
+    }
+    let Some(runs) = doc.get("runs").and_then(|r| r.as_arr()) else {
+        errs.push("runs must be an array".to_string());
+        return errs;
+    };
+    if runs.len() != 1 {
+        errs.push(format!("expected exactly 1 run, got {}", runs.len()));
+        return errs;
+    }
+    let run = &runs[0];
+    let driver = run.get("tool").and_then(|t| t.get("driver"));
+    match driver.and_then(|d| d.get("name")).and_then(|n| n.as_str()) {
+        Some("drrl-lint") => {}
+        other => errs.push(format!("tool.driver.name must be \"drrl-lint\", got {other:?}")),
+    }
+    let rule_count = driver
+        .and_then(|d| d.get("rules"))
+        .and_then(|r| r.as_arr())
+        .map(|r| r.len())
+        .unwrap_or(0);
+    if rule_count != RULES.len() {
+        errs.push(format!(
+            "tool.driver.rules must list all {} rules, got {rule_count}",
+            RULES.len()
+        ));
+    }
+    let Some(results) = run.get("results").and_then(|r| r.as_arr()) else {
+        errs.push("runs[0].results must be an array".to_string());
+        return errs;
+    };
+    for (i, r) in results.iter().enumerate() {
+        let rule_id = r.get("ruleId").and_then(|x| x.as_str());
+        if !rule_id.is_some_and(|id| RULES.iter().any(|ri| ri.name == id)) {
+            errs.push(format!("results[{i}].ruleId {rule_id:?} is not a known rule"));
+        }
+        match r.get("level").and_then(|x| x.as_str()) {
+            Some("error") | Some("note") => {}
+            other => errs.push(format!("results[{i}].level must be error|note, got {other:?}")),
+        }
+        if r.get("message")
+            .and_then(|m| m.get("text"))
+            .and_then(|t| t.as_str())
+            .map_or(true, str::is_empty)
+        {
+            errs.push(format!("results[{i}].message.text missing or empty"));
+        }
+        let region = r
+            .get("locations")
+            .and_then(|l| l.as_arr())
+            .and_then(|l| l.first())
+            .and_then(|l| l.get("physicalLocation"))
+            .and_then(|p| p.get("region"));
+        let Some(region) = region else {
+            errs.push(format!("results[{i}] lacks a physicalLocation.region"));
+            continue;
+        };
+        for field in ["startLine", "startColumn", "byteOffset", "byteLength"] {
+            if region.get(field).and_then(|x| x.as_usize()).is_none() {
+                errs.push(format!("results[{i}].region.{field} missing"));
+            }
+        }
+    }
+    errs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::rules::analyze_source;
+    use std::path::Path;
+
+    fn findings() -> Vec<LintViolation> {
+        analyze_source(
+            Path::new("rust/src/coordinator/engine.rs"),
+            "fn f() {\n    let g = state.lock().unwrap();\n}\n",
+        )
+    }
+
+    #[test]
+    fn emitted_sarif_validates_and_roundtrips() {
+        let v = findings();
+        assert!(!v.is_empty());
+        let doc = to_sarif(&v);
+        assert_eq!(validate_sarif(&doc), Vec::<String>::new());
+        let re = Json::parse(&doc.to_string_pretty()).unwrap();
+        assert_eq!(validate_sarif(&re), Vec::<String>::new());
+        let results = re.get("runs").unwrap().as_arr().unwrap()[0]
+            .get("results")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .to_vec();
+        assert_eq!(results.len(), v.len());
+        assert_eq!(
+            results[0].get("ruleId").unwrap().as_str(),
+            Some("lock-unwrap")
+        );
+        // The mechanical fix rides along.
+        assert!(results[0].get("fixes").is_some());
+    }
+
+    #[test]
+    fn empty_run_is_valid() {
+        let doc = to_sarif(&[]);
+        assert!(validate_sarif(&doc).is_empty());
+    }
+
+    #[test]
+    fn validator_rejects_unknown_rules_and_levels() {
+        let mut v = findings();
+        v[0].rule = "not-a-rule";
+        let doc = to_sarif(&v);
+        assert!(!validate_sarif(&doc).is_empty());
+
+        let bad = Json::parse(r#"{"version":"2.0.0","runs":[]}"#).unwrap();
+        assert!(!validate_sarif(&bad).is_empty());
+    }
+}

@@ -1,16 +1,19 @@
 //! Source-level lint pass — thin shim over [`crate::analysis`].
 //!
 //! PR 6's deliberately dumb line-oriented scanner lived here; it has
-//! been replaced by the token-level analysis subsystem in
-//! [`crate::analysis`] (lexer → structural model → rules R1–R7), which
-//! scans **all of `rust/src/`** instead of two hand-picked directories.
-//! This module keeps the conformance-layer surface stable:
-//! [`run_lint`], [`scan_source`] and [`LintViolation`] re-export or
-//! wrap the analysis implementations, and the live-tree test below
-//! pins the real repository clean under the full rule set.
+//! been replaced by the static-analysis subsystem in
+//! [`crate::analysis`] (lexer → structural model → call graph →
+//! fixed-point dataflow → rules R1–R12), which scans `rust/src/`,
+//! `rust/tests/`, `rust/benches/` and `examples/` instead of two
+//! hand-picked directories. This module keeps the conformance-layer
+//! surface stable: [`run_lint`], [`scan_source`] and [`LintViolation`]
+//! re-export or wrap the analysis implementations, and the live-tree
+//! test below pins the real repository free of error-level findings
+//! under the full rule set (findings in test/bench/example code are
+//! advisory and never gate).
 //!
-//! See CONFORMANCE.md § "Static rules" for the R1–R7 catalogue and the
-//! `lint:allow(rule)` suppression mechanism.
+//! See CONFORMANCE.md § "Static rules" for the R1–R12 catalogue and
+//! the `lint:allow(rule)` suppression mechanism.
 
 use std::path::Path;
 
@@ -27,6 +30,7 @@ pub fn scan_source(path: &Path, source: &str) -> Vec<LintViolation> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::analysis::Level;
 
     #[test]
     fn scan_source_matches_the_analysis_pass() {
@@ -44,10 +48,12 @@ mod tests {
         // sources under rust/src/).
         let root = Path::new(env!("CARGO_MANIFEST_DIR"));
         let violations = run_lint(root).expect("scan the live tree");
+        let errors: Vec<_> =
+            violations.iter().filter(|v| v.level == Level::Error).collect();
         assert!(
-            violations.is_empty(),
-            "lint violations in the live tree:\n{}",
-            violations.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
+            errors.is_empty(),
+            "error-level lint findings in the live tree:\n{}",
+            errors.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
         );
     }
 }

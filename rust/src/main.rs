@@ -69,8 +69,10 @@ fn print_usage() {
          run each subcommand with no flags for sensible defaults;\n\
          fuzz: differential conformance fuzzing\n\
          \x20      (--seed N | --budget N [--base-seed N] | --seeds FILE)\n\
-         lint: token-level static analysis (rules R1-R7) over rust/src/\n\
-         \x20      (--root DIR, --json for a machine-readable report)\n\
+         lint: interprocedural static analysis (rules R1-R12) over\n\
+         \x20      rust/src|tests|benches and examples/ (--root DIR, --json,\n\
+         \x20      --sarif | --sarif-out FILE, --baseline FILE gates on new\n\
+         \x20      findings only, --write-baseline FILE)\n\
          bench-check: validate BENCH_*.json snapshots (--files a.json,b.json)\n\
          bench-diff: compare two snapshots (drrl bench-diff base.json cur.json\n\
          \x20      [--max-regress PCT] [--report-only])\n\
@@ -562,38 +564,112 @@ fn check_all_finite(j: &drrl::util::Json, at: &str) -> Result<(), String> {
     }
 }
 
-/// `drrl lint` — token-level static analysis over all of `rust/src/`
-/// (rules R1–R7: lock hygiene, decide-section wall-clock reads, raw
-/// channels, lock-order cycles, unordered iteration, worker panics,
-/// pool-shaped partitions; see CONFORMANCE.md § "Static rules" and
-/// [`drrl::analysis`]). `--root` points at the repo root (default `.`);
-/// `--json` prints the machine-readable report (schema v1, validated by
-/// the same style of checker as `drrl bench-check`) to stdout.
-/// Exit codes: 0 clean, 1 violations, 2 scan error.
+/// `drrl lint` — interprocedural static analysis over `rust/src/`,
+/// `rust/tests/`, `rust/benches/` and `examples/` (rules R1–R12: lock
+/// hygiene, decide-section wall-clock reads, raw channels, transitive
+/// lock-order cycles, unordered iteration, worker panics, pool-shaped
+/// partitions, blocking under shard locks, bucket-typed FLOPs charges,
+/// ticket resolution, suppression rationales, span fidelity; see
+/// CONFORMANCE.md § "Static rules" and [`drrl::analysis`]).
+///
+/// Flags: `--root DIR` (repo root, default `.`); `--json` prints the
+/// schema-v1 machine report; `--sarif` prints SARIF 2.1.0;
+/// `--sarif-out FILE` writes SARIF to a file; `--baseline FILE` gates
+/// only on error-level findings *not* in the baseline (fixed findings
+/// are reported so the baseline can shrink); `--write-baseline FILE`
+/// records the current error-level findings and exits 0.
+///
+/// Exit codes: 0 clean (no error-level findings, or none beyond the
+/// baseline — advisories in test/bench/example code never fail),
+/// 1 gating findings, 2 scan/baseline error.
 fn cmd_lint(args: &Args) -> i32 {
+    use drrl::analysis;
+    use drrl::util::Json;
     let root = args.get_or("root", ".");
-    let report = match drrl::analysis::run_lint_report(std::path::Path::new(root)) {
+    let report = match analysis::run_lint_report(std::path::Path::new(root)) {
         Ok(r) => r,
         Err(e) => {
             eprintln!("lint: cannot scan {root}: {e}");
             return 2;
         }
     };
-    if args.flag("json") {
-        println!("{}", drrl::analysis::report_json(&report).to_string_pretty());
-    } else if report.violations.is_empty() {
+    if let Some(path) = args.get("write-baseline") {
+        let doc = analysis::baseline_json(&report.violations).to_string_pretty();
+        if let Err(e) = std::fs::write(path, doc + "\n") {
+            eprintln!("lint: cannot write baseline {path}: {e}");
+            return 2;
+        }
         println!(
-            "lint: clean ({} files, {} rules)",
-            report.files_scanned.len(),
-            drrl::analysis::RULES.len()
+            "lint: wrote {} accepted finding(s) to {path}",
+            report.errors()
         );
+        return 0;
+    }
+    if let Some(path) = args.get("sarif-out") {
+        let doc = analysis::to_sarif(&report.violations).to_string_pretty();
+        if let Err(e) = std::fs::write(path, doc + "\n") {
+            eprintln!("lint: cannot write SARIF {path}: {e}");
+            return 2;
+        }
+    }
+    // Which error-level findings gate: all of them, or (with a
+    // baseline) only the ones the baseline does not cover.
+    let errors: Vec<&analysis::LintViolation> =
+        report.violations.iter().filter(|v| v.level == analysis::Level::Error).collect();
+    let gating: Vec<&analysis::LintViolation>;
+    let mut fixed = 0usize;
+    if let Some(path) = args.get("baseline") {
+        let baseline = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {path}: {e}"))
+            .and_then(|t| Json::parse(&t).map_err(|e| format!("{path}: invalid JSON: {e}")))
+            .and_then(|doc| analysis::parse_baseline(&doc));
+        let baseline = match baseline {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("lint: {e}");
+                return 2;
+            }
+        };
+        let diff = analysis::diff_against_baseline(&report.violations, &baseline);
+        gating = diff.new;
+        fixed = diff.fixed;
+    } else {
+        gating = errors.clone();
+    }
+    if args.flag("sarif") {
+        println!("{}", analysis::to_sarif(&report.violations).to_string_pretty());
+    } else if args.flag("json") {
+        println!("{}", analysis::report_json(&report).to_string_pretty());
+    } else if gating.is_empty() {
+        println!(
+            "lint: clean ({} files, {} rules, {} error(s) baselined, {} advisorie(s), {} ms)",
+            report.files_scanned.len(),
+            analysis::RULES.len(),
+            errors.len(),
+            report.advisories(),
+            report.wall_ms
+        );
+        for v in report.violations.iter().filter(|v| v.level == analysis::Level::Advisory) {
+            eprintln!("{v}");
+        }
     } else {
         for v in &report.violations {
             eprintln!("{v}");
         }
-        eprintln!("lint: {} violation(s)", report.violations.len());
+        eprintln!(
+            "lint: {} new violation(s) ({} error(s) total, {} advisorie(s))",
+            gating.len(),
+            errors.len(),
+            report.advisories()
+        );
     }
-    i32::from(!report.violations.is_empty())
+    if fixed > 0 {
+        eprintln!(
+            "lint: {fixed} baselined finding(s) no longer fire — regenerate with \
+             `drrl lint --write-baseline lint_baseline.json` to shrink the baseline"
+        );
+    }
+    i32::from(!gating.is_empty())
 }
 
 /// `drrl bench-diff <baseline.json> <current.json>` — per-benchmark

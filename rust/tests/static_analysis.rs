@@ -1,13 +1,17 @@
 //! Integration tests for the `rust/src/analysis/` static-analysis
 //! subsystem and the `bench-diff` snapshot comparator.
 //!
-//! Planted-bug fixtures prove each crate-wide rule (R4–R7) actually
-//! bites; the live-tree test proves the real sources lint clean; the
-//! JSON tests prove `drrl lint --json` round-trips through the same
-//! validator style as `drrl bench-check`.
+//! Planted-bug fixtures prove each crate-wide rule (R4–R12) actually
+//! bites — including a three-call-deep lock-order cycle that the old
+//! one-level propagation (`lock_depth: Some(1)`) provably misses; the
+//! live-tree test proves the real sources carry no error-level
+//! findings; the JSON/SARIF/baseline tests prove every output surface
+//! of `drrl lint` round-trips through its validator.
 
 use drrl::analysis::{
-    analyze_crate, analyze_source, report_json, run_lint_report, validate_report, LintReport,
+    analyze_crate, analyze_crate_with, analyze_source, baseline_json, diff_against_baseline,
+    parse_baseline, report_json, run_lint_report, to_sarif, validate_report, validate_sarif,
+    AnalysisOptions, Level, LintReport,
 };
 use drrl::bench_harness::diff_snapshots;
 use drrl::util::Json;
@@ -17,6 +21,15 @@ fn crate_of(files: &[(&str, &str)]) -> Vec<drrl::analysis::LintViolation> {
     let owned: Vec<(PathBuf, String)> =
         files.iter().map(|(p, s)| (PathBuf::from(*p), (*s).to_string())).collect();
     analyze_crate(&owned)
+}
+
+fn crate_of_with(
+    files: &[(&str, &str)],
+    opts: AnalysisOptions,
+) -> Vec<drrl::analysis::LintViolation> {
+    let owned: Vec<(PathBuf, String)> =
+        files.iter().map(|(p, s)| (PathBuf::from(*p), (*s).to_string())).collect();
+    analyze_crate_with(&owned, opts)
 }
 
 fn rules_of(v: &[drrl::analysis::LintViolation]) -> Vec<&'static str> {
@@ -187,6 +200,62 @@ fn r7_pool_size_reads_fire_in_linalg_only() {
     assert_eq!(rules_of(&v), ["pool-shape-partition"], "{v:?}");
 }
 
+// ---- cross-file transitive dataflow (the tentpole regression) ----
+
+/// A lock-order inversion whose forward edge is only visible three
+/// calls deep and across files: `outer` holds alpha across `h1()`,
+/// `h1 -> h2 -> h3`, and `h3` (another file) takes beta; `inverted`
+/// takes beta then alpha. The PR 8 analyzer propagated exactly one
+/// call level, so it scanned this clean.
+const DEEP_A: &str = "fn outer(s: &S) {\n\
+                      \x20   let ga = s.alpha.lock_unpoisoned();\n\
+                      \x20   h1(s);\n\
+                      \x20   drop(ga);\n\
+                      }\n\
+                      fn h1(s: &S) { h2(s); }\n\
+                      fn h2(s: &S) { h3(s); }\n";
+const DEEP_B: &str = "fn h3(s: &S) {\n\
+                      \x20   let gb = s.beta.lock_unpoisoned();\n\
+                      \x20   drop(gb);\n\
+                      }\n\
+                      fn inverted(s: &S) {\n\
+                      \x20   let gb = s.beta.lock_unpoisoned();\n\
+                      \x20   let ga = s.alpha.lock_unpoisoned();\n\
+                      \x20   drop(ga);\n\
+                      \x20   drop(gb);\n\
+                      }\n";
+
+#[test]
+fn transitive_cycle_is_invisible_at_depth_one() {
+    let v = crate_of_with(
+        &[("rust/src/coordinator/deep_a.rs", DEEP_A), ("rust/src/coordinator/deep_b.rs", DEEP_B)],
+        AnalysisOptions { lock_depth: Some(1) },
+    );
+    assert!(
+        !rules_of(&v).contains(&"lock-order"),
+        "the one-level analyzer must (wrongly) scan this clean: {v:?}"
+    );
+}
+
+#[test]
+fn fixed_point_finds_the_cycle_with_the_full_call_chain() {
+    let v = crate_of(&[
+        ("rust/src/coordinator/deep_a.rs", DEEP_A),
+        ("rust/src/coordinator/deep_b.rs", DEEP_B),
+    ]);
+    let cycles: Vec<_> = v.iter().filter(|x| x.rule == "lock-order").collect();
+    assert_eq!(cycles.len(), 1, "{v:?}");
+    let text = &cycles[0].text;
+    for needle in [
+        "h1()",
+        "h2() at deep_a.rs:6",
+        "h3() at deep_a.rs:7",
+        "beta acquired at deep_b.rs:2",
+    ] {
+        assert!(text.contains(needle), "chain must show {needle:?}: {text}");
+    }
+}
+
 // ---- live tree + JSON report ----
 
 #[test]
@@ -194,20 +263,37 @@ fn live_tree_lints_clean() {
     let root = Path::new(env!("CARGO_MANIFEST_DIR"));
     let report = run_lint_report(root).expect("lint scan of the real tree");
     assert!(
-        report.files_scanned.len() > 30,
-        "whole-crate walk should see every module, got {}",
+        report.files_scanned.len() > 40,
+        "the walk should see src, tests, benches and examples, got {}",
         report.files_scanned.len()
     );
+    let errors: Vec<_> =
+        report.violations.iter().filter(|v| v.level == Level::Error).collect();
     assert!(
-        report.violations.is_empty(),
-        "live tree must lint clean:\n{}",
-        report
-            .violations
-            .iter()
-            .map(ToString::to_string)
-            .collect::<Vec<_>>()
-            .join("\n")
+        errors.is_empty(),
+        "live tree must carry no error-level findings:\n{}",
+        errors.iter().map(ToString::to_string).collect::<Vec<_>>().join("\n")
     );
+}
+
+#[test]
+fn live_tree_matches_the_committed_baseline() {
+    // The committed baseline is empty: the tree is clean under R1–R12
+    // and must stay that way without grandfathering anything.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let text = std::fs::read_to_string(root.join("lint_baseline.json"))
+        .expect("lint_baseline.json is committed at the repo root");
+    let baseline = parse_baseline(&Json::parse(&text).expect("baseline is valid JSON"))
+        .expect("baseline parses");
+    assert!(baseline.is_empty(), "tree is clean; baseline must not grandfather findings");
+    let report = run_lint_report(root).expect("lint scan");
+    let diff = diff_against_baseline(&report.violations, &baseline);
+    assert!(
+        diff.new.is_empty(),
+        "no findings beyond the baseline:\n{}",
+        diff.new.iter().map(ToString::to_string).collect::<Vec<_>>().join("\n")
+    );
+    assert_eq!(diff.fixed, 0);
 }
 
 #[test]
@@ -216,14 +302,22 @@ fn json_report_with_planted_violations_round_trips() {
     let path = PathBuf::from("rust/src/coordinator/planted.rs");
     let violations = analyze_source(&path, src);
     assert!(!violations.is_empty());
-    let report = LintReport { files_scanned: vec![path], violations };
+    let report = LintReport { files_scanned: vec![path], violations, wall_ms: 3 };
     let json = report_json(&report);
     let parsed = Json::parse(&json.to_string_pretty()).expect("report is valid JSON");
     validate_report(&parsed).expect("report validates");
     assert_eq!(parsed.get("clean").and_then(Json::as_bool), Some(false));
+    assert_eq!(parsed.get("errors").and_then(Json::as_usize), Some(1));
     let first = &parsed.get("violations").and_then(Json::as_arr).unwrap()[0];
     assert_eq!(first.get("rule").and_then(Json::as_str), Some("lock-unwrap"));
     assert_eq!(first.get("line").and_then(Json::as_f64), Some(2.0));
+    assert_eq!(first.get("snippet").and_then(Json::as_str), Some("lock().unwrap()"));
+    assert_eq!(first.get("level").and_then(Json::as_str), Some("error"));
+    // The report doubles as a bench snapshot so CI can trend lint
+    // wall time with `drrl bench-diff`.
+    let case = &parsed.get("cases").and_then(Json::as_arr).unwrap()[0];
+    assert_eq!(case.get("name").and_then(Json::as_str), Some("drrl-lint"));
+    assert_eq!(case.get("ns_per_iter").and_then(Json::as_f64), Some(3e6));
 }
 
 #[test]
@@ -233,6 +327,186 @@ fn live_tree_json_report_validates() {
     let parsed = Json::parse(&report_json(&report).to_string_pretty()).expect("valid JSON");
     validate_report(&parsed).expect("live report validates");
     assert_eq!(parsed.get("clean").and_then(Json::as_bool), Some(true));
+}
+
+#[test]
+fn live_tree_sarif_validates() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = run_lint_report(root).expect("lint scan");
+    let doc = to_sarif(&report.violations);
+    let parsed = Json::parse(&doc.to_string_pretty()).expect("SARIF is valid JSON");
+    assert_eq!(validate_sarif(&parsed), Vec::<String>::new());
+}
+
+#[test]
+fn sarif_report_carries_spans_and_fixes() {
+    let src = "fn f() {\n    let g = state.lock().unwrap();\n}\n";
+    let v = analyze_source(Path::new("rust/src/coordinator/planted.rs"), src);
+    let doc = to_sarif(&v);
+    assert!(validate_sarif(&doc).is_empty());
+    let results =
+        doc.get("runs").unwrap().as_arr().unwrap()[0].get("results").unwrap().as_arr().unwrap();
+    let region = results[0]
+        .get("locations")
+        .and_then(Json::as_arr)
+        .and_then(|l| l.first())
+        .and_then(|l| l.get("physicalLocation"))
+        .and_then(|p| p.get("region"))
+        .expect("result has a region");
+    let off = region.get("byteOffset").and_then(Json::as_usize).unwrap();
+    let len = region.get("byteLength").and_then(Json::as_usize).unwrap();
+    let snip = region.get("snippet").and_then(|s| s.get("text")).and_then(Json::as_str).unwrap();
+    // R12's invariant, visible straight through the SARIF surface.
+    assert_eq!(&src[off..off + len], snip);
+    assert!(results[0].get("fixes").is_some(), "lock-unwrap carries a mechanical fix");
+}
+
+#[test]
+fn baseline_gates_only_new_findings() {
+    let old_src = "fn f() {\n    let g = state.lock().unwrap();\n}\n";
+    let grandfathered = analyze_source(Path::new("rust/src/coordinator/planted.rs"), old_src);
+    let baseline_doc = baseline_json(&grandfathered);
+    let baseline =
+        parse_baseline(&Json::parse(&baseline_doc.to_string_pretty()).unwrap()).unwrap();
+    assert_eq!(baseline.len(), 1);
+
+    // Same tree again: nothing new, nothing fixed.
+    let diff = diff_against_baseline(&grandfathered, &baseline);
+    assert!(diff.new.is_empty());
+    assert_eq!(diff.fixed, 0);
+
+    // A second, different finding appears in the same file: only it
+    // gates (the grandfathered one is absorbed by the baseline).
+    let new_src =
+        "fn f() {\n    let g = state.lock().unwrap();\n    let h = queue.lock().unwrap();\n}\n";
+    let current = analyze_source(Path::new("rust/src/coordinator/planted.rs"), new_src);
+    let diff = diff_against_baseline(&current, &baseline);
+    assert_eq!(diff.new.len(), 1, "{:?}", diff.new);
+    assert!(diff.new[0].text.contains("queue.lock()"), "{}", diff.new[0].text);
+    assert_eq!(diff.fixed, 0);
+}
+
+// ---- R8–R12 planted bugs ----
+
+#[test]
+fn r8_blocking_under_shard_lock_direct_and_transitive() {
+    // Direct: recv() while the shard guard is live.
+    let direct = "fn drain(s: &S, rx: &Receiver<C>) {\n\
+                  \x20   let shard = s.shards.lock_unpoisoned();\n\
+                  \x20   let cmd = rx.recv();\n\
+                  \x20   drop(shard);\n\
+                  }\n";
+    let v = analyze_source(Path::new("rust/src/coordinator/drain.rs"), direct);
+    assert_eq!(rules_of(&v), ["blocking-under-lock"], "{v:?}");
+
+    // Transitive and cross-file: the blocking sleep is two calls away.
+    let a = "fn stage(s: &S) {\n\
+             \x20   let shard = s.shard.lock_unpoisoned();\n\
+             \x20   helper(s);\n\
+             \x20   drop(shard);\n\
+             }\n";
+    let b = "fn helper(s: &S) { waiter(s); }\n\
+             fn waiter(s: &S) { std::thread::sleep(s.pause); }\n";
+    let v = crate_of(&[
+        ("rust/src/coordinator/stage.rs", a),
+        ("rust/src/coordinator/helpers.rs", b),
+    ]);
+    let r8: Vec<_> = v.iter().filter(|x| x.rule == "blocking-under-lock").collect();
+    assert_eq!(r8.len(), 1, "{v:?}");
+    assert!(r8[0].text.contains("sleep"), "{}", r8[0].text);
+    assert!(r8[0].text.contains("waiter() at helpers.rs:1"), "{}", r8[0].text);
+
+    // The one-level analyzer sees helper() as fact-free: clean.
+    let legacy = crate_of_with(
+        &[("rust/src/coordinator/stage.rs", a), ("rust/src/coordinator/helpers.rs", b)],
+        AnalysisOptions { lock_depth: Some(1) },
+    );
+    assert!(!rules_of(&legacy).contains(&"blocking-under-lock"), "{legacy:?}");
+}
+
+#[test]
+fn r9_charge_width_must_be_bucket_derived() {
+    let raw = "fn charge(&self, r: usize) {\n\
+               \x20   self.ledger.add(lowrank_attention_flops(self.seq, self.dim, r));\n\
+               }\n";
+    let v = analyze_source(Path::new("rust/src/coordinator/ledger.rs"), raw);
+    assert_eq!(rules_of(&v), ["charge-at-bucket"], "{v:?}");
+
+    let bucketed = raw.replace(", r));", ", self.ladder.rank_bucket(r)));");
+    assert!(analyze_source(Path::new("rust/src/coordinator/ledger.rs"), &bucketed).is_empty());
+}
+
+#[test]
+fn r10_reply_handles_resolve_before_early_exit() {
+    let leaky = "fn submit(&self, req: Req) -> Result<(), E> {\n\
+                 \x20   let reply = GenReply { slot: self.slot(), stream: None };\n\
+                 \x20   self.preflight()?;\n\
+                 \x20   self.send(Work::Generate(req, reply))\n\
+                 }\n";
+    let v = analyze_source(Path::new("rust/src/coordinator/submit.rs"), leaky);
+    assert_eq!(rules_of(&v), ["ticket-resolve"], "{v:?}");
+    assert_eq!(v[0].line, 3, "flag the early exit, not the binding");
+
+    let ordered = "fn submit(&self, req: Req) -> Result<(), E> {\n\
+                   \x20   self.preflight()?;\n\
+                   \x20   let reply = GenReply { slot: self.slot(), stream: None };\n\
+                   \x20   self.send(Work::Generate(req, reply))\n\
+                   }\n";
+    assert!(analyze_source(Path::new("rust/src/coordinator/submit.rs"), ordered).is_empty());
+}
+
+#[test]
+fn r11_suppressions_carry_rationales() {
+    let bare = "fn f(pool: &P, x: &Slot) {\n\
+                \x20   pool.execute(move || {\n\
+                \x20       // lint:allow(panic-in-worker)\n\
+                \x20       let v = x.take().unwrap();\n\
+                \x20   });\n\
+                }\n";
+    let v = analyze_source(Path::new("rust/src/coordinator/jobs.rs"), bare);
+    assert_eq!(rules_of(&v), ["allow-rationale"], "{v:?}");
+
+    let justified = bare.replace(
+        "// lint:allow(panic-in-worker)",
+        "// slot is filled by construction before dispatch.\n\
+         \x20       // lint:allow(panic-in-worker)",
+    );
+    assert!(analyze_source(Path::new("rust/src/coordinator/jobs.rs"), &justified).is_empty());
+}
+
+#[test]
+fn r12_spans_are_byte_accurate_across_rule_kinds() {
+    // One fixture per span shape: multi-token R1, path R2, single R3.
+    let src = "use std::sync::mpsc;\n\
+               fn f() {\n\
+               \x20   let g = state.lock().unwrap();\n\
+               \x20   let shard = s.shards.lock_unpoisoned();\n\
+               \x20   let t = Instant::now();\n\
+               }\n";
+    let v = analyze_source(Path::new("rust/src/coordinator/spans.rs"), src);
+    assert!(v.len() >= 3, "{v:?}");
+    assert!(!rules_of(&v).contains(&"span-fidelity"), "all spans faithful: {v:?}");
+    for viol in &v {
+        assert_eq!(
+            &src[viol.byte_start..viol.byte_end],
+            viol.snippet,
+            "span of {} must slice to its snippet",
+            viol.rule
+        );
+    }
+}
+
+#[test]
+fn findings_in_test_and_bench_trees_are_advisory() {
+    let src = "fn f() { let g = state.lock().unwrap(); }\n";
+    for path in ["rust/tests/fixture.rs", "rust/benches/fixture.rs", "examples/fixture.rs"] {
+        let v = analyze_source(Path::new(path), src);
+        assert_eq!(rules_of(&v), ["lock-unwrap"], "{path}: {v:?}");
+        assert_eq!(v[0].level, Level::Advisory, "{path}");
+    }
+    // The same finding in src is an error.
+    let v = analyze_source(Path::new("rust/src/coordinator/fixture.rs"), src);
+    assert_eq!(v[0].level, Level::Error);
 }
 
 // ---- bench-diff ----
