@@ -1,15 +1,25 @@
 //! Crate-wide call graph over the per-file structural models.
 //!
 //! Nodes are every non-test `fn` across the scanned files; edges are
-//! call sites resolved *by name* against those fns. Resolution is
-//! deliberately conservative (see [`crate::analysis::model::Receiver`]):
-//! only free/path calls (`helper(…)`, `Instant::now(…)`) and
-//! `self.method(…)` calls resolve — a call through any other receiver
-//! (`g.queue.len()`) is never matched, because token-level analysis
-//! cannot type-resolve what `g.queue` is. A name with several non-test
-//! definitions resolves to *all* of them (over-approximation: dataflow
-//! facts may be attributed to the wrong same-named fn, never silently
-//! dropped).
+//! call sites resolved against those fns two ways:
+//!
+//! * **by name** — free/path calls (`helper(…)`, `Instant::now(…)`)
+//!   and `self.method(…)` calls match any non-test fn with that name.
+//!   A name with several definitions resolves to *all* of them
+//!   (over-approximation: dataflow facts may be attributed to the wrong
+//!   same-named fn, never silently dropped);
+//! * **by receiver type** — when [`build_with`](CallGraph::build_with)
+//!   is given a [`crate::analysis::types`] map, a call through any
+//!   other receiver (`other.helper()`, `self.field.method()`,
+//!   `param.dispatch()`) resolves by typing the receiver chain and
+//!   looking the method up in that type's `impl` blocks. `self.m(…)`
+//!   also *narrows* to the enclosing impl's own `m` when it has one
+//!   (strictly fewer edges than name matching), falling back to name
+//!   resolution otherwise. An untypable receiver still produces no edge
+//!   — `g.queue.len()` must never alias some other type's `len` — so
+//!   the typed graph is a superset of the name-only graph on `Other`
+//!   edges and a subset on `SelfMethod` ones, both in the safe
+//!   direction for the rules that consume it.
 //!
 //! The graph is pure indices — `FnId = (file index, fn index)` into the
 //! model slice it was built from — so it borrows nothing and the
@@ -18,7 +28,8 @@
 
 use std::collections::BTreeMap;
 
-use super::model::FileModel;
+use super::model::{CallSite, FileModel, Receiver};
+use super::types::{resolve_receiver, FileTypes, TypeMap};
 
 /// A fn identified by (file index, fn index) within the model slice the
 /// graph was built from.
@@ -40,7 +51,7 @@ pub struct ResolvedCall {
     pub detached: bool,
 }
 
-/// Crate-wide call graph: non-test fns + name-resolved call edges.
+/// Crate-wide call graph: non-test fns + resolved call edges.
 pub struct CallGraph {
     /// Every non-test fn, in (file, fn) order.
     pub nodes: Vec<FnId>,
@@ -51,7 +62,18 @@ pub struct CallGraph {
 }
 
 impl CallGraph {
+    /// Name-only resolution (the pre-type-map graph, kept as the
+    /// regression contrast behind `AnalysisOptions::receiver_types`).
     pub fn build(models: &[&FileModel]) -> CallGraph {
+        CallGraph::build_with(models, None)
+    }
+
+    /// Build the graph, resolving non-`self` receivers through the type
+    /// map when one is supplied (`types[i]` must describe `models[i]`).
+    pub fn build_with(
+        models: &[&FileModel],
+        types: Option<(&[FileTypes], &TypeMap)>,
+    ) -> CallGraph {
         let mut nodes: Vec<FnId> = Vec::new();
         let mut fns_by_name: BTreeMap<String, Vec<FnId>> = BTreeMap::new();
         for (mi, m) in models.iter().enumerate() {
@@ -65,15 +87,14 @@ impl CallGraph {
         let mut calls_from: BTreeMap<FnId, Vec<ResolvedCall>> = BTreeMap::new();
         for (mi, m) in models.iter().enumerate() {
             for c in &m.calls {
-                if !c.resolvable() || m.in_test(c.tok) {
+                if m.in_test(c.tok) {
                     continue;
                 }
                 let Some(caller_idx) = innermost_fn(m, c.tok) else { continue };
                 if m.fns[caller_idx].is_test {
                     continue;
                 }
-                let Some(targets) = fns_by_name.get(&c.callee) else { continue };
-                for &callee in targets {
+                for callee in resolve_targets(m, c, mi, caller_idx, &fns_by_name, types) {
                     calls_from.entry((mi, caller_idx)).or_default().push(ResolvedCall {
                         caller: (mi, caller_idx),
                         callee,
@@ -86,6 +107,41 @@ impl CallGraph {
             }
         }
         CallGraph { nodes, fns_by_name, calls_from }
+    }
+}
+
+/// The fns a call site resolves to under the graph's resolution rules.
+fn resolve_targets(
+    m: &FileModel,
+    c: &CallSite,
+    mi: usize,
+    caller: usize,
+    fns_by_name: &BTreeMap<String, Vec<FnId>>,
+    types: Option<(&[FileTypes], &TypeMap)>,
+) -> Vec<FnId> {
+    match c.receiver {
+        Receiver::Free => fns_by_name.get(&c.callee).cloned().unwrap_or_default(),
+        Receiver::SelfMethod => {
+            // With a type map, `self.m()` narrows to the enclosing
+            // impl type's own `m` when that exists; name resolution
+            // stays the fallback (trait-provided methods, fns the
+            // harvester missed).
+            if let Some((fts, tm)) = types {
+                if let Some(ty) = fts[mi].impl_of.get(&caller) {
+                    if let Some(t) = tm.method_targets(ty, &c.callee) {
+                        return t.clone();
+                    }
+                }
+            }
+            fns_by_name.get(&c.callee).cloned().unwrap_or_default()
+        }
+        Receiver::Other => {
+            let Some((fts, tm)) = types else { return Vec::new() };
+            let Some(ty) = resolve_receiver(tm, &fts[mi], m, caller, &c.recv, c.tok) else {
+                return Vec::new();
+            };
+            tm.method_targets(&ty, &c.callee).cloned().unwrap_or_default()
+        }
     }
 }
 
@@ -105,6 +161,12 @@ mod tests {
 
     fn models(srcs: &[&str]) -> Vec<FileModel> {
         srcs.iter().map(|s| FileModel::build(s)).collect()
+    }
+
+    fn typed_graph(refs: &[&FileModel]) -> CallGraph {
+        let fts: Vec<FileTypes> = refs.iter().map(|m| FileTypes::build(m)).collect();
+        let tm = TypeMap::build(refs, &fts);
+        CallGraph::build_with(refs, Some((&fts, &tm)))
     }
 
     #[test]
@@ -148,5 +210,97 @@ mod tests {
         let edges = &g.calls_from[&(0, 0)];
         let h = edges.iter().find(|e| e.callee_name == "helper").unwrap();
         assert!(h.detached);
+    }
+
+    #[test]
+    fn let_bound_receiver_resolves_with_types_only() {
+        let ms = models(&[concat!(
+            "struct Helper;\n",
+            "impl Helper { fn go(&self) {} }\n",
+            "fn a() { let h = Helper::new(); h.go(); }\n",
+        )]);
+        let refs: Vec<&FileModel> = ms.iter().collect();
+        let name_only = CallGraph::build(&refs);
+        assert!(
+            !name_only.calls_from.values().flatten().any(|e| e.callee_name == "go"),
+            "name-only resolution must not see through `h.go()`"
+        );
+        let typed = typed_graph(&refs);
+        let go = typed
+            .calls_from
+            .values()
+            .flatten()
+            .find(|e| e.callee_name == "go")
+            .expect("typed resolution finds h.go()");
+        assert_eq!(refs[go.callee.0].fns[go.callee.1].name, "go");
+    }
+
+    #[test]
+    fn field_receiver_resolves_through_struct_types() {
+        let ms = models(&[
+            concat!(
+                "struct Ctl { inner: Arc<State> }\n",
+                "impl Ctl { fn drive(&self) { self.inner.step(); } }\n",
+            ),
+            "struct State;\nimpl State { fn step(&self) {} }\n",
+        ]);
+        let refs: Vec<&FileModel> = ms.iter().collect();
+        let typed = typed_graph(&refs);
+        let step = typed
+            .calls_from
+            .values()
+            .flatten()
+            .find(|e| e.callee_name == "step")
+            .expect("typed resolution finds self.inner.step()");
+        assert_eq!(step.callee.0, 1, "edge crosses into the State file");
+    }
+
+    #[test]
+    fn param_receiver_resolves_through_annotations() {
+        let ms = models(&[concat!(
+            "struct Worker;\n",
+            "impl Worker { fn dispatch(&self) {} }\n",
+            "fn drive(w: &Worker) { w.dispatch(); }\n",
+        )]);
+        let refs: Vec<&FileModel> = ms.iter().collect();
+        let typed = typed_graph(&refs);
+        assert!(typed.calls_from.values().flatten().any(|e| e.callee_name == "dispatch"));
+    }
+
+    #[test]
+    fn self_calls_narrow_to_the_enclosing_impl() {
+        // Two types both define `tick`; `self.tick()` inside `A` must
+        // resolve only to A's tick, not B's same-named one.
+        let ms = models(&[concat!(
+            "struct A; struct B;\n",
+            "impl A { fn run(&self) { self.tick(); } fn tick(&self) {} }\n",
+            "impl B { fn tick(&self) {} }\n",
+        )]);
+        let refs: Vec<&FileModel> = ms.iter().collect();
+        let typed = typed_graph(&refs);
+        let ticks: Vec<_> =
+            typed.calls_from.values().flatten().filter(|e| e.callee_name == "tick").collect();
+        assert_eq!(ticks.len(), 1);
+        let a_tick =
+            refs[0].fns.iter().position(|f| f.name == "tick" && f.line == 2).unwrap();
+        assert_eq!(ticks[0].callee, (0, a_tick));
+        // Name-only resolution over-approximates to both.
+        let name_only = CallGraph::build(&refs);
+        let loose =
+            name_only.calls_from.values().flatten().filter(|e| e.callee_name == "tick").count();
+        assert_eq!(loose, 2);
+    }
+
+    #[test]
+    fn untyped_receivers_still_produce_no_edge() {
+        let ms = models(&[
+            "fn a() { let x = make(); x.go(); }\nfn make() {}\nfn go(&self) {}",
+        ]);
+        let refs: Vec<&FileModel> = ms.iter().collect();
+        let typed = typed_graph(&refs);
+        assert!(
+            !typed.calls_from.values().flatten().any(|e| e.callee_name == "go"),
+            "method-call initializers stay untyped — no edge, not a wrong edge"
+        );
     }
 }

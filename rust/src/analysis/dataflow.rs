@@ -24,6 +24,15 @@
 //! monotone (it terminates even on recursive call graphs) and keeps
 //! the recorded chain the *shortest* one found, since facts arriving
 //! in earlier rounds win.
+//!
+//! Two fact kinds ride this engine today: lock-set / blocking facts
+//! (R4, R8 — keyed by lock or blocking ident, run over the full
+//! graph) and determinism-taint facts (R13, R14 — keyed by source
+//! kind, run over a restricted copy of the graph that keeps only
+//! unambiguous call edges out of value-returning fns; see
+//! `rules::r13_r14_nondet_taint` for why value taint is stricter than
+//! side-effect reachability). The engine itself is identical for both;
+//! only the seeding and the consuming graph differ.
 
 use std::collections::BTreeMap;
 

@@ -5,7 +5,7 @@
 //! dynamically checks that paired execution paths are bit-identical
 //! (see [`crate::conformance`]), and `drrl lint` statically checks the
 //! source-level contracts the fuzzer relies on. This module is the
-//! static half — a five-layer pipeline, all in-tree (no proc-macro or
+//! static half — a six-layer pipeline, all in-tree (no proc-macro or
 //! syn dependency; the container is offline):
 //!
 //! 1. **[`lexer`]** — a small Rust lexer producing a token stream
@@ -25,26 +25,38 @@
 //!    live inside them; scoped `scoped_for`/`scoped_map`/`chunked_for`
 //!    bodies block the caller, so they are).
 //!
-//! 3. **[`callgraph`]** — one crate-wide call graph over every file's
-//!    model: nodes are non-test fns, edges are conservatively
-//!    name-resolved call sites (free/path calls and `self.` calls
-//!    only; arbitrary receivers never resolve).
+//! 3. **[`types`]** — a local type map per file plus a crate-wide
+//!    method index: struct fields, `impl` blocks, `let` bindings with
+//!    resolvable initializers (`T::new(..)`-style constructor paths),
+//!    and annotated fn params, with `Arc`/`Rc`/`Box` wrappers peeled.
+//!    Resolution is deliberately partial — an initializer it cannot
+//!    type stays untyped rather than guessed.
 //!
-//! 4. **[`dataflow`]** — rule-agnostic fixed-point fact propagation
+//! 4. **[`callgraph`]** — one crate-wide call graph over every file's
+//!    model: nodes are non-test fns; free/path calls and `self.` calls
+//!    resolve by name, and with the type map every other receiver
+//!    (`other.helper()`, `self.field.method()`, `param.dispatch()`)
+//!    resolves by typing its receiver chain — an untypable receiver
+//!    still produces no edge, never a guessed one. `self.m()` also
+//!    narrows to the enclosing impl's own `m` when it has one.
+//!
+//! 5. **[`dataflow`]** — rule-agnostic fixed-point fact propagation
 //!    over that graph. Rules seed each fn with its direct facts (locks
-//!    acquired, blocking ops performed) and get back summaries whose
-//!    facts carry the full call chain to their origin, so diagnostics
-//!    print `h1() at file:12 -> h2() at file:40 -> beta acquired at
-//!    file:77` instead of a bare name. The PR 8 analyzer propagated
-//!    exactly one call level; the fixed point closes the transitive
-//!    gap (and `AnalysisOptions { lock_depth: Some(1) }` reproduces
-//!    the old behavior for regression contrast).
+//!    acquired, blocking ops performed, nondeterminism exposed) and
+//!    get back summaries whose facts carry the full call chain to
+//!    their origin, so diagnostics print `h1() at file:12 -> h2() at
+//!    file:40 -> beta acquired at file:77` instead of a bare name. The
+//!    PR 8 analyzer propagated exactly one call level; the fixed point
+//!    closes the transitive gap (and `AnalysisOptions { lock_depth:
+//!    Some(1) }` reproduces the old behavior for regression contrast).
 //!
-//! 5. **[`rules`]** — the twelve rules R1–R12 matched over the model
+//! 6. **[`rules`]** — the fourteen rules R1–R14 matched over the model
 //!    and the summaries (see [`rules::RULES`] for the catalogue and
 //!    CONFORMANCE.md § "Static rules" for the contracts). R4
-//!    (lock-order) and R8 (blocking-under-lock) are interprocedural;
-//!    R12 re-verifies every emitted span byte-for-byte.
+//!    (lock-order) and R8 (blocking-under-lock) propagate lock-set
+//!    facts; R13 (nondet-partition) and R14 (nondet-decide) propagate
+//!    determinism-taint facts over a value-restricted copy of the
+//!    graph; R12 re-verifies every emitted span byte-for-byte.
 //!
 //! [`run_lint_report`] walks `rust/src/`, `rust/tests/`,
 //! `rust/benches/` and `examples/` (whichever exist) and analyzes them
@@ -75,6 +87,7 @@ pub mod lexer;
 pub mod model;
 pub mod rules;
 pub mod sarif;
+pub mod types;
 
 pub use rules::{
     analyze_crate, analyze_crate_with, analyze_source, verify_spans, AnalysisOptions, FileKind,
@@ -186,7 +199,8 @@ pub fn run_lint(root: &Path) -> Result<Vec<LintViolation>, String> {
 ///   "advisories": 2,
 ///   "wall_ms": 84,
 ///   "cases": [{"name": "drrl-lint", "ns_per_iter": 84000000.0}],
-///   "rules": [{"name": "lock-order", "contract": "…"}, …],
+///   "rules": [{"name": "lock-order", "contract": "…",
+///              "example": "…", "suppression": "…"}, …],
 ///   "violations": [{"file": "…", "line": 12, "col": 9, "byte_start": 188,
 ///                   "byte_end": 203, "snippet": "…", "rule": "…",
 ///                   "level": "error", "text": "…"}, …]
@@ -204,6 +218,8 @@ pub fn report_json(report: &LintReport) -> Json {
             obj(vec![
                 ("name", Json::Str(r.name.to_string())),
                 ("contract", Json::Str(r.contract.to_string())),
+                ("example", Json::Str(r.example.to_string())),
+                ("suppression", Json::Str(r.suppression.to_string())),
             ])
         })
         .collect();
@@ -287,6 +303,8 @@ pub fn validate_report(v: &Json) -> Result<(), String> {
     for r in rules {
         r.get("name").and_then(Json::as_str).ok_or("rule missing name")?;
         r.get("contract").and_then(Json::as_str).ok_or("rule missing contract")?;
+        r.get("example").and_then(Json::as_str).ok_or("rule missing example")?;
+        r.get("suppression").and_then(Json::as_str).ok_or("rule missing suppression")?;
     }
     let violations = v.get("violations").and_then(Json::as_arr).ok_or("missing violations")?;
     let mut err_count = 0usize;

@@ -34,6 +34,9 @@ use super::lexer::{lex, Lexed, TokKind};
 pub struct FnInfo {
     pub name: String,
     pub line: usize,
+    /// Token index of the `fn` keyword (the signature — param types —
+    /// sits between here and `open`).
+    pub sig: usize,
     /// Token index of the body's open brace.
     pub open: usize,
     /// Token index of the matching close brace.
@@ -82,6 +85,10 @@ pub struct CallSite {
     pub tok: usize,
     pub line: usize,
     pub receiver: Receiver,
+    /// For method calls: the receiver chain in source order
+    /// (`self.inner.step()` → `["self", "inner"]`), empty for `Free`.
+    /// The type map resolves `Other` receivers through this chain.
+    pub recv: Vec<String>,
     /// True when the call sits inside a detached (`execute`/`spawn`)
     /// closure: it runs on another thread, so it must not contribute to
     /// the enclosing fn's propagated summaries.
@@ -334,6 +341,7 @@ fn find_fns(lx: &Lexed, close_of: &[Option<usize>], test_mask: &[bool]) -> Vec<F
                 fns.push(FnInfo {
                     name: name.to_string(),
                     line: lx.tokens[i + 1].line,
+                    sig: i,
                     open,
                     close,
                     is_test: test_mask.get(i).copied().unwrap_or(false),
@@ -588,14 +596,15 @@ fn find_calls(lx: &Lexed, detached_regions: &[Region]) -> Vec<CallSite> {
         if i >= 1 && lx.ident(i - 1) == Some("fn") {
             continue;
         }
-        let receiver = if i >= 1 && lx.punct(i - 1, '.') {
-            if receiver_path(lx, i - 1) == ["self"] {
-                Receiver::SelfMethod
+        let (receiver, recv) = if i >= 1 && lx.punct(i - 1, '.') {
+            let path = receiver_path(lx, i - 1);
+            if path == ["self"] {
+                (Receiver::SelfMethod, path)
             } else {
-                Receiver::Other
+                (Receiver::Other, path)
             }
         } else {
-            Receiver::Free
+            (Receiver::Free, Vec::new())
         };
         let detached = detached_regions.iter().any(|&(s, e)| s <= i && i <= e);
         out.push(CallSite {
@@ -603,6 +612,7 @@ fn find_calls(lx: &Lexed, detached_regions: &[Region]) -> Vec<CallSite> {
             tok: i,
             line: lx.tokens[i].line,
             receiver,
+            recv,
             detached,
         });
     }

@@ -1,5 +1,5 @@
-//! The twelve static rules, matched over the structural model and the
-//! crate-wide dataflow summaries.
+//! The fourteen static rules, matched over the structural model and
+//! the crate-wide dataflow summaries.
 //!
 //! | Rule | Contract |
 //! |---|---|
@@ -15,6 +15,8 @@
 //! | R10 `ticket-resolve` | a fn that binds a reply handle must resolve or move it before any `?` / `return` early exit |
 //! | R11 `allow-rationale` | every `lint:allow(<rule>)` marker carries a non-empty rationale in its comment block |
 //! | R12 `span-fidelity` | every diagnostic span is byte-accurate (engine self-check via [`verify_spans`]) |
+//! | R13 `nondet-partition` | no nondeterministic value (wall clock, pool size/worker index, unordered iteration, racing channel receive) may shape chunk-partition arithmetic or a scoped dispatch wave in `coordinator/`, `linalg/`, `conformance/` |
+//! | R14 `nondet-decide` | no nondeterministic value may flow into a `decide_step(..)` argument, crate-wide |
 //!
 //! Severity: findings in `rust/src/` are [`Level::Error`]; findings in
 //! test, bench and example files are [`Level::Advisory`], as are R6
@@ -25,17 +27,27 @@
 //! comment on the flagged line or in the contiguous comment block
 //! directly above it; R11 polices the markers themselves.
 //!
-//! The interprocedural rules (R4, R8) seed per-fn facts from each
-//! file's structural model and run
+//! The interprocedural rules (R4, R8, R13, R14) seed per-fn facts from
+//! each file's structural model and run
 //! [`dataflow::propagate`](super::dataflow::propagate) over the
 //! [`CallGraph`] to a fixed point ([`AnalysisOptions::lock_depth`]
 //! caps the depth; `Some(1)` reproduces the PR 8 one-level analyzer
 //! for regression tests). Diagnostics from propagated facts print the
 //! complete call chain with file:line spans.
+//!
+//! By default the call graph is built with type-aware receiver
+//! resolution ([`AnalysisOptions::receiver_types`]): non-`self`
+//! receivers (`other.helper()`, `self.field.method()`,
+//! `param.dispatch()`) resolve through the
+//! [`types`](super::types) map, so lock-set and taint facts flow
+//! through edges the name-only PR 9 graph could not see. Setting the
+//! flag to `false` restores the name-only graph — the regression
+//! fixtures use the contrast to prove the added recall.
 
 use super::callgraph::{innermost_fn, CallGraph};
 use super::dataflow::{propagate, seed, Fact, FactMap};
-use super::model::{receiver_path, FileModel};
+use super::model::{receiver_path, FileModel, FnInfo, SCOPED_CLOSURE_METHODS};
+use super::types::{FileTypes, TypeMap};
 use std::collections::{BTreeMap, BTreeSet};
 use std::fmt;
 use std::path::{Path, PathBuf};
@@ -133,87 +145,157 @@ impl fmt::Display for LintViolation {
     }
 }
 
-/// Catalogue entry for one rule (drives `--json` output and docs).
+/// Catalogue entry for one rule. One table drives the `--json` rule
+/// list, the SARIF `rules` metadata, and `drrl lint --explain <rule>`,
+/// so the three renderings cannot drift.
 #[derive(Debug, Clone, Copy)]
 pub struct RuleInfo {
     pub name: &'static str,
     pub contract: &'static str,
+    /// A minimal violating snippet (shown by `--explain` and as the
+    /// SARIF `fullDescription`).
+    pub example: &'static str,
+    /// How to suppress a justified exception (shown by `--explain` and
+    /// as the SARIF `help` text). Every marker needs an R11 rationale.
+    pub suppression: &'static str,
 }
 
-/// The rule catalogue, R1–R12 in order.
-pub const RULES: [RuleInfo; 12] = [
+/// The rule catalogue, R1–R14 in order.
+pub const RULES: [RuleInfo; 14] = [
     RuleInfo {
         name: "lock-unwrap",
         contract: "no poisoning .lock()/.read()/.write()/.wait(..) unwrap/expect on sync \
                    primitives; shed poison via util::sync::{LockExt, CondvarExt}",
+        example: "let g = self.state.lock().unwrap();",
+        suppression: "// <why poisoning is acceptable here>. lint:allow(lock-unwrap)",
     },
     RuleInfo {
         name: "instant-in-decide",
         contract: "no Instant::now() in decide-critical sections (rank_controller.rs, or \
                    while a shard-lock guard is live anywhere in the crate)",
+        example: "let t0 = Instant::now(); // inside rank_controller.rs",
+        suppression: "// <why this read cannot reach a decision>. \
+                      lint:allow(instant-in-decide)",
     },
     RuleInfo {
         name: "raw-mpsc",
         contract: "no std::sync::mpsc outside coordinator/completion.rs; annotated \
                    exceptions only",
+        example: "use std::sync::mpsc; // outside coordinator/completion.rs",
+        suppression: "// <why completion.rs cannot own this channel>. lint:allow(raw-mpsc)",
     },
     RuleInfo {
         name: "lock-order",
         contract: "the crate-wide lock acquisition graph (lock B taken while guard A is \
                    live, propagated to a fixed point over the call graph) must have no \
                    cycles",
+        example: "fn a() { let g = x.lock(); y.lock(); } fn b() { let g = y.lock(); \
+                  x.lock(); }",
+        suppression: "// <why these orders cannot interleave>. lint:allow(lock-order) — \
+                      prefer fixing the order",
     },
     RuleInfo {
         name: "nondet-iter",
         contract: "no HashMap/HashSet iteration inside bit-identity-critical modules \
                    (coordinator/, linalg/, conformance/)",
+        example: "for (k, v) in map.iter() { merge(k, v); } // map: HashMap, in linalg/",
+        suppression: "// <why order cannot reach an output>. lint:allow(nondet-iter) — \
+                      or switch to BTreeMap",
     },
     RuleInfo {
         name: "panic-in-worker",
         contract: "no unwrap()/expect(..)/panic! inside thread-pool closures or worker \
                    loops (advisory in test code)",
+        example: "pool.execute(move || { job.run().unwrap(); });",
+        suppression: "// <why a poisoned worker is preferable>. lint:allow(panic-in-worker)",
     },
     RuleInfo {
         name: "pool-shape-partition",
         contract: "no pool-size/thread-count reads inside linalg/; chunk partitions are \
                    pure functions of problem shape",
+        example: "let chunk = rows.len() / pool.size(); // inside linalg/",
+        suppression: "// <why the result stays shape-pure>. lint:allow(pool-shape-partition)",
     },
     RuleInfo {
         name: "blocking-under-lock",
         contract: "no blocking operation (condvar/ticket wait, channel recv, sleep, pool \
                    dispatch, blocking IO) reachable while a shard-lock guard is live, \
                    through any depth of resolved calls",
+        example: "let g = shard.lock_unpoisoned(); rx.recv(); // or any call that recvs",
+        suppression: "// <why the wait cannot deadlock the shard>. \
+                      lint:allow(blocking-under-lock)",
     },
     RuleInfo {
         name: "charge-at-bucket",
         contract: "every FLOPs-ledger charge site derives its width argument from \
                    rank_bucket(..), never from a raw rank",
+        example: "ledger.charge_probe(rank, seq); // rank not derived from rank_bucket(..)",
+        suppression: "// <why this width is already bucketed>. lint:allow(charge-at-bucket)",
     },
     RuleInfo {
         name: "ticket-resolve",
         contract: "a fn that binds a reply handle resolves or moves it before any ?/return \
                    early exit, so ticket outcomes stay explicit on every path",
+        example: "let ticket = queue.submit(job); let cfg = load()?; ticket.resolve(cfg);",
+        suppression: "// <who resolves the ticket on the early path>. \
+                      lint:allow(ticket-resolve)",
     },
     RuleInfo {
         name: "allow-rationale",
         contract: "every lint:allow(<rule>) marker carries a non-empty rationale in its \
                    comment block",
+        example: "// lint:allow(nondet-iter)  <- marker with no stated reason",
+        suppression: "not suppressible — write the rationale instead",
     },
     RuleInfo {
         name: "span-fidelity",
         contract: "every diagnostic carries a byte-accurate span (snippet, line and col \
                    agree with the source bytes); self-check emitted by the engine",
+        example: "an emitted finding whose snippet != source[byte_start..byte_end]",
+        suppression: "not suppressible — an R12 finding is an analyzer bug; file it",
+    },
+    RuleInfo {
+        name: "nondet-partition",
+        contract: "no nondeterministic value (wall clock, pool size/worker index, \
+                   HashMap/HashSet iteration, racing channel receive) may shape \
+                   chunk-partition arithmetic or a scoped dispatch wave in coordinator/, \
+                   linalg/ or conformance/ — partitions are pure functions of problem \
+                   shape",
+        example: "let lanes = pool.size(); for w in work.chunks(lanes) { .. }",
+        suppression: "// <why the partition stays bit-identical across pool shapes>. \
+                      lint:allow(nondet-partition)",
+    },
+    RuleInfo {
+        name: "nondet-decide",
+        contract: "no nondeterministic value (wall clock, pool size/worker index, \
+                   HashMap/HashSet iteration, racing channel receive) may flow into a \
+                   decide_step(..) argument — rank decisions must replay bit-identically \
+                   across worker counts and schedules",
+        example: "let budget = t0.elapsed(); ctl.decide_step(ctx, budget);",
+        suppression: "// <why the input cannot alter the decision>. \
+                      lint:allow(nondet-decide)",
     },
 ];
 
 /// Knobs for [`analyze_crate_with`].
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy)]
 pub struct AnalysisOptions {
     /// How many call hops a lock/blocking fact may travel: `None`
     /// (default) runs the dataflow engine to a fixed point; `Some(1)`
     /// reproduces the PR 8 one-level analyzer (regression tests use it
     /// to prove what the old analyzer missed).
     pub lock_depth: Option<usize>,
+    /// Resolve non-`self` receivers through the type map (default).
+    /// `false` restores the PR 9 name-only call graph; the planted
+    /// cross-receiver fixtures use the contrast to prove the typed
+    /// graph's added recall.
+    pub receiver_types: bool,
+}
+
+impl Default for AnalysisOptions {
+    fn default() -> AnalysisOptions {
+        AnalysisOptions { lock_depth: None, receiver_types: true }
+    }
 }
 
 /// Analysis context for one file.
@@ -382,12 +464,18 @@ pub fn analyze_crate(files: &[(PathBuf, String)]) -> Vec<LintViolation> {
 }
 
 /// Analyze a set of files as one crate: every file-local rule per file,
-/// plus the interprocedural rules (R4, R8) over the crate call graph,
-/// plus the R12 span self-check over everything emitted.
+/// plus the interprocedural rules (R4, R8, R13, R14) over the crate
+/// call graph, plus the R12 span self-check over everything emitted.
 pub fn analyze_crate_with(files: &[(PathBuf, String)], opts: AnalysisOptions) -> Vec<LintViolation> {
     let ctxs: Vec<Ctx> = files.iter().map(|(p, s)| Ctx::new(p.clone(), s)).collect();
     let models: Vec<&FileModel> = ctxs.iter().map(|c| &c.model).collect();
-    let graph = CallGraph::build(&models);
+    let graph = if opts.receiver_types {
+        let types: Vec<FileTypes> = models.iter().map(|m| FileTypes::build(m)).collect();
+        let type_map = TypeMap::build(&models, &types);
+        CallGraph::build_with(&models, Some((&types, &type_map)))
+    } else {
+        CallGraph::build(&models)
+    };
     let mut out = Vec::new();
     for ctx in &ctxs {
         r1_lock_unwrap(ctx, &mut out);
@@ -402,6 +490,7 @@ pub fn analyze_crate_with(files: &[(PathBuf, String)], opts: AnalysisOptions) ->
     }
     r4_lock_order(&ctxs, &graph, opts, &mut out);
     r8_blocking_under_lock(&ctxs, &graph, opts, &mut out);
+    r13_r14_nondet_taint(&ctxs, &graph, opts, &mut out);
     let fidelity = verify_spans(files, &out);
     out.extend(fidelity);
     out.sort_by(|a, b| (&a.file, a.line, a.col, a.rule).cmp(&(&b.file, b.line, b.col, b.rule)));
@@ -624,32 +713,40 @@ fn r4_lock_order(ctxs: &[Ctx], graph: &CallGraph, opts: AnalysisOptions, out: &m
             }
         }
         // Propagated edges: resolved call made under a live guard whose
-        // transitive summary acquires. Resolution is conservative — see
-        // `CallSite::resolvable` (free/path calls and `self.` methods).
-        for c in &m.calls {
-            if !c.resolvable() || m.in_test(c.tok) || ctx.allowed(c.line, "lock-order", &[]) {
+        // transitive summary acquires. The graph's edges carry the
+        // resolution (name-matched free/`self.` calls, plus typed
+        // receivers when `opts.receiver_types` is on), so iterating
+        // them — instead of re-resolving `m.calls` by name — lets lock
+        // facts flow through `other.helper()`-shaped calls too.
+        // One edge per (call site, lock key) regardless of how many
+        // same-named targets the site resolved to.
+        let mut seen_keys: BTreeSet<(usize, String)> = BTreeSet::new();
+        for (&(emi, _efi), ecalls) in &graph.calls_from {
+            if emi != ci {
                 continue;
             }
-            let held = m.live_guards_at(c.tok);
-            if held.is_empty() {
-                continue;
-            }
-            let Some(targets) = graph.fns_by_name.get(&c.callee) else { continue };
-            let mut seen_keys: BTreeSet<&str> = BTreeSet::new();
-            for t in targets {
-                let Some(facts) = summaries.get(t) else { continue };
+            for rc in ecalls {
+                if ctx.allowed(rc.line, "lock-order", &[]) {
+                    continue;
+                }
+                let held = m.live_guards_at(rc.tok);
+                if held.is_empty() {
+                    continue;
+                }
+                let Some(facts) = summaries.get(&rc.callee) else { continue };
                 for f in facts.values() {
-                    if !seen_keys.insert(f.key.as_str()) {
+                    if !seen_keys.insert((rc.tok, f.key.clone())) {
                         continue;
                     }
-                    let via = render_chain(&c.callee, f, &format!("{} acquired", f.key), ctxs);
+                    let via =
+                        render_chain(&rc.callee_name, f, &format!("{} acquired", f.key), ctxs);
                     for g in &held {
                         edges.push(LockEdge {
                             from: g.name.clone(),
                             to: f.key.clone(),
                             ci,
-                            tok: c.tok,
-                            line: c.line,
+                            tok: rc.tok,
+                            line: rc.line,
                             via: Some(via.clone()),
                         });
                     }
@@ -754,19 +851,13 @@ const ITER_METHODS: [&str; 10] = [
     "into_keys", "into_values",
 ];
 
-/// R5 — unordered-container iteration in bit-identity-critical modules.
-fn r5_nondet_iter(ctx: &Ctx, out: &mut Vec<LintViolation>) {
-    if !(ctx.in_module("coordinator") || ctx.in_module("linalg") || ctx.in_module("conformance")) {
-        return;
-    }
-    let m = &ctx.model;
+/// Names bound to `HashMap`/`HashSet` in this file: `name: HashMap<…>`
+/// (let ascription or struct field) and `let name = HashMap::…`.
+/// Shared by R5 (iteration bans) and the R13/R14 taint sources.
+fn unordered_names(m: &FileModel) -> BTreeSet<String> {
     let lx = &m.lexed;
-    let n = lx.tokens.len();
-
-    // Names bound to HashMap/HashSet in this file: `name: HashMap<…>`
-    // (let ascription or struct field) and `let name = HashMap::…`.
     let mut unordered: BTreeSet<String> = BTreeSet::new();
-    for i in 0..n {
+    for i in 0..lx.tokens.len() {
         let Some(ty) = lx.ident(i) else { continue };
         if ty != "HashMap" && ty != "HashSet" {
             continue;
@@ -782,6 +873,19 @@ fn r5_nondet_iter(ctx: &Ctx, out: &mut Vec<LintViolation>) {
             }
         }
     }
+    unordered
+}
+
+/// R5 — unordered-container iteration in bit-identity-critical modules.
+fn r5_nondet_iter(ctx: &Ctx, out: &mut Vec<LintViolation>) {
+    if !(ctx.in_module("coordinator") || ctx.in_module("linalg") || ctx.in_module("conformance")) {
+        return;
+    }
+    let m = &ctx.model;
+    let lx = &m.lexed;
+    let n = lx.tokens.len();
+
+    let unordered = unordered_names(m);
     if unordered.is_empty() {
         return;
     }
@@ -987,42 +1091,468 @@ fn r8_blocking_under_lock(
     }
     let summaries = propagate(graph, &seeds, opts.lock_depth);
     // Transitive sites: a resolved call under a live shard guard whose
-    // callee summary contains a blocking fact.
-    for ctx in ctxs {
+    // callee summary contains a blocking fact. The graph's edges carry
+    // the resolution (including typed non-`self` receivers), so the
+    // facts reach sites like `other.helper()` too.
+    for (ci, ctx) in ctxs.iter().enumerate() {
         if ctx.kind != FileKind::Src {
             continue;
         }
         let m = &ctx.model;
         let mut flagged: BTreeSet<(usize, String)> = BTreeSet::new();
-        for c in &m.calls {
-            if !c.resolvable() || m.in_test(c.tok) || !shard_guard_live(m, c.tok) {
+        for (&(emi, _efi), ecalls) in &graph.calls_from {
+            if emi != ci {
                 continue;
             }
-            if ctx.allowed(c.line, "blocking-under-lock", &[]) {
-                continue;
-            }
-            let Some(targets) = graph.fns_by_name.get(&c.callee) else { continue };
-            for t in targets {
-                let Some(facts) = summaries.get(t) else { continue };
+            for rc in ecalls {
+                if !shard_guard_live(m, rc.tok)
+                    || ctx.allowed(rc.line, "blocking-under-lock", &[])
+                {
+                    continue;
+                }
+                let Some(facts) = summaries.get(&rc.callee) else { continue };
                 for f in facts.values() {
-                    if !flagged.insert((c.line, f.key.clone())) {
+                    if !flagged.insert((rc.line, f.key.clone())) {
                         continue;
                     }
                     let text = format!(
                         "blocking `{}(..)` reachable while a shard guard is live: {}",
                         f.key,
-                        render_chain(&c.callee, f, &format!("{} blocks", f.key), ctxs)
+                        render_chain(&rc.callee_name, f, &format!("{} blocks", f.key), ctxs)
                     );
                     ctx.push_span(
                         out,
-                        c.tok,
-                        c.tok,
+                        rc.tok,
+                        rc.tok,
                         "blocking-under-lock",
                         ctx.base_level(),
                         text,
                         None,
                     );
                 }
+            }
+        }
+    }
+}
+
+/// Worker-identity idents: reading *which* worker you are is as
+/// nondeterministic as reading how many there are.
+const WORKER_IDENT_IDENTS: [&str; 2] = ["worker_index", "worker_id"];
+
+/// Channel receives that race: which message lands inside the window
+/// depends on thread scheduling. Plain `recv()` is deliberately absent
+/// — a single-consumer FIFO receive is ordered.
+const RACING_RECV_METHODS: [&str; 3] = ["try_recv", "recv_timeout", "recv_deadline"];
+
+/// Callees whose arguments carve chunk boundaries or partition a
+/// dispatch wave (the R13 sinks).
+const PARTITION_CALLEES: [&str; 5] =
+    ["div_ceil", "split_at", "split_at_mut", "chunks", "chunks_exact"];
+
+fn is_partition_callee(name: &str) -> bool {
+    PARTITION_CALLEES.contains(&name)
+        || name.contains("chunk")
+        || name.contains("partition")
+        || SCOPED_CLOSURE_METHODS.contains(&name)
+}
+
+/// Is token `i` a nondeterministic source? Returns the source kind.
+///
+/// * `wall-clock` — `Instant::now()`, `.elapsed()`;
+/// * `pool-shape` — pool-size / thread-count / worker-identity reads
+///   (the same surface R7 bans inside `linalg/`, here tracked as a
+///   taint source crate-wide);
+/// * `unordered-iter` — `ITER_METHODS` on a name bound to
+///   `HashMap`/`HashSet` (shared harvest with R5);
+/// * `channel-race` — `try_recv`/`recv_timeout`/`recv_deadline`.
+fn taint_source_at(
+    m: &FileModel,
+    unordered: &BTreeSet<String>,
+    i: usize,
+) -> Option<&'static str> {
+    let lx = &m.lexed;
+    if is_instant_now(m, i) {
+        return Some("wall-clock");
+    }
+    let name = lx.ident(i)?;
+    if name == "elapsed" && i >= 1 && lx.punct(i - 1, '.') && lx.punct(i + 1, '(') {
+        return Some("wall-clock");
+    }
+    if POOL_SIZE_IDENTS.contains(&name) || WORKER_IDENT_IDENTS.contains(&name) {
+        return Some("pool-shape");
+    }
+    if name == "size"
+        && i >= 1
+        && lx.punct(i - 1, '.')
+        && lx.punct(i + 1, '(')
+        && lx.punct(i + 2, ')')
+        && receiver_path(lx, i - 1).iter().any(|p| p.to_lowercase().contains("pool"))
+    {
+        return Some("pool-shape");
+    }
+    if RACING_RECV_METHODS.contains(&name) && lx.punct(i + 1, '(') {
+        return Some("channel-race");
+    }
+    if ITER_METHODS.contains(&name) && i >= 2 && lx.punct(i - 1, '.') && lx.punct(i + 1, '(') {
+        if let Some(head) = lx.ident(i - 2) {
+            if unordered.contains(head) {
+                return Some("unordered-iter");
+            }
+        }
+    }
+    None
+}
+
+/// Does `f`'s signature declare a return type? Scans from the close of
+/// its parameter list to the body brace for a `->` (a `Fn() -> _` bound
+/// in a where clause over-approximates — harmless, it only widens which
+/// fns *may* export taint).
+fn fn_has_return(m: &FileModel, f: &FnInfo) -> bool {
+    let lx = &m.lexed;
+    let mut j = f.sig + 2;
+    if lx.punct(j, '<') {
+        let mut depth = 0i64;
+        while j < f.open {
+            if lx.punct(j, '<') {
+                depth += 1;
+            } else if lx.punct(j, '>') && !lx.punct(j - 1, '-') {
+                depth -= 1;
+                if depth == 0 {
+                    j += 1;
+                    break;
+                }
+            }
+            j += 1;
+        }
+    }
+    if !lx.punct(j, '(') {
+        return false;
+    }
+    let Some(close) = matching_paren(m, j) else { return false };
+    (close + 1..f.open).any(|k| lx.punct(k, '-') && lx.punct(k + 1, '>'))
+}
+
+/// One tainted let-binding: where the nondeterminism came from,
+/// rendered for the finding text (`wall-clock source \`elapsed\` at
+/// pipeline.rs:31`, or a propagated call chain).
+#[derive(Debug, Clone)]
+struct Taint {
+    origin: String,
+}
+
+/// Why an initializer token range is tainted, if it is.
+fn init_taint(
+    ctx: &Ctx,
+    lo: usize,
+    hi: usize,
+    unordered: &BTreeSet<String>,
+    taints: &BTreeMap<String, Taint>,
+    by_tok: &BTreeMap<usize, Vec<(String, Fact)>>,
+    ctxs: &[Ctx],
+) -> Option<Taint> {
+    let m = &ctx.model;
+    let lx = &m.lexed;
+    for j in lo..hi {
+        if let Some(kind) = taint_source_at(m, unordered, j) {
+            return Some(Taint {
+                origin: format!(
+                    "{kind} source `{}` at {}:{}",
+                    lx.tokens[j].text,
+                    ctx.file_name(),
+                    lx.tokens[j].line
+                ),
+            });
+        }
+        if let Some(id) = lx.ident(j) {
+            if let Some(t) = taints.get(id) {
+                return Some(t.clone());
+            }
+        }
+        if let Some(hits) = by_tok.get(&j) {
+            let (callee, fact) = &hits[0];
+            return Some(Taint {
+                origin: render_chain(callee, fact, &format!("{} source", fact.key), ctxs),
+            });
+        }
+    }
+    None
+}
+
+/// The tainted let-bindings of `f`'s body, to a local fixed point.
+///
+/// Taint enters through a source token, an already-tainted name, or a
+/// call whose resolved callee's summary exports taint; it propagates
+/// through `let name [: T] = init;` only (simple bindings — tuple and
+/// struct patterns are not tracked). Fn-wide, not flow-sensitive: a
+/// binding tainted anywhere in the body taints every use of the name.
+fn fn_taints(
+    ctx: &Ctx,
+    f: &FnInfo,
+    unordered: &BTreeSet<String>,
+    by_tok: &BTreeMap<usize, Vec<(String, Fact)>>,
+    ctxs: &[Ctx],
+) -> BTreeMap<String, Taint> {
+    let m = &ctx.model;
+    let lx = &m.lexed;
+    let mut taints: BTreeMap<String, Taint> = BTreeMap::new();
+    loop {
+        let mut changed = false;
+        let mut i = f.open + 1;
+        while i < f.close {
+            if lx.ident(i) != Some("let") {
+                i += 1;
+                continue;
+            }
+            let mut j = i + 1;
+            if lx.ident(j) == Some("mut") {
+                j += 1;
+            }
+            // Simple bindings only: skip `let Some(x)` / `let (a, b)`.
+            let Some(name) = lx.ident(j) else {
+                i = j + 1;
+                continue;
+            };
+            if name.starts_with(|ch: char| ch.is_ascii_uppercase()) || name == "_" {
+                i = j + 1;
+                continue;
+            }
+            if !(lx.punct(j + 1, '=') || (lx.punct(j + 1, ':') && !lx.punct(j + 2, ':'))) {
+                i = j + 1;
+                continue;
+            }
+            // Skip an optional `: Type` ascription to the `=`.
+            let mut k = j + 1;
+            let mut depth = 0i64;
+            while k < f.close {
+                if lx.punct(k, '(') || lx.punct(k, '[') || lx.punct(k, '<') {
+                    depth += 1;
+                } else if lx.punct(k, ')') || lx.punct(k, ']') {
+                    depth -= 1;
+                } else if lx.punct(k, '>') && !lx.punct(k - 1, '-') {
+                    depth -= 1;
+                } else if depth <= 0 && (lx.punct(k, '=') || lx.punct(k, ';') || lx.punct(k, '{'))
+                {
+                    break;
+                }
+                k += 1;
+            }
+            if !lx.punct(k, '=') {
+                i = k + 1;
+                continue;
+            }
+            // Initializer runs to the statement's `;` at depth 0.
+            let lo = k + 1;
+            let mut hi = lo;
+            let mut d2 = 0i64;
+            while hi < f.close {
+                if lx.punct(hi, '(') || lx.punct(hi, '[') || lx.punct(hi, '{') {
+                    d2 += 1;
+                } else if lx.punct(hi, ')') || lx.punct(hi, ']') || lx.punct(hi, '}') {
+                    d2 -= 1;
+                    if d2 < 0 {
+                        break;
+                    }
+                } else if d2 == 0 && lx.punct(hi, ';') {
+                    break;
+                }
+                hi += 1;
+            }
+            if !taints.contains_key(name) {
+                if let Some(t) = init_taint(ctx, lo, hi, unordered, &taints, by_tok, ctxs) {
+                    taints.insert(name.to_string(), t);
+                    changed = true;
+                }
+            }
+            // Resume *inside* the initializer: block initializers
+            // (`let x = { let t = now(); t };`) carry their own lets.
+            i = k + 1;
+        }
+        if !changed {
+            return taints;
+        }
+    }
+}
+
+/// R13 `nondet-partition` / R14 `nondet-decide` — determinism-taint
+/// dataflow on the shared fixed-point engine.
+///
+/// This is *value* taint, not the lock rules' side-effect reachability,
+/// and the difference drives three deliberate restrictions:
+///
+/// * only the value-like source kinds seed interprocedural facts
+///   (`wall-clock`, `channel-race`). Pool-shape reads and unordered
+///   iteration taint locally (a fn that *mentions* `n_workers` does not
+///   make every caller's result nondeterministic — but a let bound to
+///   it does);
+/// * facts travel only through call sites that resolved to exactly ONE
+///   fn. Name-fallback aliasing (every `new` in the crate) is the safe
+///   over-approximation for lock side effects and exactly the wrong one
+///   for values — `Vec::new()` must not launder a same-named
+///   constructor's clock read;
+/// * a fn exports its callees' facts only if its signature declares a
+///   return type (nothing flows out of `fn f(..) { .. }` by value).
+///
+/// Seeds: every non-test `Src` fn with a return type whose body contains
+/// a value-like source; [`propagate`] folds those over the restricted
+/// graph. Locally, taint flows through simple let chains
+/// ([`fn_taints`]). Sinks: partition arithmetic / scoped dispatch in
+/// `coordinator/`, `linalg/`, `conformance/` (R13) and `decide_step(..)`
+/// arguments crate-wide (R14) — a sink fires when a non-closure
+/// argument contains a source token, a tainted name, or a call into an
+/// exporting fn. Closure arguments are work bodies, not partition
+/// arithmetic; their internals are analyzed at their own call sites.
+fn r13_r14_nondet_taint(
+    ctxs: &[Ctx],
+    graph: &CallGraph,
+    opts: AnalysisOptions,
+    out: &mut Vec<LintViolation>,
+) {
+    let mut seeds: FactMap = FactMap::new();
+    for (ci, ctx) in ctxs.iter().enumerate() {
+        if ctx.kind != FileKind::Src {
+            continue;
+        }
+        let m = &ctx.model;
+        let unordered = unordered_names(m);
+        for (fi, f) in m.fns.iter().enumerate() {
+            if f.is_test || !fn_has_return(m, f) {
+                continue;
+            }
+            for i in f.open + 1..f.close {
+                if m.in_test(i) {
+                    continue;
+                }
+                if let Some(kind @ ("wall-clock" | "channel-race")) =
+                    taint_source_at(m, &unordered, i)
+                {
+                    seed(&mut seeds, (ci, fi), kind, ci, m.lexed.tokens[i].line);
+                }
+            }
+        }
+    }
+    // Per call site: how many fns it resolved to. Value taint only
+    // trusts unambiguous sites.
+    let mut site_targets: BTreeMap<(usize, usize), usize> = BTreeMap::new();
+    for (&(cf, _), ecalls) in &graph.calls_from {
+        for rc in ecalls {
+            *site_targets.entry((cf, rc.tok)).or_default() += 1;
+        }
+    }
+    let mut taint_edges: BTreeMap<super::callgraph::FnId, Vec<super::callgraph::ResolvedCall>> =
+        BTreeMap::new();
+    for (&caller, ecalls) in &graph.calls_from {
+        let (cf, cfi) = caller;
+        if !fn_has_return(&ctxs[cf].model, &ctxs[cf].model.fns[cfi]) {
+            continue;
+        }
+        let kept: Vec<_> = ecalls
+            .iter()
+            .filter(|rc| site_targets.get(&(cf, rc.tok)) == Some(&1))
+            .cloned()
+            .collect();
+        if !kept.is_empty() {
+            taint_edges.insert(caller, kept);
+        }
+    }
+    let taint_graph = CallGraph {
+        nodes: graph.nodes.clone(),
+        fns_by_name: graph.fns_by_name.clone(),
+        calls_from: taint_edges,
+    };
+    let summaries = propagate(&taint_graph, &seeds, opts.lock_depth);
+
+    for (ci, ctx) in ctxs.iter().enumerate() {
+        let m = &ctx.model;
+        let lx = &m.lexed;
+        let unordered = unordered_names(m);
+        let r13_scope = ctx.in_module("coordinator")
+            || ctx.in_module("linalg")
+            || ctx.in_module("conformance");
+
+        // Call-site token → taint facts its resolved callee exports
+        // (unambiguous, non-detached sites only).
+        let mut by_tok: BTreeMap<usize, Vec<(String, Fact)>> = BTreeMap::new();
+        for (&(emi, _efi), ecalls) in &graph.calls_from {
+            if emi != ci {
+                continue;
+            }
+            for rc in ecalls {
+                if rc.detached || site_targets.get(&(ci, rc.tok)) != Some(&1) {
+                    continue;
+                }
+                let Some(facts) = summaries.get(&rc.callee) else { continue };
+                for f in facts.values() {
+                    by_tok.entry(rc.tok).or_default().push((rc.callee_name.clone(), f.clone()));
+                }
+            }
+        }
+
+        for (fi, f) in m.fns.iter().enumerate() {
+            let taints = fn_taints(ctx, f, &unordered, &by_tok, ctxs);
+            for c in &m.calls {
+                if c.tok <= f.open || c.tok >= f.close || ctx.masked(c.tok) {
+                    continue;
+                }
+                if innermost_fn(m, c.tok) != Some(fi) {
+                    continue;
+                }
+                let is_r14 = c.callee == "decide_step";
+                let is_r13 = r13_scope && !is_r14 && is_partition_callee(&c.callee);
+                if !is_r13 && !is_r14 {
+                    continue;
+                }
+                let rule = if is_r14 { "nondet-decide" } else { "nondet-partition" };
+                let Some(close) = matching_paren(m, c.tok + 1) else { continue };
+                // First tainted argument: a source token, a tainted
+                // name, or a call into a taint-exporting fn. Receivers
+                // are deliberately not checked — `pool.scoped_for(n, f)`
+                // partitions by `n`, not by the pool object, and every
+                // pool traces back to a machine-sized constructor.
+                let mut hit: Option<(String, String)> = None;
+                'args: for (lo, hi) in split_args(m, c.tok + 1, close) {
+                    // Closure arguments (`|i| work(i)`) are the work
+                    // body, not a partition value; the calls inside
+                    // them are scanned at their own sites.
+                    let body = if lx.ident(lo) == Some("move") { lo + 1 } else { lo };
+                    if lx.punct(body, '|') {
+                        continue;
+                    }
+                    for j in lo..hi {
+                        if let Some(kind) = taint_source_at(m, &unordered, j) {
+                            hit = Some((
+                                format!("`{}`", lx.tokens[j].text),
+                                format!(
+                                    "{kind} source at {}:{}",
+                                    ctx.file_name(),
+                                    lx.tokens[j].line
+                                ),
+                            ));
+                            break 'args;
+                        }
+                        if let Some(t) = lx.ident(j).and_then(|id| taints.get(id)) {
+                            hit = Some((format!("`{}`", lx.tokens[j].text), t.origin.clone()));
+                            break 'args;
+                        }
+                        if let Some(hits) = by_tok.get(&j) {
+                            let (callee, fact) = &hits[0];
+                            hit = Some((
+                                format!("`{callee}(..)`"),
+                                render_chain(callee, fact, &format!("{} source", fact.key), ctxs),
+                            ));
+                            break 'args;
+                        }
+                    }
+                }
+                let Some((what, origin)) = hit else { continue };
+                let text = if is_r14 {
+                    format!("nondeterministic input {what} flows into decide_step(..): {origin}")
+                } else {
+                    format!(
+                        "nondeterministic value {what} shapes a chunk partition via `{}(..)`: {origin}",
+                        c.callee
+                    )
+                };
+                ctx.flag(out, c.tok, close, rule, &[], ctx.base_level(), Some(text), None);
             }
         }
     }
@@ -1854,7 +2384,7 @@ mod interprocedural_tests {
         let v = scan_with(
             "rust/src/coordinator/sched.rs",
             THREE_DEEP,
-            AnalysisOptions { lock_depth: Some(1) },
+            AnalysisOptions { lock_depth: Some(1), ..AnalysisOptions::default() },
         );
         assert!(rule(&v, "lock-order").is_empty(), "one-level must miss it: {v:?}");
     }
@@ -1927,7 +2457,7 @@ mod interprocedural_tests {
         let legacy = scan_with(
             "rust/src/coordinator/sched.rs",
             src,
-            AnalysisOptions { lock_depth: Some(1) },
+            AnalysisOptions { lock_depth: Some(1), ..AnalysisOptions::default() },
         );
         assert!(rule(&legacy, "blocking-under-lock").is_empty(), "{legacy:?}");
     }
@@ -2200,10 +2730,181 @@ mod interprocedural_tests {
 
     #[test]
     fn rule_table_matches_the_rule_set() {
-        assert_eq!(RULES.len(), 12);
+        assert_eq!(RULES.len(), 14);
         let ids: BTreeSet<&str> = RULES.iter().map(|r| r.name).collect();
-        assert_eq!(ids.len(), 12);
+        assert_eq!(ids.len(), 14);
         assert_eq!(RULES[7].name, "blocking-under-lock");
         assert_eq!(RULES[11].name, "span-fidelity");
+        assert_eq!(RULES[12].name, "nondet-partition");
+        assert_eq!(RULES[13].name, "nondet-decide");
+        for r in &RULES {
+            assert!(!r.contract.is_empty(), "{} has no contract", r.name);
+            assert!(!r.example.is_empty(), "{} has no example", r.name);
+            assert!(!r.suppression.is_empty(), "{} has no suppression text", r.name);
+        }
+    }
+
+    // ---- R13/R14 determinism taint ----
+
+    #[test]
+    fn r13_flags_pool_sized_partitions() {
+        let src = concat!(
+            "fn plan(pool: &P, work: &[J]) {\n",
+            "    let lanes = pool.size();\n",
+            "    for w in work.chunks(lanes) { run(w); }\n",
+            "}\n",
+        );
+        let v = scan("rust/src/coordinator/plan.rs", src);
+        let r13 = rule(&v, "nondet-partition");
+        assert_eq!(r13.len(), 1, "{v:?}");
+        assert_eq!(r13[0].line, 3);
+        assert_eq!(r13[0].level, Level::Error);
+        assert!(r13[0].text.contains("`lanes`"), "{}", r13[0].text);
+        assert!(r13[0].text.contains("pool-shape"), "{}", r13[0].text);
+        assert!(r13[0].snippet.starts_with("chunks(lanes)"), "{}", r13[0].snippet);
+    }
+
+    #[test]
+    fn r13_taint_flows_through_let_chains() {
+        let src = concat!(
+            "fn plan(cfg: &C, xs: &[f32]) {\n",
+            "    let n_workers = cfg.n_workers.max(1);\n",
+            "    let lanes = n_workers * 2;\n",
+            "    let step = xs.len().div_ceil(lanes);\n",
+            "    consume(step);\n",
+            "}\n",
+        );
+        let v = scan("rust/src/linalg/tile.rs", src);
+        let r13 = rule(&v, "nondet-partition");
+        assert_eq!(r13.len(), 1, "{v:?}");
+        assert_eq!(r13[0].line, 4);
+        assert!(r13[0].text.contains("n_workers"), "{}", r13[0].text);
+    }
+
+    #[test]
+    fn r13_shape_pure_partitions_stay_clean() {
+        let src = concat!(
+            "fn plan(xs: &[f32], tile: usize) {\n",
+            "    let step = xs.len().div_ceil(tile);\n",
+            "    for w in xs.chunks(step) { run(w); }\n",
+            "}\n",
+        );
+        let v = scan("rust/src/linalg/tile.rs", src);
+        assert!(rule(&v, "nondet-partition").is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn r13_is_scoped_to_bit_identity_modules() {
+        let src = concat!(
+            "fn plan(pool: &P, work: &[J]) {\n",
+            "    let lanes = pool.size();\n",
+            "    for w in work.chunks(lanes) { run(w); }\n",
+            "}\n",
+        );
+        let v = scan("rust/src/util/report.rs", src);
+        assert!(rule(&v, "nondet-partition").is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn r13_unordered_iteration_taints_the_partition() {
+        let src = concat!(
+            "fn plan(index: HashMap<u64, usize>, xs: &[f32]) {\n",
+            "    let order: Vec<usize> = index.values().copied().collect();\n",
+            "    xs.split_at(order[0]);\n",
+            "}\n",
+        );
+        let v = scan("rust/src/coordinator/plan.rs", src);
+        let r13 = rule(&v, "nondet-partition");
+        assert_eq!(r13.len(), 1, "{v:?}");
+        assert!(r13[0].text.contains("unordered-iter"), "{}", r13[0].text);
+    }
+
+    #[test]
+    fn r13_allow_marker_with_rationale_suppresses() {
+        let src = concat!(
+            "fn plan(pool: &P, work: &[J]) {\n",
+            "    let lanes = pool.size();\n",
+            "    // Display-only batching; results are merged by job id.\n",
+            "    // lint:allow(nondet-partition)\n",
+            "    for w in work.chunks(lanes) { run(w); }\n",
+            "}\n",
+        );
+        let v = scan("rust/src/coordinator/plan.rs", src);
+        assert!(rule(&v, "nondet-partition").is_empty(), "{v:?}");
+        assert!(rule(&v, "allow-rationale").is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn r14_flags_wall_clock_into_decide_step() {
+        let src = concat!(
+            "fn budget_ms() -> u64 {\n",
+            "    let t0 = Instant::now();\n",
+            "    t0.elapsed().as_millis() as u64\n",
+            "}\n",
+            "fn drive(ctl: &C) {\n",
+            "    let budget = budget_ms();\n",
+            "    ctl.decide_step(budget);\n",
+            "}\n",
+        );
+        let v = scan("rust/src/coordinator/driver.rs", src);
+        let r14 = rule(&v, "nondet-decide");
+        assert_eq!(r14.len(), 1, "{v:?}");
+        assert_eq!(r14[0].line, 7);
+        assert_eq!(r14[0].level, Level::Error);
+        assert!(r14[0].text.contains("wall-clock"), "{}", r14[0].text);
+        assert!(r14[0].text.contains("budget_ms()"), "{}", r14[0].text);
+    }
+
+    #[test]
+    fn r14_racing_recv_taints_the_decision() {
+        let src = concat!(
+            "fn drive(ctl: &C, rx: &R) {\n",
+            "    let hint = rx.try_recv().ok();\n",
+            "    ctl.decide_step(hint);\n",
+            "}\n",
+        );
+        let v = scan("rust/src/policy/driver.rs", src);
+        let r14 = rule(&v, "nondet-decide");
+        assert_eq!(r14.len(), 1, "{v:?}");
+        assert!(r14[0].text.contains("channel-race"), "{}", r14[0].text);
+    }
+
+    #[test]
+    fn r14_plain_recv_is_ordered_and_clean() {
+        let src = concat!(
+            "fn drive(ctl: &C, rx: &R) {\n",
+            "    let cmd = rx.recv();\n",
+            "    ctl.decide_step(cmd);\n",
+            "}\n",
+        );
+        let v = scan("rust/src/policy/driver.rs", src);
+        assert!(rule(&v, "nondet-decide").is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn r14_one_level_misses_the_two_hop_taint() {
+        // budget_ms() -> jitter() -> Instant::now(): at depth 1 a call
+        // site only sees direct facts, so the taint never reaches drive.
+        let src = concat!(
+            "fn jitter() -> u64 {\n",
+            "    let t0 = Instant::now();\n",
+            "    t0.elapsed().as_nanos() as u64\n",
+            "}\n",
+            "fn budget_ms() -> u64 { jitter() / 1_000_000 }\n",
+            "fn drive(ctl: &C) {\n",
+            "    let budget = budget_ms();\n",
+            "    ctl.decide_step(budget);\n",
+            "}\n",
+        );
+        let legacy = scan_with(
+            "rust/src/coordinator/driver.rs",
+            src,
+            AnalysisOptions { lock_depth: Some(1), ..AnalysisOptions::default() },
+        );
+        assert!(rule(&legacy, "nondet-decide").is_empty(), "{legacy:?}");
+        let v = scan("rust/src/coordinator/driver.rs", src);
+        let r14 = rule(&v, "nondet-decide");
+        assert_eq!(r14.len(), 1, "{v:?}");
+        assert!(r14[0].text.contains("budget_ms()"), "{}", r14[0].text);
     }
 }

@@ -118,6 +118,11 @@ pub fn to_sarif(violations: &[LintViolation]) -> Json {
                     "shortDescription",
                     obj(vec![("text", Json::Str(r.contract.to_string()))]),
                 ),
+                (
+                    "fullDescription",
+                    obj(vec![("text", Json::Str(r.example.to_string()))]),
+                ),
+                ("help", obj(vec![("text", Json::Str(r.suppression.to_string()))])),
             ])
         })
         .collect();
@@ -166,16 +171,37 @@ pub fn validate_sarif(doc: &Json) -> Vec<String> {
         Some("drrl-lint") => {}
         other => errs.push(format!("tool.driver.name must be \"drrl-lint\", got {other:?}")),
     }
-    let rule_count = driver
+    let rule_entries: &[Json] = driver
         .and_then(|d| d.get("rules"))
         .and_then(|r| r.as_arr())
-        .map(|r| r.len())
-        .unwrap_or(0);
-    if rule_count != RULES.len() {
+        .map(|r| r.as_slice())
+        .unwrap_or(&[]);
+    if rule_entries.len() != RULES.len() {
         errs.push(format!(
-            "tool.driver.rules must list all {} rules, got {rule_count}",
-            RULES.len()
+            "tool.driver.rules must list all {} rules, got {}",
+            RULES.len(),
+            rule_entries.len()
         ));
+    } else {
+        // The catalogue is THE rule table ([`RULES`]), not a copy: ids
+        // and the three metadata texts must match it entry for entry.
+        for (i, (entry, ri)) in rule_entries.iter().zip(RULES.iter()).enumerate() {
+            if entry.get("id").and_then(|x| x.as_str()) != Some(ri.name) {
+                errs.push(format!("rules[{i}].id must be {:?}", ri.name));
+            }
+            let texts = [
+                ("shortDescription", ri.contract),
+                ("fullDescription", ri.example),
+                ("help", ri.suppression),
+            ];
+            for (field, want) in texts {
+                let got =
+                    entry.get(field).and_then(|d| d.get("text")).and_then(|t| t.as_str());
+                if got != Some(want) {
+                    errs.push(format!("rules[{i}].{field}.text diverges from RULES"));
+                }
+            }
+        }
     }
     let Some(results) = run.get("results").and_then(|r| r.as_arr()) else {
         errs.push("runs[0].results must be an array".to_string());
@@ -256,6 +282,31 @@ mod tests {
     fn empty_run_is_valid() {
         let doc = to_sarif(&[]);
         assert!(validate_sarif(&doc).is_empty());
+    }
+
+    #[test]
+    fn rule_catalogue_mirrors_the_rule_table() {
+        let doc = to_sarif(&[]);
+        let rules = doc.get("runs").unwrap().as_arr().unwrap()[0]
+            .get("tool")
+            .unwrap()
+            .get("driver")
+            .unwrap()
+            .get("rules")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .to_vec();
+        assert_eq!(rules.len(), RULES.len());
+        for (entry, ri) in rules.iter().zip(RULES.iter()) {
+            assert_eq!(entry.get("id").unwrap().as_str(), Some(ri.name));
+            let text = |field: &str| {
+                entry.get(field).unwrap().get("text").unwrap().as_str().unwrap().to_string()
+            };
+            assert_eq!(text("shortDescription"), ri.contract);
+            assert_eq!(text("fullDescription"), ri.example);
+            assert_eq!(text("help"), ri.suppression);
+        }
     }
 
     #[test]

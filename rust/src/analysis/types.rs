@@ -1,0 +1,624 @@
+//! Lightweight local type map: enough typing to resolve method calls
+//! through non-`self` receivers, without a real type system.
+//!
+//! The PR 9 call graph resolves `helper(..)` and `self.helper(..)` by
+//! name and stops dead at any other receiver — `other.helper()`,
+//! `self.field.method()`, `param.dispatch(f)` — so lock-set and taint
+//! propagation silently ends there. This module harvests four kinds of
+//! purely local, annotation-level type facts from the token stream:
+//!
+//! * **struct fields** — `struct S { field: Arc<T>, … }` records
+//!   `S.field : T` (deref wrappers `Arc`/`Rc`/`Box` are unwrapped,
+//!   because method calls auto-deref through them);
+//! * **impl membership** — every fn whose body sits directly inside
+//!   `impl T { … }` / `impl Trait for T { … }` belongs to `T`, which
+//!   both types `self` and populates the crate-wide method table;
+//! * **fn params** — `fn f(other: &Helper)` types `other` inside `f`;
+//! * **typed lets** — `let x: T = …`, `let x = T::new(…)`,
+//!   `let x = T { … }` type `x` from its binding site forward (the
+//!   nearest preceding binding wins, so shadowing re-types).
+//!
+//! What deliberately stays untyped: method-call initializers
+//! (`let g = mu.lock_unpoisoned()` — guard types need generics),
+//! `dyn`/`impl Trait`, closures, collection elements (`xs[i].m()` drops
+//! the index, so a `Vec<T>` receiver resolves to `Vec`, which no crate
+//! impl claims), and `Self::…` paths. An unresolved receiver produces
+//! *no* edge — exactly the pre-type-map behavior — so the map can only
+//! add recall, never change the meaning of an existing edge.
+
+use std::collections::BTreeMap;
+
+use super::callgraph::FnId;
+use super::lexer::{Lexed, TokKind};
+use super::model::FileModel;
+
+/// Containers that auto-deref method calls to their payload type.
+const DEREF_WRAPPERS: [&str; 3] = ["Arc", "Rc", "Box"];
+
+/// One `let`-bound variable with a recovered type.
+#[derive(Debug, Clone)]
+pub struct LetBind {
+    pub name: String,
+    /// Head type name (path tail, wrappers unwrapped).
+    pub ty: String,
+    /// Token index of the bound name (scoping: the binding types uses
+    /// *after* this token).
+    pub tok: usize,
+}
+
+/// Per-file type facts harvested from one [`FileModel`].
+#[derive(Debug, Default)]
+pub struct FileTypes {
+    /// struct name → field name → field head type.
+    pub fields: BTreeMap<String, BTreeMap<String, String>>,
+    /// fn index (into [`FileModel::fns`]) → self type of its `impl`.
+    pub impl_of: BTreeMap<usize, String>,
+    /// fn index → param name → param head type.
+    pub params: BTreeMap<usize, BTreeMap<String, String>>,
+    /// Typed `let` bindings in token order.
+    pub lets: Vec<LetBind>,
+}
+
+impl FileTypes {
+    pub fn build(m: &FileModel) -> FileTypes {
+        let lx = &m.lexed;
+        let mut ft = FileTypes::default();
+        harvest_structs(lx, m, &mut ft);
+        harvest_impls(lx, m, &mut ft);
+        harvest_params(lx, m, &mut ft);
+        harvest_lets(lx, &mut ft);
+        ft
+    }
+
+    /// Type of variable `name` as seen at token `pos` inside fn `fi`:
+    /// the nearest preceding typed `let` in that fn's body wins, else
+    /// the fn's param annotation.
+    pub fn var_type(&self, m: &FileModel, fi: usize, name: &str, pos: usize) -> Option<&str> {
+        let f = &m.fns[fi];
+        let mut best: Option<&LetBind> = None;
+        for l in &self.lets {
+            if l.name == name && l.tok > f.open && l.tok < f.close && l.tok < pos {
+                best = Some(l);
+            }
+        }
+        if let Some(l) = best {
+            return Some(&l.ty);
+        }
+        self.params.get(&fi)?.get(name).map(String::as_str)
+    }
+}
+
+/// Crate-wide method and field tables, merged across files.
+pub struct TypeMap {
+    /// type name → method name → every non-test fn defined in an
+    /// `impl` block for that type (several same-named impls merge, the
+    /// same over-approximation name resolution makes for free fns).
+    pub methods: BTreeMap<String, BTreeMap<String, Vec<FnId>>>,
+    /// struct name → field name → field head type.
+    pub fields: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl TypeMap {
+    pub fn build(models: &[&FileModel], types: &[FileTypes]) -> TypeMap {
+        let mut methods: BTreeMap<String, BTreeMap<String, Vec<FnId>>> = BTreeMap::new();
+        let mut fields: BTreeMap<String, BTreeMap<String, String>> = BTreeMap::new();
+        for (mi, ft) in types.iter().enumerate() {
+            for (&k, ty) in &ft.impl_of {
+                let f = &models[mi].fns[k];
+                if !f.is_test {
+                    methods
+                        .entry(ty.clone())
+                        .or_default()
+                        .entry(f.name.clone())
+                        .or_default()
+                        .push((mi, k));
+                }
+            }
+            for (sname, fs) in &ft.fields {
+                let merged = fields.entry(sname.clone()).or_default();
+                for (fname, fty) in fs {
+                    merged.entry(fname.clone()).or_insert_with(|| fty.clone());
+                }
+            }
+        }
+        TypeMap { methods, fields }
+    }
+
+    /// The fns named `callee` in any `impl` block for type `ty`.
+    pub fn method_targets(&self, ty: &str, callee: &str) -> Option<&Vec<FnId>> {
+        self.methods.get(ty)?.get(callee)
+    }
+}
+
+/// Resolve a method call's receiver chain to a type name: the head is
+/// `self` (the enclosing impl's type), a typed local or a typed param;
+/// each later segment is a struct field looked up crate-wide. `None`
+/// whenever any link is untyped — the caller must then produce no edge.
+pub fn resolve_receiver(
+    tm: &TypeMap,
+    ft: &FileTypes,
+    m: &FileModel,
+    fi: usize,
+    path: &[String],
+    pos: usize,
+) -> Option<String> {
+    let mut it = path.iter();
+    let head = it.next()?;
+    let mut ty: String = if head == "self" {
+        ft.impl_of.get(&fi)?.clone()
+    } else {
+        ft.var_type(m, fi, head, pos)?.to_string()
+    };
+    for seg in it {
+        ty = tm.fields.get(&ty)?.get(seg.as_str())?.clone();
+    }
+    Some(ty)
+}
+
+/// Token index of the `>` matching the `<` at `open`. `->` arrows are
+/// skipped (their `>` is preceded by `-`); nested `>>` closes two
+/// levels one punct at a time, which is exactly right.
+fn matching_angle(lx: &Lexed, open: usize) -> Option<usize> {
+    let mut depth = 0i64;
+    let mut j = open;
+    while j < lx.tokens.len() {
+        if lx.punct(j, '<') {
+            depth += 1;
+        } else if lx.punct(j, '>') && !(j >= 1 && lx.punct(j - 1, '-')) {
+            depth -= 1;
+            if depth == 0 {
+                return Some(j);
+            }
+        }
+        j += 1;
+    }
+    None
+}
+
+/// Token index of the `close` matching the `open` bracket at `at`.
+fn matching(lx: &Lexed, open: char, close: char, at: usize) -> Option<usize> {
+    let mut depth = 0i64;
+    let mut j = at;
+    while j < lx.tokens.len() {
+        if lx.punct(j, open) {
+            depth += 1;
+        } else if lx.punct(j, close) {
+            depth -= 1;
+            if depth == 0 {
+                return Some(j);
+            }
+        }
+        j += 1;
+    }
+    None
+}
+
+/// Head type name of the type tokens in `lo..hi`: strip `&`, lifetimes
+/// and `mut`, follow the path to its final segment, and unwrap deref
+/// containers. `dyn`/`impl` types and non-path types yield `None`.
+fn type_head(lx: &Lexed, lo: usize, hi: usize) -> Option<String> {
+    let mut j = lo;
+    while j < hi
+        && (lx.punct(j, '&') || lx.tokens[j].kind == TokKind::Lifetime || lx.ident(j) == Some("mut"))
+    {
+        j += 1;
+    }
+    if j >= hi {
+        return None;
+    }
+    if matches!(lx.ident(j), Some("dyn") | Some("impl")) {
+        return None;
+    }
+    // Follow the path `a::b::C` to its final segment.
+    let mut last: Option<&str> = None;
+    while j < hi {
+        if lx.punct(j, ':') {
+            j += 1; // leading `::`
+            continue;
+        }
+        match lx.ident(j) {
+            Some(name) => {
+                last = Some(name);
+                j += 1;
+                if j + 1 < hi && lx.punct(j, ':') && lx.punct(j + 1, ':') {
+                    j += 2;
+                    continue;
+                }
+                break;
+            }
+            None => break,
+        }
+    }
+    let head = last?;
+    if DEREF_WRAPPERS.contains(&head) && j < hi && lx.punct(j, '<') {
+        let close = matching_angle(lx, j)?;
+        return type_head(lx, j + 1, close.min(hi));
+    }
+    if head.starts_with(|c: char| c.is_ascii_uppercase()) {
+        Some(head.to_string())
+    } else {
+        None
+    }
+}
+
+/// `struct S { field: Type, … }` → `S.field : head(Type)`. Unit and
+/// tuple structs carry no named fields and are skipped.
+fn harvest_structs(lx: &Lexed, m: &FileModel, ft: &mut FileTypes) {
+    let n = lx.tokens.len();
+    for i in 0..n {
+        if lx.ident(i) != Some("struct") {
+            continue;
+        }
+        let Some(name) = lx.ident(i + 1) else { continue };
+        let mut j = i + 2;
+        if lx.punct(j, '<') {
+            match matching_angle(lx, j) {
+                Some(c) => j = c + 1,
+                None => continue,
+            }
+        }
+        // Skip a possible `where` clause between generics and the body.
+        while j < n && !lx.punct(j, '{') && !lx.punct(j, ';') && !lx.punct(j, '(') {
+            j += 1;
+        }
+        if j >= n || !lx.punct(j, '{') {
+            continue;
+        }
+        let Some(close) = m.close_of[j] else { continue };
+        let fields = ft.fields.entry(name.to_string()).or_default();
+        let mut k = j + 1;
+        while k < close {
+            // Skip field attributes and visibility.
+            if lx.punct(k, '#') && lx.punct(k + 1, '[') {
+                match matching(lx, '[', ']', k + 1) {
+                    Some(c) => k = c + 1,
+                    None => break,
+                }
+                continue;
+            }
+            if lx.ident(k) == Some("pub") {
+                k += 1;
+                if lx.punct(k, '(') {
+                    match matching(lx, '(', ')', k) {
+                        Some(c) => k = c + 1,
+                        None => break,
+                    }
+                }
+                continue;
+            }
+            let fname = match lx.ident(k) {
+                Some(f) if lx.punct(k + 1, ':') && !lx.punct(k + 2, ':') => f,
+                _ => {
+                    k += 1;
+                    continue;
+                }
+            };
+            // Field type runs to the next top-level comma or the `}`.
+            let lo = k + 2;
+            let mut depth = 0i64;
+            let mut hi = lo;
+            while hi < close {
+                if lx.punct(hi, '<') || lx.punct(hi, '(') || lx.punct(hi, '[') || lx.punct(hi, '{')
+                {
+                    depth += 1;
+                } else if lx.punct(hi, ')') || lx.punct(hi, ']') || lx.punct(hi, '}') {
+                    depth -= 1;
+                } else if lx.punct(hi, '>') && !lx.punct(hi - 1, '-') {
+                    depth -= 1;
+                } else if depth == 0 && lx.punct(hi, ',') {
+                    break;
+                }
+                hi += 1;
+            }
+            if let Some(ty) = type_head(lx, lo, hi) {
+                fields.insert(fname.to_string(), ty);
+            }
+            k = hi + 1;
+        }
+    }
+}
+
+/// `impl T { … }` / `impl Trait for T { … }` → every fn whose body sits
+/// directly inside the impl braces belongs to `T`.
+fn harvest_impls(lx: &Lexed, m: &FileModel, ft: &mut FileTypes) {
+    let n = lx.tokens.len();
+    for i in 0..n {
+        if lx.ident(i) != Some("impl") {
+            continue;
+        }
+        let mut j = i + 1;
+        if lx.punct(j, '<') {
+            match matching_angle(lx, j) {
+                Some(c) => j = c + 1,
+                None => continue,
+            }
+        }
+        // The self type is the last angle-depth-0 path segment before
+        // the body; a `for` resets (everything before it was the trait).
+        let mut target: Option<&str> = None;
+        let mut depth = 0i64;
+        let mut open = None;
+        while j < n {
+            if lx.punct(j, '<') {
+                depth += 1;
+            } else if lx.punct(j, '>') && !(j >= 1 && lx.punct(j - 1, '-')) {
+                depth -= 1;
+            } else if depth == 0 {
+                if lx.punct(j, '{') {
+                    open = Some(j);
+                    break;
+                }
+                match lx.ident(j) {
+                    Some("for") => target = None,
+                    Some("where") => {
+                        // Self type is fixed by now; skip to the body.
+                        while j < n && !lx.punct(j, '{') {
+                            j += 1;
+                        }
+                        continue;
+                    }
+                    Some(name) => target = Some(name),
+                    None => {}
+                }
+            }
+            j += 1;
+        }
+        let (Some(target), Some(open)) = (target, open) else { continue };
+        let Some(close) = m.close_of[open] else { continue };
+        for (k, f) in m.fns.iter().enumerate() {
+            if f.open > open && f.close < close && m.enclosing_open[f.open] == Some(open) {
+                ft.impl_of.insert(k, target.to_string());
+            }
+        }
+    }
+}
+
+/// `fn f(other: &Helper, mut n: usize)` → `other : Helper` inside `f`.
+/// `self` receivers and destructuring patterns are skipped.
+fn harvest_params(lx: &Lexed, m: &FileModel, ft: &mut FileTypes) {
+    for (k, f) in m.fns.iter().enumerate() {
+        // Param list: the `(` after the fn name (generics may intervene).
+        let mut j = f.sig + 2;
+        if lx.punct(j, '<') {
+            match matching_angle(lx, j) {
+                Some(c) => j = c + 1,
+                None => continue,
+            }
+        }
+        if !lx.punct(j, '(') {
+            continue;
+        }
+        let Some(close) = matching(lx, '(', ')', j) else { continue };
+        let mut params: BTreeMap<String, String> = BTreeMap::new();
+        // Split on top-level commas; angles count as depth so the comma
+        // in `Vec<(A, B)>` does not split.
+        let mut lo = j + 1;
+        let mut depth = 0i64;
+        let mut at = j + 1;
+        while at <= close {
+            if at == close || (depth == 0 && lx.punct(at, ',')) {
+                param_entry(lx, lo, at, &mut params);
+                lo = at + 1;
+            } else if lx.punct(at, '<') || lx.punct(at, '(') || lx.punct(at, '[') {
+                depth += 1;
+            } else if lx.punct(at, ')') || lx.punct(at, ']') {
+                depth -= 1;
+            } else if lx.punct(at, '>') && !lx.punct(at - 1, '-') {
+                depth -= 1;
+            }
+            at += 1;
+        }
+        if !params.is_empty() {
+            ft.params.insert(k, params);
+        }
+    }
+}
+
+/// One `name: Type` param element (skips `self`, patterns, `mut`).
+fn param_entry(lx: &Lexed, lo: usize, hi: usize, out: &mut BTreeMap<String, String>) {
+    let mut j = lo;
+    if lx.ident(j) == Some("mut") {
+        j += 1;
+    }
+    let Some(name) = lx.ident(j) else { return };
+    if name == "self" || !lx.punct(j + 1, ':') || lx.punct(j + 2, ':') {
+        return;
+    }
+    if let Some(ty) = type_head(lx, j + 2, hi) {
+        out.insert(name.to_string(), ty);
+    }
+}
+
+/// Typed `let` bindings: explicit ascription, `Type::ctor(..)`,
+/// `Type { .. }` and `Type(..)` initializers.
+fn harvest_lets(lx: &Lexed, ft: &mut FileTypes) {
+    let n = lx.tokens.len();
+    for i in 0..n {
+        if lx.ident(i) != Some("let") {
+            continue;
+        }
+        let mut j = i + 1;
+        if lx.ident(j) == Some("mut") {
+            j += 1;
+        }
+        let Some(name) = lx.ident(j) else { continue };
+        let name_tok = j;
+        let ty = if lx.punct(j + 1, ':') && !lx.punct(j + 2, ':') {
+            // `let x: Type = …` — the annotation runs to `=` or `;`.
+            let lo = j + 2;
+            let mut hi = lo;
+            let mut depth = 0i64;
+            while hi < n {
+                if lx.punct(hi, '<') || lx.punct(hi, '(') || lx.punct(hi, '[') {
+                    depth += 1;
+                } else if lx.punct(hi, ')') || lx.punct(hi, ']') {
+                    depth -= 1;
+                } else if lx.punct(hi, '>') && !lx.punct(hi - 1, '-') {
+                    depth -= 1;
+                } else if depth == 0 && (lx.punct(hi, '=') || lx.punct(hi, ';')) {
+                    break;
+                }
+                hi += 1;
+            }
+            type_head(lx, lo, hi)
+        } else if lx.punct(j + 1, '=') {
+            init_type(lx, j + 2)
+        } else {
+            None
+        };
+        if let Some(ty) = ty {
+            ft.lets.push(LetBind { name: name.to_string(), ty, tok: name_tok });
+        }
+    }
+}
+
+/// Type of a constructor-shaped `let` initializer: `Type::ctor(..)`
+/// (last uppercase-initial segment before the fn), `Type { .. }` and
+/// `Type(..)`. Anything else — method calls, field reads, literals —
+/// yields `None`: the binding stays untyped rather than guessed.
+fn init_type(lx: &Lexed, lo: usize) -> Option<String> {
+    let mut segs: Vec<&str> = Vec::new();
+    let mut j = lo;
+    loop {
+        let name = lx.ident(j)?;
+        segs.push(name);
+        if lx.punct(j + 1, ':') && lx.punct(j + 2, ':') {
+            j += 3;
+        } else {
+            break;
+        }
+    }
+    let last = *segs.last()?;
+    let upper = |s: &str| s.starts_with(|c: char| c.is_ascii_uppercase());
+    if lx.punct(j + 1, '{') {
+        return if upper(last) { Some(last.to_string()) } else { None };
+    }
+    if !lx.punct(j + 1, '(') {
+        return None;
+    }
+    if upper(last) {
+        // `Type(..)` tuple-struct constructor.
+        return Some(last.to_string());
+    }
+    // `Type::ctor(..)`: the last uppercase segment before the fn name.
+    segs.iter().rev().skip(1).find(|s| upper(s)).map(|s| s.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn built(src: &str) -> (FileModel, FileTypes) {
+        let m = FileModel::build(src);
+        let ft = FileTypes::build(&m);
+        (m, ft)
+    }
+
+    #[test]
+    fn struct_fields_record_head_types() {
+        let (_, ft) = built(concat!(
+            "pub struct Shared {\n",
+            "    pub metrics: Arc<Metrics>,\n",
+            "    #[allow(dead_code)]\n",
+            "    pub(crate) pool: util::threadpool::ThreadPool,\n",
+            "    count: usize,\n",
+            "    hook: Box<dyn Fn() -> usize>,\n",
+            "}\n",
+        ));
+        let f = &ft.fields["Shared"];
+        assert_eq!(f.get("metrics").map(String::as_str), Some("Metrics"));
+        assert_eq!(f.get("pool").map(String::as_str), Some("ThreadPool"));
+        // Lowercase head types and `dyn` are not recorded.
+        assert!(!f.contains_key("count"));
+        assert!(!f.contains_key("hook"));
+    }
+
+    #[test]
+    fn impl_membership_types_self_including_trait_impls() {
+        let (m, ft) = built(concat!(
+            "struct Engine;\n",
+            "impl Engine { fn run(&self) {} }\n",
+            "impl<T> LockExt<T> for Mutex<T> { fn lock_unpoisoned(&self) {} }\n",
+            "fn free() {}\n",
+        ));
+        let by_name: BTreeMap<&str, usize> =
+            m.fns.iter().enumerate().map(|(k, f)| (f.name.as_str(), k)).collect();
+        assert_eq!(ft.impl_of.get(&by_name["run"]).map(String::as_str), Some("Engine"));
+        assert_eq!(
+            ft.impl_of.get(&by_name["lock_unpoisoned"]).map(String::as_str),
+            Some("Mutex")
+        );
+        assert!(!ft.impl_of.contains_key(&by_name["free"]));
+    }
+
+    #[test]
+    fn params_and_lets_type_variables() {
+        let (m, ft) = built(concat!(
+            "fn f(other: &Helper, mut n: usize, pair: (A, B)) {\n",
+            "    let a: Arc<Ctl> = make();\n",
+            "    let b = Helper::new(7);\n",
+            "    let c = Config { n: 1 };\n",
+            "    let d = some_fn();\n",
+            "    let e = mu.lock_unpoisoned();\n",
+            "}\n",
+        ));
+        assert_eq!(ft.var_type(&m, 0, "other", usize::MAX), Some("Helper"));
+        // Lowercase param types and destructuring patterns stay untyped.
+        assert_eq!(ft.var_type(&m, 0, "n", usize::MAX), None);
+        assert_eq!(ft.var_type(&m, 0, "pair", usize::MAX), None);
+        assert_eq!(ft.var_type(&m, 0, "a", usize::MAX), Some("Ctl"));
+        assert_eq!(ft.var_type(&m, 0, "b", usize::MAX), Some("Helper"));
+        assert_eq!(ft.var_type(&m, 0, "c", usize::MAX), Some("Config"));
+        assert_eq!(ft.var_type(&m, 0, "d", usize::MAX), None);
+        assert_eq!(ft.var_type(&m, 0, "e", usize::MAX), None);
+    }
+
+    #[test]
+    fn let_shadowing_retypes_from_the_binding_forward() {
+        let src = "fn f() { let x = A::new(); use1(); let x = B::new(); use2(); }";
+        let (m, ft) = built(src);
+        let lx = &m.lexed;
+        let use1 = (0..lx.tokens.len()).find(|&i| lx.ident(i) == Some("use1")).unwrap();
+        let use2 = (0..lx.tokens.len()).find(|&i| lx.ident(i) == Some("use2")).unwrap();
+        assert_eq!(ft.var_type(&m, 0, "x", use1), Some("A"));
+        assert_eq!(ft.var_type(&m, 0, "x", use2), Some("B"));
+    }
+
+    #[test]
+    fn receiver_chains_resolve_through_fields_crate_wide() {
+        let a = FileModel::build(concat!(
+            "struct Shared { metrics: Arc<Metrics> }\n",
+            "fn f(shared: &Shared) { shared.metrics.record(); }\n",
+        ));
+        let b = FileModel::build("struct Metrics; impl Metrics { fn record(&self) {} }");
+        let fts = [FileTypes::build(&a), FileTypes::build(&b)];
+        let models = [&a, &b];
+        let tm = TypeMap::build(&models, &fts);
+        let path = vec!["shared".to_string(), "metrics".to_string()];
+        let fi = a.fns.iter().position(|f| f.name == "f").unwrap();
+        let ty = resolve_receiver(&tm, &fts[0], &a, fi, &path, usize::MAX);
+        assert_eq!(ty.as_deref(), Some("Metrics"));
+        let targets = tm.method_targets("Metrics", "record").unwrap();
+        assert_eq!(targets.len(), 1);
+        assert_eq!(targets[0].0, 1);
+    }
+
+    #[test]
+    fn self_resolves_through_the_enclosing_impl() {
+        let (m, ft) = built(concat!(
+            "struct Ctl { inner: Arc<State> }\n",
+            "struct State;\n",
+            "impl Ctl { fn go(&self) { self.inner.step(); } }\n",
+            "impl State { fn step(&self) {} }\n",
+        ));
+        let models = [&m];
+        let fts = [ft];
+        let tm = TypeMap::build(&models, &fts);
+        let fi = m.fns.iter().position(|f| f.name == "go").unwrap();
+        let path = vec!["self".to_string(), "inner".to_string()];
+        assert_eq!(
+            resolve_receiver(&tm, &fts[0], &m, fi, &path, usize::MAX).as_deref(),
+            Some("State")
+        );
+    }
+}

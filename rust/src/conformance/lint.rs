@@ -2,8 +2,9 @@
 //!
 //! PR 6's deliberately dumb line-oriented scanner lived here; it has
 //! been replaced by the static-analysis subsystem in
-//! [`crate::analysis`] (lexer → structural model → call graph →
-//! fixed-point dataflow → rules R1–R12), which scans `rust/src/`,
+//! [`crate::analysis`] (lexer → structural model → local type map →
+//! typed call graph → fixed-point dataflow → rules R1–R14), which
+//! scans `rust/src/`,
 //! `rust/tests/`, `rust/benches/` and `examples/` instead of two
 //! hand-picked directories. This module keeps the conformance-layer
 //! surface stable: [`run_lint`], [`scan_source`] and [`LintViolation`]
@@ -12,7 +13,7 @@
 //! under the full rule set (findings in test/bench/example code are
 //! advisory and never gate).
 //!
-//! See CONFORMANCE.md § "Static rules" for the R1–R12 catalogue and
+//! See CONFORMANCE.md § "Static rules" for the R1–R14 catalogue and
 //! the `lint:allow(rule)` suppression mechanism.
 
 use std::path::Path;

@@ -69,10 +69,12 @@ fn print_usage() {
          run each subcommand with no flags for sensible defaults;\n\
          fuzz: differential conformance fuzzing\n\
          \x20      (--seed N | --budget N [--base-seed N] | --seeds FILE)\n\
-         lint: interprocedural static analysis (rules R1-R12) over\n\
+         lint: interprocedural static analysis (rules R1-R14) over\n\
          \x20      rust/src|tests|benches and examples/ (--root DIR, --json,\n\
          \x20      --sarif | --sarif-out FILE, --baseline FILE gates on new\n\
-         \x20      findings only, --write-baseline FILE)\n\
+         \x20      findings only, --fail-stale also fails on baseline entries\n\
+         \x20      that no longer fire, --write-baseline FILE,\n\
+         \x20      --explain RULE prints one rule's contract)\n\
          bench-check: validate BENCH_*.json snapshots (--files a.json,b.json)\n\
          bench-diff: compare two snapshots (drrl bench-diff base.json cur.json\n\
          \x20      [--max-regress PCT] [--report-only])\n\
@@ -565,26 +567,45 @@ fn check_all_finite(j: &drrl::util::Json, at: &str) -> Result<(), String> {
 }
 
 /// `drrl lint` — interprocedural static analysis over `rust/src/`,
-/// `rust/tests/`, `rust/benches/` and `examples/` (rules R1–R12: lock
+/// `rust/tests/`, `rust/benches/` and `examples/` (rules R1–R14: lock
 /// hygiene, decide-section wall-clock reads, raw channels, transitive
 /// lock-order cycles, unordered iteration, worker panics, pool-shaped
 /// partitions, blocking under shard locks, bucket-typed FLOPs charges,
-/// ticket resolution, suppression rationales, span fidelity; see
+/// ticket resolution, suppression rationales, span fidelity,
+/// determinism taint into chunk partitions and `decide_step(..)`; see
 /// CONFORMANCE.md § "Static rules" and [`drrl::analysis`]).
 ///
-/// Flags: `--root DIR` (repo root, default `.`); `--json` prints the
-/// schema-v1 machine report; `--sarif` prints SARIF 2.1.0;
-/// `--sarif-out FILE` writes SARIF to a file; `--baseline FILE` gates
-/// only on error-level findings *not* in the baseline (fixed findings
-/// are reported so the baseline can shrink); `--write-baseline FILE`
-/// records the current error-level findings and exits 0.
+/// Flags: `--root DIR` (repo root, default `.`); `--explain RULE`
+/// prints one rule's contract/example/suppression from the shared
+/// catalogue and exits without scanning; `--json` prints the schema-v1
+/// machine report; `--sarif` prints SARIF 2.1.0; `--sarif-out FILE`
+/// writes SARIF to a file; `--baseline FILE` gates only on error-level
+/// findings *not* in the baseline (fixed findings are reported so the
+/// baseline can shrink, and `--fail-stale` turns them into a failure
+/// so CI forces the shrink); `--write-baseline FILE` records the
+/// current error-level findings and exits 0.
 ///
 /// Exit codes: 0 clean (no error-level findings, or none beyond the
 /// baseline — advisories in test/bench/example code never fail),
-/// 1 gating findings, 2 scan/baseline error.
+/// 1 gating findings (or stale baseline entries under `--fail-stale`),
+/// 2 scan/baseline error or unknown `--explain` rule.
 fn cmd_lint(args: &Args) -> i32 {
     use drrl::analysis;
     use drrl::util::Json;
+    if let Some(name) = args.get("explain") {
+        let Some(r) = analysis::RULES.iter().find(|r| r.name == name) else {
+            eprintln!("lint: unknown rule {name:?} — known rules:");
+            for r in &analysis::RULES {
+                eprintln!("  {:<22} {}", r.name, r.contract);
+            }
+            return 2;
+        };
+        println!(
+            "{}\n\ncontract:\n  {}\n\nexample:\n{}\n\nsuppression:\n  {}",
+            r.name, r.contract, r.example, r.suppression
+        );
+        return 0;
+    }
     let root = args.get_or("root", ".");
     let report = match analysis::run_lint_report(std::path::Path::new(root)) {
         Ok(r) => r,
@@ -636,6 +657,17 @@ fn cmd_lint(args: &Args) -> i32 {
     } else {
         gating = errors.clone();
     }
+    // Per-rule split of the error-level findings: how many gate (new)
+    // vs how many the baseline absorbs. CI prints this so a leg's log
+    // answers "which rule moved" without opening the JSON report.
+    let mut per_rule: std::collections::BTreeMap<&str, (usize, usize)> =
+        std::collections::BTreeMap::new();
+    for v in &errors {
+        per_rule.entry(v.rule).or_default().1 += 1;
+    }
+    for v in &gating {
+        per_rule.entry(v.rule).or_default().0 += 1;
+    }
     if args.flag("sarif") {
         println!("{}", analysis::to_sarif(&report.violations).to_string_pretty());
     } else if args.flag("json") {
@@ -649,6 +681,9 @@ fn cmd_lint(args: &Args) -> i32 {
             report.advisories(),
             report.wall_ms
         );
+        for (rule, (new, total)) in &per_rule {
+            println!("lint:   {rule}: {new} new, {} baselined", total - new);
+        }
         for v in report.violations.iter().filter(|v| v.level == analysis::Level::Advisory) {
             eprintln!("{v}");
         }
@@ -662,12 +697,18 @@ fn cmd_lint(args: &Args) -> i32 {
             errors.len(),
             report.advisories()
         );
+        for (rule, (new, total)) in &per_rule {
+            eprintln!("lint:   {rule}: {new} new, {} baselined", total - new);
+        }
     }
     if fixed > 0 {
         eprintln!(
             "lint: {fixed} baselined finding(s) no longer fire — regenerate with \
              `drrl lint --write-baseline lint_baseline.json` to shrink the baseline"
         );
+        if args.flag("fail-stale") {
+            return 1;
+        }
     }
     i32::from(!gating.is_empty())
 }

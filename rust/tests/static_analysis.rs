@@ -1,12 +1,15 @@
 //! Integration tests for the `rust/src/analysis/` static-analysis
 //! subsystem and the `bench-diff` snapshot comparator.
 //!
-//! Planted-bug fixtures prove each crate-wide rule (R4–R12) actually
+//! Planted-bug fixtures prove each crate-wide rule (R4–R14) actually
 //! bites — including a three-call-deep lock-order cycle that the old
-//! one-level propagation (`lock_depth: Some(1)`) provably misses; the
-//! live-tree test proves the real sources carry no error-level
-//! findings; the JSON/SARIF/baseline tests prove every output surface
-//! of `drrl lint` round-trips through its validator.
+//! one-level propagation (`lock_depth: Some(1)`) provably misses, and
+//! cross-receiver lock-order/blocking bugs that name-only resolution
+//! (`receiver_types: false`) provably misses, one fixture per receiver
+//! shape (field, let-bound, param); the live-tree test proves the real
+//! sources carry no error-level findings; the JSON/SARIF/baseline
+//! tests prove every output surface of `drrl lint` round-trips through
+//! its validator.
 
 use drrl::analysis::{
     analyze_crate, analyze_crate_with, analyze_source, baseline_json, diff_against_baseline,
@@ -229,7 +232,7 @@ const DEEP_B: &str = "fn h3(s: &S) {\n\
 fn transitive_cycle_is_invisible_at_depth_one() {
     let v = crate_of_with(
         &[("rust/src/coordinator/deep_a.rs", DEEP_A), ("rust/src/coordinator/deep_b.rs", DEEP_B)],
-        AnalysisOptions { lock_depth: Some(1) },
+        AnalysisOptions { lock_depth: Some(1), ..AnalysisOptions::default() },
     );
     assert!(
         !rules_of(&v).contains(&"lock-order"),
@@ -278,7 +281,7 @@ fn live_tree_lints_clean() {
 
 #[test]
 fn live_tree_matches_the_committed_baseline() {
-    // The committed baseline is empty: the tree is clean under R1–R12
+    // The committed baseline is empty: the tree is clean under R1–R14
     // and must stay that way without grandfathering anything.
     let root = Path::new(env!("CARGO_MANIFEST_DIR"));
     let text = std::fs::read_to_string(root.join("lint_baseline.json"))
@@ -419,7 +422,7 @@ fn r8_blocking_under_shard_lock_direct_and_transitive() {
     // The one-level analyzer sees helper() as fact-free: clean.
     let legacy = crate_of_with(
         &[("rust/src/coordinator/stage.rs", a), ("rust/src/coordinator/helpers.rs", b)],
-        AnalysisOptions { lock_depth: Some(1) },
+        AnalysisOptions { lock_depth: Some(1), ..AnalysisOptions::default() },
     );
     assert!(!rules_of(&legacy).contains(&"blocking-under-lock"), "{legacy:?}");
 }
@@ -494,6 +497,148 @@ fn r12_spans_are_byte_accurate_across_rule_kinds() {
             viol.rule
         );
     }
+}
+
+// ---- type-aware receiver resolution (the tentpole regression) ----
+
+/// A lock-order inversion whose forward edge runs through a *field*
+/// receiver: `cycle` holds alpha across `self.state.poke()`, `poke`
+/// (another file, reached only by typing `Ctl.state : Shard`) takes
+/// beta, and `rev` takes beta then alpha. Name-only resolution drops
+/// the `self.state.poke()` edge, so it scans this clean.
+const RECV_CTL: &str = "pub struct Ctl { pub state: Shard }\n\
+                        impl Ctl {\n\
+                        \x20   fn cycle(&self) {\n\
+                        \x20       let ga = self.alpha.lock_unpoisoned();\n\
+                        \x20       self.state.poke();\n\
+                        \x20       drop(ga);\n\
+                        \x20   }\n\
+                        }\n";
+const RECV_SHARD: &str = "pub struct Shard;\n\
+                          impl Shard {\n\
+                          \x20   fn poke(&self) {\n\
+                          \x20       let gb = self.beta.lock_unpoisoned();\n\
+                          \x20       drop(gb);\n\
+                          \x20   }\n\
+                          \x20   fn rev(&self) {\n\
+                          \x20       let gb = self.beta.lock_unpoisoned();\n\
+                          \x20       let ga = self.alpha.lock_unpoisoned();\n\
+                          \x20       drop(ga);\n\
+                          \x20       drop(gb);\n\
+                          \x20   }\n\
+                          }\n";
+
+#[test]
+fn r4_cycle_through_field_receiver_needs_type_resolution() {
+    let files = [
+        ("rust/src/coordinator/ctl.rs", RECV_CTL),
+        ("rust/src/coordinator/shard.rs", RECV_SHARD),
+    ];
+    let name_only = crate_of_with(
+        &files,
+        AnalysisOptions { receiver_types: false, ..AnalysisOptions::default() },
+    );
+    assert!(
+        !rules_of(&name_only).contains(&"lock-order"),
+        "name-only resolution must (wrongly) scan the field-receiver cycle clean: {name_only:?}"
+    );
+    let v = crate_of(&files);
+    let cycles: Vec<_> = v.iter().filter(|x| x.rule == "lock-order").collect();
+    assert_eq!(cycles.len(), 1, "{v:?}");
+    assert!(cycles[0].text.contains("poke()"), "chain crosses the typed edge: {}", cycles[0].text);
+}
+
+/// The blocking sleep hides behind a *let-bound* receiver: only typing
+/// `let w = Waiter::new()` connects `w.pause()` to the sleep.
+const WAITER: &str = "pub struct Waiter;\n\
+                      impl Waiter {\n\
+                      \x20   pub fn new() -> Waiter { Waiter }\n\
+                      \x20   pub fn pause(&self) { std::thread::sleep(D); }\n\
+                      }\n";
+
+#[test]
+fn r8_blocking_through_let_bound_receiver_needs_type_resolution() {
+    let stage = "fn stage(s: &S) {\n\
+                 \x20   let w = Waiter::new();\n\
+                 \x20   let shard = s.shard.lock_unpoisoned();\n\
+                 \x20   w.pause();\n\
+                 \x20   drop(shard);\n\
+                 }\n";
+    let files =
+        [("rust/src/coordinator/stage.rs", stage), ("rust/src/coordinator/waiter.rs", WAITER)];
+    let name_only = crate_of_with(
+        &files,
+        AnalysisOptions { receiver_types: false, ..AnalysisOptions::default() },
+    );
+    assert!(
+        !rules_of(&name_only).contains(&"blocking-under-lock"),
+        "name-only resolution must (wrongly) scan the let-bound receiver clean: {name_only:?}"
+    );
+    let v = crate_of(&files);
+    let r8: Vec<_> = v.iter().filter(|x| x.rule == "blocking-under-lock").collect();
+    assert_eq!(r8.len(), 1, "{v:?}");
+    assert!(r8[0].text.contains("sleep"), "{}", r8[0].text);
+    assert!(r8[0].text.contains("pause()"), "chain crosses the typed edge: {}", r8[0].text);
+}
+
+#[test]
+fn r8_blocking_through_param_receiver_needs_type_resolution() {
+    let stage = "fn drive(s: &S, w: &Waiter) {\n\
+                 \x20   let shard = s.shard.lock_unpoisoned();\n\
+                 \x20   w.pause();\n\
+                 \x20   drop(shard);\n\
+                 }\n";
+    let files =
+        [("rust/src/coordinator/drive.rs", stage), ("rust/src/coordinator/waiter.rs", WAITER)];
+    let name_only = crate_of_with(
+        &files,
+        AnalysisOptions { receiver_types: false, ..AnalysisOptions::default() },
+    );
+    assert!(!rules_of(&name_only).contains(&"blocking-under-lock"), "{name_only:?}");
+    let v = crate_of(&files);
+    let r8: Vec<_> = v.iter().filter(|x| x.rule == "blocking-under-lock").collect();
+    assert_eq!(r8.len(), 1, "{v:?}");
+    assert!(r8[0].text.contains("pause()"), "{}", r8[0].text);
+}
+
+// ---- R13/R14 determinism taint ----
+
+#[test]
+fn r13_nondet_partition_fires_with_byte_accurate_span() {
+    let src = "fn plan(pool: &P, work: &[J]) {\n\
+               \x20   let lanes = pool.size();\n\
+               \x20   for w in work.chunks(lanes) { run(w); }\n\
+               }\n";
+    let v = analyze_source(Path::new("rust/src/coordinator/plan.rs"), src);
+    let r13: Vec<_> = v.iter().filter(|x| x.rule == "nondet-partition").collect();
+    assert_eq!(r13.len(), 1, "{v:?}");
+    assert_eq!(r13[0].level, Level::Error);
+    assert!(r13[0].text.contains("pool-shape"), "{}", r13[0].text);
+    assert!(!rules_of(&v).contains(&"span-fidelity"), "{v:?}");
+    assert_eq!(&src[r13[0].byte_start..r13[0].byte_end], r13[0].snippet);
+}
+
+#[test]
+fn r14_nondet_decide_crosses_files_with_byte_accurate_span() {
+    let clock = "pub fn budget_ms() -> u64 {\n\
+                 \x20   let t0 = Instant::now();\n\
+                 \x20   t0.elapsed().as_millis() as u64\n\
+                 }\n";
+    let driver = "fn drive(ctl: &C) {\n\
+                  \x20   let budget = budget_ms();\n\
+                  \x20   ctl.decide_step(budget);\n\
+                  }\n";
+    let v = crate_of(&[
+        ("rust/src/util/clock.rs", clock),
+        ("rust/src/policy/driver.rs", driver),
+    ]);
+    let r14: Vec<_> = v.iter().filter(|x| x.rule == "nondet-decide").collect();
+    assert_eq!(r14.len(), 1, "{v:?}");
+    assert_eq!(r14[0].level, Level::Error);
+    assert!(r14[0].text.contains("wall-clock"), "{}", r14[0].text);
+    assert!(r14[0].text.contains("budget_ms()"), "origin rides the chain: {}", r14[0].text);
+    assert!(!rules_of(&v).contains(&"span-fidelity"), "{v:?}");
+    assert_eq!(&driver[r14[0].byte_start..r14[0].byte_end], r14[0].snippet);
 }
 
 #[test]
